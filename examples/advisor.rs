@@ -1,0 +1,82 @@
+//! Advisor: the paper's analysis as a practical tool.
+//!
+//! For every (shape × dimensionality × radius × dtype) in a user-style
+//! matrix, report — per GPU generation — which execution unit to use, at
+//! which fusion depth, what the expected speedup over the CUDA-Core SOTA
+//! is, and *why* (scenario + criterion).  This is §4's "systematic
+//! guideline for stencil acceleration" made executable.
+//!
+//! Run with: `cargo run --release --example advisor`
+
+use anyhow::Result;
+
+use tc_stencil::coordinator::planner::{plan, Request};
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::Dtype;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::util::table::{fnum, Table};
+
+fn main() -> Result<()> {
+    let matrix: Vec<(Shape, usize, usize)> = vec![
+        (Shape::Box, 2, 1),
+        (Shape::Box, 2, 3),
+        (Shape::Box, 2, 7),
+        (Shape::Star, 2, 1),
+        (Shape::Star, 2, 3),
+        (Shape::Box, 3, 1),
+        (Shape::Star, 3, 1),
+    ];
+    for gpu in [Gpu::a100(), Gpu::h100(), Gpu::v100()] {
+        let mut table = Table::new(
+            &format!("execution-unit advisor — {}", gpu.name),
+            &["Pattern", "dtype", "engine", "unit", "t", "GSt/s", "vs CUDA", "why"],
+        );
+        for &(shape, d, r) in &matrix {
+            for dtype in [Dtype::F32, Dtype::F64] {
+                let req = Request {
+                    pattern: StencilPattern::new(shape, d, r)?,
+                    dtype,
+                    steps: 64,
+                    gpu: gpu.clone(),
+                    require_artifact: false,
+                    max_t: 8,
+                };
+                let Ok(p) = plan(&req, None) else {
+                    continue;
+                };
+                let best_cuda = p
+                    .alternatives
+                    .iter()
+                    .chain(std::iter::once(&p.chosen))
+                    .filter(|c| !c.engine.is_tensor())
+                    .map(|c| c.prediction.throughput)
+                    .fold(f64::NAN, f64::max);
+                let vs = p.chosen.prediction.throughput / best_cuda;
+                let why = match &p.vs_cuda {
+                    Some(cmp) => format!(
+                        "{}{}",
+                        cmp.scenario.label(),
+                        if p.chosen.in_sweet_spot { " (sweet spot)" } else { "" }
+                    ),
+                    None => "CUDA baseline wins".to_string(),
+                };
+                table.row(&[
+                    req.pattern.label(),
+                    dtype.as_str().into(),
+                    p.chosen.engine.name.into(),
+                    p.chosen.engine.unit.as_str().into(),
+                    format!("{}", p.chosen.t),
+                    fnum(p.chosen.prediction.gstencils()),
+                    format!("{vs:.2}x"),
+                    why,
+                ]);
+            }
+        }
+        println!("{}", table.render());
+    }
+    println!(
+        "reading: 'vs CUDA' > 1 ⇒ the tensor path beats the best CUDA-Core\n\
+         configuration of the same workload; scenarios per paper §4.1."
+    );
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Quickstart: the 60-second tour.
+//!
+//! 1. Ask the model whether Tensor Cores help a workload (the paper's
+//!    criteria), 2. load the AOT runtime, 3. run one fused stencil launch
+//!    through PJRT and check it against the built-in oracle.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use tc_stencil::engines;
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::{Dtype, Unit, Workload};
+use tc_stencil::model::{criteria, scenario};
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::runtime::{manifest, Runtime, TensorData};
+use tc_stencil::sim::{exec, golden};
+
+fn main() -> Result<()> {
+    // --- 1. the analytical model -----------------------------------
+    let pattern = StencilPattern::new(Shape::Box, 2, 1)?; // Box-2D1R
+    let gpu = Gpu::a100();
+    println!("Do we need Tensor Cores for {}?", pattern.label());
+    for t in [1usize, 3, 7] {
+        let w = Workload::new(pattern, t, Dtype::F32);
+        let cu = gpu.roof(Unit::CudaCore, Dtype::F32)?;
+        let sptc = gpu.roof(Unit::SparseTensorCore, Dtype::F32)?;
+        let cmp = scenario::compare(
+            &w, &cu, &sptc,
+            Unit::SparseTensorCore,
+            tc_stencil::model::sparsity::Scheme::Sparse24,
+        );
+        let sweet = criteria::in_sweet_spot(
+            &w, &cu, &sptc,
+            Unit::SparseTensorCore,
+            tc_stencil::model::sparsity::Scheme::Sparse24,
+        );
+        println!(
+            "  t={t}: I_CU={:6.2}  I_TC={:7.2}  {}  ratio={:4.2}  {}",
+            cmp.cuda_intensity,
+            cmp.tensor_intensity,
+            cmp.scenario.label(),
+            cmp.speedup,
+            if sweet { "-> sweet spot" } else { "" },
+        );
+    }
+    // predicted throughput of the SOTA engines (paper Fig. 16 style)
+    let w = Workload::new(pattern, 7, Dtype::F32);
+    for e in [engines::ebisu(), engines::spider()] {
+        let p = exec::predict(&e, &w, &gpu)?;
+        println!(
+            "  predicted {:>7}: {:8.1} GStencils/s ({:?}-bound)",
+            e.name,
+            p.gstencils(),
+            p.bound
+        );
+    }
+
+    // --- 2. the AOT runtime ----------------------------------------
+    let mut rt = Runtime::load(&manifest::default_dir())?;
+    println!("\nPJRT platform: {}, {} artifacts", rt.platform(), rt.manifest.variants.len());
+
+    // --- 3. run one fused launch and verify -------------------------
+    let name = "decompose_box2d_r1_t3_f32_g64x64"; // TC-scheme, t=3
+    let meta = rt.manifest.get(name)?.clone();
+    let n = meta.points() as usize;
+    // smooth a delta spike with normalized box weights
+    let mut field = vec![0.0f64; n];
+    field[n / 2 + 32] = 1.0;
+    let weights = vec![1.0 / 9.0; 9];
+    let x = TensorData::F32(field.iter().map(|&v| v as f32).collect());
+    let wt = TensorData::F32(weights.iter().map(|&v| v as f32).collect());
+    let out = rt.execute(name, &x, &wt)?;
+    // check against the rust-native oracle
+    let gw = golden::Weights::new(2, 3, weights);
+    let want = golden::apply_fused(&golden::Field::from_vec(&meta.grid, field), &gw, 3);
+    let got = golden::Field::from_vec(&meta.grid, out.to_f64_vec());
+    let err = got.max_abs_diff(&want);
+    println!("one fused t=3 launch on 64x64: max|Δ| vs oracle = {err:.2e}");
+    assert!(err < 1e-5);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! 3D acoustic wave propagation — the library as a component inside a
+//! real leapfrog solver (the §1 motivation: seismic/wave kernels).
+//!
+//!     u_{n+1} = 2·u_n − u_{n−1} + c²·∇²u_n
+//!
+//! The Laplacian ∇²u is evaluated by the Star-3D1R artifact through the
+//! tiled coordinator; the leapfrog combination runs in rust.  Validates
+//! symmetry and (approximate) energy behaviour, then reports throughput.
+//!
+//! Run with: `cargo run --release --example wave_3d`
+
+use anyhow::Result;
+
+use tc_stencil::coordinator::scheduler::{run, Job};
+use tc_stencil::runtime::{manifest, Runtime};
+
+const N: usize = 40; // domain side (40³ grid)
+const STEPS: usize = 48;
+const C2: f64 = 0.1; // (c·dt/dx)² — CFL-stable for 3D when < 1/3
+
+fn laplacian_weights() -> Vec<f64> {
+    // Star-3D1R hull (3³): centre −6, six axis neighbours +1.
+    let mut w = vec![0.0; 27];
+    w[13] = -6.0;
+    for off in [4usize, 10, 12, 14, 16, 22] {
+        w[off] = 1.0;
+    }
+    w
+}
+
+fn main() -> Result<()> {
+    println!("=== 3D wave equation, {N}^3, {STEPS} leapfrog steps, c²={C2} ===");
+    let mut rt = Runtime::load(&manifest::default_dir())?;
+    let artifact = "direct_star3d_r1_t1_f32_g16x16x16";
+    let n3 = N * N * N;
+    // Initial condition: Gaussian pressure pulse at the centre, at rest.
+    let mut u = vec![0.0f64; n3];
+    // (N−1)/2 is the reflection-symmetric centre of an N-point axis.
+    let c = (N as f64 - 1.0) / 2.0;
+    for i in 0..N {
+        for j in 0..N {
+            for k in 0..N {
+                let d2 = (i as f64 - c).powi(2) + (j as f64 - c).powi(2) + (k as f64 - c).powi(2);
+                u[(i * N + j) * N + k] = (-d2 / 18.0).exp();
+            }
+        }
+    }
+    let mut u_prev = u.clone();
+    let weights = laplacian_weights();
+    let t0 = std::time::Instant::now();
+    let mut exec_points = 0u64;
+    for _ in 0..STEPS {
+        // ∇²u via the coordinator (one stencil application).
+        let mut lap = u.clone();
+        let m = run(
+            &mut rt,
+            &Job {
+                artifact: artifact.into(),
+                domain: vec![N, N, N],
+                steps: 1,
+                weights: weights.clone(),
+                threads: 4,
+            },
+            &mut lap,
+        )?;
+        exec_points += m.points;
+        // Leapfrog update in rust.
+        for idx in 0..n3 {
+            let next = 2.0 * u[idx] - u_prev[idx] + C2 * lap[idx];
+            u_prev[idx] = u[idx];
+            u[idx] = next;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "ran {STEPS} steps in {wall:.2}s — {:.2} MStencils/s end-to-end",
+        exec_points as f64 * STEPS as f64 / wall / 1e6 / STEPS as f64
+    );
+
+    // Validation 1: the solution stays bounded (CFL respected).
+    let umax = u.iter().cloned().fold(f64::MIN, f64::max);
+    let umin = u.iter().cloned().fold(f64::MAX, f64::min);
+    println!("bounds: [{umin:.4}, {umax:.4}] -> {}", ok(umax < 2.0 && umin > -2.0));
+    assert!(umax < 2.0 && umin > -2.0);
+
+    // Validation 2: 48-fold symmetry of the cube is preserved (the pulse
+    // is centred; reflections through the centre must match).
+    let mut sym_err = 0.0f64;
+    for i in 0..N {
+        for j in 0..N {
+            for k in 0..N {
+                let a = u[(i * N + j) * N + k];
+                let b = u[((N - 1 - i) * N + (N - 1 - j)) * N + (N - 1 - k)];
+                sym_err = sym_err.max((a - b).abs());
+            }
+        }
+    }
+    println!("point symmetry: max|u(x)−u(−x)| = {sym_err:.2e} -> {}", ok(sym_err < 1e-4));
+    assert!(sym_err < 1e-4);
+
+    // Validation 3: an outgoing spherical front — energy moves off-centre.
+    let centre_now = u[(N / 2 * N + N / 2) * N + N / 2];
+    println!(
+        "centre amplitude after {STEPS} steps: {centre_now:.4} (< 1.0 initial) -> {}",
+        ok(centre_now < 1.0)
+    );
+    assert!(centre_now < 1.0);
+    println!("wave_3d OK");
+    Ok(())
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "FAIL"
+    }
+}

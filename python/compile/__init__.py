@@ -1,0 +1,10 @@
+"""Build-time compile path (L1 Pallas kernels + L2 jax models + AOT).
+
+Never imported at runtime: `make artifacts` lowers everything to HLO text
+and the rust coordinator is self-contained afterwards.
+"""
+
+import jax
+
+# Double-precision variants (the paper evaluates float AND double) need x64.
+jax.config.update("jax_enable_x64", True)

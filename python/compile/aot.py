@@ -1,0 +1,130 @@
+"""AOT driver: lower every Variant to HLO *text* + write the manifest.
+
+HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--filter SUBSTR]
+                              [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import Variant
+
+MANIFEST_VERSION = 1
+
+G2 = (64, 64)  # 2D artifact domain
+T2 = (32, 32)
+G3 = (16, 16, 16)  # 3D artifact domain
+T3 = (8, 8, 16)
+
+
+def variant_matrix() -> list[Variant]:
+    """Every artifact the rust runtime can dispatch.
+
+    Coverage mirrors the paper's evaluation matrix (§5.1) at CPU-tractable
+    domain sizes: schemes x {box,star} x {2D,3D} x radii x fusion depths x
+    {f32,f64}; the coordinator tiles larger domains onto these executables.
+    """
+    v = []
+    # --- direct (CUDA-Core family: cuDNN/DRStencil/EBISU analogs) ---
+    for t in (1, 2, 3):
+        v.append(Variant("direct", "box", 2, 1, t, "float32", G2, T2))
+    v.append(Variant("direct", "box", 2, 3, 1, "float32", G2, T2))
+    v.append(Variant("direct", "star", 2, 1, 1, "float32", G2, T2))
+    v.append(Variant("direct", "star", 2, 1, 3, "float32", G2, T2))
+    v.append(Variant("direct", "star", 2, 3, 1, "float32", G2, T2))
+    v.append(Variant("direct", "box", 2, 1, 3, "float64", G2, T2))
+    v.append(Variant("direct", "box", 3, 1, 1, "float32", G3, T3))
+    v.append(Variant("direct", "box", 3, 1, 2, "float32", G3, T3))
+    v.append(Variant("direct", "star", 3, 1, 1, "float32", G3, T3))
+    # --- flatten (ConvStencil analog) ---
+    v.append(Variant("flatten", "box", 2, 1, 1, "float32", G2, T2))
+    v.append(Variant("flatten", "box", 2, 1, 3, "float32", G2, T2))
+    v.append(Variant("flatten", "star", 2, 1, 3, "float32", G2, T2))
+    v.append(Variant("flatten", "box", 2, 1, 3, "float64", G2, T2))
+    v.append(Variant("flatten", "box", 3, 1, 1, "float32", G3, T3))
+    # --- decompose (TCStencil/SPIDER-dense analog) ---
+    v.append(Variant("decompose", "box", 2, 1, 1, "float32", G2, T2))
+    v.append(Variant("decompose", "box", 2, 1, 3, "float32", G2, T2))
+    v.append(Variant("decompose", "box", 2, 1, 7, "float32", G2, T2))
+    v.append(Variant("decompose", "star", 2, 1, 3, "float32", G2, T2))
+    v.append(Variant("decompose", "box", 3, 1, 1, "float32", G3, T3))
+    # --- sparse24 (SPIDER-sparse/SparStencil analog) ---
+    v.append(Variant("sparse24", "box", 2, 1, 3, "float32", G2, T2))
+    v.append(Variant("sparse24", "box", 2, 1, 7, "float32", G2, T2))
+    v.append(Variant("sparse24", "box", 3, 1, 1, "float32", G3, T3))
+    # --- in-graph chain (ablation (d): rust loop vs lax.scan) ---
+    v.append(Variant("direct", "box", 2, 1, 1, "float32", G2, T2, n_outer=8))
+    return v
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is LOAD-BEARING: the default printer
+    # elides big literals as `constant({...})`, and the xla_extension
+    # 0.5.1 text parser on the rust side silently zero-fills them —
+    # masks/gather tables came back as zeros and every output was 0.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--filter", default="", help="only variants containing SUBSTR")
+    ap.add_argument("--list", action="store_true", help="list variants and exit")
+    args = ap.parse_args()
+
+    variants = [v for v in variant_matrix() if args.filter in v.name]
+    if args.list:
+        for v in variants:
+            print(v.name)
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    t_all = time.time()
+    for i, v in enumerate(variants):
+        t0 = time.time()
+        lowered = model.lower_variant(v)
+        text = to_hlo_text(lowered)
+        fname = f"{v.name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(model.manifest_entry(v, fname))
+        print(
+            f"[{i + 1:2d}/{len(variants)}] {v.name:48s} "
+            f"{len(text) / 1024:8.1f} KiB  {time.time() - t0:5.1f}s",
+            file=sys.stderr,
+        )
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "jax_version": jax.__version__,
+        "variants": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"wrote {len(entries)} artifacts + manifest.json "
+        f"in {time.time() - t_all:.1f}s",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

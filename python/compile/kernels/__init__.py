@@ -1,0 +1,17 @@
+"""L1 Pallas kernels: one module per stencil->MMA transformation scheme.
+
+  direct    — CUDA-Core analog: sequential in-kernel temporal fusion
+  flatten   — ConvStencil analog: stencil2row im2col + single GEMM
+  decompose — TCStencil/SPIDER analog: banded-matrix GEMM accumulation
+  sparse24  — SPIDER/SparStencil SpTC analog: 2:4 compressed contraction
+  ref       — pure-jnp oracle (ground truth for all of the above)
+"""
+
+from . import common, ref, direct, flatten, decompose, sparse24  # noqa: F401
+
+SCHEMES = {
+    "direct": direct,
+    "flatten": flatten,
+    "decompose": decompose,
+    "sparse24": sparse24,
+}

@@ -1,0 +1,128 @@
+"""Shared stencil-pattern machinery for the L1 kernels.
+
+A stencil pattern is (shape, d, r):
+  * shape "box":  all points with ||off||_inf <= r         -> K = (2r+1)^d
+  * shape "star": points on the coordinate axes, |off|<=r  -> K = 2*d*r + 1
+
+Weights are always carried as a dense (2r+1)^d grid over the box hull; star
+patterns simply have zeros off-axis.  Fusing t time steps of a linear
+stencil is the t-fold self-convolution of that grid (the paper's monolithic
+kernel, §2.2.3): its support is the Minkowski t-sum of the base support and
+holds K^(t) points, giving the fusion redundancy alpha = K^(t) / (t K).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import jax.numpy as jnp
+
+
+SHAPES = ("box", "star")
+
+
+def support_mask(shape: str, d: int, r: int) -> np.ndarray:
+    """Boolean mask over the (2r+1)^d box hull marking pattern membership."""
+    if shape not in SHAPES:
+        raise ValueError(f"unknown stencil shape {shape!r}")
+    if d < 1 or r < 1:
+        raise ValueError(f"need d >= 1 and r >= 1, got d={d} r={r}")
+    n = 2 * r + 1
+    mask = np.zeros((n,) * d, dtype=bool)
+    for idx in itertools.product(range(n), repeat=d):
+        off = [i - r for i in idx]
+        if shape == "box":
+            mask[idx] = True
+        else:  # star: at most one non-zero coordinate
+            mask[idx] = sum(1 for o in off if o != 0) <= 1
+    return mask
+
+
+def num_points(shape: str, d: int, r: int) -> int:
+    """K — number of points in the (unfused) stencil kernel."""
+    return int(support_mask(shape, d, r).sum())
+
+
+def fused_support_mask(shape: str, d: int, r: int, t: int) -> np.ndarray:
+    """Support of the t-step fused kernel: t-fold Minkowski sum (dilation)."""
+    if t < 1:
+        raise ValueError(f"fusion depth must be >= 1, got {t}")
+    base = support_mask(shape, d, r).astype(np.float64)
+    acc = base
+    for _ in range(t - 1):
+        acc = _conv_full_np(acc, base)
+    return acc > 0.0
+
+
+def fused_num_points(shape: str, d: int, r: int, t: int) -> int:
+    """K^(t) — number of points in the fused kernel support."""
+    return int(fused_support_mask(shape, d, r, t).sum())
+
+
+def _conv_full_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Full nd convolution (numpy, build-time only; used for supports)."""
+    out_shape = tuple(sa + sb - 1 for sa, sb in zip(a.shape, b.shape))
+    out = np.zeros(out_shape, dtype=np.result_type(a, b))
+    for idx in itertools.product(*(range(s) for s in b.shape)):
+        if b[idx] == 0:
+            continue
+        sl = tuple(slice(i, i + sa) for i, sa in zip(idx, a.shape))
+        out[sl] += a * b[idx]
+    return out
+
+
+def conv_full(a, b):
+    """Full nd convolution in jax (used to fuse weight kernels at trace time).
+
+    Implemented as explicit shift-and-add over b's entries so it lowers to
+    plain HLO adds/multiplies (no conv custom-calls), keeping the AOT HLO
+    portable across PJRT backends.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    out_shape = tuple(sa + sb - 1 for sa, sb in zip(a.shape, b.shape))
+    out = jnp.zeros(out_shape, dtype=jnp.result_type(a, b))
+    for idx in itertools.product(*(range(s) for s in b.shape)):
+        sl = tuple(slice(i, i + sa) for i, sa in zip(idx, a.shape))
+        out = out.at[sl].add(a * b[idx])
+    return out
+
+
+def fuse_weights(w, t: int):
+    """Effective monolithic kernel for t fused steps: w (*) w (*) ... (t-fold).
+
+    For a linear stencil applied t times with the same weights, the composed
+    update is a single convolution with this fused kernel (radius t*r).
+    """
+    w = jnp.asarray(w)
+    acc = w
+    for _ in range(t - 1):
+        acc = conv_full(acc, w)
+    return acc
+
+
+def default_weights(shape: str, d: int, r: int, dtype=np.float64) -> np.ndarray:
+    """Normalized (sum=1) smoothing weights over the pattern — Jacobi-like."""
+    mask = support_mask(shape, d, r)
+    w = mask.astype(dtype)
+    return w / w.sum()
+
+
+def random_weights(shape: str, d: int, r: int, seed: int, dtype=np.float64) -> np.ndarray:
+    """Deterministic pseudo-random weights on the pattern support (tests)."""
+    mask = support_mask(shape, d, r)
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-1.0, 1.0, size=mask.shape).astype(dtype)
+    w = np.where(mask, w, 0.0)
+    # Normalize to keep t-fold applications numerically tame.
+    return (w / np.abs(w).sum()).astype(dtype)
+
+
+def alpha_exact(shape: str, d: int, r: int, t: int) -> float:
+    """Fusion redundancy factor alpha = K^(t) / (t K)  (paper Eq. 9).
+
+    Uses the exact Minkowski support count, valid for ANY shape; for box it
+    coincides with the closed form (2rt+1)^d / (t (2r+1)^d) (Eq. 10).
+    """
+    return fused_num_points(shape, d, r, t) / (t * num_points(shape, d, r))

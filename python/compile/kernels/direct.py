@@ -1,0 +1,103 @@
+"""L1 direct stencil kernel — the CUDA-Core-engine analog (EBISU/DRStencil).
+
+One Pallas program per spatial tile.  Temporal fusion is *sequential inside
+the kernel*: the tile (plus a t*r halo) is loaded into VMEM once, t stencil
+steps run back-to-back on the resident block, and only the final tile is
+written back.  Intermediates never touch HBM — exactly the on-chip-reuse
+dataflow of CUDA-Core temporal fusion (paper §3.2.2): C = t*2K FLOPs and
+M = 2D bytes per output point, so I = t*K/D.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the tile+halo block is the
+VMEM working set (shared-memory analog); the weighted shift-accumulate runs
+on the VPU.  interpret=True everywhere — CPU PJRT cannot run Mosaic.
+"""
+
+from __future__ import annotations
+
+import itertools
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _tile_kernel(offsets, t, r, tile, halo, x_ref, w_ref, m_ref, o_ref):
+    """Pallas kernel body: t fused steps on one tile (+halo) of any rank d."""
+    d = len(tile)
+    pid = [pl.program_id(k) for k in range(d)]
+    blk_shape = tuple(tile[k] + 2 * halo for k in range(d))
+    # Load tile + halo from the globally padded field.
+    starts = tuple(pid[k] * tile[k] for k in range(d))
+    idx = tuple(pl.dslice(starts[k], blk_shape[k]) for k in range(d))
+    buf = pl.load(x_ref, idx)
+    w = w_ref[...]
+    # In-domain mask for this block: intermediate values outside the domain
+    # must stay zero every step (fresh Dirichlet-0 halo semantics).
+    mask = pl.load(m_ref, idx)
+    buf = buf * mask
+    for _ in range(t):
+        padded = jnp.pad(buf, r)
+        acc = jnp.zeros_like(buf)
+        # Unrolled over the *pattern support only* — star kernels execute
+        # K = 2dr+1 FMAs per point, not the full box hull.
+        for off in offsets:
+            sl = tuple(slice(off[k] + r, off[k] + r + blk_shape[k]) for k in range(d))
+            acc = acc + w[tuple(off[k] + r for k in range(d))] * padded[sl]
+        buf = acc * mask
+    out_sl = tuple(slice(halo, halo + tile[k]) for k in range(d))
+    o_ref[...] = buf[out_sl]
+
+
+def apply(x, w, *, shape: str, r: int, t: int, tile=None, interpret: bool = True):
+    """t fused stencil steps over domain x (any rank), zero halo.
+
+    x: d-dim field; w: (2r+1)^d base weights (pattern-masked).
+    Equals ref.apply_steps(x, w, t).
+    """
+    x = jnp.asarray(x)
+    d = x.ndim
+    if tile is None:
+        tile = (32,) * d if d <= 2 else (8,) * d
+    tile = tuple(tile)
+    if any(g % tl != 0 for g, tl in zip(x.shape, tile)):
+        raise ValueError(f"domain {x.shape} not divisible by tile {tile}")
+    halo = t * r
+    sup = common.support_mask(shape, d, r)
+    offsets = [
+        tuple(i - r for i in idx)
+        for idx in itertools.product(range(2 * r + 1), repeat=d)
+        if sup[idx]
+    ]
+    xp = jnp.pad(x, halo)
+    mask_np = np.zeros(xp.shape, dtype=np.float64)
+    mask_np[tuple(slice(halo, halo + g) for g in x.shape)] = 1.0
+    mask = jnp.asarray(mask_np, dtype=x.dtype)
+    grid = tuple(g // tl for g, tl in zip(x.shape, tile))
+    kernel = partial(_tile_kernel, offsets, t, r, tile, halo)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Whole padded field visible to every program; tiles carve out
+            # their (tile + 2*halo) VMEM window with dynamic slices.  On a
+            # real TPU this becomes a Blocked BlockSpec over HBM->VMEM DMA.
+            pl.BlockSpec(xp.shape, lambda *_: (0,) * d),
+            pl.BlockSpec(w.shape, lambda *_: (0,) * d),
+            pl.BlockSpec(xp.shape, lambda *_: (0,) * d),
+        ],
+        out_specs=pl.BlockSpec(tile, lambda *pids: pids),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(xp, jnp.asarray(w, dtype=x.dtype), mask)
+
+
+def vmem_bytes(shape_grid, dtype_bytes: int, tile, halo: int) -> int:
+    """Estimated VMEM working set per program: block + 2 step buffers."""
+    blk = 1
+    for tl in tile:
+        blk *= tl + 2 * halo
+    return 3 * blk * dtype_bytes

@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracle for every L1 kernel.
+
+Semantics shared by the whole stack: zero (Dirichlet-0) halo outside the
+domain.  Two oracles exist because the paper's two execution families have
+genuinely different *boundary* semantics:
+
+  * apply_steps — t sequential applications, fresh zero halo each step
+    (CUDA-Core temporal fusion; the `direct` kernel matches this exactly).
+  * apply_fused — ONE application of the t-fold convolved kernel
+    (the monolithic Tensor-Core kernel of §2.2.3; `flatten`, `decompose`
+    and `sparse24` match this exactly).
+
+Truncated convolutions do not compose, so the two differ within t*r of the
+domain boundary and agree exactly on the interior — the transformation-
+equivalence tests assert full-domain equality against the proper oracle and
+interior equality across families.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+
+
+def apply_once(x, w):
+    """One stencil application: out[i] = sum_off w[off] * x[i+off], zero halo.
+
+    x: d-dim field; w: dense (2r+1)^d weight grid (zeros off the pattern).
+    """
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    d = x.ndim
+    if w.ndim != d:
+        raise ValueError(f"weight rank {w.ndim} != field rank {d}")
+    r = (w.shape[0] - 1) // 2
+    if any(s != 2 * r + 1 for s in w.shape):
+        raise ValueError(f"weights must be a (2r+1)^d cube, got {w.shape}")
+    xp = jnp.pad(x, r)
+    out = jnp.zeros_like(x)
+    for idx in itertools.product(range(2 * r + 1), repeat=d):
+        sl = tuple(slice(i, i + n) for i, n in zip(idx, x.shape))
+        out = out + w[idx] * xp[sl]
+    return out
+
+
+def apply_steps(x, w, t: int):
+    """t sequential stencil steps (the CUDA-Core temporal-fusion semantics)."""
+    for _ in range(t):
+        x = apply_once(x, w)
+    return x
+
+
+def apply_fused(x, w_fused):
+    """One application of a pre-fused (t-fold convolved) kernel.
+
+    Must equal apply_steps(x, w, t) when w_fused = fuse_weights(w, t) —
+    the monolithic-kernel semantics of the Tensor Core adaptations.
+    """
+    return apply_once(x, w_fused)

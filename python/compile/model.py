@@ -1,0 +1,178 @@
+"""L2 — jax compute graphs per engine scheme, calling the L1 kernels.
+
+A *variant* pins (scheme, shape, d, r, t, dtype, grid, tile) and builds a
+jittable fn(x, w) computing t stencil time steps:
+
+  * direct:   kernels.direct — t sequential steps, intermediates in VMEM
+  * flatten / decompose / sparse24: the monolithic fused kernel
+    wf = w (*)^t w is built in-graph (so runtime-supplied weights work,
+    matching the paper's dynamic-kernel-values requirement), then applied
+    once via the scheme's Pallas kernel.
+
+`build_chain_fn` wraps a variant in lax.scan for n_outer outer iterations —
+the in-graph alternative to the rust coordinator's time-stepping loop
+(ablation (d) in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import common, direct, flatten, decompose, sparse24
+
+DTYPES = {"float32": jnp.float32, "float64": jnp.float64}
+DTYPE_BYTES = {"float32": 4, "float64": 8}
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One AOT-compiled stencil executable."""
+
+    scheme: str  # direct | flatten | decompose | sparse24
+    shape: str  # box | star
+    d: int
+    r: int
+    t: int  # fusion depth (time steps per execution)
+    dtype: str  # float32 | float64
+    grid: Tuple[int, ...]  # domain size baked into the artifact
+    tile: Tuple[int, ...]  # pallas tile
+    n_outer: int = 1  # >1: lax.scan chain of fused applications
+
+    @property
+    def name(self) -> str:
+        g = "x".join(str(s) for s in self.grid)
+        base = (
+            f"{self.scheme}_{self.shape}{self.d}d_r{self.r}_t{self.t}"
+            f"_{'f32' if self.dtype == 'float32' else 'f64'}_g{g}"
+        )
+        return base if self.n_outer == 1 else f"{base}_chain{self.n_outer}"
+
+    @property
+    def halo(self) -> int:
+        return self.t * self.r
+
+    def weights_shape(self) -> Tuple[int, ...]:
+        return (2 * self.r + 1,) * self.d
+
+    def k_points(self) -> int:
+        return common.num_points(self.shape, self.d, self.r)
+
+    def k_fused(self) -> int:
+        return common.fused_num_points(self.shape, self.d, self.r, self.t)
+
+    def alpha(self) -> float:
+        return common.alpha_exact(self.shape, self.d, self.r, self.t)
+
+    def measured_sparsity(self) -> Optional[float]:
+        """S of the actually-constructed MMA operand (None for direct)."""
+        w = common.default_weights(self.shape, self.d, self.r)
+        wf = np.asarray(common.fuse_weights(jnp.asarray(w), self.t))
+        if self.scheme == "flatten":
+            return flatten.measured_sparsity(wf)
+        if self.scheme in ("decompose", "sparse24"):
+            return decompose.measured_sparsity(wf)
+        return None
+
+    def vmem_bytes(self) -> int:
+        """Per-program VMEM working-set estimate (DESIGN.md §Perf, L1)."""
+        db = DTYPE_BYTES[self.dtype]
+        if self.scheme == "direct":
+            return direct.vmem_bytes(self.grid, db, self.tile, self.halo)
+        wf_shape = (2 * self.halo + 1,) * self.d
+        if self.scheme == "flatten":
+            return flatten.vmem_bytes(db, self.tile, self.halo, wf_shape)
+        return decompose.vmem_bytes(db, self.tile, self.halo, wf_shape)
+
+
+def build_step_fn(v: Variant):
+    """fn(x, w) -> y : exactly t stencil time steps by v's scheme."""
+    dtype = DTYPES[v.dtype]
+
+    if v.scheme == "direct":
+
+        def fn(x, w):
+            return direct.apply(
+                x, w.astype(dtype), shape=v.shape, r=v.r, t=v.t, tile=v.tile
+            )
+
+        return fn
+
+    scheme_mod = {
+        "flatten": flatten,
+        "decompose": decompose,
+        "sparse24": sparse24,
+    }[v.scheme]
+    if v.scheme == "flatten":
+
+        def fn(x, w):
+            wf = common.fuse_weights(w.astype(dtype), v.t)
+            return scheme_mod.apply(x, wf, tile=v.tile)
+
+        return fn
+
+    # Banded schemes need the STATIC fused-support mask: their GEMM/
+    # compression structure must not depend on traced weight values.
+    support = common.fused_support_mask(v.shape, v.d, v.r, v.t)
+
+    def fn(x, w):
+        wf = common.fuse_weights(w.astype(dtype), v.t)
+        return scheme_mod.apply(x, wf, support=support, tile=v.tile)
+
+    return fn
+
+
+def build_fn(v: Variant):
+    """The exported entrypoint: (x, w) -> (y,) with n_outer chained steps."""
+    step = build_step_fn(v)
+    if v.n_outer == 1:
+
+        def fn(x, w):
+            return (step(x, w),)
+
+        return fn
+
+    def fn(x, w):
+        def body(carry, _):
+            return step(carry, w), ()
+
+        y, _ = jax.lax.scan(body, x, None, length=v.n_outer)
+        return (y,)
+
+    return fn
+
+
+def input_specs(v: Variant):
+    dtype = DTYPES[v.dtype]
+    return (
+        jax.ShapeDtypeStruct(v.grid, dtype),
+        jax.ShapeDtypeStruct(v.weights_shape(), dtype),
+    )
+
+
+def lower_variant(v: Variant):
+    """jax.jit(...).lower — the single L2->HLO lowering point."""
+    return jax.jit(build_fn(v)).lower(*input_specs(v))
+
+
+def manifest_entry(v: Variant, filename: str) -> dict:
+    e = asdict(v)
+    e.update(
+        name=v.name,
+        file=filename,
+        halo=v.halo,
+        k_points=v.k_points(),
+        k_fused=v.k_fused(),
+        alpha=v.alpha(),
+        sparsity_measured=v.measured_sparsity(),
+        vmem_bytes=v.vmem_bytes(),
+        dtype_bytes=DTYPE_BYTES[v.dtype],
+        weights_shape=list(v.weights_shape()),
+    )
+    e["grid"] = list(v.grid)
+    e["tile"] = list(v.tile)
+    return e

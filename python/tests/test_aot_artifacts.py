@@ -1,0 +1,109 @@
+"""Validate the generated artifacts/ directory as the rust runtime sees it.
+
+These tests run against the output of `make artifacts` (skipped with a
+clear message when it has not been built) and pin the build-path contract:
+manifest schema, HLO text integrity (incl. the load-bearing
+print_large_constants fix), and agreement between manifest metadata and
+the model's own computations.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.kernels import common
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built — run `make artifacts`")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_variant_count_matches_matrix(self):
+        m = manifest()
+        assert len(m["variants"]) == len(aot.variant_matrix())
+
+    def test_every_file_exists_and_parses_as_hlo(self):
+        m = manifest()
+        for v in m["variants"]:
+            path = os.path.join(ART, v["file"])
+            assert os.path.exists(path), v["file"]
+            with open(path) as f:
+                text = f.read()
+            assert "HloModule" in text and "ENTRY" in text, v["name"]
+
+    def test_no_elided_constants(self):
+        # `constant({...})` in HLO text is zero-filled by the old parser
+        # on the rust side — regression gate for the aot.py fix.
+        m = manifest()
+        for v in m["variants"]:
+            with open(os.path.join(ART, v["file"])) as f:
+                assert "{..." not in f.read(), f"{v['name']} has elided constants"
+
+    def test_alpha_matches_model(self):
+        m = manifest()
+        for v in m["variants"]:
+            want = common.alpha_exact(v["shape"], v["d"], v["r"], v["t"])
+            assert abs(v["alpha"] - want) < 1e-9, v["name"]
+
+    def test_k_fields_match_model(self):
+        m = manifest()
+        for v in m["variants"]:
+            assert v["k_points"] == common.num_points(v["shape"], v["d"], v["r"])
+            assert v["k_fused"] == common.fused_num_points(
+                v["shape"], v["d"], v["r"], v["t"]
+            )
+
+    def test_sparsity_field_consistency(self):
+        m = manifest()
+        for v in m["variants"]:
+            s = v["sparsity_measured"]
+            if v["scheme"] == "direct":
+                assert s is None, v["name"]
+            else:
+                assert s is not None and 0.0 < s <= 1.0, v["name"]
+
+    def test_grids_divisible_by_tiles(self):
+        m = manifest()
+        for v in m["variants"]:
+            for g, t in zip(v["grid"], v["tile"]):
+                assert g % t == 0, v["name"]
+
+    def test_halo_is_rt(self):
+        m = manifest()
+        for v in m["variants"]:
+            assert v["halo"] == v["r"] * v["t"], v["name"]
+
+    def test_names_are_unique_and_match_files(self):
+        m = manifest()
+        names = [v["name"] for v in m["variants"]]
+        assert len(set(names)) == len(names)
+        for v in m["variants"]:
+            assert v["file"] == v["name"] + ".hlo.txt"
+
+    def test_entry_signature_has_field_and_weights(self):
+        # Every artifact takes (field, weights) as entry parameters in
+        # that order — the rust executor relies on it.
+        m = manifest()
+        for v in m["variants"]:
+            with open(os.path.join(ART, v["file"])) as f:
+                text = f.read()
+            entry = text[text.index("ENTRY") :]
+            assert "parameter(0)" in entry, v["name"]
+            assert "parameter(1)" in entry, v["name"]
+            gshape = ",".join(str(g) for g in v["grid"])
+            assert f"[{gshape}]" in entry, f"{v['name']} missing field shape"
+
+    def test_vmem_budget(self):
+        # DESIGN.md §Perf L1: every program's working set <= 16 MiB.
+        m = manifest()
+        for v in m["variants"]:
+            assert v["vmem_bytes"] <= 16 * 2**20, v["name"]

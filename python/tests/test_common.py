@@ -1,0 +1,154 @@
+"""Unit tests for the pattern/support machinery (kernels.common)."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import common
+
+
+class TestSupportMask:
+    @pytest.mark.parametrize("d", [1, 2, 3])
+    @pytest.mark.parametrize("r", [1, 2, 3])
+    def test_box_count(self, d, r):
+        assert common.num_points("box", d, r) == (2 * r + 1) ** d
+
+    @pytest.mark.parametrize("d", [1, 2, 3])
+    @pytest.mark.parametrize("r", [1, 2, 3])
+    def test_star_count(self, d, r):
+        assert common.num_points("star", d, r) == 2 * d * r + 1
+
+    def test_star_subset_of_box(self):
+        for d in (1, 2, 3):
+            box = common.support_mask("box", d, 2)
+            star = common.support_mask("star", d, 2)
+            assert np.all(box | star == box)
+
+    def test_center_always_included(self):
+        for shape in common.SHAPES:
+            m = common.support_mask(shape, 2, 3)
+            assert m[3, 3]
+
+    def test_symmetry(self):
+        for shape in common.SHAPES:
+            m = common.support_mask(shape, 2, 2)
+            assert np.array_equal(m, m[::-1, ::-1])
+            assert np.array_equal(m, m.T)
+
+    def test_rejects_bad_args(self):
+        with pytest.raises(ValueError):
+            common.support_mask("hex", 2, 1)
+        with pytest.raises(ValueError):
+            common.support_mask("box", 0, 1)
+        with pytest.raises(ValueError):
+            common.support_mask("box", 2, 0)
+
+
+class TestFusedSupport:
+    @pytest.mark.parametrize("d", [1, 2, 3])
+    @pytest.mark.parametrize("r", [1, 2])
+    @pytest.mark.parametrize("t", [1, 2, 3, 5])
+    def test_box_fused_closed_form(self, d, r, t):
+        # Box fused support is the (2rt+1)^d box — paper Eq. 10 numerator.
+        assert common.fused_num_points("box", d, r, t) == (2 * r * t + 1) ** d
+
+    @pytest.mark.parametrize("t", [1, 2, 3, 4])
+    def test_star_r1_2d_is_l1_ball(self, t):
+        # t-fold Minkowski sum of the 2D cross = L1 ball: 2t^2 + 2t + 1.
+        assert common.fused_num_points("star", 2, 1, t) == 2 * t * t + 2 * t + 1
+
+    def test_t1_is_base(self):
+        for shape in common.SHAPES:
+            assert common.fused_num_points(shape, 2, 2, 1) == common.num_points(
+                shape, 2, 2
+            )
+
+    def test_fused_support_grows(self):
+        prev = 0
+        for t in range(1, 6):
+            k = common.fused_num_points("star", 2, 1, t)
+            assert k > prev
+            prev = k
+
+
+class TestAlpha:
+    @pytest.mark.parametrize(
+        "d,r,t",
+        [(2, 1, 1), (2, 1, 3), (2, 1, 7), (2, 3, 1), (2, 7, 1), (3, 1, 3), (3, 1, 7)],
+    )
+    def test_box_matches_eq10(self, d, r, t):
+        want = (2 * r * t + 1) ** d / (t * (2 * r + 1) ** d)
+        assert common.alpha_exact("box", d, r, t) == pytest.approx(want)
+
+    def test_paper_table2_values(self):
+        # Table 2 rows 5 and 7: alpha = 1.81 (t=3) and 3.57 (t=7).
+        assert common.alpha_exact("box", 2, 1, 3) == pytest.approx(49 / 27)
+        assert common.alpha_exact("box", 2, 1, 7) == pytest.approx(225 / 63)
+
+    def test_alpha_is_one_at_t1(self):
+        for shape in common.SHAPES:
+            assert common.alpha_exact(shape, 2, 2, 1) == pytest.approx(1.0)
+
+    @given(
+        st.sampled_from(["box", "star"]),
+        st.integers(1, 3),
+        st.integers(1, 2),
+        st.integers(1, 6),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_alpha_at_least_polynomial_floor(self, shape, d, r, t):
+        # alpha grows with t for d >= 2 (paper §4.1 scenario 4, O(t^(d-1)));
+        # in 1D the fused kernel grows slower than t, so alpha <= 1 there.
+        a = common.alpha_exact(shape, d, r, t)
+        if d == 1:
+            assert a <= 1.0 + 1e-12
+        else:
+            assert a >= 1.0 - 1e-12
+            if t > 1:
+                assert a > 1.0
+
+
+class TestFuseWeights:
+    def test_fused_matches_numpy_convolution(self):
+        w = common.random_weights("box", 2, 1, seed=3)
+        wf = np.asarray(common.fuse_weights(jnp.asarray(w), 3))
+        acc = w
+        for _ in range(2):
+            acc = common._conv_full_np(acc, w)
+        np.testing.assert_allclose(wf, acc, rtol=1e-12)
+
+    def test_fused_hull_size(self):
+        w = common.default_weights("star", 2, 2)
+        wf = common.fuse_weights(jnp.asarray(w), 4)
+        assert wf.shape == (2 * 2 * 4 + 1,) * 2
+
+    def test_mass_preserved(self):
+        # Sum-1 weights stay sum-1 under self-convolution.
+        w = common.default_weights("box", 2, 1)
+        wf = common.fuse_weights(jnp.asarray(w), 5)
+        assert float(jnp.sum(wf)) == pytest.approx(1.0, abs=1e-10)
+
+    def test_fused_support_equals_mask(self):
+        w = common.default_weights("star", 2, 1)
+        wf = np.asarray(common.fuse_weights(jnp.asarray(w), 3))
+        assert np.array_equal(wf != 0, common.fused_support_mask("star", 2, 1, 3))
+
+
+class TestWeights:
+    def test_default_weights_normalized(self):
+        for shape in common.SHAPES:
+            w = common.default_weights(shape, 2, 2)
+            assert w.sum() == pytest.approx(1.0)
+
+    def test_random_weights_on_support_only(self):
+        w = common.random_weights("star", 2, 3, seed=0)
+        mask = common.support_mask("star", 2, 3)
+        assert np.all((w != 0) <= mask)
+
+    def test_random_weights_deterministic(self):
+        a = common.random_weights("box", 2, 1, seed=42)
+        b = common.random_weights("box", 2, 1, seed=42)
+        np.testing.assert_array_equal(a, b)

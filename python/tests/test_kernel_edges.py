@@ -1,0 +1,104 @@
+"""Edge cases and failure paths for the L1 kernels."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import common, ref, direct, flatten, decompose, sparse24
+
+
+def _field(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+class TestTileValidation:
+    def test_direct_rejects_nondivisible(self):
+        x = _field((30, 30))
+        w = common.default_weights("box", 2, 1, dtype=np.float32)
+        with pytest.raises(ValueError, match="not divisible"):
+            direct.apply(x, w, shape="box", r=1, t=1, tile=(16, 16))
+
+    def test_flatten_rejects_bad_nw_multiple(self):
+        x = _field((32, 36))  # tile divides the grid but not NW=8
+        wf = jnp.asarray(common.default_weights("box", 2, 1, dtype=np.float32))
+        with pytest.raises(ValueError, match="multiple of NW"):
+            flatten.apply(x, wf, tile=(32, 12))
+
+    def test_decompose_rejects_bad_nt_multiple(self):
+        x = _field((32, 48))  # tile divides the grid but not nt=16
+        wf = jnp.asarray(common.default_weights("box", 2, 1, dtype=np.float32))
+        with pytest.raises(ValueError, match="multiple of nt"):
+            decompose.apply(x, wf, tile=(32, 24))
+
+
+class TestAlternateTilings:
+    def test_decompose_nt8_equals_nt16(self):
+        x = _field((32, 32), seed=3)
+        w = common.random_weights("box", 2, 1, seed=4, dtype=np.float32)
+        wf = common.fuse_weights(jnp.asarray(w), 2)
+        a = decompose.apply(x, wf, tile=(16, 16), nt=8)
+        b = decompose.apply(x, wf, tile=(16, 16), nt=16)
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+    def test_sparse24_nt8(self):
+        x = _field((32, 32), seed=5)
+        w = common.random_weights("box", 2, 1, seed=6, dtype=np.float32)
+        wf = common.fuse_weights(jnp.asarray(w), 2)
+        got = sparse24.apply(x, wf, tile=(16, 16), nt=8)
+        want = ref.apply_fused(jnp.asarray(x), wf)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_direct_asymmetric_tiles(self):
+        x = _field((32, 64), seed=7)
+        w = common.random_weights("star", 2, 2, seed=8, dtype=np.float32)
+        got = direct.apply(x, w, shape="star", r=2, t=2, tile=(16, 32))
+        want = ref.apply_steps(jnp.asarray(x), jnp.asarray(w), 2)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+class TestDegenerateFields:
+    def test_zero_field_stays_zero(self):
+        x = np.zeros((32, 32), np.float32)
+        w = common.default_weights("box", 2, 1, dtype=np.float32)
+        for mod_apply in (
+            lambda: direct.apply(x, w, shape="box", r=1, t=3, tile=(16, 16)),
+            lambda: flatten.apply(
+                x, common.fuse_weights(jnp.asarray(w), 3), tile=(16, 16)
+            ),
+        ):
+            assert float(jnp.max(jnp.abs(mod_apply()))) == 0.0
+
+    def test_zero_weights_give_zero(self):
+        x = _field((32, 32), seed=9)
+        w = np.zeros((3, 3), np.float32)
+        out = direct.apply(x, w, shape="box", r=1, t=1, tile=(16, 16))
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+
+    def test_identity_weights_fixed_point(self):
+        x = _field((32, 32), seed=10)
+        w = np.zeros((3, 3), np.float32)
+        w[1, 1] = 1.0
+        out = direct.apply(x, w, shape="box", r=1, t=5, tile=(16, 16))
+        np.testing.assert_allclose(out, x, atol=1e-6)
+
+
+class TestLinearity:
+    def test_superposition(self):
+        # Stencils are linear operators: f(a+b) = f(a) + f(b).
+        a = _field((32, 32), seed=11)
+        b = _field((32, 32), seed=12)
+        w = common.random_weights("box", 2, 1, seed=13, dtype=np.float32)
+        wf = common.fuse_weights(jnp.asarray(w), 2)
+        fa = decompose.apply(a, wf, tile=(16, 16))
+        fb = decompose.apply(b, wf, tile=(16, 16))
+        fab = decompose.apply(a + b, wf, tile=(16, 16))
+        np.testing.assert_allclose(fab, fa + fb, atol=1e-4)
+
+    def test_scaling(self):
+        x = _field((32, 32), seed=14)
+        w = common.random_weights("star", 2, 1, seed=15, dtype=np.float32)
+        wf = common.fuse_weights(jnp.asarray(w), 2)
+        f1 = sparse24.apply(x, wf, tile=(16, 16))
+        f3 = sparse24.apply(3.0 * x, wf, tile=(16, 16))
+        np.testing.assert_allclose(f3, 3.0 * np.asarray(f1), atol=1e-4)

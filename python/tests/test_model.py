@@ -1,0 +1,131 @@
+"""L2 model / AOT plumbing tests: variants, shapes, manifest, HLO export."""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, aot
+from compile.model import Variant
+from compile.kernels import common, ref
+
+
+SMALL = dict(grid=(32, 32), tile=(16, 16))
+
+
+def _v(scheme="direct", shape="box", d=2, r=1, t=1, dtype="float32", **kw):
+    args = dict(SMALL)
+    if d == 3:
+        args = dict(grid=(16, 16, 16), tile=(8, 8, 16))
+    args.update(kw)
+    return Variant(scheme, shape, d, r, t, dtype, args["grid"], args["tile"],
+                   n_outer=args.get("n_outer", 1))
+
+
+class TestVariant:
+    def test_name_roundtrips_key_params(self):
+        v = _v("decompose", "star", t=3)
+        assert v.name == "decompose_star2d_r1_t3_f32_g32x32"
+
+    def test_chain_name(self):
+        v = _v(n_outer=4)
+        assert v.name.endswith("_chain4")
+
+    def test_halo(self):
+        assert _v(t=3, r=2).halo == 6
+
+    def test_k_points(self):
+        assert _v(shape="box", r=1).k_points() == 9
+        assert _v(shape="star", r=1).k_points() == 5
+
+    def test_alpha_matches_common(self):
+        v = _v(t=3)
+        assert v.alpha() == pytest.approx(common.alpha_exact("box", 2, 1, 3))
+
+    def test_sparsity_none_for_direct(self):
+        assert _v("direct").measured_sparsity() is None
+
+    def test_sparsity_for_tc_schemes(self):
+        assert 0 < _v("flatten", t=3).measured_sparsity() <= 1
+        assert 0 < _v("decompose", t=3).measured_sparsity() <= 1
+
+    def test_vmem_estimate_positive_and_fits(self):
+        for scheme in ("direct", "flatten", "decompose"):
+            vb = _v(scheme, t=2).vmem_bytes()
+            assert 0 < vb < 16 * 2**20  # DESIGN.md L1 target: <= 16 MiB
+
+
+class TestBuildFn:
+    @pytest.mark.parametrize("scheme", ["direct", "flatten", "decompose", "sparse24"])
+    def test_step_fn_matches_oracle(self, scheme):
+        v = _v(scheme, t=2)
+        fn = model.build_fn(v)
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal(v.grid).astype(np.float32)
+        w = common.random_weights(v.shape, v.d, v.r, seed=4, dtype=np.float32)
+        (got,) = fn(jnp.asarray(x), jnp.asarray(w))
+        if scheme == "direct":
+            want = ref.apply_steps(jnp.asarray(x), jnp.asarray(w), v.t)
+        else:
+            want = ref.apply_fused(
+                jnp.asarray(x), common.fuse_weights(jnp.asarray(w), v.t)
+            )
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_chain_equals_repeated_step(self):
+        v = _v(n_outer=3)
+        step = model.build_step_fn(v)
+        chain = model.build_fn(v)
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal(v.grid).astype(np.float32))
+        w = jnp.asarray(common.default_weights("box", 2, 1, dtype=np.float32))
+        (got,) = chain(x, w)
+        want = x
+        for _ in range(3):
+            want = step(want, w)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_jit_compiles(self):
+        v = _v("direct")
+        fn = jax.jit(model.build_fn(v))
+        x = jnp.zeros(v.grid, jnp.float32)
+        w = jnp.asarray(common.default_weights("box", 2, 1, dtype=np.float32))
+        (y,) = fn(x, w)
+        assert y.shape == v.grid
+
+
+class TestAot:
+    def test_variant_matrix_names_unique(self):
+        names = [v.name for v in aot.variant_matrix()]
+        assert len(names) == len(set(names))
+
+    def test_variant_matrix_covers_all_schemes_and_shapes(self):
+        vs = aot.variant_matrix()
+        assert {v.scheme for v in vs} == {"direct", "flatten", "decompose", "sparse24"}
+        assert {v.shape for v in vs} == {"box", "star"}
+        assert {v.d for v in vs} == {2, 3}
+        assert {v.dtype for v in vs} == {"float32", "float64"}
+        assert any(v.n_outer > 1 for v in vs)
+
+    def test_tiles_divide_grids(self):
+        for v in aot.variant_matrix():
+            assert all(g % tl == 0 for g, tl in zip(v.grid, v.tile)), v.name
+
+    def test_hlo_text_export(self):
+        v = _v("direct")
+        text = aot.to_hlo_text(model.lower_variant(v))
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+    def test_manifest_entry_schema(self):
+        v = _v("decompose", t=3)
+        e = model.manifest_entry(v, f"{v.name}.hlo.txt")
+        for key in (
+            "name", "file", "scheme", "shape", "d", "r", "t", "dtype", "grid",
+            "tile", "halo", "k_points", "k_fused", "alpha", "sparsity_measured",
+            "vmem_bytes", "dtype_bytes", "weights_shape", "n_outer",
+        ):
+            assert key in e, key
+        json.dumps(e)  # must be JSON-serializable

@@ -1,0 +1,150 @@
+//! Ablations for the design choices called out in DESIGN.md §4:
+//!   (a) planner-chosen fusion depth vs fixed t
+//!   (b) exact Minkowski α vs the box closed form applied to stars
+//!   (c) L2-filter model on/off vs the Table-2 M deltas
+//!   (d) rust-driven launch loop vs in-graph lax.scan chain (real timing)
+//!   (e) gather worker threads 1 vs 4 (real timing)
+
+use tc_stencil::coordinator::planner::{plan, Request};
+use tc_stencil::coordinator::scheduler::{run, Job};
+use tc_stencil::engines;
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::{Dtype, Workload};
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::runtime::{manifest, Runtime, TensorData};
+use tc_stencil::sim::cache::L2Model;
+use tc_stencil::sim::counters::{measured_m, Schedule};
+use tc_stencil::sim::exec;
+use tc_stencil::util::bench::Bench;
+use tc_stencil::util::rng::Rng;
+
+fn main() {
+    ablation_a_planner_vs_fixed_t();
+    ablation_b_alpha_formula();
+    ablation_c_l2_filter();
+    ablation_d_and_e_real_timings();
+}
+
+fn ablation_a_planner_vs_fixed_t() {
+    println!("### (a) planner-chosen t vs fixed t (Box-2D1R float, A100)");
+    let gpu = Gpu::a100();
+    let req = Request {
+        pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+        dtype: Dtype::F32,
+        steps: 64,
+        gpu: gpu.clone(),
+        require_artifact: false,
+        max_t: 8,
+    };
+    let p = plan(&req, None).unwrap();
+    let auto = p.chosen.prediction.gstencils();
+    println!("  planner: {} t={} -> {:.1} GSt/s", p.chosen.engine.name, p.chosen.t, auto);
+    for t in [1usize, 3, 7] {
+        let w = Workload::new(req.pattern, t, Dtype::F32);
+        let best = [engines::ebisu(), engines::convstencil(), engines::spider()]
+            .iter()
+            .filter_map(|e| exec::predict(e, &w, &gpu).ok())
+            .map(|pr| pr.gstencils())
+            .fold(f64::NAN, f64::max);
+        println!("  fixed t={t}: best engine -> {best:.1} GSt/s ({:.2}x of auto)", best / auto);
+        assert!(best <= auto * 1.0001, "fixed t must never beat the planner");
+    }
+    println!();
+}
+
+fn ablation_b_alpha_formula() {
+    println!("### (b) exact Minkowski α vs box closed form on star stencils");
+    // Applying Eq. 10 (box closed form) to star patterns overstates the
+    // fusion redundancy — the fused star support is an L1 ball, not a
+    // cube.  Overstated α inflates C_TC and I_TC and can misclassify the
+    // Tensor-Core bottleneck near the ridge.
+    let gpu = Gpu::a100();
+    let tc = gpu.roof(tc_stencil::model::perf::Unit::TensorCore, Dtype::F32).unwrap();
+    let star = StencilPattern::new(Shape::Star, 2, 1).unwrap();
+    let mut max_err = 0.0f64;
+    let mut bound_flips = 0;
+    for t in 1..=8usize {
+        let w = Workload::new(star, t, Dtype::F32);
+        let s = w.sparsity(tc_stencil::model::sparsity::Scheme::Decompose);
+        let alpha_exact = w.alpha();
+        let alpha_box = ((2 * t + 1) * (2 * t + 1)) as f64 / (t as f64 * 5.0);
+        let err = (alpha_box - alpha_exact) / alpha_exact;
+        max_err = max_err.max(err);
+        let i_exact = t as f64 * alpha_exact / s * w.k() / 4.0;
+        let i_box = t as f64 * alpha_box / s * w.k() / 4.0;
+        let flip = (i_exact < tc.ridge()) != (i_box < tc.ridge());
+        if flip {
+            bound_flips += 1;
+        }
+        println!(
+            "  t={t}: α_exact={alpha_exact:.3} α_boxform={alpha_box:.3} \
+             (+{:.0}% error){}",
+            err * 100.0,
+            if flip { "  -> TC bound MISCLASSIFIED" } else { "" }
+        );
+    }
+    println!(
+        "  box formula overstates star α by up to {:.0}%; TC-bound \
+         misclassifications: {bound_flips}/8\n",
+        max_err * 100.0
+    );
+    assert!(max_err > 0.5, "the closed form must be badly wrong for stars");
+}
+
+fn ablation_c_l2_filter() {
+    println!("### (c) L2-filter model on/off vs Table-2 M deltas");
+    let w = Workload::new(StencilPattern::new(Shape::Box, 2, 1).unwrap(), 3, Dtype::F64);
+    let on = Schedule::cuda_core();
+    let mut off = Schedule::cuda_core();
+    off.l2 = L2Model::off();
+    let m_on = measured_m(&w, &on);
+    let m_off = measured_m(&w, &off);
+    let m_a = w.m_bytes();
+    println!("  analytical M = {m_a}");
+    println!("  with L2 model:   {m_on:.3}  (Δ {:+.2}%)  — paper row 1: −0.30%", (m_on - m_a) / m_a * 100.0);
+    println!("  without L2 model:{m_off:.3}  (Δ {:+.2}%)  — halo spill only", (m_off - m_a) / m_a * 100.0);
+    assert!(m_on < m_a, "with the filter M must undershoot (paper sign)");
+    assert!(m_off > m_a, "without the filter the halo reads dominate");
+    println!();
+}
+
+fn ablation_d_and_e_real_timings() {
+    println!("### (d) rust launch loop vs in-graph scan chain + (e) gather threads");
+    let mut rt = Runtime::load(&manifest::default_dir()).expect("run `make artifacts`");
+    let mut rng = Rng::new(5);
+    let x = TensorData::F32(rng.normal_vec_f32(64 * 64));
+    let w = TensorData::F32(vec![1.0 / 9.0; 9]);
+    let mut b = Bench::new("ablation");
+    // (d): 8 steps as 8 rust launches vs one chain8 artifact.
+    let single = "direct_box2d_r1_t1_f32_g64x64";
+    let chain = "direct_box2d_r1_t1_f32_g64x64_chain8";
+    rt.execute(single, &x, &w).unwrap();
+    rt.execute(chain, &x, &w).unwrap();
+    b.run_items("rust_loop_8x", Some(64.0 * 64.0 * 8.0), || {
+        let mut cur = x.clone();
+        for _ in 0..8 {
+            cur = rt.execute(single, &cur, &w).unwrap();
+        }
+        std::hint::black_box(cur);
+    });
+    b.run_items("scan_chain8", Some(64.0 * 64.0 * 8.0), || {
+        std::hint::black_box(rt.execute(chain, &x, &w).unwrap());
+    });
+    // (e): coordinator gather threads.
+    let field: Vec<f64> = (0..256 * 256).map(|_| rng.normal()).collect();
+    for threads in [1usize, 4] {
+        let job = Job {
+            artifact: "direct_box2d_r1_t3_f32_g64x64".into(),
+            domain: vec![256, 256],
+            steps: 3,
+            weights: vec![1.0 / 9.0; 9],
+            threads,
+        };
+        let mut f = field.clone();
+        run(&mut rt, &job, &mut f).unwrap(); // warm
+        b.run_items(&format!("coordinator_threads_{threads}"), Some(256.0 * 256.0 * 3.0), || {
+            let mut ff = field.clone();
+            std::hint::black_box(run(&mut rt, &job, &mut ff).unwrap());
+        });
+    }
+}

@@ -1,0 +1,34 @@
+//! Regenerates paper Fig 10: classification of stencil configurations by
+//! the fusion depth at which they cross into the compute-bound region,
+//! on datasheet and clock-locked A100 roofs (§4.2's empirical-vs-model
+//! discrepancy discussion).
+
+use tc_stencil::engines::calib;
+use tc_stencil::hardware::Gpu;
+use tc_stencil::report;
+use tc_stencil::util::bench::Bench;
+
+fn main() {
+    let gpu = Gpu::a100();
+    println!("{}", report::fig10(&gpu).render());
+    println!(
+        "--- clock-locked ({}): transitions shift EARLIER (paper §4.2) ---",
+        calib::PROFILING_CLOCK_LOCK
+    );
+    let locked = gpu.locked(calib::PROFILING_CLOCK_LOCK);
+    println!("{}", report::fig10(&locked).render());
+
+    // Gate: every locked transition depth <= datasheet transition depth.
+    let a = report::fig10(&gpu);
+    let b = report::fig10(&locked);
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        let ta: usize = ra[4].parse().unwrap_or(99);
+        let tb: usize = rb[4].parse().unwrap_or(99);
+        assert!(tb <= ta, "{}: locked {tb} > free {ta}", ra[0]);
+    }
+
+    let mut bench = Bench::new("fig10");
+    bench.run("classification_sweep", || {
+        std::hint::black_box(report::fig10(&gpu));
+    });
+}

@@ -1,0 +1,39 @@
+//! Regenerates paper Fig 11: the EBISU roofline across fusion depths —
+//! and measures the REAL fusion-depth effect on CPU-PJRT: per-step cost
+//! of the direct kernels at t = 1, 2, 3 (temporal fusion amortizes HBM
+//! traffic; on CPU it amortizes per-launch overhead the same way).
+
+use tc_stencil::hardware::Gpu;
+use tc_stencil::report;
+use tc_stencil::runtime::{manifest, Runtime, TensorData};
+use tc_stencil::util::bench::Bench;
+use tc_stencil::util::rng::Rng;
+
+fn main() {
+    let gpu = Gpu::a100();
+    println!("{}", report::fig11(&gpu).render());
+
+    // Gate: box f32 transitions from memory to compute within t <= 8.
+    let t = report::fig11(&gpu);
+    let rows: Vec<_> = t.rows.iter().filter(|r| r[0] == "Box-2D1R" && r[1] == "float").collect();
+    assert_eq!(rows[0][4], "Memory");
+    assert_eq!(rows[7][4], "Compute");
+
+    let mut rt = Runtime::load(&manifest::default_dir()).expect("run `make artifacts`");
+    let mut rng = Rng::new(11);
+    let x = TensorData::F32(rng.normal_vec_f32(64 * 64));
+    let w = TensorData::F32(vec![1.0 / 9.0; 9]);
+    let mut b = Bench::new("fig11/fusion-depth");
+    for (name, steps) in [
+        ("direct_box2d_r1_t1_f32_g64x64", 1.0),
+        ("direct_box2d_r1_t2_f32_g64x64", 2.0),
+        ("direct_box2d_r1_t3_f32_g64x64", 3.0),
+    ] {
+        rt.execute(name, &x, &w).unwrap();
+        // items = point-updates per launch: deeper fusion does more steps
+        // per launch — throughput per launch must grow with t.
+        b.run_items(name, Some(64.0 * 64.0 * steps), || {
+            std::hint::black_box(rt.execute(name, &x, &w).unwrap());
+        });
+    }
+}

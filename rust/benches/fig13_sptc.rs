@@ -1,0 +1,25 @@
+//! Regenerates paper Fig 13/14: how Sparse Tensor Cores raise the
+//! ceiling and EXPAND the sweet spot across fusion depths.
+
+use tc_stencil::hardware::Gpu;
+use tc_stencil::report;
+use tc_stencil::util::bench::Bench;
+
+fn main() {
+    let gpu = Gpu::a100();
+    let t = report::fig13(&gpu);
+    println!("{}", t.render());
+    let expanded: Vec<&str> = t
+        .rows
+        .iter()
+        .filter(|r| r[5] == "no" && r[6] == "yes")
+        .map(|r| r[0].as_str())
+        .collect();
+    println!("fusion depths recovered by SpTC (dense-unprofitable, sparse-profitable): {expanded:?}\n");
+    assert!(!expanded.is_empty(), "SpTC must expand the profitable region");
+
+    let mut b = Bench::new("fig13");
+    b.run("sweep_t32", || {
+        std::hint::black_box(report::fig13(&gpu));
+    });
+}

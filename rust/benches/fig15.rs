@@ -1,0 +1,19 @@
+//! Regenerates paper Fig 15: arithmetic intensity vs fusion depth on
+//! CUDA Cores (double) — the linear relationship with slope K/D that
+//! anchors the whole temporal-fusion analysis.
+
+use tc_stencil::report;
+use tc_stencil::util::bench::Bench;
+
+fn main() {
+    let (table, slope, r2) = report::fig15();
+    println!("{}", table.render());
+    println!("linear fit: I = a + {slope:.4}·t, r² = {r2:.6} (analytical slope K/D = 1.125)\n");
+    assert!((slope - 1.125).abs() / 1.125 < 0.1, "slope {slope} strays from K/D");
+    assert!(r2 > 0.99, "linearity broken: r²={r2}");
+
+    let mut b = Bench::new("fig15");
+    b.run("profiled_sweep", || {
+        std::hint::black_box(report::fig15());
+    });
+}

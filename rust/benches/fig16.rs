@@ -1,0 +1,33 @@
+//! Regenerates paper Fig 16: overall performance comparison across all
+//! baselines, shapes, radii and precisions (best fusion depth each).
+
+use tc_stencil::hardware::Gpu;
+use tc_stencil::report;
+use tc_stencil::util::bench::Bench;
+
+fn main() {
+    let gpu = Gpu::a100();
+    let t = report::fig16(&gpu);
+    println!("{}", t.render());
+
+    // Gates mirroring §5.5: EBISU is the CUDA-Core SOTA (beats cuDNN and
+    // DRStencil everywhere); SPIDER dominates float rows where present.
+    for row in &t.rows {
+        let parse = |s: &String| s.parse::<f64>().ok();
+        if let (Some(cudnn), Some(dr), Some(eb)) = (parse(&row[2]), parse(&row[3]), parse(&row[4]))
+        {
+            assert!(eb >= dr && eb >= cudnn, "EBISU must lead CUDA engines: {row:?}");
+        }
+    }
+    let float_spider_wins = t
+        .rows
+        .iter()
+        .filter(|r| r[1] == "float" && r[7] == "SPIDER")
+        .count();
+    println!("SPIDER wins {float_spider_wins} of the float configurations\n");
+
+    let mut b = Bench::new("fig16");
+    b.run("full_matrix", || {
+        std::hint::black_box(report::fig16(&gpu));
+    });
+}

@@ -1,0 +1,35 @@
+//! Regenerates paper Fig 2: speedups of Tensor-Core implementations over
+//! DRStencil, plus real CPU-PJRT latencies of the corresponding kernel
+//! schemes (direct vs flatten vs decompose vs sparse24).
+
+use tc_stencil::hardware::Gpu;
+use tc_stencil::report;
+use tc_stencil::runtime::{manifest, Runtime, TensorData};
+use tc_stencil::util::bench::Bench;
+use tc_stencil::util::rng::Rng;
+
+fn main() {
+    let gpu = Gpu::a100();
+    println!("{}", report::fig2(&gpu).render());
+    println!(
+        "paper Fig 2 reports 1.48x / 2.23x / 4.60x for TCStencil /\n\
+         ConvStencil / SPIDER — the ordering above must match.\n"
+    );
+
+    let mut rt = Runtime::load(&manifest::default_dir()).expect("run `make artifacts`");
+    let mut rng = Rng::new(2);
+    let x = TensorData::F32(rng.normal_vec_f32(64 * 64));
+    let w = TensorData::F32(vec![1.0 / 9.0; 9]);
+    let mut b = Bench::new("fig2/scheme-latency");
+    for name in [
+        "direct_box2d_r1_t3_f32_g64x64",
+        "flatten_box2d_r1_t3_f32_g64x64",
+        "decompose_box2d_r1_t3_f32_g64x64",
+        "sparse24_box2d_r1_t3_f32_g64x64",
+    ] {
+        rt.execute(name, &x, &w).unwrap();
+        b.run_items(name, Some((64 * 64 * 3) as f64), || {
+            std::hint::black_box(rt.execute(name, &x, &w).unwrap());
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Regenerates paper Fig 8/9: the four-scenario partition of workload
+//! space and the per-scenario performance verdicts.
+
+use tc_stencil::hardware::Gpu;
+use tc_stencil::report;
+use tc_stencil::util::bench::Bench;
+
+fn main() {
+    let gpu = Gpu::a100();
+    println!("{}", report::fig8_regions(&gpu).render());
+    let census = report::scenario_census(&gpu);
+    println!(
+        "scenario census over the sweep: S1={} S2={} S3={} S4={}\n",
+        census[0], census[1], census[2], census[3]
+    );
+    // All four behaviours must be reachable on A100 (Fig 9's point).
+    assert!(census.iter().filter(|&&c| c > 0).count() >= 3);
+
+    let mut b = Bench::new("fig8");
+    b.run("region_sweep", || {
+        std::hint::black_box(report::fig8_regions(&gpu));
+    });
+}

@@ -1,0 +1,99 @@
+//! L3 hot-path microbenchmarks (the §Perf targets): PJRT execute latency
+//! per scheme, gather/scatter tiling cost, manifest parsing, planner
+//! latency, and the end-to-end coordinator step on a 256² domain.
+
+use std::path::Path;
+
+use tc_stencil::coordinator::grid::Tiling;
+use tc_stencil::coordinator::planner::{plan, Request};
+use tc_stencil::coordinator::scheduler::{run, Job};
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::Dtype;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::runtime::{manifest, Manifest, Runtime, TensorData};
+use tc_stencil::util::bench::Bench;
+use tc_stencil::util::rng::Rng;
+
+fn main() {
+    let dir = manifest::default_dir();
+    let mut rt = Runtime::load(&dir).expect("run `make artifacts`");
+    let mut rng = Rng::new(0xFEED);
+
+    let mut b = Bench::new("hotpath");
+
+    // 1. Raw execute latency (dominant hot-path cost).
+    let x = TensorData::F32(rng.normal_vec_f32(64 * 64));
+    let w = TensorData::F32(vec![1.0 / 9.0; 9]);
+    for name in [
+        "direct_box2d_r1_t1_f32_g64x64",
+        "direct_box2d_r1_t3_f32_g64x64",
+        "decompose_box2d_r1_t7_f32_g64x64",
+        "sparse24_box2d_r1_t7_f32_g64x64",
+    ] {
+        rt.execute(name, &x, &w).unwrap();
+        let meta = rt.manifest.get(name).unwrap();
+        let items = (meta.points() * meta.steps_per_exec() as u64) as f64;
+        b.run_items(&format!("execute/{name}"), Some(items), || {
+            std::hint::black_box(rt.execute(name, &x, &w).unwrap());
+        });
+    }
+
+    // 2. Tiling gather/scatter on a 256² domain with halo 3.
+    let domain = vec![256usize, 256];
+    let field: Vec<f64> = (0..256 * 256).map(|_| rng.normal()).collect();
+    let tiling = Tiling::new(&domain, &[64, 64], 3).unwrap();
+    let tiles = tiling.tiles();
+    b.run_items("gather/256x256_h3", Some(tiles.len() as f64), || {
+        for t in &tiles {
+            std::hint::black_box(tiling.gather(&field, t));
+        }
+    });
+    let mut out = vec![0.0f64; 256 * 256];
+    let tile_out = tiling.gather(&field, &tiles[0]);
+    b.run_items("scatter/256x256_h3", Some(tiles.len() as f64), || {
+        for t in &tiles {
+            tiling.scatter(std::hint::black_box(&tile_out), t, &mut out);
+        }
+    });
+
+    // 3. Manifest parse (startup path).
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    b.run("manifest_parse", || {
+        std::hint::black_box(Manifest::parse(Path::new("artifacts"), &text).unwrap());
+    });
+
+    // 4. Planner decision latency.
+    let req = Request {
+        pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+        dtype: Dtype::F32,
+        steps: 64,
+        gpu: Gpu::a100(),
+        require_artifact: true,
+        max_t: 8,
+    };
+    b.run("planner_plan", || {
+        std::hint::black_box(plan(&req, Some(&rt.manifest)).unwrap());
+    });
+
+    // 5. End-to-end coordinator step: 256² domain, one t=3 launch set.
+    let weights = vec![1.0 / 9.0; 9];
+    let mut f = field.clone();
+    let job = Job {
+        artifact: "direct_box2d_r1_t3_f32_g64x64".into(),
+        domain: domain.clone(),
+        steps: 3,
+        weights,
+        threads: 4,
+    };
+    run(&mut rt, &job, &mut f).unwrap(); // warm compile
+    b.run_items("coordinator_launch/256x256_t3", Some(256.0 * 256.0 * 3.0), || {
+        let mut ff = field.clone();
+        std::hint::black_box(run(&mut rt, &job, &mut ff).unwrap());
+    });
+
+    // Observability: overhead split of the last run.
+    let mut ff = field.clone();
+    let m = run(&mut rt, &job, &mut ff).unwrap();
+    println!("\ncoordinator phase split: {}", m.render());
+    println!("tiling overhead fraction: {:.1}%", m.overhead_fraction() * 100.0);
+}

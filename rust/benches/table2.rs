@@ -1,0 +1,26 @@
+//! Regenerates paper Table 2: analytical vs profiled C/M/I per output
+//! point for EBISU / ConvStencil / SPIDER rows, and times the profiler.
+
+use tc_stencil::engines;
+use tc_stencil::model::perf::{Dtype, Workload};
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::report;
+use tc_stencil::sim::profiler;
+use tc_stencil::util::bench::Bench;
+
+fn main() {
+    println!("{}", report::table2().render());
+    // Sanity gates mirroring §5.2's findings.
+    let w = Workload::new(StencilPattern::new(Shape::Box, 2, 1).unwrap(), 3, Dtype::F64);
+    let p = profiler::profile(&engines::ebisu(), &w);
+    assert!(p.delta_c() > 0.0, "measured C must exceed analytical (§5.2.4)");
+    assert!(p.delta_m() < 0.0, "measured M must undershoot analytical (§5.2.4)");
+
+    let mut b = Bench::new("table2");
+    b.run("profile_one_row", || {
+        std::hint::black_box(profiler::profile(&engines::spider(), &w));
+    });
+    b.run("full_table", || {
+        std::hint::black_box(report::table2().render());
+    });
+}

@@ -1,0 +1,38 @@
+//! Regenerates paper Table 3: the six representative cases with
+//! bottleneck transitions and GStencils/s, on datasheet and clock-locked
+//! A100 roofs.
+
+use tc_stencil::engines::{self, calib};
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::{Dtype, Workload};
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::report;
+use tc_stencil::sim::exec;
+use tc_stencil::util::bench::Bench;
+
+fn main() {
+    let gpu = Gpu::a100();
+    println!("{}", report::table3(&gpu).render());
+    println!("--- with profiling clock lock ({}) ---", calib::PROFILING_CLOCK_LOCK);
+    println!("{}", report::table3(&gpu.locked(calib::PROFILING_CLOCK_LOCK)).render());
+
+    // Direction gates: ↓ ≈ ↑ ↑ ↓ ↓ per the paper.
+    let t = report::table3(&gpu);
+    for (i, want) in ["↓", "≈", "↑", "↑", "↓", "↓"].iter().enumerate() {
+        assert!(
+            t.rows[i][9].starts_with(want),
+            "case {} direction: got {:?}, want {want}",
+            i + 1,
+            t.rows[i][9]
+        );
+    }
+
+    let mut b = Bench::new("table3");
+    let w = Workload::new(StencilPattern::new(Shape::Box, 2, 1).unwrap(), 7, Dtype::F32);
+    b.run("predict", || {
+        std::hint::black_box(exec::predict(&engines::spider(), &w, &gpu).unwrap());
+    });
+    b.run("full_table", || {
+        std::hint::black_box(report::table3(&gpu).render());
+    });
+}

@@ -1,0 +1,168 @@
+//! Run configuration shared by the CLI and examples.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::hardware::Gpu;
+use crate::model::perf::Dtype;
+use crate::model::stencil::{Shape, StencilPattern};
+
+/// Parsed stencil-job configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub pattern: StencilPattern,
+    pub dtype: Dtype,
+    pub domain: Vec<usize>,
+    pub steps: usize,
+    pub gpu: Gpu,
+    pub threads: usize,
+    /// Force a specific engine (None = let the planner decide).
+    pub engine: Option<String>,
+    /// Force a fusion depth (None = planner).
+    pub t: Option<usize>,
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl RunConfig {
+    pub fn defaults() -> RunConfig {
+        RunConfig {
+            pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+            dtype: Dtype::F32,
+            domain: vec![256, 256],
+            steps: 8,
+            gpu: Gpu::a100(),
+            threads: 4,
+            engine: None,
+            t: None,
+            artifacts_dir: crate::runtime::manifest::default_dir(),
+        }
+    }
+
+    /// Parse a "128x256"-style extent list.
+    pub fn parse_domain(s: &str) -> Result<Vec<usize>> {
+        let dims: Vec<usize> = s
+            .split('x')
+            .map(|p| p.trim().parse::<usize>().map_err(|e| anyhow!("domain {p:?}: {e}")))
+            .collect::<Result<_>>()?;
+        if dims.is_empty() || dims.len() > 3 {
+            bail!("domain must have 1–3 extents, got {}", dims.len());
+        }
+        if dims.iter().any(|&d| d == 0) {
+            bail!("domain extents must be positive");
+        }
+        Ok(dims)
+    }
+
+    /// Apply CLI overrides onto the defaults.
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<RunConfig> {
+        let mut c = RunConfig::defaults();
+        if let Some(s) = args.get("shape") {
+            let d = args.get_usize("d")?.unwrap_or(2);
+            let r = args.get_usize("r")?.unwrap_or(1);
+            c.pattern = StencilPattern::new(Shape::parse(s)?, d, r)?;
+        } else {
+            let d = args.get_usize("d")?.unwrap_or(c.pattern.d);
+            let r = args.get_usize("r")?.unwrap_or(c.pattern.r);
+            c.pattern = StencilPattern::new(c.pattern.shape, d, r)?;
+        }
+        if let Some(s) = args.get("dtype") {
+            c.dtype = Dtype::parse(s)?;
+        }
+        if let Some(s) = args.get("domain") {
+            c.domain = Self::parse_domain(s)?;
+        }
+        if c.domain.len() != c.pattern.d {
+            // domain rank follows the pattern dimensionality
+            c.domain = match c.pattern.d {
+                2 => vec![256, 256],
+                3 => vec![64, 64, 64],
+                other => bail!("unsupported dimensionality {other}"),
+            };
+        }
+        if let Some(n) = args.get_usize("steps")? {
+            c.steps = n;
+        }
+        if let Some(g) = args.get("gpu") {
+            c.gpu = Gpu::lookup(g)?;
+        }
+        if let Some(n) = args.get_usize("threads")? {
+            c.threads = n.max(1);
+        }
+        if let Some(e) = args.get("engine") {
+            c.engine = Some(e.to_string());
+        }
+        c.t = args.get_usize("t")?;
+        if let Some(dir) = args.get("artifacts") {
+            c.artifacts_dir = std::path::PathBuf::from(dir);
+        }
+        Ok(c)
+    }
+}
+
+/// The CLI option specs shared by run-like subcommands.
+pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
+    use crate::util::cli::OptSpec;
+    vec![
+        OptSpec { name: "shape", help: "stencil shape: box|star", takes_value: true, default: Some("box") },
+        OptSpec { name: "d", help: "dimensionality (2|3)", takes_value: true, default: Some("2") },
+        OptSpec { name: "r", help: "radius", takes_value: true, default: Some("1") },
+        OptSpec { name: "t", help: "fusion depth (omit = planner)", takes_value: true, default: None },
+        OptSpec { name: "dtype", help: "float|double", takes_value: true, default: Some("float") },
+        OptSpec { name: "domain", help: "e.g. 256x256 or 64x64x64", takes_value: true, default: None },
+        OptSpec { name: "steps", help: "time steps to advance", takes_value: true, default: Some("8") },
+        OptSpec { name: "gpu", help: "a100|v100|h100|rtx4090", takes_value: true, default: Some("a100") },
+        OptSpec { name: "threads", help: "gather workers", takes_value: true, default: Some("4") },
+        OptSpec { name: "engine", help: "force engine by name", takes_value: true, default: None },
+        OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: None },
+        OptSpec { name: "verify", help: "check vs golden oracle", takes_value: false, default: None },
+        OptSpec { name: "locked", help: "apply profiling clock lock", takes_value: false, default: None },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn parse(v: &[&str]) -> RunConfig {
+        let raw: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&raw, &run_opt_specs()).unwrap();
+        RunConfig::from_args(&args).unwrap()
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::defaults();
+        assert_eq!(c.pattern.label(), "Box-2D1R");
+        assert_eq!(c.domain, vec![256, 256]);
+    }
+
+    #[test]
+    fn parses_full_cli() {
+        let c = parse(&[
+            "--shape", "star", "--d", "3", "--r", "1", "--dtype", "double",
+            "--domain", "32x32x32", "--steps", "12", "--gpu", "h100",
+            "--threads", "8", "--engine", "EBISU", "--t", "3",
+        ]);
+        assert_eq!(c.pattern.label(), "Star-3D1R");
+        assert_eq!(c.dtype, Dtype::F64);
+        assert_eq!(c.domain, vec![32, 32, 32]);
+        assert_eq!(c.steps, 12);
+        assert_eq!(c.gpu.name, "H100-SXM5");
+        assert_eq!(c.engine.as_deref(), Some("EBISU"));
+        assert_eq!(c.t, Some(3));
+    }
+
+    #[test]
+    fn domain_rank_follows_pattern() {
+        let c = parse(&["--d", "3"]);
+        assert_eq!(c.domain, vec![64, 64, 64]);
+    }
+
+    #[test]
+    fn parse_domain_rejects_garbage() {
+        assert!(RunConfig::parse_domain("10x0").is_err());
+        assert!(RunConfig::parse_domain("axb").is_err());
+        assert!(RunConfig::parse_domain("1x2x3x4").is_err());
+        assert_eq!(RunConfig::parse_domain("128x64").unwrap(), vec![128, 64]);
+    }
+}

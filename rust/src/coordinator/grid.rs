@@ -1,0 +1,299 @@
+//! Domain decomposition with halo exchange.
+//!
+//! Artifacts compute a fixed G^d grid with Dirichlet-0 halo.  To advance an
+//! arbitrary N^d domain, tiles of *payload* size (G − 2h)^d are carved out
+//! with an h-wide overlap ring filled from neighbouring data (zero outside
+//! the domain).  After execution only the tile interior — exact under the
+//! fused-kernel semantics — is written back.  Boundary tiles inherit the
+//! global zero halo, so the assembled result equals an untiled run
+//! (`scheduler` tests assert this against the golden oracle).
+
+use anyhow::{bail, Result};
+
+/// One tile's placement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tile {
+    /// Payload origin in the global domain (per dim).
+    pub origin: Vec<usize>,
+    /// Payload extent (per dim) — ≤ step, truncated at domain edge.
+    pub extent: Vec<usize>,
+}
+
+/// Tiling of an N^d domain onto G^d artifacts with halo h.
+#[derive(Debug, Clone)]
+pub struct Tiling {
+    pub domain: Vec<usize>,
+    pub grid: Vec<usize>, // artifact grid G per dim
+    pub halo: usize,
+    pub step: Vec<usize>, // payload per dim = G - 2h
+}
+
+impl Tiling {
+    pub fn new(domain: &[usize], grid: &[usize], halo: usize) -> Result<Tiling> {
+        if domain.len() != grid.len() {
+            bail!("domain rank {} != grid rank {}", domain.len(), grid.len());
+        }
+        let mut step = Vec::with_capacity(grid.len());
+        for (&g, &n) in grid.iter().zip(domain) {
+            if g <= 2 * halo {
+                bail!("artifact grid {g} too small for halo {halo}");
+            }
+            step.push(g - 2 * halo);
+            if n == 0 {
+                bail!("empty domain dimension");
+            }
+        }
+        Ok(Tiling {
+            domain: domain.to_vec(),
+            grid: grid.to_vec(),
+            halo,
+            step,
+        })
+    }
+
+    /// Tiles covering the domain exactly once (payload-disjoint).
+    pub fn tiles(&self) -> Vec<Tile> {
+        let counts: Vec<usize> = self
+            .domain
+            .iter()
+            .zip(&self.step)
+            .map(|(&n, &s)| n.div_ceil(s))
+            .collect();
+        let total: usize = counts.iter().product();
+        let mut out = Vec::with_capacity(total);
+        for flat in 0..total {
+            let mut rem = flat;
+            let mut origin = vec![0usize; self.domain.len()];
+            for k in (0..self.domain.len()).rev() {
+                origin[k] = (rem % counts[k]) * self.step[k];
+                rem /= counts[k];
+            }
+            let extent: Vec<usize> = origin
+                .iter()
+                .zip(&self.step)
+                .zip(&self.domain)
+                .map(|((&o, &s), &n)| s.min(n - o))
+                .collect();
+            out.push(Tile { origin, extent });
+        }
+        out
+    }
+
+    /// Gather the artifact input for a tile: a G^d block whose interior
+    /// payload starts at halo offset, zero-filled outside the domain.
+    ///
+    /// Hot path (§Perf L3): rows along the innermost dimension are
+    /// contiguous in BOTH the block and the field, so each row is one
+    /// bounds-clipped `copy_from_slice` instead of a per-element odometer
+    /// decode — ~3× on 2D gathers, more in 3D.
+    pub fn gather(&self, field: &[f64], tile: &Tile) -> Vec<f64> {
+        let g_total: usize = self.grid.iter().product();
+        let mut out = vec![0.0; g_total];
+        let d = self.domain.len();
+        let g_strides = strides(&self.grid);
+        let f_strides = strides(&self.domain);
+        let last = d - 1;
+        let n_last = self.domain[last] as i64;
+        let g_last = self.grid[last];
+        // Clip the innermost-row copy window once per tile.
+        let col0 = tile.origin[last] as i64 - self.halo as i64;
+        let src_lo = col0.max(0);
+        let src_hi = (col0 + g_last as i64).min(n_last);
+        if src_hi <= src_lo {
+            return out; // row window entirely off-domain: all zeros
+        }
+        let dst_lo = (src_lo - col0) as usize;
+        let len = (src_hi - src_lo) as usize;
+        // Iterate outer (d−1) index combinations of the block.
+        let outer_total: usize = self.grid[..last].iter().product();
+        let mut idx = vec![0usize; last];
+        for outer in 0..outer_total {
+            let mut rem = outer;
+            for k in (0..last).rev() {
+                idx[k] = rem % self.grid[k];
+                rem /= self.grid[k];
+            }
+            // Global outer coordinates; skip off-domain rows (stay zero).
+            let mut f_base = 0usize;
+            let mut ok = true;
+            for k in 0..last {
+                let gc = tile.origin[k] as i64 - self.halo as i64 + idx[k] as i64;
+                if gc < 0 || gc >= self.domain[k] as i64 {
+                    ok = false;
+                    break;
+                }
+                f_base += gc as usize * f_strides[k];
+            }
+            if !ok {
+                continue;
+            }
+            let mut g_base = 0usize;
+            for k in 0..last {
+                g_base += idx[k] * g_strides[k];
+            }
+            let src = f_base + src_lo as usize;
+            out[g_base + dst_lo..g_base + dst_lo + len]
+                .copy_from_slice(&field[src..src + len]);
+        }
+        out
+    }
+
+    /// Scatter a tile result: write back only the payload interior.
+    /// Row-sliced like `gather` — payload rows are contiguous everywhere.
+    pub fn scatter(&self, tile_out: &[f64], tile: &Tile, field: &mut [f64]) {
+        let d = self.domain.len();
+        let g_strides = strides(&self.grid);
+        let f_strides = strides(&self.domain);
+        let last = d - 1;
+        let len = tile.extent[last];
+        let outer_total: usize = tile.extent[..last].iter().product();
+        let mut idx = vec![0usize; last];
+        for outer in 0..outer_total {
+            let mut rem = outer;
+            for k in (0..last).rev() {
+                idx[k] = rem % tile.extent[k];
+                rem /= tile.extent[k];
+            }
+            let mut g_base = self.halo * g_strides[last];
+            let mut f_base = tile.origin[last] * f_strides[last];
+            for k in 0..last {
+                g_base += (idx[k] + self.halo) * g_strides[k];
+                f_base += (tile.origin[k] + idx[k]) * f_strides[k];
+            }
+            field[f_base..f_base + len].copy_from_slice(&tile_out[g_base..g_base + len]);
+        }
+    }
+}
+
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiles_cover_domain_exactly_once() {
+        let t = Tiling::new(&[100, 70], &[64, 64], 3).unwrap();
+        let mut covered = vec![0u8; 100 * 70];
+        for tile in t.tiles() {
+            for i in 0..tile.extent[0] {
+                for j in 0..tile.extent[1] {
+                    covered[(tile.origin[0] + i) * 70 + tile.origin[1] + j] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn gather_centers_payload_and_zero_fills() {
+        let t = Tiling::new(&[10, 10], &[8, 8], 2).unwrap();
+        let field: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let tiles = t.tiles();
+        // first tile payload starts at (0,0); halo region is off-domain.
+        let g = t.gather(&field, &tiles[0]);
+        assert_eq!(g[0], 0.0); // (-2,-2) — outside
+        assert_eq!(g[2 * 8 + 2], 0.0); // global (0,0) = field[0]
+        assert_eq!(g[2 * 8 + 3], 1.0); // global (0,1)
+        assert_eq!(g[3 * 8 + 2], 10.0); // global (1,0)
+    }
+
+    #[test]
+    fn interior_tile_gathers_neighbour_data() {
+        let t = Tiling::new(&[12, 12], &[8, 8], 2).unwrap();
+        let field: Vec<f64> = (0..144).map(|i| i as f64).collect();
+        // payload step = 4; tile with origin (4,4) has full halo in-domain.
+        let tile = t
+            .tiles()
+            .into_iter()
+            .find(|tl| tl.origin == vec![4, 4])
+            .unwrap();
+        let g = t.gather(&field, &tile);
+        // block (0,0) = global (2,2) = 2*12+2 = 26
+        assert_eq!(g[0], 26.0);
+        // block (2,2) = global (4,4)
+        assert_eq!(g[2 * 8 + 2], (4 * 12 + 4) as f64);
+    }
+
+    #[test]
+    fn scatter_writes_only_payload() {
+        let t = Tiling::new(&[10, 10], &[8, 8], 2).unwrap();
+        let tiles = t.tiles();
+        let mut field = vec![-1.0; 100];
+        let tile_out: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        t.scatter(&tile_out, &tiles[0], &mut field);
+        // payload (4×4) written from block interior offset (2,2)
+        assert_eq!(field[0], (2 * 8 + 2) as f64);
+        assert_eq!(field[1], (2 * 8 + 3) as f64);
+        assert_eq!(field[5], -1.0); // outside payload untouched
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_identity() {
+        // scatter(gather(f)) with halo interior = f on every payload.
+        let mut rng = Rng::new(5);
+        let t = Tiling::new(&[20, 14], &[8, 8], 1).unwrap();
+        let field: Vec<f64> = (0..280).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; 280];
+        for tile in t.tiles() {
+            let g = t.gather(&field, &tile);
+            t.scatter(&g, &tile, &mut out);
+        }
+        assert_eq!(field, out);
+    }
+
+    #[test]
+    fn property_tiles_partition_any_domain() {
+        forall(
+            Config { cases: 60, ..Default::default() },
+            |rng| {
+                let n0 = rng.range_usize(1, 90);
+                let n1 = rng.range_usize(1, 90);
+                let halo = rng.range_usize(0, 3);
+                (n0, n1, halo)
+            },
+            |&(n0, n1, halo)| {
+                let t = Tiling::new(&[n0, n1], &[16, 16], halo)
+                    .map_err(|e| e.to_string())?;
+                let mut covered = vec![0u32; n0 * n1];
+                for tile in t.tiles() {
+                    for i in 0..tile.extent[0] {
+                        for j in 0..tile.extent[1] {
+                            covered[(tile.origin[0] + i) * n1 + tile.origin[1] + j] += 1;
+                        }
+                    }
+                }
+                if covered.iter().all(|&c| c == 1) {
+                    Ok(())
+                } else {
+                    Err("double/zero coverage".into())
+                }
+            },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn works_in_3d() {
+        let t = Tiling::new(&[20, 20, 20], &[16, 16, 16], 1).unwrap();
+        let tiles = t.tiles();
+        assert_eq!(tiles.len(), 8); // step 14 → 2 per dim
+        let field = vec![1.0; 8000];
+        let g = t.gather(&field, &tiles[0]);
+        assert_eq!(g.len(), 4096);
+    }
+
+    #[test]
+    fn rejects_tiny_grid() {
+        assert!(Tiling::new(&[10, 10], &[4, 4], 2).is_err());
+        assert!(Tiling::new(&[10], &[8, 8], 1).is_err());
+    }
+}

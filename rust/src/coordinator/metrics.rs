@@ -1,0 +1,113 @@
+//! Run metrics: what the coordinator actually achieved, phase by phase,
+//! against what the model predicted.
+
+use std::time::Duration;
+
+/// Phase-split accounting for one run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub steps: usize,
+    pub points: u64,
+    pub launches: u64,
+    pub gather_ns: u64,
+    pub execute_ns: u64,
+    pub scatter_ns: u64,
+    pub wall_ns: u64,
+}
+
+impl RunMetrics {
+    /// Point-updates per second achieved end to end.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.points as f64 * self.steps as f64 / (self.wall_ns as f64 * 1e-9)
+    }
+
+    pub fn gstencils(&self) -> f64 {
+        self.throughput() / 1e9
+    }
+
+    /// Fraction of wall time spent outside PJRT execution (tiling tax).
+    pub fn overhead_fraction(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        1.0 - self.execute_ns as f64 / self.wall_ns as f64
+    }
+
+    pub fn add_gather(&mut self, d: Duration) {
+        self.gather_ns += d.as_nanos() as u64;
+    }
+
+    pub fn add_execute(&mut self, d: Duration) {
+        self.execute_ns += d.as_nanos() as u64;
+    }
+
+    pub fn add_scatter(&mut self, d: Duration) {
+        self.scatter_ns += d.as_nanos() as u64;
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "steps={} points={} launches={} wall={:.3}s \
+             (gather {:.1}% execute {:.1}% scatter {:.1}%) → {:.3} MStencils/s",
+            self.steps,
+            self.points,
+            self.launches,
+            self.wall_ns as f64 * 1e-9,
+            pct(self.gather_ns, self.wall_ns),
+            pct(self.execute_ns, self.wall_ns),
+            pct(self.scatter_ns, self.wall_ns),
+            self.throughput() / 1e6,
+        )
+    }
+}
+
+fn pct(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        0.0
+    } else {
+        part as f64 / whole as f64 * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = RunMetrics {
+            steps: 10,
+            points: 1_000_000,
+            launches: 5,
+            wall_ns: 2_000_000_000, // 2 s
+            ..Default::default()
+        };
+        assert!((m.throughput() - 5e6).abs() < 1.0);
+        assert!((m.gstencils() - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_fraction() {
+        let m = RunMetrics { wall_ns: 100, execute_ns: 80, ..Default::default() };
+        assert!((m.overhead_fraction() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_wall_is_safe() {
+        let m = RunMetrics::default();
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.overhead_fraction(), 0.0);
+    }
+
+    #[test]
+    fn render_contains_key_numbers() {
+        let mut m = RunMetrics { steps: 4, points: 100, launches: 2, wall_ns: 1_000_000, ..Default::default() };
+        m.add_execute(Duration::from_micros(600));
+        let s = m.render();
+        assert!(s.contains("steps=4"));
+        assert!(s.contains("launches=2"));
+    }
+}

@@ -1,0 +1,17 @@
+//! The coordination layer: everything between a user's "advance this field
+//! N steps" and PJRT executions of fixed-size AOT artifacts.
+//!
+//! * [`planner`]   — picks execution unit, engine and fusion depth via the
+//!   paper's criteria (the analysis as a working scheduler policy).
+//! * [`grid`]      — domain decomposition onto artifact-sized tiles with
+//!   halo exchange (overlapped tiles, interior-write-back).
+//! * [`scheduler`] — time-stepping driver: parallel gather/scatter worker
+//!   pool around the (serialized) PJRT execution.
+//! * [`metrics`]   — achieved throughput/latency accounting vs prediction.
+//! * [`config`]    — run configuration (CLI / file).
+
+pub mod planner;
+pub mod grid;
+pub mod scheduler;
+pub mod metrics;
+pub mod config;

@@ -1,0 +1,241 @@
+//! The planner: the paper's analytical criteria as a live scheduling
+//! policy.  Given a stencil job it enumerates (engine × fusion depth)
+//! candidates, scores them with the calibrated roofline simulator, applies
+//! the sweet-spot criterion, and emits a [`Plan`] — optionally restricted
+//! to fusion depths that actually exist as AOT artifacts.
+
+use anyhow::{anyhow, Result};
+
+use crate::engines::{self, Engine};
+use crate::hardware::Gpu;
+use crate::model::criteria;
+use crate::model::perf::{Dtype, Unit, Workload};
+use crate::model::scenario::{self, Comparison};
+use crate::model::stencil::StencilPattern;
+use crate::runtime::manifest::Manifest;
+use crate::sim::exec::{self, Prediction};
+
+/// A planning request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub pattern: StencilPattern,
+    pub dtype: Dtype,
+    /// Total time steps the caller wants to advance.
+    pub steps: usize,
+    pub gpu: Gpu,
+    /// Restrict to engines whose artifacts exist in this manifest.
+    pub require_artifact: bool,
+    /// Cap on fusion depth (default 8, the EBISU/SPIDER max).
+    pub max_t: usize,
+}
+
+/// One scored candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub engine: Engine,
+    pub t: usize,
+    pub prediction: Prediction,
+    pub in_sweet_spot: bool,
+    pub artifact: Option<String>,
+}
+
+/// The planner's decision.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub chosen: Candidate,
+    pub alternatives: Vec<Candidate>,
+    /// Comparison against the best CUDA-Core candidate (paper Eq. 13).
+    pub vs_cuda: Option<Comparison>,
+}
+
+/// Enumerate and score all feasible candidates.
+pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for e in engines::all() {
+        if e.symmetric_only || e.half_only {
+            continue; // excluded from general comparisons (§5.5)
+        }
+        for t in 1..=req.max_t.min(e.max_t) {
+            let w = Workload::new(req.pattern, t, req.dtype);
+            if !e.supports(&w) {
+                continue;
+            }
+            let artifact = manifest.and_then(|m| {
+                m.find(e.scheme, req.pattern.shape, req.pattern.d, req.pattern.r, t, req.dtype)
+                    .map(|a| a.name.clone())
+            });
+            if req.require_artifact && artifact.is_none() {
+                continue;
+            }
+            let Ok(prediction) = exec::predict(&e, &w, &req.gpu) else {
+                continue; // unit missing on this GPU
+            };
+            let in_sweet_spot = if e.is_tensor() {
+                let cu_roof = match req.gpu.roof(Unit::CudaCore, req.dtype) {
+                    Ok(r) => r,
+                    Err(_) => continue,
+                };
+                let Ok(t_roof) = req.gpu.roof(e.unit, req.dtype) else {
+                    continue;
+                };
+                criteria::in_sweet_spot(&w, &cu_roof, &t_roof, e.unit, e.scheme)
+            } else {
+                false
+            };
+            out.push(Candidate { engine: e.clone(), t, prediction, in_sweet_spot, artifact });
+        }
+    }
+    out
+}
+
+/// Produce a plan: highest predicted throughput wins; ties prefer CUDA
+/// Cores (no adaptation redundancy) and then smaller fusion depth.
+pub fn plan(req: &Request, manifest: Option<&Manifest>) -> Result<Plan> {
+    let mut cands = candidates(req, manifest);
+    if cands.is_empty() {
+        return Err(anyhow!(
+            "no feasible engine for {} {} on {}{}",
+            req.pattern.label(),
+            req.dtype.as_str(),
+            req.gpu.name,
+            if req.require_artifact { " (artifact required)" } else { "" }
+        ));
+    }
+    cands.sort_by(|a, b| {
+        b.prediction
+            .throughput
+            .partial_cmp(&a.prediction.throughput)
+            .unwrap()
+            .then_with(|| a.engine.is_tensor().cmp(&b.engine.is_tensor()))
+            .then_with(|| a.t.cmp(&b.t))
+    });
+    let chosen = cands[0].clone();
+    // Compare the chosen tensor engine against the best CUDA candidate.
+    let vs_cuda = if chosen.engine.is_tensor() {
+        let best_cuda = cands.iter().find(|c| !c.engine.is_tensor());
+        match best_cuda {
+            Some(cu) => {
+                let w = Workload::new(req.pattern, chosen.t, req.dtype);
+                let cu_roof = req.gpu.roof(Unit::CudaCore, req.dtype)?;
+                let t_roof = req.gpu.roof(chosen.engine.unit, req.dtype)?;
+                let _ = cu;
+                Some(scenario::compare(&w, &cu_roof, &t_roof, chosen.engine.unit, chosen.engine.scheme))
+            }
+            None => None,
+        }
+    } else {
+        None
+    };
+    Ok(Plan { chosen, alternatives: cands[1..].to_vec(), vs_cuda })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::stencil::Shape;
+    use crate::util::prop::{forall, Config};
+
+    fn req(shape: Shape, d: usize, r: usize, dtype: Dtype) -> Request {
+        Request {
+            pattern: StencilPattern::new(shape, d, r).unwrap(),
+            dtype,
+            steps: 64,
+            gpu: Gpu::a100(),
+            require_artifact: false,
+            max_t: 8,
+        }
+    }
+
+    #[test]
+    fn deep_fused_2d_float_prefers_sptc() {
+        // Box-2D1R f32: SPIDER's SpTC path dominates at deep fusion
+        // (Table 3 case 3 / Fig. 16).
+        let p = plan(&req(Shape::Box, 2, 1, Dtype::F32), None).unwrap();
+        assert_eq!(p.chosen.engine.name, "SPIDER");
+        assert!(p.chosen.t >= 4, "expect deep fusion, got t={}", p.chosen.t);
+        assert!(p.vs_cuda.is_some());
+    }
+
+    #[test]
+    fn double_precision_shallow_prefers_cuda() {
+        // Box-2D1R f64 at max_t=1: memory-bound scenario-1 territory —
+        // no TC benefit; CUDA engine must win ties.
+        let mut r = req(Shape::Box, 2, 1, Dtype::F64);
+        r.max_t = 1;
+        let p = plan(&r, None).unwrap();
+        assert!(!p.chosen.engine.is_tensor(), "chose {}", p.chosen.engine.name);
+    }
+
+    #[test]
+    fn box3d_double_avoids_tensor_cores() {
+        // Table 3 cases 5/6: 3D boxes violate Eq. 19 — planner must keep
+        // CUDA Cores.
+        let p = plan(&req(Shape::Box, 3, 1, Dtype::F64), None).unwrap();
+        assert!(!p.chosen.engine.is_tensor(), "chose {}", p.chosen.engine.name);
+    }
+
+    #[test]
+    fn candidates_respect_engine_dtype_support() {
+        let cands = candidates(&req(Shape::Box, 2, 1, Dtype::F64), None);
+        assert!(cands.iter().all(|c| c.engine.dtypes.contains(&Dtype::F64)));
+        assert!(!cands.iter().any(|c| c.engine.name == "SPIDER")); // f32-only
+    }
+
+    #[test]
+    fn excluded_engines_never_planned() {
+        let cands = candidates(&req(Shape::Box, 2, 1, Dtype::F32), None);
+        assert!(!cands.iter().any(|c| c.engine.name == "TCStencil"));
+        assert!(!cands.iter().any(|c| c.engine.name == "LoRAStencil"));
+    }
+
+    #[test]
+    fn v100_plans_cuda_only() {
+        let mut r = req(Shape::Box, 2, 1, Dtype::F32);
+        r.gpu = Gpu::v100();
+        let p = plan(&r, None).unwrap();
+        assert!(!p.chosen.engine.is_tensor());
+    }
+
+    #[test]
+    fn property_chosen_is_argmax_throughput() {
+        forall(
+            Config { cases: 40, ..Default::default() },
+            |rng| {
+                let shape = if rng.f64() < 0.5 { Shape::Box } else { Shape::Star };
+                let d = rng.range_usize(2, 3);
+                let r = if d == 2 { rng.range_usize(1, 3) } else { 1 };
+                let dt = if rng.f64() < 0.5 { Dtype::F32 } else { Dtype::F64 };
+                (shape, d, r, dt)
+            },
+            |&(shape, d, r, dt)| {
+                let rq = req(shape, d, r, dt);
+                let p = plan(&rq, None).map_err(|e| e.to_string())?;
+                for alt in &p.alternatives {
+                    if alt.prediction.throughput > p.chosen.prediction.throughput * (1.0 + 1e-9) {
+                        return Err(format!(
+                            "{} t={} beats chosen {} t={}",
+                            alt.engine.name, alt.t, p.chosen.engine.name, p.chosen.t
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn property_sweet_spot_consistent_with_verdict() {
+        // Whenever the planner marks a tensor candidate in_sweet_spot in a
+        // compute/compute scenario, Eq. 19 must hold for its α and S.
+        let cands = candidates(&req(Shape::Box, 2, 1, Dtype::F32), None);
+        let gpu = Gpu::a100();
+        for c in cands.iter().filter(|c| c.engine.is_tensor()) {
+            let w = Workload::new(StencilPattern::new(Shape::Box, 2, 1).unwrap(), c.t, Dtype::F32);
+            let cu = gpu.roof(Unit::CudaCore, Dtype::F32).unwrap();
+            let tr = gpu.roof(c.engine.unit, Dtype::F32).unwrap();
+            let expect = criteria::in_sweet_spot(&w, &cu, &tr, c.engine.unit, c.engine.scheme);
+            assert_eq!(c.in_sweet_spot, expect, "{} t={}", c.engine.name, c.t);
+        }
+    }
+}

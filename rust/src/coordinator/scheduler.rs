@@ -1,0 +1,150 @@
+//! The time-stepping driver: advances an arbitrary domain by launching an
+//! AOT artifact over the [`grid`](crate::coordinator::grid) tiling.
+//!
+//! Gathers run in parallel on a std::thread scope (pure reads of the
+//! current field); PJRT execution is serialized through the single CPU
+//! client (which is internally multi-threaded); scatters write disjoint
+//! payload regions.  Double-buffered fields keep launches pure.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::grid::Tiling;
+use crate::coordinator::metrics::RunMetrics;
+use crate::model::perf::Dtype;
+use crate::runtime::{Runtime, TensorData};
+
+/// One stencil job over an arbitrary domain.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Artifact (variant) name to launch.
+    pub artifact: String,
+    /// Domain extents N^d (any size ≥ 1 per dim).
+    pub domain: Vec<usize>,
+    /// Total time steps; must be a multiple of the artifact's
+    /// steps-per-execution (t × n_outer).
+    pub steps: usize,
+    /// Base stencil weights over the (2r+1)^d hull (row-major).
+    pub weights: Vec<f64>,
+    /// Gather worker threads (1 = serial).
+    pub threads: usize,
+}
+
+/// Advance `field` (row-major, f64 host representation) by `job.steps`.
+pub fn run(rt: &mut Runtime, job: &Job, field: &mut Vec<f64>) -> Result<RunMetrics> {
+    let meta = rt.manifest.get(&job.artifact)?.clone();
+    let spe = meta.steps_per_exec();
+    if job.steps % spe != 0 {
+        bail!(
+            "steps {} not a multiple of artifact steps-per-exec {spe} ({})",
+            job.steps,
+            meta.name
+        );
+    }
+    let want: usize = job.domain.iter().product();
+    if field.len() != want {
+        bail!("field has {} elements, domain wants {want}", field.len());
+    }
+    let wside = 2 * meta.r + 1;
+    if job.weights.len() != wside.pow(meta.d as u32) {
+        bail!("weights length {} != hull size", job.weights.len());
+    }
+    // The artifact's zero-halo tile semantics are only exact when the
+    // interior write-back discards the contaminated ring — see grid.rs.
+    let tiling = Tiling::new(&job.domain, &meta.grid, meta.halo)?;
+    let tiles = tiling.tiles();
+    let weights = make_tensor(meta.dtype, &job.weights);
+    rt.compile(&job.artifact)?; // pay compilation before timing
+    let launches = job.steps / spe;
+    let mut metrics = RunMetrics {
+        steps: job.steps,
+        points: want as u64,
+        launches: (launches * tiles.len()) as u64,
+        ..Default::default()
+    };
+    let wall0 = Instant::now();
+    let mut next = vec![0.0f64; want];
+    for _ in 0..launches {
+        // Phase 1: parallel gather of all tile inputs.
+        let t0 = Instant::now();
+        let inputs = gather_all(&tiling, &tiles, field, job.threads.max(1), meta.dtype);
+        metrics.add_gather(t0.elapsed());
+        // Phase 2+3: execute serially, scatter interiors.
+        for (tile, input) in tiles.iter().zip(inputs) {
+            let t1 = Instant::now();
+            let out = rt.execute(&job.artifact, &input, &weights)?;
+            metrics.add_execute(t1.elapsed());
+            let t2 = Instant::now();
+            let out64 = out.to_f64_vec();
+            tiling.scatter(&out64, tile, &mut next);
+            metrics.add_scatter(t2.elapsed());
+        }
+        std::mem::swap(field, &mut next);
+    }
+    metrics.wall_ns = wall0.elapsed().as_nanos() as u64;
+    Ok(metrics)
+}
+
+fn make_tensor(dtype: Dtype, data: &[f64]) -> TensorData {
+    match dtype {
+        Dtype::F32 => TensorData::F32(data.iter().map(|&v| v as f32).collect()),
+        Dtype::F64 => TensorData::F64(data.to_vec()),
+    }
+}
+
+fn gather_all(
+    tiling: &Tiling,
+    tiles: &[crate::coordinator::grid::Tile],
+    field: &[f64],
+    threads: usize,
+    dtype: Dtype,
+) -> Vec<TensorData> {
+    if threads <= 1 || tiles.len() == 1 {
+        return tiles
+            .iter()
+            .map(|t| make_tensor(dtype, &tiling.gather(field, t)))
+            .collect();
+    }
+    let chunk = tiles.len().div_ceil(threads);
+    let mut out: Vec<Option<TensorData>> = vec![None; tiles.len()];
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ci, tile_chunk) in tiles.chunks(chunk).enumerate() {
+            let tiling_ref = &tiling;
+            let field_ref = field;
+            handles.push((
+                ci,
+                s.spawn(move || {
+                    tile_chunk
+                        .iter()
+                        .map(|t| make_tensor(dtype, &tiling_ref.gather(field_ref, t)))
+                        .collect::<Vec<_>>()
+                }),
+            ));
+        }
+        for (ci, h) in handles {
+            let results = h.join().expect("gather worker panicked");
+            for (k, r) in results.into_iter().enumerate() {
+                out[ci * chunk + k] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("all tiles gathered")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_tensor_converts() {
+        let t = make_tensor(Dtype::F32, &[1.0, 2.0]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        let t64 = make_tensor(Dtype::F64, &[1.0, 2.0]);
+        assert_eq!(t64.as_f64().unwrap(), &[1.0, 2.0]);
+    }
+
+    // run() integration tests (needing artifacts + PJRT) live in
+    // rust/tests/coordinator_integration.rs.
+}

@@ -1,0 +1,63 @@
+//! Efficiency calibration (DESIGN.md §6).
+//!
+//! The simulator predicts throughput as η × roofline.  η ("achieved
+//! fraction of roof") is fitted ONCE from the paper's own Table 3 rows and
+//! then frozen — it is a property of each implementation's quality, not of
+//! our model:
+//!
+//! * EBISU memory-bound:  Case ① 260.90 GSt/s vs roof t·𝔹/2D = 362.8
+//!   → η ≈ 0.72.
+//! * EBISU compute-bound: Case ② 64.05 vs ℙ_CU/2K = 99.0 → η ≈ 0.65.
+//!   (Case ③/④ scatter 0.3–1.2 around this — EBISU's efficiency varies
+//!   strongly with register pressure at deep fusion; we keep the Case ②
+//!   fit and accept the documented deviation.)
+//! * ConvStencil compute-bound: Case ① 190.14 vs (S/α)·ℙ_TC/2K = 298.5
+//!   → η ≈ 0.64 (Case ② gives 0.64 as well: 63.33/99.5).
+//! * SPIDER memory-bound: Case ③ 1002.94 vs t·𝔹/2D = 1693 → η ≈ 0.59.
+//!
+//! The validation target is SHAPE (winner, approximate factor, crossover
+//! position), not absolute GPU numbers — see DESIGN.md §2.
+
+/// EBISU achieved fraction of bandwidth roof (Table 3 case ①).
+pub const EBISU_ETA_MEM: f64 = 0.72;
+/// EBISU achieved fraction of compute roof (Table 3 case ②).
+pub const EBISU_ETA_COMP: f64 = 0.65;
+/// ConvStencil achieved fraction of compute roof (Table 3 cases ①/②).
+pub const CONVSTENCIL_ETA_COMP: f64 = 0.64;
+/// SPIDER achieved fraction of bandwidth roof (Table 3 case ③).
+pub const SPIDER_ETA_MEM: f64 = 0.59;
+/// SPIDER achieved fraction of compute roof — fitted from Table 4's
+/// SPIDER-Dense row: 327.39 vs (S/α)·ℙ_TC/2K = 1137 → η ≈ 0.29.
+pub const SPIDER_ETA_COMP: f64 = 0.29;
+
+/// Clock-lock derating used when mimicking the paper's profiling setup
+/// (§4.2/§5.2: clocks locked below boost ⇒ empirical transitions occur at
+/// shallower fusion than datasheet peaks predict).
+pub const PROFILING_CLOCK_LOCK: f64 = 0.87;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_table3_sources() {
+        // Case ①: EBISU Box-2D1R t=3 double, memory-bound.
+        let roof = 3.0 * 1.935e12 / 16.0 / 1e9; // GStencils/s
+        assert!((EBISU_ETA_MEM * roof - 260.9).abs() / 260.9 < 0.01);
+        // Case ②: EBISU Box-2D3R t=1 double, compute-bound.
+        let roof2 = 9.7e12 / 98.0 / 1e9;
+        assert!((EBISU_ETA_COMP * roof2 - 64.05).abs() / 64.05 < 0.01);
+        // Case ③: SPIDER Box-2D1R t=7 float, memory-bound.
+        let roof3 = 7.0 * 1.935e12 / 8.0 / 1e9;
+        assert!((SPIDER_ETA_MEM * roof3 - 1002.94).abs() / 1002.94 < 0.01);
+        // Case ①: ConvStencil compute-bound.
+        let alpha = 49.0 / 27.0;
+        let roof4 = 0.5 / alpha * 19.5e12 / 18.0 / 1e9;
+        assert!((CONVSTENCIL_ETA_COMP * roof4 - 190.14).abs() / 190.14 < 0.01);
+    }
+
+    #[test]
+    fn lock_factor_is_sane() {
+        assert!(PROFILING_CLOCK_LOCK > 0.5 && PROFILING_CLOCK_LOCK < 1.0);
+    }
+}

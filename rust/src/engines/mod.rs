@@ -1,0 +1,316 @@
+//! The baseline stencil implementations the paper evaluates (§5.1), as
+//! engine descriptors: which execution unit they target, which
+//! stencil→MMA transformation they embody, which dtypes they support,
+//! their paper-reported sparsity factor S, and a calibrated efficiency η
+//! (achieved fraction of the roofline — fitted once from the paper's own
+//! Table 3, see `calib`).  Engines bind to the AOT kernel artifacts
+//! through their `scheme`.
+
+pub mod calib;
+
+use anyhow::{bail, Result};
+
+use crate::model::perf::{Dtype, Unit, Workload};
+use crate::model::sparsity::Scheme;
+
+/// One published stencil implementation.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    pub name: &'static str,
+    /// Execution unit family (CUDA / dense TC / sparse TC).
+    pub unit: Unit,
+    /// Stencil→MMA transformation scheme (binds to L1 kernels).
+    pub scheme: Scheme,
+    /// dtypes the published implementation supports.
+    pub dtypes: &'static [Dtype],
+    /// Paper-reported sparsity factor S, when the paper fixes one
+    /// (e.g. ConvStencil 0.5, SPIDER 0.47); None = use the model's
+    /// operand-derived value.
+    pub paper_sparsity: Option<f64>,
+    /// Achieved fraction of roofline when memory-bound (calibrated).
+    pub eta_mem: f64,
+    /// Achieved fraction of roofline when compute-bound (calibrated).
+    pub eta_comp: f64,
+    /// Maximum fusion depth the implementation supports.
+    pub max_t: usize,
+    /// LoRAStencil: requires symmetric kernels (excluded from general
+    /// comparisons, paper §5.5).
+    pub symmetric_only: bool,
+    /// TCStencil: half precision only (excluded from f32/f64 runs).
+    pub half_only: bool,
+}
+
+impl Engine {
+    /// Effective sparsity used in predictions: the paper's constant when
+    /// given, otherwise the constructed-operand value.
+    pub fn sparsity(&self, w: &Workload) -> f64 {
+        self.paper_sparsity.unwrap_or_else(|| w.sparsity(self.scheme))
+    }
+
+    /// Can this engine run the workload?
+    pub fn supports(&self, w: &Workload) -> bool {
+        !self.half_only
+            && self.dtypes.contains(&w.dtype)
+            && w.t <= self.max_t
+            && w.pattern.d <= 3
+    }
+
+    pub fn is_tensor(&self) -> bool {
+        matches!(self.unit, Unit::TensorCore | Unit::SparseTensorCore)
+    }
+}
+
+const F32_ONLY: &[Dtype] = &[Dtype::F32];
+const F32_F64: &[Dtype] = &[Dtype::F32, Dtype::F64];
+
+/// cuDNN convolution fallback (Chetlur et al.) — CUDA Cores, im2col conv.
+pub fn cudnn() -> Engine {
+    Engine {
+        name: "cuDNN",
+        unit: Unit::CudaCore,
+        scheme: Scheme::Direct,
+        dtypes: F32_F64,
+        paper_sparsity: None,
+        eta_mem: 0.30,
+        eta_comp: 0.25,
+        max_t: 1, // no temporal fusion in the conv formulation
+        symmetric_only: false,
+        half_only: false,
+    }
+}
+
+/// DRStencil (You et al. 2021) — CUDA Cores, low-order data reuse + fusion.
+pub fn drstencil() -> Engine {
+    Engine {
+        name: "DRStencil",
+        unit: Unit::CudaCore,
+        scheme: Scheme::Direct,
+        dtypes: F32_F64,
+        paper_sparsity: None,
+        eta_mem: 0.55,
+        eta_comp: 0.42,
+        max_t: 4,
+        symmetric_only: false,
+        half_only: false,
+    }
+}
+
+/// EBISU (Zhang et al. 2023) — SOTA CUDA-Core temporal blocking.
+pub fn ebisu() -> Engine {
+    Engine {
+        name: "EBISU",
+        unit: Unit::CudaCore,
+        scheme: Scheme::Direct,
+        dtypes: F32_F64,
+        paper_sparsity: None,
+        eta_mem: calib::EBISU_ETA_MEM,
+        eta_comp: calib::EBISU_ETA_COMP,
+        max_t: 8,
+        symmetric_only: false,
+        half_only: false,
+    }
+}
+
+/// TCStencil (Liu et al. 2022) — first TC adaptation; fp16 only.
+pub fn tcstencil() -> Engine {
+    Engine {
+        name: "TCStencil",
+        unit: Unit::TensorCore,
+        scheme: Scheme::Decompose,
+        dtypes: F32_ONLY, // nominally fp16; kept for Fig. 2 speedup shape
+        paper_sparsity: Some(0.33),
+        eta_mem: 0.40,
+        eta_comp: 0.35,
+        max_t: 1,
+        symmetric_only: false,
+        half_only: true,
+    }
+}
+
+/// ConvStencil (Chen et al. 2024) — stencil2row + dual tessellation.
+pub fn convstencil() -> Engine {
+    Engine {
+        name: "ConvStencil",
+        unit: Unit::TensorCore,
+        scheme: Scheme::Flatten,
+        dtypes: F32_F64,
+        paper_sparsity: Some(0.5),
+        eta_mem: 0.60,
+        eta_comp: calib::CONVSTENCIL_ETA_COMP,
+        max_t: 8,
+        symmetric_only: false,
+        half_only: false,
+    }
+}
+
+/// LoRAStencil (Zhang et al. 2024) — low-rank TC adaptation; symmetric
+/// kernels only (excluded from the general comparison, §5.5).
+pub fn lorastencil() -> Engine {
+    Engine {
+        name: "LoRAStencil",
+        unit: Unit::TensorCore,
+        scheme: Scheme::Decompose,
+        dtypes: F32_F64,
+        paper_sparsity: Some(0.55),
+        eta_mem: 0.60,
+        eta_comp: 0.60,
+        max_t: 4,
+        symmetric_only: true,
+        half_only: false,
+    }
+}
+
+/// SPIDER (Gu et al. 2025) — strided swapping onto Sparse Tensor Cores.
+pub fn spider() -> Engine {
+    Engine {
+        name: "SPIDER",
+        unit: Unit::SparseTensorCore,
+        scheme: Scheme::Sparse24,
+        dtypes: F32_ONLY, // TF32 sparse path
+        paper_sparsity: Some(0.46875), // Table 2: 0.47
+        eta_mem: calib::SPIDER_ETA_MEM,
+        eta_comp: calib::SPIDER_ETA_COMP,
+        max_t: 8,
+        symmetric_only: false,
+        half_only: false,
+    }
+}
+
+/// SPIDER forced onto dense Tensor Cores (Table 4 ablation).
+pub fn spider_dense() -> Engine {
+    Engine {
+        name: "SPIDER-Dense",
+        unit: Unit::TensorCore,
+        scheme: Scheme::Decompose,
+        dtypes: F32_ONLY,
+        paper_sparsity: Some(0.46875),
+        eta_mem: calib::SPIDER_ETA_MEM,
+        eta_comp: calib::SPIDER_ETA_COMP,
+        max_t: 8,
+        symmetric_only: false,
+        half_only: false,
+    }
+}
+
+/// SparStencil (Li et al. 2025) — compiler-driven 2:4 retargeting.
+pub fn sparstencil() -> Engine {
+    Engine {
+        name: "SparStencil",
+        unit: Unit::SparseTensorCore,
+        scheme: Scheme::Sparse24,
+        dtypes: F32_ONLY,
+        paper_sparsity: Some(0.45),
+        eta_mem: 0.55,
+        eta_comp: 0.52,
+        max_t: 8,
+        symmetric_only: false,
+        half_only: false,
+    }
+}
+
+/// All engines in the paper's §5.1 baseline set.
+pub fn all() -> Vec<Engine> {
+    vec![
+        cudnn(),
+        drstencil(),
+        ebisu(),
+        tcstencil(),
+        convstencil(),
+        lorastencil(),
+        spider(),
+        sparstencil(),
+    ]
+}
+
+/// Lookup by case-insensitive name.
+pub fn lookup(name: &str) -> Result<Engine> {
+    let lname = name.to_ascii_lowercase();
+    for e in all().into_iter().chain([spider_dense()]) {
+        if e.name.to_ascii_lowercase() == lname {
+            return Ok(e);
+        }
+    }
+    bail!("unknown engine {name:?}")
+}
+
+/// The paper's representative SOTA picks (§5.1): EBISU for CUDA Cores,
+/// ConvStencil for dense TC, SPIDER for SpTC.
+pub fn sota() -> (Engine, Engine, Engine) {
+    (ebisu(), convstencil(), spider())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn wl(t: usize, dt: Dtype) -> Workload {
+        Workload::new(StencilPattern::new(Shape::Box, 2, 1).unwrap(), t, dt)
+    }
+
+    #[test]
+    fn registry_has_all_paper_baselines() {
+        let names: Vec<_> = all().iter().map(|e| e.name).collect();
+        for want in [
+            "cuDNN", "DRStencil", "EBISU", "TCStencil", "ConvStencil",
+            "LoRAStencil", "SPIDER", "SparStencil",
+        ] {
+            assert!(names.contains(&want), "{want}");
+        }
+    }
+
+    #[test]
+    fn unit_families_match_paper() {
+        assert_eq!(ebisu().unit, Unit::CudaCore);
+        assert_eq!(convstencil().unit, Unit::TensorCore);
+        assert_eq!(spider().unit, Unit::SparseTensorCore);
+        assert_eq!(spider_dense().unit, Unit::TensorCore);
+    }
+
+    #[test]
+    fn exclusions_match_section_5_5() {
+        // TCStencil: half only; LoRAStencil: symmetric only.
+        assert!(tcstencil().half_only);
+        assert!(!tcstencil().supports(&wl(1, Dtype::F32)));
+        assert!(lorastencil().symmetric_only);
+    }
+
+    #[test]
+    fn spider_is_float_only() {
+        assert!(spider().supports(&wl(7, Dtype::F32)));
+        assert!(!spider().supports(&wl(7, Dtype::F64)));
+    }
+
+    #[test]
+    fn paper_sparsities() {
+        let w = wl(7, Dtype::F32);
+        assert!((convstencil().sparsity(&w) - 0.5).abs() < 1e-12);
+        assert!((spider().sparsity(&w) - 0.46875).abs() < 1e-12);
+        // EBISU has no transform: model S = 1.
+        assert!((ebisu().sparsity(&w) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fusion_limits() {
+        assert!(!cudnn().supports(&wl(2, Dtype::F32)));
+        assert!(ebisu().supports(&wl(8, Dtype::F32)));
+        assert!(!ebisu().supports(&wl(9, Dtype::F32)));
+    }
+
+    #[test]
+    fn lookup_roundtrip() {
+        for e in all() {
+            assert_eq!(lookup(e.name).unwrap().name, e.name);
+        }
+        assert_eq!(lookup("spider-dense").unwrap().name, "SPIDER-Dense");
+        assert!(lookup("nonsense").is_err());
+    }
+
+    #[test]
+    fn etas_are_fractions() {
+        for e in all() {
+            assert!(e.eta_mem > 0.0 && e.eta_mem <= 1.0, "{}", e.name);
+            assert!(e.eta_comp > 0.0 && e.eta_comp <= 1.0, "{}", e.name);
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! GPU hardware spec registry — the ℙ/𝔹 numbers the model runs against.
+//!
+//! The paper's testbed is an NVIDIA A100-80GB PCIe; we also carry V100,
+//! H100 and RTX 4090 so the criteria can be explored across generations
+//! (the analysis is hardware-parametric by construction).  Peaks follow
+//! vendor datasheets; f32 stencil data on Tensor Cores uses the TF32 path
+//! (what ConvStencil/SPIDER execute), f64 uses the FP64 TC path.
+//!
+//! `clock_lock` models the §4.2 observation that profiling runs lock the
+//! GPU clock below boost, lowering the effective compute ceiling and
+//! shifting empirical ridge points left of the datasheet prediction.
+
+use anyhow::{anyhow, Result};
+
+use crate::model::perf::{Dtype, Unit};
+use crate::model::roofline::Roof;
+
+/// Peak FLOP/s per execution unit and dtype (None = unit not present).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PeakTable {
+    pub cuda_f32: Option<f64>,
+    pub cuda_f64: Option<f64>,
+    pub tc_f32: Option<f64>,  // TF32 MMA path
+    pub tc_f64: Option<f64>,  // FP64 MMA path
+    pub sptc_f32: Option<f64>,
+    pub sptc_f64: Option<f64>,
+}
+
+/// A GPU model: bandwidth + per-unit peaks + clock-lock derating.
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    pub name: &'static str,
+    /// HBM bandwidth in bytes/s.
+    pub bandwidth: f64,
+    pub peaks: PeakTable,
+    /// Multiplier (≤ 1.0) applied to compute peaks when the clock is
+    /// locked for profiling stability (§4.2). 1.0 = boost clocks.
+    pub clock_lock: f64,
+}
+
+impl Gpu {
+    /// The paper's testbed: A100-80GB PCIe (GA100).
+    pub fn a100() -> Gpu {
+        Gpu {
+            name: "A100-80GB-PCIe",
+            bandwidth: 1.935e12,
+            peaks: PeakTable {
+                cuda_f32: Some(19.5e12),
+                cuda_f64: Some(9.7e12),
+                tc_f32: Some(156e12), // TF32
+                tc_f64: Some(19.5e12),
+                sptc_f32: Some(312e12),
+                sptc_f64: None, // FP64 MMA has no 2:4 sparse path
+            },
+            clock_lock: 1.0,
+        }
+    }
+
+    pub fn v100() -> Gpu {
+        Gpu {
+            name: "V100-SXM2",
+            bandwidth: 0.9e12,
+            peaks: PeakTable {
+                cuda_f32: Some(15.7e12),
+                cuda_f64: Some(7.8e12),
+                tc_f32: None, // no TF32 on Volta
+                tc_f64: None,
+                sptc_f32: None,
+                sptc_f64: None,
+            },
+            clock_lock: 1.0,
+        }
+    }
+
+    pub fn h100() -> Gpu {
+        Gpu {
+            name: "H100-SXM5",
+            bandwidth: 3.35e12,
+            peaks: PeakTable {
+                cuda_f32: Some(66.9e12),
+                cuda_f64: Some(33.5e12),
+                tc_f32: Some(494.7e12),
+                tc_f64: Some(66.9e12),
+                sptc_f32: Some(989.4e12),
+                sptc_f64: None,
+            },
+            clock_lock: 1.0,
+        }
+    }
+
+    pub fn rtx4090() -> Gpu {
+        Gpu {
+            name: "RTX-4090",
+            bandwidth: 1.008e12,
+            peaks: PeakTable {
+                cuda_f32: Some(82.6e12),
+                cuda_f64: Some(1.29e12),
+                tc_f32: Some(82.6e12),
+                tc_f64: None,
+                sptc_f32: Some(165.2e12),
+                sptc_f64: None,
+            },
+            clock_lock: 1.0,
+        }
+    }
+
+    /// AMD MI300X — the paper (§2.1.1) notes Matrix Cores implement the
+    /// same tensor contraction; the criteria apply verbatim.  CDNA3 has
+    /// no 2:4 structured-sparse path for the XF32 pipe.
+    pub fn mi300x() -> Gpu {
+        Gpu {
+            name: "MI300X",
+            bandwidth: 5.3e12,
+            peaks: PeakTable {
+                cuda_f32: Some(163.4e12), // vector FP32
+                cuda_f64: Some(81.7e12),
+                tc_f32: Some(653.7e12), // matrix XF32
+                tc_f64: Some(163.4e12), // matrix FP64
+                sptc_f32: None,
+                sptc_f64: None,
+            },
+            clock_lock: 1.0,
+        }
+    }
+
+    /// Lookup by (case-insensitive) name.
+    pub fn lookup(name: &str) -> Result<Gpu> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" | "a100-80gb-pcie" => Ok(Gpu::a100()),
+            "v100" | "v100-sxm2" => Ok(Gpu::v100()),
+            "h100" | "h100-sxm5" => Ok(Gpu::h100()),
+            "rtx4090" | "4090" => Ok(Gpu::rtx4090()),
+            "mi300x" | "mi300" => Ok(Gpu::mi300x()),
+            other => Err(anyhow!(
+                "unknown GPU {other:?} (available: a100, v100, h100, rtx4090, mi300x)"
+            )),
+        }
+    }
+
+    pub fn all() -> Vec<Gpu> {
+        vec![Gpu::a100(), Gpu::v100(), Gpu::h100(), Gpu::rtx4090(), Gpu::mi300x()]
+    }
+
+    /// Derated copy with the profiling clock lock applied.
+    pub fn locked(&self, factor: f64) -> Gpu {
+        assert!(factor > 0.0 && factor <= 1.0);
+        let mut g = self.clone();
+        g.clock_lock = factor;
+        g
+    }
+
+    fn peak(&self, unit: Unit, dtype: Dtype) -> Option<f64> {
+        let p = match (unit, dtype) {
+            (Unit::CudaCore, Dtype::F32) => self.peaks.cuda_f32,
+            (Unit::CudaCore, Dtype::F64) => self.peaks.cuda_f64,
+            (Unit::TensorCore, Dtype::F32) => self.peaks.tc_f32,
+            (Unit::TensorCore, Dtype::F64) => self.peaks.tc_f64,
+            (Unit::SparseTensorCore, Dtype::F32) => self.peaks.sptc_f32,
+            (Unit::SparseTensorCore, Dtype::F64) => self.peaks.sptc_f64,
+        };
+        p.map(|v| v * self.clock_lock)
+    }
+
+    /// The roofline for a unit × dtype. Errors when the unit is absent.
+    pub fn roof(&self, unit: Unit, dtype: Dtype) -> Result<Roof> {
+        let p = self.peak(unit, dtype).ok_or_else(|| {
+            anyhow!(
+                "{}: no {} path for {}",
+                self.name,
+                unit.as_str(),
+                dtype.as_str()
+            )
+        })?;
+        Ok(Roof::new(p, self.bandwidth))
+    }
+
+    /// Whether this GPU has a 2:4 sparse MMA path for the dtype.
+    pub fn has_sptc(&self, dtype: Dtype) -> bool {
+        self.peak(Unit::SparseTensorCore, dtype).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_ridge_points_match_table3() {
+        let g = Gpu::a100();
+        // Table 3 ridge column: CU double 5, TC double 10, CU float 10,
+        // SpTC TF32 161 (and Table 4: dense TC TF32 81).
+        let r = |u, d| g.roof(u, d).unwrap().ridge();
+        assert!((r(Unit::CudaCore, Dtype::F64) - 5.01).abs() < 0.05);
+        assert!((r(Unit::TensorCore, Dtype::F64) - 10.08).abs() < 0.1);
+        assert!((r(Unit::CudaCore, Dtype::F32) - 10.08).abs() < 0.1);
+        assert!((r(Unit::SparseTensorCore, Dtype::F32) - 161.2).abs() < 1.0);
+        assert!((r(Unit::TensorCore, Dtype::F32) - 80.6).abs() < 0.5);
+    }
+
+    #[test]
+    fn sptc_is_double_tc_on_a100() {
+        let g = Gpu::a100();
+        let tc = g.roof(Unit::TensorCore, Dtype::F32).unwrap();
+        let sp = g.roof(Unit::SparseTensorCore, Dtype::F32).unwrap();
+        assert!((sp.peak_flops / tc.peak_flops - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_units_error() {
+        assert!(Gpu::v100().roof(Unit::TensorCore, Dtype::F32).is_err());
+        assert!(Gpu::a100().roof(Unit::SparseTensorCore, Dtype::F64).is_err());
+        assert!(!Gpu::a100().has_sptc(Dtype::F64));
+        assert!(Gpu::a100().has_sptc(Dtype::F32));
+    }
+
+    #[test]
+    fn clock_lock_derates_compute_not_bandwidth() {
+        let g = Gpu::a100().locked(0.87);
+        let r = g.roof(Unit::CudaCore, Dtype::F32).unwrap();
+        assert!((r.peak_flops - 0.87 * 19.5e12).abs() < 1e6);
+        assert_eq!(r.bandwidth, 1.935e12);
+        // §4.2: locking shifts the ridge LEFT → earlier compute-bound.
+        assert!(r.ridge() < Gpu::a100().roof(Unit::CudaCore, Dtype::F32).unwrap().ridge());
+    }
+
+    #[test]
+    fn lookup_known_and_unknown() {
+        assert_eq!(Gpu::lookup("A100").unwrap().name, "A100-80GB-PCIe");
+        assert_eq!(Gpu::lookup("h100").unwrap().name, "H100-SXM5");
+        assert_eq!(Gpu::lookup("mi300").unwrap().name, "MI300X");
+        assert!(Gpu::lookup("tpu-v5").is_err());
+    }
+
+    #[test]
+    fn matrix_cores_follow_the_same_criteria() {
+        // §2.1.1: AMD Matrix Cores implement the same contraction — the
+        // Eq. 19 threshold computes the same way.  MI300X f64 ratio
+        // P_MC/P_VALU = 2 exactly, like A100's TC/CUDA f64 ratio.
+        let g = Gpu::mi300x();
+        let cu = g.roof(Unit::CudaCore, Dtype::F64).unwrap();
+        let tc = g.roof(Unit::TensorCore, Dtype::F64).unwrap();
+        assert!((tc.peak_flops / cu.peak_flops - 2.0).abs() < 1e-9);
+        assert!(!g.has_sptc(Dtype::F32)); // no 2:4 path on CDNA3
+    }
+
+    #[test]
+    fn all_registry_entries_have_cuda_paths() {
+        for g in Gpu::all() {
+            assert!(g.roof(Unit::CudaCore, Dtype::F32).is_ok(), "{}", g.name);
+            assert!(g.roof(Unit::CudaCore, Dtype::F64).is_ok(), "{}", g.name);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn locked_rejects_bad_factor() {
+        Gpu::a100().locked(1.5);
+    }
+}

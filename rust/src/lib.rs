@@ -1,0 +1,35 @@
+//! # tc-stencil — "Do We Need Tensor Cores for Stencil Computations?"
+//!
+//! Full reproduction of the CS.DC 2026 analysis paper: an enhanced roofline
+//! performance model for stencil computations on CUDA Cores, Tensor Cores
+//! and Sparse Tensor Cores, the four bottleneck-transition scenarios, the
+//! analytical sweet-spot criteria — plus everything needed to *run* it:
+//!
+//! * [`model`] — the paper's contribution as executable math (Eq. 1–20).
+//! * [`hardware`] — GPU spec registry (A100/V100/H100/…, per-dtype peaks).
+//! * [`engines`] — the eight baseline implementations the paper evaluates,
+//!   as engine descriptors bound to AOT-compiled kernel artifacts.
+//! * [`sim`] — the calibrated execution simulator standing in for the
+//!   paper's A100 testbed (FLOP/traffic counters, L2 filter, ncu facade).
+//! * [`runtime`] — PJRT-CPU loader/executor for the AOT HLO artifacts.
+//! * [`coordinator`] — the serving layer: planner (auto unit+fusion
+//!   selection via the criteria), domain tiling + halo exchange, worker
+//!   pool, metrics.
+//! * [`util`] — from-scratch substrates (JSON, CLI, tables, RNG, property
+//!   testing, bench harness): the offline build environment vendors only
+//!   the `xla` and `anyhow` crates, so these are implemented here.
+//!
+//! Python/JAX/Pallas exist only on the build path (`make artifacts`); this
+//! crate never shells out to Python.
+
+pub mod util;
+pub mod model;
+pub mod hardware;
+pub mod engines;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+
+pub use model::stencil::{Shape, StencilPattern};
+pub use model::perf::{Dtype, Workload};

@@ -1,0 +1,360 @@
+//! stencilctl — CLI for the tc-stencil reproduction.
+//!
+//! Subcommands:
+//!   analyze    classify a stencil config (scenarios, criteria, sweet spot)
+//!   plan       run the planner: chosen engine + fusion depth + rationale
+//!   run        advance a real domain through the PJRT runtime (tiled)
+//!   sweep      fusion-depth sweep of predictions for one config
+//!   list       list AOT artifacts from the manifest
+//!   reproduce  regenerate a paper table/figure (table2..4, fig2..16, all)
+
+use anyhow::{anyhow, bail, Result};
+
+use tc_stencil::coordinator::config::{run_opt_specs, RunConfig};
+use tc_stencil::coordinator::{planner, scheduler};
+use tc_stencil::engines;
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::{Unit, Workload};
+use tc_stencil::model::{criteria, scenario};
+use tc_stencil::report;
+use tc_stencil::runtime::manifest::Manifest;
+use tc_stencil::runtime::Runtime;
+use tc_stencil::sim::{exec, golden};
+use tc_stencil::util::cli::{usage, Args};
+use tc_stencil::util::table::fnum;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &run_opt_specs())?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "analyze" => analyze(&args),
+        "plan" => plan_cmd(&args),
+        "run" => run_cmd(&args),
+        "sweep" => sweep(&args),
+        "list" => list(&args),
+        "reproduce" => reproduce(&args),
+        "help" | "--help" => {
+            print!("{}", help_text());
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{}", help_text()),
+    }
+}
+
+fn help_text() -> String {
+    format!(
+        "stencilctl — Do We Need Tensor Cores for Stencil Computations?\n\n\
+         subcommands: analyze | plan | run | sweep | list | reproduce <id>\n\
+         reproduce ids: table2 table3 table4 fig2 fig8 fig10 fig11 fig13 fig15 fig16 all\n\n{}",
+        usage(&run_opt_specs())
+    )
+}
+
+fn cfg_and_gpu(args: &Args) -> Result<(RunConfig, Gpu)> {
+    let cfg = RunConfig::from_args(args)?;
+    let gpu = if args.flag("locked") {
+        cfg.gpu.locked(engines::calib::PROFILING_CLOCK_LOCK)
+    } else {
+        cfg.gpu.clone()
+    };
+    Ok((cfg, gpu))
+}
+
+fn analyze(args: &Args) -> Result<()> {
+    let (cfg, gpu) = cfg_and_gpu(args)?;
+    let t = cfg.t.unwrap_or(1);
+    let w = Workload::new(cfg.pattern, t, cfg.dtype);
+    println!(
+        "{} t={} {} on {}  (K={}, K^(t)={}, alpha={:.3})",
+        cfg.pattern.label(),
+        t,
+        cfg.dtype.as_str(),
+        gpu.name,
+        w.k(),
+        cfg.pattern.fused_k_points(t),
+        w.alpha()
+    );
+    let cu_roof = gpu.roof(Unit::CudaCore, cfg.dtype)?;
+    println!(
+        "  CUDA Cores : I={:<8} ridge={:<7} -> {:?}-bound, P={} GFLOP/s",
+        fnum(w.intensity_cuda()),
+        fnum(cu_roof.ridge()),
+        w.bound(&cu_roof, Unit::CudaCore, tc_stencil::model::sparsity::Scheme::Direct),
+        fnum(cu_roof.attainable(w.intensity_cuda()) / 1e9),
+    );
+    for e in [engines::convstencil(), engines::spider()] {
+        let Ok(roof) = gpu.roof(e.unit, cfg.dtype) else {
+            println!("  {:<11}: ({} path absent on {})", e.name, e.unit.as_str(), gpu.name);
+            continue;
+        };
+        if !e.supports(&w) {
+            println!("  {:<11}: unsupported (dtype/fusion limits)", e.name);
+            continue;
+        }
+        let cmp = scenario::compare(&w, &cu_roof, &roof, e.unit, e.scheme);
+        let sweet = criteria::in_sweet_spot(&w, &cu_roof, &roof, e.unit, e.scheme);
+        println!(
+            "  {:<11}: I={:<8} {:?} -> {:?}  ratio={:.3}  {}  [{}]",
+            e.name,
+            fnum(cmp.tensor_intensity),
+            cmp.cuda_bound,
+            cmp.tensor_bound,
+            cmp.speedup,
+            cmp.scenario.label(),
+            if sweet { "IN sweet spot" } else { "outside sweet spot" },
+        );
+    }
+    let best = criteria::max_profitable_t(
+        &cfg.pattern,
+        cfg.dtype,
+        &cu_roof,
+        &gpu.roof(Unit::TensorCore, cfg.dtype).unwrap_or(cu_roof),
+        Unit::TensorCore,
+        tc_stencil::model::sparsity::Scheme::Decompose,
+        16,
+    );
+    println!("  max profitable fusion depth on dense TC: {best:?}");
+    Ok(())
+}
+
+fn plan_cmd(args: &Args) -> Result<()> {
+    let (cfg, gpu) = cfg_and_gpu(args)?;
+    let manifest = Manifest::load(&cfg.artifacts_dir).ok();
+    let req = planner::Request {
+        pattern: cfg.pattern,
+        dtype: cfg.dtype,
+        steps: cfg.steps,
+        gpu,
+        require_artifact: manifest.is_some() && args.flag("verify"),
+        max_t: cfg.t.unwrap_or(8),
+    };
+    let plan = planner::plan(&req, manifest.as_ref())?;
+    let c = &plan.chosen;
+    println!(
+        "plan: {} (unit={}, scheme={}, t={}) predicted {:.2} GStencils/s [{}]",
+        c.engine.name,
+        c.engine.unit.as_str(),
+        c.engine.scheme.as_str(),
+        c.t,
+        c.prediction.gstencils(),
+        if c.in_sweet_spot { "sweet spot" } else { "baseline" },
+    );
+    if let Some(cmp) = &plan.vs_cuda {
+        println!(
+            "  vs best CUDA: {} (ratio {:.2})",
+            cmp.scenario.label(),
+            cmp.speedup
+        );
+    }
+    if let Some(a) = &c.artifact {
+        println!("  artifact: {a}");
+    }
+    for alt in plan.alternatives.iter().take(5) {
+        println!(
+            "  alt: {:<12} t={} -> {:.2} GStencils/s",
+            alt.engine.name,
+            alt.t,
+            alt.prediction.gstencils()
+        );
+    }
+    Ok(())
+}
+
+fn pick_artifact(cfg: &RunConfig, manifest: &Manifest) -> Result<String> {
+    // Forced engine → its scheme; else planner with artifact requirement.
+    if let Some(name) = &cfg.engine {
+        let e = engines::lookup(name)?;
+        let t = cfg.t.unwrap_or(1);
+        return manifest
+            .find(e.scheme, cfg.pattern.shape, cfg.pattern.d, cfg.pattern.r, t, cfg.dtype)
+            .map(|m| m.name.clone())
+            .ok_or_else(|| anyhow!("no artifact for {} t={t}", e.name));
+    }
+    let req = planner::Request {
+        pattern: cfg.pattern,
+        dtype: cfg.dtype,
+        steps: cfg.steps,
+        gpu: cfg.gpu.clone(),
+        require_artifact: true,
+        max_t: cfg.t.unwrap_or(8),
+    };
+    let plan = planner::plan(&req, Some(manifest))?;
+    plan.chosen
+        .artifact
+        .ok_or_else(|| anyhow!("planner chose {} without artifact", plan.chosen.engine.name))
+}
+
+fn run_cmd(args: &Args) -> Result<()> {
+    let (cfg, _gpu) = cfg_and_gpu(args)?;
+    let mut rt = Runtime::load(&cfg.artifacts_dir)?;
+    let artifact = pick_artifact(&cfg, &rt.manifest)?;
+    let meta = rt.manifest.get(&artifact)?.clone();
+    println!("artifact: {artifact} (platform {})", rt.platform());
+    // Initialize a Gaussian bump field and normalized box weights.
+    let n: usize = cfg.domain.iter().product();
+    let mut field = gaussian_field(&cfg.domain);
+    let weights = default_weights(&cfg.pattern);
+    let spe = meta.steps_per_exec();
+    let steps = cfg.steps.div_ceil(spe) * spe;
+    let job = scheduler::Job {
+        artifact: artifact.clone(),
+        domain: cfg.domain.clone(),
+        steps,
+        weights: weights.clone(),
+        threads: cfg.threads,
+    };
+    let metrics = scheduler::run(&mut rt, &job, &mut field)?;
+    println!("{}", metrics.render());
+    if args.flag("verify") {
+        let initial = gaussian_field(&cfg.domain);
+        let w = golden::Weights::new(cfg.pattern.d, 2 * cfg.pattern.r + 1, weights);
+        let launches = steps / spe;
+        let mut want = golden::Field::from_vec(&cfg.domain, initial);
+        for _ in 0..launches {
+            want = golden::apply_fused(&want, &w, spe);
+        }
+        let got = golden::Field::from_vec(&cfg.domain, field.clone());
+        let err = got.max_abs_diff(&want);
+        println!(
+            "verify vs golden oracle: max|Δ| = {err:.3e} over {n} points -> {}",
+            if err < 1e-3 { "OK" } else { "FAIL" }
+        );
+        if err >= 1e-3 {
+            bail!("verification failed");
+        }
+    }
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let (cfg, gpu) = cfg_and_gpu(args)?;
+    println!(
+        "fusion-depth sweep: {} {} on {}",
+        cfg.pattern.label(),
+        cfg.dtype.as_str(),
+        gpu.name
+    );
+    println!("{:<4} {:>12} {:>12} {:>14} {:>14}", "t", "I_CU", "I_TC(SPIDER)", "EBISU GSt/s", "best-TC GSt/s");
+    for t in 1..=cfg.t.unwrap_or(8) {
+        let w = Workload::new(cfg.pattern, t, cfg.dtype);
+        let eb = exec::predict(&engines::ebisu(), &w, &gpu)?;
+        let tc_best = [engines::convstencil(), engines::spider()]
+            .iter()
+            .filter_map(|e| exec::predict(e, &w, &gpu).ok())
+            .map(|p| p.gstencils())
+            .fold(f64::NAN, f64::max);
+        let i_tc = exec::engine_intensity(&engines::spider(), &w);
+        println!(
+            "{:<4} {:>12} {:>12} {:>14} {:>14}",
+            t,
+            fnum(w.intensity_cuda()),
+            fnum(i_tc),
+            fnum(eb.gstencils()),
+            if tc_best.is_nan() { "-".into() } else { fnum(tc_best) },
+        );
+    }
+    Ok(())
+}
+
+fn list(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    println!("{} artifacts in {:?}:", manifest.variants.len(), cfg.artifacts_dir);
+    for v in &manifest.variants {
+        println!(
+            "  {:<44} {} K={} K^(t)={} alpha={:.2} S={}",
+            v.name,
+            v.dtype.as_str(),
+            v.k_points,
+            v.k_fused,
+            v.alpha,
+            v.sparsity_measured.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+    Ok(())
+}
+
+fn reproduce(args: &Args) -> Result<()> {
+    let (_cfg, gpu) = cfg_and_gpu(args)?;
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let mut printed = false;
+    let mut show = |id: &str, body: String| {
+        println!("{body}");
+        println!();
+        let _ = id;
+        printed = true;
+    };
+    if what == "table2" || what == "all" {
+        show("table2", report::table2().render());
+    }
+    if what == "table3" || what == "all" {
+        show("table3", report::table3(&gpu).render());
+    }
+    if what == "table4" || what == "all" {
+        show("table4", report::table4(&gpu).render());
+    }
+    if what == "fig2" || what == "all" {
+        show("fig2", report::fig2(&gpu).render());
+    }
+    if what == "fig8" || what == "fig9" || what == "all" {
+        show("fig8", report::fig8_regions(&gpu).render());
+    }
+    if what == "fig10" || what == "all" {
+        show("fig10", report::fig10(&gpu).render());
+    }
+    if what == "fig11" || what == "all" {
+        show("fig11", report::fig11(&gpu).render());
+    }
+    if what == "fig13" || what == "fig14" || what == "all" {
+        show("fig13", report::fig13(&gpu).render());
+    }
+    if what == "fig15" || what == "all" {
+        let (t, slope, r2) = report::fig15();
+        show(
+            "fig15",
+            format!("{}\nlinear fit: slope={slope:.4} (K/D=1.125), r²={r2:.5}", t.render()),
+        );
+    }
+    if what == "fig16" || what == "all" {
+        show("fig16", report::fig16(&gpu).render());
+    }
+    if !printed {
+        bail!("unknown reproduce id {what:?}");
+    }
+    Ok(())
+}
+
+fn gaussian_field(domain: &[usize]) -> Vec<f64> {
+    let n: usize = domain.iter().product();
+    let mut out = vec![0.0; n];
+    let d = domain.len();
+    let mut idx = vec![0usize; d];
+    for (flat, v) in out.iter_mut().enumerate() {
+        let mut rem = flat;
+        for k in (0..d).rev() {
+            idx[k] = rem % domain[k];
+            rem /= domain[k];
+        }
+        let mut q = 0.0;
+        for k in 0..d {
+            let c = (idx[k] as f64 - domain[k] as f64 / 2.0) / (domain[k] as f64 / 6.0);
+            q += c * c;
+        }
+        *v = (-q / 2.0).exp();
+    }
+    out
+}
+
+fn default_weights(p: &tc_stencil::model::stencil::StencilPattern) -> Vec<f64> {
+    let sup = p.support();
+    let k = sup.count() as f64;
+    sup.cells.iter().map(|&b| if b { 1.0 / k } else { 0.0 }).collect()
+}

@@ -1,0 +1,222 @@
+//! Analytical acceleration criteria (paper Eq. 19 and §4.3).
+//!
+//! Scenario 4 (compute-bound on both units) is profitable iff
+//! α < S·ℙ_TC/ℙ_CU; the *sweet spot* is that region united with all of
+//! scenario 3.  Sparse Tensor Cores double ℙ_TC, which both raises the
+//! ceiling for already-profitable workloads and re-admits fusion depths
+//! the dense criterion rejected (Fig. 13/14).
+
+use crate::model::perf::{Scheme, Unit, Workload};
+use crate::model::roofline::Roof;
+use crate::model::scenario::{self, Scenario};
+
+/// Eq. 19: compute-bound/compute-bound profitability test.
+pub fn sweet_spot_cc(alpha: f64, sparsity: f64, p_tc: f64, p_cu: f64) -> bool {
+    alpha < sparsity * p_tc / p_cu
+}
+
+/// The largest fusion depth (within `t_max`) that keeps a workload inside
+/// the sweet spot on the given roofs, if any.  This is the "careful
+/// selection of the fusion step t" the paper calls critical (§4.1).
+pub fn max_profitable_t(
+    pattern: &crate::model::stencil::StencilPattern,
+    dtype: crate::model::perf::Dtype,
+    cuda_roof: &Roof,
+    tensor_roof: &Roof,
+    unit: Unit,
+    scheme: Scheme,
+    t_max: usize,
+) -> Option<usize> {
+    (1..=t_max)
+        .filter(|&t| {
+            let w = Workload::new(*pattern, t, dtype);
+            in_sweet_spot(&w, cuda_roof, tensor_roof, unit, scheme)
+        })
+        .max()
+}
+
+/// Membership in the sweet spot = scenario 3, or scenario 4 passing Eq. 19.
+pub fn in_sweet_spot(
+    w: &Workload,
+    cuda_roof: &Roof,
+    tensor_roof: &Roof,
+    unit: Unit,
+    scheme: Scheme,
+) -> bool {
+    let cmp = scenario::compare(w, cuda_roof, tensor_roof, unit, scheme);
+    match cmp.scenario {
+        Scenario::CompToMem => true,
+        Scenario::CompToComp => sweet_spot_cc(
+            w.alpha(),
+            w.sparsity(scheme),
+            tensor_roof.peak_flops,
+            cuda_roof.peak_flops,
+        ),
+        _ => false,
+    }
+}
+
+/// §4.3: the SpTC roof is the dense TC roof with ℙ doubled.
+pub fn sptc_roof(tc_roof: &Roof) -> Roof {
+    tc_roof.scale_peak(2.0)
+}
+
+/// A point of the criteria chart (Fig. 9/14): for one fusion depth,
+/// whether dense TC and SpTC are each profitable.
+#[derive(Debug, Clone)]
+pub struct RegionPoint {
+    pub t: usize,
+    pub alpha: f64,
+    pub sparsity: f64,
+    pub threshold_dense: f64,
+    pub threshold_sparse: f64,
+    pub dense_profitable: bool,
+    pub sparse_profitable: bool,
+    pub scenario_dense: Scenario,
+    pub scenario_sparse: Scenario,
+}
+
+/// Sweep fusion depths, classifying profitability under dense TC and SpTC
+/// — the data behind Fig. 9, 13 and 14.
+pub fn region_sweep(
+    pattern: &crate::model::stencil::StencilPattern,
+    dtype: crate::model::perf::Dtype,
+    cuda_roof: &Roof,
+    tc_roof: &Roof,
+    scheme: Scheme,
+    t_max: usize,
+) -> Vec<RegionPoint> {
+    let sp_roof = sptc_roof(tc_roof);
+    (1..=t_max)
+        .map(|t| {
+            let w = Workload::new(*pattern, t, dtype);
+            let s = w.sparsity(scheme);
+            let a = w.alpha();
+            let c_dense = scenario::compare(&w, cuda_roof, tc_roof, Unit::TensorCore, scheme);
+            let c_sparse =
+                scenario::compare(&w, cuda_roof, &sp_roof, Unit::SparseTensorCore, scheme);
+            RegionPoint {
+                t,
+                alpha: a,
+                sparsity: s,
+                threshold_dense: s * tc_roof.peak_flops / cuda_roof.peak_flops,
+                threshold_sparse: s * sp_roof.peak_flops / cuda_roof.peak_flops,
+                dense_profitable: in_sweet_spot(&w, cuda_roof, tc_roof, Unit::TensorCore, scheme),
+                sparse_profitable: in_sweet_spot(
+                    &w,
+                    cuda_roof,
+                    &sp_roof,
+                    Unit::SparseTensorCore,
+                    scheme,
+                ),
+                scenario_dense: c_dense.scenario,
+                scenario_sparse: c_sparse.scenario,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn pat(shape: Shape, d: usize, r: usize) -> StencilPattern {
+        StencilPattern::new(shape, d, r).unwrap()
+    }
+
+    #[test]
+    fn eq19_threshold() {
+        // A100 f64: P_TC/P_CU ≈ 2.01; with S=0.5 the threshold is ≈ 1.005.
+        assert!(sweet_spot_cc(1.0, 0.5, 19.5e12, 9.7e12));
+        assert!(!sweet_spot_cc(1.81, 0.5, 19.5e12, 9.7e12)); // Table 3 case 5 logic
+    }
+
+    #[test]
+    fn case5_fails_criterion() {
+        // Box-3D1R t=3 double: α=343/81≈4.23 > 0.5·2.01 → outside.
+        let w = Workload::new(pat(Shape::Box, 3, 1), 3, Dtype::F64);
+        let cu = Roof::new(9.7e12, 1.935e12);
+        let tc = Roof::new(19.5e12, 1.935e12);
+        assert!(!in_sweet_spot(&w, &cu, &tc, Unit::TensorCore, Scheme::Flatten));
+    }
+
+    #[test]
+    fn scenario3_always_in_sweet_spot() {
+        // Box-2D1R t=7 float on SpTC roofs (Table 3 case 3).
+        let w = Workload::new(pat(Shape::Box, 2, 1), 7, Dtype::F32);
+        let cu = Roof::new(19.5e12, 1.935e12);
+        let sptc = Roof::new(312e12, 1.935e12);
+        assert!(in_sweet_spot(&w, &cu, &sptc, Unit::SparseTensorCore, Scheme::Sparse24));
+    }
+
+    #[test]
+    fn sptc_expands_the_region() {
+        // Fig. 14: there must exist fusion depths where dense TC is NOT
+        // profitable but SpTC IS (TF32 roofs, Box-2D1R).
+        let cu = Roof::new(19.5e12, 1.935e12);
+        let tc = Roof::new(156e12, 1.935e12);
+        let pts = region_sweep(&pat(Shape::Box, 2, 1), Dtype::F32, &cu, &tc, Scheme::Decompose, 40);
+        let expanded: Vec<_> = pts
+            .iter()
+            .filter(|p| !p.dense_profitable && p.sparse_profitable)
+            .collect();
+        assert!(!expanded.is_empty(), "SpTC must expand the sweet spot");
+        // and SpTC profitability is a superset of dense profitability
+        for p in &pts {
+            if p.dense_profitable {
+                assert!(p.sparse_profitable, "t={}", p.t);
+            }
+        }
+    }
+
+    #[test]
+    fn max_profitable_t_exists_for_2d_box_f32() {
+        let cu = Roof::new(19.5e12, 1.935e12);
+        let tc = Roof::new(156e12, 1.935e12);
+        let t = max_profitable_t(
+            &pat(Shape::Box, 2, 1),
+            Dtype::F32,
+            &cu,
+            &tc,
+            Unit::TensorCore,
+            Scheme::Decompose,
+            32,
+        );
+        assert!(t.is_some());
+        // α grows ~linearly in t for 2D; eventually t drops out.
+        let t = t.unwrap();
+        assert!(t >= 1 && t <= 32);
+    }
+
+    #[test]
+    fn no_sweet_spot_when_memory_bound() {
+        // Scenarios 1/2 (CUDA memory-bound) are never in the sweet spot.
+        let w = Workload::new(pat(Shape::Star, 2, 1), 1, Dtype::F64);
+        let cu = Roof::new(9.7e12, 1.935e12);
+        let tc = Roof::new(19.5e12, 1.935e12);
+        assert!(!in_sweet_spot(&w, &cu, &tc, Unit::TensorCore, Scheme::Decompose));
+    }
+
+    #[test]
+    fn sptc_roof_doubles_peak_only() {
+        let tc = Roof::new(156e12, 1.935e12);
+        let sp = sptc_roof(&tc);
+        assert_eq!(sp.peak_flops, 312e12);
+        assert_eq!(sp.bandwidth, tc.bandwidth);
+    }
+
+    #[test]
+    fn region_sweep_thresholds_consistent() {
+        let cu = Roof::new(19.5e12, 1.935e12);
+        let tc = Roof::new(156e12, 1.935e12);
+        for p in region_sweep(&pat(Shape::Box, 2, 1), Dtype::F32, &cu, &tc, Scheme::Decompose, 12)
+        {
+            assert!((p.threshold_sparse - 2.0 * p.threshold_dense).abs() < 1e-9);
+            if p.scenario_dense == Scenario::CompToComp {
+                assert_eq!(p.dense_profitable, p.alpha < p.threshold_dense);
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's analytical performance model, executable.
+//!
+//! * [`stencil`]    — patterns (shape/d/r), K, fused support K^(t)
+//! * [`roofline`]   — Eq. 4–5: P = min(ℙ, 𝔹·I), ridge point
+//! * [`redundancy`] — Eq. 9–10: fusion redundancy α (closed form + exact)
+//! * [`sparsity`]   — Eq. 2: transformation sparsity S per scheme
+//! * [`perf`]       — Eq. 6–12, 20: C, M, I and P per execution unit
+//! * [`scenario`]   — Eq. 13–18: the four bottleneck-transition scenarios
+//! * [`criteria`]   — Eq. 19 + §4.3: sweet-spot and SpTC-expanded regions
+
+pub mod stencil;
+pub mod roofline;
+pub mod redundancy;
+pub mod sparsity;
+pub mod perf;
+pub mod scenario;
+pub mod criteria;

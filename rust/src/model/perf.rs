@@ -1,0 +1,292 @@
+//! Per-unit workload formulation (paper §3.2, Eq. 6–12 and §4.3 Eq. 20).
+//!
+//! All quantities are *per output point* unless stated otherwise:
+//!
+//! | unit      | C (FLOPs)        | M (bytes) | I = C/M            |
+//! |-----------|------------------|-----------|--------------------|
+//! | CUDA Core | t·2K             | 2D        | t·K/D      (Eq. 8) |
+//! | TC        | (α/S)·t·2K       | 2D        | t·(α/S)·K/D (Eq.11)|
+//! | SpTC      | (α/S)·t·2K       | 2D        | same as TC (Eq.20) |
+//!
+//! The *actual* (useful) performance on TC/SpTC divides the raw roofline
+//! value by the inflation α/S (Eq. 12) — redundant zero-products move data
+//! through the MMA units but do not advance the stencil.
+
+use crate::model::redundancy;
+use crate::model::roofline::{Bound, Roof};
+use crate::model::sparsity;
+use crate::model::stencil::StencilPattern;
+
+pub use crate::model::sparsity::Scheme;
+
+/// Element type (the paper evaluates float and double).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F64,
+}
+
+impl Dtype {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" | "float" | "float32" => Ok(Dtype::F32),
+            "f64" | "double" | "float64" => Ok(Dtype::F64),
+            other => anyhow::bail!("unknown dtype {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "float",
+            Dtype::F64 => "double",
+        }
+    }
+}
+
+/// Execution unit under analysis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Unit {
+    CudaCore,
+    TensorCore,
+    SparseTensorCore,
+}
+
+impl Unit {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Unit::CudaCore => "CUDA Core",
+            Unit::TensorCore => "Tensor Core",
+            Unit::SparseTensorCore => "Sparse Tensor Core",
+        }
+    }
+}
+
+/// A stencil workload: pattern × fusion depth × dtype.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    pub pattern: StencilPattern,
+    pub t: usize,
+    pub dtype: Dtype,
+}
+
+impl Workload {
+    pub fn new(pattern: StencilPattern, t: usize, dtype: Dtype) -> Workload {
+        assert!(t >= 1);
+        Workload { pattern, t, dtype }
+    }
+
+    /// K — points in the unfused kernel.
+    pub fn k(&self) -> f64 {
+        self.pattern.k_points() as f64
+    }
+
+    /// α — fusion redundancy (Eq. 9, exact for any shape).
+    pub fn alpha(&self) -> f64 {
+        redundancy::alpha(&self.pattern, self.t)
+    }
+
+    /// S — transformation sparsity for `scheme` (Eq. 2).
+    pub fn sparsity(&self, scheme: Scheme) -> f64 {
+        sparsity::sparsity(scheme, &self.pattern, self.t)
+    }
+
+    /// C per output point on CUDA Cores: t·2K (Eq. 8).
+    pub fn c_cuda(&self) -> f64 {
+        self.t as f64 * 2.0 * self.k()
+    }
+
+    /// C per output point on TC/SpTC with `scheme`: (α/S)·t·2K (Eq. 3/11).
+    pub fn c_tensor(&self, scheme: Scheme) -> f64 {
+        self.alpha() / self.sparsity(scheme) * self.c_cuda()
+    }
+
+    /// M per output point: 2D bytes — one read + one write (§3.2.1), for
+    /// every unit (the adaptation does not change compulsory traffic).
+    pub fn m_bytes(&self) -> f64 {
+        2.0 * self.dtype.bytes() as f64
+    }
+
+    /// Arithmetic intensity on CUDA Cores: I = t·K/D (Eq. 8).
+    pub fn intensity_cuda(&self) -> f64 {
+        self.c_cuda() / self.m_bytes()
+    }
+
+    /// Arithmetic intensity on TC/SpTC: I = t·(α/S)·K/D (Eq. 11/20).
+    pub fn intensity_tensor(&self, scheme: Scheme) -> f64 {
+        self.c_tensor(scheme) / self.m_bytes()
+    }
+
+    /// Raw roofline performance on a unit (counting redundant ops too).
+    pub fn raw_perf(&self, roof: &Roof, unit: Unit, scheme: Scheme) -> f64 {
+        match unit {
+            Unit::CudaCore => roof.attainable(self.intensity_cuda()),
+            Unit::TensorCore | Unit::SparseTensorCore => {
+                roof.attainable(self.intensity_tensor(scheme))
+            }
+        }
+    }
+
+    /// *Actual* (useful-FLOP) performance — Eq. 12 / Eq. 20 third line.
+    pub fn actual_perf(&self, roof: &Roof, unit: Unit, scheme: Scheme) -> f64 {
+        let raw = self.raw_perf(roof, unit, scheme);
+        match unit {
+            Unit::CudaCore => raw,
+            Unit::TensorCore | Unit::SparseTensorCore => {
+                self.sparsity(scheme) / self.alpha() * raw
+            }
+        }
+    }
+
+    /// Bottleneck side for the unit at this workload's intensity.
+    pub fn bound(&self, roof: &Roof, unit: Unit, scheme: Scheme) -> Bound {
+        match unit {
+            Unit::CudaCore => roof.bound(self.intensity_cuda()),
+            Unit::TensorCore | Unit::SparseTensorCore => {
+                roof.bound(self.intensity_tensor(scheme))
+            }
+        }
+    }
+
+    /// Stencil throughput in point-updates/s ("GStencils/s" when /1e9):
+    /// actual FLOP/s divided by the 2K useful FLOPs per point-update.
+    pub fn stencil_throughput(&self, roof: &Roof, unit: Unit, scheme: Scheme) -> f64 {
+        // actual_perf counts useful FLOPs for the whole fused kernel; each
+        // output point advances t steps, so useful FLOPs per point-update
+        // are (t·2K)/t = 2K.
+        self.actual_perf(roof, unit, scheme) / (2.0 * self.k())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn wl(shape: Shape, d: usize, r: usize, t: usize, dt: Dtype) -> Workload {
+        Workload::new(StencilPattern::new(shape, d, r).unwrap(), t, dt)
+    }
+
+    // ---- Table 2 analytical columns, row by row ----
+
+    #[test]
+    fn table2_row1_ebisu_box2d1r_t3_double() {
+        let w = wl(Shape::Box, 2, 1, 3, Dtype::F64);
+        assert_eq!(w.c_cuda(), 54.0);
+        assert_eq!(w.m_bytes(), 16.0);
+        assert!((w.intensity_cuda() - 3.375).abs() < 1e-12); // paper: 3.38
+    }
+
+    #[test]
+    fn table2_row2_ebisu_box2d3r_t1_double() {
+        let w = wl(Shape::Box, 2, 3, 1, Dtype::F64);
+        assert_eq!(w.c_cuda(), 98.0);
+        assert!((w.intensity_cuda() - 6.125).abs() < 1e-12); // paper: 6.12
+    }
+
+    #[test]
+    fn table2_row3_ebisu_box2d1r_t7_float() {
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+        assert_eq!(w.c_cuda(), 126.0);
+        assert_eq!(w.m_bytes(), 8.0);
+        assert!((w.intensity_cuda() - 15.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_row4_ebisu_box2d7r_t1_float() {
+        let w = wl(Shape::Box, 2, 7, 1, Dtype::F32);
+        assert_eq!(w.c_cuda(), 450.0);
+        assert!((w.intensity_cuda() - 56.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_row5_convstencil_box2d1r_t3_double() {
+        // Paper: α=1.81, S=0.5 → C=196, I=12.25.  With S=0.5 exactly:
+        let w = wl(Shape::Box, 2, 1, 3, Dtype::F64);
+        let c = w.alpha() / 0.5 * w.c_cuda();
+        assert!((c - 196.0).abs() < 1e-9);
+        assert!((c / w.m_bytes() - 12.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_row7_convstencil_box2d1r_t7_float() {
+        // Paper: α=3.57, S=0.5 → C=900, I=112.5.
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+        let c = w.alpha() / 0.5 * w.c_cuda();
+        assert!((c - 900.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_row9_spider_box2d1r_t7_float() {
+        // Paper: α=3.57, S=0.47 → C=960, I=120.  Our banded operand gives
+        // S=0.5 → C=900; with the paper's S the numbers match exactly.
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+        let c_paper_s = w.alpha() / 0.46875 * w.c_cuda();
+        assert!((c_paper_s - 960.0).abs() < 1e-9);
+        // measured-operand variant stays within 7% of the paper row
+        let c_ours = w.c_tensor(Scheme::Decompose);
+        assert!((c_ours - 960.0).abs() / 960.0 < 0.07, "{c_ours}");
+    }
+
+    // ---- Eq. 12 normalization ----
+
+    #[test]
+    fn actual_perf_divides_out_redundancy() {
+        let w = wl(Shape::Box, 2, 1, 3, Dtype::F32);
+        let roof = Roof::new(156e12, 1.935e12); // A100 TF32 TC
+        let raw = w.raw_perf(&roof, Unit::TensorCore, Scheme::Flatten);
+        let act = w.actual_perf(&roof, Unit::TensorCore, Scheme::Flatten);
+        let infl = w.alpha() / w.sparsity(Scheme::Flatten);
+        assert!((raw / act - infl).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_bound_tc_equals_cuda_actual() {
+        // Scenario 1 (Eq. 14): both memory-bound → identical actual perf.
+        let w = wl(Shape::Box, 2, 1, 1, Dtype::F64);
+        let cu = Roof::new(9.7e12, 1.935e12);
+        let tc = Roof::new(19.5e12, 1.935e12);
+        assert_eq!(w.bound(&cu, Unit::CudaCore, Scheme::Direct), Bound::Memory);
+        assert_eq!(w.bound(&tc, Unit::TensorCore, Scheme::Decompose), Bound::Memory);
+        let p_cu = w.actual_perf(&cu, Unit::CudaCore, Scheme::Direct);
+        let p_tc = w.actual_perf(&tc, Unit::TensorCore, Scheme::Decompose);
+        assert!((p_cu / p_tc - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_memory_bound_is_t_b_over_2d() {
+        // Memory-bound: updates/s = t·B/(2D) regardless of unit.
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+        let tc = Roof::new(312e12, 1.935e12); // SpTC TF32 — ridge 161
+        assert_eq!(
+            w.bound(&tc, Unit::SparseTensorCore, Scheme::Sparse24),
+            Bound::Memory
+        );
+        let tp = w.stencil_throughput(&tc, Unit::SparseTensorCore, Scheme::Sparse24);
+        let want = 7.0 * 1.935e12 / 8.0;
+        assert!((tp - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("double").unwrap(), Dtype::F64);
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert!(Dtype::parse("bf16").is_err());
+    }
+
+    #[test]
+    fn intensity_linear_in_t_fig15() {
+        // Fig. 15: I vs t is linear with slope K/D on CUDA Cores.
+        let k_over_d = 9.0 / 8.0;
+        for t in 1..=8 {
+            let w = wl(Shape::Box, 2, 1, t, Dtype::F64);
+            assert!((w.intensity_cuda() - t as f64 * k_over_d).abs() < 1e-12);
+        }
+    }
+}

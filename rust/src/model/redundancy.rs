@@ -1,0 +1,117 @@
+//! Fusion redundancy factor α (paper Eq. 9–10).
+//!
+//! α = K^(t) / (t·K) quantifies how many extra multiply-adds the
+//! monolithic fused kernel executes per time step compared to sequential
+//! application.  The box closed form (Eq. 10) is
+//! α_box = (2rt+1)^d / (t·(2r+1)^d); for arbitrary shapes we count the
+//! fused support exactly (iterated Minkowski sum — see `stencil.rs`).
+
+use crate::model::stencil::{Shape, StencilPattern};
+
+/// α via the exact fused-support count (valid for any shape).
+pub fn alpha(pattern: &StencilPattern, t: usize) -> f64 {
+    assert!(t >= 1, "fusion depth must be >= 1");
+    pattern.fused_k_points(t) as f64 / (t as f64 * pattern.k_points() as f64)
+}
+
+/// α via the paper's box closed form (Eq. 10). Panics on non-box shapes.
+pub fn alpha_box_closed_form(pattern: &StencilPattern, t: usize) -> f64 {
+    assert_eq!(pattern.shape, Shape::Box, "closed form is box-only");
+    let num = (2.0 * pattern.r as f64 * t as f64 + 1.0).powi(pattern.d as i32);
+    let den = t as f64 * (2.0 * pattern.r as f64 + 1.0).powi(pattern.d as i32);
+    num / den
+}
+
+/// Growth-rate exponent of α in t: O(t^(d-1)) for boxes (paper §4.1).
+/// Estimated numerically as the slope of log α over log t on t ∈ [4, 32].
+pub fn growth_exponent(pattern: &StencilPattern) -> f64 {
+    let t_lo = 4usize;
+    let t_hi = 32usize;
+    let a_lo = alpha(pattern, t_lo);
+    let a_hi = alpha(pattern, t_hi);
+    (a_hi / a_lo).ln() / ((t_hi as f64 / t_lo as f64).ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn pat(shape: Shape, d: usize, r: usize) -> StencilPattern {
+        StencilPattern::new(shape, d, r).unwrap()
+    }
+
+    #[test]
+    fn paper_table2_alphas() {
+        // Table 2 rows 5/7: Box-2D1R t=3 → 1.81, t=7 → 3.57.
+        let p = pat(Shape::Box, 2, 1);
+        assert!((alpha(&p, 3) - 49.0 / 27.0).abs() < 1e-12);
+        assert!((alpha(&p, 7) - 225.0 / 63.0).abs() < 1e-12);
+        assert!((alpha(&p, 3) - 1.81).abs() < 0.005);
+        assert!((alpha(&p, 7) - 3.57).abs() < 0.005);
+    }
+
+    #[test]
+    fn closed_form_equals_exact_for_boxes() {
+        for d in 1..=3 {
+            for r in 1..=2 {
+                for t in 1..=6 {
+                    let p = pat(Shape::Box, d, r);
+                    assert!(
+                        (alpha(&p, t) - alpha_box_closed_form(&p, t)).abs() < 1e-12,
+                        "{p} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_unity_at_t1() {
+        for shape in [Shape::Box, Shape::Star] {
+            for d in 1..=3 {
+                let p = pat(shape, d, 1);
+                assert!((alpha(&p, 1) - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_monotone_in_t_for_2d_boxes() {
+        let p = pat(Shape::Box, 2, 1);
+        let mut prev = 0.0;
+        for t in 1..=8 {
+            let a = alpha(&p, t);
+            assert!(a > prev);
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn growth_exponent_matches_paper_scaling() {
+        // α_box ~ O(t^(d-1)) — §4.1 scenario 4 discussion.
+        assert!((growth_exponent(&pat(Shape::Box, 2, 1)) - 1.0).abs() < 0.1);
+        assert!((growth_exponent(&pat(Shape::Box, 3, 1)) - 2.0).abs() < 0.15);
+        // star fused support is the L1 ball: also t^(d-1) asymptotically.
+        assert!((growth_exponent(&pat(Shape::Star, 2, 1)) - 1.0).abs() < 0.25);
+    }
+
+    #[test]
+    fn star_alpha_below_box_alpha() {
+        // The diamond fused support is smaller than the box one, but star
+        // K is also smaller — the paper's case study (Fig. 10) has star
+        // kernels reaching compute-bound later; check α relation at d=3.
+        let st = pat(Shape::Star, 3, 1);
+        let bx = pat(Shape::Box, 3, 1);
+        for t in 2..=5 {
+            // absolute fused supports: star diamond < box cube
+            assert!(st.fused_k_points(t) < bx.fused_k_points(t));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn closed_form_rejects_star() {
+        alpha_box_closed_form(&pat(Shape::Star, 2, 1), 2);
+    }
+}

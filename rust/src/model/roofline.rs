@@ -1,0 +1,115 @@
+//! The classical roofline model (paper §3.1, Eq. 4–5) plus the ridge-point
+//! bookkeeping used throughout the scenario analysis.
+
+/// A hardware roof: peak compute ℙ (FLOP/s) and memory bandwidth 𝔹 (B/s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Roof {
+    /// ℙ — peak compute throughput in FLOP/s.
+    pub peak_flops: f64,
+    /// 𝔹 — memory bandwidth in bytes/s.
+    pub bandwidth: f64,
+}
+
+/// Which side of the ridge a workload lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Memory,
+    Compute,
+}
+
+impl Bound {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Bound::Memory => "Memory",
+            Bound::Compute => "Compute",
+        }
+    }
+}
+
+impl Roof {
+    pub fn new(peak_flops: f64, bandwidth: f64) -> Roof {
+        assert!(peak_flops > 0.0 && bandwidth > 0.0);
+        Roof { peak_flops, bandwidth }
+    }
+
+    /// Ridge point I* = ℙ / 𝔹 (FLOP/byte) — Eq. 5's break point.
+    pub fn ridge(&self) -> f64 {
+        self.peak_flops / self.bandwidth
+    }
+
+    /// Attainable performance P = min(ℙ, 𝔹·I) — Eq. 5.
+    pub fn attainable(&self, intensity: f64) -> f64 {
+        assert!(intensity >= 0.0);
+        self.peak_flops.min(self.bandwidth * intensity)
+    }
+
+    /// Bottleneck classification at intensity I.
+    pub fn bound(&self, intensity: f64) -> Bound {
+        if intensity < self.ridge() {
+            Bound::Memory
+        } else {
+            Bound::Compute
+        }
+    }
+
+    /// Scale the compute roof (clock-lock factor, sparsity 2×, …).
+    pub fn scale_peak(&self, factor: f64) -> Roof {
+        Roof::new(self.peak_flops * factor, self.bandwidth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A100 double-precision CUDA-Core roof from the paper (§5.3):
+    // ℙ = 9.7 TFLOPS, 𝔹 = 1.935 TB/s → ridge ≈ 5.
+    fn a100_f64_cu() -> Roof {
+        Roof::new(9.7e12, 1.935e12)
+    }
+
+    #[test]
+    fn ridge_matches_paper_table3() {
+        assert!((a100_f64_cu().ridge() - 5.01).abs() < 0.02);
+        let tc = Roof::new(19.5e12, 1.935e12); // A100 f64 Tensor Core
+        assert!((tc.ridge() - 10.08).abs() < 0.02);
+    }
+
+    #[test]
+    fn attainable_is_min_of_two_regimes() {
+        let r = a100_f64_cu();
+        // memory-bound: below the ridge performance scales linearly
+        assert_eq!(r.attainable(1.0), 1.935e12);
+        assert_eq!(r.attainable(2.0), 2.0 * 1.935e12);
+        // compute-bound: above the ridge it clips at peak
+        assert_eq!(r.attainable(100.0), 9.7e12);
+    }
+
+    #[test]
+    fn continuity_at_ridge() {
+        let r = a100_f64_cu();
+        let i = r.ridge();
+        assert!((r.attainable(i) - r.peak_flops).abs() / r.peak_flops < 1e-12);
+    }
+
+    #[test]
+    fn bound_classification() {
+        let r = a100_f64_cu();
+        assert_eq!(r.bound(3.38), Bound::Memory); // Table 3 case 1 EBISU
+        assert_eq!(r.bound(6.13), Bound::Compute); // Table 3 case 2 EBISU
+    }
+
+    #[test]
+    fn scale_peak_moves_ridge_right() {
+        let r = a100_f64_cu();
+        let s = r.scale_peak(2.0);
+        assert!((s.ridge() - 2.0 * r.ridge()).abs() < 1e-9);
+        assert_eq!(s.bandwidth, r.bandwidth);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_peak() {
+        Roof::new(0.0, 1.0);
+    }
+}

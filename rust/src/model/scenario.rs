@@ -1,0 +1,289 @@
+//! The four bottleneck-transition scenarios (paper §4.1, Eq. 13–18).
+//!
+//! Classification is by the (CUDA-bound, Tensor-bound) pair; the paper's
+//! result per scenario:
+//!
+//! 1. MB → MB: ratio ≡ 1 (Eq. 14) — **equivalent**
+//! 2. MB → CB: ratio < 1 (Eq. 16) — TC **underperforms**
+//! 3. CB → MB: ratio > 1 (Eq. 17) — TC **outperforms** (ceiling broken)
+//! 4. CB → CB: conditional (Eq. 18/19) — sweet-spot test decides
+
+use crate::model::perf::{Scheme, Unit, Workload};
+use crate::model::roofline::{Bound, Roof};
+
+pub use crate::model::sparsity::Scheme as TransformScheme;
+
+/// Scenario index per paper §4.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// (1) Memory-bound on both units.
+    MemToMem,
+    /// (2) Memory-bound on CUDA, compute-bound on Tensor Cores.
+    MemToComp,
+    /// (3) Compute-bound on CUDA, memory-bound on Tensor Cores.
+    CompToMem,
+    /// (4) Compute-bound on both units.
+    CompToComp,
+}
+
+impl Scenario {
+    pub fn number(&self) -> u8 {
+        match self {
+            Scenario::MemToMem => 1,
+            Scenario::MemToComp => 2,
+            Scenario::CompToMem => 3,
+            Scenario::CompToComp => 4,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("Scenario {}", self.number())
+    }
+}
+
+/// Expected outcome of moving to Tensor Cores, per the paper's analysis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// ratio ≈ 1 — no benefit, no loss.
+    Equivalent,
+    /// ratio < 1 — TC adaptation loses.
+    Underperforms,
+    /// ratio > 1 — TC breaks the CUDA ceiling.
+    Outperforms,
+    /// Scenario 4: decided by the sweet-spot criterion (Eq. 19).
+    Conditional,
+}
+
+/// Full comparison of a workload on a CUDA roof vs a tensor roof.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub scenario: Scenario,
+    pub verdict: Verdict,
+    /// P_TC_actual / P_CU_actual (Eq. 13).
+    pub speedup: f64,
+    pub cuda_bound: Bound,
+    pub tensor_bound: Bound,
+    pub cuda_intensity: f64,
+    pub tensor_intensity: f64,
+    pub cuda_perf: f64,
+    pub tensor_perf_actual: f64,
+}
+
+/// Tolerance band around ratio 1.0 treated as "comparable performance"
+/// (the paper's Case ② reads ≈; ncu-level noise is ±5–10%).
+pub const EQUIV_BAND: f64 = 0.05;
+
+/// Classify + quantify a workload across units (Eq. 13 and §4.1).
+pub fn compare(
+    w: &Workload,
+    cuda_roof: &Roof,
+    tensor_roof: &Roof,
+    unit: Unit,
+    scheme: Scheme,
+) -> Comparison {
+    assert!(matches!(unit, Unit::TensorCore | Unit::SparseTensorCore));
+    let cuda_bound = w.bound(cuda_roof, Unit::CudaCore, Scheme::Direct);
+    let tensor_bound = w.bound(tensor_roof, unit, scheme);
+    let scenario = match (cuda_bound, tensor_bound) {
+        (Bound::Memory, Bound::Memory) => Scenario::MemToMem,
+        (Bound::Memory, Bound::Compute) => Scenario::MemToComp,
+        (Bound::Compute, Bound::Memory) => Scenario::CompToMem,
+        (Bound::Compute, Bound::Compute) => Scenario::CompToComp,
+    };
+    let cuda_perf = w.actual_perf(cuda_roof, Unit::CudaCore, Scheme::Direct);
+    let tensor_perf_actual = w.actual_perf(tensor_roof, unit, scheme);
+    let speedup = tensor_perf_actual / cuda_perf;
+    let verdict = match scenario {
+        Scenario::MemToMem => Verdict::Equivalent,
+        Scenario::MemToComp => Verdict::Underperforms,
+        Scenario::CompToMem => Verdict::Outperforms,
+        Scenario::CompToComp => {
+            if (speedup - 1.0).abs() <= EQUIV_BAND {
+                Verdict::Equivalent
+            } else {
+                Verdict::Conditional
+            }
+        }
+    };
+    Comparison {
+        scenario,
+        verdict,
+        speedup,
+        cuda_bound,
+        tensor_bound,
+        cuda_intensity: w.intensity_cuda(),
+        tensor_intensity: w.intensity_tensor(scheme),
+        cuda_perf,
+        tensor_perf_actual,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::perf::{Dtype, Workload};
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn wl(shape: Shape, d: usize, r: usize, t: usize, dt: Dtype) -> Workload {
+        Workload::new(StencilPattern::new(shape, d, r).unwrap(), t, dt)
+    }
+
+    // A100 roofs as used in the paper's Table 3 analysis.
+    fn a100_cu_f64() -> Roof {
+        Roof::new(9.7e12, 1.935e12) // ridge ≈ 5
+    }
+    fn a100_tc_f64() -> Roof {
+        Roof::new(19.5e12, 1.935e12) // ridge ≈ 10
+    }
+    fn a100_cu_f32() -> Roof {
+        Roof::new(19.5e12, 1.935e12) // ridge ≈ 10
+    }
+    fn a100_sptc_tf32() -> Roof {
+        Roof::new(312e12, 1.935e12) // ridge ≈ 161
+    }
+    fn a100_tc_tf32() -> Roof {
+        Roof::new(156e12, 1.935e12) // ridge ≈ 81
+    }
+
+    #[test]
+    fn table3_case1_scenario2() {
+        // Box-2D1R t=3 double: EBISU memory-bound (I=3.38 < 5),
+        // ConvStencil compute-bound (I=12.25 > 10) → Scenario 2, TC loses.
+        let w = wl(Shape::Box, 2, 1, 3, Dtype::F64);
+        let c = compare(&w, &a100_cu_f64(), &a100_tc_f64(), Unit::TensorCore, Scheme::Flatten);
+        assert_eq!(c.scenario, Scenario::MemToComp);
+        assert_eq!(c.verdict, Verdict::Underperforms);
+        assert!(c.speedup < 1.0, "speedup={}", c.speedup);
+    }
+
+    #[test]
+    fn table3_case2_scenario4_boundary() {
+        // Box-2D3R t=1 double: both compute-bound, ratio ≈ 1 (paper: ≈).
+        let w = wl(Shape::Box, 2, 3, 1, Dtype::F64);
+        let c = compare(&w, &a100_cu_f64(), &a100_tc_f64(), Unit::TensorCore, Scheme::Flatten);
+        assert_eq!(c.scenario, Scenario::CompToComp);
+        // ratio = (S/α)·P_TC/P_CU with α=1, S≈0.5 → ≈ 1.0
+        assert!((c.speedup - 1.0).abs() < 0.12, "speedup={}", c.speedup);
+    }
+
+    #[test]
+    fn table3_case3_scenario3() {
+        // Box-2D1R t=7 float: EBISU compute-bound (I=15.75 > 10), SPIDER
+        // memory-bound (I=120 < 161) → Scenario 3, TC wins.
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+        let c = compare(
+            &w,
+            &a100_cu_f32(),
+            &a100_sptc_tf32(),
+            Unit::SparseTensorCore,
+            Scheme::Sparse24,
+        );
+        assert_eq!(c.scenario, Scenario::CompToMem);
+        assert_eq!(c.verdict, Verdict::Outperforms);
+        assert!(c.speedup > 1.0);
+    }
+
+    #[test]
+    fn table3_case4_scenario3() {
+        // Box-2D7R t=1 float: same transition.
+        let w = wl(Shape::Box, 2, 7, 1, Dtype::F32);
+        let c = compare(
+            &w,
+            &a100_cu_f32(),
+            &a100_sptc_tf32(),
+            Unit::SparseTensorCore,
+            Scheme::Sparse24,
+        );
+        assert_eq!(c.scenario, Scenario::CompToMem);
+        assert_eq!(c.verdict, Verdict::Outperforms);
+    }
+
+    #[test]
+    fn table3_case5_scenario4_loses() {
+        // Box-3D1R t=3 double: both compute-bound, α≈4.64 too large →
+        // fails Eq. 19 → degradation.
+        let w = wl(Shape::Box, 3, 1, 3, Dtype::F64);
+        let c = compare(&w, &a100_cu_f64(), &a100_tc_f64(), Unit::TensorCore, Scheme::Flatten);
+        assert_eq!(c.scenario, Scenario::CompToComp);
+        assert!(c.speedup < 1.0, "speedup={}", c.speedup);
+    }
+
+    #[test]
+    fn table3_case6_scenario4_loses() {
+        // Box-3D1R t=7 float on dense TC: α ≈ 16.8 — far outside sweet spot.
+        let w = wl(Shape::Box, 3, 1, 7, Dtype::F32);
+        let c = compare(
+            &w,
+            &a100_cu_f32(),
+            &a100_tc_tf32(),
+            Unit::TensorCore,
+            Scheme::Decompose,
+        );
+        assert_eq!(c.scenario, Scenario::CompToComp);
+        assert!(c.speedup < 1.0, "speedup={}", c.speedup);
+    }
+
+    #[test]
+    fn scenario1_equivalence_eq14() {
+        // Low intensity on both → ratio exactly 1.
+        let w = wl(Shape::Star, 2, 1, 1, Dtype::F64);
+        let c = compare(&w, &a100_cu_f64(), &a100_tc_f64(), Unit::TensorCore, Scheme::Decompose);
+        assert_eq!(c.scenario, Scenario::MemToMem);
+        assert_eq!(c.verdict, Verdict::Equivalent);
+        assert!((c.speedup - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scenario2_never_wins_eq16() {
+        // Property: in scenario 2 the ratio is strictly < 1 for any config.
+        for r in 1..=3usize {
+            for t in 1..=6usize {
+                let w = wl(Shape::Box, 2, r, t, Dtype::F64);
+                let c = compare(
+                    &w,
+                    &a100_cu_f64(),
+                    &a100_tc_f64(),
+                    Unit::TensorCore,
+                    Scheme::Decompose,
+                );
+                if c.scenario == Scenario::MemToComp {
+                    assert!(c.speedup < 1.0 + 1e-12, "r={r} t={t} {}", c.speedup);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scenario3_always_wins_eq17() {
+        for r in 1..=7usize {
+            for t in 1..=8usize {
+                let w = wl(Shape::Box, 2, r, t, Dtype::F32);
+                let c = compare(
+                    &w,
+                    &a100_cu_f32(),
+                    &a100_sptc_tf32(),
+                    Unit::SparseTensorCore,
+                    Scheme::Sparse24,
+                );
+                if c.scenario == Scenario::CompToMem {
+                    assert!(c.speedup > 1.0 - 1e-12, "r={r} t={t} {}", c.speedup);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intensities_reported_consistently() {
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+        let c = compare(
+            &w,
+            &a100_cu_f32(),
+            &a100_sptc_tf32(),
+            Unit::SparseTensorCore,
+            Scheme::Sparse24,
+        );
+        assert!((c.cuda_intensity - 15.75).abs() < 1e-9);
+        // with our measured S=0.5: I_TC = 7·(3.571/0.5)·9/4 = 112.5
+        assert!((c.tensor_intensity - 112.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,361 @@
+//! Stencil patterns: shape, dimensionality, radius — and their point
+//! counts, both per-step (K) and after t-step kernel fusion (K^(t)).
+//!
+//! K^(t) is computed two ways: the paper's box closed form (Eq. 10
+//! numerator) and an *exact* iterated Minkowski-sum support count that is
+//! valid for any shape — in particular star stencils, whose fused support
+//! is a generalized L1 ball the paper does not give a formula for.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Stencil shape (paper Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// All points with ‖off‖∞ ≤ r: K = (2r+1)^d.
+    Box,
+    /// Points on the coordinate axes with |off| ≤ r: K = 2dr+1.
+    Star,
+}
+
+impl Shape {
+    pub fn parse(s: &str) -> Result<Shape> {
+        match s.to_ascii_lowercase().as_str() {
+            "box" => Ok(Shape::Box),
+            "star" => Ok(Shape::Star),
+            other => bail!("unknown stencil shape {other:?} (want box|star)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Shape::Box => "box",
+            Shape::Star => "star",
+        }
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A stencil pattern: the paper's (shape, d, r) triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StencilPattern {
+    pub shape: Shape,
+    pub d: usize,
+    pub r: usize,
+}
+
+impl StencilPattern {
+    pub fn new(shape: Shape, d: usize, r: usize) -> Result<StencilPattern> {
+        if d == 0 || d > 4 {
+            bail!("dimensionality must be 1..=4, got {d}");
+        }
+        if r == 0 || r > 16 {
+            bail!("radius must be 1..=16, got {r}");
+        }
+        Ok(StencilPattern { shape, d, r })
+    }
+
+    /// Paper naming, e.g. "Box-2D1R".
+    pub fn label(&self) -> String {
+        let s = match self.shape {
+            Shape::Box => "Box",
+            Shape::Star => "Star",
+        };
+        format!("{s}-{}D{}R", self.d, self.r)
+    }
+
+    /// K — number of points in the (unfused) kernel.
+    pub fn k_points(&self) -> u64 {
+        match self.shape {
+            Shape::Box => (2 * self.r as u64 + 1).pow(self.d as u32),
+            Shape::Star => 2 * self.d as u64 * self.r as u64 + 1,
+        }
+    }
+
+    /// The support as a boolean hypercube over the (2r+1)^d hull.
+    pub fn support(&self) -> SupportGrid {
+        let n = 2 * self.r + 1;
+        let mut g = SupportGrid::zeros(self.d, n);
+        let r = self.r as i64;
+        g.fill_by(|off| match self.shape {
+            Shape::Box => true,
+            Shape::Star => off.iter().filter(|&&o| o != 0).count() <= 1,
+        });
+        debug_assert_eq!(g.count(), self.k_points());
+        let _ = r;
+        g
+    }
+
+    /// K^(t) — points in the fused kernel support (exact for any shape).
+    ///
+    /// Box: (2rt+1)^d (Eq. 10 numerator).  Star: the t-fold Minkowski sum
+    /// of the radius-r cross is exactly {x : Σ_i ⌈|x_i|/r⌉ ≤ t} — each
+    /// axis displacement |x_i| needs ⌈|x_i|/r⌉ cross steps and steps are
+    /// spent independently per axis.  Counted in O((2rt+1)^d) instead of
+    /// the O(cells²)-per-step generic Minkowski iteration (which remains
+    /// available via `SupportGrid::minkowski_power` and cross-checks this
+    /// in the tests).
+    pub fn fused_k_points(&self, t: usize) -> u64 {
+        assert!(t >= 1);
+        match self.shape {
+            Shape::Box => (2 * self.r as u64 * t as u64 + 1).pow(self.d as u32),
+            Shape::Star => {
+                let r = self.r as u64;
+                let rt = (r * t as u64) as i64;
+                // per-axis tally: for cost c (0..=t), how many x with
+                // ceil(|x|/r) == c ?  c=0 → 1 (x=0); c>=1 → 2r values.
+                // Count d-tuples with total cost <= t via DP.
+                let mut ways = vec![0u64; t + 1]; // ways[c] per axis
+                ways[0] = 1;
+                for c in 1..=t {
+                    ways[c] = 2 * r;
+                }
+                let _ = rt;
+                let mut acc = vec![0u64; t + 1];
+                acc[0] = 1; // empty product
+                for _ in 0..self.d {
+                    let mut next = vec![0u64; t + 1];
+                    for total in 0..=t {
+                        for c in 0..=total {
+                            next[total] += acc[total - c] * ways[c];
+                        }
+                    }
+                    acc = next;
+                }
+                acc.iter().sum()
+            }
+        }
+    }
+}
+
+impl fmt::Display for StencilPattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Dense boolean grid over a d-dim hull of side n (n odd), centered.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SupportGrid {
+    pub d: usize,
+    pub n: usize, // side length (odd)
+    pub cells: Vec<bool>,
+}
+
+impl SupportGrid {
+    pub fn zeros(d: usize, n: usize) -> SupportGrid {
+        assert!(n % 2 == 1, "hull side must be odd");
+        SupportGrid { d, n, cells: vec![false; n.pow(d as u32)] }
+    }
+
+    fn radius(&self) -> i64 {
+        ((self.n - 1) / 2) as i64
+    }
+
+    /// Linear index of a (centered) offset.
+    fn index(&self, off: &[i64]) -> Option<usize> {
+        let r = self.radius();
+        let mut idx = 0usize;
+        for &o in off {
+            if o < -r || o > r {
+                return None;
+            }
+            idx = idx * self.n + (o + r) as usize;
+        }
+        Some(idx)
+    }
+
+    /// Iterate all offsets of the hull.
+    fn offsets(&self) -> Vec<Vec<i64>> {
+        let r = self.radius();
+        let mut out = Vec::with_capacity(self.cells.len());
+        let mut cur = vec![-r; self.d];
+        loop {
+            out.push(cur.clone());
+            // odometer increment
+            let mut k = self.d;
+            loop {
+                if k == 0 {
+                    return out;
+                }
+                k -= 1;
+                if cur[k] < r {
+                    cur[k] += 1;
+                    for c in cur.iter_mut().skip(k + 1) {
+                        *c = -r;
+                    }
+                    break;
+                } else if k == 0 {
+                    return out;
+                }
+            }
+        }
+    }
+
+    pub fn fill_by<F: Fn(&[i64]) -> bool>(&mut self, f: F) {
+        for off in self.offsets() {
+            if f(&off) {
+                let i = self.index(&off).unwrap();
+                self.cells[i] = true;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.cells.iter().filter(|&&b| b).count() as u64
+    }
+
+    /// Minkowski sum with another centered support (support dilation).
+    pub fn minkowski(&self, other: &SupportGrid) -> SupportGrid {
+        assert_eq!(self.d, other.d);
+        let n_out = self.n + other.n - 1;
+        let mut out = SupportGrid::zeros(self.d, n_out);
+        let a_offs = self.offsets();
+        let b_offs = other.offsets();
+        for a in &a_offs {
+            if !self.cells[self.index(a).unwrap()] {
+                continue;
+            }
+            for b in &b_offs {
+                if !other.cells[other.index(b).unwrap()] {
+                    continue;
+                }
+                let sum: Vec<i64> = a.iter().zip(b).map(|(x, y)| x + y).collect();
+                let i = out.index(&sum).expect("sum fits enlarged hull");
+                out.cells[i] = true;
+            }
+        }
+        out
+    }
+
+    /// t-fold Minkowski power (t ≥ 1).
+    pub fn minkowski_power(&self, t: usize) -> SupportGrid {
+        assert!(t >= 1);
+        let mut acc = self.clone();
+        for _ in 1..t {
+            acc = acc.minkowski(self);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pat(shape: Shape, d: usize, r: usize) -> StencilPattern {
+        StencilPattern::new(shape, d, r).unwrap()
+    }
+
+    #[test]
+    fn k_points_box() {
+        assert_eq!(pat(Shape::Box, 2, 1).k_points(), 9);
+        assert_eq!(pat(Shape::Box, 2, 3).k_points(), 49);
+        assert_eq!(pat(Shape::Box, 2, 7).k_points(), 225);
+        assert_eq!(pat(Shape::Box, 3, 1).k_points(), 27);
+        assert_eq!(pat(Shape::Box, 3, 2).k_points(), 125);
+    }
+
+    #[test]
+    fn k_points_star() {
+        assert_eq!(pat(Shape::Star, 2, 1).k_points(), 5);
+        assert_eq!(pat(Shape::Star, 2, 3).k_points(), 13);
+        assert_eq!(pat(Shape::Star, 3, 1).k_points(), 7);
+        assert_eq!(pat(Shape::Star, 3, 2).k_points(), 13);
+    }
+
+    #[test]
+    fn support_count_matches_k() {
+        for shape in [Shape::Box, Shape::Star] {
+            for d in 1..=3 {
+                for r in 1..=3 {
+                    let p = pat(shape, d, r);
+                    assert_eq!(p.support().count(), p.k_points(), "{p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_box_closed_form() {
+        for d in 1..=3 {
+            for r in 1..=2 {
+                for t in 1..=4 {
+                    let p = pat(Shape::Box, d, r);
+                    // exact Minkowski must agree with the closed form
+                    let exact = p.support().minkowski_power(t).count();
+                    assert_eq!(p.fused_k_points(t), exact, "{p} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_star_dp_matches_generic_minkowski() {
+        // The closed-form DP count must agree with the exact iterated
+        // Minkowski sum for every small configuration.
+        for d in 1..=3 {
+            for r in 1..=2 {
+                for t in 1..=4 {
+                    let p = pat(Shape::Star, d, r);
+                    assert_eq!(
+                        p.fused_k_points(t),
+                        p.support().minkowski_power(t).count(),
+                        "{p} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_star_r1_2d_is_l1_ball() {
+        let p = pat(Shape::Star, 2, 1);
+        for t in 1..=5u64 {
+            assert_eq!(p.fused_k_points(t as usize), 2 * t * t + 2 * t + 1);
+        }
+    }
+
+    #[test]
+    fn fused_t1_is_base() {
+        for shape in [Shape::Box, Shape::Star] {
+            let p = pat(shape, 2, 2);
+            assert_eq!(p.fused_k_points(1), p.k_points());
+        }
+    }
+
+    #[test]
+    fn fused_star_3d_grows_slower_than_box() {
+        let st = pat(Shape::Star, 3, 1);
+        let bx = pat(Shape::Box, 3, 1);
+        for t in 2..=4 {
+            assert!(st.fused_k_points(t) < bx.fused_k_points(t));
+        }
+    }
+
+    #[test]
+    fn label_matches_paper_naming() {
+        assert_eq!(pat(Shape::Box, 2, 1).label(), "Box-2D1R");
+        assert_eq!(pat(Shape::Star, 3, 2).label(), "Star-3D2R");
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(StencilPattern::new(Shape::Box, 0, 1).is_err());
+        assert!(StencilPattern::new(Shape::Box, 2, 0).is_err());
+        assert!(StencilPattern::new(Shape::Box, 5, 1).is_err());
+    }
+
+    #[test]
+    fn shape_parse_roundtrip() {
+        assert_eq!(Shape::parse("box").unwrap(), Shape::Box);
+        assert_eq!(Shape::parse("STAR").unwrap(), Shape::Star);
+        assert!(Shape::parse("hex").is_err());
+    }
+}

@@ -1,0 +1,524 @@
+//! Paper-artifact generators: one function per table/figure in §5.
+//! Shared by `cargo bench` targets and `stencilctl reproduce`.
+
+use crate::engines::{self, Engine};
+use crate::hardware::Gpu;
+use crate::model::criteria;
+use crate::model::perf::{Dtype, Unit, Workload};
+use crate::model::roofline::Bound;
+use crate::model::scenario::{self, Scenario};
+use crate::model::stencil::{Shape, StencilPattern};
+use crate::sim::exec;
+use crate::sim::profiler;
+use crate::util::stats;
+use crate::util::table::{delta_pct, fnum, Table};
+
+fn pat(shape: Shape, d: usize, r: usize) -> StencilPattern {
+    StencilPattern::new(shape, d, r).unwrap()
+}
+
+fn wl(shape: Shape, d: usize, r: usize, t: usize, dt: Dtype) -> Workload {
+    Workload::new(pat(shape, d, r), t, dt)
+}
+
+/// Table 2 — analytical vs "experimental" (simulated-profiler) C/M/I.
+pub fn table2() -> Table {
+    let rows: Vec<(Engine, Workload)> = vec![
+        (engines::ebisu(), wl(Shape::Box, 2, 1, 3, Dtype::F64)),
+        (engines::ebisu(), wl(Shape::Box, 2, 3, 1, Dtype::F64)),
+        (engines::ebisu(), wl(Shape::Box, 2, 1, 7, Dtype::F32)),
+        (engines::ebisu(), wl(Shape::Box, 2, 7, 1, Dtype::F32)),
+        (engines::convstencil(), wl(Shape::Box, 2, 1, 3, Dtype::F64)),
+        (engines::convstencil(), wl(Shape::Box, 2, 3, 1, Dtype::F64)),
+        (engines::convstencil(), wl(Shape::Box, 2, 1, 7, Dtype::F32)),
+        (engines::convstencil(), wl(Shape::Box, 2, 7, 1, Dtype::F32)),
+        (engines::spider(), wl(Shape::Box, 2, 1, 7, Dtype::F32)),
+        (engines::spider(), wl(Shape::Box, 2, 7, 1, Dtype::F32)),
+    ];
+    let mut t = Table::new(
+        "Table 2 — analytical vs profiled C/M/I per output point",
+        &[
+            "#", "Baseline", "Pattern", "t", "alpha", "S", "dtype",
+            "C", "M", "I", "C_meas (Δ)", "M_meas (Δ)", "I_meas (Δ)",
+        ],
+    );
+    for (i, (e, w)) in rows.iter().enumerate() {
+        let p = profiler::profile(e, w);
+        t.row(&[
+            format!("{}", i + 1),
+            e.name.into(),
+            p.pattern.clone(),
+            format!("{}", w.t),
+            p.alpha.map(|a| format!("{a:.2}")).unwrap_or_else(|| "/".into()),
+            p.sparsity.map(|s| format!("{s:.2}")).unwrap_or_else(|| "/".into()),
+            p.dtype.into(),
+            fnum(p.c_analytical),
+            fnum(p.m_analytical),
+            fnum(p.i_analytical),
+            format!("{} ({})", fnum(p.c_measured), delta_pct(p.c_measured, p.c_analytical)),
+            format!("{} ({})", fnum(p.m_measured), delta_pct(p.m_measured, p.m_analytical)),
+            format!("{} ({})", fnum(p.i_measured), delta_pct(p.i_measured, p.i_analytical)),
+        ]);
+    }
+    t
+}
+
+/// Table 3 — the six representative cases: bottlenecks, GStencils/s,
+/// scenario classification.
+pub fn table3(gpu: &Gpu) -> Table {
+    struct Case {
+        id: &'static str,
+        w: Workload,
+        tensor: Engine,
+    }
+    let cases = vec![
+        Case { id: "1", w: wl(Shape::Box, 2, 1, 3, Dtype::F64), tensor: engines::convstencil() },
+        Case { id: "2", w: wl(Shape::Box, 2, 3, 1, Dtype::F64), tensor: engines::convstencil() },
+        Case { id: "3", w: wl(Shape::Box, 2, 1, 7, Dtype::F32), tensor: engines::spider() },
+        Case { id: "4", w: wl(Shape::Box, 2, 7, 1, Dtype::F32), tensor: engines::spider() },
+        Case { id: "5", w: wl(Shape::Box, 3, 1, 3, Dtype::F64), tensor: engines::convstencil() },
+        Case { id: "6", w: wl(Shape::Box, 3, 1, 7, Dtype::F32), tensor: engines::spider() },
+    ];
+    let mut t = Table::new(
+        "Table 3 — bottleneck transitions across representative cases",
+        &[
+            "Case", "Pattern", "t", "dtype", "Baseline", "AI", "Ridge",
+            "Bottleneck", "GStencils/s", "Change", "Scenario",
+        ],
+    );
+    for c in cases {
+        let eb = engines::ebisu();
+        let p_cu = exec::predict(&eb, &c.w, gpu).expect("ebisu supports all");
+        let p_tc = exec::predict(&c.tensor, &c.w, gpu).expect("tensor engine");
+        let cu_roof = gpu.roof(Unit::CudaCore, c.w.dtype).unwrap();
+        let tc_roof = gpu.roof(c.tensor.unit, c.w.dtype).unwrap();
+        let cmp = scenario::compare(&c.w, &cu_roof, &tc_roof, c.tensor.unit, c.tensor.scheme);
+        let ratio = p_tc.gstencils() / p_cu.gstencils();
+        let change = if (ratio - 1.0).abs() < 0.1 {
+            "≈".to_string()
+        } else if ratio > 1.0 {
+            format!("↑ {ratio:.2}x")
+        } else {
+            format!("↓ {:.1}%", (1.0 - ratio) * 100.0)
+        };
+        t.row(&[
+            c.id.into(),
+            c.w.pattern.label(),
+            format!("{}", c.w.t),
+            c.w.dtype.as_str().into(),
+            format!("{} / {}", eb.name, c.tensor.name),
+            format!("{} / {}", fnum(p_cu.intensity), fnum(p_tc.intensity)),
+            format!("{} / {}", fnum(p_cu.ridge), fnum(p_tc.ridge)),
+            format!("{} / {}", p_cu.bound.as_str(), p_tc.bound.as_str()),
+            format!("{} / {}", fnum(p_cu.gstencils()), fnum(p_tc.gstencils())),
+            change,
+            cmp.scenario.label(),
+        ]);
+    }
+    t
+}
+
+/// Table 4 — SPIDER on dense vs sparse Tensor Cores.
+pub fn table4(gpu: &Gpu) -> Table {
+    let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+    let mut t = Table::new(
+        "Table 4 — dense vs sparse Tensor Cores (Box-2D1R, t=7, float)",
+        &["Baseline", "AI", "Ridge", "Bottleneck", "GStencils/s"],
+    );
+    for e in [engines::spider_dense(), engines::spider()] {
+        let p = exec::predict(&e, &w, gpu).unwrap();
+        t.row(&[
+            e.name.into(),
+            fnum(p.intensity),
+            fnum(p.ridge),
+            p.bound.as_str().into(),
+            fnum(p.gstencils()),
+        ]);
+    }
+    t
+}
+
+/// Fig 2 — speedups of TC implementations over DRStencil on the paper's
+/// motivating configuration (Box-2D1R float, best fusion per engine).
+pub fn fig2(gpu: &Gpu) -> Table {
+    let mut tcs = engines::tcstencil();
+    tcs.half_only = false; // fp16 runs in the paper's Fig 2
+    let list: Vec<Engine> =
+        vec![engines::drstencil(), tcs, engines::convstencil(), engines::spider()];
+    let mut t = Table::new(
+        "Fig 2 — speedup over DRStencil (Box-2D1R float)",
+        &["Engine", "Unit", "best t", "GStencils/s", "Speedup"],
+    );
+    let mut base = None;
+    for e in list {
+        let (best_t, p) = (1..=e.max_t)
+            .filter_map(|tt| {
+                let w = wl(Shape::Box, 2, 1, tt, Dtype::F32);
+                exec::predict(&e, &w, gpu).ok().map(|p| (tt, p))
+            })
+            .max_by(|a, b| a.1.throughput.partial_cmp(&b.1.throughput).unwrap())
+            .expect("at least t=1");
+        let g = p.gstencils();
+        if base.is_none() {
+            base = Some(g);
+        }
+        t.row(&[
+            e.name.into(),
+            e.unit.as_str().into(),
+            format!("{best_t}"),
+            fnum(g),
+            format!("{:.2}x", g / base.unwrap()),
+        ]);
+    }
+    t
+}
+
+/// Fig 8/9 — scenario regions: sweep workloads, bucket into scenarios.
+pub fn fig8_regions(gpu: &Gpu) -> Table {
+    let mut t = Table::new(
+        "Fig 8/9 — scenario classification sweep (A100 roofs)",
+        &["Pattern", "t", "dtype", "I_CU", "I_TC", "Scenario", "TC/CU ratio", "Verdict"],
+    );
+    for dt in [Dtype::F64, Dtype::F32] {
+        for (shape, d, r) in [(Shape::Box, 2, 1), (Shape::Box, 2, 3), (Shape::Box, 3, 1), (Shape::Star, 2, 1)] {
+            for tt in [1usize, 3, 7] {
+                let w = wl(shape, d, r, tt, dt);
+                let e = if dt == Dtype::F32 { engines::spider() } else { engines::convstencil() };
+                let Ok(cu_roof) = gpu.roof(Unit::CudaCore, dt) else { continue };
+                let Ok(tc_roof) = gpu.roof(e.unit, dt) else { continue };
+                let cmp = scenario::compare(&w, &cu_roof, &tc_roof, e.unit, e.scheme);
+                t.row(&[
+                    w.pattern.label(),
+                    format!("{tt}"),
+                    dt.as_str().into(),
+                    fnum(cmp.cuda_intensity),
+                    fnum(cmp.tensor_intensity),
+                    cmp.scenario.label(),
+                    format!("{:.3}", cmp.speedup),
+                    format!("{:?}", cmp.verdict),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig 10 — problem classification: fusion depth at which each stencil
+/// config crosses the CUDA ridge (A100 float).
+pub fn fig10(gpu: &Gpu) -> Table {
+    let mut t = Table::new(
+        "Fig 10 — classification vs fusion depth (A100, float)",
+        &["Pattern", "K", "I(t=1)", "ridge", "transition t", "class at t=1..8"],
+    );
+    let roof = gpu.roof(Unit::CudaCore, Dtype::F32).unwrap();
+    for (shape, d, r) in [
+        (Shape::Star, 2, 1),
+        (Shape::Star, 2, 2),
+        (Shape::Box, 2, 1),
+        (Shape::Box, 2, 2),
+        (Shape::Star, 3, 1),
+        (Shape::Box, 3, 1),
+        (Shape::Box, 3, 2),
+    ] {
+        let classes: Vec<&str> = (1..=8)
+            .map(|tt| match roof.bound(wl(shape, d, r, tt, Dtype::F32).intensity_cuda()) {
+                Bound::Memory => "M",
+                Bound::Compute => "C",
+            })
+            .collect();
+        let transition = (1..=8)
+            .find(|&tt| {
+                roof.bound(wl(shape, d, r, tt, Dtype::F32).intensity_cuda()) == Bound::Compute
+            })
+            .map(|tt| tt.to_string())
+            .unwrap_or_else(|| ">8".into());
+        let w1 = wl(shape, d, r, 1, Dtype::F32);
+        t.row(&[
+            w1.pattern.label(),
+            format!("{}", w1.pattern.k_points()),
+            fnum(w1.intensity_cuda()),
+            fnum(roof.ridge()),
+            transition,
+            classes.join(""),
+        ]);
+    }
+    t
+}
+
+/// Fig 11 — EBISU roofline points for 2D r=1, t = 1..8 (float + double).
+pub fn fig11(gpu: &Gpu) -> Table {
+    let mut t = Table::new(
+        "Fig 11 — EBISU roofline (Box-2D1R / Star-2D1R on A100)",
+        &["Pattern", "dtype", "t", "I", "bound", "P (TFLOP/s)", "GStencils/s"],
+    );
+    let e = engines::ebisu();
+    for (shape, dt) in [
+        (Shape::Box, Dtype::F32),
+        (Shape::Box, Dtype::F64),
+        (Shape::Star, Dtype::F32),
+        (Shape::Star, Dtype::F64),
+    ] {
+        for tt in 1..=8usize {
+            let w = wl(shape, 2, 1, tt, dt);
+            let p = exec::predict(&e, &w, gpu).unwrap();
+            t.row(&[
+                w.pattern.label(),
+                dt.as_str().into(),
+                format!("{tt}"),
+                fnum(p.intensity),
+                p.bound.as_str().into(),
+                fnum(p.actual_flops / 1e12),
+                fnum(p.gstencils()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 13/14 — SpTC sweet-spot expansion sweep.
+pub fn fig13(gpu: &Gpu) -> Table {
+    let cu = gpu.roof(Unit::CudaCore, Dtype::F32).unwrap();
+    let tc = gpu.roof(Unit::TensorCore, Dtype::F32).unwrap();
+    let pts = criteria::region_sweep(
+        &pat(Shape::Box, 2, 1),
+        Dtype::F32,
+        &cu,
+        &tc,
+        crate::model::sparsity::Scheme::Decompose,
+        32,
+    );
+    let mut t = Table::new(
+        "Fig 13/14 — sweet spot: dense TC vs SpTC (Box-2D1R float)",
+        &["t", "alpha", "S", "S·P_TC/P_CU", "S·P_SpTC/P_CU", "dense?", "sparse?", "scenario"],
+    );
+    for p in pts {
+        t.row(&[
+            format!("{}", p.t),
+            format!("{:.3}", p.alpha),
+            format!("{:.3}", p.sparsity),
+            format!("{:.3}", p.threshold_dense),
+            format!("{:.3}", p.threshold_sparse),
+            if p.dense_profitable { "yes".into() } else { "no".into() },
+            if p.sparse_profitable { "yes".into() } else { "no".into() },
+            p.scenario_dense.label(),
+        ]);
+    }
+    t
+}
+
+/// Fig 15 — arithmetic intensity vs fusion depth (CUDA, double): linear
+/// fit slope must equal K/D.
+pub fn fig15() -> (Table, f64, f64) {
+    let mut t = Table::new(
+        "Fig 15 — I vs t (CUDA Cores, double)",
+        &["Pattern", "t", "I analytical", "I profiled"],
+    );
+    let e = engines::ebisu();
+    let mut ts = Vec::new();
+    let mut is_meas = Vec::new();
+    for tt in 1..=8usize {
+        let w = wl(Shape::Box, 2, 1, tt, Dtype::F64);
+        let p = profiler::profile(&e, &w);
+        ts.push(tt as f64);
+        is_meas.push(p.i_measured);
+        t.row(&[
+            w.pattern.label(),
+            format!("{tt}"),
+            fnum(p.i_analytical),
+            fnum(p.i_measured),
+        ]);
+    }
+    let (_a, slope, r2) = stats::linear_fit(&ts, &is_meas);
+    (t, slope, r2)
+}
+
+/// Fig 16 — overall comparison: best-fusion GStencils/s per engine per
+/// benchmark configuration.
+pub fn fig16(gpu: &Gpu) -> Table {
+    let mut t = Table::new(
+        "Fig 16 — overall performance (best fusion depth per engine)",
+        &["Pattern", "dtype", "cuDNN", "DRStencil", "EBISU", "ConvStencil", "SPIDER", "winner"],
+    );
+    let configs: Vec<(Shape, usize, usize)> = vec![
+        (Shape::Box, 2, 1),
+        (Shape::Box, 2, 3),
+        (Shape::Box, 2, 7),
+        (Shape::Star, 2, 1),
+        (Shape::Star, 2, 3),
+        (Shape::Star, 2, 7),
+        (Shape::Box, 3, 1),
+        (Shape::Star, 3, 1),
+    ];
+    for dt in [Dtype::F64, Dtype::F32] {
+        for &(shape, d, r) in &configs {
+            let mut cells: Vec<String> = vec![pat(shape, d, r).label(), dt.as_str().into()];
+            let mut best: (String, f64) = ("-".into(), 0.0);
+            for e in [
+                engines::cudnn(),
+                engines::drstencil(),
+                engines::ebisu(),
+                engines::convstencil(),
+                engines::spider(),
+            ] {
+                let g = (1..=e.max_t)
+                    .filter_map(|tt| exec::predict(&e, &wl(shape, d, r, tt, dt), gpu).ok())
+                    .map(|p| p.gstencils())
+                    .fold(f64::NAN, f64::max);
+                if g.is_nan() {
+                    cells.push("-".into());
+                } else {
+                    if g > best.1 {
+                        best = (e.name.to_string(), g);
+                    }
+                    cells.push(fnum(g));
+                }
+            }
+            cells.push(best.0);
+            t.row(&cells);
+        }
+    }
+    t
+}
+
+/// Scenario distribution summary used by the fig8 bench assertions.
+pub fn scenario_census(gpu: &Gpu) -> [usize; 4] {
+    let mut counts = [0usize; 4];
+    for dt in [Dtype::F32, Dtype::F64] {
+        for (shape, d, r) in [(Shape::Box, 2, 1), (Shape::Box, 2, 3), (Shape::Box, 3, 1), (Shape::Star, 2, 1)] {
+            for tt in [1usize, 3, 7] {
+                let e = if dt == Dtype::F32 { engines::spider() } else { engines::convstencil() };
+                let (Ok(cu), Ok(tc)) = (gpu.roof(Unit::CudaCore, dt), gpu.roof(e.unit, dt)) else {
+                    continue;
+                };
+                let w = wl(shape, d, r, tt, dt);
+                let cmp = scenario::compare(&w, &cu, &tc, e.unit, e.scheme);
+                let idx = match cmp.scenario {
+                    Scenario::MemToMem => 0,
+                    Scenario::MemToComp => 1,
+                    Scenario::CompToMem => 2,
+                    Scenario::CompToComp => 3,
+                };
+                counts[idx] += 1;
+            }
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_paper_rows() {
+        let t = table2();
+        assert_eq!(t.rows.len(), 10);
+        assert!(t.render().contains("EBISU"));
+        assert!(t.render().contains("SPIDER"));
+    }
+
+    #[test]
+    fn table3_reproduces_directions() {
+        let t = table3(&Gpu::a100());
+        let s = t.render();
+        assert_eq!(t.rows.len(), 6);
+        // Case 1 degrades, cases 3/4 win, cases 5/6 degrade.
+        assert!(t.rows[0][9].starts_with('↓'), "case1: {}", t.rows[0][9]);
+        assert!(t.rows[2][9].starts_with('↑'), "case3: {}", t.rows[2][9]);
+        assert!(t.rows[3][9].starts_with('↑'), "case4: {}", t.rows[3][9]);
+        assert!(t.rows[4][9].starts_with('↓'), "case5: {}", t.rows[4][9]);
+        assert!(t.rows[5][9].starts_with('↓'), "case6: {}", t.rows[5][9]);
+        assert!(s.contains("Scenario"));
+    }
+
+    #[test]
+    fn table4_sparse_wins() {
+        let t = table4(&Gpu::a100());
+        assert_eq!(t.rows.len(), 2);
+        let dense: f64 = t.rows[0][4].parse().unwrap();
+        let sparse: f64 = t.rows[1][4].parse().unwrap();
+        assert!(sparse / dense > 2.0, "sparse {sparse} vs dense {dense}");
+    }
+
+    #[test]
+    fn fig2_speedups_ordered_like_paper() {
+        // Paper Fig 2: TCStencil 1.48×, ConvStencil 2.23×, SPIDER 4.60×
+        // over DRStencil — our shape: strictly increasing, SPIDER largest.
+        let t = fig2(&Gpu::a100());
+        let get = |i: usize| -> f64 {
+            t.rows[i][4].trim_end_matches('x').parse().unwrap()
+        };
+        assert_eq!(get(0), 1.0);
+        assert!(get(3) > get(2), "SPIDER must beat ConvStencil");
+        assert!(get(2) > 1.0, "ConvStencil must beat DRStencil");
+        assert!(get(3) > 2.0, "SPIDER speedup should be large");
+    }
+
+    #[test]
+    fn fig10_3d_box_compute_bound_immediately() {
+        let t = fig10(&Gpu::a100());
+        let row = t.rows.iter().find(|r| r[0] == "Box-3D2R").unwrap();
+        assert_eq!(row[4], "1"); // compute-bound even without fusion
+        // star 2D r1 needs the deepest fusion of the set
+        let star = t.rows.iter().find(|r| r[0] == "Star-2D1R").unwrap();
+        let star_t: usize = star[4].parse().unwrap_or(99);
+        assert!(star_t >= 8, "star transitions latest: {}", star[4]);
+    }
+
+    #[test]
+    fn fig11_transition_visible() {
+        let t = fig11(&Gpu::a100());
+        // Box f32 rows: memory at t=1, compute by t=8.
+        let rows: Vec<_> = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == "Box-2D1R" && r[1] == "float")
+            .collect();
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0][4], "Memory");
+        assert_eq!(rows[7][4], "Compute");
+    }
+
+    #[test]
+    fn fig13_sptc_superset() {
+        let t = fig13(&Gpu::a100());
+        for row in &t.rows {
+            if row[5] == "yes" {
+                assert_eq!(row[6], "yes", "dense profitable must imply sparse at t={}", row[0]);
+            }
+        }
+        // and expansion exists
+        assert!(t.rows.iter().any(|r| r[5] == "no" && r[6] == "yes"));
+    }
+
+    #[test]
+    fn fig15_slope_is_k_over_d() {
+        let (_t, slope, r2) = fig15();
+        // K/D = 9/8 = 1.125; profiled slope within a few % (halo noise).
+        assert!((slope - 1.125).abs() / 1.125 < 0.1, "slope={slope}");
+        assert!(r2 > 0.99, "r2={r2}");
+    }
+
+    #[test]
+    fn fig16_sota_picks_match_paper() {
+        let t = fig16(&Gpu::a100());
+        // float rows: SPIDER should win most; double rows: EBISU or
+        // ConvStencil split by pattern.
+        let float_winners: Vec<&str> = t
+            .rows
+            .iter()
+            .filter(|r| r[1] == "float")
+            .map(|r| r[7].as_str())
+            .collect();
+        assert!(
+            float_winners.iter().filter(|w| **w == "SPIDER").count() >= float_winners.len() / 2,
+            "{float_winners:?}"
+        );
+    }
+
+    #[test]
+    fn census_covers_multiple_scenarios() {
+        let c = scenario_census(&Gpu::a100());
+        assert!(c.iter().filter(|&&n| n > 0).count() >= 3, "{c:?}");
+    }
+}

@@ -1,0 +1,239 @@
+//! PJRT executor: HLO-text → compiled executable → execution, with an
+//! executable cache so each variant compiles once per process.
+//!
+//! Follows /opt/xla-example/load_hlo: text (not serialized proto) is the
+//! interchange format; artifacts are lowered with `return_tuple=True`, so
+//! results unwrap via `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::perf::Dtype;
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// Typed host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match self {
+            TensorData::F64(v) => Ok(v),
+            _ => bail!("tensor is not f64"),
+        }
+    }
+
+    /// Lossy view as f64 for comparisons/metrics.
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            TensorData::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::F64(v) => v.clone(),
+        }
+    }
+
+    fn to_literal(&self, dims: &[usize]) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::F64(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims_i64)?)
+    }
+}
+
+/// Cumulative executor statistics (hot-path observability).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub compiles: u64,
+    pub compile_ns: u64,
+    pub executions: u64,
+    pub execute_ns: u64,
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: ExecStats,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: HashMap::new(), stats: ExecStats::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for a variant.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_ns += t0.elapsed().as_nanos() as u64;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Number of executables resident in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute a variant: x is the flattened domain field, w the flattened
+    /// (2r+1)^d weights.  Returns the output field.
+    pub fn execute(&mut self, name: &str, x: &TensorData, w: &TensorData) -> Result<TensorData> {
+        self.compile(name)?;
+        let meta = self.manifest.get(name)?.clone();
+        self.validate_inputs(&meta, x, w)?;
+        let wside = 2 * meta.r + 1;
+        let wdims = vec![wside; meta.d];
+        let x_lit = x.to_literal(&meta.grid)?;
+        let w_lit = w.to_literal(&wdims)?;
+        let exe = self.cache.get(name).expect("compiled above");
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&[x_lit, w_lit])
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True → 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        self.stats.executions += 1;
+        self.stats.execute_ns += t0.elapsed().as_nanos() as u64;
+        match meta.dtype {
+            Dtype::F32 => Ok(TensorData::F32(
+                out.to_vec::<f32>().map_err(|e| anyhow!("read f32: {e:?}"))?,
+            )),
+            Dtype::F64 => Ok(TensorData::F64(
+                out.to_vec::<f64>().map_err(|e| anyhow!("read f64: {e:?}"))?,
+            )),
+        }
+    }
+
+    fn validate_inputs(&self, meta: &ArtifactMeta, x: &TensorData, w: &TensorData) -> Result<()> {
+        let want_points = meta.points() as usize;
+        if x.len() != want_points {
+            bail!(
+                "{}: field has {} elements, artifact wants {want_points}",
+                meta.name,
+                x.len()
+            );
+        }
+        let wside = 2 * meta.r + 1;
+        let want_w = wside.pow(meta.d as u32);
+        if w.len() != want_w {
+            bail!("{}: weights have {} elements, want {want_w}", meta.name, w.len());
+        }
+        if x.dtype() != meta.dtype || w.dtype() != meta.dtype {
+            bail!(
+                "{}: dtype mismatch (artifact {:?}, field {:?}, weights {:?})",
+                meta.name,
+                meta.dtype,
+                x.dtype(),
+                w.dtype()
+            );
+        }
+        Ok(())
+    }
+
+    /// Mean execute latency in nanoseconds (0 if nothing ran yet).
+    pub fn mean_execute_ns(&self) -> f64 {
+        if self.stats.executions == 0 {
+            0.0
+        } else {
+            self.stats.execute_ns as f64 / self.stats.executions as f64
+        }
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("artifacts", &self.manifest.variants.len())
+            .field("cached", &self.cache.len())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+/// Convenience: load from the default directory.
+pub fn load_default() -> Result<Runtime> {
+    let dir = crate::runtime::manifest::default_dir();
+    Runtime::load(&dir).with_context(|| format!("loading runtime from {dir:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_data_accessors() {
+        let t = TensorData::F32(vec![1.0, 2.0]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.len(), 2);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_f64().is_err());
+        assert_eq!(t.to_f64_vec(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn f64_roundtrip_view() {
+        let t = TensorData::F64(vec![1.5, -2.5]);
+        assert_eq!(t.to_f64_vec(), vec![1.5, -2.5]);
+        assert_eq!(t.dtype(), Dtype::F64);
+    }
+
+    // Full PJRT round-trips live in rust/tests/runtime_integration.rs
+    // (they need the artifacts directory).
+}

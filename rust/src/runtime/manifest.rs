@@ -1,0 +1,237 @@
+//! artifacts/manifest.json — the contract between `python/compile/aot.py`
+//! and the rust runtime.  One entry per AOT-compiled variant.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::perf::Dtype;
+use crate::model::sparsity::Scheme;
+use crate::model::stencil::{Shape, StencilPattern};
+use crate::util::json::Json;
+
+/// Metadata of one compiled stencil executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub scheme: Scheme,
+    pub shape: Shape,
+    pub d: usize,
+    pub r: usize,
+    pub t: usize,
+    pub dtype: Dtype,
+    pub grid: Vec<usize>,
+    pub tile: Vec<usize>,
+    pub halo: usize,
+    pub k_points: u64,
+    pub k_fused: u64,
+    pub alpha: f64,
+    /// Non-zero fraction of the constructed MMA operand (None for direct).
+    pub sparsity_measured: Option<f64>,
+    pub vmem_bytes: u64,
+    pub n_outer: usize,
+}
+
+impl ArtifactMeta {
+    pub fn pattern(&self) -> Result<StencilPattern> {
+        StencilPattern::new(self.shape, self.d, self.r)
+    }
+
+    /// Number of grid points per execution.
+    pub fn points(&self) -> u64 {
+        self.grid.iter().map(|&g| g as u64).product()
+    }
+
+    /// Time steps advanced per execution.
+    pub fn steps_per_exec(&self) -> usize {
+        self.t * self.n_outer
+    }
+
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let usize_vec = |key: &str| -> Result<Vec<usize>> {
+            j.get(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("{key}: bad int")))
+                .collect()
+        };
+        let dtype = match j.get("dtype")?.as_str() {
+            Some("float32") => Dtype::F32,
+            Some("float64") => Dtype::F64,
+            other => return Err(anyhow!("bad dtype {other:?}")),
+        };
+        Ok(ArtifactMeta {
+            name: j.get("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+            file: j.get("file")?.as_str().ok_or_else(|| anyhow!("file"))?.to_string(),
+            scheme: Scheme::parse(j.get("scheme")?.as_str().unwrap_or(""))?,
+            shape: Shape::parse(j.get("shape")?.as_str().unwrap_or(""))?,
+            d: j.get("d")?.as_usize().ok_or_else(|| anyhow!("d"))?,
+            r: j.get("r")?.as_usize().ok_or_else(|| anyhow!("r"))?,
+            t: j.get("t")?.as_usize().ok_or_else(|| anyhow!("t"))?,
+            dtype,
+            grid: usize_vec("grid")?,
+            tile: usize_vec("tile")?,
+            halo: j.get("halo")?.as_usize().ok_or_else(|| anyhow!("halo"))?,
+            k_points: j.get("k_points")?.as_i64().ok_or_else(|| anyhow!("k_points"))? as u64,
+            k_fused: j.get("k_fused")?.as_i64().ok_or_else(|| anyhow!("k_fused"))? as u64,
+            alpha: j.get("alpha")?.as_f64().ok_or_else(|| anyhow!("alpha"))?,
+            sparsity_measured: match j.get("sparsity_measured")? {
+                Json::Null => None,
+                v => Some(v.as_f64().ok_or_else(|| anyhow!("sparsity_measured"))?),
+            },
+            vmem_bytes: j.get("vmem_bytes")?.as_i64().unwrap_or(0) as u64,
+            n_outer: j.get("n_outer")?.as_usize().unwrap_or(1),
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let variants = j
+            .get("variants")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("variants not an array"))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?}"))
+    }
+
+    /// Find the best-matching artifact for a request.
+    pub fn find(
+        &self,
+        scheme: Scheme,
+        shape: Shape,
+        d: usize,
+        r: usize,
+        t: usize,
+        dtype: Dtype,
+    ) -> Option<&ArtifactMeta> {
+        self.variants.iter().find(|v| {
+            v.scheme == scheme
+                && v.shape == shape
+                && v.d == d
+                && v.r == r
+                && v.t == t
+                && v.dtype == dtype
+                && v.n_outer == 1
+        })
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+/// Default artifact directory: $TC_STENCIL_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("TC_STENCIL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "jax_version": "0.8.2",
+      "variants": [
+        {
+          "name": "direct_box2d_r1_t3_f32_g64x64",
+          "file": "direct_box2d_r1_t3_f32_g64x64.hlo.txt",
+          "scheme": "direct", "shape": "box", "d": 2, "r": 1, "t": 3,
+          "dtype": "float32", "grid": [64, 64], "tile": [32, 32],
+          "halo": 3, "k_points": 9, "k_fused": 49, "alpha": 1.8148,
+          "sparsity_measured": null, "vmem_bytes": 17328,
+          "dtype_bytes": 4, "weights_shape": [3, 3], "n_outer": 1
+        },
+        {
+          "name": "decompose_box2d_r1_t7_f32_g64x64",
+          "file": "decompose_box2d_r1_t7_f32_g64x64.hlo.txt",
+          "scheme": "decompose", "shape": "box", "d": 2, "r": 1, "t": 7,
+          "dtype": "float32", "grid": [64, 64], "tile": [32, 32],
+          "halo": 7, "k_points": 9, "k_fused": 225, "alpha": 3.5714,
+          "sparsity_measured": 0.5, "vmem_bytes": 60000,
+          "dtype_bytes": 4, "weights_shape": [3, 3], "n_outer": 1
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        let v = m.get("direct_box2d_r1_t3_f32_g64x64").unwrap();
+        assert_eq!(v.scheme, Scheme::Direct);
+        assert_eq!(v.dtype, Dtype::F32);
+        assert_eq!(v.grid, vec![64, 64]);
+        assert_eq!(v.points(), 4096);
+        assert_eq!(v.steps_per_exec(), 3);
+        assert!(v.sparsity_measured.is_none());
+    }
+
+    #[test]
+    fn null_vs_value_sparsity() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let v = m.get("decompose_box2d_r1_t7_f32_g64x64").unwrap();
+        assert_eq!(v.sparsity_measured, Some(0.5));
+    }
+
+    #[test]
+    fn find_matches_key_fields() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m
+            .find(Scheme::Decompose, Shape::Box, 2, 1, 7, Dtype::F32)
+            .is_some());
+        assert!(m.find(Scheme::Decompose, Shape::Box, 2, 1, 5, Dtype::F32).is_none());
+        assert!(m.find(Scheme::Flatten, Shape::Box, 2, 1, 7, Dtype::F32).is_none());
+    }
+
+    #[test]
+    fn missing_name_errors() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "{\"variants\": [{}]}").is_err());
+    }
+
+    #[test]
+    fn hlo_path_joins_dir() {
+        let m = Manifest::parse(Path::new("/art"), SAMPLE).unwrap();
+        let v = m.get("direct_box2d_r1_t3_f32_g64x64").unwrap();
+        assert_eq!(
+            m.hlo_path(v),
+            PathBuf::from("/art/direct_box2d_r1_t3_f32_g64x64.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client from the rust hot path.  Python never runs here.
+
+pub mod manifest;
+pub mod executor;
+
+pub use executor::{Runtime, TensorData};
+pub use manifest::{ArtifactMeta, Manifest};

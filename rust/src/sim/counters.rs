@@ -1,0 +1,225 @@
+//! Executed-operation and memory-traffic counters (the "achieved work /
+//! achieved traffic" ncu reports, §5.2).
+//!
+//! The analytical model (Eq. 6–12) deliberately omits two implementation
+//! realities the profiler sees (§5.2.4):
+//!
+//! * **C inflation** — thread blocks recompute their halo: temporally
+//!   fused kernels walk a trapezoid (step s computes a region enlarged by
+//!   2r(t−s)), and blocks additionally compute a spatial halo ring of
+//!   width ~r to avoid divergent edges.  Both are exact geometry given
+//!   the engine's GPU tile side.
+//! * **M deflation** — the L2 cache serves most halo re-reads and filters
+//!   a small fraction of compulsory traffic, so DRAM traffic lands
+//!   slightly *below* 2D bytes/point (or above, when halo spill exceeds
+//!   the filter — ConvStencil at deep fusion, Table 2 row 7).
+
+use crate::model::perf::Workload;
+use crate::sim::cache::L2Model;
+
+/// GPU-schedule parameters of an engine implementation.
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    /// Effective thread-block tile side on the GPU (per dimension).
+    pub tile_side: usize,
+    /// Spatial halo-compute width factor (×r): blocks compute this ring.
+    pub halo_compute: f64,
+    /// L2 behaviour for this engine's access pattern.
+    pub l2: L2Model,
+}
+
+impl Schedule {
+    /// CUDA-Core temporal-blocking engines (EBISU/DRStencil family).
+    pub fn cuda_core() -> Schedule {
+        Schedule {
+            tile_side: 224,
+            halo_compute: 1.0,
+            l2: L2Model { halo_hit_rate: 0.95, compulsory_filter: 0.005 },
+        }
+    }
+
+    /// Dense-TC engines (ConvStencil family): im2col gathers spill more.
+    pub fn tensor_core() -> Schedule {
+        Schedule {
+            tile_side: 224,
+            halo_compute: 0.6,
+            l2: L2Model { halo_hit_rate: 0.60, compulsory_filter: 0.005 },
+        }
+    }
+
+    /// SpTC engines (SPIDER family): compressed operands, tight traffic.
+    pub fn sparse_tensor_core() -> Schedule {
+        Schedule {
+            tile_side: 512,
+            halo_compute: 0.0,
+            l2: L2Model { halo_hit_rate: 0.97, compulsory_filter: 0.012 },
+        }
+    }
+}
+
+/// Counted (measured) per-point metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct Counted {
+    /// Executed FLOPs per output point (incl. halo recompute).
+    pub c: f64,
+    /// DRAM bytes per output point (after L2 filtering).
+    pub m: f64,
+}
+
+impl Counted {
+    pub fn intensity(&self) -> f64 {
+        self.c / self.m
+    }
+}
+
+/// Exact trapezoid + spatial-halo compute inflation factor (≥ 1).
+///
+/// Step s ∈ 1..=t of an in-block fused kernel computes a region of side
+/// T + 2r(t−s) + 2·hc·r; the factor is the total over t steps relative to
+/// the ideal t·T^d.
+pub fn compute_inflation(w: &Workload, sched: &Schedule) -> f64 {
+    let t = w.t as f64;
+    let r = w.pattern.r as f64;
+    let d = w.pattern.d as i32;
+    let side = sched.tile_side as f64;
+    let mut total = 0.0;
+    for s in 1..=w.t {
+        let grown = side + 2.0 * r * (w.t - s) as f64 + 2.0 * sched.halo_compute * r;
+        total += grown.powi(d);
+    }
+    total / (t * side.powi(d))
+}
+
+/// Fraction of extra (halo) reads relative to compulsory reads.
+pub fn halo_read_fraction(w: &Workload, sched: &Schedule) -> f64 {
+    let rt = (w.pattern.r * w.t) as f64;
+    let side = sched.tile_side as f64;
+    let d = w.pattern.d as i32;
+    ((side + 2.0 * rt).powi(d) - side.powi(d)) / side.powi(d)
+}
+
+/// Measured C per point: analytical C × geometric inflation.
+pub fn measured_c(w: &Workload, c_analytical: f64, sched: &Schedule) -> f64 {
+    c_analytical * compute_inflation(w, sched)
+}
+
+/// Measured M per point: compulsory 2D bytes, + the halo re-reads the L2
+/// fails to serve, − the compulsory traffic it filters.
+pub fn measured_m(w: &Workload, sched: &Schedule) -> f64 {
+    let d_bytes = w.dtype.bytes() as f64;
+    let compulsory = 2.0 * d_bytes;
+    let halo_reads = d_bytes * halo_read_fraction(w, sched);
+    let spill = halo_reads * (1.0 - sched.l2.halo_hit_rate);
+    let filtered = compulsory * sched.l2.compulsory_filter;
+    compulsory + spill - filtered
+}
+
+/// Full counted metrics for a workload on an engine schedule, given the
+/// engine's analytical C (CUDA: t·2K; TC: (α/S)·t·2K).
+pub fn count(w: &Workload, c_analytical: f64, sched: &Schedule) -> Counted {
+    Counted { c: measured_c(w, c_analytical, sched), m: measured_m(w, sched) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::perf::{Dtype, Workload};
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn wl(r: usize, t: usize, dt: Dtype) -> Workload {
+        Workload::new(StencilPattern::new(Shape::Box, 2, r).unwrap(), t, dt)
+    }
+
+    #[test]
+    fn inflation_is_at_least_one_and_shrinks_with_tile() {
+        let w = wl(1, 3, Dtype::F64);
+        let small = Schedule { tile_side: 64, ..Schedule::cuda_core() };
+        let big = Schedule { tile_side: 512, ..Schedule::cuda_core() };
+        assert!(compute_inflation(&w, &small) > compute_inflation(&w, &big));
+        assert!(compute_inflation(&w, &big) > 1.0);
+    }
+
+    #[test]
+    fn table2_row1_c_delta_shape() {
+        // EBISU Box-2D1R t=3 double: paper ΔC = +3.30%.
+        let w = wl(1, 3, Dtype::F64);
+        let c = measured_c(&w, w.c_cuda(), &Schedule::cuda_core());
+        let delta = (c - 54.0) / 54.0;
+        assert!((0.02..0.05).contains(&delta), "ΔC={delta}");
+    }
+
+    #[test]
+    fn table2_row3_c_delta_shape() {
+        // EBISU Box-2D1R t=7 float: paper ΔC = +9.01%.
+        let w = wl(1, 7, Dtype::F32);
+        let c = measured_c(&w, w.c_cuda(), &Schedule::cuda_core());
+        let delta = (c - 126.0) / 126.0;
+        assert!((0.06..0.12).contains(&delta), "ΔC={delta}");
+    }
+
+    #[test]
+    fn table2_row4_c_delta_shape() {
+        // EBISU Box-2D7R t=1 float: paper ΔC = +7.61% (pure spatial halo).
+        let w = wl(7, 1, Dtype::F32);
+        let c = measured_c(&w, w.c_cuda(), &Schedule::cuda_core());
+        let delta = (c - 450.0) / 450.0;
+        assert!((0.04..0.16).contains(&delta), "ΔC={delta}");
+    }
+
+    #[test]
+    fn table2_m_deltas_small_and_signed() {
+        // EBISU rows: M lands slightly BELOW analytical (−0.3…−1.1%).
+        let sched = Schedule::cuda_core();
+        for (r, t, dt, m_a) in [
+            (1usize, 3usize, Dtype::F64, 16.0),
+            (3, 1, Dtype::F64, 16.0),
+            (1, 7, Dtype::F32, 8.0),
+            (7, 1, Dtype::F32, 8.0),
+        ] {
+            let m = measured_m(&wl(r, t, dt), &sched);
+            let delta = (m - m_a) / m_a;
+            assert!((-0.02..0.0).contains(&delta), "r={r} t={t} ΔM={delta}");
+        }
+    }
+
+    #[test]
+    fn convstencil_deep_fusion_m_exceeds_analytical() {
+        // Table 2 row 7: ConvStencil t=7 float ΔM = +3.36% — halo spill
+        // beats the L2 filter for the im2col access pattern.
+        let w = wl(1, 7, Dtype::F32);
+        let m = measured_m(&w, &Schedule::tensor_core());
+        let delta = (m - 8.0) / 8.0;
+        assert!((0.005..0.06).contains(&delta), "ΔM={delta}");
+    }
+
+    #[test]
+    fn spider_m_below_analytical() {
+        // Table 2 row 9: SPIDER ΔM = −1.35%.
+        let w = wl(1, 7, Dtype::F32);
+        let m = measured_m(&w, &Schedule::sparse_tensor_core());
+        let delta = (m - 8.0) / 8.0;
+        assert!((-0.02..0.0).contains(&delta), "ΔM={delta}");
+    }
+
+    #[test]
+    fn spider_c_counts_exactly() {
+        // Table 2 row 9: SPIDER ΔC = 0.00% — no halo recompute.
+        let w = wl(1, 7, Dtype::F32);
+        let sched = Schedule::sparse_tensor_core();
+        // trapezoid vanishes: SPIDER issues ONE fused kernel (t steps in
+        // one monolithic GEMM), so s runs 1..=1 at full depth... model it
+        // as t=1 at the fused radius: feed c analytical directly.
+        let c_a = w.alpha() / 0.46875 * w.c_cuda();
+        let mono = Workload::new(w.pattern, 1, w.dtype);
+        let c = measured_c(&mono, c_a, &sched);
+        assert!((c - c_a) / c_a < 0.001, "ΔC={}", (c - c_a) / c_a);
+    }
+
+    #[test]
+    fn counted_intensity_consistent() {
+        let w = wl(1, 3, Dtype::F64);
+        let got = count(&w, w.c_cuda(), &Schedule::cuda_core());
+        assert!((got.intensity() - got.c / got.m).abs() < 1e-12);
+        assert!(got.intensity() > w.intensity_cuda()); // C up, M down
+    }
+}

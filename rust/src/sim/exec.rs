@@ -1,0 +1,221 @@
+//! Throughput/time prediction: the calibrated roofline executor.
+//!
+//! For an (engine, workload, GPU) triple this computes the paper's model
+//! quantities end to end: intensities with the engine's S, the bound on
+//! its unit, the raw and actual rooflines (Eq. 8/12/20) and a predicted
+//! stencil throughput  η × P_actual / 2K  in point-updates/s, plus wall
+//! time for a given domain.  This is the quantity Tables 3/4 and Figs.
+//! 2/11/16 report (GStencils/s).
+
+use anyhow::Result;
+
+use crate::engines::Engine;
+use crate::hardware::Gpu;
+use crate::model::perf::{Unit, Workload};
+use crate::model::roofline::{Bound, Roof};
+
+/// A full prediction record.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub engine: &'static str,
+    pub unit: Unit,
+    /// Arithmetic intensity on the engine's unit (with its S).
+    pub intensity: f64,
+    /// Ridge point of the engine's roof.
+    pub ridge: f64,
+    pub bound: Bound,
+    /// Raw roofline FLOP/s (counting redundant ops).
+    pub raw_flops: f64,
+    /// Actual useful FLOP/s (Eq. 12 normalization).
+    pub actual_flops: f64,
+    /// Predicted stencil throughput in point-updates/s (× η).
+    pub throughput: f64,
+}
+
+impl Prediction {
+    pub fn gstencils(&self) -> f64 {
+        self.throughput / 1e9
+    }
+}
+
+/// Engine-aware intensity: I = t·(α/S)·K/D with the ENGINE's S (paper S
+/// constants override the operand-derived value when provided).
+pub fn engine_intensity(e: &Engine, w: &Workload) -> f64 {
+    match e.unit {
+        Unit::CudaCore => w.intensity_cuda(),
+        _ => w.t as f64 * w.alpha() / e.sparsity(w) * w.k() / w.dtype.bytes() as f64,
+    }
+}
+
+/// Predict throughput of `engine` on `workload` on `gpu`.
+pub fn predict(e: &Engine, w: &Workload, gpu: &Gpu) -> Result<Prediction> {
+    anyhow::ensure!(e.supports(w), "{} does not support {}", e.name, w.pattern.label());
+    let roof: Roof = gpu.roof(e.unit, w.dtype)?;
+    let i = engine_intensity(e, w);
+    let bound = roof.bound(i);
+    let raw = roof.attainable(i);
+    let inflation = match e.unit {
+        Unit::CudaCore => 1.0,
+        _ => w.alpha() / e.sparsity(w),
+    };
+    let actual = raw / inflation;
+    let eta = match bound {
+        Bound::Memory => e.eta_mem,
+        Bound::Compute => e.eta_comp,
+    };
+    let throughput = eta * actual / (2.0 * w.k());
+    Ok(Prediction {
+        engine: e.name,
+        unit: e.unit,
+        intensity: i,
+        ridge: roof.ridge(),
+        bound,
+        raw_flops: raw,
+        actual_flops: actual,
+        throughput,
+    })
+}
+
+/// Ideal-model prediction (η = 1): the pure Eq. 12/20 value, used when
+/// validating the analytical criteria rather than implementations.
+pub fn predict_ideal(e: &Engine, w: &Workload, gpu: &Gpu) -> Result<Prediction> {
+    let mut p = predict(e, w, gpu)?;
+    let eta = match p.bound {
+        Bound::Memory => e.eta_mem,
+        Bound::Compute => e.eta_comp,
+    };
+    p.throughput /= eta;
+    Ok(p)
+}
+
+/// Wall-clock seconds to advance `points` grid points by `steps` time
+/// steps at the predicted throughput (steps need not be a multiple of t —
+/// the final partial fused launch still pays full time per launch).
+pub fn wall_time(p: &Prediction, points: u64, steps: usize, t: usize) -> f64 {
+    let launches = steps.div_ceil(t) as f64;
+    launches * t as f64 * points as f64 / p.throughput
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn wl(shape: Shape, d: usize, r: usize, t: usize, dt: Dtype) -> Workload {
+        Workload::new(StencilPattern::new(shape, d, r).unwrap(), t, dt)
+    }
+
+    #[test]
+    fn table3_case1_shape() {
+        // EBISU 260.9 vs ConvStencil 190.14 (↓, scenario 2).
+        let gpu = Gpu::a100();
+        let w = wl(Shape::Box, 2, 1, 3, Dtype::F64);
+        let eb = predict(&engines::ebisu(), &w, &gpu).unwrap();
+        let cv = predict(&engines::convstencil(), &w, &gpu).unwrap();
+        assert_eq!(eb.bound, Bound::Memory);
+        assert_eq!(cv.bound, Bound::Compute);
+        assert!((eb.gstencils() - 260.9).abs() / 260.9 < 0.02, "{}", eb.gstencils());
+        assert!((cv.gstencils() - 190.1).abs() / 190.1 < 0.02, "{}", cv.gstencils());
+        assert!(cv.gstencils() < eb.gstencils());
+    }
+
+    #[test]
+    fn table3_case2_shape() {
+        // Box-2D3R t=1 double: 64.05 vs 63.33 — comparable (≈).
+        let gpu = Gpu::a100();
+        let w = wl(Shape::Box, 2, 3, 1, Dtype::F64);
+        let eb = predict(&engines::ebisu(), &w, &gpu).unwrap();
+        let cv = predict(&engines::convstencil(), &w, &gpu).unwrap();
+        assert!((eb.gstencils() - 64.05).abs() / 64.05 < 0.02, "{}", eb.gstencils());
+        let ratio = cv.gstencils() / eb.gstencils();
+        assert!((ratio - 1.0).abs() < 0.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn table3_case3_shape() {
+        // Box-2D1R t=7 float: EBISU compute-bound vs SPIDER memory-bound;
+        // SPIDER ~1003 GSt/s and a clear win.
+        let gpu = Gpu::a100();
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+        let eb = predict(&engines::ebisu(), &w, &gpu).unwrap();
+        let sp = predict(&engines::spider(), &w, &gpu).unwrap();
+        assert_eq!(eb.bound, Bound::Compute);
+        assert_eq!(sp.bound, Bound::Memory);
+        assert!((sp.gstencils() - 1002.9).abs() / 1002.9 < 0.02, "{}", sp.gstencils());
+        assert!(sp.gstencils() / eb.gstencils() > 1.2, "must clearly win");
+    }
+
+    #[test]
+    fn table3_case5_and_6_degrade() {
+        let gpu = Gpu::a100();
+        // Case 5: Box-3D1R t=3 double.
+        let w5 = wl(Shape::Box, 3, 1, 3, Dtype::F64);
+        let eb = predict(&engines::ebisu(), &w5, &gpu).unwrap();
+        let cv = predict(&engines::convstencil(), &w5, &gpu).unwrap();
+        assert!(cv.gstencils() < eb.gstencils(), "case5 must degrade");
+        // Case 6: Box-3D1R t=7 float on SPIDER: compute-bound both.
+        let w6 = wl(Shape::Box, 3, 1, 7, Dtype::F32);
+        let eb6 = predict(&engines::ebisu(), &w6, &gpu).unwrap();
+        let sp6 = predict(&engines::spider(), &w6, &gpu).unwrap();
+        assert_eq!(sp6.bound, Bound::Compute);
+        assert!(sp6.gstencils() < eb6.gstencils(), "case6 must degrade");
+    }
+
+    #[test]
+    fn table4_dense_vs_sparse() {
+        // SPIDER-Dense 327.39 (compute) vs SPIDER-Sparse 1002.94 (memory):
+        // 3.06× speedup from the 2:4 path.
+        let gpu = Gpu::a100();
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F32);
+        let dense = predict(&engines::spider_dense(), &w, &gpu).unwrap();
+        let sparse = predict(&engines::spider(), &w, &gpu).unwrap();
+        assert_eq!(dense.bound, Bound::Compute);
+        assert_eq!(sparse.bound, Bound::Memory);
+        let speedup = sparse.gstencils() / dense.gstencils();
+        assert!((2.0..4.5).contains(&speedup), "speedup={speedup}");
+        assert!((dense.ridge - 80.6).abs() < 1.0);
+        assert!((sparse.ridge - 161.2).abs() < 1.0);
+    }
+
+    #[test]
+    fn unsupported_workload_errors() {
+        let gpu = Gpu::a100();
+        let w = wl(Shape::Box, 2, 1, 7, Dtype::F64);
+        assert!(predict(&engines::spider(), &w, &gpu).is_err()); // f64 on SPIDER
+        assert!(predict(&engines::cudnn(), &wl(Shape::Box, 2, 1, 2, Dtype::F32), &gpu).is_err());
+    }
+
+    #[test]
+    fn ideal_prediction_removes_eta() {
+        let gpu = Gpu::a100();
+        let w = wl(Shape::Box, 2, 1, 3, Dtype::F64);
+        let p = predict(&engines::ebisu(), &w, &gpu).unwrap();
+        let pi = predict_ideal(&engines::ebisu(), &w, &gpu).unwrap();
+        assert!((pi.throughput * engines::ebisu().eta_mem - p.throughput).abs() < 1.0);
+    }
+
+    #[test]
+    fn wall_time_rounds_up_launches() {
+        let p = Prediction {
+            engine: "x",
+            unit: Unit::CudaCore,
+            intensity: 1.0,
+            ridge: 1.0,
+            bound: Bound::Memory,
+            raw_flops: 1.0,
+            actual_flops: 1.0,
+            throughput: 1e9,
+        };
+        // 10 steps at t=4 → 3 launches → 12 step-equivalents.
+        let secs = wall_time(&p, 1_000_000, 10, 4);
+        assert!((secs - 12.0 * 1e6 / 1e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn v100_has_no_tensor_path() {
+        let w = wl(Shape::Box, 2, 1, 3, Dtype::F32);
+        assert!(predict(&engines::convstencil(), &w, &Gpu::v100()).is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! Rust-native scalar stencil oracle.
+//!
+//! Mirrors python/compile/kernels/ref.py exactly (zero Dirichlet halo;
+//! sequential vs fused semantics) so integration tests can check the PJRT
+//! artifacts against an implementation with no shared code or runtime.
+
+/// A dense d-dimensional field (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field {
+    pub dims: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Field {
+    pub fn zeros(dims: &[usize]) -> Field {
+        Field { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f64>) -> Field {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Field { dims: dims.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    /// Value at a (possibly out-of-domain) signed index — zero halo.
+    fn at_or_zero(&self, idx: &[i64]) -> f64 {
+        let mut flat = 0usize;
+        for (k, (&i, &n)) in idx.iter().zip(&self.dims).enumerate() {
+            if i < 0 || i >= n as i64 {
+                return 0.0;
+            }
+            flat += i as usize * self.strides()[k];
+        }
+        self.data[flat]
+    }
+
+    pub fn max_abs_diff(&self, other: &Field) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Weight kernel over a (2r+1)^d hull (row-major, zeros off-support).
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub d: usize,
+    pub side: usize, // 2r+1 (odd)
+    pub data: Vec<f64>,
+}
+
+impl Weights {
+    pub fn new(d: usize, side: usize, data: Vec<f64>) -> Weights {
+        assert!(side % 2 == 1);
+        assert_eq!(data.len(), side.pow(d as u32));
+        Weights { d, side, data }
+    }
+
+    pub fn r(&self) -> usize {
+        (self.side - 1) / 2
+    }
+
+    fn offsets(&self) -> Vec<(Vec<i64>, f64)> {
+        let r = self.r() as i64;
+        let mut out = Vec::new();
+        let n = self.side;
+        for (flat, &w) in self.data.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let mut idx = Vec::with_capacity(self.d);
+            let mut rem = flat;
+            for k in (0..self.d).rev() {
+                idx.push((rem % n) as i64 - r);
+                rem /= n;
+                let _ = k;
+            }
+            idx.reverse();
+            out.push((idx, w));
+        }
+        out
+    }
+
+    /// Full nd self-convolution t-fold — the monolithic fused kernel.
+    pub fn fuse(&self, t: usize) -> Weights {
+        assert!(t >= 1);
+        let mut acc = self.clone();
+        for _ in 1..t {
+            acc = acc.convolve(self);
+        }
+        acc
+    }
+
+    fn convolve(&self, other: &Weights) -> Weights {
+        assert_eq!(self.d, other.d);
+        let side = self.side + other.side - 1;
+        let r_out = (side - 1) as i64 / 2;
+        let mut out = Weights::new(self.d, side, vec![0.0; side.pow(self.d as u32)]);
+        let strides = {
+            let mut s = vec![1usize; self.d];
+            for i in (0..self.d.saturating_sub(1)).rev() {
+                s[i] = s[i + 1] * side;
+            }
+            s
+        };
+        for (a_off, a_w) in self.offsets() {
+            for (b_off, b_w) in other.offsets() {
+                let mut flat = 0usize;
+                for k in 0..self.d {
+                    flat += (a_off[k] + b_off[k] + r_out) as usize * strides[k];
+                }
+                out.data[flat] += a_w * b_w;
+            }
+        }
+        out
+    }
+}
+
+/// One stencil application with zero halo.
+pub fn apply_once(x: &Field, w: &Weights) -> Field {
+    assert_eq!(x.dims.len(), w.d);
+    let mut out = Field::zeros(&x.dims);
+    let offsets = w.offsets();
+    let dims = x.dims.clone();
+    let mut idx = vec![0i64; w.d];
+    for flat in 0..out.len() {
+        // decompose flat -> idx
+        let mut rem = flat;
+        for k in (0..w.d).rev() {
+            idx[k] = (rem % dims[k]) as i64;
+            rem /= dims[k];
+        }
+        let mut acc = 0.0;
+        let mut nb = vec![0i64; w.d];
+        for (off, wv) in &offsets {
+            for k in 0..w.d {
+                nb[k] = idx[k] + off[k];
+            }
+            acc += wv * x.at_or_zero(&nb);
+        }
+        out.data[flat] = acc;
+    }
+    out
+}
+
+/// t sequential steps (CUDA-Core semantics).
+pub fn apply_steps(x: &Field, w: &Weights, t: usize) -> Field {
+    let mut cur = x.clone();
+    for _ in 0..t {
+        cur = apply_once(&cur, w);
+    }
+    cur
+}
+
+/// One application of the fused kernel (Tensor-Core semantics).
+pub fn apply_fused(x: &Field, w: &Weights, t: usize) -> Field {
+    apply_once(x, &w.fuse(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn identity3(d: usize) -> Weights {
+        let side = 3usize;
+        let mut data = vec![0.0; side.pow(d as u32)];
+        let center = data.len() / 2;
+        data[center] = 1.0;
+        Weights::new(d, side, data)
+    }
+
+    fn box_avg(d: usize, r: usize) -> Weights {
+        let side = 2 * r + 1;
+        let n = side.pow(d as u32);
+        Weights::new(d, side, vec![1.0 / n as f64; n])
+    }
+
+    fn rand_field(rng: &mut Rng, dims: &[usize]) -> Field {
+        Field::from_vec(dims, (0..dims.iter().product()).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn identity_kernel_preserves_field() {
+        let mut rng = Rng::new(1);
+        let x = rand_field(&mut rng, &[6, 6]);
+        let y = apply_once(&x, &identity3(2));
+        assert!(x.max_abs_diff(&y) < 1e-15);
+    }
+
+    #[test]
+    fn constant_field_interior_average() {
+        let x = Field::from_vec(&[8, 8], vec![1.0; 64]);
+        let y = apply_once(&x, &box_avg(2, 1));
+        // interior cells: average of nine 1s = 1
+        assert!((y.data[3 * 8 + 3] - 1.0).abs() < 1e-12);
+        // corner sees 5 zero-halo neighbours: 4/9
+        assert!((y.data[0] - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fused_equals_sequential_in_interior() {
+        let mut rng = Rng::new(7);
+        let x = rand_field(&mut rng, &[16, 16]);
+        let w = box_avg(2, 1);
+        let t = 3;
+        let seq = apply_steps(&x, &w, t);
+        let fus = apply_fused(&x, &w, t);
+        // interior (≥ rt from edges) must match exactly
+        for i in 3..13usize {
+            for j in 3..13usize {
+                let a = seq.data[i * 16 + j];
+                let b = fus.data[i * 16 + j];
+                assert!((a - b).abs() < 1e-12, "({i},{j}): {a} vs {b}");
+            }
+        }
+        // and boundaries genuinely differ (the ref.py semantics note)
+        assert!(seq.max_abs_diff(&fus) > 1e-9);
+    }
+
+    #[test]
+    fn fuse_support_size_box() {
+        let w = box_avg(2, 1);
+        let wf = w.fuse(3);
+        assert_eq!(wf.side, 7);
+        assert_eq!(wf.offsets().len(), 49);
+    }
+
+    #[test]
+    fn fuse_mass_preserved() {
+        let w = box_avg(3, 1);
+        let wf = w.fuse(2);
+        let sum: f64 = wf.data.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn works_in_3d() {
+        let mut rng = Rng::new(3);
+        let x = rand_field(&mut rng, &[6, 6, 6]);
+        let y = apply_once(&x, &identity3(3));
+        assert!(x.max_abs_diff(&y) < 1e-15);
+        let z = apply_steps(&x, &box_avg(3, 1), 2);
+        assert_eq!(z.dims, vec![6, 6, 6]);
+    }
+
+    #[test]
+    fn shift_kernel_moves_mass() {
+        // weight at offset (-1, 0): out[i][j] = x[i-1][j]... careful:
+        // out[i] = sum w[off]·x[i+off]; off=(-1,0) reads the row above.
+        let mut data = vec![0.0; 9];
+        data[1] = 1.0; // hull index (0,1) → offset (-1,0)
+        let w = Weights::new(2, 3, data);
+        let mut x = Field::zeros(&[4, 4]);
+        x.data[1 * 4 + 2] = 5.0;
+        let y = apply_once(&x, &w);
+        assert_eq!(y.data[2 * 4 + 2], 5.0); // moved DOWN one row
+        assert_eq!(y.data.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+}

@@ -1,0 +1,18 @@
+//! The execution "testbed" standing in for the paper's A100 (DESIGN.md §2).
+//!
+//! * [`counters`] — executed-FLOP / DRAM-traffic counting over the real
+//!   GPU tiling schedule (temporal-trapezoid recompute + spatial halo);
+//!   reproduces the systematic C/M deviations of Table 2 (§5.2.4).
+//! * [`cache`]    — L2 filter: parametric model + a small set-associative
+//!   LRU simulator used to justify the parameters (ablation (c)).
+//! * [`exec`]     — throughput/time prediction: calibrated roofline
+//!   (η × min(ℙ, 𝔹·I)) per engine × workload × GPU.
+//! * [`profiler`] — ncu facade: "achieved work/traffic" reports.
+//! * [`golden`]   — rust-native scalar stencil oracle for integration
+//!   tests against the PJRT artifacts.
+
+pub mod counters;
+pub mod cache;
+pub mod exec;
+pub mod profiler;
+pub mod golden;

@@ -1,0 +1,191 @@
+//! Criterion-style micro-bench harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that builds a
+//! [`Bench`] and calls [`Bench::run`]: warmup, then timed iterations until
+//! a wall-clock budget or max-iteration cap, reporting mean/p50/p95 and
+//! derived throughput.  Output is stable plain text so EXPERIMENTS.md can
+//! quote it directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark sample set.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    /// items/second derived from mean latency.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / (self.mean_ns * 1e-9))
+    }
+
+    pub fn render(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.3} Gitems/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.3} Mitems/s", t / 1e6),
+            Some(t) => format!("  {t:8.1} items/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            tp
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// A named group of benchmarks sharing a config.
+pub struct Bench {
+    pub cfg: BenchConfig,
+    pub results: Vec<Measurement>,
+    group: String,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        // Keep CI fast when BENCH_FAST is set (used by `make test`).
+        let cfg = if std::env::var("BENCH_FAST").is_ok() {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                budget: Duration::from_millis(200),
+                min_iters: 3,
+                max_iters: 200,
+            }
+        } else {
+            BenchConfig::default()
+        };
+        println!("\n### bench group: {group}");
+        Bench { cfg, results: Vec::new(), group: group.to_string() }
+    }
+
+    /// Time `f`, which performs one iteration per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        self.run_items(name, None, f)
+    }
+
+    /// Time `f` and report items/sec using `items` per iteration.
+    pub fn run_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        mut f: F,
+    ) -> &Measurement {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.cfg.warmup {
+            f();
+        }
+        // Timed samples.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.cfg.budget || samples_ns.len() < self.cfg.min_iters)
+            && samples_ns.len() < self.cfg.max_iters
+        {
+            let it = Instant::now();
+            f();
+            samples_ns.push(it.elapsed().as_nanos() as f64);
+        }
+        let m = Measurement {
+            name: format!("{}/{}", self.group, name),
+            iters: samples_ns.len(),
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            stddev_ns: stats::stddev(&samples_ns),
+            items_per_iter: items,
+        };
+        println!("{}", m.render());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new("unit");
+        let mut acc = 0u64;
+        let m = b
+            .run("spin", || {
+                for i in 0..1000 {
+                    acc = acc.wrapping_add(i);
+                }
+                std::hint::black_box(acc);
+            })
+            .clone();
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9, // 1 second
+            p50_ns: 1e9,
+            p95_ns: 1e9,
+            stddev_ns: 0.0,
+            items_per_iter: Some(500.0),
+        };
+        assert!((m.throughput().unwrap() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.500 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,169 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands; generates usage text from the declared options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declared option (for usage text + validation).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line: options + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args against a spec list.  Unknown `--options` error out.
+    pub fn parse(raw: &[String], specs: &[OptSpec]) -> Result<Args> {
+        let mut out = Args::default();
+        for s in specs {
+            if let (true, Some(d)) = (s.takes_value, s.default) {
+                out.opts.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow!("unknown option --{name}\n{}", usage(specs)))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("--{name} requires a value"))?
+                        }
+                    };
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        bail!("flag --{name} does not take a value");
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+}
+
+/// Render usage text from option specs.
+pub fn usage(specs: &[OptSpec]) -> String {
+    let mut s = String::from("options:\n");
+    for o in specs {
+        let val = if o.takes_value { " <value>" } else { "" };
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\t{}{def}\n", o.name, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "depth", help: "fusion depth", takes_value: true, default: Some("1") },
+            OptSpec { name: "verbose", help: "chatty", takes_value: false, default: None },
+            OptSpec { name: "gpu", help: "hardware", takes_value: true, default: None },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&sv(&["--depth", "3", "--gpu=a100"]), &specs()).unwrap();
+        assert_eq!(a.get("depth"), Some("3"));
+        assert_eq!(a.get("gpu"), Some("a100"));
+    }
+
+    #[test]
+    fn default_applies_when_absent() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get("depth"), Some("1"));
+        assert_eq!(a.get("gpu"), None);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(&sv(&["run", "--verbose", "x.hlo"]), &specs()).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "x.hlo"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["--bogus"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--depth"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&sv(&["--depth", "7"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("depth").unwrap(), Some(7));
+        let bad = Args::parse(&sv(&["--depth", "x"]), &specs()).unwrap();
+        assert!(bad.get_usize("depth").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_all() {
+        let u = usage(&specs());
+        assert!(u.contains("--depth") && u.contains("--verbose") && u.contains("--gpu"));
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch substrates.
+//!
+//! The build environment is fully offline and vendors only `xla` + `anyhow`
+//! (see DESIGN.md §3), so the pieces a crates.io project would pull in —
+//! JSON, CLI parsing, table rendering, RNG, property testing, a bench
+//! harness — are implemented (and unit-tested) here.
+
+pub mod json;
+pub mod cli;
+pub mod table;
+pub mod rng;
+pub mod prop;
+pub mod bench;
+pub mod stats;

@@ -1,0 +1,177 @@
+//! Integration: tiled halo-exchange scheduling over the PJRT runtime
+//! reproduces the golden oracle on arbitrary (non-divisible) domains.
+
+use tc_stencil::coordinator::planner;
+use tc_stencil::coordinator::scheduler::{run, Job};
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::Dtype;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::runtime::{manifest, Runtime};
+use tc_stencil::sim::golden;
+use tc_stencil::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::load(&manifest::default_dir())
+        .expect("artifacts/ missing — run `make artifacts` first")
+}
+
+fn box_weights(d: usize, r: usize) -> Vec<f64> {
+    let p = StencilPattern::new(Shape::Box, d, r).unwrap();
+    let sup = p.support();
+    let k = sup.count() as f64;
+    sup.cells.iter().map(|&b| if b { 1.0 / k } else { 0.0 }).collect()
+}
+
+fn golden_launches(domain: &[usize], field: &[f64], w: &[f64], r: usize, spe: usize, launches: usize) -> golden::Field {
+    let gw = golden::Weights::new(domain.len(), 2 * r + 1, w.to_vec());
+    let mut cur = golden::Field::from_vec(domain, field.to_vec());
+    for _ in 0..launches {
+        cur = golden::apply_fused(&cur, &gw, spe);
+    }
+    cur
+}
+
+#[test]
+fn tiled_2d_run_matches_golden_on_odd_domain() {
+    let mut rt = runtime();
+    // 100×76 is not a multiple of the 64² artifact payload — exercises
+    // truncated tiles and zero-fill at the boundary.
+    let domain = vec![100usize, 76];
+    let n: usize = domain.iter().product();
+    let mut rng = Rng::new(0xBEEF);
+    let init: Vec<f64> = (0..n).map(|_| rng.normal() as f32 as f64).collect();
+    let weights = box_weights(2, 1);
+    let artifact = "decompose_box2d_r1_t3_f32_g64x64";
+    let mut field = init.clone();
+    let job = Job {
+        artifact: artifact.into(),
+        domain: domain.clone(),
+        steps: 6, // two launches of t=3
+        weights: weights.clone(),
+        threads: 2,
+    };
+    let metrics = run(&mut rt, &job, &mut field).unwrap();
+    assert_eq!(metrics.steps, 6);
+    let want = golden_launches(&domain, &init, &weights, 1, 3, 2);
+    let got = golden::Field::from_vec(&domain, field);
+    let err = got.max_abs_diff(&want);
+    assert!(err < 5e-4, "tiled vs golden: max|Δ|={err:.3e}");
+}
+
+#[test]
+fn tiled_3d_run_matches_golden() {
+    let mut rt = runtime();
+    let domain = vec![20usize, 18, 22];
+    let n: usize = domain.iter().product();
+    let mut rng = Rng::new(0xCAFE);
+    let init: Vec<f64> = (0..n).map(|_| rng.normal() as f32 as f64).collect();
+    let weights = box_weights(3, 1);
+    let mut field = init.clone();
+    let job = Job {
+        artifact: "direct_box3d_r1_t1_f32_g16x16x16".into(),
+        domain: domain.clone(),
+        steps: 2,
+        weights: weights.clone(),
+        threads: 4,
+    };
+    run(&mut rt, &job, &mut field).unwrap();
+    let want = golden_launches(&domain, &init, &weights, 1, 1, 2);
+    let got = golden::Field::from_vec(&domain, field);
+    let err = got.max_abs_diff(&want);
+    assert!(err < 5e-4, "3d tiled vs golden: max|Δ|={err:.3e}");
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    let mut rt = runtime();
+    let domain = vec![90usize, 90];
+    let n: usize = domain.iter().product();
+    let mut rng = Rng::new(1);
+    let init: Vec<f64> = (0..n).map(|_| rng.normal() as f32 as f64).collect();
+    let weights = box_weights(2, 1);
+    let mut results = Vec::new();
+    for threads in [1usize, 3, 8] {
+        let mut field = init.clone();
+        let job = Job {
+            artifact: "direct_box2d_r1_t2_f32_g64x64".into(),
+            domain: domain.clone(),
+            steps: 4,
+            weights: weights.clone(),
+            threads,
+        };
+        run(&mut rt, &job, &mut field).unwrap();
+        results.push(field);
+    }
+    assert_eq!(results[0], results[1]);
+    assert_eq!(results[0], results[2]);
+}
+
+#[test]
+fn rejects_step_mismatch_and_bad_field() {
+    let mut rt = runtime();
+    let weights = box_weights(2, 1);
+    let mut field = vec![0.0; 64 * 64];
+    let mut job = Job {
+        artifact: "direct_box2d_r1_t3_f32_g64x64".into(),
+        domain: vec![64, 64],
+        steps: 4, // not a multiple of 3
+        weights: weights.clone(),
+        threads: 1,
+    };
+    assert!(run(&mut rt, &job, &mut field).is_err());
+    job.steps = 3;
+    let mut short = vec![0.0; 10];
+    assert!(run(&mut rt, &job, &mut short).is_err());
+}
+
+#[test]
+fn planner_artifact_mode_yields_runnable_plan() {
+    let rt = runtime();
+    let req = planner::Request {
+        pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+        dtype: Dtype::F32,
+        steps: 8,
+        gpu: Gpu::a100(),
+        require_artifact: true,
+        max_t: 8,
+    };
+    let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
+    let name = plan.chosen.artifact.expect("artifact-constrained plan");
+    // the chosen artifact must exist and match the request
+    let meta = rt.manifest.get(&name).unwrap();
+    assert_eq!(meta.shape, Shape::Box);
+    assert_eq!(meta.d, 2);
+    assert_eq!(meta.r, 1);
+    assert_eq!(meta.dtype, Dtype::F32);
+    assert_eq!(meta.t, plan.chosen.t);
+}
+
+#[test]
+fn end_to_end_plan_then_run() {
+    let mut rt = runtime();
+    let req = planner::Request {
+        pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+        dtype: Dtype::F32,
+        steps: 8,
+        gpu: Gpu::a100(),
+        require_artifact: true,
+        max_t: 4,
+    };
+    let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
+    let artifact = plan.chosen.artifact.unwrap();
+    let meta = rt.manifest.get(&artifact).unwrap().clone();
+    let spe = meta.steps_per_exec();
+    let steps = 8usize.div_ceil(spe) * spe;
+    let domain = vec![80usize, 80];
+    let n: usize = domain.iter().product();
+    let mut rng = Rng::new(3);
+    let init: Vec<f64> = (0..n).map(|_| rng.normal() as f32 as f64).collect();
+    let weights = box_weights(2, 1);
+    let mut field = init.clone();
+    let job = Job { artifact, domain: domain.clone(), steps, weights: weights.clone(), threads: 2 };
+    let metrics = run(&mut rt, &job, &mut field).unwrap();
+    assert!(metrics.throughput() > 0.0);
+    let want = golden_launches(&domain, &init, &weights, 1, spe, steps / spe);
+    let got = golden::Field::from_vec(&domain, field);
+    assert!(got.max_abs_diff(&want) < 1e-3);
+}

@@ -1,0 +1,214 @@
+//! Cross-module validation: the paper's quantitative claims checked
+//! end-to-end through the public API (model + hardware + engines + sim).
+
+use tc_stencil::engines;
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::{Dtype, Unit, Workload};
+use tc_stencil::model::roofline::Bound;
+use tc_stencil::model::scenario::{compare, Scenario};
+use tc_stencil::model::sparsity::Scheme;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::sim::exec;
+use tc_stencil::util::prop::{forall, Config};
+
+fn wl(shape: Shape, d: usize, r: usize, t: usize, dt: Dtype) -> Workload {
+    Workload::new(StencilPattern::new(shape, d, r).unwrap(), t, dt)
+}
+
+#[test]
+fn paper_abstract_speedups_fig2_shape() {
+    // Fig 2: TCStencil 1.48×, ConvStencil 2.23×, SPIDER 4.60× over
+    // DRStencil.  Our calibrated simulator must keep the ORDER and the
+    // rough magnitudes (>1, increasing, SPIDER > 2×).
+    let gpu = Gpu::a100();
+    let w = |t| wl(Shape::Box, 2, 1, t, Dtype::F32);
+    let dr = (1..=4)
+        .map(|t| exec::predict(&engines::drstencil(), &w(t), &gpu).unwrap().gstencils())
+        .fold(f64::NAN, f64::max);
+    let cv = (1..=8)
+        .map(|t| exec::predict(&engines::convstencil(), &w(t), &gpu).unwrap().gstencils())
+        .fold(f64::NAN, f64::max);
+    let sp = (1..=8)
+        .map(|t| exec::predict(&engines::spider(), &w(t), &gpu).unwrap().gstencils())
+        .fold(f64::NAN, f64::max);
+    assert!(cv / dr > 1.0, "ConvStencil {cv} vs DRStencil {dr}");
+    assert!(sp / cv > 1.0, "SPIDER {sp} vs ConvStencil {cv}");
+    assert!(sp / dr > 2.0, "SPIDER speedup {}", sp / dr);
+}
+
+#[test]
+fn fig10_transition_depths() {
+    // §4.2: "box stencils transition at t=3, star at t=5" (locked clock).
+    let gpu = Gpu::a100().locked(engines::calib::PROFILING_CLOCK_LOCK);
+    let roof = gpu.roof(Unit::CudaCore, Dtype::F32).unwrap();
+    let first_compute = |shape: Shape, d: usize, r: usize| -> usize {
+        (1..=16)
+            .find(|&t| roof.bound(wl(shape, d, r, t, Dtype::F32).intensity_cuda()) == Bound::Compute)
+            .unwrap_or(99)
+    };
+    let box_t = first_compute(Shape::Box, 2, 1);
+    let star_t = first_compute(Shape::Star, 2, 1);
+    assert!((3..=5).contains(&box_t), "box transition t={box_t}");
+    assert!((6..=8).contains(&star_t), "star transition t={star_t}");
+    assert!(star_t > box_t, "star transitions later (lower intensity)");
+    // Box-3D2R is compute-bound even without fusion (paper §4.2).
+    assert_eq!(first_compute(Shape::Box, 3, 2), 1);
+}
+
+#[test]
+fn clock_lock_shifts_transitions_earlier() {
+    // §5.2: locked clocks lower the ceiling → transitions at shallower t.
+    let free = Gpu::a100();
+    let locked = Gpu::a100().locked(0.7);
+    let t_free = (1..=16)
+        .find(|&t| {
+            free.roof(Unit::CudaCore, Dtype::F32)
+                .unwrap()
+                .bound(wl(Shape::Star, 2, 1, t, Dtype::F32).intensity_cuda())
+                == Bound::Compute
+        })
+        .unwrap();
+    let t_locked = (1..=16)
+        .find(|&t| {
+            locked
+                .roof(Unit::CudaCore, Dtype::F32)
+                .unwrap()
+                .bound(wl(Shape::Star, 2, 1, t, Dtype::F32).intensity_cuda())
+                == Bound::Compute
+        })
+        .unwrap();
+    assert!(t_locked <= t_free, "locked {t_locked} vs free {t_free}");
+}
+
+#[test]
+fn scenario1_exact_equivalence_property() {
+    // Eq. 14 as a property: whenever BOTH units are memory-bound the
+    // actual-performance ratio is exactly 1, for any workload/S.
+    let gpu = Gpu::a100();
+    forall(
+        Config { cases: 200, ..Default::default() },
+        |rng| {
+            let shape = if rng.f64() < 0.5 { Shape::Box } else { Shape::Star };
+            let d = rng.range_usize(1, 3);
+            let r = rng.range_usize(1, 3);
+            let t = rng.range_usize(1, 8);
+            (shape, d, r, t)
+        },
+        |&(shape, d, r, t)| {
+            let w = wl(shape, d, r, t, Dtype::F64);
+            let cu = gpu.roof(Unit::CudaCore, Dtype::F64).map_err(|e| e.to_string())?;
+            let tc = gpu.roof(Unit::TensorCore, Dtype::F64).map_err(|e| e.to_string())?;
+            let cmp = compare(&w, &cu, &tc, Unit::TensorCore, Scheme::Decompose);
+            if cmp.scenario == Scenario::MemToMem && (cmp.speedup - 1.0).abs() > 1e-9 {
+                return Err(format!("ratio {} != 1", cmp.speedup));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn scenario2_strictly_loses_property() {
+    // Eq. 16 as a property: MB→CB always degrades.
+    let gpu = Gpu::a100();
+    forall(
+        Config { cases: 200, seed: 99, ..Default::default() },
+        |rng| {
+            let r = rng.range_usize(1, 4);
+            let t = rng.range_usize(1, 8);
+            let dt = if rng.f64() < 0.5 { Dtype::F32 } else { Dtype::F64 };
+            (r, t, dt)
+        },
+        |&(r, t, dt)| {
+            let w = wl(Shape::Box, 2, r, t, dt);
+            let cu = gpu.roof(Unit::CudaCore, dt).map_err(|e| e.to_string())?;
+            let tc = gpu.roof(Unit::TensorCore, dt).map_err(|e| e.to_string())?;
+            for scheme in [Scheme::Flatten, Scheme::Decompose] {
+                let cmp = compare(&w, &cu, &tc, Unit::TensorCore, scheme);
+                if cmp.scenario == Scenario::MemToComp && cmp.speedup >= 1.0 {
+                    return Err(format!("scenario2 ratio {} >= 1", cmp.speedup));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn scenario3_breaks_cuda_ceiling_property() {
+    // Eq. 17: CB→MB exceeds the CUDA compute ceiling.
+    let gpu = Gpu::a100();
+    let cu = gpu.roof(Unit::CudaCore, Dtype::F32).unwrap();
+    let sptc = gpu.roof(Unit::SparseTensorCore, Dtype::F32).unwrap();
+    let mut found = 0;
+    for r in 1..=7usize {
+        for t in 1..=8usize {
+            let w = wl(Shape::Box, 2, r, t, Dtype::F32);
+            let cmp = compare(&w, &cu, &sptc, Unit::SparseTensorCore, Scheme::Sparse24);
+            if cmp.scenario == Scenario::CompToMem {
+                found += 1;
+                assert!(
+                    cmp.tensor_perf_actual > cu.peak_flops * 0.999,
+                    "r={r} t={t}: actual {} must exceed CUDA peak {}",
+                    cmp.tensor_perf_actual,
+                    cu.peak_flops
+                );
+            }
+        }
+    }
+    assert!(found > 0, "the sweep must contain scenario-3 cases");
+}
+
+#[test]
+fn eq19_boundary_is_sharp() {
+    // Walk t upward in scenario 4 and check profitability flips exactly
+    // when α crosses S·P_TC/P_CU.
+    let gpu = Gpu::a100();
+    let cu = gpu.roof(Unit::CudaCore, Dtype::F64).unwrap();
+    let tc = gpu.roof(Unit::TensorCore, Dtype::F64).unwrap();
+    let p = StencilPattern::new(Shape::Box, 2, 3).unwrap();
+    for t in 1..=8usize {
+        let w = Workload::new(p, t, Dtype::F64);
+        let cmp = compare(&w, &cu, &tc, Unit::TensorCore, Scheme::Flatten);
+        if cmp.scenario != Scenario::CompToComp {
+            continue;
+        }
+        let s = w.sparsity(Scheme::Flatten);
+        let threshold = s * tc.peak_flops / cu.peak_flops;
+        let profitable = cmp.speedup > 1.0;
+        assert_eq!(
+            profitable,
+            w.alpha() < threshold,
+            "t={t}: α={} thr={threshold} ratio={}",
+            w.alpha(),
+            cmp.speedup
+        );
+    }
+}
+
+#[test]
+fn engine_predictions_monotone_in_bandwidth() {
+    // Sanity: a memory-bound workload speeds up with a faster-HBM GPU.
+    let w = wl(Shape::Box, 2, 1, 1, Dtype::F32);
+    let a100 = exec::predict(&engines::ebisu(), &w, &Gpu::a100()).unwrap();
+    let h100 = exec::predict(&engines::ebisu(), &w, &Gpu::h100()).unwrap();
+    assert_eq!(a100.bound, Bound::Memory);
+    assert!(h100.throughput > a100.throughput);
+}
+
+#[test]
+fn star_exact_alpha_differs_from_box_closed_form() {
+    // Using Eq. 10 for stars would misclassify: check the exact Minkowski
+    // count diverges from the box formula (ablation (b) motivation).
+    let star = StencilPattern::new(Shape::Star, 2, 1).unwrap();
+    for t in 2..=6usize {
+        let exact = star.fused_k_points(t) as f64 / (t as f64 * star.k_points() as f64);
+        let box_formula = ((2 * t + 1) * (2 * t + 1)) as f64 / (t as f64 * 5.0);
+        assert!(
+            (box_formula - exact) / exact > 0.5,
+            "t={t}: box formula {box_formula} vs exact {exact}"
+        );
+    }
+}

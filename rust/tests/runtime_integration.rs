@@ -1,0 +1,207 @@
+//! Integration: every AOT artifact executes on PJRT-CPU and matches the
+//! rust-native golden oracle (no shared code with the Python build path).
+//!
+//! Requires `make artifacts` to have produced ./artifacts.
+
+use tc_stencil::model::perf::Dtype;
+use tc_stencil::model::sparsity::Scheme;
+use tc_stencil::runtime::{manifest, Runtime, TensorData};
+use tc_stencil::sim::golden;
+use tc_stencil::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    let dir = manifest::default_dir();
+    Runtime::load(&dir).expect(
+        "artifacts/ missing or unreadable — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn random_field(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Normalized box/star weights over the artifact's hull.
+fn pattern_weights(meta: &tc_stencil::runtime::ArtifactMeta) -> Vec<f64> {
+    let p = meta.pattern().unwrap();
+    let sup = p.support();
+    let k = sup.count() as f64;
+    sup.cells.iter().map(|&b| if b { 1.0 / k } else { 0.0 }).collect()
+}
+
+fn to_tensor(dtype: Dtype, v: &[f64]) -> TensorData {
+    match dtype {
+        Dtype::F32 => TensorData::F32(v.iter().map(|&x| x as f32).collect()),
+        Dtype::F64 => TensorData::F64(v.to_vec()),
+    }
+}
+
+fn tol(dtype: Dtype, t: usize) -> f64 {
+    match dtype {
+        Dtype::F32 => 5e-5 * t as f64,
+        Dtype::F64 => 1e-10 * t as f64,
+    }
+}
+
+#[test]
+fn platform_is_cpu_pjrt() {
+    let rt = runtime();
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    assert!(rt.manifest.variants.len() >= 20, "expected the full AOT matrix");
+}
+
+#[test]
+fn every_artifact_matches_golden_oracle() {
+    let mut rt = runtime();
+    let metas = rt.manifest.variants.clone();
+    let mut rng = Rng::new(0xA100);
+    let mut checked = 0;
+    for meta in &metas {
+        let n = meta.points() as usize;
+        let field = random_field(&mut rng, n);
+        let weights = pattern_weights(meta);
+        let x = to_tensor(meta.dtype, &field);
+        let w = to_tensor(meta.dtype, &weights);
+        let out = rt
+            .execute(&meta.name, &x, &w)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", meta.name));
+        let gw = golden::Weights::new(meta.d, 2 * meta.r + 1, weights.clone());
+        let gf = golden::Field::from_vec(&meta.grid, field.clone());
+        // Account for the f32 round-trip of the inputs.
+        let gf = match meta.dtype {
+            Dtype::F32 => golden::Field::from_vec(
+                &meta.grid,
+                field.iter().map(|&v| v as f32 as f64).collect(),
+            ),
+            Dtype::F64 => gf,
+        };
+        let want = match meta.scheme {
+            // direct kernels do t sequential masked steps, n_outer times
+            Scheme::Direct => {
+                let mut cur = gf;
+                for _ in 0..meta.n_outer {
+                    cur = golden::apply_steps(&cur, &gw, meta.t);
+                }
+                cur
+            }
+            // monolithic schemes apply the fused kernel once per launch
+            _ => golden::apply_fused(&gf, &gw, meta.t),
+        };
+        let got = golden::Field::from_vec(&meta.grid, out.to_f64_vec());
+        let err = got.max_abs_diff(&want);
+        assert!(
+            err < tol(meta.dtype, meta.t * meta.n_outer),
+            "{}: max|Δ|={err:.3e}",
+            meta.name
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, metas.len());
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let mut rt = runtime();
+    let meta = rt.manifest.variants[0].clone();
+    let n = meta.points() as usize;
+    let mut rng = Rng::new(7);
+    let field = random_field(&mut rng, n);
+    let weights = pattern_weights(&meta);
+    let x = to_tensor(meta.dtype, &field);
+    let w = to_tensor(meta.dtype, &weights);
+    rt.execute(&meta.name, &x, &w).unwrap();
+    let compiles_after_first = rt.stats.compiles;
+    for _ in 0..3 {
+        rt.execute(&meta.name, &x, &w).unwrap();
+    }
+    assert_eq!(rt.stats.compiles, compiles_after_first, "cache must prevent recompiles");
+    assert_eq!(rt.stats.executions, 4);
+    assert_eq!(rt.cached(), 1);
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let mut rt = runtime();
+    let meta = rt.manifest.variants[0].clone();
+    let weights = pattern_weights(&meta);
+    let w = to_tensor(meta.dtype, &weights);
+    // wrong field size
+    let bad_x = to_tensor(meta.dtype, &vec![0.0; 10]);
+    assert!(rt.execute(&meta.name, &bad_x, &w).is_err());
+    // wrong weights size
+    let x = to_tensor(meta.dtype, &vec![0.0; meta.points() as usize]);
+    let bad_w = to_tensor(meta.dtype, &vec![0.0; 2]);
+    assert!(rt.execute(&meta.name, &x, &bad_w).is_err());
+    // wrong dtype
+    let flip = match meta.dtype {
+        Dtype::F32 => TensorData::F64(vec![0.0; meta.points() as usize]),
+        Dtype::F64 => TensorData::F32(vec![0.0; meta.points() as usize]),
+    };
+    assert!(rt.execute(&meta.name, &flip, &w).is_err());
+}
+
+#[test]
+fn unknown_artifact_errors() {
+    let mut rt = runtime();
+    let x = TensorData::F32(vec![0.0; 4]);
+    assert!(rt.execute("no_such_variant", &x, &x).is_err());
+}
+
+#[test]
+fn chain_artifact_equals_repeated_launches() {
+    let mut rt = runtime();
+    let Some(chain) = rt
+        .manifest
+        .variants
+        .iter()
+        .find(|v| v.n_outer > 1)
+        .cloned()
+    else {
+        panic!("manifest must carry a chain variant (ablation d)");
+    };
+    let single = rt
+        .manifest
+        .find(chain.scheme, chain.shape, chain.d, chain.r, chain.t, chain.dtype)
+        .expect("matching single-step artifact")
+        .clone();
+    let n = chain.points() as usize;
+    let mut rng = Rng::new(42);
+    let field = random_field(&mut rng, n);
+    let weights = pattern_weights(&chain);
+    let x = to_tensor(chain.dtype, &field);
+    let w = to_tensor(chain.dtype, &weights);
+    let fused = rt.execute(&chain.name, &x, &w).unwrap().to_f64_vec();
+    // n_outer sequential launches of the single-step artifact
+    let mut cur = x.clone();
+    for _ in 0..chain.n_outer {
+        cur = rt.execute(&single.name, &cur, &w).unwrap();
+    }
+    let stepped = cur.to_f64_vec();
+    let max_err = fused
+        .iter()
+        .zip(&stepped)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(max_err < 1e-4, "chain vs launches: max|Δ|={max_err:.3e}");
+}
+
+#[test]
+fn weights_are_truly_dynamic() {
+    // The paper requires runtime kernel values (§5.1); two different
+    // weight sets through the same executable must give different results.
+    let mut rt = runtime();
+    let meta = rt
+        .manifest
+        .find(Scheme::Direct, tc_stencil::Shape::Box, 2, 1, 1, Dtype::F32)
+        .unwrap()
+        .clone();
+    let n = meta.points() as usize;
+    let mut rng = Rng::new(9);
+    let field = random_field(&mut rng, n);
+    let x = to_tensor(meta.dtype, &field);
+    let w1 = pattern_weights(&meta);
+    let mut w2 = w1.clone();
+    w2[4] *= 2.0; // perturb the center weight
+    let y1 = rt.execute(&meta.name, &x, &to_tensor(meta.dtype, &w1)).unwrap();
+    let y2 = rt.execute(&meta.name, &x, &to_tensor(meta.dtype, &w2)).unwrap();
+    assert_ne!(y1.to_f64_vec(), y2.to_f64_vec());
+}
