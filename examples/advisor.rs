@@ -10,6 +10,7 @@
 
 use anyhow::Result;
 
+use tc_stencil::backend::BackendKind;
 use tc_stencil::coordinator::planner::{plan, Request};
 use tc_stencil::hardware::Gpu;
 use tc_stencil::model::perf::Dtype;
@@ -38,7 +39,7 @@ fn main() -> Result<()> {
                     dtype,
                     steps: 64,
                     gpu: gpu.clone(),
-                    require_artifact: false,
+                    backend: BackendKind::Auto,
                     max_t: 8,
                 };
                 let Ok(p) = plan(&req, None) else {

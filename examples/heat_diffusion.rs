@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use tc_stencil::backend::BackendKind;
 use tc_stencil::coordinator::planner::{plan, Request};
 use tc_stencil::coordinator::scheduler::{run, Job};
 use tc_stencil::hardware::Gpu;
@@ -77,7 +78,7 @@ fn main() -> Result<()> {
         dtype: Dtype::F32,
         steps: STEPS,
         gpu: Gpu::a100(),
-        require_artifact: true,
+        backend: BackendKind::Pjrt,
         max_t: 8,
     };
     let decision = plan(&req, Some(&rt.manifest))?;

@@ -1,0 +1,98 @@
+"""Deterministic fallback for the tiny hypothesis API subset the tests use.
+
+Offline environments may lack the `hypothesis` package; rather than
+skipping whole modules, conftest installs this stub into sys.modules.
+`@given` then runs each test over `max_examples` cases drawn from a
+seeded PRNG (seeded per test name, so failures replay exactly).
+
+Covered API: `given` (positional + keyword strategies), `settings`
+(max_examples, deadline), `strategies.integers`, `strategies.sampled_from`.
+"""
+
+
+import random
+import types
+
+__all__ = ["install_if_missing"]
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(items):
+    seq = list(items)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kwargs):
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        conf = getattr(fn, "_fallback_settings", {"max_examples": _DEFAULT_EXAMPLES})
+
+        # NOTE: no functools.wraps here — it would set __wrapped__ and
+        # pytest would then introspect the original signature and demand
+        # fixtures named after the strategy parameters.
+        def wrapper(*outer_args, **outer_kwargs):
+            rng = random.Random(fn.__qualname__)
+            for _ in range(conf["max_examples"]):
+                pos = tuple(s.example(rng) for s in arg_strategies)
+                kws = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*outer_args, *pos, **kws, **outer_kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def install_if_missing():
+    """Register the stub as `hypothesis` unless the real one imports."""
+    import sys
+
+    try:
+        import hypothesis  # noqa: F401
+
+        return False
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.sampled_from = sampled_from
+    strategies.booleans = booleans
+    strategies.floats = floats
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+    return True

@@ -3,6 +3,13 @@ import sys
 
 # `pytest python/tests` from the repo root or `pytest tests` from python/.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+# Offline environments may lack hypothesis; install the deterministic
+# fallback before any test module imports it.
+import _hypothesis_fallback
+
+_hypothesis_fallback.install_if_missing()
 
 import jax
 

@@ -5,6 +5,7 @@
 //!   (d) rust-driven launch loop vs in-graph lax.scan chain (real timing)
 //!   (e) gather worker threads 1 vs 4 (real timing)
 
+use tc_stencil::backend::BackendKind;
 use tc_stencil::coordinator::planner::{plan, Request};
 use tc_stencil::coordinator::scheduler::{run, Job};
 use tc_stencil::engines;
@@ -33,7 +34,7 @@ fn ablation_a_planner_vs_fixed_t() {
         dtype: Dtype::F32,
         steps: 64,
         gpu: gpu.clone(),
-        require_artifact: false,
+        backend: BackendKind::Auto,
         max_t: 8,
     };
     let p = plan(&req, None).unwrap();

@@ -1,0 +1,96 @@
+//! Native-backend throughput (GStencils/s) vs the golden per-point
+//! oracle on the paper's workhorse shapes: heat-3d (Star-3D1R) and
+//! star-2d (Star-2D1R).  Reports the speedup of the tiled halo-split
+//! engine over the scalar oracle path — the ISSUE acceptance bar is
+//! ≥ 10× — plus the fused-t variants the oracle cannot amortize.
+//!
+//! Run with: `cargo bench --bench native_backend` (BENCH_FAST=1 for CI).
+
+use tc_stencil::backend::{self, Backend, NativeBackend};
+use tc_stencil::model::perf::Dtype;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::sim::golden;
+use tc_stencil::util::bench::Bench;
+use tc_stencil::util::rng::Rng;
+
+fn star_weights(d: usize) -> Vec<f64> {
+    // Explicit FTCS heat step: centre 1−2dκ, axis neighbours κ.
+    let kappa = 0.1;
+    let p = StencilPattern::new(Shape::Star, d, 1).unwrap();
+    let sup = p.support();
+    let side = 3usize;
+    let centre = side.pow(d as u32) / 2;
+    sup.cells
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            if i == centre {
+                1.0 - 2.0 * d as f64 * kappa
+            } else if b {
+                kappa
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut b = Bench::new("native_backend");
+    let shapes: [(&str, usize, Vec<usize>, usize); 2] = [
+        ("star2d/384x384", 2, vec![384, 384], 4),
+        ("heat3d/48x48x48", 3, vec![48, 48, 48], 2),
+    ];
+    for (label, d, domain, steps) in shapes {
+        let n: usize = domain.iter().product();
+        let mut rng = Rng::new(0x57A7);
+        let init: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let weights = star_weights(d);
+        let items = (n * steps) as f64;
+
+        // 1. Golden per-point oracle (the pre-backend fallback path).
+        let gw = golden::Weights::new(d, 3, weights.clone());
+        let mut gf = golden::Field::from_vec(&domain, init.clone());
+        let oracle = b
+            .run_items(&format!("{label}/oracle"), Some(items), || {
+                gf = golden::apply_steps(&gf, &gw, steps);
+            })
+            .throughput()
+            .unwrap();
+
+        // 2. Native backend, sequential semantics (t=1), same job.
+        let mut job = backend::Job {
+            pattern: StencilPattern::new(Shape::Star, d, 1).unwrap(),
+            dtype: Dtype::F64,
+            domain: domain.clone(),
+            steps,
+            t: 1,
+            weights: weights.clone(),
+            threads,
+        };
+        let mut be = NativeBackend::new();
+        let mut field = init.clone();
+        let native = b
+            .run_items(&format!("{label}/native_t1_{threads}thr"), Some(items), || {
+                be.advance(&job, &mut field).unwrap();
+            })
+            .throughput()
+            .unwrap();
+
+        // 3. Fused launches (t = steps): one kernel pass per launch.
+        job.t = steps;
+        let mut fused_field = init.clone();
+        b.run_items(&format!("{label}/native_fused_t{steps}"), Some(items), || {
+            be.advance(&job, &mut fused_field).unwrap();
+        });
+
+        println!(
+            ">>> {label}: native {:.1} MSt/s vs oracle {:.1} MSt/s -> {:.1}x speedup{}",
+            native / 1e6,
+            oracle / 1e6,
+            native / oracle,
+            if native / oracle >= 10.0 { " (meets >=10x bar)" } else { "" }
+        );
+    }
+}

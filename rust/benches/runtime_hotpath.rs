@@ -4,6 +4,7 @@
 
 use std::path::Path;
 
+use tc_stencil::backend::BackendKind;
 use tc_stencil::coordinator::grid::Tiling;
 use tc_stencil::coordinator::planner::{plan, Request};
 use tc_stencil::coordinator::scheduler::{run, Job};
@@ -68,7 +69,7 @@ fn main() {
         dtype: Dtype::F32,
         steps: 64,
         gpu: Gpu::a100(),
-        require_artifact: true,
+        backend: BackendKind::Pjrt,
         max_t: 8,
     };
     b.run("planner_plan", || {

@@ -1,0 +1,232 @@
+//! The unified execution layer: one [`Backend`] trait between the planner
+//! and every substrate that can actually advance a stencil field.
+//!
+//! The paper's planner (§4) decides *where* a stencil should run; this
+//! module decides *how* it runs once decided.  Two backends exist:
+//!
+//! * [`NativeBackend`] — a tiled, halo-split, double-buffered,
+//!   multi-threaded CPU engine.  Executes ANY `(pattern, dtype, t)`
+//!   combination, bit-identical (f64) to the golden oracle.
+//! * [`PjrtBackend`] — the pre-built AOT artifacts through the PJRT
+//!   runtime (requires the `pjrt` cargo feature and a manifest).
+//!
+//! A [`Job`] is backend-agnostic; [`Backend::supports`] is the
+//! capability probe the scheduler/planner use to pick a substrate, and
+//! [`Backend::advance`] runs it, returning phase-split [`RunMetrics`].
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::model::perf::Dtype;
+use crate::model::sparsity::Scheme;
+use crate::model::stencil::StencilPattern;
+
+/// One executable stencil job, independent of where it runs.
+///
+/// Semantics: `steps / t` monolithic fused launches (each applying the
+/// t-fold self-convolved kernel once — Tensor-Core semantics), followed
+/// by `steps % t` single base-kernel steps.  With `t == 1` this is plain
+/// sequential time stepping.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub pattern: StencilPattern,
+    pub dtype: Dtype,
+    /// Domain extents N^d (any size ≥ 1 per dim); rank must equal
+    /// `pattern.d`.
+    pub domain: Vec<usize>,
+    /// Total time steps to advance.
+    pub steps: usize,
+    /// Fusion depth per launch (t ≥ 1).
+    pub t: usize,
+    /// Base stencil weights over the (2r+1)^d hull (row-major).
+    pub weights: Vec<f64>,
+    /// Worker threads (1 = serial).
+    pub threads: usize,
+}
+
+impl Job {
+    /// Structural validation shared by all backends.
+    pub fn validate(&self, field_len: usize) -> Result<()> {
+        if self.domain.len() != self.pattern.d {
+            bail!(
+                "domain rank {} != pattern dimensionality {}",
+                self.domain.len(),
+                self.pattern.d
+            );
+        }
+        if self.domain.iter().any(|&n| n == 0) {
+            bail!("domain extents must be positive");
+        }
+        let want: usize = self.domain.iter().product();
+        if field_len != want {
+            bail!("field has {field_len} elements, domain wants {want}");
+        }
+        let side = 2 * self.pattern.r + 1;
+        if self.weights.len() != side.pow(self.pattern.d as u32) {
+            bail!(
+                "weights length {} != hull size {}",
+                self.weights.len(),
+                side.pow(self.pattern.d as u32)
+            );
+        }
+        if self.t == 0 {
+            bail!("fusion depth t must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Total domain points.
+    pub fn points(&self) -> u64 {
+        self.domain.iter().map(|&n| n as u64).product()
+    }
+}
+
+/// An execution substrate for stencil jobs.
+pub trait Backend {
+    /// Short stable name ("native", "pjrt") for logs and metrics.
+    fn name(&self) -> &'static str;
+
+    /// Capability probe: `Ok(())` iff [`Backend::advance`] can execute
+    /// this job; `Err` carries the human-readable reason it cannot.
+    fn supports(&self, job: &Job) -> Result<(), String>;
+
+    /// Advance `field` (row-major f64 host representation) by
+    /// `job.steps` time steps, double-buffered internally.
+    fn advance(&mut self, job: &Job, field: &mut Vec<f64>) -> Result<RunMetrics>;
+}
+
+/// CLI-selectable backend kind (`--backend auto|native|pjrt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Prefer a matching AOT artifact on PJRT, fall back to native.
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (want auto|native|pjrt)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+}
+
+/// Resolve a kind into a concrete backend able to run `job`.
+///
+/// `prefer` restricts PJRT artifact lookup to one compilation scheme
+/// (used when the CLI forces an engine); the native backend ignores it.
+pub fn create(
+    kind: BackendKind,
+    artifacts_dir: &Path,
+    job: &Job,
+    prefer: Option<Scheme>,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => {
+            let native = NativeBackend::new();
+            native
+                .supports(job)
+                .map_err(|why| anyhow!("native backend cannot run this job: {why}"))?;
+            Ok(Box::new(native))
+        }
+        BackendKind::Pjrt => {
+            let mut b = PjrtBackend::load(artifacts_dir)?;
+            b.prefer_scheme(prefer);
+            b.supports(job)
+                .map_err(|why| anyhow!("pjrt backend cannot run this job: {why}"))?;
+            Ok(Box::new(b))
+        }
+        BackendKind::Auto => {
+            if let Ok(mut b) = PjrtBackend::load(artifacts_dir) {
+                b.prefer_scheme(prefer);
+                if b.supports(job).is_ok() {
+                    return Ok(Box::new(b));
+                }
+            }
+            let native = NativeBackend::new();
+            native
+                .supports(job)
+                .map_err(|why| anyhow!("no backend can run this job: {why}"))?;
+            Ok(Box::new(native))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::stencil::Shape;
+
+    fn job() -> Job {
+        Job {
+            pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+            dtype: Dtype::F64,
+            domain: vec![8, 8],
+            steps: 4,
+            t: 2,
+            weights: vec![1.0 / 9.0; 9],
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert_eq!(BackendKind::parse("NATIVE").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn job_validation_catches_shape_errors() {
+        let j = job();
+        assert!(j.validate(64).is_ok());
+        assert!(j.validate(63).is_err()); // field length
+        let mut bad = job();
+        bad.domain = vec![8, 8, 8]; // rank mismatch
+        assert!(bad.validate(512).is_err());
+        let mut bad = job();
+        bad.weights = vec![0.0; 4]; // hull size
+        assert!(bad.validate(64).is_err());
+        let mut bad = job();
+        bad.t = 0;
+        assert!(bad.validate(64).is_err());
+        let mut bad = job();
+        bad.domain = vec![8, 0];
+        assert!(bad.validate(0).is_err());
+    }
+
+    #[test]
+    fn create_native_works_without_artifacts() {
+        let dir = std::path::PathBuf::from("/nonexistent-artifacts");
+        let b = create(BackendKind::Native, &dir, &job(), None).unwrap();
+        assert_eq!(b.name(), "native");
+        // Auto must fall back to native when no manifest exists.
+        let b = create(BackendKind::Auto, &dir, &job(), None).unwrap();
+        assert_eq!(b.name(), "native");
+        // Pjrt without artifacts is an error.
+        assert!(create(BackendKind::Pjrt, &dir, &job(), None).is_err());
+    }
+}

@@ -1,0 +1,458 @@
+//! The native CPU stencil engine: a tiled, halo-split, double-buffered,
+//! multi-threaded executor for ANY `(pattern, dtype, t)` combination.
+//!
+//! Layout per time step (one "launch"):
+//!
+//! * the fused kernel (t-fold self-convolution, identical arithmetic to
+//!   the golden oracle's [`golden::Weights::fuse`]) is compiled once into
+//!   a flat-offset form bound to the domain's row-major strides;
+//! * output rows are split across worker threads (disjoint `chunks_mut`
+//!   slabs, no locks);
+//! * each row is halo-split: the interior column window `[r·t, N−r·t)`
+//!   of an interior row takes the fast path — per offset, one contiguous
+//!   `zip` accumulation over the row segment, no per-element bounds
+//!   checks — while boundary rows/columns take the scalar slow path with
+//!   the zero-Dirichlet halo;
+//! * fields are double-buffered and swapped between launches.
+//!
+//! Accumulation order per output point is exactly the oracle's (hull
+//! row-major, zero weights skipped, out-of-domain reads contribute
+//! `w·0`), so f64 results are bit-identical to `golden::apply_fused` /
+//! `apply_once` chains; f32 jobs run genuinely in f32 (mirroring the
+//! AOT artifacts' precision) and match the oracle to rounding.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::backend::{Backend, Job};
+use crate::coordinator::metrics::RunMetrics;
+use crate::model::perf::Dtype;
+use crate::sim::golden;
+
+/// Element type the engine is instantiated at (f32 mirrors artifact
+/// precision, f64 mirrors the oracle).
+trait Scalar: Copy + Send + Sync + 'static {
+    const ZERO: Self;
+    fn from_f64(v: f64) -> Self;
+    fn mul_acc(acc: Self, w: Self, v: Self) -> Self;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn mul_acc(acc: Self, w: Self, v: Self) -> Self {
+        acc + w * v
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn mul_acc(acc: Self, w: Self, v: Self) -> Self {
+        acc + w * v
+    }
+}
+
+/// A stencil kernel compiled against one domain shape.
+struct Kernel<T> {
+    /// Hull radius (r·t after fusion).
+    r: usize,
+    /// Non-zero hull offsets in oracle order (multi-dim form, slow path).
+    offsets: Vec<(Vec<i64>, T)>,
+    /// The same offsets as flat row-major deltas (interior fast path).
+    deltas: Vec<(isize, T)>,
+}
+
+fn compile<T: Scalar>(w: &golden::Weights, dims: &[usize]) -> Kernel<T> {
+    let st = golden::strides_for(dims);
+    let offsets: Vec<(Vec<i64>, T)> = w
+        .offsets()
+        .into_iter()
+        .map(|(off, v)| (off, T::from_f64(v)))
+        .collect();
+    let deltas = offsets
+        .iter()
+        .map(|(off, v)| {
+            let d: isize = off
+                .iter()
+                .zip(&st)
+                .map(|(&o, &s)| o as isize * s as isize)
+                .sum();
+            (d, *v)
+        })
+        .collect();
+    Kernel { r: w.r(), offsets, deltas }
+}
+
+/// One output point via the scalar slow path (zero-Dirichlet halo),
+/// accumulating in exactly the oracle's order.
+fn point<T: Scalar>(
+    k: &Kernel<T>,
+    dims: &[usize],
+    st: &[usize],
+    src: &[T],
+    outer: &[usize],
+    col: usize,
+    coords: &mut [i64],
+) -> T {
+    let d = dims.len();
+    for (c, &o) in coords.iter_mut().zip(outer) {
+        *c = o as i64;
+    }
+    coords[d - 1] = col as i64;
+    let mut acc = T::ZERO;
+    for (off, w) in &k.offsets {
+        let mut flat = 0isize;
+        let mut ok = true;
+        for kk in 0..d {
+            let c = coords[kk] + off[kk];
+            if c < 0 || c >= dims[kk] as i64 {
+                ok = false;
+                break;
+            }
+            flat += c as isize * st[kk] as isize;
+        }
+        let v = if ok { src[flat as usize] } else { T::ZERO };
+        acc = T::mul_acc(acc, *w, v);
+    }
+    acc
+}
+
+/// Compute rows `[row0, row0 + dst.len()/n_last)` of one step into `dst`.
+fn step_rows<T: Scalar>(dims: &[usize], k: &Kernel<T>, src: &[T], dst: &mut [T], row0: usize) {
+    let d = dims.len();
+    let n_last = dims[d - 1];
+    let r = k.r;
+    let nrows = dst.len() / n_last;
+    let st = golden::strides_for(dims);
+    // Interior column window shared by every interior row.
+    let (clo, chi) = if n_last > 2 * r { (r, n_last - r) } else { (0, 0) };
+    let mut outer = vec![0usize; d - 1];
+    let mut coords = vec![0i64; d];
+    for lr in 0..nrows {
+        let rr = row0 + lr;
+        let mut rem = rr;
+        for kk in (0..d - 1).rev() {
+            outer[kk] = rem % dims[kk];
+            rem /= dims[kk];
+        }
+        let row_interior = outer.iter().zip(dims).all(|(&c, &n)| c >= r && c + r < n);
+        let row_base = rr * n_last;
+        let drow = &mut dst[lr * n_last..(lr + 1) * n_last];
+        if row_interior && chi > clo {
+            // Fast path: the whole interior window, offset-major, one
+            // contiguous source segment per offset.  Bounds are
+            // guaranteed by the interior condition, so the only checks
+            // left are one slice construction per offset per row.
+            let out = &mut drow[clo..chi];
+            out.fill(T::ZERO);
+            for &(delta, w) in &k.deltas {
+                let start = ((row_base + clo) as isize + delta) as usize;
+                let seg = &src[start..start + (chi - clo)];
+                for (o, &v) in out.iter_mut().zip(seg) {
+                    *o = T::mul_acc(*o, w, v);
+                }
+            }
+            for c in (0..clo).chain(chi..n_last) {
+                drow[c] = point(k, dims, &st, src, &outer, c, &mut coords);
+            }
+        } else {
+            for c in 0..n_last {
+                drow[c] = point(k, dims, &st, src, &outer, c, &mut coords);
+            }
+        }
+    }
+}
+
+/// One full step `dst = K(src)`, rows split across `threads` workers.
+fn step<T: Scalar>(dims: &[usize], k: &Kernel<T>, src: &[T], dst: &mut [T], threads: usize) {
+    let n_last = dims[dims.len() - 1];
+    let rows = src.len() / n_last;
+    let workers = threads.max(1).min(rows);
+    if workers <= 1 {
+        step_rows(dims, k, src, dst, 0);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ci, chunk) in dst.chunks_mut(chunk_rows * n_last).enumerate() {
+            s.spawn(move || step_rows(dims, k, src, chunk, ci * chunk_rows));
+        }
+    });
+}
+
+fn run_typed<T: Scalar>(
+    dims: &[usize],
+    fused: &golden::Weights,
+    base: &golden::Weights,
+    launches: usize,
+    rem: usize,
+    threads: usize,
+    buf: &mut Vec<T>,
+    metrics: &mut RunMetrics,
+) {
+    let mut next = vec![T::ZERO; buf.len()];
+    if launches > 0 {
+        let fk = compile::<T>(fused, dims);
+        for _ in 0..launches {
+            let t0 = Instant::now();
+            step(dims, &fk, buf, &mut next, threads);
+            metrics.add_execute(t0.elapsed());
+            std::mem::swap(buf, &mut next);
+        }
+    }
+    if rem > 0 {
+        let bk = compile::<T>(base, dims);
+        for _ in 0..rem {
+            let t0 = Instant::now();
+            step(dims, &bk, buf, &mut next, threads);
+            metrics.add_execute(t0.elapsed());
+            std::mem::swap(buf, &mut next);
+        }
+    }
+}
+
+/// The native CPU backend (stateless; all state lives in the job).
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, job: &Job) -> Result<(), String> {
+        // Any pattern/dtype/fusion depth runs here; only structural
+        // inconsistencies are rejected.
+        job.validate(job.points() as usize).map_err(|e| format!("{e:#}"))
+    }
+
+    fn advance(&mut self, job: &Job, field: &mut Vec<f64>) -> Result<RunMetrics> {
+        job.validate(field.len())?;
+        let launches = job.steps / job.t;
+        let rem = job.steps % job.t;
+        let base =
+            golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
+        // Fusing is itself a t-fold convolution — skip it when no fused
+        // launch will run (steps < t jobs are pure remainder).
+        let fused = if launches > 0 && job.t > 1 { base.fuse(job.t) } else { base.clone() };
+        let mut metrics = RunMetrics {
+            steps: job.steps,
+            points: job.points(),
+            launches: (launches + rem) as u64,
+            ..Default::default()
+        };
+        let wall0 = Instant::now();
+        match job.dtype {
+            Dtype::F64 => run_typed::<f64>(
+                &job.domain,
+                &fused,
+                &base,
+                launches,
+                rem,
+                job.threads,
+                field,
+                &mut metrics,
+            ),
+            Dtype::F32 => {
+                // Marshal through f32 buffers so the arithmetic runs at
+                // artifact precision; conversion cost is accounted like
+                // the PJRT backend's gather/scatter phases.
+                let t0 = Instant::now();
+                let mut buf: Vec<f32> = field.iter().map(|&v| v as f32).collect();
+                metrics.add_gather(t0.elapsed());
+                run_typed::<f32>(
+                    &job.domain,
+                    &fused,
+                    &base,
+                    launches,
+                    rem,
+                    job.threads,
+                    &mut buf,
+                    &mut metrics,
+                );
+                let t1 = Instant::now();
+                for (o, &v) in field.iter_mut().zip(&buf) {
+                    *o = v as f64;
+                }
+                metrics.add_scatter(t1.elapsed());
+            }
+        }
+        metrics.wall_ns = wall0.elapsed().as_nanos() as u64;
+        Ok(metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::stencil::{Shape, StencilPattern};
+    use crate::util::rng::Rng;
+
+    fn box_weights(d: usize, r: usize) -> Vec<f64> {
+        let side = 2 * r + 1;
+        let n = side.pow(d as u32);
+        vec![1.0 / n as f64; n]
+    }
+
+    fn job(d: usize, r: usize, domain: Vec<usize>, steps: usize, t: usize) -> Job {
+        Job {
+            pattern: StencilPattern::new(Shape::Box, d, r).unwrap(),
+            dtype: Dtype::F64,
+            domain,
+            steps,
+            t,
+            weights: box_weights(d, r),
+            threads: 1,
+        }
+    }
+
+    fn rand_field(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn golden_mirror(job: &Job, init: &[f64]) -> golden::Field {
+        let w = golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
+        let mut cur = golden::Field::from_vec(&job.domain, init.to_vec());
+        for _ in 0..job.steps / job.t {
+            cur = golden::apply_fused(&cur, &w, job.t);
+        }
+        for _ in 0..job.steps % job.t {
+            cur = golden::apply_once(&cur, &w);
+        }
+        cur
+    }
+
+    #[test]
+    fn f64_single_step_bit_identical_to_oracle() {
+        let j = job(2, 1, vec![17, 13], 1, 1);
+        let init = rand_field(1, 17 * 13);
+        let mut field = init.clone();
+        NativeBackend::new().advance(&j, &mut field).unwrap();
+        let want = golden_mirror(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn f64_fused_launches_bit_identical_to_oracle() {
+        let mut j = job(2, 1, vec![20, 21], 6, 3);
+        j.threads = 3;
+        let init = rand_field(2, 20 * 21);
+        let mut field = init.clone();
+        let m = NativeBackend::new().advance(&j, &mut field).unwrap();
+        assert_eq!(m.launches, 2);
+        let want = golden_mirror(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn remainder_steps_use_base_kernel() {
+        // steps=5, t=2 → two fused launches + one single step.
+        let j = job(2, 1, vec![12, 12], 5, 2);
+        let init = rand_field(3, 144);
+        let mut field = init.clone();
+        let m = NativeBackend::new().advance(&j, &mut field).unwrap();
+        assert_eq!(m.launches, 3);
+        let want = golden_mirror(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn works_in_1d_and_3d() {
+        for (d, domain) in [(1usize, vec![40usize]), (3, vec![9, 8, 10])] {
+            let j = job(d, 1, domain.clone(), 2, 2);
+            let n: usize = domain.iter().product();
+            let init = rand_field(4, n);
+            let mut field = init.clone();
+            NativeBackend::new().advance(&j, &mut field).unwrap();
+            let want = golden_mirror(&j, &init);
+            let got = golden::Field::from_vec(&j.domain, field);
+            assert_eq!(got.max_abs_diff(&want), 0.0, "d={d}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let init = rand_field(5, 31 * 29);
+        let mut want: Option<Vec<f64>> = None;
+        for threads in [1usize, 2, 7] {
+            let mut j = job(2, 2, vec![31, 29], 4, 2);
+            j.threads = threads;
+            let mut field = init.clone();
+            NativeBackend::new().advance(&j, &mut field).unwrap();
+            match &want {
+                None => want = Some(field),
+                Some(w) => assert_eq!(w, &field, "threads={threads}"),
+            }
+        }
+    }
+
+    #[test]
+    fn f32_matches_oracle_to_rounding() {
+        let mut j = job(2, 1, vec![24, 24], 4, 2);
+        j.dtype = Dtype::F32;
+        let init: Vec<f64> = rand_field(6, 576).iter().map(|&v| v as f32 as f64).collect();
+        let mut field = init.clone();
+        NativeBackend::new().advance(&j, &mut field).unwrap();
+        let want = golden_mirror(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn domain_smaller_than_hull_is_all_boundary() {
+        // 3×3 domain with a fused radius of 2: no interior fast path at
+        // all — every point must still match the oracle.
+        let j = job(2, 1, vec![3, 3], 2, 2);
+        let init = rand_field(7, 9);
+        let mut field = init.clone();
+        NativeBackend::new().advance(&j, &mut field).unwrap();
+        let want = golden_mirror(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn star_pattern_runs() {
+        let mut j = job(2, 1, vec![16, 16], 3, 3);
+        j.pattern = StencilPattern::new(Shape::Star, 2, 1).unwrap();
+        // star weights: centre + axes over the 3×3 hull
+        let mut w = vec![0.0; 9];
+        w[4] = 0.2;
+        for i in [1usize, 3, 5, 7] {
+            w[i] = 0.2;
+        }
+        j.weights = w;
+        let init = rand_field(8, 256);
+        let mut field = init.clone();
+        NativeBackend::new().advance(&j, &mut field).unwrap();
+        let want = golden_mirror(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn zero_steps_is_identity() {
+        let j = job(2, 1, vec![8, 8], 0, 2);
+        let init = rand_field(9, 64);
+        let mut field = init.clone();
+        let m = NativeBackend::new().advance(&j, &mut field).unwrap();
+        assert_eq!(field, init);
+        assert_eq!(m.launches, 0);
+    }
+}

@@ -2,6 +2,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::backend::BackendKind;
 use crate::hardware::Gpu;
 use crate::model::perf::Dtype;
 use crate::model::stencil::{Shape, StencilPattern};
@@ -19,6 +20,8 @@ pub struct RunConfig {
     pub engine: Option<String>,
     /// Force a fusion depth (None = planner).
     pub t: Option<usize>,
+    /// Execution substrate selection (auto|native|pjrt).
+    pub backend: BackendKind,
     pub artifacts_dir: std::path::PathBuf,
 }
 
@@ -33,6 +36,7 @@ impl RunConfig {
             threads: 4,
             engine: None,
             t: None,
+            backend: BackendKind::Auto,
             artifacts_dir: crate::runtime::manifest::default_dir(),
         }
     }
@@ -91,6 +95,9 @@ impl RunConfig {
             c.engine = Some(e.to_string());
         }
         c.t = args.get_usize("t")?;
+        if let Some(b) = args.get("backend") {
+            c.backend = BackendKind::parse(b)?;
+        }
         if let Some(dir) = args.get("artifacts") {
             c.artifacts_dir = std::path::PathBuf::from(dir);
         }
@@ -112,6 +119,7 @@ pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
         OptSpec { name: "gpu", help: "a100|v100|h100|rtx4090", takes_value: true, default: Some("a100") },
         OptSpec { name: "threads", help: "gather workers", takes_value: true, default: Some("4") },
         OptSpec { name: "engine", help: "force engine by name", takes_value: true, default: None },
+        OptSpec { name: "backend", help: "backend: auto|native|pjrt", takes_value: true, default: Some("auto") },
         OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: None },
         OptSpec { name: "verify", help: "check vs golden oracle", takes_value: false, default: None },
         OptSpec { name: "locked", help: "apply profiling clock lock", takes_value: false, default: None },
@@ -134,6 +142,16 @@ mod tests {
         let c = RunConfig::defaults();
         assert_eq!(c.pattern.label(), "Box-2D1R");
         assert_eq!(c.domain, vec![256, 256]);
+        assert_eq!(c.backend, BackendKind::Auto);
+    }
+
+    #[test]
+    fn backend_flag_parses() {
+        assert_eq!(parse(&["--backend", "native"]).backend, BackendKind::Native);
+        assert_eq!(parse(&["--backend", "pjrt"]).backend, BackendKind::Pjrt);
+        let raw: Vec<String> = vec!["--backend".into(), "tpu".into()];
+        let args = Args::parse(&raw, &run_opt_specs()).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
     }
 
     #[test]

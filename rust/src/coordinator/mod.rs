@@ -1,12 +1,13 @@
 //! The coordination layer: everything between a user's "advance this field
 //! N steps" and PJRT executions of fixed-size AOT artifacts.
 //!
-//! * [`planner`]   — picks execution unit, engine and fusion depth via the
-//!   paper's criteria (the analysis as a working scheduler policy).
+//! * [`planner`]   — picks execution unit, engine, fusion depth AND
+//!   execution backend via the paper's criteria (the analysis as a
+//!   working scheduler policy); never dead-ends on a missing artifact.
 //! * [`grid`]      — domain decomposition onto artifact-sized tiles with
 //!   halo exchange (overlapped tiles, interior-write-back).
-//! * [`scheduler`] — time-stepping driver: parallel gather/scatter worker
-//!   pool around the (serialized) PJRT execution.
+//! * [`scheduler`] — time-stepping drivers: the backend-generic
+//!   [`scheduler::advance`] dispatch plus the PJRT tiled launch loop.
 //! * [`metrics`]   — achieved throughput/latency accounting vs prediction.
 //! * [`config`]    — run configuration (CLI / file).
 

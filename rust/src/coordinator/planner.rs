@@ -1,11 +1,19 @@
 //! The planner: the paper's analytical criteria as a live scheduling
 //! policy.  Given a stencil job it enumerates (engine × fusion depth)
-//! candidates, scores them with the calibrated roofline simulator, applies
-//! the sweet-spot criterion, and emits a [`Plan`] — optionally restricted
-//! to fusion depths that actually exist as AOT artifacts.
+//! candidates *per available execution backend*, scores them with the
+//! calibrated roofline simulator, applies the sweet-spot criterion, and
+//! emits a [`Plan`].
+//!
+//! Pre-backend, a candidate only existed if a pre-built PJRT artifact
+//! did; every other (pattern, dtype, t) dead-ended.  Now each candidate
+//! carries an [`ExecTarget`]: PJRT when the manifest has a matching
+//! artifact (and the request allows it), otherwise the native CPU
+//! backend — which can execute ANY configuration — so planning never
+//! fails for want of an artifact unless the caller pins `--backend pjrt`.
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::BackendKind;
 use crate::engines::{self, Engine};
 use crate::hardware::Gpu;
 use crate::model::criteria;
@@ -13,6 +21,7 @@ use crate::model::perf::{Dtype, Unit, Workload};
 use crate::model::scenario::{self, Comparison};
 use crate::model::stencil::StencilPattern;
 use crate::runtime::manifest::Manifest;
+use crate::runtime::Runtime;
 use crate::sim::exec::{self, Prediction};
 
 /// A planning request.
@@ -23,10 +32,28 @@ pub struct Request {
     /// Total time steps the caller wants to advance.
     pub steps: usize,
     pub gpu: Gpu,
-    /// Restrict to engines whose artifacts exist in this manifest.
-    pub require_artifact: bool,
+    /// Which execution substrates may serve the plan.
+    pub backend: BackendKind,
     /// Cap on fusion depth (default 8, the EBISU/SPIDER max).
     pub max_t: usize,
+}
+
+/// Where a candidate would execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecTarget {
+    /// The native CPU engine (always capable).
+    Native,
+    /// A pre-built AOT artifact through the PJRT runtime.
+    Pjrt,
+}
+
+impl ExecTarget {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecTarget::Native => "native",
+            ExecTarget::Pjrt => "pjrt",
+        }
+    }
 }
 
 /// One scored candidate.
@@ -36,7 +63,11 @@ pub struct Candidate {
     pub t: usize,
     pub prediction: Prediction,
     pub in_sweet_spot: bool,
+    /// Matching AOT artifact, when the manifest has one (informational
+    /// even for native-targeted candidates).
     pub artifact: Option<String>,
+    /// The substrate this candidate would dispatch to.
+    pub target: ExecTarget,
 }
 
 /// The planner's decision.
@@ -64,9 +95,32 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
                 m.find(e.scheme, req.pattern.shape, req.pattern.d, req.pattern.r, t, req.dtype)
                     .map(|a| a.name.clone())
             });
-            if req.require_artifact && artifact.is_none() {
-                continue;
-            }
+            // Per-backend feasibility: PJRT needs an artifact; the
+            // native engine executes anything.  Auto mirrors
+            // PjrtBackend::supports exactly — ANY scheme's artifact for
+            // this (pattern, t, dtype) counts (run does not restrict to
+            // the candidate engine's scheme), the binary must carry the
+            // PJRT executor (`pjrt` feature), and the requested steps
+            // must divide into whole launches — so plan output matches
+            // what run will do.
+            let any_artifact = manifest.is_some_and(|m| {
+                m.variants.iter().any(|v| {
+                    v.shape == req.pattern.shape
+                        && v.d == req.pattern.d
+                        && v.r == req.pattern.r
+                        && v.t == t
+                        && v.dtype == req.dtype
+                        && v.n_outer == 1
+                })
+            });
+            let pjrt_runnable = any_artifact && Runtime::available() && req.steps % t == 0;
+            let target = match (req.backend, &artifact) {
+                (BackendKind::Pjrt, None) => continue,
+                (BackendKind::Pjrt, Some(_)) => ExecTarget::Pjrt,
+                (BackendKind::Native, _) => ExecTarget::Native,
+                (BackendKind::Auto, _) if pjrt_runnable => ExecTarget::Pjrt,
+                (BackendKind::Auto, _) => ExecTarget::Native,
+            };
             let Ok(prediction) = exec::predict(&e, &w, &req.gpu) else {
                 continue; // unit missing on this GPU
             };
@@ -82,7 +136,7 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
             } else {
                 false
             };
-            out.push(Candidate { engine: e.clone(), t, prediction, in_sweet_spot, artifact });
+            out.push(Candidate { engine: e.clone(), t, prediction, in_sweet_spot, artifact, target });
         }
     }
     out
@@ -94,11 +148,11 @@ pub fn plan(req: &Request, manifest: Option<&Manifest>) -> Result<Plan> {
     let mut cands = candidates(req, manifest);
     if cands.is_empty() {
         return Err(anyhow!(
-            "no feasible engine for {} {} on {}{}",
+            "no feasible engine for {} {} on {} (backend {})",
             req.pattern.label(),
             req.dtype.as_str(),
             req.gpu.name,
-            if req.require_artifact { " (artifact required)" } else { "" }
+            req.backend.as_str()
         ));
     }
     cands.sort_by(|a, b| {
@@ -141,7 +195,7 @@ mod tests {
             dtype,
             steps: 64,
             gpu: Gpu::a100(),
-            require_artifact: false,
+            backend: BackendKind::Auto,
             max_t: 8,
         }
     }
@@ -194,6 +248,36 @@ mod tests {
         r.gpu = Gpu::v100();
         let p = plan(&r, None).unwrap();
         assert!(!p.chosen.engine.is_tensor());
+    }
+
+    #[test]
+    fn no_manifest_targets_native() {
+        // Without a manifest every candidate must still exist — on the
+        // native backend.  This is the tentpole behavior: no artifact,
+        // still executable.
+        let cands = candidates(&req(Shape::Star, 3, 1, Dtype::F64), None);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.target == ExecTarget::Native));
+        assert!(cands.iter().all(|c| c.artifact.is_none()));
+    }
+
+    #[test]
+    fn pjrt_backend_requires_artifacts() {
+        let mut r = req(Shape::Box, 2, 1, Dtype::F32);
+        r.backend = BackendKind::Pjrt;
+        // no manifest → no candidates → plan errors
+        assert!(candidates(&r, None).is_empty());
+        let err = plan(&r, None).unwrap_err();
+        assert!(format!("{err:#}").contains("backend pjrt"));
+    }
+
+    #[test]
+    fn native_backend_ignores_artifacts() {
+        let mut r = req(Shape::Box, 2, 1, Dtype::F32);
+        r.backend = BackendKind::Native;
+        let cands = candidates(&r, None);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.target == ExecTarget::Native));
     }
 
     #[test]

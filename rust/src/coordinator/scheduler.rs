@@ -1,21 +1,41 @@
-//! The time-stepping driver: advances an arbitrary domain by launching an
-//! AOT artifact over the [`grid`](crate::coordinator::grid) tiling.
+//! The time-stepping driver, in two layers:
 //!
-//! Gathers run in parallel on a std::thread scope (pure reads of the
-//! current field); PJRT execution is serialized through the single CPU
-//! client (which is internally multi-threaded); scatters write disjoint
-//! payload regions.  Double-buffered fields keep launches pure.
+//! * [`advance`] — the backend-generic entry point: dispatches a
+//!   [`backend::Job`](crate::backend::Job) through the
+//!   [`Backend`](crate::backend::Backend) trait after probing
+//!   capability, so callers never hard-require a manifest artifact.
+//! * [`run`] — the PJRT artifact driver: advances an arbitrary domain by
+//!   launching an AOT artifact over the
+//!   [`grid`](crate::coordinator::grid) tiling.  Gathers run in parallel
+//!   on a std::thread scope (pure reads of the current field); PJRT
+//!   execution is serialized through the single CPU client (which is
+//!   internally multi-threaded); scatters write disjoint payload
+//!   regions.  Double-buffered fields keep launches pure.
 
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::backend::Backend;
 use crate::coordinator::grid::Tiling;
 use crate::coordinator::metrics::RunMetrics;
 use crate::model::perf::Dtype;
 use crate::runtime::{Runtime, TensorData};
 
-/// One stencil job over an arbitrary domain.
+/// Advance `field` by dispatching `job` through a backend, with the
+/// capability probe surfaced as a planning-style error.
+pub fn advance(
+    backend: &mut dyn Backend,
+    job: &crate::backend::Job,
+    field: &mut Vec<f64>,
+) -> Result<RunMetrics> {
+    backend
+        .supports(job)
+        .map_err(|why| anyhow!("{} backend cannot run this job: {why}", backend.name()))?;
+    backend.advance(job, field)
+}
+
+/// One stencil job over an arbitrary domain, bound to a named artifact.
 #[derive(Debug, Clone)]
 pub struct Job {
     /// Artifact (variant) name to launch.
@@ -143,6 +163,30 @@ mod tests {
         assert_eq!(t.dtype(), Dtype::F32);
         let t64 = make_tensor(Dtype::F64, &[1.0, 2.0]);
         assert_eq!(t64.as_f64().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn advance_dispatches_through_the_trait() {
+        use crate::backend::{self, NativeBackend};
+        use crate::model::stencil::{Shape, StencilPattern};
+        let job = backend::Job {
+            pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+            dtype: Dtype::F64,
+            domain: vec![10, 10],
+            steps: 2,
+            t: 1,
+            weights: vec![1.0 / 9.0; 9],
+            threads: 2,
+        };
+        let mut be = NativeBackend::new();
+        let mut field = vec![1.0; 100];
+        let m = advance(&mut be, &job, &mut field).unwrap();
+        assert_eq!(m.steps, 2);
+        assert!(m.throughput() > 0.0);
+        // probe failure surfaces as an error, not a panic
+        let mut bad = job.clone();
+        bad.weights = vec![0.0; 3];
+        assert!(advance(&mut be, &bad, &mut field).is_err());
     }
 
     // run() integration tests (needing artifacts + PJRT) live in

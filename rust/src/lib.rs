@@ -11,7 +11,12 @@
 //!   as engine descriptors bound to AOT-compiled kernel artifacts.
 //! * [`sim`] — the calibrated execution simulator standing in for the
 //!   paper's A100 testbed (FLOP/traffic counters, L2 filter, ncu facade).
-//! * [`runtime`] — PJRT-CPU loader/executor for the AOT HLO artifacts.
+//! * [`runtime`] — PJRT-CPU loader/executor for the AOT HLO artifacts
+//!   (gated behind the `pjrt` cargo feature; stubbed otherwise).
+//! * [`backend`] — the unified execution layer: the [`backend::Backend`]
+//!   trait plus [`backend::NativeBackend`] (tiled, halo-split,
+//!   multi-threaded CPU engine for any pattern/dtype/fusion depth) and
+//!   [`backend::PjrtBackend`] (AOT artifacts through [`runtime`]).
 //! * [`coordinator`] — the serving layer: planner (auto unit+fusion
 //!   selection via the criteria), domain tiling + halo exchange, worker
 //!   pool, metrics.
@@ -28,6 +33,7 @@ pub mod hardware;
 pub mod engines;
 pub mod sim;
 pub mod runtime;
+pub mod backend;
 pub mod coordinator;
 pub mod report;
 

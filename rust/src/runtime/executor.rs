@@ -4,12 +4,16 @@
 //! Follows /opt/xla-example/load_hlo: text (not serialized proto) is the
 //! interchange format; artifacts are lowered with `return_tuple=True`, so
 //! results unwrap via `to_tuple1`.
+//!
+//! The `xla` bindings crate only exists in the artifact-enabled build
+//! environment, so everything touching it is gated behind the `pjrt`
+//! cargo feature.  Without the feature the same [`Runtime`] surface is
+//! compiled as a stub: the manifest still loads (so `stencilctl list`
+//! and planning keep working) but compilation/execution report that the
+//! binary was built without PJRT — the native backend
+//! ([`crate::backend::NativeBackend`]) serves those jobs instead.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::time::Instant;
-
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::model::perf::Dtype;
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
@@ -61,15 +65,6 @@ impl TensorData {
             TensorData::F64(v) => v.clone(),
         }
     }
-
-    fn to_literal(&self, dims: &[usize]) -> Result<xla::Literal> {
-        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            TensorData::F32(v) => xla::Literal::vec1(v),
-            TensorData::F64(v) => xla::Literal::vec1(v),
-        };
-        Ok(lit.reshape(&dims_i64)?)
-    }
 }
 
 /// Cumulative executor statistics (hot-path observability).
@@ -81,112 +76,194 @@ pub struct ExecStats {
     pub execute_ns: u64,
 }
 
-/// The PJRT runtime: client + manifest + executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub stats: ExecStats,
+fn validate_inputs(meta: &ArtifactMeta, x: &TensorData, w: &TensorData) -> Result<()> {
+    let want_points = meta.points() as usize;
+    if x.len() != want_points {
+        bail!(
+            "{}: field has {} elements, artifact wants {want_points}",
+            meta.name,
+            x.len()
+        );
+    }
+    let wside = 2 * meta.r + 1;
+    let want_w = wside.pow(meta.d as u32);
+    if w.len() != want_w {
+        bail!("{}: weights have {} elements, want {want_w}", meta.name, w.len());
+    }
+    if x.dtype() != meta.dtype || w.dtype() != meta.dtype {
+        bail!(
+            "{}: dtype mismatch (artifact {:?}, field {:?}, weights {:?})",
+            meta.name,
+            meta.dtype,
+            x.dtype(),
+            w.dtype()
+        );
+    }
+    Ok(())
 }
 
+#[cfg(feature = "pjrt")]
+mod client {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::time::Instant;
+
+    use anyhow::{anyhow, Result};
+
+    use super::{validate_inputs, ExecStats, TensorData};
+    use crate::model::perf::Dtype;
+    use crate::runtime::manifest::Manifest;
+
+    impl TensorData {
+        fn to_literal(&self, dims: &[usize]) -> Result<xla::Literal> {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = match self {
+                TensorData::F32(v) => xla::Literal::vec1(v),
+                TensorData::F64(v) => xla::Literal::vec1(v),
+            };
+            Ok(lit.reshape(&dims_i64)?)
+        }
+    }
+
+    /// The PJRT runtime: client + manifest + executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+        pub stats: ExecStats,
+    }
+
+    impl Runtime {
+        /// True when this build can actually execute artifacts.
+        pub fn available() -> bool {
+            true
+        }
+
+        /// Create a CPU-PJRT runtime over an artifact directory.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime { client, manifest, cache: HashMap::new(), stats: ExecStats::default() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch cached) executable for a variant.
+        pub fn compile(&mut self, name: &str) -> Result<()> {
+            if self.cache.contains_key(name) {
+                return Ok(());
+            }
+            let meta = self.manifest.get(name)?.clone();
+            let path = self.manifest.hlo_path(&meta);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.stats.compiles += 1;
+            self.stats.compile_ns += t0.elapsed().as_nanos() as u64;
+            self.cache.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Number of executables resident in the cache.
+        pub fn cached(&self) -> usize {
+            self.cache.len()
+        }
+
+        /// Execute a variant: x is the flattened domain field, w the
+        /// flattened (2r+1)^d weights.  Returns the output field.
+        pub fn execute(&mut self, name: &str, x: &TensorData, w: &TensorData) -> Result<TensorData> {
+            self.compile(name)?;
+            let meta = self.manifest.get(name)?.clone();
+            validate_inputs(&meta, x, w)?;
+            let wside = 2 * meta.r + 1;
+            let wdims = vec![wside; meta.d];
+            let x_lit = x.to_literal(&meta.grid)?;
+            let w_lit = w.to_literal(&wdims)?;
+            let exe = self.cache.get(name).expect("compiled above");
+            let t0 = Instant::now();
+            let result = exe
+                .execute::<xla::Literal>(&[x_lit, w_lit])
+                .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+            // Artifacts are lowered with return_tuple=True → 1-tuple.
+            let out = lit.to_tuple1().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+            self.stats.executions += 1;
+            self.stats.execute_ns += t0.elapsed().as_nanos() as u64;
+            match meta.dtype {
+                Dtype::F32 => Ok(TensorData::F32(
+                    out.to_vec::<f32>().map_err(|e| anyhow!("read f32: {e:?}"))?,
+                )),
+                Dtype::F64 => Ok(TensorData::F64(
+                    out.to_vec::<f64>().map_err(|e| anyhow!("read f64: {e:?}"))?,
+                )),
+            }
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod client {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::{validate_inputs, ExecStats, TensorData};
+    use crate::runtime::manifest::Manifest;
+
+    /// Stub runtime compiled when the `pjrt` feature is off: the manifest
+    /// is still readable, but nothing can execute.
+    pub struct Runtime {
+        pub manifest: Manifest,
+        pub stats: ExecStats,
+    }
+
+    impl Runtime {
+        /// True when this build can actually execute artifacts.
+        pub fn available() -> bool {
+            false
+        }
+
+        /// Load the manifest; execution members exist but always fail.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(dir)?;
+            Ok(Runtime { manifest, stats: ExecStats::default() })
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the pjrt feature)".to_string()
+        }
+
+        pub fn compile(&mut self, name: &str) -> Result<()> {
+            let _ = self.manifest.get(name)?;
+            bail!("cannot compile {name}: built without the `pjrt` feature (use --backend native)")
+        }
+
+        pub fn cached(&self) -> usize {
+            0
+        }
+
+        pub fn execute(&mut self, name: &str, x: &TensorData, w: &TensorData) -> Result<TensorData> {
+            let meta = self.manifest.get(name)?.clone();
+            validate_inputs(&meta, x, w)?;
+            bail!("cannot execute {name}: built without the `pjrt` feature (use --backend native)")
+        }
+    }
+}
+
+pub use client::Runtime;
+
 impl Runtime {
-    /// Create a CPU-PJRT runtime over an artifact directory.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest, cache: HashMap::new(), stats: ExecStats::default() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) executable for a variant.
-    pub fn compile(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
-        }
-        let meta = self.manifest.get(name)?.clone();
-        let path = self.manifest.hlo_path(&meta);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        self.stats.compiles += 1;
-        self.stats.compile_ns += t0.elapsed().as_nanos() as u64;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Number of executables resident in the cache.
-    pub fn cached(&self) -> usize {
-        self.cache.len()
-    }
-
-    /// Execute a variant: x is the flattened domain field, w the flattened
-    /// (2r+1)^d weights.  Returns the output field.
-    pub fn execute(&mut self, name: &str, x: &TensorData, w: &TensorData) -> Result<TensorData> {
-        self.compile(name)?;
-        let meta = self.manifest.get(name)?.clone();
-        self.validate_inputs(&meta, x, w)?;
-        let wside = 2 * meta.r + 1;
-        let wdims = vec![wside; meta.d];
-        let x_lit = x.to_literal(&meta.grid)?;
-        let w_lit = w.to_literal(&wdims)?;
-        let exe = self.cache.get(name).expect("compiled above");
-        let t0 = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&[x_lit, w_lit])
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
-        // Artifacts are lowered with return_tuple=True → 1-tuple.
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
-        self.stats.executions += 1;
-        self.stats.execute_ns += t0.elapsed().as_nanos() as u64;
-        match meta.dtype {
-            Dtype::F32 => Ok(TensorData::F32(
-                out.to_vec::<f32>().map_err(|e| anyhow!("read f32: {e:?}"))?,
-            )),
-            Dtype::F64 => Ok(TensorData::F64(
-                out.to_vec::<f64>().map_err(|e| anyhow!("read f64: {e:?}"))?,
-            )),
-        }
-    }
-
-    fn validate_inputs(&self, meta: &ArtifactMeta, x: &TensorData, w: &TensorData) -> Result<()> {
-        let want_points = meta.points() as usize;
-        if x.len() != want_points {
-            bail!(
-                "{}: field has {} elements, artifact wants {want_points}",
-                meta.name,
-                x.len()
-            );
-        }
-        let wside = 2 * meta.r + 1;
-        let want_w = wside.pow(meta.d as u32);
-        if w.len() != want_w {
-            bail!("{}: weights have {} elements, want {want_w}", meta.name, w.len());
-        }
-        if x.dtype() != meta.dtype || w.dtype() != meta.dtype {
-            bail!(
-                "{}: dtype mismatch (artifact {:?}, field {:?}, weights {:?})",
-                meta.name,
-                meta.dtype,
-                x.dtype(),
-                w.dtype()
-            );
-        }
-        Ok(())
-    }
-
     /// Mean execute latency in nanoseconds (0 if nothing ran yet).
     pub fn mean_execute_ns(&self) -> f64 {
         if self.stats.executions == 0 {
@@ -201,7 +278,7 @@ impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Runtime")
             .field("artifacts", &self.manifest.variants.len())
-            .field("cached", &self.cache.len())
+            .field("cached", &self.cached())
             .field("stats", &self.stats)
             .finish()
     }
@@ -215,6 +292,8 @@ pub fn load_default() -> Result<Runtime> {
 
 #[cfg(test)]
 mod tests {
+    use std::path::Path;
+
     use super::*;
 
     #[test]
@@ -234,6 +313,28 @@ mod tests {
         assert_eq!(t.dtype(), Dtype::F64);
     }
 
+    #[test]
+    fn validate_inputs_checks_shapes_and_dtypes() {
+        let m = Manifest::parse(
+            Path::new("/tmp"),
+            r#"{"variants": [{
+                "name": "v", "file": "v.hlo.txt", "scheme": "direct",
+                "shape": "box", "d": 2, "r": 1, "t": 1, "dtype": "float32",
+                "grid": [4, 4], "tile": [4, 4], "halo": 1, "k_points": 9,
+                "k_fused": 9, "alpha": 1.0, "sparsity_measured": null,
+                "vmem_bytes": 0, "n_outer": 1
+            }]}"#,
+        )
+        .unwrap();
+        let meta = m.get("v").unwrap();
+        let good_x = TensorData::F32(vec![0.0; 16]);
+        let good_w = TensorData::F32(vec![0.0; 9]);
+        assert!(validate_inputs(meta, &good_x, &good_w).is_ok());
+        assert!(validate_inputs(meta, &TensorData::F32(vec![0.0; 3]), &good_w).is_err());
+        assert!(validate_inputs(meta, &good_x, &TensorData::F32(vec![0.0; 2])).is_err());
+        assert!(validate_inputs(meta, &TensorData::F64(vec![0.0; 16]), &good_w).is_err());
+    }
+
     // Full PJRT round-trips live in rust/tests/runtime_integration.rs
-    // (they need the artifacts directory).
+    // (they need the artifacts directory and the `pjrt` feature).
 }

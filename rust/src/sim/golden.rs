@@ -4,6 +4,17 @@
 //! sequential vs fused semantics) so integration tests can check the PJRT
 //! artifacts against an implementation with no shared code or runtime.
 
+/// Row-major strides for a dims vector — the single stride definition
+/// shared by [`Field`], kernel fusion, and the native backend (their
+/// bit-identity guarantee depends on agreeing on layout).
+pub(crate) fn strides_for(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
 /// A dense d-dimensional field (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Field {
@@ -29,22 +40,21 @@ impl Field {
         self.data.is_empty()
     }
 
+    /// Row-major strides of this field's dims.
     fn strides(&self) -> Vec<usize> {
-        let mut s = vec![1usize; self.dims.len()];
-        for i in (0..self.dims.len().saturating_sub(1)).rev() {
-            s[i] = s[i + 1] * self.dims[i + 1];
-        }
-        s
+        strides_for(&self.dims)
     }
 
     /// Value at a (possibly out-of-domain) signed index — zero halo.
-    fn at_or_zero(&self, idx: &[i64]) -> f64 {
+    /// `strides` are hoisted to the caller: recomputing (and
+    /// heap-allocating) them per point access dominated `apply_once`.
+    fn at_or_zero(&self, idx: &[i64], strides: &[usize]) -> f64 {
         let mut flat = 0usize;
-        for (k, (&i, &n)) in idx.iter().zip(&self.dims).enumerate() {
+        for ((&i, &n), &s) in idx.iter().zip(&self.dims).zip(strides) {
             if i < 0 || i >= n as i64 {
                 return 0.0;
             }
-            flat += i as usize * self.strides()[k];
+            flat += i as usize * s;
         }
         self.data[flat]
     }
@@ -78,7 +88,9 @@ impl Weights {
         (self.side - 1) / 2
     }
 
-    fn offsets(&self) -> Vec<(Vec<i64>, f64)> {
+    /// Non-zero hull offsets (row-major hull order) with their weights —
+    /// the canonical accumulation order every backend mirrors.
+    pub fn offsets(&self) -> Vec<(Vec<i64>, f64)> {
         let r = self.r() as i64;
         let mut out = Vec::new();
         let n = self.side;
@@ -114,13 +126,7 @@ impl Weights {
         let side = self.side + other.side - 1;
         let r_out = (side - 1) as i64 / 2;
         let mut out = Weights::new(self.d, side, vec![0.0; side.pow(self.d as u32)]);
-        let strides = {
-            let mut s = vec![1usize; self.d];
-            for i in (0..self.d.saturating_sub(1)).rev() {
-                s[i] = s[i + 1] * side;
-            }
-            s
-        };
+        let strides = strides_for(&vec![side; self.d]);
         for (a_off, a_w) in self.offsets() {
             for (b_off, b_w) in other.offsets() {
                 let mut flat = 0usize;
@@ -140,7 +146,9 @@ pub fn apply_once(x: &Field, w: &Weights) -> Field {
     let mut out = Field::zeros(&x.dims);
     let offsets = w.offsets();
     let dims = x.dims.clone();
+    let strides = x.strides();
     let mut idx = vec![0i64; w.d];
+    let mut nb = vec![0i64; w.d];
     for flat in 0..out.len() {
         // decompose flat -> idx
         let mut rem = flat;
@@ -149,12 +157,11 @@ pub fn apply_once(x: &Field, w: &Weights) -> Field {
             rem /= dims[k];
         }
         let mut acc = 0.0;
-        let mut nb = vec![0i64; w.d];
         for (off, wv) in &offsets {
             for k in 0..w.d {
                 nb[k] = idx[k] + off[k];
             }
-            acc += wv * x.at_or_zero(&nb);
+            acc += wv * x.at_or_zero(&nb, &strides);
         }
         out.data[flat] = acc;
     }

@@ -40,6 +40,18 @@ impl Default for Config {
     }
 }
 
+impl Config {
+    /// `cases` with a PROP_CASES env override, so CI can dial coverage
+    /// up (or a slow machine down) without recompiling.
+    pub fn with_cases(cases: usize) -> Config {
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(cases);
+        Config { cases, ..Default::default() }
+    }
+}
+
 /// Run `prop` on `cases` inputs drawn from `gen`.  `prop` returns
 /// `Err(reason)` to signal failure.
 pub fn forall<T, G, P>(cfg: Config, mut gen: G, mut prop: P) -> PropResult<T>
@@ -138,6 +150,15 @@ mod tests {
         // halving candidates always pass (<500), so the decrement path
         // walks the counterexample down to the exact boundary.
         assert_eq!(case, 500);
+    }
+
+    #[test]
+    fn with_cases_defaults_without_env() {
+        // PROP_CASES is not set in the unit-test environment.
+        if std::env::var("PROP_CASES").is_err() {
+            assert_eq!(Config::with_cases(17).cases, 17);
+        }
+        assert_eq!(Config::with_cases(17).seed, Config::default().seed);
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Property tests: the native backend against the golden oracle across
+//! random patterns, dims 1–3, fused depths t ∈ {1..4}, both dtypes —
+//! no artifacts, no PJRT, runs in every checkout.
+//!
+//! f64 jobs must be BIT-IDENTICAL to the oracle (max|Δ| == 0): the
+//! engine mirrors the oracle's per-point accumulation order exactly.
+//! f32 jobs run genuinely in f32 and must match to rounding.
+
+use tc_stencil::backend::{self, Backend, BackendKind, NativeBackend};
+use tc_stencil::coordinator::scheduler;
+use tc_stencil::model::perf::Dtype;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::sim::golden;
+use tc_stencil::util::prop::{forall, Config};
+use tc_stencil::util::rng::Rng;
+
+/// A randomly drawn job description (compact for shrink reports).
+#[derive(Debug, Clone)]
+struct Case {
+    shape: Shape,
+    d: usize,
+    r: usize,
+    t: usize,
+    steps: usize,
+    dtype: Dtype,
+    domain: Vec<usize>,
+    threads: usize,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let shape = if rng.f64() < 0.5 { Shape::Box } else { Shape::Star };
+    let d = rng.range_usize(1, 3);
+    let r = rng.range_usize(1, 2);
+    let t = rng.range_usize(1, 4);
+    let steps = rng.range_usize(0, 2 * t + 1); // exercises the remainder path
+    let dtype = if rng.f64() < 0.5 { Dtype::F32 } else { Dtype::F64 };
+    let max_side = match d {
+        1 => 64,
+        2 => 24,
+        _ => 12,
+    };
+    let domain: Vec<usize> = (0..d).map(|_| rng.range_usize(1, max_side)).collect();
+    Case {
+        shape,
+        d,
+        r,
+        t,
+        steps,
+        dtype,
+        domain,
+        threads: rng.range_usize(1, 4),
+        seed: rng.next_u64(),
+    }
+}
+
+fn random_weights(rng: &mut Rng, d: usize, r: usize, shape: Shape) -> Vec<f64> {
+    // Random weights masked to the pattern's support (so star jobs carry
+    // genuinely star-shaped kernels), L1-normalized so fused kernels do
+    // not amplify the field (keeps the f32 rounding tolerance meaningful).
+    let p = StencilPattern::new(shape, d, r).unwrap();
+    let sup = p.support();
+    let mut w: Vec<f64> = sup
+        .cells
+        .iter()
+        .map(|&b| if b { rng.range_f64(-0.5, 0.5) } else { 0.0 })
+        .collect();
+    let l1: f64 = w.iter().map(|v| v.abs()).sum();
+    if l1 > 1e-9 {
+        for v in &mut w {
+            *v /= l1;
+        }
+    }
+    w
+}
+
+fn run_case(case: &Case) -> Result<(), String> {
+    let mut rng = Rng::new(case.seed);
+    let weights = random_weights(&mut rng, case.d, case.r, case.shape);
+    let n: usize = case.domain.iter().product();
+    let init: Vec<f64> = match case.dtype {
+        // Pre-round f32 inputs so the oracle sees what the engine sees.
+        Dtype::F32 => (0..n).map(|_| rng.normal() as f32 as f64).collect(),
+        Dtype::F64 => (0..n).map(|_| rng.normal()).collect(),
+    };
+    let job = backend::Job {
+        pattern: StencilPattern::new(case.shape, case.d, case.r).unwrap(),
+        dtype: case.dtype,
+        domain: case.domain.clone(),
+        steps: case.steps,
+        t: case.t,
+        weights: weights.clone(),
+        threads: case.threads,
+    };
+    let mut field = init.clone();
+    let mut be = NativeBackend::new();
+    scheduler::advance(&mut be, &job, &mut field).map_err(|e| format!("{e:#}"))?;
+
+    let w = golden::Weights::new(case.d, 2 * case.r + 1, weights);
+    let mut want = golden::Field::from_vec(&case.domain, init);
+    for _ in 0..case.steps / case.t {
+        want = golden::apply_fused(&want, &w, case.t);
+    }
+    for _ in 0..case.steps % case.t {
+        want = golden::apply_once(&want, &w);
+    }
+    let got = golden::Field::from_vec(&case.domain, field);
+    let err = got.max_abs_diff(&want);
+    match case.dtype {
+        Dtype::F64 if err != 0.0 => Err(format!("f64 not bit-identical: max|Δ|={err:.3e}")),
+        Dtype::F32 if err > 2e-4 * (case.steps.max(1) as f64) => {
+            Err(format!("f32 outside rounding tolerance: max|Δ|={err:.3e}"))
+        }
+        _ => Ok(()),
+    }
+}
+
+#[test]
+fn property_native_matches_oracle() {
+    forall(Config::with_cases(120), gen_case, run_case).unwrap();
+}
+
+#[test]
+fn property_threads_do_not_change_bits() {
+    forall(
+        Config { seed: 0xD1CE, ..Config::with_cases(40) },
+        gen_case,
+        |case| {
+            let mut results: Vec<Vec<f64>> = Vec::new();
+            for threads in [1usize, 5] {
+                let mut rng = Rng::new(case.seed);
+                let weights = random_weights(&mut rng, case.d, case.r, case.shape);
+                let n: usize = case.domain.iter().product();
+                let init: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let job = backend::Job {
+                    pattern: StencilPattern::new(case.shape, case.d, case.r).unwrap(),
+                    dtype: case.dtype,
+                    domain: case.domain.clone(),
+                    steps: case.steps,
+                    t: case.t,
+                    weights,
+                    threads,
+                };
+                let mut field = init;
+                NativeBackend::new()
+                    .advance(&job, &mut field)
+                    .map_err(|e| format!("{e:#}"))?;
+                results.push(field);
+            }
+            if results[0] == results[1] {
+                Ok(())
+            } else {
+                Err("thread count changed the bits".into())
+            }
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn backend_kind_auto_resolves_to_native_without_artifacts() {
+    let job = backend::Job {
+        pattern: StencilPattern::new(Shape::Star, 2, 1).unwrap(),
+        dtype: Dtype::F64,
+        domain: vec![16, 16],
+        steps: 4,
+        t: 2,
+        weights: {
+            let mut w = vec![0.0; 9];
+            w[4] = 0.6;
+            for i in [1usize, 3, 5, 7] {
+                w[i] = 0.1;
+            }
+            w
+        },
+        threads: 2,
+    };
+    let dir = std::path::PathBuf::from("/definitely-not-an-artifact-dir");
+    let mut be = backend::create(BackendKind::Auto, &dir, &job, None).unwrap();
+    assert_eq!(be.name(), "native");
+    let mut field = vec![1.0; 256];
+    let metrics = scheduler::advance(be.as_mut(), &job, &mut field).unwrap();
+    assert_eq!(metrics.steps, 4);
+    assert_eq!(metrics.launches, 2);
+    assert!(metrics.throughput() > 0.0);
+}
+
+#[test]
+fn capability_probe_reports_reasons() {
+    let good = backend::Job {
+        pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+        dtype: Dtype::F64,
+        domain: vec![8, 8],
+        steps: 2,
+        t: 1,
+        weights: vec![1.0 / 9.0; 9],
+        threads: 1,
+    };
+    let native = NativeBackend::new();
+    assert!(native.supports(&good).is_ok());
+    let mut bad = good.clone();
+    bad.weights = vec![0.0; 5];
+    let why = native.supports(&bad).unwrap_err();
+    assert!(why.contains("weights"), "{why}");
+    let mut bad = good;
+    bad.domain = vec![8];
+    let why = native.supports(&bad).unwrap_err();
+    assert!(why.contains("rank"), "{why}");
+}

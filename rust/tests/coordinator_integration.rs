@@ -1,6 +1,12 @@
 //! Integration: tiled halo-exchange scheduling over the PJRT runtime
 //! reproduces the golden oracle on arbitrary (non-divisible) domains.
+//!
+//! Requires artifacts and the `pjrt` feature (compiled out otherwise);
+//! the artifact-free equivalents live in rust/tests/backend_native.rs.
 
+#![cfg(feature = "pjrt")]
+
+use tc_stencil::backend::BackendKind;
 use tc_stencil::coordinator::planner;
 use tc_stencil::coordinator::scheduler::{run, Job};
 use tc_stencil::hardware::Gpu;
@@ -132,7 +138,7 @@ fn planner_artifact_mode_yields_runnable_plan() {
         dtype: Dtype::F32,
         steps: 8,
         gpu: Gpu::a100(),
-        require_artifact: true,
+        backend: BackendKind::Pjrt,
         max_t: 8,
     };
     let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
@@ -154,7 +160,7 @@ fn end_to_end_plan_then_run() {
         dtype: Dtype::F32,
         steps: 8,
         gpu: Gpu::a100(),
-        require_artifact: true,
+        backend: BackendKind::Pjrt,
         max_t: 4,
     };
     let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();

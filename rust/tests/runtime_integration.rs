@@ -1,7 +1,10 @@
 //! Integration: every AOT artifact executes on PJRT-CPU and matches the
 //! rust-native golden oracle (no shared code with the Python build path).
 //!
-//! Requires `make artifacts` to have produced ./artifacts.
+//! Requires `make artifacts` to have produced ./artifacts and a build
+//! with the `pjrt` feature (the whole file is compiled out otherwise).
+
+#![cfg(feature = "pjrt")]
 
 use tc_stencil::model::perf::Dtype;
 use tc_stencil::model::sparsity::Scheme;
