@@ -1,0 +1,127 @@
+//! Service-layer throughput: jobs/sec and p50/p99 request latency
+//! through the bounded queue + worker pool, cold vs warm plan cache, on
+//! the paper's workhorse shapes (star-2d, heat-3d).  Each client thread
+//! owns a session and streams `advance` requests through the same
+//! [`handle_line`] path a TCP connection uses — so the numbers include
+//! protocol parsing, planning/cache, admission, queueing, and reply.
+//!
+//! Run with: `cargo bench --bench service_throughput` (BENCH_FAST=1 for
+//! CI).  Emits BENCH_service.json for EXPERIMENTS.md-style tracking.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use tc_stencil::service::server::{handle_line, ServeOpts, Service, ServiceState};
+use tc_stencil::util::json::Json;
+use tc_stencil::util::stats;
+
+struct ShapeCase {
+    name: &'static str,
+    shape: &'static str,
+    d: usize,
+    domain: &'static str,
+    steps: usize,
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn run_case(case: &ShapeCase, clients: usize, per_client: usize) -> Json {
+    let svc = Service::start(ServeOpts {
+        workers: std::thread::available_parallelism().map(|n| n.get().min(4)).unwrap_or(2),
+        max_queue: 256,
+        artifacts_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
+        ..Default::default()
+    });
+    let state: Arc<ServiceState> = svc.state();
+    let create = |name: &str| {
+        format!(
+            r#"{{"op":"create_session","session":"{name}","shape":"{}","d":{},"r":1,"dtype":"double","domain":"{}","backend":"native","threads":1}}"#,
+            case.shape, case.d, case.domain
+        )
+    };
+    let advance =
+        |name: &str| format!(r#"{{"op":"advance","session":"{name}","steps":{}}}"#, case.steps);
+
+    // Cold: the very first advance pays the planner (cache miss).
+    let (resp, _) = handle_line(&state, &create("cold"));
+    assert!(resp.contains("\"ok\":true"), "{resp}");
+    let t0 = Instant::now();
+    let (resp, _) = handle_line(&state, &advance("cold"));
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(resp.contains("\"cache\":\"miss\""), "{resp}");
+
+    // Warm: concurrent clients stream advances; every plan is a hit.
+    let wall0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            let state = state.clone();
+            let name = format!("warm{ci}");
+            let create = create(&name);
+            let advance = advance(&name);
+            std::thread::spawn(move || {
+                let (resp, _) = handle_line(&state, &create);
+                assert!(resp.contains("\"ok\":true"), "{resp}");
+                let mut lat_ns = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let t0 = Instant::now();
+                    let (resp, _) = handle_line(&state, &advance);
+                    lat_ns.push(t0.elapsed().as_nanos() as f64);
+                    assert!(resp.contains("\"ok\":true"), "{resp}");
+                }
+                lat_ns
+            })
+        })
+        .collect();
+    let lat_ns: Vec<f64> =
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect();
+    let wall_s = wall0.elapsed().as_secs_f64();
+
+    let jobs = lat_ns.len();
+    let jobs_per_sec = jobs as f64 / wall_s;
+    let p50_ms = stats::percentile(&lat_ns, 50.0) / 1e6;
+    let p99_ms = stats::percentile(&lat_ns, 99.0) / 1e6;
+    let snap = state.counters.snapshot();
+    println!(
+        "{:<18} {jobs:>5} jobs  {jobs_per_sec:>9.1} jobs/s  cold {cold_ms:>8.3} ms  \
+         p50 {p50_ms:>7.3} ms  p99 {p99_ms:>7.3} ms  plan hits {}/{}",
+        case.name,
+        snap.plan_hits,
+        snap.plan_hits + snap.plan_misses,
+    );
+    assert!(snap.plan_hits > 0, "warm runs must hit the plan cache");
+    drop(svc); // shutdown: close queue, join workers
+    obj(vec![
+        ("shape", Json::Str(case.name.to_string())),
+        ("domain", Json::Str(case.domain.to_string())),
+        ("steps", Json::Num(case.steps as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("jobs", Json::Num(jobs as f64)),
+        ("jobs_per_sec", Json::Num(jobs_per_sec)),
+        ("cold_ms", Json::Num(cold_ms)),
+        ("warm_p50_ms", Json::Num(p50_ms)),
+        ("warm_p99_ms", Json::Num(p99_ms)),
+        ("plan_hits", Json::Num(snap.plan_hits as f64)),
+        ("plan_misses", Json::Num(snap.plan_misses as f64)),
+    ])
+}
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let (clients, per_client) = if fast { (2, 5) } else { (4, 50) };
+    let cases = [
+        ShapeCase { name: "star2d/192x192", shape: "star", d: 2, domain: "192x192", steps: 4 },
+        ShapeCase { name: "heat3d/32x32x32", shape: "star", d: 3, domain: "32x32x32", steps: 2 },
+    ];
+    println!("### bench group: service_throughput ({clients} clients × {per_client} jobs)");
+    let results: Vec<Json> = cases.iter().map(|c| run_case(c, clients, per_client)).collect();
+    let doc = obj(vec![
+        ("bench", Json::Str("service_throughput".to_string())),
+        ("fast", Json::Bool(fast)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_service.json", format!("{doc}\n")).expect("write BENCH_service.json");
+    println!("wrote BENCH_service.json");
+}

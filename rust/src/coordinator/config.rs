@@ -119,11 +119,58 @@ pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
         OptSpec { name: "gpu", help: "a100|v100|h100|rtx4090", takes_value: true, default: Some("a100") },
         OptSpec { name: "threads", help: "gather workers", takes_value: true, default: Some("4") },
         OptSpec { name: "engine", help: "force engine by name", takes_value: true, default: None },
-        OptSpec { name: "backend", help: "backend: auto|native|pjrt", takes_value: true, default: Some("auto") },
+        OptSpec {
+            name: "backend",
+            help: "execution substrate for plan/run/sweep: auto|native|pjrt",
+            takes_value: true,
+            default: Some("auto"),
+        },
         OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: None },
         OptSpec { name: "verify", help: "check vs golden oracle", takes_value: false, default: None },
         OptSpec { name: "locked", help: "apply profiling clock lock", takes_value: false, default: None },
     ]
+}
+
+/// `stencilctl serve` options: everything run-like commands take, plus
+/// the daemon flags (`--addr`, `--stdio`, `--workers`, `--max-queue`,
+/// `--budget-ms`, `--plan-cache`).
+pub fn serve_opt_specs() -> Vec<crate::util::cli::OptSpec> {
+    use crate::util::cli::OptSpec;
+    let mut specs = run_opt_specs();
+    specs.extend([
+        OptSpec {
+            name: "addr",
+            help: "serve: TCP listen address",
+            takes_value: true,
+            default: Some("127.0.0.1:7141"),
+        },
+        OptSpec {
+            name: "stdio",
+            help: "serve: one connection on stdin/stdout",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec { name: "workers", help: "serve: worker threads", takes_value: true, default: Some("2") },
+        OptSpec {
+            name: "max-queue",
+            help: "serve: bounded job-queue capacity",
+            takes_value: true,
+            default: Some("64"),
+        },
+        OptSpec {
+            name: "budget-ms",
+            help: "serve: admission budget in predicted ms (omit = accept all)",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "plan-cache",
+            help: "serve: plan cache capacity in entries",
+            takes_value: true,
+            default: Some("128"),
+        },
+    ]);
+    specs
 }
 
 #[cfg(test)]
@@ -174,6 +221,33 @@ mod tests {
     fn domain_rank_follows_pattern() {
         let c = parse(&["--d", "3"]);
         assert_eq!(c.domain, vec![64, 64, 64]);
+    }
+
+    #[test]
+    fn serve_specs_extend_run_specs() {
+        let run = run_opt_specs();
+        let serve = serve_opt_specs();
+        // every run-like option survives (shared RunConfig parsing)…
+        for spec in &run {
+            assert!(serve.iter().any(|s| s.name == spec.name), "missing --{}", spec.name);
+        }
+        // …plus each serve flag exactly once
+        for name in ["addr", "stdio", "workers", "max-queue", "budget-ms", "plan-cache"] {
+            assert_eq!(
+                serve.iter().filter(|s| s.name == name).count(),
+                1,
+                "--{name} declared once"
+            );
+        }
+        // serve flags parse with their defaults
+        let raw: Vec<String> =
+            vec!["serve".into(), "--workers".into(), "3".into(), "--stdio".into()];
+        let args = Args::parse(&raw, &serve).unwrap();
+        assert_eq!(args.get_usize("workers").unwrap(), Some(3));
+        assert_eq!(args.get("addr"), Some("127.0.0.1:7141"));
+        assert_eq!(args.get_usize("max-queue").unwrap(), Some(64));
+        assert!(args.flag("stdio"));
+        assert_eq!(args.get_f64("budget-ms").unwrap(), None);
     }
 
     #[test]

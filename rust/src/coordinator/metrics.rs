@@ -1,6 +1,9 @@
 //! Run metrics: what the coordinator actually achieved, phase by phase,
-//! against what the model predicted.
+//! against what the model predicted — plus the service layer's
+//! aggregate accounting ([`ServiceCounters`] service-wide,
+//! [`SessionStats`] per session).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Phase-split accounting for one run.
@@ -64,6 +67,140 @@ impl RunMetrics {
     }
 }
 
+/// Lock-free service-wide counters, shared by every connection handler
+/// and worker thread of `stencilctl serve`.  Monotonic sums only —
+/// relaxed ordering is sufficient (readers want totals, not ordering).
+#[derive(Debug, Default)]
+pub struct ServiceCounters {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub jobs_accepted: AtomicU64,
+    pub jobs_downgraded: AtomicU64,
+    pub jobs_rejected: AtomicU64,
+    pub queue_rejected: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub plan_hits: AtomicU64,
+    pub plan_misses: AtomicU64,
+    pub steps_total: AtomicU64,
+    pub point_steps_total: AtomicU64,
+    pub exec_wall_ns: AtomicU64,
+}
+
+impl ServiceCounters {
+    pub fn bump(c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(c: &AtomicU64, v: u64) {
+        c.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record one completed job's run metrics.
+    pub fn record_run(&self, m: &RunMetrics) {
+        Self::bump(&self.jobs_completed);
+        Self::add(&self.steps_total, m.steps as u64);
+        Self::add(&self.point_steps_total, m.points * m.steps as u64);
+        Self::add(&self.exec_wall_ns, m.wall_ns);
+    }
+
+    /// A consistent-enough point-in-time copy for rendering.
+    pub fn snapshot(&self) -> ServiceSnapshot {
+        let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        ServiceSnapshot {
+            requests: get(&self.requests),
+            errors: get(&self.errors),
+            jobs_accepted: get(&self.jobs_accepted),
+            jobs_downgraded: get(&self.jobs_downgraded),
+            jobs_rejected: get(&self.jobs_rejected),
+            queue_rejected: get(&self.queue_rejected),
+            jobs_completed: get(&self.jobs_completed),
+            jobs_failed: get(&self.jobs_failed),
+            plan_hits: get(&self.plan_hits),
+            plan_misses: get(&self.plan_misses),
+            steps_total: get(&self.steps_total),
+            point_steps_total: get(&self.point_steps_total),
+            exec_wall_ns: get(&self.exec_wall_ns),
+        }
+    }
+}
+
+/// Plain-value copy of [`ServiceCounters`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServiceSnapshot {
+    pub requests: u64,
+    pub errors: u64,
+    pub jobs_accepted: u64,
+    pub jobs_downgraded: u64,
+    pub jobs_rejected: u64,
+    pub queue_rejected: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub steps_total: u64,
+    pub point_steps_total: u64,
+    pub exec_wall_ns: u64,
+}
+
+impl ServiceSnapshot {
+    /// Aggregate point-updates/s over all completed jobs' wall time.
+    pub fn throughput(&self) -> f64 {
+        if self.exec_wall_ns == 0 {
+            return 0.0;
+        }
+        self.point_steps_total as f64 / (self.exec_wall_ns as f64 * 1e-9)
+    }
+
+    /// Plan-cache hit rate in [0, 1] (0 when the cache is untouched).
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Per-session accounting, guarded by the owning session's mutex.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub jobs: u64,
+    pub steps: u64,
+    pub point_steps: u64,
+    pub exec_wall_ns: u64,
+}
+
+impl SessionStats {
+    pub fn record_run(&mut self, m: &RunMetrics) {
+        self.jobs += 1;
+        self.steps += m.steps as u64;
+        self.point_steps += m.points * m.steps as u64;
+        self.exec_wall_ns += m.wall_ns;
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.exec_wall_ns == 0 {
+            return 0.0;
+        }
+        self.point_steps as f64 / (self.exec_wall_ns as f64 * 1e-9)
+    }
+}
+
+/// One row of the `stats` rendering: a session's identity + stats.
+/// (Defined here, next to the counters it aggregates, so `report` can
+/// render service stats without depending on the service layer.)
+#[derive(Debug, Clone)]
+pub struct SessionRow {
+    pub name: String,
+    pub pattern: String,
+    pub dtype: &'static str,
+    pub domain: String,
+    pub backend: &'static str,
+    pub stats: SessionStats,
+}
+
 fn pct(part: u64, whole: u64) -> f64 {
     if whole == 0 {
         0.0
@@ -100,6 +237,39 @@ mod tests {
         let m = RunMetrics::default();
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.overhead_fraction(), 0.0);
+    }
+
+    #[test]
+    fn service_counters_accumulate_and_snapshot() {
+        let c = ServiceCounters::default();
+        ServiceCounters::bump(&c.requests);
+        ServiceCounters::bump(&c.requests);
+        ServiceCounters::bump(&c.plan_misses);
+        ServiceCounters::bump(&c.plan_hits);
+        let m = RunMetrics { steps: 4, points: 100, wall_ns: 1_000_000_000, ..Default::default() };
+        c.record_run(&m);
+        let s = c.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.jobs_completed, 1);
+        assert_eq!(s.steps_total, 4);
+        assert_eq!(s.point_steps_total, 400);
+        assert!((s.throughput() - 400.0).abs() < 1e-9);
+        assert!((s.plan_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_stats_mirror_run_metrics() {
+        let mut st = SessionStats::default();
+        let m = RunMetrics { steps: 2, points: 50, wall_ns: 500_000_000, ..Default::default() };
+        st.record_run(&m);
+        st.record_run(&m);
+        assert_eq!(st.jobs, 2);
+        assert_eq!(st.steps, 4);
+        assert_eq!(st.point_steps, 200);
+        assert!((st.throughput() - 200.0).abs() < 1e-9);
+        // empty stats are safe
+        assert_eq!(SessionStats::default().throughput(), 0.0);
+        assert_eq!(ServiceCounters::default().snapshot().plan_hit_rate(), 0.0);
     }
 
     #[test]

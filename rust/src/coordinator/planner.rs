@@ -38,6 +38,64 @@ pub struct Request {
     pub max_t: usize,
 }
 
+/// The cacheable identity of a planning request.
+///
+/// [`plan`] is a pure function of `(Request, Manifest)`: candidate
+/// enumeration and roofline scoring read nothing else.  Two requests
+/// with equal keys therefore produce identical [`Plan`]s against the
+/// same manifest, which is what lets the service layer memoize the
+/// planner (`service::PlanCache`) instead of re-scoring every
+/// `(engine × t)` candidate on every request.
+///
+/// `domain` does not influence scoring (throughput is per-point) but is
+/// part of the key so cache entries map 1:1 onto distinct workloads —
+/// per-domain hit counters stay meaningful and a future domain-aware
+/// scorer can't silently alias entries.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PlanKey {
+    /// Canonical pattern label ("Box-2D1R").
+    pub pattern: String,
+    pub dtype: &'static str,
+    pub domain: Vec<usize>,
+    /// Steps enter feasibility (PJRT needs whole fused launches).
+    pub steps: usize,
+    pub max_t: usize,
+    pub backend: &'static str,
+    pub gpu: String,
+}
+
+impl PlanKey {
+    /// One-line canonical form (log lines, stats rendering).
+    pub fn canonical(&self) -> String {
+        let dims: Vec<String> = self.domain.iter().map(|d| d.to_string()).collect();
+        format!(
+            "{}|{}|{}|s{}|t<={}|{}|{}",
+            self.pattern,
+            self.dtype,
+            dims.join("x"),
+            self.steps,
+            self.max_t,
+            self.backend,
+            self.gpu
+        )
+    }
+}
+
+impl Request {
+    /// Build the cache key for this request over a concrete domain.
+    pub fn plan_key(&self, domain: &[usize]) -> PlanKey {
+        PlanKey {
+            pattern: self.pattern.label(),
+            dtype: self.dtype.as_str(),
+            domain: domain.to_vec(),
+            steps: self.steps,
+            max_t: self.max_t,
+            backend: self.backend.as_str(),
+            gpu: self.gpu.name.to_string(),
+        }
+    }
+}
+
 /// Where a candidate would execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecTarget {
@@ -278,6 +336,38 @@ mod tests {
         let cands = candidates(&r, None);
         assert!(!cands.is_empty());
         assert!(cands.iter().all(|c| c.target == ExecTarget::Native));
+    }
+
+    #[test]
+    fn plan_key_identity() {
+        let r1 = req(Shape::Box, 2, 1, Dtype::F32);
+        let r2 = req(Shape::Box, 2, 1, Dtype::F32);
+        assert_eq!(r1.plan_key(&[256, 256]), r2.plan_key(&[256, 256]));
+        // every varying axis must change the key
+        let k1 = r1.plan_key(&[256, 256]);
+        assert_ne!(k1, r1.plan_key(&[128, 256]));
+        assert_ne!(k1, req(Shape::Star, 2, 1, Dtype::F32).plan_key(&[256, 256]));
+        assert_ne!(k1, req(Shape::Box, 2, 2, Dtype::F32).plan_key(&[256, 256]));
+        assert_ne!(k1, req(Shape::Box, 2, 1, Dtype::F64).plan_key(&[256, 256]));
+        let mut rb = req(Shape::Box, 2, 1, Dtype::F32);
+        rb.backend = BackendKind::Native;
+        assert_ne!(r1.plan_key(&[256, 256]), rb.plan_key(&[256, 256]));
+        let mut rt = req(Shape::Box, 2, 1, Dtype::F32);
+        rt.max_t = 4;
+        assert_ne!(r1.plan_key(&[256, 256]), rt.plan_key(&[256, 256]));
+        let canon = r1.plan_key(&[256, 256]).canonical();
+        assert!(canon.contains("Box-2D1R") && canon.contains("256x256"), "{canon}");
+    }
+
+    #[test]
+    fn equal_keys_mean_equal_plans() {
+        // The purity contract PlanKey documents: same key -> same plan.
+        let r = req(Shape::Box, 2, 1, Dtype::F32);
+        let p1 = plan(&r, None).unwrap();
+        let p2 = plan(&r.clone(), None).unwrap();
+        assert_eq!(p1.chosen.engine.name, p2.chosen.engine.name);
+        assert_eq!(p1.chosen.t, p2.chosen.t);
+        assert_eq!(p1.alternatives.len(), p2.alternatives.len());
     }
 
     #[test]

@@ -17,9 +17,13 @@
 //!   trait plus [`backend::NativeBackend`] (tiled, halo-split,
 //!   multi-threaded CPU engine for any pattern/dtype/fusion depth) and
 //!   [`backend::PjrtBackend`] (AOT artifacts through [`runtime`]).
-//! * [`coordinator`] — the serving layer: planner (auto unit+fusion
-//!   selection via the criteria), domain tiling + halo exchange, worker
-//!   pool, metrics.
+//! * [`coordinator`] — planning + dispatch: planner (auto unit+fusion
+//!   selection via the criteria), domain tiling + halo exchange,
+//!   run/service metrics.
+//! * [`service`] — the `stencilctl serve` daemon: NDJSON protocol over
+//!   TCP/stdio, resident sessions, a plan cache keyed by
+//!   [`coordinator::planner::PlanKey`], a bounded job queue + worker
+//!   pool, and model-guided admission control.
 //! * [`util`] — from-scratch substrates (JSON, CLI, tables, RNG, property
 //!   testing, bench harness): the offline build environment vendors only
 //!   the `xla` and `anyhow` crates, so these are implemented here.
@@ -35,6 +39,7 @@ pub mod sim;
 pub mod runtime;
 pub mod backend;
 pub mod coordinator;
+pub mod service;
 pub mod report;
 
 pub use model::stencil::{Shape, StencilPattern};

@@ -5,13 +5,14 @@
 //!   plan       run the planner: chosen engine + fusion depth + backend
 //!   run        advance a real domain (--backend auto|native|pjrt)
 //!   sweep      fusion-depth sweep of predictions for one config
+//!   serve      long-lived NDJSON daemon (sessions, plan cache, admission)
 //!   list       list AOT artifacts from the manifest
 //!   reproduce  regenerate a paper table/figure (table2..4, fig2..16, all)
 
 use anyhow::{bail, Result};
 
 use tc_stencil::backend;
-use tc_stencil::coordinator::config::{run_opt_specs, RunConfig};
+use tc_stencil::coordinator::config::{run_opt_specs, serve_opt_specs, RunConfig};
 use tc_stencil::coordinator::{planner, scheduler};
 use tc_stencil::engines;
 use tc_stencil::hardware::Gpu;
@@ -19,6 +20,7 @@ use tc_stencil::model::perf::{Dtype, Unit, Workload};
 use tc_stencil::model::{criteria, scenario};
 use tc_stencil::report;
 use tc_stencil::runtime::manifest::Manifest;
+use tc_stencil::service;
 use tc_stencil::sim::{exec, golden};
 use tc_stencil::util::cli::{usage, Args};
 use tc_stencil::util::table::fnum;
@@ -32,13 +34,19 @@ fn main() {
 }
 
 fn dispatch(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &run_opt_specs())?;
+    // `serve` carries extra flags of its own; its spec list is a strict
+    // superset of the run-like one, so enabling it whenever "serve"
+    // appears anywhere keeps option-before-subcommand orderings working
+    // (a stray "serve" option *value* merely widens the accepted flags).
+    let specs = if raw.iter().any(|a| a == "serve") { serve_opt_specs() } else { run_opt_specs() };
+    let args = Args::parse(raw, &specs)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "analyze" => analyze(&args),
         "plan" => plan_cmd(&args),
         "run" => run_cmd(&args),
         "sweep" => sweep(&args),
+        "serve" => serve_cmd(&args),
         "list" => list(&args),
         "reproduce" => reproduce(&args),
         "help" | "--help" => {
@@ -52,17 +60,45 @@ fn dispatch(raw: &[String]) -> Result<()> {
 fn help_text() -> String {
     format!(
         "stencilctl — Do We Need Tensor Cores for Stencil Computations?\n\n\
-         subcommands: analyze | plan | run | sweep | list | reproduce <id>\n\
+         subcommands: analyze | plan | run | sweep | serve | list | reproduce <id>\n\
          reproduce ids: table2 table3 table4 fig2 fig8 fig10 fig11 fig13 fig15 fig16 all\n\n\
-         backends (--backend, for plan/run):\n\
+         backends (--backend, honored by plan, run, and sweep — sweep\n\
+         scores predictions only, so the flag merely scopes candidates):\n\
            auto    prefer a matching AOT artifact on PJRT, else native (default)\n\
            native  tiled multi-threaded CPU engine — any pattern/dtype/t,\n\
                    f64 results bit-identical to the golden oracle\n\
            pjrt    require a pre-built AOT artifact (needs `make artifacts`\n\
                    and a pjrt-enabled build: vendored xla dependency +\n\
-                   --features pjrt; see Cargo.toml)\n\n{}",
+                   --features pjrt; see Cargo.toml)\n\n\
+         serve (long-lived daemon, newline-delimited JSON protocol):\n\
+           --addr HOST:PORT   TCP listen address (default 127.0.0.1:7141)\n\
+           --stdio            serve one connection on stdin/stdout instead\n\
+           --workers N        job-queue worker threads (default 2)\n\
+           --max-queue N      bounded queue capacity (default 64)\n\
+           --budget-ms MS     admission budget: refuse/downgrade jobs whose\n\
+                              model-predicted runtime exceeds MS (default off)\n\
+           --plan-cache N     plan cache capacity in entries (default 128)\n\
+           requests: ping | plan | create_session | advance | fetch |\n\
+                     close_session | stats | shutdown (see rust/README.md)\n\n{}",
         usage(&run_opt_specs())
     )
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let (cfg, gpu) = cfg_and_gpu(args)?;
+    let opts = service::ServeOpts {
+        addr: args.get_or("addr", "127.0.0.1:7141").to_string(),
+        workers: args.get_usize("workers")?.unwrap_or(2).max(1),
+        max_queue: args.get_usize("max-queue")?.unwrap_or(64).max(1),
+        budget_ms: args.get_f64("budget-ms")?,
+        plan_cache_cap: args.get_usize("plan-cache")?.unwrap_or(128).max(1),
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        gpu,
+    };
+    let mut svc = service::Service::start(opts);
+    let res = if args.flag("stdio") { svc.serve_stdio() } else { svc.serve_tcp() };
+    svc.shutdown();
+    res
 }
 
 fn cfg_and_gpu(args: &Args) -> Result<(RunConfig, Gpu)> {
@@ -213,7 +249,7 @@ fn run_cmd(args: &Args) -> Result<()> {
     } else {
         cfg.steps
     };
-    let weights = default_weights(&cfg.pattern);
+    let weights = cfg.pattern.uniform_weights();
     let job = backend::Job {
         pattern: cfg.pattern,
         dtype: cfg.dtype,
@@ -243,11 +279,11 @@ fn run_cmd(args: &Args) -> Result<()> {
         cfg.domain
     );
     let n: usize = cfg.domain.iter().product();
-    let mut field = gaussian_field(&cfg.domain);
+    let mut field = golden::gaussian(&cfg.domain);
     let metrics = scheduler::advance(be.as_mut(), &job, &mut field)?;
     println!("{}", metrics.render());
     if args.flag("verify") {
-        let initial = gaussian_field(&cfg.domain);
+        let initial = golden::gaussian(&cfg.domain);
         let w = golden::Weights::new(cfg.pattern.d, 2 * cfg.pattern.r + 1, weights);
         let mut want = golden::Field::from_vec(&cfg.domain, initial);
         for _ in 0..steps / t {
@@ -368,31 +404,4 @@ fn reproduce(args: &Args) -> Result<()> {
         bail!("unknown reproduce id {what:?}");
     }
     Ok(())
-}
-
-fn gaussian_field(domain: &[usize]) -> Vec<f64> {
-    let n: usize = domain.iter().product();
-    let mut out = vec![0.0; n];
-    let d = domain.len();
-    let mut idx = vec![0usize; d];
-    for (flat, v) in out.iter_mut().enumerate() {
-        let mut rem = flat;
-        for k in (0..d).rev() {
-            idx[k] = rem % domain[k];
-            rem /= domain[k];
-        }
-        let mut q = 0.0;
-        for k in 0..d {
-            let c = (idx[k] as f64 - domain[k] as f64 / 2.0) / (domain[k] as f64 / 6.0);
-            q += c * c;
-        }
-        *v = (-q / 2.0).exp();
-    }
-    out
-}
-
-fn default_weights(p: &tc_stencil::model::stencil::StencilPattern) -> Vec<f64> {
-    let sup = p.support();
-    let k = sup.count() as f64;
-    sup.cells.iter().map(|&b| if b { 1.0 / k } else { 0.0 }).collect()
 }

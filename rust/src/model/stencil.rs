@@ -92,6 +92,15 @@ impl StencilPattern {
         g
     }
 
+    /// Support-normalized uniform weights over the (2r+1)^d hull
+    /// (row-major, zeros off-support) — the default kernel for CLI runs
+    /// and service sessions that don't supply their own.
+    pub fn uniform_weights(&self) -> Vec<f64> {
+        let sup = self.support();
+        let k = sup.count() as f64;
+        sup.cells.iter().map(|&b| if b { 1.0 / k } else { 0.0 }).collect()
+    }
+
     /// K^(t) — points in the fused kernel support (exact for any shape).
     ///
     /// Box: (2rt+1)^d (Eq. 10 numerator).  Star: the t-fold Minkowski sum

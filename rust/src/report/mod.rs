@@ -405,6 +405,53 @@ pub fn scenario_census(gpu: &Gpu) -> [usize; 4] {
     counts
 }
 
+/// The `stats` request's human-readable rendering: service-wide
+/// counters plus one row per live session (`stencilctl serve`).
+pub fn service_stats(
+    s: &crate::coordinator::metrics::ServiceSnapshot,
+    sessions: &[crate::coordinator::metrics::SessionRow],
+) -> String {
+    let mut svc = Table::new(
+        "service — counters",
+        &[
+            "requests", "errors", "accepted", "downgraded", "rejected", "queue-full",
+            "completed", "failed", "plan hits", "plan misses", "hit rate", "steps", "MSt/s",
+        ],
+    );
+    svc.row(&[
+        s.requests.to_string(),
+        s.errors.to_string(),
+        s.jobs_accepted.to_string(),
+        s.jobs_downgraded.to_string(),
+        s.jobs_rejected.to_string(),
+        s.queue_rejected.to_string(),
+        s.jobs_completed.to_string(),
+        s.jobs_failed.to_string(),
+        s.plan_hits.to_string(),
+        s.plan_misses.to_string(),
+        format!("{:.0}%", s.plan_hit_rate() * 100.0),
+        s.steps_total.to_string(),
+        format!("{:.2}", s.throughput() / 1e6),
+    ]);
+    let mut per = Table::new(
+        "service — sessions",
+        &["session", "pattern", "dtype", "domain", "backend", "jobs", "steps", "MSt/s"],
+    );
+    for r in sessions {
+        per.row(&[
+            r.name.clone(),
+            r.pattern.clone(),
+            r.dtype.to_string(),
+            r.domain.clone(),
+            r.backend.to_string(),
+            r.stats.jobs.to_string(),
+            r.stats.steps.to_string(),
+            format!("{:.2}", r.stats.throughput() / 1e6),
+        ]);
+    }
+    format!("{}\n{}", svc.render(), per.render())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -520,5 +567,42 @@ mod tests {
     fn census_covers_multiple_scenarios() {
         let c = scenario_census(&Gpu::a100());
         assert!(c.iter().filter(|&&n| n > 0).count() >= 3, "{c:?}");
+    }
+
+    #[test]
+    fn service_stats_renders_counters_and_sessions() {
+        use crate::coordinator::metrics::{ServiceSnapshot, SessionRow, SessionStats};
+        let snap = ServiceSnapshot {
+            requests: 10,
+            jobs_accepted: 4,
+            jobs_completed: 4,
+            plan_hits: 3,
+            plan_misses: 1,
+            steps_total: 16,
+            point_steps_total: 1600,
+            exec_wall_ns: 1_000_000_000,
+            ..Default::default()
+        };
+        let rows = vec![SessionRow {
+            name: "a".into(),
+            pattern: "Star-2D1R".into(),
+            dtype: "double",
+            domain: "32x32".into(),
+            backend: "native",
+            stats: SessionStats {
+                jobs: 4,
+                steps: 16,
+                point_steps: 1600,
+                exec_wall_ns: 1_000_000_000,
+            },
+        }];
+        let out = service_stats(&snap, &rows);
+        assert!(out.contains("service — counters"));
+        assert!(out.contains("service — sessions"));
+        assert!(out.contains("Star-2D1R"));
+        assert!(out.contains("75%"), "hit rate renders: {out}");
+        // empty session list still renders both tables
+        let out = service_stats(&snap, &[]);
+        assert!(out.contains("service — sessions"));
     }
 }

@@ -1,0 +1,235 @@
+//! Model-guided admission: the paper's pre-execution go/no-go test as a
+//! serving policy.
+//!
+//! The paper's criteria classify a workload's bottleneck region *before*
+//! executing it; a server can therefore predict a job's runtime from the
+//! plan's roofline scoring and refuse (or downgrade) work that would
+//! blow its latency budget — reporting the classification, not just
+//! "no".  Decision order for a job over `points × steps`:
+//!
+//! 1. no budget configured → accept at the requested/planned depth;
+//! 2. predicted wall time within budget → accept;
+//! 3. some other scored candidate fits → downgrade to the cheapest
+//!    fitting fusion depth (the response says so — fused-launch
+//!    semantics differ at domain boundaries, so this is never silent);
+//! 4. nothing fits → reject, citing the predicted time, the budget, and
+//!    the paper's scenario classification of the chosen candidate.
+
+use crate::coordinator::planner::{Candidate, Plan};
+use crate::model::roofline::Bound;
+use crate::sim::exec;
+
+/// The admission controller's verdict for one `advance` request.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    Accept {
+        t: usize,
+        predicted_ms: f64,
+        engine: String,
+        target: &'static str,
+    },
+    Downgrade {
+        from_t: usize,
+        t: usize,
+        predicted_ms: f64,
+        /// What the requested depth would have cost.
+        requested_ms: f64,
+        engine: String,
+        target: &'static str,
+    },
+    Reject(Rejection),
+}
+
+/// A refusal, carrying the model's reasoning.
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    pub predicted_ms: f64,
+    pub budget_ms: f64,
+    pub engine: String,
+    pub bound: &'static str,
+    /// Paper classification (scenario label / bound on unit).
+    pub classification: String,
+}
+
+fn wall_ms(c: &Candidate, points: u64, steps: usize, t: usize) -> f64 {
+    exec::wall_time(&c.prediction, points, steps, t.max(1)) * 1e3
+}
+
+/// Decide whether an `advance` of `steps` over `points` may run.
+///
+/// `requested_t` is the client's explicit fusion depth (None = the
+/// planner's choice); `budget_ms` is the service's per-job latency
+/// budget (None = accept everything).
+pub fn decide(
+    plan: &Plan,
+    requested_t: Option<usize>,
+    points: u64,
+    steps: usize,
+    budget_ms: Option<f64>,
+) -> Decision {
+    let all: Vec<&Candidate> =
+        std::iter::once(&plan.chosen).chain(plan.alternatives.iter()).collect();
+    let t0 = requested_t.unwrap_or(plan.chosen.t).max(1);
+    // Best-throughput candidate at the requested depth (falls back to
+    // the chosen candidate's prediction when t0 was never scored).
+    let c0: &Candidate = all
+        .iter()
+        .filter(|c| c.t == t0)
+        .max_by(|a, b| a.prediction.throughput.partial_cmp(&b.prediction.throughput).unwrap())
+        .copied()
+        .unwrap_or(&plan.chosen);
+    let ms0 = wall_ms(c0, points, steps, t0);
+    let Some(budget) = budget_ms else {
+        return Decision::Accept {
+            t: t0,
+            predicted_ms: ms0,
+            engine: c0.engine.name.to_string(),
+            target: c0.target.as_str(),
+        };
+    };
+    if ms0 <= budget {
+        return Decision::Accept {
+            t: t0,
+            predicted_ms: ms0,
+            engine: c0.engine.name.to_string(),
+            target: c0.target.as_str(),
+        };
+    }
+    let best_fit = all
+        .iter()
+        .map(|&c| (c, wall_ms(c, points, steps, c.t)))
+        .filter(|(_, ms)| *ms <= budget)
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    if let Some((c, ms)) = best_fit {
+        if c.t != t0 {
+            return Decision::Downgrade {
+                from_t: t0,
+                t: c.t,
+                predicted_ms: ms,
+                requested_ms: ms0,
+                engine: c.engine.name.to_string(),
+                target: c.target.as_str(),
+            };
+        }
+    }
+    let classification = match &plan.vs_cuda {
+        Some(cmp) => format!("{} ({:?})", cmp.scenario.label(), cmp.verdict),
+        None => format!(
+            "{:?}-bound on {}",
+            c0.prediction.bound,
+            c0.engine.unit.as_str()
+        ),
+    };
+    Decision::Reject(Rejection {
+        predicted_ms: ms0,
+        budget_ms: budget,
+        engine: c0.engine.name.to_string(),
+        bound: match c0.prediction.bound {
+            Bound::Memory => "memory-bound",
+            Bound::Compute => "compute-bound",
+        },
+        classification,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendKind;
+    use crate::coordinator::planner::{self, Request};
+    use crate::hardware::Gpu;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn plan(dtype: Dtype) -> Plan {
+        let req = Request {
+            pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+            dtype,
+            steps: 8,
+            gpu: Gpu::a100(),
+            backend: BackendKind::Auto,
+            max_t: 8,
+        };
+        planner::plan(&req, None).unwrap()
+    }
+
+    #[test]
+    fn no_budget_accepts_at_planned_depth() {
+        let p = plan(Dtype::F32);
+        match decide(&p, None, 1 << 16, 8, None) {
+            Decision::Accept { t, predicted_ms, .. } => {
+                assert_eq!(t, p.chosen.t);
+                assert!(predicted_ms > 0.0);
+            }
+            other => panic!("expected accept, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn generous_budget_accepts_explicit_depth() {
+        let p = plan(Dtype::F32);
+        match decide(&p, Some(2), 1 << 16, 8, Some(1e9)) {
+            Decision::Accept { t, .. } => assert_eq!(t, 2),
+            other => panic!("expected accept, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_budget_rejects_with_classification() {
+        let p = plan(Dtype::F32);
+        match decide(&p, None, 1 << 20, 64, Some(0.0)) {
+            Decision::Reject(r) => {
+                assert!(r.predicted_ms > 0.0);
+                assert_eq!(r.budget_ms, 0.0);
+                assert!(!r.engine.is_empty());
+                assert!(
+                    r.classification.contains("Scenario") || r.classification.contains("bound"),
+                    "classification must cite the model: {}",
+                    r.classification
+                );
+            }
+            other => panic!("expected reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tight_budget_downgrades_an_explicit_depth() {
+        // steps=1 at t=8 pays a whole 8-fold fused launch; t=1 pays one
+        // step.  A budget between the two must downgrade, not reject.
+        let p = plan(Dtype::F64);
+        let points = 1u64 << 22;
+        let all: Vec<&Candidate> =
+            std::iter::once(&p.chosen).chain(p.alternatives.iter()).collect();
+        let ms_of = |t: usize| {
+            all.iter()
+                .filter(|c| c.t == t)
+                .map(|&c| wall_ms(c, points, 1, t))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let expensive = {
+            let c = all
+                .iter()
+                .filter(|c| c.t == 8)
+                .max_by(|a, b| {
+                    a.prediction.throughput.partial_cmp(&b.prediction.throughput).unwrap()
+                })
+                .copied();
+            match c {
+                Some(c) => wall_ms(c, points, 1, 8),
+                None => wall_ms(&p.chosen, points, 1, 8),
+            }
+        };
+        let cheap = (1..=8).map(ms_of).fold(f64::INFINITY, f64::min);
+        assert!(cheap < expensive, "need a separable budget window");
+        let budget = (cheap + expensive) / 2.0;
+        match decide(&p, Some(8), points, 1, Some(budget)) {
+            Decision::Downgrade { from_t, t, predicted_ms, requested_ms, .. } => {
+                assert_eq!(from_t, 8);
+                assert_ne!(t, 8);
+                assert!(predicted_ms <= budget);
+                assert!(requested_ms > budget);
+            }
+            other => panic!("expected downgrade, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! The service layer: `stencilctl serve`.
+//!
+//! Turns the one-shot CLI into a long-lived, concurrent daemon — the
+//! first piece of the production serving architecture.  A newline-
+//! delimited JSON protocol ([`protocol`], over TCP or stdio) fronts
+//! four cooperating components:
+//!
+//! * [`session`] — named domain fields stay resident across requests,
+//!   so clients stream `advance` calls instead of re-uploading state;
+//! * [`plan_cache`] — the planner's candidate enumeration + roofline
+//!   scoring memoized by [`PlanKey`](crate::coordinator::planner::PlanKey),
+//!   run once per distinct workload;
+//! * [`queue`] — a bounded job queue drained by a worker pool that
+//!   dispatches through the [`Backend`](crate::backend::Backend) trait
+//!   with per-job [`RunMetrics`](crate::coordinator::metrics::RunMetrics);
+//! * [`admission`] — the paper's analytical criteria as an admission
+//!   policy: jobs whose predicted runtime exceeds the budget are
+//!   downgraded or refused, with the bottleneck classification in the
+//!   refusal.
+//!
+//! [`server`] wires them together; aggregate accounting lives in
+//! [`coordinator::metrics`](crate::coordinator::metrics) and renders
+//! through [`report::service_stats`](crate::report::service_stats).
+
+pub mod admission;
+pub mod plan_cache;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod session;
+
+pub use plan_cache::PlanCache;
+pub use server::{Service, ServeOpts};
+pub use session::{Session, SessionStore};

@@ -1,0 +1,152 @@
+//! The plan cache: memoized planner results keyed by [`PlanKey`].
+//!
+//! Planning is pure (`planner::plan` is a function of the request and
+//! the manifest — see [`PlanKey`]'s contract), so the service runs the
+//! candidate enumeration + roofline scoring once per distinct workload
+//! and serves every subsequent identical request from the cache.  FIFO
+//! eviction bounds memory; hit/miss counters feed the `stats` op.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::planner::{self, Plan, PlanKey, Request};
+use crate::runtime::manifest::Manifest;
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<PlanKey, Arc<Plan>>,
+    order: VecDeque<PlanKey>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Bounded, thread-safe memo of planner decisions.
+#[derive(Debug)]
+pub struct PlanCache {
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PlanCache {
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache { cap: cap.max(1), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Plan through the cache; returns the plan and whether it was a hit.
+    ///
+    /// The lock is dropped while the planner runs: a race between two
+    /// misses on the same key costs one redundant (pure) computation,
+    /// never a wrong answer — the first insert wins.
+    pub fn plan(
+        &self,
+        req: &Request,
+        domain: &[usize],
+        manifest: Option<&Manifest>,
+    ) -> Result<(Arc<Plan>, bool)> {
+        let key = req.plan_key(domain);
+        {
+            let mut g = self.inner.lock().unwrap();
+            let cached = g.map.get(&key).cloned();
+            if let Some(p) = cached {
+                g.hits += 1;
+                return Ok((p, true));
+            }
+        }
+        let plan = Arc::new(planner::plan(req, manifest)?);
+        let mut g = self.inner.lock().unwrap();
+        g.misses += 1;
+        if !g.map.contains_key(&key) {
+            if g.map.len() >= self.cap {
+                if let Some(old) = g.order.pop_front() {
+                    g.map.remove(&old);
+                }
+            }
+            g.map.insert(key.clone(), plan.clone());
+            g.order.push_back(key);
+        }
+        Ok((plan, false))
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.inner.lock().unwrap().misses
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendKind;
+    use crate::hardware::Gpu;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn req(shape: Shape, d: usize, r: usize) -> Request {
+        Request {
+            pattern: StencilPattern::new(shape, d, r).unwrap(),
+            dtype: Dtype::F32,
+            steps: 8,
+            gpu: Gpu::a100(),
+            backend: BackendKind::Auto,
+            max_t: 8,
+        }
+    }
+
+    #[test]
+    fn second_identical_request_hits() {
+        let cache = PlanCache::new(8);
+        let r = req(Shape::Box, 2, 1);
+        let (p1, hit1) = cache.plan(&r, &[256, 256], None).unwrap();
+        assert!(!hit1);
+        let (p2, hit2) = cache.plan(&r, &[256, 256], None).unwrap();
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&p1, &p2), "hit must return the cached Arc");
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_workloads_do_not_alias() {
+        let cache = PlanCache::new(8);
+        let (_, h1) = cache.plan(&req(Shape::Box, 2, 1), &[256, 256], None).unwrap();
+        let (_, h2) = cache.plan(&req(Shape::Star, 2, 1), &[256, 256], None).unwrap();
+        let (_, h3) = cache.plan(&req(Shape::Box, 2, 1), &[128, 128], None).unwrap();
+        assert!(!h1 && !h2 && !h3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn capacity_bounds_entries_fifo() {
+        let cache = PlanCache::new(2);
+        cache.plan(&req(Shape::Box, 2, 1), &[16, 16], None).unwrap();
+        cache.plan(&req(Shape::Box, 2, 2), &[16, 16], None).unwrap();
+        cache.plan(&req(Shape::Box, 2, 3), &[16, 16], None).unwrap(); // evicts r=1
+        assert_eq!(cache.len(), 2);
+        let (_, hit) = cache.plan(&req(Shape::Box, 2, 1), &[16, 16], None).unwrap();
+        assert!(!hit, "evicted entry must be recomputed");
+        let (_, hit) = cache.plan(&req(Shape::Box, 2, 3), &[16, 16], None).unwrap();
+        assert!(hit, "resident entry still served");
+    }
+
+    #[test]
+    fn planner_errors_are_not_cached() {
+        let cache = PlanCache::new(4);
+        let mut r = req(Shape::Box, 2, 1);
+        r.backend = BackendKind::Pjrt; // no manifest -> no candidates
+        assert!(cache.plan(&r, &[16, 16], None).is_err());
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.misses(), 0, "failed plans count neither way");
+    }
+}

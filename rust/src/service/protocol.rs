@@ -1,0 +1,461 @@
+//! The NDJSON wire protocol of `stencilctl serve`.
+//!
+//! One JSON object per line in each direction: a client writes a
+//! request line, the server answers with exactly one response line.
+//! Parsing goes through [`Json::parse_line`] (`util::json`) — no new
+//! dependencies.  Grammar (fields beyond `op` per operation):
+//!
+//! ```text
+//! request        = { "op": <operation>, ... }
+//! operation      = "ping" | "plan" | "create_session" | "advance"
+//!                | "fetch" | "close_session" | "stats" | "shutdown"
+//! plan           = jobspec
+//! create_session = "session": name, jobspec,
+//!                  ( "field": [f64...] | "init": "gaussian"|"zeros" )
+//! advance        = "session": name, "steps": n, [ "t": depth ]
+//! fetch          = "session": name, [ "encoding": "num"|"hex" ]
+//! close_session  = "session": name
+//! jobspec        = [ "shape": "box"|"star" ], [ "d": 1..3 ], [ "r": n ],
+//!                  [ "dtype": "float"|"double" ], [ "domain": [n...]|"NxM" ],
+//!                  [ "steps": n ], [ "t": depth ], [ "backend": kind ],
+//!                  [ "threads": n ], [ "weights": [f64...] ]
+//! response       = { "ok": true, "op": ..., ... }
+//!                | { "ok": false, "op": ..., "error": code, "message": ... }
+//! ```
+//!
+//! The `hex` field encoding ships each f64 as 16 hex digits of its IEEE
+//! bits — bit-exact transport even for values (−0.0, non-shortest
+//! decimals) a numeric round-trip could normalize.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::BackendKind;
+use crate::coordinator::config::RunConfig;
+use crate::model::perf::Dtype;
+use crate::model::stencil::{Shape, StencilPattern};
+use crate::util::json::Json;
+
+/// Workload description shared by `plan` and `create_session`.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub pattern: StencilPattern,
+    pub dtype: Dtype,
+    pub domain: Vec<usize>,
+    /// Time steps per request (advance requests carry their own).
+    pub steps: usize,
+    /// Explicit fusion depth; `None` lets the planner choose (≤ 8).
+    pub t: Option<usize>,
+    pub backend: BackendKind,
+    pub threads: usize,
+    /// Base stencil weights; `None` = support-normalized uniform.
+    pub weights: Option<Vec<f64>>,
+}
+
+/// How a new session's field is initialized.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldInit {
+    Zeros,
+    Gaussian,
+    Data(Vec<f64>),
+}
+
+/// One parsed client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Ping,
+    Plan(JobSpec),
+    CreateSession { session: String, spec: JobSpec, init: FieldInit },
+    Advance { session: String, steps: usize, t: Option<usize> },
+    Fetch { session: String, hex: bool },
+    CloseSession { session: String },
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    /// The wire name of this request's operation.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Plan(_) => "plan",
+            Request::CreateSession { .. } => "create_session",
+            Request::Advance { .. } => "advance",
+            Request::Fetch { .. } => "fetch",
+            Request::CloseSession { .. } => "close_session",
+            Request::Stats => "stats",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
+    /// Parse a request object (one already-parsed NDJSON line).
+    pub fn parse(j: &Json) -> Result<Request> {
+        let op = j
+            .get("op")?
+            .as_str()
+            .ok_or_else(|| anyhow!("\"op\" must be a string"))?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            "plan" => Ok(Request::Plan(JobSpec::parse(j)?)),
+            "create_session" => {
+                let session = req_str(j, "session")?;
+                let spec = JobSpec::parse(j)?;
+                let init = match opt_f64_vec(j, "field")? {
+                    Some(v) => FieldInit::Data(v),
+                    None => match opt_str(j, "init").unwrap_or("gaussian") {
+                        "gaussian" => FieldInit::Gaussian,
+                        "zeros" => FieldInit::Zeros,
+                        other => bail!("unknown init {other:?} (want gaussian|zeros)"),
+                    },
+                };
+                Ok(Request::CreateSession { session, spec, init })
+            }
+            "advance" => Ok(Request::Advance {
+                session: req_str(j, "session")?,
+                steps: opt_usize(j, "steps")?.unwrap_or(8),
+                t: opt_usize(j, "t")?,
+            }),
+            "fetch" => Ok(Request::Fetch {
+                session: req_str(j, "session")?,
+                hex: matches!(opt_str(j, "encoding"), Some("hex")),
+            }),
+            "close_session" => Ok(Request::CloseSession { session: req_str(j, "session")? }),
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+}
+
+impl JobSpec {
+    /// Parse the jobspec fields out of a request object, applying the
+    /// same defaults as the CLI (`RunConfig::defaults`).
+    pub fn parse(j: &Json) -> Result<JobSpec> {
+        let domain = opt_domain(j, "domain")?;
+        let d = match opt_usize(j, "d")? {
+            Some(d) => d,
+            None => domain.as_ref().map(|dm| dm.len()).unwrap_or(2),
+        };
+        let r = opt_usize(j, "r")?.unwrap_or(1);
+        let shape = Shape::parse(opt_str(j, "shape").unwrap_or("box"))?;
+        let pattern = StencilPattern::new(shape, d, r)?;
+        let domain = match domain {
+            Some(dm) => dm,
+            None => default_domain(pattern.d)?,
+        };
+        if domain.len() != pattern.d {
+            bail!("domain rank {} != pattern dimensionality {}", domain.len(), pattern.d);
+        }
+        let dtype = Dtype::parse(opt_str(j, "dtype").unwrap_or("float"))?;
+        let backend = BackendKind::parse(opt_str(j, "backend").unwrap_or("auto"))?;
+        Ok(JobSpec {
+            pattern,
+            dtype,
+            domain,
+            steps: opt_usize(j, "steps")?.unwrap_or(8),
+            t: opt_usize(j, "t")?,
+            backend,
+            threads: opt_usize(j, "threads")?.unwrap_or(4).max(1),
+            weights: opt_f64_vec(j, "weights")?,
+        })
+    }
+
+    /// Total domain points.
+    pub fn points(&self) -> u64 {
+        self.domain.iter().map(|&n| n as u64).product()
+    }
+}
+
+fn default_domain(d: usize) -> Result<Vec<usize>> {
+    Ok(match d {
+        1 => vec![1024],
+        2 => vec![256, 256],
+        3 => vec![64, 64, 64],
+        other => bail!("unsupported dimensionality {other}"),
+    })
+}
+
+fn opt_str<'a>(j: &'a Json, k: &str) -> Option<&'a str> {
+    j.as_obj().and_then(|o| o.get(k)).and_then(|v| v.as_str())
+}
+
+fn req_str(j: &Json, k: &str) -> Result<String> {
+    j.get(k)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("field {k:?} must be a string"))
+}
+
+fn opt_usize(j: &Json, k: &str) -> Result<Option<usize>> {
+    match j.as_obj().and_then(|o| o.get(k)) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| anyhow!("field {k:?} must be a non-negative integer")),
+    }
+}
+
+fn opt_f64_vec(j: &Json, k: &str) -> Result<Option<Vec<f64>>> {
+    let Some(v) = j.as_obj().and_then(|o| o.get(k)) else {
+        return Ok(None);
+    };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("field {k:?} must be an array of numbers"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, x) in arr.iter().enumerate() {
+        out.push(
+            x.as_f64()
+                .ok_or_else(|| anyhow!("field {k:?}[{i}] must be a number"))?,
+        );
+    }
+    Ok(Some(out))
+}
+
+fn opt_domain(j: &Json, k: &str) -> Result<Option<Vec<usize>>> {
+    let Some(v) = j.as_obj().and_then(|o| o.get(k)) else {
+        return Ok(None);
+    };
+    match v {
+        Json::Str(s) => RunConfig::parse_domain(s).map(Some),
+        Json::Arr(items) => {
+            let mut dims = Vec::with_capacity(items.len());
+            for it in items {
+                dims.push(
+                    it.as_usize()
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| anyhow!("domain extents must be positive integers"))?,
+                );
+            }
+            if dims.is_empty() || dims.len() > 3 {
+                bail!("domain must have 1–3 extents, got {}", dims.len());
+            }
+            Ok(Some(dims))
+        }
+        _ => bail!("field {k:?} must be \"NxM\" or an array of extents"),
+    }
+}
+
+/// Chainable JSON-object builder for protocol responses.
+#[derive(Debug, Default)]
+pub struct Obj(BTreeMap<String, Json>);
+
+impl Obj {
+    pub fn new() -> Obj {
+        Obj::default()
+    }
+
+    pub fn set(mut self, k: &str, v: Json) -> Obj {
+        self.0.insert(k.to_string(), v);
+        self
+    }
+
+    pub fn str_(self, k: &str, v: &str) -> Obj {
+        self.set(k, Json::Str(v.to_string()))
+    }
+
+    pub fn num(self, k: &str, v: f64) -> Obj {
+        self.set(k, Json::Num(v))
+    }
+
+    pub fn int(self, k: &str, v: u64) -> Obj {
+        self.set(k, Json::Num(v as f64))
+    }
+
+    pub fn bool_(self, k: &str, v: bool) -> Obj {
+        self.set(k, Json::Bool(v))
+    }
+
+    pub fn done(self) -> Json {
+        Json::Obj(self.0)
+    }
+}
+
+/// Start a success response for `op`.
+pub fn ok(op: &str) -> Obj {
+    Obj::new().bool_("ok", true).str_("op", op)
+}
+
+/// A complete error response.
+pub fn err(op: &str, code: &str, message: &str) -> Json {
+    Obj::new()
+        .bool_("ok", false)
+        .str_("op", op)
+        .str_("error", code)
+        .str_("message", message)
+        .done()
+}
+
+/// Serialize a field for the wire (`hex` = bit-exact IEEE-754 transport).
+/// The numeric encoding falls back to hex per element for non-finite
+/// values (a diverged simulation must still fetch as valid JSON).
+pub fn encode_field(field: &[f64], hex: bool) -> Json {
+    Json::Arr(
+        field
+            .iter()
+            .map(|&v| {
+                if hex || !v.is_finite() {
+                    Json::Str(format!("{:016x}", v.to_bits()))
+                } else {
+                    Json::Num(v)
+                }
+            })
+            .collect(),
+    )
+}
+
+/// Decode a wire field (numbers and/or hex strings, mixed is fine).
+pub fn decode_field(v: &Json) -> Result<Vec<f64>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("field must be an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, x)| match x {
+            Json::Num(n) => Ok(*n),
+            Json::Str(s) => u64::from_str_radix(s, 16)
+                .map(f64::from_bits)
+                .map_err(|e| anyhow!("field[{i}]: bad hex f64 {s:?}: {e}")),
+            _ => Err(anyhow!("field[{i}] must be a number or a hex string")),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(line: &str) -> Result<Request> {
+        Request::parse(&Json::parse_line(line)?)
+    }
+
+    #[test]
+    fn parses_simple_ops() {
+        assert!(matches!(parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping));
+        assert!(matches!(parse(r#"{"op":"stats"}"#).unwrap(), Request::Stats));
+        assert!(matches!(parse(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown));
+        assert!(parse(r#"{"op":"warp"}"#).is_err());
+        assert!(parse(r#"{"noop":1}"#).is_err());
+    }
+
+    #[test]
+    fn jobspec_defaults_match_cli() {
+        let Request::Plan(s) = parse(r#"{"op":"plan"}"#).unwrap() else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.pattern.label(), "Box-2D1R");
+        assert_eq!(s.dtype, Dtype::F32);
+        assert_eq!(s.domain, vec![256, 256]);
+        assert_eq!(s.steps, 8);
+        assert_eq!(s.backend, BackendKind::Auto);
+        assert_eq!(s.t, None);
+    }
+
+    #[test]
+    fn jobspec_full_parse_and_domain_forms() {
+        let Request::Plan(s) = parse(
+            r#"{"op":"plan","shape":"star","d":3,"r":1,"dtype":"double",
+                "domain":[32,32,32],"steps":12,"t":3,"backend":"native","threads":2}"#,
+        )
+        .unwrap() else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.pattern.label(), "Star-3D1R");
+        assert_eq!(s.domain, vec![32, 32, 32]);
+        assert_eq!(s.t, Some(3));
+        assert_eq!(s.backend, BackendKind::Native);
+        // string form + d inferred from domain rank
+        let Request::Plan(s) = parse(r#"{"op":"plan","domain":"64x64x64"}"#).unwrap() else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.pattern.d, 3);
+        assert_eq!(s.domain, vec![64, 64, 64]);
+        // rank mismatch errors
+        assert!(parse(r#"{"op":"plan","d":2,"domain":[8,8,8]}"#).is_err());
+        assert!(parse(r#"{"op":"plan","domain":[8,0]}"#).is_err());
+    }
+
+    #[test]
+    fn create_session_inits() {
+        let Request::CreateSession { session, init, .. } =
+            parse(r#"{"op":"create_session","session":"a","field":[1,2,3]}"#).unwrap()
+        else {
+            panic!("expected create_session");
+        };
+        assert_eq!(session, "a");
+        assert_eq!(init, FieldInit::Data(vec![1.0, 2.0, 3.0]));
+        let Request::CreateSession { init, .. } =
+            parse(r#"{"op":"create_session","session":"b","init":"zeros"}"#).unwrap()
+        else {
+            panic!("expected create_session");
+        };
+        assert_eq!(init, FieldInit::Zeros);
+        let Request::CreateSession { init, .. } =
+            parse(r#"{"op":"create_session","session":"c"}"#).unwrap()
+        else {
+            panic!("expected create_session");
+        };
+        assert_eq!(init, FieldInit::Gaussian);
+        assert!(parse(r#"{"op":"create_session"}"#).is_err()); // name required
+        assert!(parse(r#"{"op":"create_session","session":"d","init":"ones"}"#).is_err());
+    }
+
+    #[test]
+    fn advance_and_fetch_parse() {
+        let Request::Advance { session, steps, t } =
+            parse(r#"{"op":"advance","session":"a","steps":4,"t":2}"#).unwrap()
+        else {
+            panic!("expected advance");
+        };
+        assert_eq!((session.as_str(), steps, t), ("a", 4, Some(2)));
+        let Request::Fetch { hex, .. } =
+            parse(r#"{"op":"fetch","session":"a","encoding":"hex"}"#).unwrap()
+        else {
+            panic!("expected fetch");
+        };
+        assert!(hex);
+        let Request::Fetch { hex, .. } = parse(r#"{"op":"fetch","session":"a"}"#).unwrap() else {
+            panic!("expected fetch");
+        };
+        assert!(!hex);
+    }
+
+    #[test]
+    fn field_encodings_roundtrip() {
+        // Shortest-roundtrip decimals are bit-exact for ordinary values…
+        let field = vec![0.1 + 0.2, 1.0 / 3.0, 5e-324, 42.0];
+        for hex in [false, true] {
+            let wire = encode_field(&field, hex).to_string();
+            let back = decode_field(&Json::parse_line(&wire).unwrap()).unwrap();
+            assert_eq!(back.len(), field.len());
+            for (a, b) in field.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "hex={hex}");
+            }
+        }
+        // …but only hex preserves −0.0 (the integer fast path prints "0").
+        let wire = encode_field(&[-0.0], true).to_string();
+        let back = decode_field(&Json::parse_line(&wire).unwrap()).unwrap();
+        assert_eq!(back[0].to_bits(), (-0.0f64).to_bits());
+        // a diverged field (inf/NaN) still fetches as valid JSON: the
+        // numeric encoding falls back to hex per non-finite element
+        let diverged = [1.5, f64::INFINITY, f64::NAN];
+        let wire = encode_field(&diverged, false).to_string();
+        let back = decode_field(&Json::parse_line(&wire).unwrap()).unwrap();
+        for (a, b) in diverged.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(decode_field(&Json::parse_line(r#"["zz"]"#).unwrap()).is_err());
+        assert!(decode_field(&Json::parse_line("7").unwrap()).is_err());
+    }
+
+    #[test]
+    fn response_builders_shape() {
+        let r = ok("plan").int("t", 3).num("ms", 1.5).done().to_string();
+        let j = Json::parse_line(&r).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("t").unwrap().as_usize(), Some(3));
+        let e = err("advance", "admission", "over budget");
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(e.get("error").unwrap().as_str(), Some("admission"));
+    }
+}

@@ -1,0 +1,269 @@
+//! The bounded job queue + worker pool.
+//!
+//! Connection handlers enqueue [`QueuedJob`]s without blocking —
+//! a full queue is load-shedding feedback, not backpressure-by-hanging
+//! — and wait on a per-job reply channel.  Workers pop jobs, resolve a
+//! backend through the existing [`Backend`](crate::backend::Backend)
+//! trait, advance the session's resident field, and send the per-job
+//! [`RunMetrics`] back.  Closing the queue wakes every worker; they
+//! drain what was admitted and exit.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::backend;
+use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
+
+use super::session::Session;
+
+/// One admitted job, bound to its session and reply channel.
+pub struct QueuedJob {
+    pub session: Arc<Mutex<Session>>,
+    pub job: backend::Job,
+    pub kind: backend::BackendKind,
+    /// Whether a PJRT resolution can possibly succeed (manifest present
+    /// + pjrt-enabled binary).  When false, `auto` jobs go straight to
+    /// the native backend instead of re-probing the artifact dir on
+    /// disk for every job on the hot serving path.
+    pub pjrt_possible: bool,
+    pub artifacts_dir: PathBuf,
+    /// Worker → connection handler result channel (the job's metrics,
+    /// or the execution error as a rendered string).
+    pub reply: mpsc::Sender<Result<RunMetrics, String>>,
+}
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// At capacity — the caller should shed the job.
+    Full,
+    /// Shutting down — no new work is admitted.
+    Closed,
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs: VecDeque<QueuedJob>,
+    open: bool,
+}
+
+/// Bounded MPMC job queue (Mutex + Condvar; std only).
+pub struct JobQueue {
+    cap: usize,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    pub fn new(cap: usize) -> JobQueue {
+        JobQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner { jobs: VecDeque::new(), open: true }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking admission; the job is dropped on refusal (its reply
+    /// sender with it, so nobody ends up waiting on a dead channel).
+    pub fn push(&self, j: QueuedJob) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.open {
+            return Err(PushError::Closed);
+        }
+        if g.jobs.len() >= self.cap {
+            return Err(PushError::Full);
+        }
+        g.jobs.push_back(j);
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Blocking worker pop; `None` once closed and drained.
+    pub fn pop(&self) -> Option<QueuedJob> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(j) = g.jobs.pop_front() {
+                return Some(j);
+            }
+            if !g.open {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Stop admitting; wake every worker so the pool can drain and exit.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.open = false;
+        drop(g);
+        self.ready.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+}
+
+/// Fixed set of worker threads draining a shared [`JobQueue`].
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn start(
+        workers: usize,
+        queue: Arc<JobQueue>,
+        counters: Arc<ServiceCounters>,
+    ) -> WorkerPool {
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let queue = queue.clone();
+                let counters = counters.clone();
+                std::thread::Builder::new()
+                    .name(format!("stencil-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(q) = queue.pop() {
+                            let res = execute(&q);
+                            match &res {
+                                Ok(m) => counters.record_run(m),
+                                Err(_) => ServiceCounters::bump(&counters.jobs_failed),
+                            }
+                            // A vanished receiver (client gone) is fine.
+                            let _ = q.reply.send(res);
+                        }
+                    })
+                    .expect("spawn service worker")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    /// Wait for every worker to drain and exit (close the queue first).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run one job against its session's resident field.
+fn execute(q: &QueuedJob) -> Result<RunMetrics, String> {
+    // `auto` can only ever resolve to native when PJRT is unreachable —
+    // skip backend::create's per-job manifest probe in that case.
+    let kind = match q.kind {
+        backend::BackendKind::Auto if !q.pjrt_possible => backend::BackendKind::Native,
+        k => k,
+    };
+    let mut be = backend::create(kind, &q.artifacts_dir, &q.job, None)
+        .map_err(|e| format!("{e:#}"))?;
+    let mut s = q.session.lock().unwrap();
+    let m = be.advance(&q.job, &mut s.field).map_err(|e| format!("{e:#}"))?;
+    s.stats.record_run(&m);
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendKind;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+    use crate::service::protocol::{FieldInit, JobSpec};
+
+    fn sess(domain: Vec<usize>) -> Arc<Mutex<Session>> {
+        let spec = JobSpec {
+            pattern: StencilPattern::new(Shape::Star, domain.len(), 1).unwrap(),
+            dtype: Dtype::F64,
+            domain,
+            steps: 2,
+            t: None,
+            backend: BackendKind::Native,
+            threads: 1,
+            weights: None,
+        };
+        Arc::new(Mutex::new(Session::create("q", &spec, &FieldInit::Gaussian).unwrap()))
+    }
+
+    fn qjob(
+        session: &Arc<Mutex<Session>>,
+        reply: mpsc::Sender<Result<RunMetrics, String>>,
+    ) -> QueuedJob {
+        let s = session.lock().unwrap();
+        QueuedJob {
+            job: backend::Job {
+                pattern: s.pattern,
+                dtype: s.dtype,
+                domain: s.domain.clone(),
+                steps: 2,
+                t: 1,
+                weights: s.weights.clone(),
+                threads: 1,
+            },
+            kind: BackendKind::Native,
+            pjrt_possible: false,
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            session: session.clone(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn bounded_push_sheds_and_close_refuses() {
+        let queue = JobQueue::new(1);
+        let s = sess(vec![6, 6]);
+        let (tx, _rx) = mpsc::channel();
+        assert!(queue.push(qjob(&s, tx.clone())).is_ok());
+        assert_eq!(queue.push(qjob(&s, tx.clone())).unwrap_err(), PushError::Full);
+        assert_eq!(queue.depth(), 1);
+        queue.close();
+        assert_eq!(queue.push(qjob(&s, tx)).unwrap_err(), PushError::Closed);
+        // closed queue still drains, then pops None
+        assert!(queue.pop().is_some());
+        assert!(queue.pop().is_none());
+    }
+
+    #[test]
+    fn workers_execute_and_reply_with_metrics() {
+        let queue = Arc::new(JobQueue::new(8));
+        let counters = Arc::new(ServiceCounters::default());
+        let pool = WorkerPool::start(2, queue.clone(), counters.clone());
+        let s = sess(vec![8, 8]);
+        let (tx, rx) = mpsc::channel();
+        queue.push(qjob(&s, tx.clone())).unwrap();
+        queue.push(qjob(&s, tx)).unwrap();
+        let m1 = rx.recv().unwrap().unwrap();
+        let m2 = rx.recv().unwrap().unwrap();
+        assert_eq!(m1.steps, 2);
+        assert_eq!(m2.points, 64);
+        queue.close();
+        pool.join();
+        let snap = counters.snapshot();
+        assert_eq!(snap.jobs_completed, 2);
+        assert_eq!(snap.steps_total, 4);
+        let g = s.lock().unwrap();
+        assert_eq!(g.stats.jobs, 2);
+        assert_eq!(g.stats.steps, 4);
+    }
+
+    #[test]
+    fn failed_jobs_report_the_reason() {
+        let queue = Arc::new(JobQueue::new(8));
+        let counters = Arc::new(ServiceCounters::default());
+        let pool = WorkerPool::start(1, queue.clone(), counters.clone());
+        let s = sess(vec![8, 8]);
+        let (tx, rx) = mpsc::channel();
+        let mut bad = qjob(&s, tx);
+        bad.job.weights = vec![0.0; 3]; // hull-size mismatch
+        queue.push(bad).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("weights"), "{err}");
+        queue.close();
+        pool.join();
+        assert_eq!(counters.snapshot().jobs_failed, 1);
+        assert_eq!(s.lock().unwrap().stats.jobs, 0);
+    }
+}

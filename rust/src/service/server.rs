@@ -1,0 +1,641 @@
+//! The daemon: `stencilctl serve`.
+//!
+//! A [`Service`] owns the shared [`ServiceState`] (session store, plan
+//! cache, bounded queue, counters) and the worker pool.  Frontends are
+//! interchangeable transports over the same NDJSON handler:
+//!
+//! * [`Service::serve_stdio`] — one connection on stdin/stdout (tests,
+//!   smoke checks, `popen`-style embedding);
+//! * [`Service::serve_tcp`] — a localhost/network listener, one thread
+//!   per connection, all sharing the state.
+//!
+//! Every request line flows through [`handle_line`]: parse →
+//! plan-through-cache → model-guided admission → queue → reply.  The
+//! connection thread blocks on the job's reply channel, so each client
+//! sees strictly ordered responses while jobs from different clients
+//! execute concurrently on the worker pool.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend;
+use crate::coordinator::metrics::ServiceCounters;
+use crate::coordinator::planner::{self, Plan};
+use crate::hardware::Gpu;
+use crate::report;
+use crate::runtime::manifest::Manifest;
+use crate::util::json::Json;
+
+use super::admission::{self, Decision};
+use super::plan_cache::PlanCache;
+use super::protocol::{self, JobSpec, Obj, Request};
+use super::queue::{JobQueue, PushError, QueuedJob, WorkerPool};
+use super::session::{Session, SessionStore};
+
+/// Daemon configuration (`stencilctl serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// TCP listen address (`--addr`); port 0 = ephemeral.
+    pub addr: String,
+    /// Worker threads draining the job queue (`--workers`).
+    pub workers: usize,
+    /// Bounded queue capacity (`--max-queue`).
+    pub max_queue: usize,
+    /// Admission budget in predicted milliseconds (`--budget-ms`;
+    /// `None` = accept everything).
+    pub budget_ms: Option<f64>,
+    /// Plan-cache capacity in entries (`--plan-cache`).
+    pub plan_cache_cap: usize,
+    pub artifacts_dir: PathBuf,
+    /// The GPU model the planner/admission predictions assume.
+    pub gpu: Gpu,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            addr: "127.0.0.1:7141".to_string(),
+            workers: 2,
+            max_queue: 64,
+            budget_ms: None,
+            plan_cache_cap: 128,
+            artifacts_dir: crate::runtime::manifest::default_dir(),
+            gpu: Gpu::a100(),
+        }
+    }
+}
+
+/// Everything a connection handler or worker can reach.
+pub struct ServiceState {
+    pub opts: ServeOpts,
+    pub sessions: SessionStore,
+    pub plans: PlanCache,
+    pub counters: Arc<ServiceCounters>,
+    queue: Arc<JobQueue>,
+    manifest: Option<Manifest>,
+    shutdown: AtomicBool,
+}
+
+impl ServiceState {
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Flip the shutdown flag and close the queue (workers drain+exit).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+}
+
+/// The long-lived daemon: shared state + worker pool.
+pub struct Service {
+    state: Arc<ServiceState>,
+    pool: Option<WorkerPool>,
+}
+
+impl Service {
+    /// Build the state and start the worker pool (no I/O yet).
+    pub fn start(opts: ServeOpts) -> Service {
+        let manifest = Manifest::load(&opts.artifacts_dir).ok();
+        let queue = Arc::new(JobQueue::new(opts.max_queue));
+        let counters = Arc::new(ServiceCounters::default());
+        let workers = opts.workers.max(1);
+        let state = Arc::new(ServiceState {
+            sessions: SessionStore::new(),
+            plans: PlanCache::new(opts.plan_cache_cap),
+            counters: counters.clone(),
+            queue: queue.clone(),
+            manifest,
+            shutdown: AtomicBool::new(false),
+            opts,
+        });
+        let pool = WorkerPool::start(workers, queue, counters);
+        Service { state, pool: Some(pool) }
+    }
+
+    /// A shared handle to the state (for in-process embedding/tests).
+    pub fn state(&self) -> Arc<ServiceState> {
+        self.state.clone()
+    }
+
+    /// Serve one connection on stdin/stdout until EOF or `shutdown`.
+    pub fn serve_stdio(&self) -> Result<()> {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        serve_io(&self.state, stdin.lock(), stdout.lock())
+    }
+
+    /// Bind `opts.addr`, returning the listener and its resolved
+    /// address (port 0 becomes the ephemeral port actually bound).
+    pub fn bind(&self) -> Result<(TcpListener, SocketAddr)> {
+        let listener = TcpListener::bind(&self.state.opts.addr)?;
+        let addr = listener.local_addr()?;
+        Ok((listener, addr))
+    }
+
+    /// Bind and serve TCP until a `shutdown` request arrives.
+    pub fn serve_tcp(&self) -> Result<()> {
+        let (listener, addr) = self.bind()?;
+        eprintln!(
+            "stencilctl serve: listening on {addr} ({} workers, queue {}, budget {})",
+            self.state.opts.workers,
+            self.state.opts.max_queue,
+            match self.state.opts.budget_ms {
+                Some(ms) => format!("{ms} ms"),
+                None => "off".to_string(),
+            }
+        );
+        serve_listener(self.state.clone(), listener)
+    }
+
+    /// Stop admitting work, drain the queue, join the workers.
+    pub fn shutdown(&mut self) {
+        self.state.request_shutdown();
+        if let Some(p) = self.pool.take() {
+            p.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Accept loop: one handler thread per connection, until shutdown.
+/// Handler threads are detached — a client that lingers after shutdown
+/// only keeps its own connection alive, never the daemon.
+pub fn serve_listener(state: Arc<ServiceState>, listener: TcpListener) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    while !state.shutdown_requested() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nonblocking(false)?;
+                let st = state.clone();
+                std::thread::spawn(move || {
+                    let reader = BufReader::new(match stream.try_clone() {
+                        Ok(s) => s,
+                        Err(_) => return,
+                    });
+                    let _ = serve_io(&st, reader, stream);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Serve one NDJSON connection: request line in, response line out.
+pub fn serve_io<R: BufRead, W: Write>(
+    state: &Arc<ServiceState>,
+    mut reader: R,
+    mut writer: W,
+) -> Result<()> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            return Ok(()); // EOF: client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, keep) = handle_line(state, &line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+/// Handle one request line; returns `(response line, keep-connection)`.
+pub fn handle_line(state: &ServiceState, line: &str) -> (String, bool) {
+    ServiceCounters::bump(&state.counters.requests);
+    let req = match Json::parse_line(line).and_then(|j| Request::parse(&j)) {
+        Ok(r) => r,
+        Err(e) => {
+            ServiceCounters::bump(&state.counters.errors);
+            return (protocol::err("?", "bad_request", &format!("{e:#}")).to_string(), true);
+        }
+    };
+    let op = req.op();
+    match handle_request(state, req) {
+        Ok((resp, keep)) => (resp.to_string(), keep),
+        Err(e) => {
+            ServiceCounters::bump(&state.counters.errors);
+            (protocol::err(op, "error", &format!("{e:#}")).to_string(), true)
+        }
+    }
+}
+
+/// Plan through the shared cache, bumping the hit/miss counters.
+fn plan_for(
+    state: &ServiceState,
+    spec: &JobSpec,
+    steps: usize,
+    t: Option<usize>,
+) -> Result<(Arc<Plan>, bool)> {
+    let req = planner::Request {
+        pattern: spec.pattern,
+        dtype: spec.dtype,
+        steps,
+        gpu: state.opts.gpu.clone(),
+        backend: spec.backend,
+        max_t: t.unwrap_or(8).max(1),
+    };
+    let (plan, hit) = state.plans.plan(&req, &spec.domain, state.manifest.as_ref())?;
+    ServiceCounters::bump(if hit {
+        &state.counters.plan_hits
+    } else {
+        &state.counters.plan_misses
+    });
+    Ok((plan, hit))
+}
+
+fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
+    if state.shutdown_requested() && !matches!(req, Request::Shutdown) {
+        return Ok((protocol::err(req.op(), "shutting_down", "service is shutting down"), true));
+    }
+    match req {
+        Request::Ping => Ok((protocol::ok("ping").done(), true)),
+        Request::Shutdown => {
+            state.request_shutdown();
+            Ok((protocol::ok("shutdown").done(), false))
+        }
+        Request::Plan(spec) => {
+            let (plan, hit) = plan_for(state, &spec, spec.steps, spec.t)?;
+            let c = &plan.chosen;
+            let mut o = protocol::ok("plan")
+                .str_("pattern", &spec.pattern.label())
+                .str_("dtype", spec.dtype.as_str())
+                .str_("engine", c.engine.name)
+                .str_("unit", c.engine.unit.as_str())
+                .int("t", c.t as u64)
+                .str_("target", c.target.as_str())
+                .num("gstencils", c.prediction.gstencils())
+                .bool_("sweet_spot", c.in_sweet_spot)
+                .str_("cache", if hit { "hit" } else { "miss" })
+                .int("alternatives", plan.alternatives.len() as u64);
+            if let Some(cmp) = &plan.vs_cuda {
+                o = o
+                    .str_("scenario", &cmp.scenario.label())
+                    .num("vs_cuda_ratio", cmp.speedup);
+            }
+            Ok((o.done(), true))
+        }
+        Request::CreateSession { session, spec, init } => {
+            let s = Session::create(&session, &spec, &init)?;
+            let points = s.points();
+            let label = s.pattern.label();
+            state.sessions.create(s)?;
+            Ok((
+                protocol::ok("create_session")
+                    .str_("session", &session)
+                    .str_("pattern", &label)
+                    .str_("dtype", spec.dtype.as_str())
+                    .int("points", points)
+                    .done(),
+                true,
+            ))
+        }
+        Request::Advance { session, steps, t } => advance(state, &session, steps, t),
+        Request::Fetch { session, hex } => {
+            let sess = state
+                .sessions
+                .get(&session)
+                .ok_or_else(|| anyhow!("unknown session {session:?}"))?;
+            let g = sess.lock().unwrap();
+            Ok((
+                protocol::ok("fetch")
+                    .str_("session", &session)
+                    .int("len", g.field.len() as u64)
+                    .set("field", protocol::encode_field(&g.field, hex))
+                    .done(),
+                true,
+            ))
+        }
+        Request::CloseSession { session } => {
+            if !state.sessions.remove(&session) {
+                bail!("unknown session {session:?}");
+            }
+            Ok((protocol::ok("close_session").str_("session", &session).done(), true))
+        }
+        Request::Stats => Ok((stats_response(state), true)),
+    }
+}
+
+/// The full `advance` path: plan → admission → queue → await metrics.
+fn advance(
+    state: &ServiceState,
+    session: &str,
+    steps: usize,
+    t: Option<usize>,
+) -> Result<(Json, bool)> {
+    let sess = state
+        .sessions
+        .get(session)
+        .ok_or_else(|| anyhow!("unknown session {session:?} (create_session first)"))?;
+    // Snapshot the session's identity without holding the lock across
+    // planning/queueing (a running job may hold it for a while).
+    let (spec, points) = {
+        let g = sess.lock().unwrap();
+        (
+            JobSpec {
+                pattern: g.pattern,
+                dtype: g.dtype,
+                domain: g.domain.clone(),
+                steps,
+                t,
+                backend: g.backend,
+                threads: g.threads,
+                weights: Some(g.weights.clone()),
+            },
+            g.points(),
+        )
+    };
+    let (plan, hit) = plan_for(state, &spec, steps, t)?;
+    let decision = admission::decide(&plan, t, points, steps, state.opts.budget_ms);
+    let (job_t, downgraded, predicted_ms, engine, target) = match decision {
+        Decision::Accept { t, predicted_ms, engine, target } => {
+            (t, false, predicted_ms, engine, target)
+        }
+        Decision::Downgrade { t, predicted_ms, engine, target, .. } => {
+            (t, true, predicted_ms, engine, target)
+        }
+        Decision::Reject(r) => {
+            ServiceCounters::bump(&state.counters.jobs_rejected);
+            return Ok((
+                Obj::new()
+                    .bool_("ok", false)
+                    .str_("op", "advance")
+                    .str_("error", "admission")
+                    .str_(
+                        "message",
+                        &format!(
+                            "predicted {:.3} ms exceeds budget {:.3} ms ({}, {}, {})",
+                            r.predicted_ms, r.budget_ms, r.engine, r.bound, r.classification
+                        ),
+                    )
+                    .num("predicted_ms", r.predicted_ms)
+                    .num("budget_ms", r.budget_ms)
+                    .str_("engine", &r.engine)
+                    .str_("bound", r.bound)
+                    .str_("classification", &r.classification)
+                    .done(),
+                true,
+            ));
+        }
+    };
+    let job = backend::Job {
+        pattern: spec.pattern,
+        dtype: spec.dtype,
+        domain: spec.domain.clone(),
+        steps,
+        t: job_t,
+        weights: spec.weights.clone().unwrap_or_default(),
+        threads: spec.threads,
+    };
+    let (tx, rx) = mpsc::channel();
+    let queued = QueuedJob {
+        session: sess,
+        job,
+        kind: spec.backend,
+        // PJRT is only reachable with a manifest (loaded once at
+        // startup) and a pjrt-enabled binary; workers skip the per-job
+        // artifact-dir probe entirely when it cannot succeed.
+        pjrt_possible: state.manifest.is_some() && crate::runtime::Runtime::available(),
+        artifacts_dir: state.opts.artifacts_dir.clone(),
+        reply: tx,
+    };
+    if let Err(e) = state.queue.push(queued) {
+        ServiceCounters::bump(&state.counters.queue_rejected);
+        let (code, msg) = match e {
+            PushError::Full => ("queue_full", "job queue at capacity; retry later"),
+            PushError::Closed => ("shutting_down", "service is shutting down"),
+        };
+        return Ok((protocol::err("advance", code, msg), true));
+    }
+    // Counted accepted only once actually admitted to the queue.
+    ServiceCounters::bump(&state.counters.jobs_accepted);
+    if downgraded {
+        ServiceCounters::bump(&state.counters.jobs_downgraded);
+    }
+    let metrics = rx
+        .recv()
+        .map_err(|_| anyhow!("worker dropped the job (shutting down?)"))?
+        .map_err(|msg| anyhow!("{msg}"))?;
+    Ok((
+        protocol::ok("advance")
+            .str_("session", session)
+            .int("steps", metrics.steps as u64)
+            .int("t", job_t as u64)
+            .str_("engine", &engine)
+            .str_("target", target)
+            .str_("cache", if hit { "hit" } else { "miss" })
+            .bool_("downgraded", downgraded)
+            .num("predicted_ms", predicted_ms)
+            .num("wall_ms", metrics.wall_ns as f64 / 1e6)
+            .num("mstencils", metrics.throughput() / 1e6)
+            .done(),
+        true,
+    ))
+}
+
+/// The `stats` response: raw counters for machines, a rendered table
+/// for humans (`report::service_stats`).
+fn stats_response(state: &ServiceState) -> Json {
+    let snap = state.counters.snapshot();
+    let rows = state.sessions.rows();
+    let render = report::service_stats(&snap, &rows);
+    let sessions = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Obj::new()
+                    .str_("session", &r.name)
+                    .str_("pattern", &r.pattern)
+                    .str_("dtype", r.dtype)
+                    .str_("domain", &r.domain)
+                    .str_("backend", r.backend)
+                    .int("jobs", r.stats.jobs)
+                    .int("steps", r.stats.steps)
+                    .num("mstencils", r.stats.throughput() / 1e6)
+                    .done()
+            })
+            .collect(),
+    );
+    protocol::ok("stats")
+        .int("requests", snap.requests)
+        .int("errors", snap.errors)
+        .int("jobs_accepted", snap.jobs_accepted)
+        .int("jobs_downgraded", snap.jobs_downgraded)
+        .int("jobs_rejected", snap.jobs_rejected)
+        .int("queue_rejected", snap.queue_rejected)
+        .int("jobs_completed", snap.jobs_completed)
+        .int("jobs_failed", snap.jobs_failed)
+        .int("plan_hits", snap.plan_hits)
+        .int("plan_misses", snap.plan_misses)
+        .num("plan_hit_rate", snap.plan_hit_rate())
+        .int("plan_cache_size", state.plans.len() as u64)
+        .int("queue_depth", state.queue_depth() as u64)
+        .int("sessions", rows.len() as u64)
+        .int("steps_total", snap.steps_total)
+        .num("mstencils", snap.throughput() / 1e6)
+        .set("session_stats", sessions)
+        .str_("render", &render)
+        .done()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> Service {
+        Service::start(ServeOpts {
+            workers: 2,
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            ..Default::default()
+        })
+    }
+
+    fn req(state: &ServiceState, line: &str) -> Json {
+        let (resp, _keep) = handle_line(state, line);
+        Json::parse_line(&resp).unwrap()
+    }
+
+    fn assert_ok(j: &Json) {
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j}");
+    }
+
+    #[test]
+    fn ping_plan_and_bad_requests() {
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(&state, r#"{"op":"ping"}"#));
+        let p = req(&state, r#"{"op":"plan","shape":"box","d":2,"r":1,"dtype":"float"}"#);
+        assert_ok(&p);
+        assert_eq!(p.get("cache").unwrap().as_str(), Some("miss"));
+        let p2 = req(&state, r#"{"op":"plan","shape":"box","d":2,"r":1,"dtype":"float"}"#);
+        assert_eq!(p2.get("cache").unwrap().as_str(), Some("hit"));
+        let bad = req(&state, "not json");
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(bad.get("error").unwrap().as_str(), Some("bad_request"));
+        let unknown = req(&state, r#"{"op":"advance","session":"ghost"}"#);
+        assert_eq!(unknown.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn session_lifecycle_advance_fetch_stats() {
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"a","shape":"star","d":2,"r":1,
+                "dtype":"double","domain":[12,12],"backend":"native","threads":1}"#,
+        ));
+        // duplicate name refused
+        let dup = req(&state, r#"{"op":"create_session","session":"a","domain":[12,12]}"#);
+        assert_eq!(dup.get("ok").unwrap().as_bool(), Some(false));
+        let a1 = req(&state, r#"{"op":"advance","session":"a","steps":2,"t":1}"#);
+        assert_ok(&a1);
+        assert_eq!(a1.get("cache").unwrap().as_str(), Some("miss"));
+        assert_eq!(a1.get("steps").unwrap().as_usize(), Some(2));
+        let a2 = req(&state, r#"{"op":"advance","session":"a","steps":2,"t":1}"#);
+        assert_ok(&a2);
+        assert_eq!(a2.get("cache").unwrap().as_str(), Some("hit"));
+        let f = req(&state, r#"{"op":"fetch","session":"a","encoding":"hex"}"#);
+        assert_ok(&f);
+        assert_eq!(f.get("len").unwrap().as_usize(), Some(144));
+        assert_eq!(f.get("field").unwrap().as_arr().unwrap().len(), 144);
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert_ok(&st);
+        assert_eq!(st.get("jobs_completed").unwrap().as_usize(), Some(2));
+        assert_eq!(st.get("sessions").unwrap().as_usize(), Some(1));
+        assert!(st.get("plan_hits").unwrap().as_i64().unwrap() >= 1);
+        assert!(st.get("render").unwrap().as_str().unwrap().contains("service"));
+        assert_ok(&req(&state, r#"{"op":"close_session","session":"a"}"#));
+        let gone = req(&state, r#"{"op":"fetch","session":"a"}"#);
+        assert_eq!(gone.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn advance_matches_golden_oracle_bit_exactly() {
+        use crate::sim::golden;
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"g","shape":"box","d":2,"r":1,
+                "dtype":"double","domain":[10,10],"backend":"native","threads":2}"#,
+        ));
+        assert_ok(&req(&state, r#"{"op":"advance","session":"g","steps":2,"t":2}"#));
+        assert_ok(&req(&state, r#"{"op":"advance","session":"g","steps":2,"t":2}"#));
+        let f = req(&state, r#"{"op":"fetch","session":"g","encoding":"hex"}"#);
+        let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+        // replay: gaussian init, two fused t=2 launches
+        let p = crate::model::stencil::StencilPattern::new(crate::model::stencil::Shape::Box, 2, 1)
+            .unwrap();
+        let w = golden::Weights::new(2, 3, p.uniform_weights());
+        let mut want = golden::Field::from_vec(&[10, 10], golden::gaussian(&[10, 10]));
+        for _ in 0..2 {
+            want = golden::apply_fused(&want, &w, 2);
+        }
+        assert_eq!(got.len(), want.data.len());
+        for (i, (a, b)) in got.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "point {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_budget_rejects_with_model_classification() {
+        let opts = ServeOpts {
+            workers: 1,
+            budget_ms: Some(0.0),
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            ..Default::default()
+        };
+        let s = Service::start(opts);
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"r","domain":[16,16],"dtype":"float"}"#,
+        ));
+        let rej = req(&state, r#"{"op":"advance","session":"r","steps":4}"#);
+        assert_eq!(rej.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(rej.get("error").unwrap().as_str(), Some("admission"));
+        assert!(rej.get("predicted_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!rej.get("classification").unwrap().as_str().unwrap().is_empty());
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert_eq!(st.get("jobs_rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(st.get("jobs_completed").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn shutdown_closes_the_connection_and_queue() {
+        let s = svc();
+        let state = s.state();
+        let (resp, keep) = handle_line(&state, r#"{"op":"shutdown"}"#);
+        assert!(!keep);
+        assert_ok(&Json::parse_line(&resp).unwrap());
+        // post-shutdown requests are refused (except shutdown itself)
+        let r = req(&state, r#"{"op":"ping"}"#);
+        assert_eq!(r.get("error").unwrap().as_str(), Some("shutting_down"));
+    }
+}

@@ -1,0 +1,215 @@
+//! The session store: named domain fields resident across requests.
+//!
+//! A session owns the mutable state a one-shot `stencilctl run` would
+//! rebuild every invocation — the field buffer, the kernel weights, the
+//! workload identity — so clients stream `advance` calls instead of
+//! re-uploading state.  Sessions are `Arc<Mutex<_>>`: the store hands
+//! out handles, a worker holds the lock only while advancing, and two
+//! sessions never contend with each other.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::backend::BackendKind;
+use crate::coordinator::metrics::{SessionRow, SessionStats};
+use crate::model::perf::Dtype;
+use crate::model::stencil::StencilPattern;
+use crate::sim::golden;
+
+use super::protocol::{FieldInit, JobSpec};
+
+/// One resident workload: identity + field + accounting.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub name: String,
+    pub pattern: StencilPattern,
+    pub dtype: Dtype,
+    pub domain: Vec<usize>,
+    pub backend: BackendKind,
+    pub threads: usize,
+    /// Base stencil weights over the (2r+1)^d hull.
+    pub weights: Vec<f64>,
+    /// The resident field (row-major f64 host representation).
+    pub field: Vec<f64>,
+    pub stats: SessionStats,
+}
+
+impl Session {
+    /// Build a session from a create request, validating field/weight
+    /// shapes against the pattern and domain.
+    pub fn create(name: &str, spec: &JobSpec, init: &FieldInit) -> Result<Session> {
+        let n: usize = spec.domain.iter().product();
+        let field = match init {
+            FieldInit::Zeros => vec![0.0; n],
+            FieldInit::Gaussian => golden::gaussian(&spec.domain),
+            FieldInit::Data(v) => {
+                if v.len() != n {
+                    bail!("field has {} elements, domain wants {n}", v.len());
+                }
+                v.clone()
+            }
+        };
+        let side = 2 * spec.pattern.r + 1;
+        let hull = side.pow(spec.pattern.d as u32);
+        let weights = match &spec.weights {
+            Some(w) => {
+                if w.len() != hull {
+                    bail!("weights length {} != hull size {hull}", w.len());
+                }
+                w.clone()
+            }
+            None => spec.pattern.uniform_weights(),
+        };
+        Ok(Session {
+            name: name.to_string(),
+            pattern: spec.pattern,
+            dtype: spec.dtype,
+            domain: spec.domain.clone(),
+            backend: spec.backend,
+            threads: spec.threads,
+            weights,
+            field,
+            stats: SessionStats::default(),
+        })
+    }
+
+    /// Total domain points.
+    pub fn points(&self) -> u64 {
+        self.domain.iter().map(|&n| n as u64).product()
+    }
+
+    /// This session's row of the `stats` rendering.
+    pub fn row(&self) -> SessionRow {
+        let dims: Vec<String> = self.domain.iter().map(|d| d.to_string()).collect();
+        SessionRow {
+            name: self.name.clone(),
+            pattern: self.pattern.label(),
+            dtype: self.dtype.as_str(),
+            domain: dims.join("x"),
+            backend: self.backend.as_str(),
+            stats: self.stats.clone(),
+        }
+    }
+}
+
+/// Concurrent name → session map.
+#[derive(Debug, Default)]
+pub struct SessionStore {
+    inner: Mutex<BTreeMap<String, Arc<Mutex<Session>>>>,
+}
+
+impl SessionStore {
+    pub fn new() -> SessionStore {
+        SessionStore::default()
+    }
+
+    /// Register a new session; names are unique while live.
+    pub fn create(&self, s: Session) -> Result<Arc<Mutex<Session>>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.contains_key(&s.name) {
+            bail!("session {:?} already exists", s.name);
+        }
+        let name = s.name.clone();
+        let handle = Arc::new(Mutex::new(s));
+        g.insert(name, handle.clone());
+        Ok(handle)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<Mutex<Session>>> {
+        self.inner.lock().unwrap().get(name).cloned()
+    }
+
+    /// Drop a session; returns whether it existed.
+    pub fn remove(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().remove(name).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stats rows for every live session (name order).
+    pub fn rows(&self) -> Vec<SessionRow> {
+        let handles: Vec<Arc<Mutex<Session>>> =
+            self.inner.lock().unwrap().values().cloned().collect();
+        handles.iter().map(|h| h.lock().unwrap().row()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::stencil::Shape;
+
+    fn spec(domain: Vec<usize>) -> JobSpec {
+        JobSpec {
+            pattern: StencilPattern::new(Shape::Star, domain.len(), 1).unwrap(),
+            dtype: Dtype::F64,
+            domain,
+            steps: 4,
+            t: None,
+            backend: BackendKind::Native,
+            threads: 1,
+            weights: None,
+        }
+    }
+
+    #[test]
+    fn create_validates_shapes() {
+        let s = Session::create("a", &spec(vec![8, 8]), &FieldInit::Zeros).unwrap();
+        assert_eq!(s.field.len(), 64);
+        assert_eq!(s.weights.len(), 9); // (2r+1)^d hull
+        assert_eq!(s.points(), 64);
+        // uniform weights are support-normalized: star has 5 live cells
+        let live: Vec<f64> = s.weights.iter().copied().filter(|&w| w != 0.0).collect();
+        assert_eq!(live.len(), 5);
+        assert!((live.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // bad field length
+        assert!(Session::create("b", &spec(vec![8, 8]), &FieldInit::Data(vec![0.0; 3])).is_err());
+        // bad weights length
+        let mut sp = spec(vec![8, 8]);
+        sp.weights = Some(vec![1.0; 4]);
+        assert!(Session::create("c", &sp, &FieldInit::Zeros).is_err());
+    }
+
+    #[test]
+    fn gaussian_init_matches_golden() {
+        let s = Session::create("g", &spec(vec![6, 6]), &FieldInit::Gaussian).unwrap();
+        assert_eq!(s.field, golden::gaussian(&[6, 6]));
+    }
+
+    #[test]
+    fn store_enforces_unique_names() {
+        let store = SessionStore::new();
+        assert!(store.is_empty());
+        store.create(Session::create("a", &spec(vec![4, 4]), &FieldInit::Zeros).unwrap()).unwrap();
+        assert!(store
+            .create(Session::create("a", &spec(vec![4, 4]), &FieldInit::Zeros).unwrap())
+            .is_err());
+        assert_eq!(store.len(), 1);
+        assert!(store.get("a").is_some());
+        assert!(store.get("b").is_none());
+        assert!(store.remove("a"));
+        assert!(!store.remove("a"));
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn rows_snapshot_identity() {
+        let store = SessionStore::new();
+        store.create(Session::create("s1", &spec(vec![4, 4]), &FieldInit::Zeros).unwrap()).unwrap();
+        let rows = store.rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].name, "s1");
+        assert_eq!(rows[0].pattern, "Star-2D1R");
+        assert_eq!(rows[0].domain, "4x4");
+        assert_eq!(rows[0].backend, "native");
+        assert_eq!(rows[0].stats.jobs, 0);
+    }
+}

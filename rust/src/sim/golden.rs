@@ -140,6 +140,31 @@ impl Weights {
     }
 }
 
+/// The standard initial condition: a centered Gaussian bump over the
+/// domain (row-major).  Shared by `stencilctl run`, the service's
+/// `init: "gaussian"` sessions, and the integration tests, so a client
+/// can reproduce a server-side field without shipping it over the wire.
+pub fn gaussian(domain: &[usize]) -> Vec<f64> {
+    let n: usize = domain.iter().product();
+    let mut out = vec![0.0; n];
+    let d = domain.len();
+    let mut idx = vec![0usize; d];
+    for (flat, v) in out.iter_mut().enumerate() {
+        let mut rem = flat;
+        for k in (0..d).rev() {
+            idx[k] = rem % domain[k];
+            rem /= domain[k];
+        }
+        let mut q = 0.0;
+        for k in 0..d {
+            let c = (idx[k] as f64 - domain[k] as f64 / 2.0) / (domain[k] as f64 / 6.0);
+            q += c * c;
+        }
+        *v = (-q / 2.0).exp();
+    }
+    out
+}
+
 /// One stencil application with zero halo.
 pub fn apply_once(x: &Field, w: &Weights) -> Field {
     assert_eq!(x.dims.len(), w.d);

@@ -21,12 +21,38 @@ pub enum Json {
 impl Json {
     /// Parse a JSON document from text.
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
             bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Parse one value from the head of `text`, returning it and the
+    /// byte offset just past it (leading whitespace consumed).  The
+    /// streaming building block: call repeatedly to drain a buffer of
+    /// concatenated / newline-delimited values.
+    pub fn parse_prefix(text: &str) -> Result<(Json, usize)> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        Ok((v, p.pos))
+    }
+
+    /// Parse exactly one newline-delimited value: the whole line must be
+    /// a single JSON value, optionally padded with whitespace (a trailing
+    /// `\r`/`\n` from a line reader is fine).  This is the entry point
+    /// for NDJSON protocols (`stencilctl serve`).
+    pub fn parse_line(line: &str) -> Result<Json> {
+        let (v, used) = Json::parse_prefix(line)?;
+        if line.as_bytes()[used..]
+            .iter()
+            .any(|b| !matches!(b, b' ' | b'\t' | b'\r' | b'\n'))
+        {
+            bail!("trailing garbage after JSON value at byte {used}");
         }
         Ok(v)
     }
@@ -89,12 +115,25 @@ impl Json {
     }
 }
 
+/// Nesting cap: the recursive-descent parser now reads untrusted
+/// network input (`stencilctl serve`), so a hostile line of 100k `[`s
+/// must be an error, not a stack overflow.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.pos);
+        }
+        Ok(())
+    }
     fn skip_ws(&mut self) {
         while let Some(&b) = self.bytes.get(self.pos) {
             if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
@@ -149,11 +188,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
+        self.enter()?;
         self.eat(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek()? == b'}' {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -168,6 +209,7 @@ impl<'a> Parser<'a> {
                 b',' => self.pos += 1,
                 b'}' => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 c => bail!("expected ',' or '}}' at byte {}, got {:?}", self.pos, c as char),
@@ -176,11 +218,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
+        self.enter()?;
         self.eat(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek()? == b']' {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -190,6 +234,7 @@ impl<'a> Parser<'a> {
                 b',' => self.pos += 1,
                 b']' => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 c => bail!("expected ',' or ']' at byte {}, got {:?}", self.pos, c as char),
@@ -279,7 +324,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN tokens; emit null (lossy but
+                    // valid) rather than an unparseable line.  Callers
+                    // needing these values bit-exact use hex encoding.
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -374,6 +424,80 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let again = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, again);
+    }
+
+    #[test]
+    fn parse_line_accepts_line_padding() {
+        let j = Json::parse_line("{\"op\":\"ping\"}\r\n").unwrap();
+        assert_eq!(j.get("op").unwrap().as_str(), Some("ping"));
+        assert_eq!(Json::parse_line("  42  \n").unwrap(), Json::Num(42.0));
+        // two values on one line is a protocol error
+        assert!(Json::parse_line("{} {}").is_err());
+        assert!(Json::parse_line("1 x").is_err());
+    }
+
+    #[test]
+    fn parse_prefix_streams_concatenated_values() {
+        let buf = "{\"a\":1}\n[2,3]\n\"tail\"";
+        let (v1, n1) = Json::parse_prefix(buf).unwrap();
+        assert_eq!(v1.get("a").unwrap().as_i64(), Some(1));
+        let (v2, n2) = Json::parse_prefix(&buf[n1..]).unwrap();
+        assert_eq!(v2.as_arr().unwrap().len(), 2);
+        let (v3, _) = Json::parse_prefix(&buf[n1 + n2..]).unwrap();
+        assert_eq!(v3.as_str(), Some("tail"));
+    }
+
+    #[test]
+    fn control_characters_roundtrip_through_display() {
+        // Protocol strings may carry control characters (error payloads,
+        // session names from hostile clients): the serializer must escape
+        // them so the value survives one NDJSON line, and the parser must
+        // restore them exactly.
+        let s = "a\u{1}b\u{1f}c\nd\te\rf";
+        let j = Json::Obj(std::iter::once(("k".to_string(), Json::Str(s.into()))).collect());
+        let line = j.to_string();
+        assert!(!line.contains('\n'), "serialized form must be one line: {line:?}");
+        assert!(line.contains("\\u0001") && line.contains("\\u001f"));
+        let back = Json::parse_line(&line).unwrap();
+        assert_eq!(back.get("k").unwrap().as_str(), Some(s));
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn hostile_nesting_errors_instead_of_overflowing() {
+        // The parser reads untrusted daemon input: deep nesting must be
+        // a parse error, never a stack overflow.
+        let bomb = "[".repeat(100_000);
+        assert!(Json::parse(&bomb).is_err());
+        assert!(Json::parse_line(&bomb).is_err());
+        let obj_bomb = "{\"k\":".repeat(100_000);
+        assert!(Json::parse(&obj_bomb).is_err());
+        // while sane nesting (incl. mixed) still parses
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+        // depth is current nesting, not a total-container count
+        let wide = format!("[{}]", vec!["[1]"; 1000].join(","));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let line = Json::Num(v).to_string();
+            assert_eq!(line, "null", "{v} must not emit an unparseable token");
+            assert!(Json::parse_line(&line).unwrap().is_null());
+        }
+    }
+
+    #[test]
+    fn f64_numbers_roundtrip_bit_exactly() {
+        // The service's fetch op ships f64 fields as JSON numbers; Rust's
+        // shortest-roundtrip Display + parse must restore the exact bits.
+        for v in [1.0 / 3.0, 0.1 + 0.2, 6.02214076e23, 5e-324, 1.7976931348623157e308] {
+            let line = Json::Num(v).to_string();
+            let back = Json::parse_line(&line).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {line}");
+        }
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Service-layer integration: the daemon driven over `--stdio` (real
+//! subprocess) and over a localhost socket with two concurrent clients —
+//! session reuse, plan-cache hit counters, model-guided admission
+//! rejection, and f64 results bit-identical to `sim::golden` after a
+//! multi-request streamed run.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+
+use tc_stencil::service::protocol;
+use tc_stencil::service::server::{serve_listener, ServeOpts, Service, ServiceState};
+use tc_stencil::sim::golden;
+use tc_stencil::util::json::Json;
+
+fn test_opts() -> ServeOpts {
+    ServeOpts {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        ..Default::default()
+    }
+}
+
+/// A line-oriented protocol client over one TCP connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { reader, writer: stream }
+    }
+
+    fn req(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").expect("write request");
+        self.writer.flush().expect("flush");
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).expect("read response");
+        Json::parse_line(&resp).expect("parse response")
+    }
+
+    fn req_ok(&mut self, line: &str) -> Json {
+        let j = self.req(line);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j}");
+        j
+    }
+}
+
+fn spawn_server(opts: ServeOpts) -> (Service, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let svc = Service::start(opts);
+    let (listener, addr) = svc.bind().expect("bind ephemeral port");
+    let state: Arc<ServiceState> = svc.state();
+    let handle = std::thread::spawn(move || {
+        serve_listener(state, listener).expect("serve_listener");
+    });
+    (svc, addr, handle)
+}
+
+/// The golden replay of one streamed session: gaussian init, then
+/// `advances` × (steps/t fused launches + steps%t single steps).
+fn golden_replay(
+    domain: &[usize],
+    weights: &[f64],
+    advances: usize,
+    steps: usize,
+    t: usize,
+) -> Vec<f64> {
+    let w = golden::Weights::new(domain.len(), 3, weights.to_vec());
+    let mut f = golden::Field::from_vec(domain, golden::gaussian(domain));
+    for _ in 0..advances {
+        for _ in 0..steps / t {
+            f = golden::apply_fused(&f, &w, t);
+        }
+        for _ in 0..steps % t {
+            f = golden::apply_once(&f, &w);
+        }
+    }
+    f.data
+}
+
+#[test]
+fn tcp_two_concurrent_clients_sessions_cache_and_bit_identity() {
+    let (mut svc, addr, handle) = spawn_server(test_opts());
+    let create = |name: &str| {
+        format!(
+            r#"{{"op":"create_session","session":"{name}","shape":"star","d":2,"r":1,
+                "dtype":"double","domain":[24,24],"backend":"native","threads":2}}"#
+        )
+        .replace('\n', " ")
+    };
+    let advances: usize = 3;
+    let clients: Vec<_> = ["c1", "c2"]
+        .iter()
+        .map(|name| {
+            let name = name.to_string();
+            let create = create(&name);
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                c.req_ok(&create);
+                for _ in 0..advances {
+                    let a = c.req_ok(&format!(
+                        r#"{{"op":"advance","session":"{name}","steps":2,"t":2}}"#
+                    ));
+                    assert_eq!(a.get("t").unwrap().as_usize(), Some(2));
+                }
+                let f = c.req_ok(&format!(
+                    r#"{{"op":"fetch","session":"{name}","encoding":"hex"}}"#
+                ));
+                protocol::decode_field(f.get("field").unwrap()).unwrap()
+            })
+        })
+        .collect();
+    let fields: Vec<Vec<f64>> = clients.into_iter().map(|h| h.join().expect("client")).collect();
+
+    // Both sessions saw the same streamed workload: bit-identical to the
+    // golden oracle replay, and to each other.
+    let pattern = tc_stencil::model::stencil::StencilPattern::new(
+        tc_stencil::model::stencil::Shape::Star,
+        2,
+        1,
+    )
+    .unwrap();
+    let want = golden_replay(&[24, 24], &pattern.uniform_weights(), advances, 2, 2);
+    for (ci, got) in fields.iter().enumerate() {
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "client {ci} point {i}: {a} vs golden {b}"
+            );
+        }
+    }
+
+    // A third connection reads aggregate stats: both sessions live, all
+    // jobs completed, and the second identical workload hit the cache.
+    let mut c = Client::connect(addr);
+    let st = c.req_ok(r#"{"op":"stats"}"#);
+    assert_eq!(st.get("sessions").unwrap().as_usize(), Some(2));
+    assert_eq!(st.get("jobs_completed").unwrap().as_usize(), Some(2 * advances));
+    assert_eq!(st.get("jobs_failed").unwrap().as_usize(), Some(0));
+    let hits = st.get("plan_hits").unwrap().as_i64().unwrap();
+    assert!(hits > 0, "identical workloads must hit the plan cache (hits={hits})");
+    let rows = st.get("session_stats").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        assert_eq!(row.get("jobs").unwrap().as_usize(), Some(advances));
+        assert_eq!(row.get("steps").unwrap().as_usize(), Some(2 * advances));
+    }
+
+    // Shutdown ends the accept loop; everything joins cleanly.
+    let sd = c.req_ok(r#"{"op":"shutdown"}"#);
+    assert_eq!(sd.get("op").unwrap().as_str(), Some("shutdown"));
+    handle.join().expect("listener thread");
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_admission_rejects_over_budget_with_classification() {
+    let mut opts = test_opts();
+    opts.budget_ms = Some(0.0); // predicted runtime is always > 0
+    let (mut svc, addr, handle) = spawn_server(opts);
+    let mut c = Client::connect(addr);
+    c.req_ok(
+        r#"{"op":"create_session","session":"rj","shape":"box","d":2,"r":1,"dtype":"float","domain":[16,16],"backend":"native"}"#,
+    );
+    let rej = c.req(r#"{"op":"advance","session":"rj","steps":4}"#);
+    assert_eq!(rej.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(rej.get("error").unwrap().as_str(), Some("admission"));
+    assert!(rej.get("predicted_ms").unwrap().as_f64().unwrap() > 0.0);
+    let class = rej.get("classification").unwrap().as_str().unwrap().to_string();
+    assert!(
+        class.contains("Scenario") || class.contains("bound"),
+        "refusal must cite the paper's classification: {class}"
+    );
+    // the session is untouched: fetch still returns the gaussian init
+    let f = c.req_ok(r#"{"op":"fetch","session":"rj","encoding":"hex"}"#);
+    let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+    let want = golden::gaussian(&[16, 16]);
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let st = c.req_ok(r#"{"op":"stats"}"#);
+    assert!(st.get("jobs_rejected").unwrap().as_i64().unwrap() >= 1);
+    assert_eq!(st.get("jobs_completed").unwrap().as_usize(), Some(0));
+    c.req_ok(r#"{"op":"shutdown"}"#);
+    handle.join().expect("listener thread");
+    svc.shutdown();
+}
+
+#[test]
+fn stdio_subprocess_serves_the_full_protocol() {
+    let exe = env!("CARGO_BIN_EXE_stencilctl");
+    let mut child = Command::new(exe)
+        .args(["serve", "--stdio", "--workers", "1", "--artifacts", "/nonexistent-artifacts"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn stencilctl serve --stdio");
+    let requests = [
+        r#"{"op":"ping"}"#.to_string(),
+        r#"{"op":"plan","shape":"box","d":2,"r":1,"dtype":"float","steps":8}"#.to_string(),
+        r#"{"op":"plan","shape":"box","d":2,"r":1,"dtype":"float","steps":8}"#.to_string(),
+        r#"{"op":"create_session","session":"s","shape":"star","d":2,"r":1,"dtype":"double","domain":[8,8],"backend":"native","threads":1}"#.to_string(),
+        r#"{"op":"advance","session":"s","steps":2,"t":1}"#.to_string(),
+        r#"{"op":"fetch","session":"s","encoding":"hex"}"#.to_string(),
+        r#"{"op":"stats"}"#.to_string(),
+        r#"{"op":"shutdown"}"#.to_string(),
+    ];
+    {
+        let mut stdin = child.stdin.take().expect("stdin");
+        for r in &requests {
+            writeln!(stdin, "{r}").expect("write request");
+        }
+        // dropping stdin closes the pipe (EOF after the shutdown line)
+    }
+    let stdout = child.stdout.take().expect("stdout");
+    let responses: Vec<Json> = BufReader::new(stdout)
+        .lines()
+        .map(|l| Json::parse_line(&l.expect("read line")).expect("parse response"))
+        .collect();
+    assert_eq!(responses.len(), requests.len());
+    for (i, j) in responses.iter().enumerate() {
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "response {i}: {j}");
+    }
+    assert_eq!(responses[1].get("cache").unwrap().as_str(), Some("miss"));
+    assert_eq!(responses[2].get("cache").unwrap().as_str(), Some("hit"));
+    // the streamed session matches the golden oracle bit-for-bit
+    let got = protocol::decode_field(responses[5].get("field").unwrap()).unwrap();
+    let pattern = tc_stencil::model::stencil::StencilPattern::new(
+        tc_stencil::model::stencil::Shape::Star,
+        2,
+        1,
+    )
+    .unwrap();
+    let want = golden_replay(&[8, 8], &pattern.uniform_weights(), 1, 2, 1);
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert!(responses[6].get("plan_hits").unwrap().as_i64().unwrap() >= 1);
+    assert_eq!(responses[6].get("jobs_completed").unwrap().as_usize(), Some(1));
+    let status = child.wait().expect("wait for child");
+    assert!(status.success(), "daemon must exit cleanly after shutdown: {status:?}");
+}
