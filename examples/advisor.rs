@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use tc_stencil::backend::BackendKind;
+use tc_stencil::backend::{BackendKind, TemporalMode};
 use tc_stencil::coordinator::planner::{plan, Request};
 use tc_stencil::hardware::Gpu;
 use tc_stencil::model::perf::Dtype;
@@ -41,6 +41,7 @@ fn main() -> Result<()> {
                     gpu: gpu.clone(),
                     backend: BackendKind::Auto,
                     max_t: 8,
+                    temporal: TemporalMode::Auto,
                 };
                 let Ok(p) = plan(&req, None) else {
                     continue;

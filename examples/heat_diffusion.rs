@@ -13,7 +13,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use tc_stencil::backend::BackendKind;
+use tc_stencil::backend::{BackendKind, TemporalMode};
 use tc_stencil::coordinator::planner::{plan, Request};
 use tc_stencil::coordinator::scheduler::{run, Job};
 use tc_stencil::hardware::Gpu;
@@ -80,6 +80,7 @@ fn main() -> Result<()> {
         gpu: Gpu::a100(),
         backend: BackendKind::Pjrt,
         max_t: 8,
+        temporal: TemporalMode::Auto,
     };
     let decision = plan(&req, Some(&rt.manifest))?;
     let artifact = decision.chosen.artifact.clone().expect("artifact-bound plan");

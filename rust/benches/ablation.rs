@@ -5,7 +5,7 @@
 //!   (d) rust-driven launch loop vs in-graph lax.scan chain (real timing)
 //!   (e) gather worker threads 1 vs 4 (real timing)
 
-use tc_stencil::backend::BackendKind;
+use tc_stencil::backend::{BackendKind, TemporalMode};
 use tc_stencil::coordinator::planner::{plan, Request};
 use tc_stencil::coordinator::scheduler::{run, Job};
 use tc_stencil::engines;
@@ -36,6 +36,7 @@ fn ablation_a_planner_vs_fixed_t() {
         gpu: gpu.clone(),
         backend: BackendKind::Auto,
         max_t: 8,
+        temporal: TemporalMode::Auto,
     };
     let p = plan(&req, None).unwrap();
     let auto = p.chosen.prediction.gstencils();

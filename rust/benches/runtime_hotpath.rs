@@ -71,6 +71,7 @@ fn main() {
         gpu: Gpu::a100(),
         backend: BackendKind::Pjrt,
         max_t: 8,
+        temporal: tc_stencil::backend::TemporalMode::Auto,
     };
     b.run("planner_plan", || {
         std::hint::black_box(plan(&req, Some(&rt.manifest)).unwrap());

@@ -13,6 +13,19 @@
 //! A [`Job`] is backend-agnostic; [`Backend::supports`] is the
 //! capability probe the scheduler/planner use to pick a substrate, and
 //! [`Backend::advance`] runs it, returning phase-split [`RunMetrics`].
+//!
+//! A job also carries a [`TemporalMode`]: *how* its fusion depth `t` is
+//! realized.  [`TemporalMode::Sweep`] launches the t-fold fused kernel
+//! once per `t` steps (Tensor-Core semantics, what the AOT artifacts
+//! execute); [`TemporalMode::Blocked`] carries `t` base-kernel steps
+//! through a cache-resident tile (true temporal blocking — the paper's
+//! CUDA-Core Eq. 8 intensity `t·K/D`, bit-identical to sequential time
+//! stepping).  The two differ numerically within `t·r` of the domain
+//! boundary (fused kernels see the initial zero halo once; sequential
+//! stepping re-applies it each step), so the mode is part of the job's
+//! identity, never a silent backend choice.
+
+#![warn(missing_docs)]
 
 pub mod native;
 pub mod pjrt;
@@ -29,23 +42,69 @@ use crate::model::perf::Dtype;
 use crate::model::sparsity::Scheme;
 use crate::model::stencil::StencilPattern;
 
+/// How a job's fusion depth `t` is realized by the executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TemporalMode {
+    /// Let the resolver pick: the planner scores sweep vs. blocked with
+    /// the model's fused-intensity equations; a backend receiving an
+    /// unresolved `Auto` runs blocked whenever `t > 1`.
+    Auto,
+    /// `steps / t` monolithic fused-kernel launches (each applying the
+    /// t-fold self-convolved kernel once — Tensor-Core semantics),
+    /// followed by `steps % t` single base-kernel steps.
+    Sweep,
+    /// Time-tiled temporal blocking: `t` base-kernel steps carried
+    /// through each cache-resident tile per pass over the domain.
+    /// Numerically identical to plain sequential stepping (f64
+    /// bit-identical to chained [`crate::sim::golden::apply_once`]).
+    Blocked,
+}
+
+impl TemporalMode {
+    /// Parse a `--temporal` / protocol value.
+    pub fn parse(s: &str) -> Result<TemporalMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(TemporalMode::Auto),
+            "sweep" => Ok(TemporalMode::Sweep),
+            "blocked" => Ok(TemporalMode::Blocked),
+            other => bail!("unknown temporal mode {other:?} (want auto|sweep|blocked)"),
+        }
+    }
+
+    /// The stable wire/CLI name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TemporalMode::Auto => "auto",
+            TemporalMode::Sweep => "sweep",
+            TemporalMode::Blocked => "blocked",
+        }
+    }
+}
+
 /// One executable stencil job, independent of where it runs.
 ///
-/// Semantics: `steps / t` monolithic fused launches (each applying the
-/// t-fold self-convolved kernel once — Tensor-Core semantics), followed
-/// by `steps % t` single base-kernel steps.  With `t == 1` this is plain
-/// sequential time stepping.
+/// Default semantics ([`TemporalMode::Sweep`]): `steps / t` monolithic
+/// fused launches (each applying the t-fold self-convolved kernel once —
+/// Tensor-Core semantics), followed by `steps % t` single base-kernel
+/// steps.  With `t == 1` this is plain sequential time stepping.
+/// [`TemporalMode::Blocked`] instead advances `steps` sequential
+/// base-kernel steps, grouped into cache-resident time tiles of depth
+/// `t`.
 #[derive(Debug, Clone)]
 pub struct Job {
+    /// Stencil pattern (shape, dimensionality, radius).
     pub pattern: StencilPattern,
+    /// Element type the kernel arithmetic runs at.
     pub dtype: Dtype,
     /// Domain extents N^d (any size ≥ 1 per dim); rank must equal
     /// `pattern.d`.
     pub domain: Vec<usize>,
     /// Total time steps to advance.
     pub steps: usize,
-    /// Fusion depth per launch (t ≥ 1).
+    /// Fusion depth per launch / temporal-tile depth (t ≥ 1).
     pub t: usize,
+    /// How `t` is realized (fused sweeps vs. temporal blocking).
+    pub temporal: TemporalMode,
     /// Base stencil weights over the (2r+1)^d hull (row-major).
     pub weights: Vec<f64>,
     /// Worker threads (1 = serial).
@@ -108,11 +167,14 @@ pub trait Backend {
 pub enum BackendKind {
     /// Prefer a matching AOT artifact on PJRT, fall back to native.
     Auto,
+    /// Force the native CPU engine (any pattern/dtype/t runs).
     Native,
+    /// Require a pre-built AOT artifact through the PJRT runtime.
     Pjrt,
 }
 
 impl BackendKind {
+    /// Parse a `--backend` / protocol value.
     pub fn parse(s: &str) -> Result<BackendKind> {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Ok(BackendKind::Auto),
@@ -122,6 +184,7 @@ impl BackendKind {
         }
     }
 
+    /// The stable wire/CLI name.
     pub fn as_str(&self) -> &'static str {
         match self {
             BackendKind::Auto => "auto",
@@ -129,7 +192,6 @@ impl BackendKind {
             BackendKind::Pjrt => "pjrt",
         }
     }
-
 }
 
 /// Resolve a kind into a concrete backend able to run `job`.
@@ -185,6 +247,7 @@ mod tests {
             domain: vec![8, 8],
             steps: 4,
             t: 2,
+            temporal: TemporalMode::Sweep,
             weights: vec![1.0 / 9.0; 9],
             threads: 1,
         }
@@ -197,6 +260,15 @@ mod tests {
         }
         assert_eq!(BackendKind::parse("NATIVE").unwrap(), BackendKind::Native);
         assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn temporal_parse_roundtrip() {
+        for m in [TemporalMode::Auto, TemporalMode::Sweep, TemporalMode::Blocked] {
+            assert_eq!(TemporalMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert_eq!(TemporalMode::parse("BLOCKED").unwrap(), TemporalMode::Blocked);
+        assert!(TemporalMode::parse("fused").is_err());
     }
 
     #[test]

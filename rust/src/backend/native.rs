@@ -1,7 +1,9 @@
 //! The native CPU stencil engine: a tiled, halo-split, double-buffered,
-//! multi-threaded executor for ANY `(pattern, dtype, t)` combination.
+//! multi-threaded executor for ANY `(pattern, dtype, t)` combination —
+//! with two temporal execution strategies selected by
+//! [`Job::temporal`](crate::backend::Job):
 //!
-//! Layout per time step (one "launch"):
+//! **Fused sweeps** ([`TemporalMode::Sweep`]) — one launch per `t` steps:
 //!
 //! * the fused kernel (t-fold self-convolution, identical arithmetic to
 //!   the golden oracle's [`golden::Weights::fuse`]) is compiled once into
@@ -15,17 +17,38 @@
 //!   the zero-Dirichlet halo;
 //! * fields are double-buffered and swapped between launches.
 //!
+//! **Temporal blocking** ([`TemporalMode::Blocked`]) — the paper's
+//! arithmetic-intensity shift (Eq. 8, `I = t·K/D`) made real: the domain
+//! is tiled into dim-0 slabs sized to stay cache-resident, and each tile
+//! carries `t` base-kernel steps before the next tile is touched.  The
+//! tile's read footprint deepens by `r` per fused step (the `t·r` halo
+//! skew of a trapezoidal/parallelogram time tile); intermediate steps
+//! rotate through two tile-local scratch buffers that never spill to the
+//! full-domain arrays, so principal-memory traffic is one read + one
+//! write of the domain per `t` steps instead of per step.  Neighboring
+//! tiles recompute the overlapped halo region (overlapped tiling — no
+//! inter-tile dependencies, so tiles parallelize freely across workers).
+//!
 //! Accumulation order per output point is exactly the oracle's (hull
 //! row-major, zero weights skipped, out-of-domain reads contribute
-//! `w·0`), so f64 results are bit-identical to `golden::apply_fused` /
-//! `apply_once` chains; f32 jobs run genuinely in f32 (mirroring the
-//! AOT artifacts' precision) and match the oracle to rounding.
+//! `w·0`), so f64 sweep results are bit-identical to
+//! `golden::apply_fused` / `apply_once` chains and f64 blocked results
+//! are bit-identical to chained `golden::apply_once` (sequential
+//! semantics); f32 jobs run genuinely in f32 (mirroring the AOT
+//! artifacts' precision) and match the oracle to rounding.
+//!
+//! [`RunMetrics`] carries instrumented traffic accounting: `bytes_moved`
+//! counts principal-memory reads+writes of field-level buffers (tile
+//! scratch is cache-resident by construction and excluded), `flops`
+//! counts `2 × non-zero kernel points` per computed output point, and
+//! their ratio is the *achieved* arithmetic intensity that
+//! [`crate::model::calib`] compares against the model's prediction.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::backend::{Backend, Job};
+use crate::backend::{Backend, Job, TemporalMode};
 use crate::coordinator::metrics::RunMetrics;
 use crate::model::perf::Dtype;
 use crate::sim::golden;
@@ -60,7 +83,7 @@ impl Scalar for f32 {
 
 /// A stencil kernel compiled against one domain shape.
 struct Kernel<T> {
-    /// Hull radius (r·t after fusion).
+    /// Hull radius (r·t after fusion, r for the blocked base kernel).
     r: usize,
     /// Non-zero hull offsets in oracle order (multi-dim form, slow path).
     offsets: Vec<(Vec<i64>, T)>,
@@ -90,12 +113,15 @@ fn compile<T: Scalar>(w: &golden::Weights, dims: &[usize]) -> Kernel<T> {
 }
 
 /// One output point via the scalar slow path (zero-Dirichlet halo),
-/// accumulating in exactly the oracle's order.
+/// accumulating in exactly the oracle's order.  `src` may be a slab of
+/// the field starting at global flat index `src_base`.
+#[allow(clippy::too_many_arguments)]
 fn point<T: Scalar>(
     k: &Kernel<T>,
     dims: &[usize],
     st: &[usize],
     src: &[T],
+    src_base: usize,
     outer: &[usize],
     col: usize,
     coords: &mut [i64],
@@ -117,25 +143,40 @@ fn point<T: Scalar>(
             }
             flat += c as isize * st[kk] as isize;
         }
-        let v = if ok { src[flat as usize] } else { T::ZERO };
+        let v = if ok { src[(flat - src_base as isize) as usize] } else { T::ZERO };
         acc = T::mul_acc(acc, *w, v);
     }
     acc
 }
 
-/// Compute rows `[row0, row0 + dst.len()/n_last)` of one step into `dst`.
-fn step_rows<T: Scalar>(dims: &[usize], k: &Kernel<T>, src: &[T], dst: &mut [T], row0: usize) {
+/// Compute global rows `[dst_row0, dst_row0 + dst.len()/n_last)` of one
+/// step into `dst`, reading `src` — a slab of the field whose first
+/// element is global row `src_row0` (the full field when `src_row0 == 0`
+/// and `src` spans it).  Rows are flattened outer indices (all dims but
+/// the last); a dim-0 slab with full extent in the other dims is a
+/// contiguous row range, which is what lets the blocked path reuse the
+/// flat-delta fast path unchanged: strides of dims `1..` are unaffected
+/// by slicing dim 0.
+fn step_rows<T: Scalar>(
+    dims: &[usize],
+    k: &Kernel<T>,
+    src: &[T],
+    src_row0: usize,
+    dst: &mut [T],
+    dst_row0: usize,
+) {
     let d = dims.len();
     let n_last = dims[d - 1];
     let r = k.r;
     let nrows = dst.len() / n_last;
     let st = golden::strides_for(dims);
+    let src_base = src_row0 * n_last;
     // Interior column window shared by every interior row.
     let (clo, chi) = if n_last > 2 * r { (r, n_last - r) } else { (0, 0) };
     let mut outer = vec![0usize; d - 1];
     let mut coords = vec![0i64; d];
     for lr in 0..nrows {
-        let rr = row0 + lr;
+        let rr = dst_row0 + lr;
         let mut rem = rr;
         for kk in (0..d - 1).rev() {
             outer[kk] = rem % dims[kk];
@@ -147,23 +188,24 @@ fn step_rows<T: Scalar>(dims: &[usize], k: &Kernel<T>, src: &[T], dst: &mut [T],
         if row_interior && chi > clo {
             // Fast path: the whole interior window, offset-major, one
             // contiguous source segment per offset.  Bounds are
-            // guaranteed by the interior condition, so the only checks
-            // left are one slice construction per offset per row.
+            // guaranteed by the interior condition (and, on the blocked
+            // path, by the trapezoid's halo bookkeeping), so the only
+            // checks left are one slice construction per offset per row.
             let out = &mut drow[clo..chi];
             out.fill(T::ZERO);
             for &(delta, w) in &k.deltas {
-                let start = ((row_base + clo) as isize + delta) as usize;
+                let start = ((row_base + clo) as isize + delta - src_base as isize) as usize;
                 let seg = &src[start..start + (chi - clo)];
                 for (o, &v) in out.iter_mut().zip(seg) {
                     *o = T::mul_acc(*o, w, v);
                 }
             }
             for c in (0..clo).chain(chi..n_last) {
-                drow[c] = point(k, dims, &st, src, &outer, c, &mut coords);
+                drow[c] = point(k, dims, &st, src, src_base, &outer, c, &mut coords);
             }
         } else {
             for c in 0..n_last {
-                drow[c] = point(k, dims, &st, src, &outer, c, &mut coords);
+                drow[c] = point(k, dims, &st, src, src_base, &outer, c, &mut coords);
             }
         }
     }
@@ -175,18 +217,21 @@ fn step<T: Scalar>(dims: &[usize], k: &Kernel<T>, src: &[T], dst: &mut [T], thre
     let rows = src.len() / n_last;
     let workers = threads.max(1).min(rows);
     if workers <= 1 {
-        step_rows(dims, k, src, dst, 0);
+        step_rows(dims, k, src, 0, dst, 0);
         return;
     }
     let chunk_rows = rows.div_ceil(workers);
     std::thread::scope(|s| {
         for (ci, chunk) in dst.chunks_mut(chunk_rows * n_last).enumerate() {
-            s.spawn(move || step_rows(dims, k, src, chunk, ci * chunk_rows));
+            s.spawn(move || step_rows(dims, k, src, 0, chunk, ci * chunk_rows));
         }
     });
 }
 
-fn run_typed<T: Scalar>(
+/// Fused-sweep execution: `launches` passes of the fused kernel plus
+/// `rem` passes of the base kernel, full-domain double buffering.
+#[allow(clippy::too_many_arguments)]
+fn run_sweeps<T: Scalar>(
     dims: &[usize],
     fused: &golden::Weights,
     base: &golden::Weights,
@@ -196,24 +241,213 @@ fn run_typed<T: Scalar>(
     buf: &mut Vec<T>,
     metrics: &mut RunMetrics,
 ) {
+    let n = buf.len() as u64;
+    let elem = std::mem::size_of::<T>() as u64;
     let mut next = vec![T::ZERO; buf.len()];
     if launches > 0 {
         let fk = compile::<T>(fused, dims);
+        let nnz = fk.deltas.len() as u64;
         for _ in 0..launches {
             let t0 = Instant::now();
             step(dims, &fk, buf, &mut next, threads);
             metrics.add_execute(t0.elapsed());
             std::mem::swap(buf, &mut next);
+            metrics.launches += 1;
+            metrics.bytes_moved += 2 * n * elem;
+            metrics.flops += 2 * nnz * n;
         }
     }
     if rem > 0 {
         let bk = compile::<T>(base, dims);
+        let nnz = bk.deltas.len() as u64;
         for _ in 0..rem {
             let t0 = Instant::now();
             step(dims, &bk, buf, &mut next, threads);
             metrics.add_execute(t0.elapsed());
             std::mem::swap(buf, &mut next);
+            metrics.launches += 1;
+            metrics.bytes_moved += 2 * n * elem;
+            metrics.flops += 2 * nnz * n;
         }
+    }
+}
+
+/// Scratch budget for one worker's pair of tile-resident buffers —
+/// sized to sit comfortably inside a per-core L2 slice.
+const TILE_BUDGET_BYTES: usize = 2 << 20;
+
+/// Dim-0 planes per time tile: fit the two tile-resident scratch
+/// buffers in [`TILE_BUDGET_BYTES`], keep at least one tile per worker
+/// for parallelism, floor at a single plane.
+fn tile_planes(n0: usize, plane_bytes: usize, tb: usize, r: usize, threads: usize) -> usize {
+    let halo = 2 * (tb - 1) * r;
+    let fit = (TILE_BUDGET_BYTES / (2 * plane_bytes).max(1)).saturating_sub(halo).max(1);
+    let spread = n0.div_ceil(threads.max(1)).max(1);
+    fit.min(spread).min(n0).max(1)
+}
+
+/// Carry `tb` base-kernel steps over the output dim-0 plane range
+/// `[a, b)`: step 1 reads the full field `src`, intermediate steps
+/// rotate through the tile-local scratch slabs `sa`/`sb` (each sized for
+/// the widest intermediate extent), and the final step writes straight
+/// into `dst` (exactly `(b − a) · plane` elements).  The read/compute
+/// extent shrinks by `r` per step — the classic trapezoidal time tile —
+/// and every intermediate value equals the corresponding global-sweep
+/// value, which is what makes the result bit-identical to sequential
+/// stepping.
+#[allow(clippy::too_many_arguments)]
+fn trapezoid<T: Scalar>(
+    dims: &[usize],
+    k: &Kernel<T>,
+    tb: usize,
+    src: &[T],
+    a: usize,
+    b: usize,
+    dst: &mut [T],
+    sa: &mut [T],
+    sb: &mut [T],
+) {
+    let d = dims.len();
+    let n0 = dims[0];
+    let plane: usize = dims[1..].iter().product();
+    let outer_rest = plane / dims[d - 1];
+    let r = k.r;
+    let (mut prev, mut cur): (&mut [T], &mut [T]) = (sa, sb);
+    for s in 1..=tb {
+        let olo = a.saturating_sub((tb - s) * r);
+        let ohi = (b + (tb - s) * r).min(n0);
+        // The source slab: the full field for step 1, otherwise the
+        // previous step's output planes [plo, phi) — the same range the
+        // previous iteration computed (the trapezoid shrinks by r).
+        let plo = a.saturating_sub((tb - s + 1) * r);
+        let phi = (b + (tb - s + 1) * r).min(n0);
+        if s == tb {
+            let (src_sl, src_lo): (&[T], usize) =
+                if s == 1 { (src, 0) } else { (&prev[..(phi - plo) * plane], plo) };
+            step_rows(dims, k, src_sl, src_lo * outer_rest, dst, a * outer_rest);
+        } else if s == 1 {
+            let out = &mut prev[..(ohi - olo) * plane];
+            step_rows(dims, k, src, 0, out, olo * outer_rest);
+        } else {
+            let src_sl: &[T] = &prev[..(phi - plo) * plane];
+            let out = &mut cur[..(ohi - olo) * plane];
+            step_rows(dims, k, src_sl, plo * outer_rest, out, olo * outer_rest);
+            std::mem::swap(&mut prev, &mut cur);
+        }
+    }
+}
+
+/// Temporal-blocked execution: `steps` sequential base-kernel steps,
+/// grouped into time blocks of depth ≤ `t`; within a block each dim-0
+/// tile is carried through the whole block while cache-resident.
+fn run_blocked<T: Scalar>(
+    dims: &[usize],
+    base: &golden::Weights,
+    steps: usize,
+    t: usize,
+    threads: usize,
+    buf: &mut Vec<T>,
+    metrics: &mut RunMetrics,
+) {
+    if steps == 0 {
+        return;
+    }
+    let k = compile::<T>(base, dims);
+    let nnz = k.deltas.len() as u64;
+    let d = dims.len();
+    let n = buf.len();
+    let elem = std::mem::size_of::<T>();
+    let n0 = dims[0];
+    let plane: usize = dims[1..].iter().product();
+    let r = base.r();
+    let mut next = vec![T::ZERO; n];
+    let mut remaining = steps;
+    while remaining > 0 {
+        let tb = t.min(remaining);
+        let bheight = tile_planes(n0, plane * elem, tb, r, threads);
+        let tiles: Vec<(usize, usize)> =
+            (0..n0).step_by(bheight).map(|a| (a, (a + bheight).min(n0))).collect();
+        // Tiling is only profitable when the tile is thicker than its
+        // per-block halo growth — thinner tiles spend more work
+        // recomputing overlap than advancing, and their scratch slabs
+        // (cap ≤ 2·bheight planes when this holds) stay budget-bounded.
+        let tileable = d > 1 && tiles.len() > 1 && bheight >= 2 * (tb - 1) * r;
+        let t0 = Instant::now();
+        if tb == 1 || !tileable {
+            // Degenerate tile: 1-D domains have no plane axis to slab,
+            // a single tile spanning the domain is just sequential
+            // stepping, and halo-dominated thin tiles would recompute
+            // more than they advance — run the block as plain sweeps
+            // (bit-identical, and `step` keeps the row-level thread
+            // parallelism), recording the fallback for the model
+            // feedback path.
+            if tb > 1 {
+                metrics.degenerate_blocks += 1;
+            }
+            for _ in 0..tb {
+                step(dims, &k, buf, &mut next, threads);
+                std::mem::swap(buf, &mut next);
+                metrics.bytes_moved += 2 * (n * elem) as u64;
+                metrics.flops += 2 * nnz * n as u64;
+            }
+        } else {
+            let cap_planes = (bheight + 2 * (tb - 1) * r).min(n0);
+            let workers = threads.max(1).min(tiles.len());
+            let tpw = tiles.len().div_ceil(workers);
+            let src: &[T] = buf.as_slice();
+            let kref = &k;
+            let tiles_ref = &tiles;
+            std::thread::scope(|s| {
+                for (wi, chunk) in next.chunks_mut(tpw * bheight * plane).enumerate() {
+                    s.spawn(move || {
+                        let mut sa = vec![T::ZERO; cap_planes * plane];
+                        let mut sb = vec![T::ZERO; cap_planes * plane];
+                        let lo = wi * tpw;
+                        let hi = (lo + tpw).min(tiles_ref.len());
+                        let base_plane = tiles_ref[lo].0;
+                        for &(ta, tbound) in &tiles_ref[lo..hi] {
+                            let off = (ta - base_plane) * plane;
+                            let dst = &mut chunk[off..off + (tbound - ta) * plane];
+                            trapezoid(dims, kref, tb, src, ta, tbound, dst, &mut sa, &mut sb);
+                        }
+                    });
+                }
+            });
+            std::mem::swap(buf, &mut next);
+            // Traffic/flop accounting is a pure function of the tile
+            // geometry the workers just executed: each tile reads its
+            // tb·r-deepened input slab from the field and writes its
+            // output planes; overlapped-halo recompute shows up as the
+            // extra per-step extents.
+            for &(ta, tbound) in &tiles {
+                let read_planes = (tbound + tb * r).min(n0) - ta.saturating_sub(tb * r);
+                metrics.bytes_moved +=
+                    ((read_planes + (tbound - ta)) * plane * elem) as u64;
+                for s in 1..=tb {
+                    let olo = ta.saturating_sub((tb - s) * r);
+                    let ohi = (tbound + (tb - s) * r).min(n0);
+                    metrics.flops += 2 * nnz * ((ohi - olo) * plane) as u64;
+                }
+            }
+        }
+        metrics.add_execute(t0.elapsed());
+        metrics.launches += 1;
+        remaining -= tb;
+    }
+}
+
+/// Dispatch one dtype-monomorphized execution over the resolved mode.
+fn run_field<T: Scalar>(job: &Job, blocked: bool, buf: &mut Vec<T>, metrics: &mut RunMetrics) {
+    let base = golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
+    if blocked {
+        run_blocked::<T>(&job.domain, &base, job.steps, job.t, job.threads, buf, metrics);
+    } else {
+        let launches = job.steps / job.t;
+        let rem = job.steps % job.t;
+        // Fusing is itself a t-fold convolution — skip it when no fused
+        // launch will run (steps < t jobs are pure remainder).
+        let fused = if launches > 0 && job.t > 1 { base.fuse(job.t) } else { base.clone() };
+        run_sweeps::<T>(&job.domain, &fused, &base, launches, rem, job.threads, buf, metrics);
     }
 }
 
@@ -222,6 +456,7 @@ fn run_typed<T: Scalar>(
 pub struct NativeBackend;
 
 impl NativeBackend {
+    /// Construct the (stateless) native backend.
     pub fn new() -> NativeBackend {
         NativeBackend
     }
@@ -233,38 +468,30 @@ impl Backend for NativeBackend {
     }
 
     fn supports(&self, job: &Job) -> Result<(), String> {
-        // Any pattern/dtype/fusion depth runs here; only structural
-        // inconsistencies are rejected.
+        // Any pattern/dtype/fusion depth/temporal mode runs here; only
+        // structural inconsistencies are rejected.
         job.validate(job.points() as usize).map_err(|e| format!("{e:#}"))
     }
 
     fn advance(&mut self, job: &Job, field: &mut Vec<f64>) -> Result<RunMetrics> {
         job.validate(field.len())?;
-        let launches = job.steps / job.t;
-        let rem = job.steps % job.t;
-        let base =
-            golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
-        // Fusing is itself a t-fold convolution — skip it when no fused
-        // launch will run (steps < t jobs are pure remainder).
-        let fused = if launches > 0 && job.t > 1 { base.fuse(job.t) } else { base.clone() };
+        // An unresolved Auto means no planner scored this job; blocked
+        // does strictly less arithmetic per useful step (no α
+        // redundancy) and t× less principal-memory traffic, so it is
+        // the CPU default whenever there is a time axis to tile.
+        let blocked = match job.temporal {
+            TemporalMode::Sweep => false,
+            TemporalMode::Blocked => true,
+            TemporalMode::Auto => job.t > 1,
+        };
         let mut metrics = RunMetrics {
             steps: job.steps,
             points: job.points(),
-            launches: (launches + rem) as u64,
             ..Default::default()
         };
         let wall0 = Instant::now();
         match job.dtype {
-            Dtype::F64 => run_typed::<f64>(
-                &job.domain,
-                &fused,
-                &base,
-                launches,
-                rem,
-                job.threads,
-                field,
-                &mut metrics,
-            ),
+            Dtype::F64 => run_field::<f64>(job, blocked, field, &mut metrics),
             Dtype::F32 => {
                 // Marshal through f32 buffers so the arithmetic runs at
                 // artifact precision; conversion cost is accounted like
@@ -272,16 +499,7 @@ impl Backend for NativeBackend {
                 let t0 = Instant::now();
                 let mut buf: Vec<f32> = field.iter().map(|&v| v as f32).collect();
                 metrics.add_gather(t0.elapsed());
-                run_typed::<f32>(
-                    &job.domain,
-                    &fused,
-                    &base,
-                    launches,
-                    rem,
-                    job.threads,
-                    &mut buf,
-                    &mut metrics,
-                );
+                run_field::<f32>(job, blocked, &mut buf, &mut metrics);
                 let t1 = Instant::now();
                 for (o, &v) in field.iter_mut().zip(&buf) {
                     *o = v as f64;
@@ -313,6 +531,7 @@ mod tests {
             domain,
             steps,
             t,
+            temporal: TemporalMode::Sweep,
             weights: box_weights(d, r),
             threads: 1,
         }
@@ -333,6 +552,12 @@ mod tests {
             cur = golden::apply_once(&cur, &w);
         }
         cur
+    }
+
+    fn golden_sequential(job: &Job, init: &[f64]) -> golden::Field {
+        let w = golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
+        let cur = golden::Field::from_vec(&job.domain, init.to_vec());
+        golden::apply_steps(&cur, &w, job.steps)
     }
 
     #[test]
@@ -389,15 +614,18 @@ mod tests {
     #[test]
     fn thread_count_does_not_change_bits() {
         let init = rand_field(5, 31 * 29);
-        let mut want: Option<Vec<f64>> = None;
-        for threads in [1usize, 2, 7] {
-            let mut j = job(2, 2, vec![31, 29], 4, 2);
-            j.threads = threads;
-            let mut field = init.clone();
-            NativeBackend::new().advance(&j, &mut field).unwrap();
-            match &want {
-                None => want = Some(field),
-                Some(w) => assert_eq!(w, &field, "threads={threads}"),
+        for temporal in [TemporalMode::Sweep, TemporalMode::Blocked] {
+            let mut want: Option<Vec<f64>> = None;
+            for threads in [1usize, 2, 7] {
+                let mut j = job(2, 2, vec![31, 29], 4, 2);
+                j.temporal = temporal;
+                j.threads = threads;
+                let mut field = init.clone();
+                NativeBackend::new().advance(&j, &mut field).unwrap();
+                match &want {
+                    None => want = Some(field),
+                    Some(w) => assert_eq!(w, &field, "threads={threads} {temporal:?}"),
+                }
             }
         }
     }
@@ -448,11 +676,88 @@ mod tests {
 
     #[test]
     fn zero_steps_is_identity() {
-        let j = job(2, 1, vec![8, 8], 0, 2);
-        let init = rand_field(9, 64);
+        for temporal in [TemporalMode::Sweep, TemporalMode::Blocked] {
+            let mut j = job(2, 1, vec![8, 8], 0, 2);
+            j.temporal = temporal;
+            let init = rand_field(9, 64);
+            let mut field = init.clone();
+            let m = NativeBackend::new().advance(&j, &mut field).unwrap();
+            assert_eq!(field, init);
+            assert_eq!(m.launches, 0);
+        }
+    }
+
+    #[test]
+    fn blocked_is_bit_identical_to_sequential_oracle() {
+        // Odd domain, deep fusion, multiple workers: the trapezoid path
+        // must reproduce chained apply_once exactly.
+        let mut j = job(2, 1, vec![37, 23], 9, 4);
+        j.temporal = TemporalMode::Blocked;
+        j.threads = 3;
+        let init = rand_field(11, 37 * 23);
         let mut field = init.clone();
         let m = NativeBackend::new().advance(&j, &mut field).unwrap();
-        assert_eq!(field, init);
-        assert_eq!(m.launches, 0);
+        // 9 steps at depth 4 → blocks of 4, 4, 1.
+        assert_eq!(m.launches, 3);
+        let want = golden_sequential(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn auto_mode_resolves_blocked_above_t1() {
+        // Auto with t>1 runs the blocked (sequential-semantics) path.
+        let mut j = job(2, 1, vec![19, 19], 4, 2);
+        j.temporal = TemporalMode::Auto;
+        let init = rand_field(12, 19 * 19);
+        let mut field = init.clone();
+        NativeBackend::new().advance(&j, &mut field).unwrap();
+        let want = golden_sequential(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+        // ...and at t=1 both semantics coincide anyway.
+        let mut j1 = job(2, 1, vec![19, 19], 3, 1);
+        j1.temporal = TemporalMode::Auto;
+        let mut f1 = init.clone();
+        NativeBackend::new().advance(&j1, &mut f1).unwrap();
+        let want1 = golden_sequential(&j1, &init);
+        assert_eq!(golden::Field::from_vec(&j1.domain, f1).max_abs_diff(&want1), 0.0);
+    }
+
+    #[test]
+    fn traffic_accounting_matches_model_geometry() {
+        // Sweep t=1: per step one read + one write of the field and
+        // 2·nnz flops per point — exactly Eq. 8 at t=1.
+        let j = job(2, 1, vec![32, 32], 4, 1);
+        let mut field = rand_field(13, 1024);
+        let m = NativeBackend::new().advance(&j, &mut field).unwrap();
+        assert_eq!(m.bytes_moved, 4 * 2 * 1024 * 8);
+        assert_eq!(m.flops, 4 * 2 * 9 * 1024);
+        assert!((m.achieved_intensity() - 9.0 / 8.0).abs() < 1e-12);
+        // Blocked t=4 over a domain with many tiles: achieved intensity
+        // approaches t·K/D from below (halo re-reads/recompute).
+        // threads=2 splits the 256-plane domain into two 128-plane
+        // tiles (the single-tile case degrades to sweeps by design).
+        let mut jb = job(2, 1, vec![256, 256], 8, 4);
+        jb.temporal = TemporalMode::Blocked;
+        jb.threads = 2;
+        let mut fieldb = rand_field(14, 256 * 256);
+        let mb = NativeBackend::new().advance(&jb, &mut fieldb).unwrap();
+        let model = 4.0 * 9.0 / 8.0;
+        let got = mb.achieved_intensity();
+        assert!(got > 0.5 * model && got <= model + 1e-9, "I={got} vs model {model}");
+    }
+
+    #[test]
+    fn blocked_f32_tracks_sequential_oracle() {
+        let mut j = job(2, 1, vec![33, 21], 6, 3);
+        j.temporal = TemporalMode::Blocked;
+        j.dtype = Dtype::F32;
+        let init: Vec<f64> = rand_field(15, 33 * 21).iter().map(|&v| v as f32 as f64).collect();
+        let mut field = init.clone();
+        NativeBackend::new().advance(&j, &mut field).unwrap();
+        let want = golden_sequential(&j, &init);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert!(got.max_abs_diff(&want) < 1e-3);
     }
 }

@@ -15,7 +15,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{Backend, Job};
+use crate::backend::{Backend, Job, TemporalMode};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::scheduler;
 use crate::model::sparsity::Scheme;
@@ -40,6 +40,7 @@ impl PjrtBackend {
         self.prefer = scheme;
     }
 
+    /// The underlying artifact runtime (manifest access).
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }
@@ -66,6 +67,14 @@ impl Backend for PjrtBackend {
     fn supports(&self, job: &Job) -> Result<(), String> {
         if let Err(e) = job.validate(job.points() as usize) {
             return Err(format!("{e:#}"));
+        }
+        // AOT artifacts are monolithic fused launches; there is no
+        // time-tiled execution path through PJRT (auto resolves to the
+        // sweep it can run, an explicit blocked request cannot).
+        if job.temporal == TemporalMode::Blocked {
+            return Err("pjrt executes fused-kernel sweeps only (temporal=blocked \
+                        needs the native backend)"
+                .to_string());
         }
         let Some(meta) = self.find_artifact(job) else {
             return Err(format!(
@@ -155,6 +164,7 @@ mod tests {
             domain: vec![32, 32],
             steps,
             t,
+            temporal: TemporalMode::Sweep,
             weights: vec![1.0 / 9.0; 9],
             threads: 1,
         }
@@ -190,5 +200,17 @@ mod tests {
         let b = backend();
         let err = b.supports(&job(5, 5, Dtype::F32)).unwrap_err();
         assert!(err.contains("no AOT artifact"), "{err}");
+    }
+
+    #[test]
+    fn supports_rejects_temporal_blocking() {
+        let b = backend();
+        let mut j = job(3, 6, Dtype::F32);
+        j.temporal = TemporalMode::Blocked;
+        let err = b.supports(&j).unwrap_err();
+        assert!(err.contains("temporal"), "{err}");
+        // auto is fine: it resolves to the sweep PJRT can execute
+        j.temporal = TemporalMode::Auto;
+        let _ = b.supports(&j); // may still fail on Runtime::available(), not on temporal
     }
 }

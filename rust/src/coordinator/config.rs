@@ -2,7 +2,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::BackendKind;
+use crate::backend::{BackendKind, TemporalMode};
 use crate::hardware::Gpu;
 use crate::model::perf::Dtype;
 use crate::model::stencil::{Shape, StencilPattern};
@@ -22,6 +22,9 @@ pub struct RunConfig {
     pub t: Option<usize>,
     /// Execution substrate selection (auto|native|pjrt).
     pub backend: BackendKind,
+    /// Temporal strategy (auto|sweep|blocked): how fused depth t is
+    /// realized — auto lets the planner resolve via the model.
+    pub temporal: TemporalMode,
     pub artifacts_dir: std::path::PathBuf,
 }
 
@@ -37,6 +40,7 @@ impl RunConfig {
             engine: None,
             t: None,
             backend: BackendKind::Auto,
+            temporal: TemporalMode::Auto,
             artifacts_dir: crate::runtime::manifest::default_dir(),
         }
     }
@@ -98,6 +102,9 @@ impl RunConfig {
         if let Some(b) = args.get("backend") {
             c.backend = BackendKind::parse(b)?;
         }
+        if let Some(m) = args.get("temporal") {
+            c.temporal = TemporalMode::parse(m)?;
+        }
         if let Some(dir) = args.get("artifacts") {
             c.artifacts_dir = std::path::PathBuf::from(dir);
         }
@@ -122,6 +129,12 @@ pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
         OptSpec {
             name: "backend",
             help: "execution substrate for plan/run/sweep: auto|native|pjrt",
+            takes_value: true,
+            default: Some("auto"),
+        },
+        OptSpec {
+            name: "temporal",
+            help: "fusion realization: auto (model decides) | sweep (fused kernel) | blocked (time tiling)",
             takes_value: true,
             default: Some("auto"),
         },
@@ -199,6 +212,18 @@ mod tests {
         let raw: Vec<String> = vec!["--backend".into(), "tpu".into()];
         let args = Args::parse(&raw, &run_opt_specs()).unwrap();
         assert!(RunConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn temporal_flag_parses() {
+        assert_eq!(parse(&[]).temporal, TemporalMode::Auto);
+        assert_eq!(parse(&["--temporal", "blocked"]).temporal, TemporalMode::Blocked);
+        assert_eq!(parse(&["--temporal", "sweep"]).temporal, TemporalMode::Sweep);
+        let raw: Vec<String> = vec!["--temporal".into(), "fused".into()];
+        let args = Args::parse(&raw, &run_opt_specs()).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
+        // serve inherits the flag through the shared spec list
+        assert!(serve_opt_specs().iter().any(|s| s.name == "temporal"));
     }
 
     #[test]

@@ -16,9 +16,35 @@ pub struct RunMetrics {
     pub execute_ns: u64,
     pub scatter_ns: u64,
     pub wall_ns: u64,
+    /// Principal-memory traffic the executor actually issued against
+    /// field-level buffers, in bytes (reads + writes; tile-resident
+    /// scratch on the blocked path is excluded by construction).  Zero
+    /// when the backend does not instrument traffic (PJRT).
+    pub bytes_moved: u64,
+    /// Multiply-add work actually executed: 2 × non-zero kernel points
+    /// per computed output point, including overlapped-halo recompute
+    /// and fused-kernel redundancy.  Zero when not instrumented.
+    pub flops: u64,
+    /// Time blocks of depth > 1 a temporal-blocked run executed as
+    /// plain per-step sweeps because the domain could not be tiled
+    /// (1-D, single tile, or halo-dominated thin tiles).  Non-zero
+    /// means the run did NOT realize Eq. 8's blocked intensity — the
+    /// model-feedback path compares against the t=1 prediction instead
+    /// of flagging a correctly executing job as off-model.
+    pub degenerate_blocks: u64,
 }
 
 impl RunMetrics {
+    /// Achieved arithmetic intensity in FLOP/byte — the measured
+    /// counterpart of the model's `I = C/M` (Eq. 7/8): instrumented
+    /// flops over instrumented principal-memory traffic.  Zero when the
+    /// backend did not instrument traffic.
+    pub fn achieved_intensity(&self) -> f64 {
+        if self.bytes_moved == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.bytes_moved as f64
+    }
     /// Point-updates per second achieved end to end.
     pub fn throughput(&self) -> f64 {
         if self.wall_ns == 0 {
@@ -52,9 +78,18 @@ impl RunMetrics {
     }
 
     pub fn render(&self) -> String {
+        let intensity = if self.bytes_moved == 0 {
+            String::new()
+        } else {
+            format!(
+                " [{:.1} MB moved, I={:.2} F/B]",
+                self.bytes_moved as f64 / 1e6,
+                self.achieved_intensity()
+            )
+        };
         format!(
             "steps={} points={} launches={} wall={:.3}s \
-             (gather {:.1}% execute {:.1}% scatter {:.1}%) → {:.3} MStencils/s",
+             (gather {:.1}% execute {:.1}% scatter {:.1}%) → {:.3} MStencils/s{intensity}",
             self.steps,
             self.points,
             self.launches,
@@ -85,6 +120,12 @@ pub struct ServiceCounters {
     pub steps_total: AtomicU64,
     pub point_steps_total: AtomicU64,
     pub exec_wall_ns: AtomicU64,
+    /// Σ |measured − predicted| / predicted intensity across completed
+    /// instrumented jobs, accumulated in 0.1% (permille) units so a
+    /// lock-free integer counter can carry it.
+    pub intensity_err_permille: AtomicU64,
+    /// Number of jobs that contributed to `intensity_err_permille`.
+    pub intensity_samples: AtomicU64,
 }
 
 impl ServiceCounters {
@@ -104,6 +145,13 @@ impl ServiceCounters {
         Self::add(&self.exec_wall_ns, m.wall_ns);
     }
 
+    /// Record one job's predicted-vs-measured intensity error (the
+    /// `model::calib` feedback path; `rel` is a fractional error).
+    pub fn record_intensity_error(&self, rel: f64) {
+        Self::add(&self.intensity_err_permille, (rel.abs() * 1000.0).round() as u64);
+        Self::bump(&self.intensity_samples);
+    }
+
     /// A consistent-enough point-in-time copy for rendering.
     pub fn snapshot(&self) -> ServiceSnapshot {
         let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
@@ -121,6 +169,8 @@ impl ServiceCounters {
             steps_total: get(&self.steps_total),
             point_steps_total: get(&self.point_steps_total),
             exec_wall_ns: get(&self.exec_wall_ns),
+            intensity_err_permille: get(&self.intensity_err_permille),
+            intensity_samples: get(&self.intensity_samples),
         }
     }
 }
@@ -141,9 +191,21 @@ pub struct ServiceSnapshot {
     pub steps_total: u64,
     pub point_steps_total: u64,
     pub exec_wall_ns: u64,
+    pub intensity_err_permille: u64,
+    pub intensity_samples: u64,
 }
 
 impl ServiceSnapshot {
+    /// Mean |measured − predicted| / predicted intensity across
+    /// instrumented jobs (fractional; 0 with no samples) — how far the
+    /// executor's achieved intensity sits from the model's Eq. 8/9
+    /// prediction, service-wide.
+    pub fn model_error(&self) -> f64 {
+        if self.intensity_samples == 0 {
+            return 0.0;
+        }
+        self.intensity_err_permille as f64 / 1000.0 / self.intensity_samples as f64
+    }
     /// Aggregate point-updates/s over all completed jobs' wall time.
     pub fn throughput(&self) -> f64 {
         if self.exec_wall_ns == 0 {
@@ -279,5 +341,24 @@ mod tests {
         let s = m.render();
         assert!(s.contains("steps=4"));
         assert!(s.contains("launches=2"));
+        // uninstrumented runs render no intensity clause
+        assert!(!s.contains("F/B"));
+        m.bytes_moved = 16;
+        m.flops = 36;
+        assert!(m.render().contains("I=2.25 F/B"), "{}", m.render());
+    }
+
+    #[test]
+    fn achieved_intensity_and_model_error_feedback() {
+        let m = RunMetrics { bytes_moved: 16, flops: 36, ..Default::default() };
+        assert!((m.achieved_intensity() - 2.25).abs() < 1e-12);
+        assert_eq!(RunMetrics::default().achieved_intensity(), 0.0);
+        let c = ServiceCounters::default();
+        assert_eq!(c.snapshot().model_error(), 0.0);
+        c.record_intensity_error(-0.05);
+        c.record_intensity_error(0.15);
+        let s = c.snapshot();
+        assert_eq!(s.intensity_samples, 2);
+        assert!((s.model_error() - 0.1).abs() < 1e-3, "{}", s.model_error());
     }
 }

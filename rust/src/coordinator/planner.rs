@@ -13,7 +13,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::BackendKind;
+use crate::backend::{BackendKind, TemporalMode};
 use crate::engines::{self, Engine};
 use crate::hardware::Gpu;
 use crate::model::criteria;
@@ -36,6 +36,11 @@ pub struct Request {
     pub backend: BackendKind,
     /// Cap on fusion depth (default 8, the EBISU/SPIDER max).
     pub max_t: usize,
+    /// Temporal strategy constraint: `Auto` enumerates fused-sweep AND
+    /// temporal-blocked variants of every scalar-unit candidate and
+    /// scores both with the model's fused-intensity equations (Eq. 8
+    /// vs. Eq. 9-inflated); `Sweep`/`Blocked` pins the strategy.
+    pub temporal: TemporalMode,
 }
 
 /// The cacheable identity of a planning request.
@@ -61,6 +66,9 @@ pub struct PlanKey {
     pub steps: usize,
     pub max_t: usize,
     pub backend: &'static str,
+    /// Requested temporal strategy (auto/sweep/blocked) — it constrains
+    /// candidate enumeration, so it is part of the plan's identity.
+    pub temporal: &'static str,
     pub gpu: String,
 }
 
@@ -69,13 +77,14 @@ impl PlanKey {
     pub fn canonical(&self) -> String {
         let dims: Vec<String> = self.domain.iter().map(|d| d.to_string()).collect();
         format!(
-            "{}|{}|{}|s{}|t<={}|{}|{}",
+            "{}|{}|{}|s{}|t<={}|{}|{}|{}",
             self.pattern,
             self.dtype,
             dims.join("x"),
             self.steps,
             self.max_t,
             self.backend,
+            self.temporal,
             self.gpu
         )
     }
@@ -91,6 +100,7 @@ impl Request {
             steps: self.steps,
             max_t: self.max_t,
             backend: self.backend.as_str(),
+            temporal: self.temporal.as_str(),
             gpu: self.gpu.name.to_string(),
         }
     }
@@ -126,6 +136,11 @@ pub struct Candidate {
     pub artifact: Option<String>,
     /// The substrate this candidate would dispatch to.
     pub target: ExecTarget,
+    /// Resolved temporal strategy: `Sweep` for every tensor-unit (and
+    /// PJRT-targeted) candidate — fused kernels are how those execute —
+    /// `Sweep` or `Blocked` for scalar-unit candidates, scored as
+    /// distinct variants.  Never `Auto`.
+    pub temporal: TemporalMode,
 }
 
 /// The planner's decision.
@@ -138,11 +153,23 @@ pub struct Plan {
 }
 
 /// Enumerate and score all feasible candidates.
+///
+/// Scalar-unit (CUDA-core) engines are scored as up to TWO variants per
+/// fusion depth: a *blocked* variant at the model's fused intensity
+/// `t·K/D` (Eq. 8 — what temporal blocking realizes) and a *sweep*
+/// variant at the fused-kernel intensity `α·t·K/D` with only `1/α` of
+/// the flops useful (what a monolithic fused launch realizes).  The
+/// request's [`TemporalMode`] restricts which variants exist; tensor
+/// engines and PJRT targets are inherently sweep (fused kernels are how
+/// they execute), so a pinned `Blocked` request excludes them.
 pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> {
     let mut out = Vec::new();
     for e in engines::all() {
         if e.symmetric_only || e.half_only {
             continue; // excluded from general comparisons (§5.5)
+        }
+        if e.is_tensor() && req.temporal == TemporalMode::Blocked {
+            continue; // no time-tiled path through MMA units
         }
         for t in 1..=req.max_t.min(e.max_t) {
             let w = Workload::new(req.pattern, t, req.dtype);
@@ -179,9 +206,6 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
                 (BackendKind::Auto, _) if pjrt_runnable => ExecTarget::Pjrt,
                 (BackendKind::Auto, _) => ExecTarget::Native,
             };
-            let Ok(prediction) = exec::predict(&e, &w, &req.gpu) else {
-                continue; // unit missing on this GPU
-            };
             let in_sweet_spot = if e.is_tensor() {
                 let cu_roof = match req.gpu.roof(Unit::CudaCore, req.dtype) {
                     Ok(r) => r,
@@ -194,23 +218,59 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
             } else {
                 false
             };
-            out.push(Candidate { engine: e.clone(), t, prediction, in_sweet_spot, artifact, target });
+            // Temporal variants this candidate admits.  PJRT executes
+            // fused launches only, so blocked variants pin to native —
+            // and cannot exist at all under `--backend pjrt`.
+            let mut variants: Vec<(TemporalMode, ExecTarget)> = Vec::with_capacity(2);
+            if e.is_tensor() {
+                variants.push((TemporalMode::Sweep, target));
+            } else {
+                if req.temporal != TemporalMode::Blocked {
+                    variants.push((TemporalMode::Sweep, target));
+                }
+                if req.temporal != TemporalMode::Sweep && req.backend != BackendKind::Pjrt {
+                    variants.push((TemporalMode::Blocked, ExecTarget::Native));
+                }
+            }
+            for (temporal, target) in variants {
+                let pred = match temporal {
+                    TemporalMode::Sweep if !e.is_tensor() => exec::predict_sweep(&e, &w, &req.gpu),
+                    _ => exec::predict(&e, &w, &req.gpu),
+                };
+                let Ok(prediction) = pred else {
+                    continue; // unit missing on this GPU
+                };
+                out.push(Candidate {
+                    engine: e.clone(),
+                    t,
+                    prediction,
+                    in_sweet_spot,
+                    artifact: artifact.clone(),
+                    target,
+                    temporal,
+                });
+            }
         }
     }
     out
 }
 
 /// Produce a plan: highest predicted throughput wins; ties prefer CUDA
-/// Cores (no adaptation redundancy) and then smaller fusion depth.
+/// Cores (no adaptation redundancy), then smaller fusion depth, then
+/// the sweep variant (fused-launch semantics, the artifact-compatible
+/// default) — so a temporal-blocked candidate is chosen exactly when
+/// the model says the fused-kernel intensity α·t·K/D has crossed the
+/// machine balance point and the redundant flops stop being free.
 pub fn plan(req: &Request, manifest: Option<&Manifest>) -> Result<Plan> {
     let mut cands = candidates(req, manifest);
     if cands.is_empty() {
         return Err(anyhow!(
-            "no feasible engine for {} {} on {} (backend {})",
+            "no feasible engine for {} {} on {} (backend {}, temporal {})",
             req.pattern.label(),
             req.dtype.as_str(),
             req.gpu.name,
-            req.backend.as_str()
+            req.backend.as_str(),
+            req.temporal.as_str()
         ));
     }
     cands.sort_by(|a, b| {
@@ -220,6 +280,10 @@ pub fn plan(req: &Request, manifest: Option<&Manifest>) -> Result<Plan> {
             .unwrap()
             .then_with(|| a.engine.is_tensor().cmp(&b.engine.is_tensor()))
             .then_with(|| a.t.cmp(&b.t))
+            .then_with(|| {
+                let rank = |c: &Candidate| (c.temporal == TemporalMode::Blocked) as u8;
+                rank(a).cmp(&rank(b))
+            })
     });
     let chosen = cands[0].clone();
     // Compare the chosen tensor engine against the best CUDA candidate.
@@ -255,6 +319,7 @@ mod tests {
             gpu: Gpu::a100(),
             backend: BackendKind::Auto,
             max_t: 8,
+            temporal: TemporalMode::Auto,
         }
     }
 
@@ -355,8 +420,12 @@ mod tests {
         let mut rt = req(Shape::Box, 2, 1, Dtype::F32);
         rt.max_t = 4;
         assert_ne!(r1.plan_key(&[256, 256]), rt.plan_key(&[256, 256]));
+        let mut rtm = req(Shape::Box, 2, 1, Dtype::F32);
+        rtm.temporal = TemporalMode::Blocked;
+        assert_ne!(r1.plan_key(&[256, 256]), rtm.plan_key(&[256, 256]));
         let canon = r1.plan_key(&[256, 256]).canonical();
         assert!(canon.contains("Box-2D1R") && canon.contains("256x256"), "{canon}");
+        assert!(canon.contains("|auto|"), "{canon}");
     }
 
     #[test]
@@ -368,6 +437,81 @@ mod tests {
         assert_eq!(p1.chosen.engine.name, p2.chosen.engine.name);
         assert_eq!(p1.chosen.t, p2.chosen.t);
         assert_eq!(p1.alternatives.len(), p2.alternatives.len());
+    }
+
+    #[test]
+    fn blocked_wins_exactly_when_fused_intensity_crosses_balance() {
+        // For every scalar-unit (engine, t) pair the planner scores two
+        // temporal variants; the blocked one must beat the sweep one
+        // exactly when the fused-kernel intensity α·t·K/D crosses the
+        // machine balance point (exact tie below — the redundant flops
+        // ride for free while memory-bound).
+        let r = req(Shape::Box, 2, 1, Dtype::F64);
+        let cands = candidates(&r, None);
+        let roof = Gpu::a100().roof(Unit::CudaCore, Dtype::F64).unwrap();
+        let mut crossings = 0;
+        for e in ["EBISU", "DRStencil"] {
+            for t in 1..=8usize {
+                let sweep = cands.iter().find(|c| {
+                    c.engine.name == e && c.t == t && c.temporal == TemporalMode::Sweep
+                });
+                let blocked = cands.iter().find(|c| {
+                    c.engine.name == e && c.t == t && c.temporal == TemporalMode::Blocked
+                });
+                let (Some(s), Some(b)) = (sweep, blocked) else { continue };
+                let w = Workload::new(r.pattern, t, r.dtype);
+                if w.intensity_fused_sweep() < roof.ridge() {
+                    assert_eq!(
+                        s.prediction.throughput.to_bits(),
+                        b.prediction.throughput.to_bits(),
+                        "{e} t={t}: memory-bound variants must tie exactly"
+                    );
+                } else {
+                    crossings += 1;
+                    assert!(
+                        b.prediction.throughput > s.prediction.throughput,
+                        "{e} t={t}: blocked must win past the balance point"
+                    );
+                }
+            }
+        }
+        assert!(crossings > 0, "the sweep must cross the ridge somewhere in t<=8");
+    }
+
+    #[test]
+    fn plan_resolves_temporal_by_balance_point() {
+        // Shallow f64 (max_t=1): every variant memory-bound and tied →
+        // the sweep (artifact-compatible) variant is chosen.
+        let mut r = req(Shape::Box, 2, 1, Dtype::F64);
+        r.max_t = 1;
+        let p = plan(&r, None).unwrap();
+        assert_eq!(p.chosen.temporal, TemporalMode::Sweep);
+        // V100 f32 (no tensor path): deep fusion pushes the fused-sweep
+        // intensity far past the ridge → the blocked candidate wins.
+        let mut r = req(Shape::Box, 2, 1, Dtype::F32);
+        r.gpu = Gpu::v100();
+        let p = plan(&r, None).unwrap();
+        assert!(!p.chosen.engine.is_tensor());
+        assert_eq!(p.chosen.temporal, TemporalMode::Blocked);
+        assert!(p.chosen.t > 1);
+    }
+
+    #[test]
+    fn pinned_temporal_restricts_candidates() {
+        let mut r = req(Shape::Box, 2, 1, Dtype::F32);
+        r.temporal = TemporalMode::Blocked;
+        let cands = candidates(&r, None);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.temporal == TemporalMode::Blocked));
+        assert!(cands.iter().all(|c| !c.engine.is_tensor()), "TC cannot time-tile");
+        assert!(cands.iter().all(|c| c.target == ExecTarget::Native));
+        r.temporal = TemporalMode::Sweep;
+        let cands = candidates(&r, None);
+        assert!(cands.iter().all(|c| c.temporal == TemporalMode::Sweep));
+        // pjrt + blocked is infeasible by construction
+        r.temporal = TemporalMode::Blocked;
+        r.backend = BackendKind::Pjrt;
+        assert!(candidates(&r, None).is_empty());
     }
 
     #[test]

@@ -175,6 +175,7 @@ mod tests {
             domain: vec![10, 10],
             steps: 2,
             t: 1,
+            temporal: backend::TemporalMode::Sweep,
             weights: vec![1.0 / 9.0; 9],
             threads: 2,
         };

@@ -70,6 +70,14 @@ fn help_text() -> String {
            pjrt    require a pre-built AOT artifact (needs `make artifacts`\n\
                    and a pjrt-enabled build: vendored xla dependency +\n\
                    --features pjrt; see Cargo.toml)\n\n\
+         temporal strategy (--temporal, honored by plan, run, and serve):\n\
+           auto     planner resolves via the model: blocked exactly when the\n\
+                    fused-kernel intensity crosses the machine balance point\n\
+           sweep    one fused-kernel launch per t steps (Tensor-Core /\n\
+                    artifact semantics; bit-identical to golden apply_fused)\n\
+           blocked  time-tiled temporal blocking: t base steps per\n\
+                    cache-resident tile (Eq. 8 intensity t·K/D; bit-identical\n\
+                    to sequential golden apply_once chains; native only)\n\n\
          serve (long-lived daemon, newline-delimited JSON protocol):\n\
            --addr HOST:PORT   TCP listen address (default 127.0.0.1:7141)\n\
            --stdio            serve one connection on stdin/stdout instead\n\
@@ -78,6 +86,8 @@ fn help_text() -> String {
            --budget-ms MS     admission budget: refuse/downgrade jobs whose\n\
                               model-predicted runtime exceeds MS (default off)\n\
            --plan-cache N     plan cache capacity in entries (default 128)\n\
+           --temporal MODE    default temporal strategy for sessions that\n\
+                              do not set one (auto|sweep|blocked)\n\
            requests: ping | plan | create_session | advance | fetch |\n\
                      close_session | stats | shutdown (see rust/README.md)\n\n{}",
         usage(&run_opt_specs())
@@ -92,6 +102,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         max_queue: args.get_usize("max-queue")?.unwrap_or(64).max(1),
         budget_ms: args.get_f64("budget-ms")?,
         plan_cache_cap: args.get_usize("plan-cache")?.unwrap_or(128).max(1),
+        temporal: cfg.temporal,
         artifacts_dir: cfg.artifacts_dir.clone(),
         gpu,
     };
@@ -178,15 +189,17 @@ fn plan_cmd(args: &Args) -> Result<()> {
         gpu,
         backend: cfg.backend,
         max_t: cfg.t.unwrap_or(8),
+        temporal: cfg.temporal,
     };
     let plan = planner::plan(&req, manifest.as_ref())?;
     let c = &plan.chosen;
     println!(
-        "plan: {} (unit={}, scheme={}, t={}) predicted {:.2} GStencils/s [{}] -> {} backend",
+        "plan: {} (unit={}, scheme={}, t={}, temporal={}) predicted {:.2} GStencils/s [{}] -> {} backend",
         c.engine.name,
         c.engine.unit.as_str(),
         c.engine.scheme.as_str(),
         c.t,
+        c.temporal.as_str(),
         c.prediction.gstencils(),
         if c.in_sweet_spot { "sweet spot" } else { "baseline" },
         c.target.as_str(),
@@ -203,9 +216,10 @@ fn plan_cmd(args: &Args) -> Result<()> {
     }
     for alt in plan.alternatives.iter().take(5) {
         println!(
-            "  alt: {:<12} t={} -> {:.2} GStencils/s [{}]",
+            "  alt: {:<12} t={} {} -> {:.2} GStencils/s [{}]",
             alt.engine.name,
             alt.t,
+            alt.temporal.as_str(),
             alt.prediction.gstencils(),
             alt.target.as_str(),
         );
@@ -226,20 +240,41 @@ fn run_cmd(args: &Args) -> Result<()> {
     // could point at a depth the forced engine has no artifact for);
     // otherwise the planner decides (native candidates keep this from
     // dead-ending without artifacts).
+    let planned = if cfg.t.is_none() && cfg.engine.is_none() {
+        let req = planner::Request {
+            pattern: cfg.pattern,
+            dtype: cfg.dtype,
+            steps: cfg.steps,
+            gpu,
+            backend: cfg.backend,
+            max_t: 8,
+            temporal: cfg.temporal,
+        };
+        planner::plan(&req, manifest.as_ref()).ok()
+    } else {
+        None
+    };
     let t = match (cfg.t, &cfg.engine) {
         (Some(t), _) => t.max(1),
         (None, Some(_)) => 1,
-        (None, None) => {
-            let req = planner::Request {
-                pattern: cfg.pattern,
-                dtype: cfg.dtype,
-                steps: cfg.steps,
-                gpu,
-                backend: cfg.backend,
-                max_t: 8,
-            };
-            planner::plan(&req, manifest.as_ref()).map(|p| p.chosen.t).unwrap_or(1)
-        }
+        (None, None) => planned.as_ref().map(|p| p.chosen.t).unwrap_or(1),
+    };
+    // Temporal strategy: an explicit --temporal sweep|blocked is
+    // binding; auto takes the planner's resolution (sweep below the
+    // balance point, blocked past it).  Without a plan (explicit --t
+    // or --engine), auto only picks blocked when the backend is pinned
+    // native — under --backend auto a blocked job would silently skip
+    // a matching AOT artifact (PJRT cannot time-tile) AND change the
+    // boundary semantics, so the artifact-compatible sweep stands.
+    let temporal = match cfg.temporal {
+        backend::TemporalMode::Auto => match &planned {
+            Some(p) => p.chosen.temporal,
+            None if t > 1 && cfg.backend == backend::BackendKind::Native => {
+                backend::TemporalMode::Blocked
+            }
+            None => backend::TemporalMode::Sweep,
+        },
+        pinned => pinned,
     };
     // Artifacts only advance in whole fused launches, so an explicit
     // pjrt request rounds up; native honors the exact step count
@@ -256,6 +291,7 @@ fn run_cmd(args: &Args) -> Result<()> {
         domain: cfg.domain.clone(),
         steps,
         t,
+        temporal,
         weights: weights.clone(),
         threads: cfg.threads,
     };
@@ -272,25 +308,53 @@ fn run_cmd(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "backend: {} — {} {} t={t}, {steps} steps over {:?}",
+        "backend: {} — {} {} t={t} temporal={}, {steps} steps over {:?}",
         be.name(),
         cfg.pattern.label(),
         cfg.dtype.as_str(),
+        temporal.as_str(),
         cfg.domain
     );
     let n: usize = cfg.domain.iter().product();
     let mut field = golden::gaussian(&cfg.domain);
     let metrics = scheduler::advance(be.as_mut(), &job, &mut field)?;
     println!("{}", metrics.render());
+    // Model feedback: how close the achieved intensity landed to the
+    // prediction for the executed temporal strategy (a blocked run the
+    // executor degraded to per-step sweeps realizes Eq. 8 at depth 1).
+    if metrics.bytes_moved > 0 {
+        let blocked = temporal == backend::TemporalMode::Blocked;
+        let eff_t = if blocked && metrics.degenerate_blocks > 0 { 1 } else { t };
+        let w = Workload::new(cfg.pattern, eff_t, cfg.dtype);
+        let rep = tc_stencil::model::calib::report(
+            &w,
+            steps,
+            blocked,
+            metrics.achieved_intensity(),
+        );
+        println!(
+            "model: predicted I={:.3} F/B, achieved I={:.3} F/B, error {:+.1}% -> {}{}",
+            rep.predicted,
+            rep.measured,
+            rep.rel_error * 100.0,
+            if rep.within_region { "within predicted region" } else { "OUTSIDE predicted region" },
+            if metrics.degenerate_blocks > 0 { " (blocking degraded to sweeps)" } else { "" },
+        );
+    }
     if args.flag("verify") {
         let initial = golden::gaussian(&cfg.domain);
         let w = golden::Weights::new(cfg.pattern.d, 2 * cfg.pattern.r + 1, weights);
         let mut want = golden::Field::from_vec(&cfg.domain, initial);
-        for _ in 0..steps / t {
-            want = golden::apply_fused(&want, &w, t);
-        }
-        for _ in 0..steps % t {
-            want = golden::apply_once(&want, &w);
+        if temporal == backend::TemporalMode::Blocked {
+            // Blocked = sequential semantics: steps chained base steps.
+            want = golden::apply_steps(&want, &w, steps);
+        } else {
+            for _ in 0..steps / t {
+                want = golden::apply_fused(&want, &w, t);
+            }
+            for _ in 0..steps % t {
+                want = golden::apply_once(&want, &w);
+            }
         }
         let got = golden::Field::from_vec(&cfg.domain, field.clone());
         let err = got.max_abs_diff(&want);

@@ -1,0 +1,155 @@
+//! Model↔measurement feedback: predicted vs. *achieved* arithmetic
+//! intensity.
+//!
+//! The model predicts the intensity a temporal strategy should realize
+//! per output point — Eq. 8's `t·K/D` for a temporally blocked
+//! execution, `α·t·K/D` (Eq. 9 over Eq. 8) for a fused-kernel sweep.
+//! The native backend instruments what it actually did
+//! (`RunMetrics::{flops, bytes_moved}` →
+//! [`achieved_intensity`](crate::coordinator::metrics::RunMetrics::achieved_intensity)),
+//! and this module compares the two, per run and in aggregate: the
+//! `stencilctl run` report and every `serve` advance response carry the
+//! relative model error, and the service keeps a running mean
+//! (`ServiceSnapshot::model_error`).  That closes the loop the paper
+//! leaves open — the intensity shift of temporal fusion becomes an
+//! observable of our own measurements, not only a scored plan.
+//!
+//! Deviations are signed and interpretable: the blocked path measures
+//! *below* prediction by its overlapped-halo re-reads/recompute
+//! (`≈ t·r/B` for tile height B), the sweep path measures on-model
+//! because its fused-kernel non-zero count is exactly `K^(t)`.
+
+use crate::model::perf::Workload;
+
+/// Fractional deviation treated as "within the model's predicted
+/// region" — generous enough for tile-halo overhead and boundary
+/// effects on small domains, tight enough that executing the wrong
+/// temporal strategy (a factor of α) is flagged.
+pub const REGION_TOLERANCE: f64 = 0.25;
+
+/// The intensity the model predicts for one executed configuration:
+/// Eq. 8 (`t·K/D`) when `blocked`, `α·t·K/D` for a fused-kernel sweep.
+pub fn predicted_intensity(w: &Workload, blocked: bool) -> f64 {
+    if blocked {
+        w.intensity_cuda()
+    } else {
+        w.intensity_fused_sweep()
+    }
+}
+
+/// Step-count-aware prediction for a whole job: `steps` need not divide
+/// by `t`, and the trailing partial block / remainder base-kernel steps
+/// dilute the intensity below the pure Eq. 8/9 value.
+///
+/// Blocked: `ceil(steps/t)` domain traversals carry `steps` base steps,
+/// so I = (steps / nblocks)·K/D.  Sweep: `steps/t` fused launches at
+/// `K^(t)` flops-per-point each plus `steps % t` base sweeps at `K`.
+pub fn predicted_job_intensity(w: &Workload, steps: usize, blocked: bool) -> f64 {
+    if steps == 0 {
+        return 0.0;
+    }
+    let k = w.k();
+    let d = w.dtype.bytes() as f64;
+    if blocked {
+        let nblocks = steps.div_ceil(w.t) as f64;
+        steps as f64 / nblocks * k / d
+    } else {
+        let launches = (steps / w.t) as f64;
+        let rem = (steps % w.t) as f64;
+        let kt = w.pattern.fused_k_points(w.t) as f64;
+        (kt * launches + k * rem) / (d * (launches + rem))
+    }
+}
+
+/// One run's predicted-vs-measured intensity comparison.
+#[derive(Debug, Clone)]
+pub struct IntensityReport {
+    /// Model-predicted intensity (FLOP/byte).
+    pub predicted: f64,
+    /// Instrumented achieved intensity (FLOP/byte).
+    pub measured: f64,
+    /// Signed relative error `(measured − predicted) / predicted`.
+    pub rel_error: f64,
+    /// `|rel_error| ≤` [`REGION_TOLERANCE`].
+    pub within_region: bool,
+}
+
+/// Compare a job's measured intensity against the model.
+///
+/// ```
+/// use tc_stencil::model::calib;
+/// use tc_stencil::model::perf::{Dtype, Workload};
+/// use tc_stencil::model::stencil::{Shape, StencilPattern};
+/// // Star-2D1R f32 at t=4: blocked execution should achieve ≈ t·K/D = 5.
+/// let w = Workload::new(StencilPattern::new(Shape::Star, 2, 1).unwrap(), 4, Dtype::F32);
+/// let r = calib::report(&w, 4 * 4, true, 4.8);
+/// assert!((r.predicted - 5.0).abs() < 1e-12);
+/// assert!(r.rel_error < 0.0 && r.within_region); // halo overhead, on-model
+/// ```
+pub fn report(w: &Workload, steps: usize, blocked: bool, measured: f64) -> IntensityReport {
+    let predicted = predicted_job_intensity(w, steps, blocked);
+    let rel_error = if predicted > 0.0 { (measured - predicted) / predicted } else { 0.0 };
+    IntensityReport {
+        predicted,
+        measured,
+        rel_error,
+        within_region: rel_error.abs() <= REGION_TOLERANCE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn wl(shape: Shape, d: usize, r: usize, t: usize, dt: Dtype) -> Workload {
+        Workload::new(StencilPattern::new(shape, d, r).unwrap(), t, dt)
+    }
+
+    #[test]
+    fn blocked_prediction_is_eq8() {
+        let w = wl(Shape::Box, 2, 1, 4, Dtype::F64);
+        assert_eq!(predicted_intensity(&w, true), w.intensity_cuda());
+        assert_eq!(predicted_intensity(&w, false), w.intensity_fused_sweep());
+        // whole blocks: job prediction equals the pure value
+        assert!((predicted_job_intensity(&w, 8, true) - w.intensity_cuda()).abs() < 1e-12);
+        assert!(
+            (predicted_job_intensity(&w, 8, false) - w.intensity_fused_sweep()).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn remainders_dilute_the_prediction() {
+        let w = wl(Shape::Box, 2, 1, 4, Dtype::F64);
+        // 9 steps at t=4 → blocked blocks of 4,4,1: I = 3·K/D.
+        let i = predicted_job_intensity(&w, 9, true);
+        assert!((i - 3.0 * 9.0 / 8.0).abs() < 1e-12);
+        // sweep: 2 fused launches (K^(4)=81) + 1 base sweep.
+        let i = predicted_job_intensity(&w, 9, false);
+        assert!((i - (81.0 * 2.0 + 9.0) / (8.0 * 3.0)).abs() < 1e-12);
+        assert_eq!(predicted_job_intensity(&w, 0, true), 0.0);
+    }
+
+    #[test]
+    fn report_flags_the_wrong_strategy() {
+        // Measuring a sweep's intensity against a blocked prediction is
+        // off by α — outside the region for deep 3-D fusion.
+        let w = wl(Shape::Box, 3, 1, 4, Dtype::F32);
+        let sweep_i = w.intensity_fused_sweep();
+        let r = report(&w, 4, true, sweep_i);
+        assert!(!r.within_region, "α={} must be flagged", w.alpha());
+        let ok = report(&w, 4, true, w.intensity_cuda() * 0.95);
+        assert!(ok.within_region);
+        assert!(ok.rel_error < 0.0);
+    }
+
+    #[test]
+    fn report_is_symmetric_around_the_prediction() {
+        let w = wl(Shape::Star, 2, 1, 2, Dtype::F64);
+        let lo = report(&w, 2, true, w.intensity_cuda() * 0.9);
+        let hi = report(&w, 2, true, w.intensity_cuda() * 1.1);
+        assert!((lo.rel_error + 0.1).abs() < 1e-9 && lo.within_region);
+        assert!((hi.rel_error - 0.1).abs() < 1e-9 && hi.within_region);
+    }
+}

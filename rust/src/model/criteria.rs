@@ -11,6 +11,14 @@ use crate::model::roofline::Roof;
 use crate::model::scenario::{self, Scenario};
 
 /// Eq. 19: compute-bound/compute-bound profitability test.
+///
+/// ```
+/// use tc_stencil::model::criteria::sweet_spot_cc;
+/// // A100 f64: ℙ_TC/ℙ_CU = 19.5/9.7 ≈ 2.01.  With S = 0.5 the α
+/// // threshold sits at ≈ 1.005 — Table 3 case 5's α = 4.23 fails it.
+/// assert!(sweet_spot_cc(1.0, 0.5, 19.5e12, 9.7e12));
+/// assert!(!sweet_spot_cc(4.23, 0.5, 19.5e12, 9.7e12));
+/// ```
 pub fn sweet_spot_cc(alpha: f64, sparsity: f64, p_tc: f64, p_cu: f64) -> bool {
     alpha < sparsity * p_tc / p_cu
 }
@@ -18,6 +26,21 @@ pub fn sweet_spot_cc(alpha: f64, sparsity: f64, p_tc: f64, p_cu: f64) -> bool {
 /// The largest fusion depth (within `t_max`) that keeps a workload inside
 /// the sweet spot on the given roofs, if any.  This is the "careful
 /// selection of the fusion step t" the paper calls critical (§4.1).
+///
+/// ```
+/// use tc_stencil::model::criteria::max_profitable_t;
+/// use tc_stencil::model::perf::{Dtype, Scheme, Unit};
+/// use tc_stencil::model::roofline::Roof;
+/// use tc_stencil::model::stencil::{Shape, StencilPattern};
+/// // Box-2D1R TF32 on A100 roofs: deep fusion stays profitable on
+/// // dense Tensor Cores up to a finite depth (Fig. 13's dense region).
+/// let p = StencilPattern::new(Shape::Box, 2, 1).unwrap();
+/// let cu = Roof::new(19.5e12, 1.935e12);
+/// let tc = Roof::new(156e12, 1.935e12);
+/// let t = max_profitable_t(&p, Dtype::F32, &cu, &tc,
+///     Unit::TensorCore, Scheme::Decompose, 32).unwrap();
+/// assert!((1..=32).contains(&t));
+/// ```
 pub fn max_profitable_t(
     pattern: &crate::model::stencil::StencilPattern,
     dtype: crate::model::perf::Dtype,
@@ -65,14 +88,23 @@ pub fn sptc_roof(tc_roof: &Roof) -> Roof {
 /// whether dense TC and SpTC are each profitable.
 #[derive(Debug, Clone)]
 pub struct RegionPoint {
+    /// Fusion depth of this point.
     pub t: usize,
+    /// Fusion redundancy α at this depth (Eq. 9).
     pub alpha: f64,
+    /// Transformation sparsity S at this depth (Eq. 2).
     pub sparsity: f64,
+    /// Eq. 19 α-threshold on the dense TC roof: S·ℙ_TC/ℙ_CU.
     pub threshold_dense: f64,
+    /// Eq. 19 α-threshold on the SpTC roof (ℙ doubled).
     pub threshold_sparse: f64,
+    /// Inside the sweet spot on dense Tensor Cores.
     pub dense_profitable: bool,
+    /// Inside the sweet spot on Sparse Tensor Cores.
     pub sparse_profitable: bool,
+    /// Bottleneck-transition scenario on the dense roof.
     pub scenario_dense: Scenario,
+    /// Bottleneck-transition scenario on the SpTC roof.
     pub scenario_sparse: Scenario,
 }
 

@@ -7,6 +7,86 @@
 //! * [`perf`]       — Eq. 6–12, 20: C, M, I and P per execution unit
 //! * [`scenario`]   — Eq. 13–18: the four bottleneck-transition scenarios
 //! * [`criteria`]   — Eq. 19 + §4.3: sweet-spot and SpTC-expanded regions
+//! * [`calib`]      — predicted vs. *measured* intensity feedback
+//!
+//! The full equation-by-equation map from the paper to these symbols
+//! lives in `rust/docs/MODEL.md`; the doctest below compiles one call
+//! to every symbol that document names, so the map cannot rot silently.
+//!
+//! ```
+//! use tc_stencil::model::{calib, criteria, redundancy, scenario, sparsity};
+//! use tc_stencil::model::perf::{Dtype, Scheme, Unit, Workload};
+//! use tc_stencil::model::roofline::Roof;
+//! use tc_stencil::model::stencil::{Shape, StencilPattern};
+//!
+//! // Eq. 1 — the stencil pattern and its kernel point count K.
+//! let p = StencilPattern::new(Shape::Box, 2, 1).unwrap();
+//! assert_eq!(p.k_points(), 9);
+//! assert_eq!(p.support().count(), 9);
+//! assert_eq!(p.fused_k_points(3), 49); // fused support K^(t)
+//!
+//! // Eq. 2 — transformation sparsity S per adaptation scheme.
+//! let s = sparsity::sparsity(Scheme::Flatten, &p, 3);
+//! assert!(s > 0.0 && s <= 1.0);
+//! assert!(sparsity::flatten_sparsity(&p, 3) > 0.0);
+//! assert!(sparsity::decompose_sparsity(&p, 3) > 0.0);
+//!
+//! let w = Workload::new(p, 3, Dtype::F64);
+//!
+//! // Eq. 3 — tensor-core compute volume C = (α/S)·t·2K.
+//! assert!(w.c_tensor(Scheme::Flatten) > w.c_cuda());
+//!
+//! // Eq. 4–5 — the roofline and its ridge point (A100 f64 CUDA roof).
+//! let cu = Roof::new(9.7e12, 1.935e12);
+//! let tc = Roof::new(19.5e12, 1.935e12);
+//! assert!((cu.ridge() - 5.01).abs() < 0.02);
+//! assert_eq!(cu.attainable(1.0), 1.935e12);
+//!
+//! // Eq. 6 — M = 2D bytes per output point.
+//! assert_eq!(w.m_bytes(), 16.0);
+//!
+//! // Eq. 7/8 — I = C/M; CUDA Cores realize t·K/D.
+//! assert!((w.intensity_cuda() - 3.375).abs() < 1e-12);
+//! assert!(w.intensity_fused_sweep() > w.intensity_cuda()); // α·t·K/D
+//! assert_eq!(cu.bound(w.intensity_cuda()), tc_stencil::model::roofline::Bound::Memory);
+//!
+//! // Eq. 9/10 — fusion redundancy α, exact and box closed form.
+//! assert!((redundancy::alpha(&p, 3) - 49.0 / 27.0).abs() < 1e-12);
+//! assert!((redundancy::alpha_box_closed_form(&p, 3) - w.alpha()).abs() < 1e-12);
+//!
+//! // Eq. 11 — tensor intensity (α/S)·t·K/D.
+//! assert!(w.intensity_tensor(Scheme::Flatten) > w.intensity_cuda());
+//!
+//! // Eq. 12 — actual (useful-FLOP) performance divides out α/S.
+//! let raw = w.raw_perf(&tc, Unit::TensorCore, Scheme::Flatten);
+//! let act = w.actual_perf(&tc, Unit::TensorCore, Scheme::Flatten);
+//! assert!(act < raw);
+//! assert!(w.stencil_throughput(&cu, Unit::CudaCore, Scheme::Direct) > 0.0);
+//!
+//! // Eq. 13–18 — the four bottleneck-transition scenarios.
+//! let cmp = scenario::compare(&w, &cu, &tc, Unit::TensorCore, Scheme::Flatten);
+//! assert_eq!(cmp.scenario, scenario::Scenario::MemToComp); // Table 3 case 1
+//! assert_eq!(cmp.verdict, scenario::Verdict::Underperforms);
+//! assert!(cmp.speedup < 1.0);
+//!
+//! // Eq. 19 — the compute/compute sweet-spot criterion.
+//! assert!(criteria::sweet_spot_cc(1.0, 0.5, 19.5e12, 9.7e12));
+//! assert!(!criteria::in_sweet_spot(&w, &cu, &tc, Unit::TensorCore, Scheme::Flatten));
+//! assert!(criteria::max_profitable_t(&p, Dtype::F64, &cu, &tc,
+//!     Unit::TensorCore, Scheme::Flatten, 8).is_none());
+//!
+//! // Eq. 20 — SpTC doubles ℙ and re-runs the same machinery.
+//! let sp = criteria::sptc_roof(&tc);
+//! assert_eq!(sp.peak_flops, 2.0 * tc.peak_flops);
+//! assert!(!criteria::region_sweep(&p, Dtype::F64, &cu, &tc, Scheme::Flatten, 8).is_empty());
+//!
+//! // Measured-side feedback: Eq. 8 as an observable.
+//! assert_eq!(calib::predicted_intensity(&w, true), w.intensity_cuda());
+//! let rep = calib::report(&w, 3, true, w.intensity_cuda() * 0.97);
+//! assert!(rep.within_region);
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod stencil;
 pub mod roofline;
@@ -15,3 +95,4 @@ pub mod sparsity;
 pub mod perf;
 pub mod scenario;
 pub mod criteria;
+pub mod calib;

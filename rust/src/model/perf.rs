@@ -22,11 +22,14 @@ pub use crate::model::sparsity::Scheme;
 /// Element type (the paper evaluates float and double).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dtype {
+    /// 32-bit IEEE-754 ("float" in the paper's tables).
     F32,
+    /// 64-bit IEEE-754 ("double").
     F64,
 }
 
 impl Dtype {
+    /// D — bytes per element (the denominator of every intensity).
     pub fn bytes(&self) -> u64 {
         match self {
             Dtype::F32 => 4,
@@ -34,6 +37,7 @@ impl Dtype {
         }
     }
 
+    /// Parse a CLI/protocol dtype name.
     pub fn parse(s: &str) -> anyhow::Result<Dtype> {
         match s {
             "f32" | "float" | "float32" => Ok(Dtype::F32),
@@ -42,6 +46,7 @@ impl Dtype {
         }
     }
 
+    /// The paper's naming ("float" / "double").
     pub fn as_str(&self) -> &'static str {
         match self {
             Dtype::F32 => "float",
@@ -53,12 +58,16 @@ impl Dtype {
 /// Execution unit under analysis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Unit {
+    /// The general-purpose SIMT pipeline.
     CudaCore,
+    /// Dense MMA units.
     TensorCore,
+    /// 2:4 structured-sparsity MMA units.
     SparseTensorCore,
 }
 
 impl Unit {
+    /// Human-readable unit name.
     pub fn as_str(&self) -> &'static str {
         match self {
             Unit::CudaCore => "CUDA Core",
@@ -69,14 +78,29 @@ impl Unit {
 }
 
 /// A stencil workload: pattern × fusion depth × dtype.
+///
+/// Table 2 row 1 (EBISU, Box-2D1R, t=3, double) as a worked example:
+///
+/// ```
+/// use tc_stencil::model::perf::{Dtype, Workload};
+/// use tc_stencil::model::stencil::{Shape, StencilPattern};
+/// let w = Workload::new(StencilPattern::new(Shape::Box, 2, 1).unwrap(), 3, Dtype::F64);
+/// assert_eq!(w.c_cuda(), 54.0);                       // C = t·2K (Eq. 8)
+/// assert_eq!(w.m_bytes(), 16.0);                      // M = 2D (Eq. 6)
+/// assert!((w.intensity_cuda() - 3.375).abs() < 1e-12); // paper: 3.38
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Workload {
+    /// Stencil pattern (shape, dimensionality, radius).
     pub pattern: StencilPattern,
+    /// Temporal fusion depth (t ≥ 1).
     pub t: usize,
+    /// Element type.
     pub dtype: Dtype,
 }
 
 impl Workload {
+    /// Build a workload; panics on `t == 0`.
     pub fn new(pattern: StencilPattern, t: usize, dtype: Dtype) -> Workload {
         assert!(t >= 1);
         Workload { pattern, t, dtype }
@@ -114,8 +138,54 @@ impl Workload {
     }
 
     /// Arithmetic intensity on CUDA Cores: I = t·K/D (Eq. 8).
+    ///
+    /// This is the intensity *temporal blocking* realizes: t base steps
+    /// per read+write of the domain.  The native backend's blocked path
+    /// ([`crate::backend::TemporalMode::Blocked`]) reports its measured
+    /// counterpart in `RunMetrics::achieved_intensity`, and
+    /// [`crate::model::calib`] closes the loop.
+    ///
+    /// ```
+    /// use tc_stencil::model::perf::{Dtype, Workload};
+    /// use tc_stencil::model::stencil::{Shape, StencilPattern};
+    /// // Fig. 15: I is linear in t with slope K/D = 9/8 for Box-2D1R f64.
+    /// let p = StencilPattern::new(Shape::Box, 2, 1).unwrap();
+    /// for t in 1..=8 {
+    ///     let w = Workload::new(p, t, Dtype::F64);
+    ///     assert!((w.intensity_cuda() - t as f64 * 1.125).abs() < 1e-12);
+    /// }
+    /// ```
     pub fn intensity_cuda(&self) -> f64 {
         self.c_cuda() / self.m_bytes()
+    }
+
+    /// C per output point when the `t` fused steps are realized as ONE
+    /// sweep of the monolithic fused kernel on scalar units: α·t·2K —
+    /// Eq. 9's redundancy α applied to Eq. 8's useful work.  This is
+    /// what the native backend's sweep path actually executes, and what
+    /// the planner scores against the blocked variant.
+    pub fn c_fused_sweep(&self) -> f64 {
+        self.alpha() * self.c_cuda()
+    }
+
+    /// Arithmetic intensity of the fused-kernel sweep: I = α·t·K/D.
+    ///
+    /// Redundant multiply-adds inflate the numerator but the traffic
+    /// stays 2D per point, so the *raw* intensity rises by α while only
+    /// 1/α of the flops advance the stencil — the planner prefers the
+    /// blocked variant exactly when this raw intensity crosses the
+    /// machine balance point (the redundant flops stop being free).
+    ///
+    /// ```
+    /// use tc_stencil::model::perf::{Dtype, Workload};
+    /// use tc_stencil::model::stencil::{Shape, StencilPattern};
+    /// // Box-2D1R t=7 float: α = 225/63, so I = α·7·9/4 = 56.25 F/B.
+    /// let w = Workload::new(StencilPattern::new(Shape::Box, 2, 1).unwrap(), 7, Dtype::F32);
+    /// assert!((w.intensity_fused_sweep() - w.alpha() * w.intensity_cuda()).abs() < 1e-9);
+    /// assert!((w.intensity_fused_sweep() - 56.25).abs() < 1e-9);
+    /// ```
+    pub fn intensity_fused_sweep(&self) -> f64 {
+        self.c_fused_sweep() / self.m_bytes()
     }
 
     /// Arithmetic intensity on TC/SpTC: I = t·(α/S)·K/D (Eq. 11/20).

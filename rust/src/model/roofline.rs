@@ -13,11 +13,14 @@ pub struct Roof {
 /// Which side of the ridge a workload lands on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Bound {
+    /// Below the ridge: bandwidth-limited.
     Memory,
+    /// At/above the ridge: compute-limited.
     Compute,
 }
 
 impl Bound {
+    /// Human-readable bound name.
     pub fn as_str(&self) -> &'static str {
         match self {
             Bound::Memory => "Memory",
@@ -27,6 +30,7 @@ impl Bound {
 }
 
 impl Roof {
+    /// Build a roof; panics on non-positive peaks.
     pub fn new(peak_flops: f64, bandwidth: f64) -> Roof {
         assert!(peak_flops > 0.0 && bandwidth > 0.0);
         Roof { peak_flops, bandwidth }

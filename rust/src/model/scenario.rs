@@ -27,6 +27,7 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// The paper's scenario index (1–4).
     pub fn number(&self) -> u8 {
         match self {
             Scenario::MemToMem => 1,
@@ -36,6 +37,7 @@ impl Scenario {
         }
     }
 
+    /// "Scenario N" label used in reports and refusals.
     pub fn label(&self) -> String {
         format!("Scenario {}", self.number())
     }
@@ -57,15 +59,23 @@ pub enum Verdict {
 /// Full comparison of a workload on a CUDA roof vs a tensor roof.
 #[derive(Debug, Clone)]
 pub struct Comparison {
+    /// Bottleneck-transition scenario (§4.1).
     pub scenario: Scenario,
+    /// Expected outcome per the paper's analysis.
     pub verdict: Verdict,
     /// P_TC_actual / P_CU_actual (Eq. 13).
     pub speedup: f64,
+    /// Bound on the CUDA roof.
     pub cuda_bound: Bound,
+    /// Bound on the tensor roof.
     pub tensor_bound: Bound,
+    /// I on CUDA Cores (Eq. 8).
     pub cuda_intensity: f64,
+    /// I on the tensor unit (Eq. 11/20).
     pub tensor_intensity: f64,
+    /// Actual FLOP/s on CUDA Cores.
     pub cuda_perf: f64,
+    /// Actual (useful) FLOP/s on the tensor unit (Eq. 12).
     pub tensor_perf_actual: f64,
 }
 

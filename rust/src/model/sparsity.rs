@@ -29,6 +29,7 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Parse a CLI/manifest scheme name.
     pub fn parse(s: &str) -> anyhow::Result<Scheme> {
         match s {
             "direct" => Ok(Scheme::Direct),
@@ -39,6 +40,7 @@ impl Scheme {
         }
     }
 
+    /// The stable scheme name used in manifests and reports.
     pub fn as_str(&self) -> &'static str {
         match self {
             Scheme::Direct => "direct",

@@ -20,6 +20,7 @@ pub enum Shape {
 }
 
 impl Shape {
+    /// Parse a CLI/protocol shape name.
     pub fn parse(s: &str) -> Result<Shape> {
         match s.to_ascii_lowercase().as_str() {
             "box" => Ok(Shape::Box),
@@ -28,6 +29,7 @@ impl Shape {
         }
     }
 
+    /// The stable lowercase shape name.
     pub fn as_str(&self) -> &'static str {
         match self {
             Shape::Box => "box",
@@ -45,12 +47,16 @@ impl fmt::Display for Shape {
 /// A stencil pattern: the paper's (shape, d, r) triple.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct StencilPattern {
+    /// Neighbourhood shape (box or star).
     pub shape: Shape,
+    /// Dimensionality (1..=4).
     pub d: usize,
+    /// Radius (1..=16).
     pub r: usize,
 }
 
 impl StencilPattern {
+    /// Build a pattern, rejecting degenerate (d, r).
     pub fn new(shape: Shape, d: usize, r: usize) -> Result<StencilPattern> {
         if d == 0 || d > 4 {
             bail!("dimensionality must be 1..=4, got {d}");
@@ -152,12 +158,16 @@ impl fmt::Display for StencilPattern {
 /// Dense boolean grid over a d-dim hull of side n (n odd), centered.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SupportGrid {
+    /// Dimensionality of the hull.
     pub d: usize,
-    pub n: usize, // side length (odd)
+    /// Side length of the hull (odd).
+    pub n: usize,
+    /// Row-major cell membership over the hull.
     pub cells: Vec<bool>,
 }
 
 impl SupportGrid {
+    /// An empty support over a d-dim hull of (odd) side n.
     pub fn zeros(d: usize, n: usize) -> SupportGrid {
         assert!(n % 2 == 1, "hull side must be odd");
         SupportGrid { d, n, cells: vec![false; n.pow(d as u32)] }
@@ -207,6 +217,7 @@ impl SupportGrid {
         }
     }
 
+    /// Mark every hull offset for which `f` returns true.
     pub fn fill_by<F: Fn(&[i64]) -> bool>(&mut self, f: F) {
         for off in self.offsets() {
             if f(&off) {
@@ -216,6 +227,7 @@ impl SupportGrid {
         }
     }
 
+    /// Number of marked cells (= K for a pattern's own support).
     pub fn count(&self) -> u64 {
         self.cells.iter().filter(|&&b| b).count() as u64
     }

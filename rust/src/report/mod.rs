@@ -416,6 +416,7 @@ pub fn service_stats(
         &[
             "requests", "errors", "accepted", "downgraded", "rejected", "queue-full",
             "completed", "failed", "plan hits", "plan misses", "hit rate", "steps", "MSt/s",
+            "model err",
         ],
     );
     svc.row(&[
@@ -432,6 +433,12 @@ pub fn service_stats(
         format!("{:.0}%", s.plan_hit_rate() * 100.0),
         s.steps_total.to_string(),
         format!("{:.2}", s.throughput() / 1e6),
+        // mean |measured − predicted| intensity over instrumented jobs
+        if s.intensity_samples == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", s.model_error() * 100.0)
+        },
     ]);
     let mut per = Table::new(
         "service — sessions",

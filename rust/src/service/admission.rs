@@ -15,6 +15,7 @@
 //! 4. nothing fits → reject, citing the predicted time, the budget, and
 //!    the paper's scenario classification of the chosen candidate.
 
+use crate::backend::TemporalMode;
 use crate::coordinator::planner::{Candidate, Plan};
 use crate::model::roofline::Bound;
 use crate::sim::exec;
@@ -24,6 +25,9 @@ use crate::sim::exec;
 pub enum Decision {
     Accept {
         t: usize,
+        /// Resolved temporal strategy of the admitted candidate (the
+        /// blocked-path prediction when the planner chose blocked).
+        temporal: TemporalMode,
         predicted_ms: f64,
         engine: String,
         target: &'static str,
@@ -31,6 +35,8 @@ pub enum Decision {
     Downgrade {
         from_t: usize,
         t: usize,
+        /// Resolved temporal strategy of the downgraded-to candidate.
+        temporal: TemporalMode,
         predicted_ms: f64,
         /// What the requested depth would have cost.
         requested_ms: f64,
@@ -70,18 +76,19 @@ pub fn decide(
     let all: Vec<&Candidate> =
         std::iter::once(&plan.chosen).chain(plan.alternatives.iter()).collect();
     let t0 = requested_t.unwrap_or(plan.chosen.t).max(1);
-    // Best-throughput candidate at the requested depth (falls back to
-    // the chosen candidate's prediction when t0 was never scored).
-    let c0: &Candidate = all
-        .iter()
-        .filter(|c| c.t == t0)
-        .max_by(|a, b| a.prediction.throughput.partial_cmp(&b.prediction.throughput).unwrap())
-        .copied()
-        .unwrap_or(&plan.chosen);
+    // The plan's candidate list is already preference-sorted (highest
+    // throughput first, sweep before blocked on exact ties), so the
+    // first candidate at the requested depth is the one the planner
+    // would execute — including its temporal resolution, which is how
+    // admission uses the blocked-path prediction whenever the model
+    // says blocking is faster.  Falls back to the chosen candidate's
+    // prediction when t0 was never scored.
+    let c0: &Candidate = all.iter().find(|c| c.t == t0).copied().unwrap_or(&plan.chosen);
     let ms0 = wall_ms(c0, points, steps, t0);
     let Some(budget) = budget_ms else {
         return Decision::Accept {
             t: t0,
+            temporal: c0.temporal,
             predicted_ms: ms0,
             engine: c0.engine.name.to_string(),
             target: c0.target.as_str(),
@@ -90,6 +97,7 @@ pub fn decide(
     if ms0 <= budget {
         return Decision::Accept {
             t: t0,
+            temporal: c0.temporal,
             predicted_ms: ms0,
             engine: c0.engine.name.to_string(),
             target: c0.target.as_str(),
@@ -105,6 +113,7 @@ pub fn decide(
             return Decision::Downgrade {
                 from_t: t0,
                 t: c.t,
+                temporal: c.temporal,
                 predicted_ms: ms,
                 requested_ms: ms0,
                 engine: c.engine.name.to_string(),
@@ -149,6 +158,7 @@ mod tests {
             gpu: Gpu::a100(),
             backend: BackendKind::Auto,
             max_t: 8,
+            temporal: crate::backend::TemporalMode::Auto,
         };
         planner::plan(&req, None).unwrap()
     }
@@ -157,8 +167,10 @@ mod tests {
     fn no_budget_accepts_at_planned_depth() {
         let p = plan(Dtype::F32);
         match decide(&p, None, 1 << 16, 8, None) {
-            Decision::Accept { t, predicted_ms, .. } => {
+            Decision::Accept { t, temporal, predicted_ms, .. } => {
                 assert_eq!(t, p.chosen.t);
+                assert_eq!(temporal, p.chosen.temporal);
+                assert_ne!(temporal, TemporalMode::Auto, "must be resolved");
                 assert!(predicted_ms > 0.0);
             }
             other => panic!("expected accept, got {other:?}"),

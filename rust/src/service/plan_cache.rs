@@ -102,6 +102,7 @@ mod tests {
             gpu: Gpu::a100(),
             backend: BackendKind::Auto,
             max_t: 8,
+            temporal: crate::backend::TemporalMode::Auto,
         }
     }
 

@@ -12,12 +12,14 @@
 //! plan           = jobspec
 //! create_session = "session": name, jobspec,
 //!                  ( "field": [f64...] | "init": "gaussian"|"zeros" )
-//! advance        = "session": name, "steps": n, [ "t": depth ]
+//! advance        = "session": name, "steps": n, [ "t": depth ],
+//!                  [ "temporal": "auto"|"sweep"|"blocked" ]
 //! fetch          = "session": name, [ "encoding": "num"|"hex" ]
 //! close_session  = "session": name
 //! jobspec        = [ "shape": "box"|"star" ], [ "d": 1..3 ], [ "r": n ],
 //!                  [ "dtype": "float"|"double" ], [ "domain": [n...]|"NxM" ],
 //!                  [ "steps": n ], [ "t": depth ], [ "backend": kind ],
+//!                  [ "temporal": "auto"|"sweep"|"blocked" ],
 //!                  [ "threads": n ], [ "weights": [f64...] ]
 //! response       = { "ok": true, "op": ..., ... }
 //!                | { "ok": false, "op": ..., "error": code, "message": ... }
@@ -31,7 +33,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::BackendKind;
+use crate::backend::{BackendKind, TemporalMode};
 use crate::coordinator::config::RunConfig;
 use crate::model::perf::Dtype;
 use crate::model::stencil::{Shape, StencilPattern};
@@ -48,6 +50,8 @@ pub struct JobSpec {
     /// Explicit fusion depth; `None` lets the planner choose (≤ 8).
     pub t: Option<usize>,
     pub backend: BackendKind,
+    /// Temporal strategy (auto = planner-resolved via the model).
+    pub temporal: TemporalMode,
     pub threads: usize,
     /// Base stencil weights; `None` = support-normalized uniform.
     pub weights: Option<Vec<f64>>,
@@ -67,7 +71,7 @@ pub enum Request {
     Ping,
     Plan(JobSpec),
     CreateSession { session: String, spec: JobSpec, init: FieldInit },
-    Advance { session: String, steps: usize, t: Option<usize> },
+    Advance { session: String, steps: usize, t: Option<usize>, temporal: Option<TemporalMode> },
     Fetch { session: String, hex: bool },
     CloseSession { session: String },
     Stats,
@@ -117,6 +121,7 @@ impl Request {
                 session: req_str(j, "session")?,
                 steps: opt_usize(j, "steps")?.unwrap_or(8),
                 t: opt_usize(j, "t")?,
+                temporal: opt_str(j, "temporal").map(TemporalMode::parse).transpose()?,
             }),
             "fetch" => Ok(Request::Fetch {
                 session: req_str(j, "session")?,
@@ -149,6 +154,7 @@ impl JobSpec {
         }
         let dtype = Dtype::parse(opt_str(j, "dtype").unwrap_or("float"))?;
         let backend = BackendKind::parse(opt_str(j, "backend").unwrap_or("auto"))?;
+        let temporal = TemporalMode::parse(opt_str(j, "temporal").unwrap_or("auto"))?;
         Ok(JobSpec {
             pattern,
             dtype,
@@ -156,6 +162,7 @@ impl JobSpec {
             steps: opt_usize(j, "steps")?.unwrap_or(8),
             t: opt_usize(j, "t")?,
             backend,
+            temporal,
             threads: opt_usize(j, "threads")?.unwrap_or(4).max(1),
             weights: opt_f64_vec(j, "weights")?,
         })
@@ -348,6 +355,7 @@ mod tests {
         assert_eq!(s.domain, vec![256, 256]);
         assert_eq!(s.steps, 8);
         assert_eq!(s.backend, BackendKind::Auto);
+        assert_eq!(s.temporal, TemporalMode::Auto);
         assert_eq!(s.t, None);
     }
 
@@ -402,12 +410,26 @@ mod tests {
 
     #[test]
     fn advance_and_fetch_parse() {
-        let Request::Advance { session, steps, t } =
+        let Request::Advance { session, steps, t, temporal } =
             parse(r#"{"op":"advance","session":"a","steps":4,"t":2}"#).unwrap()
         else {
             panic!("expected advance");
         };
         assert_eq!((session.as_str(), steps, t), ("a", 4, Some(2)));
+        assert_eq!(temporal, None);
+        let Request::Advance { temporal, .. } =
+            parse(r#"{"op":"advance","session":"a","steps":4,"temporal":"blocked"}"#).unwrap()
+        else {
+            panic!("expected advance");
+        };
+        assert_eq!(temporal, Some(TemporalMode::Blocked));
+        assert!(parse(r#"{"op":"advance","session":"a","temporal":"warp"}"#).is_err());
+        let Request::Plan(s) =
+            parse(r#"{"op":"plan","temporal":"sweep"}"#).unwrap()
+        else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.temporal, TemporalMode::Sweep);
         let Request::Fetch { hex, .. } =
             parse(r#"{"op":"fetch","session":"a","encoding":"hex"}"#).unwrap()
         else {

@@ -182,6 +182,7 @@ mod tests {
             steps: 2,
             t: None,
             backend: BackendKind::Native,
+            temporal: backend::TemporalMode::Sweep,
             threads: 1,
             weights: None,
         };
@@ -200,6 +201,7 @@ mod tests {
                 domain: s.domain.clone(),
                 steps: 2,
                 t: 1,
+                temporal: backend::TemporalMode::Sweep,
                 weights: s.weights.clone(),
                 threads: 1,
             },

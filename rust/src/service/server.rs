@@ -51,6 +51,9 @@ pub struct ServeOpts {
     pub budget_ms: Option<f64>,
     /// Plan-cache capacity in entries (`--plan-cache`).
     pub plan_cache_cap: usize,
+    /// Default temporal strategy for sessions that leave theirs at
+    /// `auto` (`--temporal`); `Auto` defers to the planner per job.
+    pub temporal: backend::TemporalMode,
     pub artifacts_dir: PathBuf,
     /// The GPU model the planner/admission predictions assume.
     pub gpu: Gpu,
@@ -64,6 +67,7 @@ impl Default for ServeOpts {
             max_queue: 64,
             budget_ms: None,
             plan_cache_cap: 128,
+            temporal: backend::TemporalMode::Auto,
             artifacts_dir: crate::runtime::manifest::default_dir(),
             gpu: Gpu::a100(),
         }
@@ -260,6 +264,7 @@ fn plan_for(
         gpu: state.opts.gpu.clone(),
         backend: spec.backend,
         max_t: t.unwrap_or(8).max(1),
+        temporal: spec.temporal,
     };
     let (plan, hit) = state.plans.plan(&req, &spec.domain, state.manifest.as_ref())?;
     ServiceCounters::bump(if hit {
@@ -289,6 +294,7 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
                 .str_("engine", c.engine.name)
                 .str_("unit", c.engine.unit.as_str())
                 .int("t", c.t as u64)
+                .str_("temporal", c.temporal.as_str())
                 .str_("target", c.target.as_str())
                 .num("gstencils", c.prediction.gstencils())
                 .bool_("sweet_spot", c.in_sweet_spot)
@@ -302,7 +308,12 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
             Ok((o.done(), true))
         }
         Request::CreateSession { session, spec, init } => {
-            let s = Session::create(&session, &spec, &init)?;
+            let mut s = Session::create(&session, &spec, &init)?;
+            // The daemon-level --temporal default fills in for sessions
+            // that did not pin a strategy themselves.
+            if s.temporal == backend::TemporalMode::Auto {
+                s.temporal = state.opts.temporal;
+            }
             let points = s.points();
             let label = s.pattern.label();
             state.sessions.create(s)?;
@@ -316,7 +327,9 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
                 true,
             ))
         }
-        Request::Advance { session, steps, t } => advance(state, &session, steps, t),
+        Request::Advance { session, steps, t, temporal } => {
+            advance(state, &session, steps, t, temporal)
+        }
         Request::Fetch { session, hex } => {
             let sess = state
                 .sessions
@@ -342,12 +355,14 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
     }
 }
 
-/// The full `advance` path: plan → admission → queue → await metrics.
+/// The full `advance` path: plan → admission → queue → await metrics →
+/// model-feedback (predicted vs. achieved intensity).
 fn advance(
     state: &ServiceState,
     session: &str,
     steps: usize,
     t: Option<usize>,
+    temporal: Option<backend::TemporalMode>,
 ) -> Result<(Json, bool)> {
     let sess = state
         .sessions
@@ -365,6 +380,8 @@ fn advance(
                 steps,
                 t,
                 backend: g.backend,
+                // per-advance override > session default
+                temporal: temporal.unwrap_or(g.temporal),
                 threads: g.threads,
                 weights: Some(g.weights.clone()),
             },
@@ -373,12 +390,12 @@ fn advance(
     };
     let (plan, hit) = plan_for(state, &spec, steps, t)?;
     let decision = admission::decide(&plan, t, points, steps, state.opts.budget_ms);
-    let (job_t, downgraded, predicted_ms, engine, target) = match decision {
-        Decision::Accept { t, predicted_ms, engine, target } => {
-            (t, false, predicted_ms, engine, target)
+    let (job_t, job_temporal, downgraded, predicted_ms, engine, target) = match decision {
+        Decision::Accept { t, temporal, predicted_ms, engine, target } => {
+            (t, temporal, false, predicted_ms, engine, target)
         }
-        Decision::Downgrade { t, predicted_ms, engine, target, .. } => {
-            (t, true, predicted_ms, engine, target)
+        Decision::Downgrade { t, temporal, predicted_ms, engine, target, .. } => {
+            (t, temporal, true, predicted_ms, engine, target)
         }
         Decision::Reject(r) => {
             ServiceCounters::bump(&state.counters.jobs_rejected);
@@ -410,6 +427,7 @@ fn advance(
         domain: spec.domain.clone(),
         steps,
         t: job_t,
+        temporal: job_temporal,
         weights: spec.weights.clone().unwrap_or_default(),
         threads: spec.threads,
     };
@@ -442,21 +460,39 @@ fn advance(
         .recv()
         .map_err(|_| anyhow!("worker dropped the job (shutting down?)"))?
         .map_err(|msg| anyhow!("{msg}"))?;
-    Ok((
-        protocol::ok("advance")
-            .str_("session", session)
-            .int("steps", metrics.steps as u64)
-            .int("t", job_t as u64)
-            .str_("engine", &engine)
-            .str_("target", target)
-            .str_("cache", if hit { "hit" } else { "miss" })
-            .bool_("downgraded", downgraded)
-            .num("predicted_ms", predicted_ms)
-            .num("wall_ms", metrics.wall_ns as f64 / 1e6)
-            .num("mstencils", metrics.throughput() / 1e6)
-            .done(),
-        true,
-    ))
+    let mut resp = protocol::ok("advance")
+        .str_("session", session)
+        .int("steps", metrics.steps as u64)
+        .int("t", job_t as u64)
+        .str_("temporal", job_temporal.as_str())
+        .str_("engine", &engine)
+        .str_("target", target)
+        .str_("cache", if hit { "hit" } else { "miss" })
+        .bool_("downgraded", downgraded)
+        .num("predicted_ms", predicted_ms)
+        .num("wall_ms", metrics.wall_ns as f64 / 1e6)
+        .num("mstencils", metrics.throughput() / 1e6);
+    // The model↔measurement feedback path: compare the achieved
+    // intensity against the model's prediction for the executed
+    // temporal strategy, report it to the client, and fold it into the
+    // service-wide mean model error.  A blocked run the executor had
+    // to degrade to per-step sweeps (1-D / untileable domain) realizes
+    // Eq. 8 at depth 1, so it is compared against THAT prediction
+    // rather than polluting the mean with a false α-sized error.
+    if metrics.bytes_moved > 0 {
+        let blocked = job_temporal == backend::TemporalMode::Blocked;
+        let eff_t = if blocked && metrics.degenerate_blocks > 0 { 1 } else { job_t };
+        let w = crate::model::perf::Workload::new(spec.pattern, eff_t, spec.dtype);
+        let rep = crate::model::calib::report(&w, steps, blocked, metrics.achieved_intensity());
+        state.counters.record_intensity_error(rep.rel_error);
+        resp = resp
+            .num("achieved_intensity", rep.measured)
+            .num("predicted_intensity", rep.predicted)
+            .num("model_err", rep.rel_error)
+            .bool_("within_model_region", rep.within_region)
+            .bool_("blocking_degraded", metrics.degenerate_blocks > 0);
+    }
+    Ok((resp.done(), true))
 }
 
 /// The `stats` response: raw counters for machines, a rendered table
@@ -498,6 +534,8 @@ fn stats_response(state: &ServiceState) -> Json {
         .int("sessions", rows.len() as u64)
         .int("steps_total", snap.steps_total)
         .num("mstencils", snap.throughput() / 1e6)
+        .num("model_error", snap.model_error())
+        .int("model_samples", snap.intensity_samples)
         .set("session_stats", sessions)
         .str_("render", &render)
         .done()
@@ -601,6 +639,49 @@ mod tests {
         for (i, (a, b)) in got.iter().zip(&want.data).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "point {i}: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn blocked_advance_reports_intensity_feedback() {
+        use crate::sim::golden;
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"b","shape":"star","d":2,"r":1,
+                "dtype":"double","domain":[64,64],"backend":"native","temporal":"blocked","threads":2}"#,
+        ));
+        let a = req(&state, r#"{"op":"advance","session":"b","steps":8,"t":4}"#);
+        assert_ok(&a);
+        assert_eq!(a.get("temporal").unwrap().as_str(), Some("blocked"));
+        // Star-2D1R f64 at t=4: the model predicts I = t·K/D = 2.5 F/B;
+        // the measured value sits just below it (halo overhead).
+        let ai = a.get("achieved_intensity").unwrap().as_f64().unwrap();
+        let pi = a.get("predicted_intensity").unwrap().as_f64().unwrap();
+        assert!((pi - 2.5).abs() < 1e-9, "predicted {pi}");
+        assert!(ai > 0.0 && ai <= pi + 1e-9, "achieved {ai} vs predicted {pi}");
+        assert_eq!(a.get("within_model_region").unwrap().as_bool(), Some(true));
+        // Blocked semantics: bit-identical to SEQUENTIAL stepping.
+        let f = req(&state, r#"{"op":"fetch","session":"b","encoding":"hex"}"#);
+        let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+        let p = crate::model::stencil::StencilPattern::new(
+            crate::model::stencil::Shape::Star,
+            2,
+            1,
+        )
+        .unwrap();
+        let w = golden::Weights::new(2, 3, p.uniform_weights());
+        let want = golden::apply_steps(
+            &golden::Field::from_vec(&[64, 64], golden::gaussian(&[64, 64])),
+            &w,
+            8,
+        );
+        for (i, (a, b)) in got.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "point {i}");
+        }
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert!(st.get("model_samples").unwrap().as_i64().unwrap() >= 1);
+        assert!(st.get("model_error").unwrap().as_f64().unwrap() < 0.25);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
-use crate::backend::BackendKind;
+use crate::backend::{BackendKind, TemporalMode};
 use crate::coordinator::metrics::{SessionRow, SessionStats};
 use crate::model::perf::Dtype;
 use crate::model::stencil::StencilPattern;
@@ -28,6 +28,9 @@ pub struct Session {
     pub dtype: Dtype,
     pub domain: Vec<usize>,
     pub backend: BackendKind,
+    /// Session-default temporal strategy (advance requests may
+    /// override per call).
+    pub temporal: TemporalMode,
     pub threads: usize,
     /// Base stencil weights over the (2r+1)^d hull.
     pub weights: Vec<f64>,
@@ -68,6 +71,7 @@ impl Session {
             dtype: spec.dtype,
             domain: spec.domain.clone(),
             backend: spec.backend,
+            temporal: spec.temporal,
             threads: spec.threads,
             weights,
             field,
@@ -155,6 +159,7 @@ mod tests {
             steps: 4,
             t: None,
             backend: BackendKind::Native,
+            temporal: TemporalMode::Auto,
             threads: 1,
             weights: None,
         }

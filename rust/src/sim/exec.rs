@@ -76,6 +76,56 @@ pub fn predict(e: &Engine, w: &Workload, gpu: &Gpu) -> Result<Prediction> {
     })
 }
 
+/// Predict a *fused-kernel sweep* on a CUDA-style unit: one launch of
+/// the t-fold self-convolved kernel per `t` steps, which is what the
+/// native backend's sweep path (and every AOT artifact) executes.
+///
+/// Per output point it moves the same 2D bytes as temporal blocking but
+/// computes α·t·2K flops (Eq. 9's redundancy applied to Eq. 8), so the
+/// raw intensity is α·t·K/D while only 1/α of the flops are useful:
+///
+/// * memory-bound (α·t·K/D below the ridge): the redundant flops are
+///   free — useful FLOP/s collapse to Eq. 8's 𝔹·t·K/D, *bit-identical*
+///   to [`predict`]'s memory-bound value, so planner candidates tie
+///   exactly and the tie-break (sweep first) is deterministic;
+/// * compute-bound: the unit saturates on redundant work and useful
+///   FLOP/s drop to ℙ/α — strictly worse than the blocked variant.
+///
+/// The crossover is precisely the machine balance point: the planner
+/// picks the blocked candidate exactly when α·t·K/D crosses the ridge.
+pub fn predict_sweep(e: &Engine, w: &Workload, gpu: &Gpu) -> Result<Prediction> {
+    anyhow::ensure!(
+        e.unit == Unit::CudaCore,
+        "{} targets {}; fused-sweep scoring models scalar units only",
+        e.name,
+        e.unit.as_str()
+    );
+    anyhow::ensure!(e.supports(w), "{} does not support {}", e.name, w.pattern.label());
+    let roof: Roof = gpu.roof(e.unit, w.dtype)?;
+    let i = w.intensity_fused_sweep();
+    let bound = roof.bound(i);
+    let raw = roof.attainable(i);
+    let actual = match bound {
+        Bound::Memory => roof.bandwidth * w.intensity_cuda(),
+        Bound::Compute => roof.peak_flops / w.alpha(),
+    };
+    let eta = match bound {
+        Bound::Memory => e.eta_mem,
+        Bound::Compute => e.eta_comp,
+    };
+    let throughput = eta * actual / (2.0 * w.k());
+    Ok(Prediction {
+        engine: e.name,
+        unit: e.unit,
+        intensity: i,
+        ridge: roof.ridge(),
+        bound,
+        raw_flops: raw,
+        actual_flops: actual,
+        throughput,
+    })
+}
+
 /// Ideal-model prediction (η = 1): the pure Eq. 12/20 value, used when
 /// validating the analytical criteria rather than implementations.
 pub fn predict_ideal(e: &Engine, w: &Workload, gpu: &Gpu) -> Result<Prediction> {

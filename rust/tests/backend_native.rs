@@ -6,7 +6,7 @@
 //! engine mirrors the oracle's per-point accumulation order exactly.
 //! f32 jobs run genuinely in f32 and must match to rounding.
 
-use tc_stencil::backend::{self, Backend, BackendKind, NativeBackend};
+use tc_stencil::backend::{self, Backend, BackendKind, NativeBackend, TemporalMode};
 use tc_stencil::coordinator::scheduler;
 use tc_stencil::model::perf::Dtype;
 use tc_stencil::model::stencil::{Shape, StencilPattern};
@@ -89,6 +89,7 @@ fn run_case(case: &Case) -> Result<(), String> {
         domain: case.domain.clone(),
         steps: case.steps,
         t: case.t,
+        temporal: TemporalMode::Sweep,
         weights: weights.clone(),
         threads: case.threads,
     };
@@ -138,6 +139,7 @@ fn property_threads_do_not_change_bits() {
                     domain: case.domain.clone(),
                     steps: case.steps,
                     t: case.t,
+                    temporal: TemporalMode::Sweep,
                     weights,
                     threads,
                 };
@@ -165,6 +167,7 @@ fn backend_kind_auto_resolves_to_native_without_artifacts() {
         domain: vec![16, 16],
         steps: 4,
         t: 2,
+        temporal: TemporalMode::Sweep,
         weights: {
             let mut w = vec![0.0; 9];
             w[4] = 0.6;
@@ -193,6 +196,7 @@ fn capability_probe_reports_reasons() {
         domain: vec![8, 8],
         steps: 2,
         t: 1,
+        temporal: TemporalMode::Sweep,
         weights: vec![1.0 / 9.0; 9],
         threads: 1,
     };

@@ -140,6 +140,7 @@ fn planner_artifact_mode_yields_runnable_plan() {
         gpu: Gpu::a100(),
         backend: BackendKind::Pjrt,
         max_t: 8,
+        temporal: tc_stencil::backend::TemporalMode::Auto,
     };
     let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
     let name = plan.chosen.artifact.expect("artifact-constrained plan");
@@ -162,6 +163,7 @@ fn end_to_end_plan_then_run() {
         gpu: Gpu::a100(),
         backend: BackendKind::Pjrt,
         max_t: 4,
+        temporal: tc_stencil::backend::TemporalMode::Auto,
     };
     let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
     let artifact = plan.chosen.artifact.unwrap();
