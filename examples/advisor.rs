@@ -37,11 +37,18 @@ fn main() -> Result<()> {
                 let req = Request {
                     pattern: StencilPattern::new(shape, d, r)?,
                     dtype,
+                    domain: match d {
+                        2 => vec![256, 256],
+                        _ => vec![64, 64, 64],
+                    },
                     steps: 64,
                     gpu: gpu.clone(),
                     backend: BackendKind::Auto,
                     max_t: 8,
                     temporal: TemporalMode::Auto,
+                    shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
+                    lanes: 1,
+                    threads: 1,
                 };
                 let Ok(p) = plan(&req, None) else {
                     continue;

@@ -76,11 +76,15 @@ fn main() -> Result<()> {
     let req = Request {
         pattern,
         dtype: Dtype::F32,
+        domain: vec![N, N],
         steps: STEPS,
         gpu: Gpu::a100(),
         backend: BackendKind::Pjrt,
         max_t: 8,
         temporal: TemporalMode::Auto,
+        shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
+        lanes: 1,
+        threads: 1,
     };
     let decision = plan(&req, Some(&rt.manifest))?;
     let artifact = decision.chosen.artifact.clone().expect("artifact-bound plan");

@@ -32,11 +32,15 @@ fn ablation_a_planner_vs_fixed_t() {
     let req = Request {
         pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
         dtype: Dtype::F32,
+        domain: vec![256, 256],
         steps: 64,
         gpu: gpu.clone(),
         backend: BackendKind::Auto,
         max_t: 8,
         temporal: TemporalMode::Auto,
+        shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
+        lanes: 1,
+        threads: 1,
     };
     let p = plan(&req, None).unwrap();
     let auto = p.chosen.prediction.gstencils();

@@ -11,11 +11,15 @@
 //! Run with: `cargo bench --bench native_backend` (BENCH_FAST=1 for CI).
 
 use tc_stencil::backend::{self, Backend, NativeBackend, TemporalMode};
+use tc_stencil::coordinator::grid::ShardPlan;
+use tc_stencil::coordinator::scheduler;
 use tc_stencil::model::calib;
 use tc_stencil::model::perf::{Dtype, Workload};
 use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::model::shard;
 use tc_stencil::sim::golden;
 use tc_stencil::util::bench::Bench;
+use tc_stencil::util::json::Json;
 use tc_stencil::util::rng::Rng;
 
 fn star_weights(d: usize) -> Vec<f64> {
@@ -43,6 +47,8 @@ fn star_weights(d: usize) -> Vec<f64> {
 fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let mut b = Bench::new("native_backend");
+    let mut extras: Vec<(&str, Json)> = Vec::new();
+    let mut speedups: Vec<Json> = Vec::new();
     let shapes: [(&str, usize, Vec<usize>, usize); 2] = [
         ("star2d/384x384", 2, vec![384, 384], 4),
         ("heat3d/48x48x48", 3, vec![48, 48, 48], 2),
@@ -98,6 +104,15 @@ fn main() {
             native / oracle,
             if native / oracle >= 10.0 { " (meets >=10x bar)" } else { "" }
         );
+        speedups.push(Json::Obj(
+            [
+                ("bar".to_string(), Json::Str(format!("{label}/native_vs_oracle"))),
+                ("speedup".to_string(), Json::Num(native / oracle)),
+                ("threshold".to_string(), Json::Num(10.0)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
     }
 
     // Temporal-blocking acceptance bar: star-1 f32, t=4.  The domain is
@@ -161,4 +176,81 @@ fn main() {
         rep.rel_error * 100.0,
         if rep.within_region { "within predicted region" } else { "OUTSIDE predicted region" }
     );
+    speedups.push(Json::Obj(
+        [
+            ("bar".to_string(), Json::Str(format!("{label}/blocked_vs_sweeps"))),
+            ("speedup".to_string(), Json::Num(speedup)),
+            ("threshold".to_string(), Json::Num(2.0)),
+            ("achieved_intensity".to_string(), Json::Num(rep.measured)),
+            ("predicted_intensity".to_string(), Json::Num(rep.predicted)),
+        ]
+        .into_iter()
+        .collect(),
+    ));
+
+    // Sharded large-domain bar: shards=1 (the monolithic single-lane
+    // baseline the planner's gain model compares against) vs the
+    // auto-resolved fan-out (min(lanes, n0) dim-0 slab shards, one
+    // lane each) driven through scheduler::advance_sharded — the same
+    // advance_shard primitive the serve queue schedules.  Large domain,
+    // t=1 sweep phases: pure parallel gain minus halo re-reads.
+    let side = if std::env::var("BENCH_FAST").is_ok() { 512usize } else { 1536 };
+    let steps = 2usize;
+    let pattern = StencilPattern::new(Shape::Star, 2, 1).unwrap();
+    let weights = star_weights(2);
+    let n = side * side;
+    let mut rng = Rng::new(0x5A4D);
+    let init: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let items = (n * steps) as f64;
+    let lanes = threads.clamp(1, 8);
+    let auto_shards = shard::cuts(side, lanes).len();
+    let job = |threads| backend::Job {
+        pattern,
+        dtype: Dtype::F64,
+        domain: vec![side, side],
+        steps,
+        t: 1,
+        temporal: TemporalMode::Sweep,
+        weights: weights.clone(),
+        threads,
+    };
+    let label = format!("sharded_f64/{side}x{side}");
+    let mut f1 = init.clone();
+    let mut be = NativeBackend::new();
+    let mono = b
+        .run_items(&format!("{label}/shards1_1thr"), Some(items), || {
+            be.advance(&job(1), &mut f1).unwrap();
+        })
+        .throughput()
+        .unwrap();
+    let plan = ShardPlan::new(&[side, side], &[auto_shards, 1], 1, 1).unwrap();
+    let mut fs = init.clone();
+    let sharded = b
+        .run_items(&format!("{label}/shards{auto_shards}_auto"), Some(items), || {
+            scheduler::advance_sharded(&job(1), &plan, &mut fs, lanes).unwrap();
+        })
+        .throughput()
+        .unwrap();
+    let g_model = shard::gain(side, auto_shards, 1, 1, false, lanes, 1);
+    println!(
+        ">>> {label}: shards=auto({auto_shards}) {:.1} MSt/s vs shards=1 {:.1} MSt/s \
+         -> {:.2}x (model gain {:.2}x)",
+        sharded / 1e6,
+        mono / 1e6,
+        sharded / mono,
+        g_model,
+    );
+    speedups.push(Json::Obj(
+        [
+            ("bar".to_string(), Json::Str(format!("{label}/auto_vs_shards1"))),
+            ("speedup".to_string(), Json::Num(sharded / mono)),
+            ("shards".to_string(), Json::Num(auto_shards as f64)),
+            ("model_gain".to_string(), Json::Num(g_model)),
+        ]
+        .into_iter()
+        .collect(),
+    ));
+
+    extras.push(("speedups", Json::Arr(speedups)));
+    b.write_json("BENCH_native.json", extras).expect("write BENCH_native.json");
 }

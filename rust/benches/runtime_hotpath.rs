@@ -67,11 +67,15 @@ fn main() {
     let req = Request {
         pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
         dtype: Dtype::F32,
+        domain: vec![256, 256],
         steps: 64,
         gpu: Gpu::a100(),
         backend: BackendKind::Pjrt,
         max_t: 8,
         temporal: tc_stencil::backend::TemporalMode::Auto,
+        shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
+        lanes: 1,
+        threads: 1,
     };
     b.run("planner_plan", || {
         std::hint::black_box(plan(&req, Some(&rt.manifest)).unwrap());

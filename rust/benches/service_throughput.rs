@@ -1,18 +1,23 @@
 //! Service-layer throughput: jobs/sec and p50/p99 request latency
 //! through the bounded queue + worker pool, cold vs warm plan cache, on
-//! the paper's workhorse shapes (star-2d, heat-3d).  Each client thread
-//! owns a session and streams `advance` requests through the same
-//! [`handle_line`] path a TCP connection uses — so the numbers include
-//! protocol parsing, planning/cache, admission, queueing, and reply.
+//! the paper's workhorse shapes (star-2d, heat-3d) — plus the sharded
+//! large-domain bar: the same session advanced with `shards:1`
+//! (monolithic) vs `shards:auto` (the planner's redundancy-adjusted
+//! fan-out across the pool).  Each client thread owns a session and
+//! streams `advance` requests through the same [`handle_line`] path a
+//! TCP connection uses — so the numbers include protocol parsing,
+//! planning/cache, admission, shard fan-out, and reply.
 //!
 //! Run with: `cargo bench --bench service_throughput` (BENCH_FAST=1 for
-//! CI).  Emits BENCH_service.json for EXPERIMENTS.md-style tracking.
+//! CI).  Emits BENCH_service.json (via `util::bench::write_bench_json`)
+//! for EXPERIMENTS.md-style tracking.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use tc_stencil::service::server::{handle_line, ServeOpts, Service, ServiceState};
+use tc_stencil::util::bench::write_bench_json;
 use tc_stencil::util::json::Json;
 use tc_stencil::util::stats;
 
@@ -108,6 +113,57 @@ fn run_case(case: &ShapeCase, clients: usize, per_client: usize) -> Json {
     ])
 }
 
+/// The sharded large-domain bar: one thread-1 session on a 4-worker
+/// pool, advanced with a pinned monolith (`shards:1`) and with the
+/// planner's auto fan-out — the wall-clock ratio is the serving-plane
+/// payoff the `model::shard::gain` model predicts.
+fn run_sharded_bar(jobs: usize) -> Json {
+    let svc = Service::start(ServeOpts {
+        workers: 4,
+        max_queue: 256,
+        artifacts_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
+        ..Default::default()
+    });
+    let state: Arc<ServiceState> = svc.state();
+    let side = if std::env::var("BENCH_FAST").is_ok() { 256 } else { 1024 };
+    let (resp, _) = handle_line(
+        &state,
+        &format!(
+            r#"{{"op":"create_session","session":"big","shape":"star","d":2,"r":1,"dtype":"double","domain":"{side}x{side}","backend":"native","temporal":"sweep","threads":1}}"#
+        ),
+    );
+    assert!(resp.contains("\"ok\":true"), "{resp}");
+    let mut wall = [0.0f64; 2];
+    let mut shards_seen = [0i64; 2];
+    for (i, spec) in ["1", "\"auto\""].iter().enumerate() {
+        let line = format!(
+            r#"{{"op":"advance","session":"big","steps":2,"t":1,"shards":{spec}}}"#
+        );
+        let t0 = Instant::now();
+        for _ in 0..jobs {
+            let (resp, _) = handle_line(&state, &line);
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+            let j = Json::parse_line(&resp).unwrap();
+            shards_seen[i] = j.get("shards").unwrap().as_i64().unwrap();
+        }
+        wall[i] = t0.elapsed().as_secs_f64();
+    }
+    let speedup = wall[0] / wall[1];
+    println!(
+        "sharded bar {side}x{side}: shards=1 {:.3}s vs shards=auto({}) {:.3}s -> {speedup:.2}x",
+        wall[0], shards_seen[1], wall[1]
+    );
+    drop(svc);
+    obj(vec![
+        ("bar", Json::Str(format!("sharded/{side}x{side}"))),
+        ("jobs", Json::Num(jobs as f64)),
+        ("mono_s", Json::Num(wall[0])),
+        ("auto_s", Json::Num(wall[1])),
+        ("auto_shards", Json::Num(shards_seen[1] as f64)),
+        ("speedup", Json::Num(speedup)),
+    ])
+}
+
 fn main() {
     let fast = std::env::var("BENCH_FAST").is_ok();
     let (clients, per_client) = if fast { (2, 5) } else { (4, 50) };
@@ -117,11 +173,11 @@ fn main() {
     ];
     println!("### bench group: service_throughput ({clients} clients × {per_client} jobs)");
     let results: Vec<Json> = cases.iter().map(|c| run_case(c, clients, per_client)).collect();
-    let doc = obj(vec![
-        ("bench", Json::Str("service_throughput".to_string())),
-        ("fast", Json::Bool(fast)),
-        ("results", Json::Arr(results)),
-    ]);
-    std::fs::write("BENCH_service.json", format!("{doc}\n")).expect("write BENCH_service.json");
-    println!("wrote BENCH_service.json");
+    let sharded = run_sharded_bar(if fast { 3 } else { 10 });
+    write_bench_json(
+        "BENCH_service.json",
+        "service_throughput",
+        vec![("results", Json::Arr(results)), ("sharded", sharded)],
+    )
+    .expect("write BENCH_service.json");
 }

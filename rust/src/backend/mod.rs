@@ -148,6 +148,45 @@ impl Job {
     }
 }
 
+/// One synchronization phase of a sharded execution.
+///
+/// A sharded job advances in barrier-separated phases: within a phase
+/// every shard computes only its disjoint write-back slab from the
+/// shared phase-start field, so shards never depend on each other
+/// mid-phase and the barrier IS the halo exchange.  The phase schedule
+/// ([`shard_phases`]) mirrors the monolithic executor exactly, which
+/// is what makes sharded f64 results bit-identical to the unsharded
+/// path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPhase {
+    /// Time steps this phase carries (≤ the job's `t`).
+    pub depth: usize,
+    /// `true` — one launch of the `depth`-fold self-convolved kernel
+    /// (sweep semantics); `false` — `depth` sequential base-kernel
+    /// steps through a trapezoid (blocked semantics, with the
+    /// `depth·r` halo recompute).  At `depth == 1` the two coincide.
+    pub fused: bool,
+}
+
+/// The barrier-phase schedule of a job, resolved over its temporal
+/// mode: sweep → `steps/t` fused launches plus `steps%t` base
+/// launches; blocked → time blocks of depth ≤ `t` (an unresolved
+/// `Auto` blocks whenever `t > 1`, matching
+/// [`NativeBackend::advance`]).  The schedule itself is
+/// [`crate::model::shard::phase_schedule`] — one source of truth for
+/// the executor and the model's intensity prediction.
+pub fn shard_phases(job: &Job) -> Vec<ShardPhase> {
+    let blocked = match job.temporal {
+        TemporalMode::Sweep => false,
+        TemporalMode::Blocked => true,
+        TemporalMode::Auto => job.t > 1,
+    };
+    crate::model::shard::phase_schedule(job.steps, job.t, blocked)
+        .into_iter()
+        .map(|(depth, fused)| ShardPhase { depth, fused })
+        .collect()
+}
+
 /// An execution substrate for stencil jobs.
 pub trait Backend {
     /// Short stable name ("native", "pjrt") for logs and metrics.
@@ -288,6 +327,40 @@ mod tests {
         let mut bad = job();
         bad.domain = vec![8, 0];
         assert!(bad.validate(0).is_err());
+    }
+
+    #[test]
+    fn shard_phase_schedule_mirrors_the_executor() {
+        // sweep: steps=7, t=3 → two fused t=3 launches + one base step.
+        let mut j = job();
+        j.steps = 7;
+        j.t = 3;
+        assert_eq!(
+            shard_phases(&j),
+            vec![
+                ShardPhase { depth: 3, fused: true },
+                ShardPhase { depth: 3, fused: true },
+                ShardPhase { depth: 1, fused: true },
+            ]
+        );
+        // blocked: 7 steps at depth 3 → blocks of 3, 3, 1.
+        j.temporal = TemporalMode::Blocked;
+        assert_eq!(
+            shard_phases(&j),
+            vec![
+                ShardPhase { depth: 3, fused: false },
+                ShardPhase { depth: 3, fused: false },
+                ShardPhase { depth: 1, fused: false },
+            ]
+        );
+        // Auto resolves blocked above t=1, sweep at t=1.
+        j.temporal = TemporalMode::Auto;
+        assert!(shard_phases(&j).iter().all(|p| !p.fused));
+        j.t = 1;
+        assert!(shard_phases(&j).iter().all(|p| p.fused && p.depth == 1));
+        // zero steps → no phases
+        j.steps = 0;
+        assert!(shard_phases(&j).is_empty());
     }
 
     #[test]

@@ -48,7 +48,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::backend::{Backend, Job, TemporalMode};
+use crate::backend::{Backend, Job, ShardPhase, TemporalMode};
+use crate::coordinator::grid::ShardPlan;
 use crate::coordinator::metrics::RunMetrics;
 use crate::model::perf::Dtype;
 use crate::sim::golden;
@@ -287,20 +288,24 @@ fn tile_planes(n0: usize, plane_bytes: usize, tb: usize, r: usize, threads: usiz
 }
 
 /// Carry `tb` base-kernel steps over the output dim-0 plane range
-/// `[a, b)`: step 1 reads the full field `src`, intermediate steps
-/// rotate through the tile-local scratch slabs `sa`/`sb` (each sized for
-/// the widest intermediate extent), and the final step writes straight
-/// into `dst` (exactly `(b − a) · plane` elements).  The read/compute
-/// extent shrinks by `r` per step — the classic trapezoidal time tile —
-/// and every intermediate value equals the corresponding global-sweep
-/// value, which is what makes the result bit-identical to sequential
-/// stepping.
+/// `[a, b)`: step 1 reads `src` — a slab of the field whose first
+/// element is global plane `src_row0` (the full field when 0) —
+/// intermediate steps rotate through the tile-local scratch slabs
+/// `sa`/`sb` (each sized for the widest intermediate extent), and the
+/// final step writes straight into `dst` (exactly `(b − a) · plane`
+/// elements).  The read/compute extent shrinks by `r` per step — the
+/// classic trapezoidal time tile — and every intermediate value equals
+/// the corresponding global-sweep value, which is what makes the
+/// result bit-identical to sequential stepping (and shard-count
+/// invariant: a shard's trapezoid and a cache tile's trapezoid are the
+/// same computation).
 #[allow(clippy::too_many_arguments)]
 fn trapezoid<T: Scalar>(
     dims: &[usize],
     k: &Kernel<T>,
     tb: usize,
     src: &[T],
+    src_row0: usize,
     a: usize,
     b: usize,
     dst: &mut [T],
@@ -316,18 +321,18 @@ fn trapezoid<T: Scalar>(
     for s in 1..=tb {
         let olo = a.saturating_sub((tb - s) * r);
         let ohi = (b + (tb - s) * r).min(n0);
-        // The source slab: the full field for step 1, otherwise the
+        // The source slab: the field slab for step 1, otherwise the
         // previous step's output planes [plo, phi) — the same range the
         // previous iteration computed (the trapezoid shrinks by r).
         let plo = a.saturating_sub((tb - s + 1) * r);
         let phi = (b + (tb - s + 1) * r).min(n0);
         if s == tb {
             let (src_sl, src_lo): (&[T], usize) =
-                if s == 1 { (src, 0) } else { (&prev[..(phi - plo) * plane], plo) };
+                if s == 1 { (src, src_row0) } else { (&prev[..(phi - plo) * plane], plo) };
             step_rows(dims, k, src_sl, src_lo * outer_rest, dst, a * outer_rest);
         } else if s == 1 {
             let out = &mut prev[..(ohi - olo) * plane];
-            step_rows(dims, k, src, 0, out, olo * outer_rest);
+            step_rows(dims, k, src, src_row0 * outer_rest, out, olo * outer_rest);
         } else {
             let src_sl: &[T] = &prev[..(phi - plo) * plane];
             let out = &mut cur[..(ohi - olo) * plane];
@@ -408,7 +413,7 @@ fn run_blocked<T: Scalar>(
                         for &(ta, tbound) in &tiles_ref[lo..hi] {
                             let off = (ta - base_plane) * plane;
                             let dst = &mut chunk[off..off + (tbound - ta) * plane];
-                            trapezoid(dims, kref, tb, src, ta, tbound, dst, &mut sa, &mut sb);
+                            trapezoid(dims, kref, tb, src, 0, ta, tbound, dst, &mut sa, &mut sb);
                         }
                     });
                 }
@@ -451,6 +456,62 @@ fn run_field<T: Scalar>(job: &Job, blocked: bool, buf: &mut Vec<T>, metrics: &mu
     }
 }
 
+/// One shard × one phase of a sharded execution, dtype-monomorphized.
+/// `src` is a slab of the phase-start field whose first element is
+/// global plane `src_row0` (the full field when 0); `dst` is the
+/// shard's disjoint write-back slab for planes `[a, b)`.  Traffic and
+/// flop accounting mirror `model::shard::predicted_job_intensity` term
+/// for term: halo reads count against `bytes_moved`, trapezoid
+/// recompute against `flops`.  The kernel is (re)compiled per call —
+/// shard tasks are deliberately stateless so the queue can schedule
+/// them on any worker; the fuse+compile cost is O(hull) and vanishes
+/// against the slab compute on the domains where sharding is chosen.
+#[allow(clippy::too_many_arguments)]
+fn shard_phase_field<T: Scalar>(
+    job: &Job,
+    phase: ShardPhase,
+    a: usize,
+    b: usize,
+    src: &[T],
+    src_row0: usize,
+    dst: &mut [T],
+    metrics: &mut RunMetrics,
+) {
+    let dims = &job.domain;
+    let base = golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
+    let n0 = dims[0];
+    let plane: usize = dims[1..].iter().product();
+    let outer_rest = plane / dims[dims.len() - 1];
+    let r = base.r();
+    let elem = std::mem::size_of::<T>();
+    let t0 = Instant::now();
+    if phase.fused || phase.depth == 1 {
+        let w = if phase.depth > 1 { base.fuse(phase.depth) } else { base };
+        let k = compile::<T>(&w, dims);
+        step_rows(dims, &k, src, src_row0 * outer_rest, dst, a * outer_rest);
+        let h = r * phase.depth;
+        let read = (b + h).min(n0) - a.saturating_sub(h);
+        metrics.bytes_moved += ((read + (b - a)) * plane * elem) as u64;
+        metrics.flops += 2 * k.deltas.len() as u64 * ((b - a) * plane) as u64;
+    } else {
+        let tb = phase.depth;
+        let k = compile::<T>(&base, dims);
+        let cap = ((b - a) + 2 * (tb - 1) * r).min(n0);
+        let mut sa = vec![T::ZERO; cap * plane];
+        let mut sb = vec![T::ZERO; cap * plane];
+        trapezoid(dims, &k, tb, src, src_row0, a, b, dst, &mut sa, &mut sb);
+        let read = (b + tb * r).min(n0) - a.saturating_sub(tb * r);
+        metrics.bytes_moved += ((read + (b - a)) * plane * elem) as u64;
+        let nnz = k.deltas.len() as u64;
+        for s in 1..=tb {
+            let olo = a.saturating_sub((tb - s) * r);
+            let ohi = (b + (tb - s) * r).min(n0);
+            metrics.flops += 2 * nnz * ((ohi - olo) * plane) as u64;
+        }
+    }
+    metrics.add_execute(t0.elapsed());
+}
+
 /// The native CPU backend (stateless; all state lives in the job).
 #[derive(Debug, Default)]
 pub struct NativeBackend;
@@ -459,6 +520,95 @@ impl NativeBackend {
     /// Construct the (stateless) native backend.
     pub fn new() -> NativeBackend {
         NativeBackend
+    }
+
+    /// Advance ONE shard of a sharded execution through ONE
+    /// synchronization phase — the shard plane's compute primitive,
+    /// shared by the service's dependency-aware shard executor
+    /// (`service::queue`) and the one-shot driver
+    /// (`coordinator::scheduler::advance_sharded`).
+    ///
+    /// `src` is the whole phase-start field (row-major f64 host
+    /// representation, immutable for the duration of the phase); `dst`
+    /// is this shard's disjoint write-back slab (`extent₀ · plane`
+    /// elements for dim-0 planes `[a, b)`).  The per-point arithmetic
+    /// is exactly the monolithic executor's — fused phases run the
+    /// self-convolved kernel over the shard's rows, blocked phases run
+    /// the same trapezoid a cache tile would — so assembling the slabs
+    /// of every shard reproduces the unsharded result bit-for-bit in
+    /// f64.  f32 jobs marshal the `depth·r`-deepened read slab through
+    /// genuine f32 (exact both ways: every intermediate is an f32
+    /// value), mirroring the artifact-precision path.
+    ///
+    /// Returned metrics are per-shard-phase: `launches == 1`,
+    /// `bytes_moved`/`flops` include this shard's halo re-reads and
+    /// trapezoid recompute; callers aggregate them into job-level
+    /// [`RunMetrics`].
+    pub fn advance_shard(
+        &self,
+        job: &Job,
+        plan: &ShardPlan,
+        index: usize,
+        phase: ShardPhase,
+        src: &[f64],
+        dst: &mut [f64],
+    ) -> Result<RunMetrics> {
+        job.validate(src.len())?;
+        anyhow::ensure!(
+            plan.domain == job.domain,
+            "shard plan domain {:?} != job domain {:?}",
+            plan.domain,
+            job.domain
+        );
+        anyhow::ensure!(job.domain.len() > 1, "sharded execution needs d >= 2 (dim-0 slabs)");
+        anyhow::ensure!(plan.dim0_only(), "native sharding requires a dim-0-only decomposition");
+        anyhow::ensure!(
+            plan.r == job.pattern.r,
+            "shard plan halo radius {} != pattern radius {}",
+            plan.r,
+            job.pattern.r
+        );
+        anyhow::ensure!(
+            phase.depth >= 1 && phase.depth <= plan.t,
+            "phase depth {} outside the plan's halo ring depth {}",
+            phase.depth,
+            plan.t
+        );
+        let shard = plan
+            .shards()
+            .get(index)
+            .ok_or_else(|| anyhow::anyhow!("shard index {index} out of range"))?;
+        let (a, b) = shard.rows();
+        let plane = plan.plane();
+        anyhow::ensure!(
+            dst.len() == (b - a) * plane,
+            "dst slab has {} elements, shard wants {}",
+            dst.len(),
+            (b - a) * plane
+        );
+        let mut metrics = RunMetrics::default();
+        match job.dtype {
+            Dtype::F64 => {
+                shard_phase_field::<f64>(job, phase, a, b, src, 0, dst, &mut metrics);
+            }
+            Dtype::F32 => {
+                // Marshal only the depth·r-deepened read slab.
+                let (lo, hi) = plan.read_rows(shard, phase.depth);
+                let t0 = Instant::now();
+                let src32: Vec<f32> =
+                    src[lo * plane..hi * plane].iter().map(|&v| v as f32).collect();
+                let mut dst32 = vec![0.0f32; dst.len()];
+                metrics.add_gather(t0.elapsed());
+                shard_phase_field::<f32>(job, phase, a, b, &src32, lo, &mut dst32, &mut metrics);
+                let t1 = Instant::now();
+                for (o, &v) in dst.iter_mut().zip(&dst32) {
+                    *o = v as f64;
+                }
+                metrics.add_scatter(t1.elapsed());
+            }
+        }
+        metrics.launches = 1;
+        Ok(metrics)
     }
 }
 

@@ -3,6 +3,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend::{BackendKind, TemporalMode};
+use crate::coordinator::grid::ShardSpec;
 use crate::hardware::Gpu;
 use crate::model::perf::Dtype;
 use crate::model::stencil::{Shape, StencilPattern};
@@ -25,6 +26,9 @@ pub struct RunConfig {
     /// Temporal strategy (auto|sweep|blocked): how fused depth t is
     /// realized — auto lets the planner resolve via the model.
     pub temporal: TemporalMode,
+    /// Shard fan-out (auto|N): auto lets the planner pick via the
+    /// redundancy-adjusted gain; N pins the count (native, d ≥ 2).
+    pub shards: ShardSpec,
     pub artifacts_dir: std::path::PathBuf,
 }
 
@@ -41,6 +45,7 @@ impl RunConfig {
             t: None,
             backend: BackendKind::Auto,
             temporal: TemporalMode::Auto,
+            shards: ShardSpec::Auto,
             artifacts_dir: crate::runtime::manifest::default_dir(),
         }
     }
@@ -105,6 +110,9 @@ impl RunConfig {
         if let Some(m) = args.get("temporal") {
             c.temporal = TemporalMode::parse(m)?;
         }
+        if let Some(s) = args.get("shards") {
+            c.shards = ShardSpec::parse(s)?;
+        }
         if let Some(dir) = args.get("artifacts") {
             c.artifacts_dir = std::path::PathBuf::from(dir);
         }
@@ -135,6 +143,12 @@ pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
         OptSpec {
             name: "temporal",
             help: "fusion realization: auto (model decides) | sweep (fused kernel) | blocked (time tiling)",
+            takes_value: true,
+            default: Some("auto"),
+        },
+        OptSpec {
+            name: "shards",
+            help: "shard fan-out: auto (redundancy-adjusted model decides) | N (pin; 1 = monolithic)",
             takes_value: true,
             default: Some("auto"),
         },
@@ -224,6 +238,18 @@ mod tests {
         assert!(RunConfig::from_args(&args).is_err());
         // serve inherits the flag through the shared spec list
         assert!(serve_opt_specs().iter().any(|s| s.name == "temporal"));
+    }
+
+    #[test]
+    fn shards_flag_parses() {
+        assert_eq!(parse(&[]).shards, ShardSpec::Auto);
+        assert_eq!(parse(&["--shards", "auto"]).shards, ShardSpec::Auto);
+        assert_eq!(parse(&["--shards", "4"]).shards, ShardSpec::Fixed(4));
+        let raw: Vec<String> = vec!["--shards".into(), "0".into()];
+        let args = Args::parse(&raw, &run_opt_specs()).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
+        // serve inherits the flag through the shared spec list
+        assert!(serve_opt_specs().iter().any(|s| s.name == "shards"));
     }
 
     #[test]

@@ -1,14 +1,60 @@
-//! Domain decomposition with halo exchange.
+//! Domain decomposition with halo exchange — the shard plane's
+//! geometry layer.
 //!
-//! Artifacts compute a fixed G^d grid with Dirichlet-0 halo.  To advance an
-//! arbitrary N^d domain, tiles of *payload* size (G − 2h)^d are carved out
-//! with an h-wide overlap ring filled from neighbouring data (zero outside
-//! the domain).  After execution only the tile interior — exact under the
-//! fused-kernel semantics — is written back.  Boundary tiles inherit the
-//! global zero halo, so the assembled result equals an untiled run
-//! (`scheduler` tests assert this against the golden oracle).
+//! [`ShardPlan`] is the backend-agnostic decomposition: a domain is
+//! cut into payload-disjoint [`Shard`]s (balanced per-dim counts, or a
+//! fixed payload step), each carrying a per-step halo ring that
+//! deepens to `t·r` for temporal-blocked shards.  Two consumers share
+//! it:
+//!
+//! * the PJRT driver — [`Tiling`] places its artifact tiles through
+//!   [`ShardPlan::by_step`] and keeps only the gather/scatter marshal
+//!   (artifact-shaped G^d blocks with zero fill);
+//! * the native backend —
+//!   [`NativeBackend::advance_shard`](crate::backend::NativeBackend::advance_shard)
+//!   executes one shard of one synchronization phase against a slab
+//!   view of the shared field (dim-0 decompositions only: a dim-0 slab
+//!   of a row-major field is contiguous).
+//!
+//! After execution only a shard's payload (its disjoint write-back
+//! region) survives — exact under both fused-kernel and sequential
+//! semantics, so the assembled result equals an unsharded run
+//! (`scheduler`/`backend` tests assert this against the golden oracle).
 
 use anyhow::{bail, Result};
+
+use crate::model::shard::cuts;
+
+/// How many shards a job should fan out into (`--shards auto|N`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardSpec {
+    /// Let the planner pick the count via the redundancy-adjusted
+    /// model (`model::shard::gain`); 1 (monolithic) when it never wins.
+    Auto,
+    /// Pin the shard count (1 = force the monolithic path).
+    Fixed(usize),
+}
+
+impl ShardSpec {
+    /// Parse a `--shards` / protocol value (`auto` or a positive int).
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(ShardSpec::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(ShardSpec::Fixed(n)),
+            _ => bail!("unknown shard spec {s:?} (want auto or a positive integer)"),
+        }
+    }
+
+    /// The stable wire/CLI form (`"auto"` or the count).
+    pub fn wire(&self) -> String {
+        match self {
+            ShardSpec::Auto => "auto".to_string(),
+            ShardSpec::Fixed(n) => n.to_string(),
+        }
+    }
+}
 
 /// One tile's placement.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -17,6 +63,178 @@ pub struct Tile {
     pub origin: Vec<usize>,
     /// Payload extent (per dim) — ≤ step, truncated at domain edge.
     pub extent: Vec<usize>,
+}
+
+/// One schedulable shard: a payload-disjoint region of the domain (the
+/// shard task's write-back region) plus its index in the plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// Position in [`ShardPlan::shards`] (and in the task fan-out).
+    pub index: usize,
+    /// Payload placement (origin/extent per dim, like a [`Tile`]).
+    pub tile: Tile,
+}
+
+impl Shard {
+    /// Dim-0 payload plane range `[a, b)` — the slab a shard task
+    /// writes back.
+    pub fn rows(&self) -> (usize, usize) {
+        (self.tile.origin[0], self.tile.origin[0] + self.tile.extent[0])
+    }
+
+    /// Payload elements.
+    pub fn payload(&self) -> usize {
+        self.tile.extent.iter().product()
+    }
+}
+
+/// Backend-agnostic decomposition of a domain into shards with
+/// per-step halo rings.
+///
+/// `r` is the base kernel's per-step radius and `t` the temporal depth
+/// carried per synchronization phase: a shard's read footprint deepens
+/// by `r` per fused/blocked step up to the full `t·r` ring
+/// ([`ShardPlan::read_rows`]), while write-back regions stay disjoint.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Domain extents N^d.
+    pub domain: Vec<usize>,
+    /// Per-step halo radius (the base kernel's r).
+    pub r: usize,
+    /// Temporal depth per phase (halo rings deepen to `t·r`).
+    pub t: usize,
+    counts: Vec<usize>,
+    shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Balanced decomposition: `counts[k]` near-equal shards along dim
+    /// `k` (clamped to the extent; remainder planes spread one-per-shard
+    /// from the front — `model::shard::cuts`, the same split the model's
+    /// κ/τ accounting assumes).
+    pub fn new(domain: &[usize], counts: &[usize], r: usize, t: usize) -> Result<ShardPlan> {
+        if domain.len() != counts.len() {
+            bail!("domain rank {} != shard-count rank {}", domain.len(), counts.len());
+        }
+        if domain.iter().any(|&n| n == 0) {
+            bail!("empty domain dimension");
+        }
+        if t == 0 {
+            bail!("temporal depth t must be >= 1");
+        }
+        let per_dim: Vec<Vec<(usize, usize)>> = domain
+            .iter()
+            .zip(counts)
+            .map(|(&n, &c)| cuts(n, c.max(1)))
+            .collect();
+        Ok(ShardPlan {
+            domain: domain.to_vec(),
+            r,
+            t,
+            counts: per_dim.iter().map(|c| c.len()).collect(),
+            shards: cartesian(&per_dim),
+        })
+    }
+
+    /// The canonical dim-0 slab fan-out: `shards` balanced slabs along
+    /// dim 0, full extent elsewhere — the decomposition the native
+    /// shard plane executes (server fan-out, CLI `--shards N`, tests).
+    pub fn dim0(domain: &[usize], shards: usize, r: usize, t: usize) -> Result<ShardPlan> {
+        let mut counts = vec![1usize; domain.len()];
+        if let Some(c0) = counts.first_mut() {
+            *c0 = shards.max(1);
+        }
+        ShardPlan::new(domain, &counts, r, t)
+    }
+
+    /// Fixed-payload-step decomposition (the PJRT artifact tiling:
+    /// payload `step` per dim, truncated at the domain edge).
+    pub fn by_step(domain: &[usize], step: &[usize], r: usize, t: usize) -> Result<ShardPlan> {
+        if domain.len() != step.len() {
+            bail!("domain rank {} != step rank {}", domain.len(), step.len());
+        }
+        if domain.iter().any(|&n| n == 0) {
+            bail!("empty domain dimension");
+        }
+        if step.iter().any(|&s| s == 0) {
+            bail!("payload step must be positive");
+        }
+        if t == 0 {
+            bail!("temporal depth t must be >= 1");
+        }
+        let per_dim: Vec<Vec<(usize, usize)>> = domain
+            .iter()
+            .zip(step)
+            .map(|(&n, &s)| (0..n).step_by(s).map(|o| (o, (o + s).min(n))).collect())
+            .collect();
+        Ok(ShardPlan {
+            domain: domain.to_vec(),
+            r,
+            t,
+            counts: per_dim.iter().map(|c| c.len()).collect(),
+            shards: cartesian(&per_dim),
+        })
+    }
+
+    /// The shards, in row-major (dim-0 outermost) order; payload
+    /// regions partition the domain exactly once.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// `len() == 0` companion (cuts always yield at least one shard
+    /// per dim, so this is never true for a constructed plan).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Elements per dim-0 plane (1 for 1-D domains).
+    pub fn plane(&self) -> usize {
+        self.domain[1..].iter().product()
+    }
+
+    /// Whether only dim 0 is decomposed — the precondition for the
+    /// native slab path (dim-0 slabs are contiguous in row-major).
+    pub fn dim0_only(&self) -> bool {
+        self.counts[1..].iter().all(|&c| c == 1)
+    }
+
+    /// The full halo-ring depth in planes: `t·r`.
+    pub fn halo(&self) -> usize {
+        self.r * self.t
+    }
+
+    /// Clamped dim-0 read-plane range of a shard under a `depth`-step
+    /// halo ring (`depth ≤ t`): `[a − depth·r, b + depth·r) ∩ [0, N₀)`.
+    pub fn read_rows(&self, shard: &Shard, depth: usize) -> (usize, usize) {
+        let (a, b) = shard.rows();
+        let h = self.r * depth;
+        (a.saturating_sub(h), (b + h).min(self.domain[0]))
+    }
+}
+
+/// Row-major cartesian product of per-dim cut lists into shards.
+fn cartesian(per_dim: &[Vec<(usize, usize)>]) -> Vec<Shard> {
+    let total: usize = per_dim.iter().map(|c| c.len()).product();
+    let mut out = Vec::with_capacity(total);
+    for flat in 0..total {
+        let mut rem = flat;
+        let mut origin = vec![0usize; per_dim.len()];
+        let mut extent = vec![0usize; per_dim.len()];
+        for k in (0..per_dim.len()).rev() {
+            let (a, b) = per_dim[k][rem % per_dim[k].len()];
+            origin[k] = a;
+            extent[k] = b - a;
+            rem /= per_dim[k].len();
+        }
+        out.push(Shard { index: flat, tile: Tile { origin, extent } });
+    }
+    out
 }
 
 /// Tiling of an N^d domain onto G^d artifacts with halo h.
@@ -51,32 +269,16 @@ impl Tiling {
         })
     }
 
-    /// Tiles covering the domain exactly once (payload-disjoint).
+    /// Tiles covering the domain exactly once (payload-disjoint) —
+    /// placed by the shared [`ShardPlan::by_step`] decomposition, so
+    /// the PJRT driver and the native shard plane agree on geometry.
     pub fn tiles(&self) -> Vec<Tile> {
-        let counts: Vec<usize> = self
-            .domain
-            .iter()
-            .zip(&self.step)
-            .map(|(&n, &s)| n.div_ceil(s))
-            .collect();
-        let total: usize = counts.iter().product();
-        let mut out = Vec::with_capacity(total);
-        for flat in 0..total {
-            let mut rem = flat;
-            let mut origin = vec![0usize; self.domain.len()];
-            for k in (0..self.domain.len()).rev() {
-                origin[k] = (rem % counts[k]) * self.step[k];
-                rem /= counts[k];
-            }
-            let extent: Vec<usize> = origin
-                .iter()
-                .zip(&self.step)
-                .zip(&self.domain)
-                .map(|((&o, &s), &n)| s.min(n - o))
-                .collect();
-            out.push(Tile { origin, extent });
-        }
-        out
+        ShardPlan::by_step(&self.domain, &self.step, self.halo, 1)
+            .expect("Tiling invariants imply a valid shard plan")
+            .shards
+            .into_iter()
+            .map(|s| s.tile)
+            .collect()
     }
 
     /// Gather the artifact input for a tile: a G^d block whose interior
@@ -295,5 +497,93 @@ mod tests {
     fn rejects_tiny_grid() {
         assert!(Tiling::new(&[10, 10], &[4, 4], 2).is_err());
         assert!(Tiling::new(&[10], &[8, 8], 1).is_err());
+    }
+
+    #[test]
+    fn shard_spec_parses() {
+        assert_eq!(ShardSpec::parse("auto").unwrap(), ShardSpec::Auto);
+        assert_eq!(ShardSpec::parse("AUTO").unwrap(), ShardSpec::Auto);
+        assert_eq!(ShardSpec::parse("3").unwrap(), ShardSpec::Fixed(3));
+        assert!(ShardSpec::parse("0").is_err());
+        assert!(ShardSpec::parse("many").is_err());
+        assert_eq!(ShardSpec::Auto.wire(), "auto");
+        assert_eq!(ShardSpec::Fixed(4).wire(), "4");
+    }
+
+    #[test]
+    fn shard_plan_balanced_dim0() {
+        let p = ShardPlan::new(&[10, 6], &[3, 1], 1, 2).unwrap();
+        assert_eq!(p.len(), 3);
+        assert!(p.dim0_only());
+        assert_eq!(p.plane(), 6);
+        assert_eq!(p.halo(), 2);
+        let rows: Vec<(usize, usize)> = p.shards().iter().map(|s| s.rows()).collect();
+        assert_eq!(rows, vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(p.shards()[1].payload(), 3 * 6);
+        assert_eq!(p.shards()[2].index, 2);
+        // halo rings clamp at the domain edge and deepen per step
+        assert_eq!(p.read_rows(&p.shards()[0], 1), (0, 5));
+        assert_eq!(p.read_rows(&p.shards()[1], 2), (2, 9));
+        assert_eq!(p.read_rows(&p.shards()[2], 2), (5, 10));
+        // the canonical dim0 constructor is exactly this decomposition
+        let q = ShardPlan::dim0(&[10, 6], 3, 1, 2).unwrap();
+        assert_eq!(q.shards(), p.shards());
+        assert!(q.dim0_only());
+    }
+
+    #[test]
+    fn shard_plan_clamps_and_validates() {
+        // more shards than planes → one plane per shard
+        let p = ShardPlan::new(&[3, 4], &[8, 1], 1, 1).unwrap();
+        assert_eq!(p.len(), 3);
+        // multi-dim counts are not dim0-only
+        let p = ShardPlan::new(&[8, 8], &[2, 2], 1, 1).unwrap();
+        assert_eq!(p.len(), 4);
+        assert!(!p.dim0_only());
+        assert!(ShardPlan::new(&[8, 8], &[2], 1, 1).is_err());
+        assert!(ShardPlan::new(&[8, 0], &[2, 1], 1, 1).is_err());
+        assert!(ShardPlan::new(&[8, 8], &[2, 1], 1, 0).is_err());
+        assert!(ShardPlan::by_step(&[8, 8], &[0, 8], 1, 1).is_err());
+    }
+
+    #[test]
+    fn shard_payloads_partition_the_domain() {
+        for (domain, counts) in [
+            (vec![17usize, 9], vec![4usize, 1]),
+            (vec![11, 7], vec![3, 2]),
+            (vec![5, 4, 3], vec![2, 1, 1]),
+        ] {
+            let p = ShardPlan::new(&domain, &counts, 1, 3).unwrap();
+            let n: usize = domain.iter().product();
+            let mut covered = vec![0u8; n];
+            let strides = strides(&domain);
+            for s in p.shards() {
+                let t = &s.tile;
+                // enumerate payload points via odometer
+                let total: usize = t.extent.iter().product();
+                for flat in 0..total {
+                    let mut rem = flat;
+                    let mut gidx = 0usize;
+                    for k in (0..domain.len()).rev() {
+                        gidx += (t.origin[k] + rem % t.extent[k]) * strides[k];
+                        rem /= t.extent[k];
+                    }
+                    covered[gidx] += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "{domain:?} {counts:?}");
+        }
+    }
+
+    #[test]
+    fn tiling_and_shard_plan_agree_on_placement() {
+        // The PJRT tiling's payload tiles are exactly the by_step plan.
+        let t = Tiling::new(&[100, 70], &[64, 64], 3).unwrap();
+        let plan = ShardPlan::by_step(&[100, 70], &t.step, 3, 1).unwrap();
+        let tiles = t.tiles();
+        assert_eq!(tiles.len(), plan.len());
+        for (tile, shard) in tiles.iter().zip(plan.shards()) {
+            assert_eq!(tile, &shard.tile);
+        }
     }
 }

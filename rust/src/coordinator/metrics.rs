@@ -77,6 +77,21 @@ impl RunMetrics {
         self.scatter_ns += d.as_nanos() as u64;
     }
 
+    /// Fold one shard's phase metrics into a job-level aggregate:
+    /// traffic, flops, launches and phase times sum; `steps`, `points`
+    /// and `wall_ns` stay job-level (set by the driver).  Per-shard
+    /// metrics therefore sum exactly to the job's reply, halo
+    /// recompute included.
+    pub fn absorb(&mut self, shard: &RunMetrics) {
+        self.launches += shard.launches;
+        self.gather_ns += shard.gather_ns;
+        self.execute_ns += shard.execute_ns;
+        self.scatter_ns += shard.scatter_ns;
+        self.bytes_moved += shard.bytes_moved;
+        self.flops += shard.flops;
+        self.degenerate_blocks += shard.degenerate_blocks;
+    }
+
     pub fn render(&self) -> String {
         let intensity = if self.bytes_moved == 0 {
             String::new()
@@ -126,11 +141,21 @@ pub struct ServiceCounters {
     pub intensity_err_permille: AtomicU64,
     /// Number of jobs that contributed to `intensity_err_permille`.
     pub intensity_samples: AtomicU64,
+    /// Jobs that fanned out into shard tasks (shards > 1).
+    pub jobs_sharded: AtomicU64,
+    /// Total shard tasks those jobs fanned out into.
+    pub shard_tasks: AtomicU64,
 }
 
 impl ServiceCounters {
     pub fn bump(c: &AtomicU64) {
         c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one job's shard fan-out (`shards > 1` jobs only).
+    pub fn record_shard_fanout(&self, shards: usize) {
+        Self::bump(&self.jobs_sharded);
+        Self::add(&self.shard_tasks, shards as u64);
     }
 
     pub fn add(c: &AtomicU64, v: u64) {
@@ -171,6 +196,8 @@ impl ServiceCounters {
             exec_wall_ns: get(&self.exec_wall_ns),
             intensity_err_permille: get(&self.intensity_err_permille),
             intensity_samples: get(&self.intensity_samples),
+            jobs_sharded: get(&self.jobs_sharded),
+            shard_tasks: get(&self.shard_tasks),
         }
     }
 }
@@ -193,6 +220,8 @@ pub struct ServiceSnapshot {
     pub exec_wall_ns: u64,
     pub intensity_err_permille: u64,
     pub intensity_samples: u64,
+    pub jobs_sharded: u64,
+    pub shard_tasks: u64,
 }
 
 impl ServiceSnapshot {
@@ -346,6 +375,36 @@ mod tests {
         m.bytes_moved = 16;
         m.flops = 36;
         assert!(m.render().contains("I=2.25 F/B"), "{}", m.render());
+    }
+
+    #[test]
+    fn absorb_sums_shard_metrics_into_the_job() {
+        let mut job = RunMetrics { steps: 8, points: 100, ..Default::default() };
+        let shard = RunMetrics {
+            launches: 1,
+            execute_ns: 10,
+            bytes_moved: 64,
+            flops: 144,
+            ..Default::default()
+        };
+        job.absorb(&shard);
+        job.absorb(&shard);
+        assert_eq!(job.launches, 2);
+        assert_eq!(job.execute_ns, 20);
+        assert_eq!(job.bytes_moved, 128);
+        assert_eq!(job.flops, 288);
+        // job-level identity untouched
+        assert_eq!((job.steps, job.points), (8, 100));
+    }
+
+    #[test]
+    fn shard_fanout_counters() {
+        let c = ServiceCounters::default();
+        c.record_shard_fanout(4);
+        c.record_shard_fanout(2);
+        let s = c.snapshot();
+        assert_eq!(s.jobs_sharded, 2);
+        assert_eq!(s.shard_tasks, 6);
     }
 
     #[test]

@@ -14,11 +14,13 @@
 use anyhow::{anyhow, Result};
 
 use crate::backend::{BackendKind, TemporalMode};
+use crate::coordinator::grid::ShardSpec;
 use crate::engines::{self, Engine};
 use crate::hardware::Gpu;
 use crate::model::criteria;
 use crate::model::perf::{Dtype, Unit, Workload};
 use crate::model::scenario::{self, Comparison};
+use crate::model::shard;
 use crate::model::stencil::StencilPattern;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::Runtime;
@@ -29,6 +31,10 @@ use crate::sim::exec::{self, Prediction};
 pub struct Request {
     pub pattern: StencilPattern,
     pub dtype: Dtype,
+    /// Domain extents N^d.  Per-point throughput scoring ignores it,
+    /// but the shard axis is domain-aware: halo redundancy κ/τ depend
+    /// on the dim-0 extent (`model::shard`).
+    pub domain: Vec<usize>,
     /// Total time steps the caller wants to advance.
     pub steps: usize,
     pub gpu: Gpu,
@@ -41,6 +47,18 @@ pub struct Request {
     /// scores both with the model's fused-intensity equations (Eq. 8
     /// vs. Eq. 9-inflated); `Sweep`/`Blocked` pins the strategy.
     pub temporal: TemporalMode,
+    /// Shard constraint: `Auto` enumerates shard counts `1..=lanes`
+    /// for every native-target candidate and keeps >1 only when the
+    /// redundancy-adjusted gain (`model::shard::gain`) wins;
+    /// `Fixed(n)` pins the fan-out (and, for n > 1, restricts to
+    /// candidates that can shard at all).
+    pub shards: ShardSpec,
+    /// Worker lanes available to a sharded fan-out (the serve pool's
+    /// `--workers`; the CLI's `--threads`).
+    pub lanes: usize,
+    /// Intra-job threads the monolithic path would use — the parallel
+    /// baseline a sharded candidate must beat.
+    pub threads: usize,
 }
 
 /// The cacheable identity of a planning request.
@@ -50,12 +68,12 @@ pub struct Request {
 /// with equal keys therefore produce identical [`Plan`]s against the
 /// same manifest, which is what lets the service layer memoize the
 /// planner (`service::PlanCache`) instead of re-scoring every
-/// `(engine × t)` candidate on every request.
+/// `(engine × t × shards)` candidate on every request.
 ///
-/// `domain` does not influence scoring (throughput is per-point) but is
-/// part of the key so cache entries map 1:1 onto distinct workloads —
-/// per-domain hit counters stay meaningful and a future domain-aware
-/// scorer can't silently alias entries.
+/// The shard axis made scoring domain-aware (halo redundancy depends
+/// on the dim-0 extent), so `domain` — along with the shard spec and
+/// the `lanes`/`threads` parallel baseline — is load-bearing in the
+/// key, not just an aliasing guard.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct PlanKey {
     /// Canonical pattern label ("Box-2D1R").
@@ -69,6 +87,12 @@ pub struct PlanKey {
     /// Requested temporal strategy (auto/sweep/blocked) — it constrains
     /// candidate enumeration, so it is part of the plan's identity.
     pub temporal: &'static str,
+    /// Requested shard spec ("auto" or the pinned count).
+    pub shards: String,
+    /// Shard lanes available (scales the sharded candidates' gain).
+    pub lanes: usize,
+    /// Monolithic intra-job threads (the gain's parallel baseline).
+    pub threads: usize,
     pub gpu: String,
 }
 
@@ -77,7 +101,7 @@ impl PlanKey {
     pub fn canonical(&self) -> String {
         let dims: Vec<String> = self.domain.iter().map(|d| d.to_string()).collect();
         format!(
-            "{}|{}|{}|s{}|t<={}|{}|{}|{}",
+            "{}|{}|{}|s{}|t<={}|{}|{}|sh{}|l{}|th{}|{}",
             self.pattern,
             self.dtype,
             dims.join("x"),
@@ -85,22 +109,28 @@ impl PlanKey {
             self.max_t,
             self.backend,
             self.temporal,
+            self.shards,
+            self.lanes,
+            self.threads,
             self.gpu
         )
     }
 }
 
 impl Request {
-    /// Build the cache key for this request over a concrete domain.
-    pub fn plan_key(&self, domain: &[usize]) -> PlanKey {
+    /// Build the cache key for this request.
+    pub fn plan_key(&self) -> PlanKey {
         PlanKey {
             pattern: self.pattern.label(),
             dtype: self.dtype.as_str(),
-            domain: domain.to_vec(),
+            domain: self.domain.clone(),
             steps: self.steps,
             max_t: self.max_t,
             backend: self.backend.as_str(),
             temporal: self.temporal.as_str(),
+            shards: self.shards.wire(),
+            lanes: self.lanes,
+            threads: self.threads,
             gpu: self.gpu.name.to_string(),
         }
     }
@@ -141,6 +171,11 @@ pub struct Candidate {
     /// `Sweep` or `Blocked` for scalar-unit candidates, scored as
     /// distinct variants.  Never `Auto`.
     pub temporal: TemporalMode,
+    /// Shard fan-out this candidate executes with (1 = monolithic).
+    /// Sharded variants exist only for native-target candidates on
+    /// d ≥ 2 domains; their throughput is the monolithic prediction
+    /// scaled by the redundancy-adjusted gain (`model::shard::gain`).
+    pub shards: usize,
 }
 
 /// The planner's decision.
@@ -150,6 +185,22 @@ pub struct Plan {
     pub alternatives: Vec<Candidate>,
     /// Comparison against the best CUDA-Core candidate (paper Eq. 13).
     pub vs_cuda: Option<Comparison>,
+}
+
+/// Shard counts a candidate may execute with.  The shard plane is
+/// native-only (PJRT drives its own artifact tiling) and needs d ≥ 2
+/// (dim-0 slabs); counts clamp to the dim-0 extent.  `Auto` enumerates
+/// `1..=lanes` so the redundancy-adjusted gain decides; a pinned
+/// `Fixed(n > 1)` restricts to candidates that can shard at all.
+fn shard_options(req: &Request, target: ExecTarget) -> Vec<usize> {
+    let shardable = target == ExecTarget::Native && req.domain.len() > 1;
+    match req.shards {
+        ShardSpec::Fixed(n) if n.max(1) == 1 => vec![1],
+        ShardSpec::Fixed(n) if shardable => vec![n.min(req.domain[0]).max(1)],
+        ShardSpec::Fixed(_) => Vec::new(),
+        ShardSpec::Auto if !shardable => vec![1],
+        ShardSpec::Auto => (1..=req.lanes.min(req.domain[0]).max(1)).collect(),
+    }
 }
 
 /// Enumerate and score all feasible candidates.
@@ -240,15 +291,34 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
                 let Ok(prediction) = pred else {
                     continue; // unit missing on this GPU
                 };
-                out.push(Candidate {
-                    engine: e.clone(),
-                    t,
-                    prediction,
-                    in_sweet_spot,
-                    artifact: artifact.clone(),
-                    target,
-                    temporal,
-                });
+                for shards in shard_options(req, target) {
+                    let mut prediction = prediction.clone();
+                    if shards > 1 {
+                        // Redundancy-adjusted shard gain: min(S, lanes)
+                        // parallel lanes against the monolithic
+                        // `threads` baseline, divided by the trapezoid
+                        // recompute factor κ of this variant's geometry.
+                        prediction.throughput *= shard::gain(
+                            req.domain[0],
+                            shards,
+                            req.pattern.r,
+                            t,
+                            temporal == TemporalMode::Blocked,
+                            req.lanes,
+                            req.threads,
+                        );
+                    }
+                    out.push(Candidate {
+                        engine: e.clone(),
+                        t,
+                        prediction,
+                        in_sweet_spot,
+                        artifact: artifact.clone(),
+                        target,
+                        temporal,
+                        shards,
+                    });
+                }
             }
         }
     }
@@ -258,19 +328,22 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
 /// Produce a plan: highest predicted throughput wins; ties prefer CUDA
 /// Cores (no adaptation redundancy), then smaller fusion depth, then
 /// the sweep variant (fused-launch semantics, the artifact-compatible
-/// default) — so a temporal-blocked candidate is chosen exactly when
+/// default), then fewer shards (the monolith, when sharding buys
+/// nothing) — so a temporal-blocked candidate is chosen exactly when
 /// the model says the fused-kernel intensity α·t·K/D has crossed the
-/// machine balance point and the redundant flops stop being free.
+/// machine balance point, and a sharded one exactly when the
+/// redundancy-adjusted gain beats the monolithic path.
 pub fn plan(req: &Request, manifest: Option<&Manifest>) -> Result<Plan> {
     let mut cands = candidates(req, manifest);
     if cands.is_empty() {
         return Err(anyhow!(
-            "no feasible engine for {} {} on {} (backend {}, temporal {})",
+            "no feasible engine for {} {} on {} (backend {}, temporal {}, shards {})",
             req.pattern.label(),
             req.dtype.as_str(),
             req.gpu.name,
             req.backend.as_str(),
-            req.temporal.as_str()
+            req.temporal.as_str(),
+            req.shards.wire()
         ));
     }
     cands.sort_by(|a, b| {
@@ -284,6 +357,7 @@ pub fn plan(req: &Request, manifest: Option<&Manifest>) -> Result<Plan> {
                 let rank = |c: &Candidate| (c.temporal == TemporalMode::Blocked) as u8;
                 rank(a).cmp(&rank(b))
             })
+            .then_with(|| a.shards.cmp(&b.shards))
     });
     let chosen = cands[0].clone();
     // Compare the chosen tensor engine against the best CUDA candidate.
@@ -315,11 +389,19 @@ mod tests {
         Request {
             pattern: StencilPattern::new(shape, d, r).unwrap(),
             dtype,
+            domain: match d {
+                1 => vec![1024],
+                2 => vec![256, 256],
+                _ => vec![64, 64, 64],
+            },
             steps: 64,
             gpu: Gpu::a100(),
             backend: BackendKind::Auto,
             max_t: 8,
             temporal: TemporalMode::Auto,
+            shards: ShardSpec::Fixed(1),
+            lanes: 1,
+            threads: 1,
         }
     }
 
@@ -407,25 +489,37 @@ mod tests {
     fn plan_key_identity() {
         let r1 = req(Shape::Box, 2, 1, Dtype::F32);
         let r2 = req(Shape::Box, 2, 1, Dtype::F32);
-        assert_eq!(r1.plan_key(&[256, 256]), r2.plan_key(&[256, 256]));
+        assert_eq!(r1.plan_key(), r2.plan_key());
         // every varying axis must change the key
-        let k1 = r1.plan_key(&[256, 256]);
-        assert_ne!(k1, r1.plan_key(&[128, 256]));
-        assert_ne!(k1, req(Shape::Star, 2, 1, Dtype::F32).plan_key(&[256, 256]));
-        assert_ne!(k1, req(Shape::Box, 2, 2, Dtype::F32).plan_key(&[256, 256]));
-        assert_ne!(k1, req(Shape::Box, 2, 1, Dtype::F64).plan_key(&[256, 256]));
+        let k1 = r1.plan_key();
+        let mut rd = req(Shape::Box, 2, 1, Dtype::F32);
+        rd.domain = vec![128, 256];
+        assert_ne!(k1, rd.plan_key());
+        assert_ne!(k1, req(Shape::Star, 2, 1, Dtype::F32).plan_key());
+        assert_ne!(k1, req(Shape::Box, 2, 2, Dtype::F32).plan_key());
+        assert_ne!(k1, req(Shape::Box, 2, 1, Dtype::F64).plan_key());
         let mut rb = req(Shape::Box, 2, 1, Dtype::F32);
         rb.backend = BackendKind::Native;
-        assert_ne!(r1.plan_key(&[256, 256]), rb.plan_key(&[256, 256]));
+        assert_ne!(k1, rb.plan_key());
         let mut rt = req(Shape::Box, 2, 1, Dtype::F32);
         rt.max_t = 4;
-        assert_ne!(r1.plan_key(&[256, 256]), rt.plan_key(&[256, 256]));
+        assert_ne!(k1, rt.plan_key());
         let mut rtm = req(Shape::Box, 2, 1, Dtype::F32);
         rtm.temporal = TemporalMode::Blocked;
-        assert_ne!(r1.plan_key(&[256, 256]), rtm.plan_key(&[256, 256]));
-        let canon = r1.plan_key(&[256, 256]).canonical();
+        assert_ne!(k1, rtm.plan_key());
+        // the shard axis is load-bearing: spec, lanes and threads all key
+        let mut rs = req(Shape::Box, 2, 1, Dtype::F32);
+        rs.shards = ShardSpec::Auto;
+        assert_ne!(k1, rs.plan_key());
+        let mut rl = req(Shape::Box, 2, 1, Dtype::F32);
+        rl.lanes = 4;
+        assert_ne!(k1, rl.plan_key());
+        let mut rth = req(Shape::Box, 2, 1, Dtype::F32);
+        rth.threads = 2;
+        assert_ne!(k1, rth.plan_key());
+        let canon = r1.plan_key().canonical();
         assert!(canon.contains("Box-2D1R") && canon.contains("256x256"), "{canon}");
-        assert!(canon.contains("|auto|"), "{canon}");
+        assert!(canon.contains("|auto|") && canon.contains("|sh1|"), "{canon}");
     }
 
     #[test]
@@ -512,6 +606,131 @@ mod tests {
         r.temporal = TemporalMode::Blocked;
         r.backend = BackendKind::Pjrt;
         assert!(candidates(&r, None).is_empty());
+    }
+
+    #[test]
+    fn shard_axis_enumerates_only_when_auto_and_native() {
+        // Fixed(1): exactly the monolithic candidates.
+        let cands = candidates(&req(Shape::Box, 2, 1, Dtype::F64), None);
+        assert!(cands.iter().all(|c| c.shards == 1));
+        // Auto with 4 lanes: native-target candidates grow 2..=4 variants.
+        let mut r = req(Shape::Box, 2, 1, Dtype::F64);
+        r.shards = ShardSpec::Auto;
+        r.lanes = 4;
+        let cands = candidates(&r, None);
+        assert!(cands.iter().any(|c| c.shards == 4));
+        assert!(cands.iter().all(|c| c.shards == 1 || c.target == ExecTarget::Native));
+        // 1-D domains cannot shard.
+        let mut r1 = req(Shape::Box, 1, 1, Dtype::F64);
+        r1.shards = ShardSpec::Auto;
+        r1.lanes = 4;
+        assert!(candidates(&r1, None).iter().all(|c| c.shards == 1));
+        // Pinned fan-out clamps to the dim-0 extent.
+        let mut rp = req(Shape::Box, 2, 1, Dtype::F64);
+        rp.shards = ShardSpec::Fixed(3);
+        rp.lanes = 4;
+        let cands = candidates(&rp, None);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.shards == 3));
+    }
+
+    #[test]
+    fn sharding_chosen_exactly_when_the_adjusted_gain_wins() {
+        // threads == lanes: the sharded gain is ≤ 1 everywhere (exact
+        // tie at κ=1) — the tie-break must keep the monolith.
+        let mut r = req(Shape::Box, 2, 1, Dtype::F64);
+        r.shards = ShardSpec::Auto;
+        r.backend = BackendKind::Native;
+        r.lanes = 2;
+        r.threads = 2;
+        let p = plan(&r, None).unwrap();
+        assert_eq!(p.chosen.shards, 1, "ties must prefer the monolith");
+        // One free thread against 4 lanes on a large domain: the
+        // redundancy-adjusted gain wins and the fan-out saturates the
+        // lanes.
+        let mut r = req(Shape::Box, 2, 1, Dtype::F64);
+        r.shards = ShardSpec::Auto;
+        r.backend = BackendKind::Native;
+        r.lanes = 4;
+        r.threads = 1;
+        let p = plan(&r, None).unwrap();
+        assert_eq!(p.chosen.shards, 4);
+        // The chosen sharded throughput is the monolithic prediction ×
+        // the model's gain, exactly.
+        let mono = p
+            .alternatives
+            .iter()
+            .find(|c| {
+                c.engine.name == p.chosen.engine.name
+                    && c.t == p.chosen.t
+                    && c.temporal == p.chosen.temporal
+                    && c.shards == 1
+            })
+            .expect("monolithic twin");
+        let g = crate::model::shard::gain(
+            r.domain[0],
+            4,
+            r.pattern.r,
+            p.chosen.t,
+            p.chosen.temporal == TemporalMode::Blocked,
+            r.lanes,
+            r.threads,
+        );
+        let want = mono.prediction.throughput * g;
+        assert!(
+            (p.chosen.prediction.throughput - want).abs() <= 1e-9 * want,
+            "{} vs {}",
+            p.chosen.prediction.throughput,
+            want
+        );
+    }
+
+    #[test]
+    fn shard_crossover_follows_the_redundancy_model() {
+        // 2 lanes against a 2-thread monolith: parallel gain alone never
+        // wins, so the planner shards exactly when... never; and with a
+        // 1-thread monolith it shards exactly when κ(S) < active — the
+        // domain-size crossover of the blocked trapezoid.  Pin both
+        // directions on V100 (scalar-only plans).
+        for (n0, t, threads, expect_sharded) in
+            [(8usize, 8usize, 2usize, false), (256, 8, 2, true)]
+        {
+            let mut r = req(Shape::Box, 2, 1, Dtype::F32);
+            r.gpu = Gpu::v100();
+            r.backend = BackendKind::Native;
+            r.temporal = TemporalMode::Blocked;
+            r.domain = vec![n0, 256];
+            r.max_t = t;
+            r.shards = ShardSpec::Auto;
+            r.lanes = 4;
+            r.threads = threads;
+            let p = plan(&r, None).unwrap();
+            // cross-check the choice against the model directly
+            let best_gain = (2..=4usize)
+                .map(|s| {
+                    crate::model::shard::gain(n0, s, 1, p.chosen.t, true, r.lanes, r.threads)
+                })
+                .fold(f64::MIN, f64::max);
+            assert_eq!(
+                p.chosen.shards > 1,
+                expect_sharded,
+                "n0={n0}: best gain {best_gain}, chose {} shards",
+                p.chosen.shards
+            );
+            assert_eq!(best_gain > 1.0, expect_sharded, "model/planner must agree");
+        }
+    }
+
+    #[test]
+    fn pinned_fanout_on_pjrt_backend_is_infeasible() {
+        let mut r = req(Shape::Box, 2, 1, Dtype::F32);
+        r.backend = BackendKind::Pjrt;
+        r.shards = ShardSpec::Fixed(2);
+        // no manifest → no pjrt candidates; and pinned shards exclude
+        // pjrt targets anyway → empty either way
+        assert!(candidates(&r, None).is_empty());
+        let err = format!("{:#}", plan(&r, None).unwrap_err());
+        assert!(err.contains("shards 2"), "{err}");
     }
 
     #[test]

@@ -16,8 +16,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::Backend;
-use crate::coordinator::grid::Tiling;
+use crate::backend::{self, Backend, NativeBackend};
+use crate::coordinator::grid::{ShardPlan, Tiling};
 use crate::coordinator::metrics::RunMetrics;
 use crate::model::perf::Dtype;
 use crate::runtime::{Runtime, TensorData};
@@ -33,6 +33,77 @@ pub fn advance(
         .supports(job)
         .map_err(|why| anyhow!("{} backend cannot run this job: {why}", backend.name()))?;
     backend.advance(job, field)
+}
+
+/// One-shot sharded driver: advance `field` through the barrier-phase
+/// schedule of `job` over `plan`, running up to `lanes` shard tasks
+/// concurrently per phase (`stencilctl run --shards N` and the
+/// property suites; the service's queue-based shard executor lives in
+/// `service::queue` and shares the same
+/// [`NativeBackend::advance_shard`] compute primitive).
+///
+/// Each phase is a scoped fork/join: every shard computes its disjoint
+/// write-back slab from the shared phase-start field, then the slabs
+/// are assembled back — the join IS the halo-exchange barrier.  f64
+/// results are bit-identical to the monolithic path; the returned
+/// job-level metrics are the sum of every per-shard [`RunMetrics`]
+/// (halo re-reads and trapezoid recompute included), with slab
+/// assembly accounted as scatter time.
+pub fn advance_sharded(
+    job: &crate::backend::Job,
+    plan: &ShardPlan,
+    field: &mut Vec<f64>,
+    lanes: usize,
+) -> Result<RunMetrics> {
+    job.validate(field.len())?;
+    anyhow::ensure!(
+        plan.domain == job.domain,
+        "shard plan domain {:?} != job domain {:?}",
+        plan.domain,
+        job.domain
+    );
+    let backend = NativeBackend::new();
+    let shards = plan.shards();
+    let plane = plan.plane();
+    let phases = backend::shard_phases(job);
+    let mut metrics = RunMetrics { steps: job.steps, points: job.points(), ..Default::default() };
+    let wall0 = Instant::now();
+    let mut slabs: Vec<Vec<f64>> = shards.iter().map(|s| vec![0.0; s.payload()]).collect();
+    for phase in phases {
+        let workers = lanes.max(1).min(shards.len());
+        let per = shards.len().div_ceil(workers);
+        let src: &[f64] = field;
+        let results: Vec<Result<RunMetrics>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (ci, chunk) in slabs.chunks_mut(per).enumerate() {
+                let backend = &backend;
+                handles.push(scope.spawn(move || {
+                    chunk
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(li, slab)| {
+                            backend.advance_shard(job, plan, ci * per + li, phase, src, slab)
+                        })
+                        .collect::<Vec<Result<RunMetrics>>>()
+                }));
+            }
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        for res in results {
+            metrics.absorb(&res?);
+        }
+        let t0 = Instant::now();
+        for (shard, slab) in shards.iter().zip(&slabs) {
+            let (a, b) = shard.rows();
+            field[a * plane..b * plane].copy_from_slice(slab);
+        }
+        metrics.add_scatter(t0.elapsed());
+    }
+    metrics.wall_ns = wall0.elapsed().as_nanos() as u64;
+    Ok(metrics)
 }
 
 /// One stencil job over an arbitrary domain, bound to a named artifact.

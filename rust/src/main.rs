@@ -78,6 +78,15 @@ fn help_text() -> String {
            blocked  time-tiled temporal blocking: t base steps per\n\
                     cache-resident tile (Eq. 8 intensity t·K/D; bit-identical\n\
                     to sequential golden apply_once chains; native only)\n\n\
+         shard fan-out (--shards, honored by plan, run, and serve):\n\
+           auto     planner picks the count via the redundancy-adjusted\n\
+                    gain (halo recompute/traffic folded into the roofline —\n\
+                    the distributed analogue of the paper's alpha); >1 only\n\
+                    when it beats the monolithic path\n\
+           N        pin N dim-0 slab shards (native, d >= 2; 1 = monolith);\n\
+                    under serve one advance fans out into N shard tasks\n\
+                    running on multiple workers with halo-exchange barriers,\n\
+                    f64 bit-identical to the unsharded run\n\n\
          serve (long-lived daemon, newline-delimited JSON protocol):\n\
            --addr HOST:PORT   TCP listen address (default 127.0.0.1:7141)\n\
            --stdio            serve one connection on stdin/stdout instead\n\
@@ -88,6 +97,8 @@ fn help_text() -> String {
            --plan-cache N     plan cache capacity in entries (default 128)\n\
            --temporal MODE    default temporal strategy for sessions that\n\
                               do not set one (auto|sweep|blocked)\n\
+           --shards SPEC      default shard fan-out for sessions that do\n\
+                              not set one (auto|N)\n\
            requests: ping | plan | create_session | advance | fetch |\n\
                      close_session | stats | shutdown (see rust/README.md)\n\n{}",
         usage(&run_opt_specs())
@@ -103,6 +114,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         budget_ms: args.get_f64("budget-ms")?,
         plan_cache_cap: args.get_usize("plan-cache")?.unwrap_or(128).max(1),
         temporal: cfg.temporal,
+        shards: cfg.shards,
         artifacts_dir: cfg.artifacts_dir.clone(),
         gpu,
     };
@@ -185,21 +197,26 @@ fn plan_cmd(args: &Args) -> Result<()> {
     let req = planner::Request {
         pattern: cfg.pattern,
         dtype: cfg.dtype,
+        domain: cfg.domain.clone(),
         steps: cfg.steps,
         gpu,
         backend: cfg.backend,
         max_t: cfg.t.unwrap_or(8),
         temporal: cfg.temporal,
+        shards: cfg.shards,
+        lanes: cfg.threads,
+        threads: cfg.threads,
     };
     let plan = planner::plan(&req, manifest.as_ref())?;
     let c = &plan.chosen;
     println!(
-        "plan: {} (unit={}, scheme={}, t={}, temporal={}) predicted {:.2} GStencils/s [{}] -> {} backend",
+        "plan: {} (unit={}, scheme={}, t={}, temporal={}, shards={}) predicted {:.2} GStencils/s [{}] -> {} backend",
         c.engine.name,
         c.engine.unit.as_str(),
         c.engine.scheme.as_str(),
         c.t,
         c.temporal.as_str(),
+        c.shards,
         c.prediction.gstencils(),
         if c.in_sweet_spot { "sweet spot" } else { "baseline" },
         c.target.as_str(),
@@ -244,11 +261,15 @@ fn run_cmd(args: &Args) -> Result<()> {
         let req = planner::Request {
             pattern: cfg.pattern,
             dtype: cfg.dtype,
+            domain: cfg.domain.clone(),
             steps: cfg.steps,
             gpu,
             backend: cfg.backend,
             max_t: 8,
             temporal: cfg.temporal,
+            shards: cfg.shards,
+            lanes: cfg.threads,
+            threads: cfg.threads,
         };
         planner::plan(&req, manifest.as_ref()).ok()
     } else {
@@ -284,6 +305,25 @@ fn run_cmd(args: &Args) -> Result<()> {
     } else {
         cfg.steps
     };
+    // Shard fan-out: an explicit --shards N is binding (clamped to the
+    // dim-0 extent, native d ≥ 2 only); auto takes the planner's
+    // redundancy-adjusted resolution — which, one-shot, keeps the
+    // monolith: intra-job threads already use every lane, so the
+    // shard plane only wins under `serve` where pool workers can
+    // exceed a session's thread budget.
+    let shards = match cfg.shards {
+        tc_stencil::coordinator::grid::ShardSpec::Fixed(n) => n.min(cfg.domain[0]).max(1),
+        tc_stencil::coordinator::grid::ShardSpec::Auto => {
+            planned.as_ref().map(|p| p.chosen.shards).unwrap_or(1)
+        }
+    };
+    let sharded = shards > 1;
+    if sharded && cfg.domain.len() < 2 {
+        bail!("--shards {shards} needs a d >= 2 domain (dim-0 slabs)");
+    }
+    if sharded && cfg.backend == backend::BackendKind::Pjrt {
+        bail!("--shards {shards} is native-only (pjrt drives its own artifact tiling)");
+    }
     let weights = cfg.pattern.uniform_weights();
     let job = backend::Job {
         pattern: cfg.pattern,
@@ -295,7 +335,11 @@ fn run_cmd(args: &Args) -> Result<()> {
         weights: weights.clone(),
         threads: cfg.threads,
     };
-    let mut be = backend::create(cfg.backend, &cfg.artifacts_dir, &job, prefer)?;
+    let mut be = if sharded {
+        Box::new(backend::NativeBackend::new()) as Box<dyn backend::Backend>
+    } else {
+        backend::create(cfg.backend, &cfg.artifacts_dir, &job, prefer)?
+    };
     // A forced engine is an artifact-scheme constraint; the native
     // engine has no notion of schemes, so running there would silently
     // benchmark a different execution path.
@@ -308,7 +352,7 @@ fn run_cmd(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "backend: {} — {} {} t={t} temporal={}, {steps} steps over {:?}",
+        "backend: {} — {} {} t={t} temporal={} shards={shards}, {steps} steps over {:?}",
         be.name(),
         cfg.pattern.label(),
         cfg.dtype.as_str(),
@@ -317,19 +361,29 @@ fn run_cmd(args: &Args) -> Result<()> {
     );
     let n: usize = cfg.domain.iter().product();
     let mut field = golden::gaussian(&cfg.domain);
-    let metrics = scheduler::advance(be.as_mut(), &job, &mut field)?;
+    let metrics = if sharded {
+        let plan =
+            tc_stencil::coordinator::grid::ShardPlan::dim0(&cfg.domain, shards, cfg.pattern.r, t)?;
+        scheduler::advance_sharded(&job, &plan, &mut field, cfg.threads)?
+    } else {
+        scheduler::advance(be.as_mut(), &job, &mut field)?
+    };
     println!("{}", metrics.render());
     // Model feedback: how close the achieved intensity landed to the
-    // prediction for the executed temporal strategy (a blocked run the
-    // executor degraded to per-step sweeps realizes Eq. 8 at depth 1).
+    // prediction for the executed temporal strategy and fan-out (a
+    // blocked run the executor degraded to per-step sweeps realizes
+    // Eq. 8 at depth 1; sharded runs compare against the halo-
+    // redundancy-adjusted prediction).
     if metrics.bytes_moved > 0 {
         let blocked = temporal == backend::TemporalMode::Blocked;
         let eff_t = if blocked && metrics.degenerate_blocks > 0 { 1 } else { t };
         let w = Workload::new(cfg.pattern, eff_t, cfg.dtype);
-        let rep = tc_stencil::model::calib::report(
+        let rep = tc_stencil::model::calib::report_sharded(
             &w,
             steps,
             blocked,
+            cfg.domain[0],
+            shards,
             metrics.achieved_intensity(),
         );
         println!(

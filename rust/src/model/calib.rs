@@ -87,7 +87,36 @@ pub struct IntensityReport {
 /// assert!(r.rel_error < 0.0 && r.within_region); // halo overhead, on-model
 /// ```
 pub fn report(w: &Workload, steps: usize, blocked: bool, measured: f64) -> IntensityReport {
-    let predicted = predicted_job_intensity(w, steps, blocked);
+    report_against(predicted_job_intensity(w, steps, blocked), measured)
+}
+
+/// Shard-aware report: against the halo-redundancy-adjusted prediction
+/// ([`shard::predicted_job_intensity`](crate::model::shard::predicted_job_intensity))
+/// when the job fanned out, the monolithic [`report`] otherwise — the
+/// one selection rule `stencilctl run` and every `serve` advance
+/// response share.
+pub fn report_sharded(
+    w: &Workload,
+    steps: usize,
+    blocked: bool,
+    n0: usize,
+    shards: usize,
+    measured: f64,
+) -> IntensityReport {
+    if shards > 1 {
+        report_against(
+            crate::model::shard::predicted_job_intensity(w, steps, blocked, n0, shards),
+            measured,
+        )
+    } else {
+        report(w, steps, blocked, measured)
+    }
+}
+
+/// Compare a measured intensity against an externally computed
+/// prediction (the shard-aware path uses
+/// [`shard::predicted_job_intensity`](crate::model::shard::predicted_job_intensity)).
+pub fn report_against(predicted: f64, measured: f64) -> IntensityReport {
     let rel_error = if predicted > 0.0 { (measured - predicted) / predicted } else { 0.0 };
     IntensityReport {
         predicted,
@@ -142,6 +171,20 @@ mod tests {
         let ok = report(&w, 4, true, w.intensity_cuda() * 0.95);
         assert!(ok.within_region);
         assert!(ok.rel_error < 0.0);
+    }
+
+    #[test]
+    fn report_sharded_selects_the_right_prediction() {
+        let w = wl(Shape::Box, 2, 1, 4, Dtype::F64);
+        // shards == 1 → exactly the monolithic report
+        let mono = report_sharded(&w, 8, true, 64, 1, w.intensity_cuda() * 0.95);
+        assert_eq!(mono.predicted, predicted_job_intensity(&w, 8, true));
+        // shards > 1 → the halo-redundancy-adjusted prediction
+        let shard_pred = crate::model::shard::predicted_job_intensity(&w, 8, true, 64, 4);
+        let sh = report_sharded(&w, 8, true, 64, 4, shard_pred);
+        assert!((sh.predicted - shard_pred).abs() < 1e-15);
+        assert!(sh.rel_error.abs() < 1e-12 && sh.within_region);
+        assert!(sh.predicted < mono.predicted, "halo traffic must lower the target");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! * [`scenario`]   — Eq. 13–18: the four bottleneck-transition scenarios
 //! * [`criteria`]   — Eq. 19 + §4.3: sweet-spot and SpTC-expanded regions
 //! * [`calib`]      — predicted vs. *measured* intensity feedback
+//! * [`shard`]      — shard halo redundancy κ/τ (the distributed α)
 //!
 //! The full equation-by-equation map from the paper to these symbols
 //! lives in `rust/docs/MODEL.md`; the doctest below compiles one call
@@ -84,6 +85,19 @@
 //! assert_eq!(calib::predicted_intensity(&w, true), w.intensity_cuda());
 //! let rep = calib::report(&w, 3, true, w.intensity_cuda() * 0.97);
 //! assert!(rep.within_region);
+//!
+//! // Shard halo redundancy — the distributed analogue of α: κ/τ per
+//! // balanced dim-0 split, the planner's shard-count gain model, and
+//! // the shard-aware intensity prediction (= calib's at one shard).
+//! use tc_stencil::model::shard;
+//! assert_eq!(shard::cuts(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+//! let f = shard::factors(8, 4, 1, 4, true);
+//! assert!((f.compute - 2.0625).abs() < 1e-12 && (f.traffic - 2.25).abs() < 1e-12);
+//! assert!((shard::gain(256, 4, 1, 1, false, 4, 1) - 4.0).abs() < 1e-12);
+//! assert!(shard::gain(8, 4, 1, 8, true, 4, 2) < 1.0); // redundancy crossover
+//! let i4 = shard::predicted_job_intensity(&w, 6, true, 64, 4);
+//! let i1 = shard::predicted_job_intensity(&w, 6, true, 64, 1);
+//! assert!(i4 < i1 && (i1 - calib::predicted_job_intensity(&w, 6, true)).abs() < 1e-12);
 //! ```
 
 #![warn(missing_docs)]
@@ -96,3 +110,4 @@ pub mod perf;
 pub mod scenario;
 pub mod criteria;
 pub mod calib;
+pub mod shard;

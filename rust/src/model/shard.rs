@@ -1,0 +1,305 @@
+//! Shard halo redundancy — the distributed analogue of the paper's
+//! fusion redundancy α (Eq. 9).
+//!
+//! Splitting a domain into shards introduces exactly the kind of
+//! redundancy the paper models for hardware-shape adaptation: each
+//! shard's halo ring must be **re-read** every synchronization phase
+//! (halo traffic) and, for temporally blocked shards, the trapezoid's
+//! intermediate steps **recompute** the overlap region (halo
+//! recompute).  Both are pure functions of the decomposition geometry,
+//! so — like α — they can be folded into the roofline *before*
+//! executing anything:
+//!
+//! * κ ([`ShardFactors::compute`]) — base-kernel applications per
+//!   useful point-step, ≥ 1.  For a blocked phase of depth `t` over a
+//!   balanced dim-0 split with unclamped halos this is exactly
+//!   `κ = 1 + r·(t−1)·(S−1)/n₀` — linear in the shard count, the
+//!   distributed mirror of α's `t`-growth.  Sweep phases compute only
+//!   their disjoint write-back region, so κ ≡ 1.
+//! * τ ([`ShardFactors::traffic`]) — bytes moved per useful 2D bytes,
+//!   ≥ 1: every phase re-reads the `t·r`-deepened halo ring.
+//!
+//! [`gain`] turns these into the planner's shard decision: an S-way
+//! sharded job runs its shards on `min(S, lanes)` worker lanes of the
+//! service pool (one thread each), while the monolithic path runs on
+//! one worker with `mono_threads` intra-job threads.  The native
+//! engine saturates compute at stencil intensities, so the time model
+//! divides the parallel gain by κ — the planner selects >1 shard
+//! exactly when `min(S, lanes)/mono_threads` beats the recompute
+//! factor, the shard-axis analogue of Eq. 19's sweet-spot test.
+//!
+//! [`predicted_job_intensity`] is the shard-aware generalization of
+//! [`calib::predicted_job_intensity`](crate::model::calib::predicted_job_intensity)
+//! (it reduces to it exactly at `shards == 1`), mirroring the
+//! executor's per-shard traffic/flop accounting term for term so the
+//! model↔measurement feedback loop stays closed for sharded runs.
+
+use crate::model::perf::Workload;
+
+/// Balanced contiguous cuts of `n0` dim-0 planes into (at most)
+/// `shards` shards: the first `n0 % s` shards carry one extra plane.
+/// This is the canonical split shared by the execution plan
+/// (`coordinator::grid::ShardPlan`) and the model, so predictions and
+/// metrics describe the same geometry.
+pub fn cuts(n0: usize, shards: usize) -> Vec<(usize, usize)> {
+    let s = shards.min(n0).max(1);
+    let base = n0 / s;
+    let rem = n0 % s;
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0;
+    for i in 0..s {
+        let size = base + usize::from(i < rem);
+        out.push((start, start + size));
+        start += size;
+    }
+    out
+}
+
+/// The two shard redundancy factors of one synchronization phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardFactors {
+    /// κ — executed base-kernel applications per useful point-step
+    /// (trapezoid halo recompute; 1.0 for sweep phases and for a
+    /// single shard).
+    pub compute: f64,
+    /// τ — field bytes moved per useful `2D` bytes (halo re-reads;
+    /// 1.0 for a single shard).
+    pub traffic: f64,
+}
+
+/// Exact κ/τ for one phase of depth `t` over a balanced dim-0 split of
+/// `n0` planes into `shards` shards with base-kernel radius `r`.
+/// `blocked` phases carry `t` sequential steps per shard (trapezoid
+/// recompute); sweep phases launch the `t`-fold fused kernel once
+/// (halo reads only, no recompute).
+pub fn factors(n0: usize, shards: usize, r: usize, t: usize, blocked: bool) -> ShardFactors {
+    let t = t.max(1);
+    let cs = cuts(n0, shards);
+    let (compute, reads) = if blocked {
+        let mut applied = 0usize;
+        let mut reads = 0usize;
+        for &(a, b) in &cs {
+            for s in 1..=t {
+                let olo = a.saturating_sub((t - s) * r);
+                let ohi = (b + (t - s) * r).min(n0);
+                applied += ohi - olo;
+            }
+            reads += (b + t * r).min(n0) - a.saturating_sub(t * r);
+        }
+        (applied as f64 / (t * n0) as f64, reads)
+    } else {
+        let h = r * t;
+        let reads: usize =
+            cs.iter().map(|&(a, b)| (b + h).min(n0) - a.saturating_sub(h)).sum();
+        (1.0, reads)
+    };
+    ShardFactors { compute, traffic: (reads + n0) as f64 / (2 * n0) as f64 }
+}
+
+/// Relative throughput of an S-way sharded execution over the
+/// monolithic path: `min(S, lanes)/mono_threads` parallel lanes,
+/// divided by the κ recompute factor of the shard geometry (the
+/// compute-bound lane model — τ is reported through the intensity
+/// feedback instead).  `1.0` for `shards <= 1`; the planner picks a
+/// sharded candidate exactly when this exceeds 1 (ties break toward
+/// fewer shards).
+pub fn gain(
+    n0: usize,
+    shards: usize,
+    r: usize,
+    t: usize,
+    blocked: bool,
+    lanes: usize,
+    mono_threads: usize,
+) -> f64 {
+    if shards <= 1 {
+        return 1.0;
+    }
+    let active = cuts(n0, shards).len().min(lanes.max(1));
+    let f = factors(n0, shards, r, t, blocked);
+    (active as f64 / mono_threads.max(1) as f64) / f.compute
+}
+
+/// The barrier-phase schedule of a job as `(depth, fused)` pairs:
+/// blocked → time blocks of depth ≤ `t`; sweep → `steps/t` fused
+/// launches plus `steps%t` base launches.  The single source of truth
+/// shared by the executor
+/// ([`backend::shard_phases`](crate::backend::shard_phases) wraps it)
+/// and [`predicted_job_intensity`], so the model can never
+/// desynchronize from what actually runs.
+pub fn phase_schedule(steps: usize, t: usize, blocked: bool) -> Vec<(usize, bool)> {
+    let t = t.max(1);
+    let mut out = Vec::new();
+    if blocked {
+        let mut remaining = steps;
+        while remaining > 0 {
+            let tb = t.min(remaining);
+            out.push((tb, false));
+            remaining -= tb;
+        }
+    } else {
+        out.extend(std::iter::repeat((t, true)).take(steps / t));
+        out.extend(std::iter::repeat((1, true)).take(steps % t));
+    }
+    out
+}
+
+/// Step-count-aware predicted intensity of an S-way sharded job —
+/// mirrors the executor's per-shard accounting exactly: each phase
+/// re-reads every shard's `depth·r`-deepened halo ring and (blocked)
+/// recomputes the trapezoid overlap.  Reduces to
+/// [`calib::predicted_job_intensity`](crate::model::calib::predicted_job_intensity)
+/// at `shards == 1`.
+pub fn predicted_job_intensity(
+    w: &Workload,
+    steps: usize,
+    blocked: bool,
+    n0: usize,
+    shards: usize,
+) -> f64 {
+    if steps == 0 {
+        return 0.0;
+    }
+    let r = w.pattern.r;
+    let d_bytes = w.dtype.bytes() as f64;
+    let cs = cuts(n0, shards);
+    let mut flops = 0.0;
+    let mut bytes = 0.0;
+    for (depth, fused) in phase_schedule(steps, w.t, blocked) {
+        for &(a, b) in &cs {
+            if fused {
+                let h = r * depth;
+                let reads = (b + h).min(n0) - a.saturating_sub(h);
+                bytes += d_bytes * (reads + (b - a)) as f64;
+                flops += 2.0 * w.pattern.fused_k_points(depth) as f64 * (b - a) as f64;
+            } else {
+                let reads = (b + depth * r).min(n0) - a.saturating_sub(depth * r);
+                bytes += d_bytes * (reads + (b - a)) as f64;
+                for s in 1..=depth {
+                    let olo = a.saturating_sub((depth - s) * r);
+                    let ohi = (b + (depth - s) * r).min(n0);
+                    flops += 2.0 * w.k() * (ohi - olo) as f64;
+                }
+            }
+        }
+    }
+    flops / bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::calib;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn wl(shape: Shape, d: usize, r: usize, t: usize, dt: Dtype) -> Workload {
+        Workload::new(StencilPattern::new(shape, d, r).unwrap(), t, dt)
+    }
+
+    #[test]
+    fn cuts_partition_and_balance() {
+        assert_eq!(cuts(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(cuts(8, 2), vec![(0, 4), (4, 8)]);
+        // clamped to one plane per shard, never empty
+        assert_eq!(cuts(2, 5).len(), 2);
+        assert_eq!(cuts(7, 1), vec![(0, 7)]);
+        for (n0, s) in [(100, 7), (13, 4), (5, 5)] {
+            let cs = cuts(n0, s);
+            assert_eq!(cs.first().unwrap().0, 0);
+            assert_eq!(cs.last().unwrap().1, n0);
+            for w in cs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+                assert!(w[0].1 > w[0].0, "non-empty");
+            }
+            let sizes: Vec<usize> = cs.iter().map(|&(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "balanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn single_shard_has_no_redundancy() {
+        for blocked in [true, false] {
+            let f = factors(64, 1, 1, 4, blocked);
+            assert_eq!(f.compute, 1.0);
+            assert_eq!(f.traffic, 1.0);
+            assert_eq!(gain(64, 1, 1, 4, blocked, 8, 1), 1.0);
+        }
+    }
+
+    #[test]
+    fn blocked_factors_match_hand_geometry() {
+        // n0=8, S=4, r=1, t=4 (prototype-pinned): κ = 2.0625, τ = 2.25.
+        let f = factors(8, 4, 1, 4, true);
+        assert!((f.compute - 2.0625).abs() < 1e-12, "{}", f.compute);
+        // reads: shard (0,2): [0,6)=6; (2,4): [0,8)=8; (4,6): [0,8)=8;
+        // (6,8): [2,8)=6 → 28; τ = (28+8)/16 = 2.25.
+        assert!((f.traffic - 2.25).abs() < 1e-12, "{}", f.traffic);
+        // sweep phases never recompute
+        let fs = factors(8, 4, 1, 4, false);
+        assert_eq!(fs.compute, 1.0);
+        assert!(fs.traffic > 1.0);
+    }
+
+    #[test]
+    fn kappa_grows_linearly_in_shards_for_interior() {
+        // Unclamped halos: κ = 1 + r·(t−1)·(S−1)/n0 exactly (interior
+        // shards recompute two-sided, the two boundary shards one-sided).
+        let n0 = 1024;
+        for s in [2usize, 4, 8] {
+            let f = factors(n0, s, 1, 4, true);
+            let exact = 1.0 + (3 * (s - 1)) as f64 / n0 as f64;
+            assert!((f.compute - exact).abs() < 1e-12, "S={s}: {}", f.compute);
+        }
+    }
+
+    #[test]
+    fn gain_crossover_matches_prototype() {
+        // Large domain, sweep t=1, 4 lanes vs 1 mono thread: pure 4×.
+        assert!((gain(256, 4, 1, 1, false, 4, 1) - 4.0).abs() < 1e-12);
+        // Large blocked domain keeps most of the parallel gain.
+        let g = gain(256, 4, 1, 4, true, 4, 1);
+        assert!((g - 3.864).abs() < 0.01, "{g}");
+        // lanes == mono threads: sharding cannot win (exact tie at κ=1).
+        assert_eq!(gain(256, 2, 1, 1, false, 2, 2), 1.0);
+        // Small deep-blocked domain under 2 mono threads: recompute
+        // dominates → below 1 (the planner must keep the monolith).
+        assert!(gain(8, 4, 1, 8, true, 4, 2) < 1.0);
+        // …but the same request on a large domain shards.
+        assert!(gain(256, 4, 1, 8, true, 4, 2) > 1.0);
+    }
+
+    #[test]
+    fn sharded_intensity_reduces_to_calib_at_one_shard() {
+        for shape in [Shape::Box, Shape::Star] {
+            for t in [1usize, 2, 4] {
+                for steps in [1usize, 4, 9] {
+                    for blocked in [true, false] {
+                        let w = wl(shape, 2, 1, t, Dtype::F64);
+                        let a = predicted_job_intensity(&w, steps, blocked, 64, 1);
+                        let b = calib::predicted_job_intensity(&w, steps, blocked);
+                        assert!(
+                            (a - b).abs() < 1e-12,
+                            "{shape:?} t={t} steps={steps} blocked={blocked}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_lowers_the_predicted_intensity() {
+        // Halo re-reads raise the denominator: more shards → lower I.
+        let w = wl(Shape::Box, 2, 1, 4, Dtype::F64);
+        let mono = predicted_job_intensity(&w, 8, true, 64, 1);
+        let mut prev = mono;
+        for s in [2usize, 4, 8] {
+            let i = predicted_job_intensity(&w, 8, true, 64, s);
+            assert!(i < prev, "S={s}: {i} !< {prev}");
+            prev = i;
+        }
+        assert_eq!(predicted_job_intensity(&w, 0, true, 64, 4), 0.0);
+    }
+}

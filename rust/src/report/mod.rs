@@ -406,17 +406,19 @@ pub fn scenario_census(gpu: &Gpu) -> [usize; 4] {
 }
 
 /// The `stats` request's human-readable rendering: service-wide
-/// counters plus one row per live session (`stencilctl serve`).
+/// counters (shard fan-outs and plan-cache hit/miss/eviction included)
+/// plus one row per live session (`stencilctl serve`).
 pub fn service_stats(
     s: &crate::coordinator::metrics::ServiceSnapshot,
+    cache: &crate::service::plan_cache::CacheStats,
     sessions: &[crate::coordinator::metrics::SessionRow],
 ) -> String {
     let mut svc = Table::new(
         "service — counters",
         &[
             "requests", "errors", "accepted", "downgraded", "rejected", "queue-full",
-            "completed", "failed", "plan hits", "plan misses", "hit rate", "steps", "MSt/s",
-            "model err",
+            "completed", "failed", "sharded", "shard tasks", "plan hits", "plan misses",
+            "hit rate", "evicted", "steps", "MSt/s", "model err",
         ],
     );
     svc.row(&[
@@ -428,9 +430,12 @@ pub fn service_stats(
         s.queue_rejected.to_string(),
         s.jobs_completed.to_string(),
         s.jobs_failed.to_string(),
+        s.jobs_sharded.to_string(),
+        s.shard_tasks.to_string(),
         s.plan_hits.to_string(),
         s.plan_misses.to_string(),
         format!("{:.0}%", s.plan_hit_rate() * 100.0),
+        cache.evictions.to_string(),
         s.steps_total.to_string(),
         format!("{:.2}", s.throughput() / 1e6),
         // mean |measured − predicted| intensity over instrumented jobs
@@ -603,13 +608,20 @@ mod tests {
                 exec_wall_ns: 1_000_000_000,
             },
         }];
-        let out = service_stats(&snap, &rows);
+        let cache = crate::service::plan_cache::CacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 2,
+            len: 1,
+        };
+        let out = service_stats(&snap, &cache, &rows);
         assert!(out.contains("service — counters"));
         assert!(out.contains("service — sessions"));
         assert!(out.contains("Star-2D1R"));
         assert!(out.contains("75%"), "hit rate renders: {out}");
+        assert!(out.contains("evicted"), "cache evictions render: {out}");
         // empty session list still renders both tables
-        let out = service_stats(&snap, &[]);
+        let out = service_stats(&snap, &cache, &[]);
         assert!(out.contains("service — sessions"));
     }
 }

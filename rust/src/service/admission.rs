@@ -28,6 +28,10 @@ pub enum Decision {
         /// Resolved temporal strategy of the admitted candidate (the
         /// blocked-path prediction when the planner chose blocked).
         temporal: TemporalMode,
+        /// Resolved shard fan-out (1 = monolithic; >1 only when the
+        /// planner's redundancy-adjusted gain chose a sharded
+        /// candidate).
+        shards: usize,
         predicted_ms: f64,
         engine: String,
         target: &'static str,
@@ -37,6 +41,8 @@ pub enum Decision {
         t: usize,
         /// Resolved temporal strategy of the downgraded-to candidate.
         temporal: TemporalMode,
+        /// Resolved shard fan-out of the downgraded-to candidate.
+        shards: usize,
         predicted_ms: f64,
         /// What the requested depth would have cost.
         requested_ms: f64,
@@ -89,6 +95,7 @@ pub fn decide(
         return Decision::Accept {
             t: t0,
             temporal: c0.temporal,
+            shards: c0.shards,
             predicted_ms: ms0,
             engine: c0.engine.name.to_string(),
             target: c0.target.as_str(),
@@ -98,6 +105,7 @@ pub fn decide(
         return Decision::Accept {
             t: t0,
             temporal: c0.temporal,
+            shards: c0.shards,
             predicted_ms: ms0,
             engine: c0.engine.name.to_string(),
             target: c0.target.as_str(),
@@ -114,6 +122,7 @@ pub fn decide(
                 from_t: t0,
                 t: c.t,
                 temporal: c.temporal,
+                shards: c.shards,
                 predicted_ms: ms,
                 requested_ms: ms0,
                 engine: c.engine.name.to_string(),
@@ -154,11 +163,15 @@ mod tests {
         let req = Request {
             pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
             dtype,
+            domain: vec![256, 256],
             steps: 8,
             gpu: Gpu::a100(),
             backend: BackendKind::Auto,
             max_t: 8,
             temporal: crate::backend::TemporalMode::Auto,
+            shards: crate::coordinator::grid::ShardSpec::Auto,
+            lanes: 2,
+            threads: 4,
         };
         planner::plan(&req, None).unwrap()
     }
@@ -167,10 +180,11 @@ mod tests {
     fn no_budget_accepts_at_planned_depth() {
         let p = plan(Dtype::F32);
         match decide(&p, None, 1 << 16, 8, None) {
-            Decision::Accept { t, temporal, predicted_ms, .. } => {
+            Decision::Accept { t, temporal, shards, predicted_ms, .. } => {
                 assert_eq!(t, p.chosen.t);
                 assert_eq!(temporal, p.chosen.temporal);
                 assert_ne!(temporal, TemporalMode::Auto, "must be resolved");
+                assert_eq!(shards, p.chosen.shards);
                 assert!(predicted_ms > 0.0);
             }
             other => panic!("expected accept, got {other:?}"),

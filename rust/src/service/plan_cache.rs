@@ -3,10 +3,12 @@
 //! Planning is pure (`planner::plan` is a function of the request and
 //! the manifest — see [`PlanKey`]'s contract), so the service runs the
 //! candidate enumeration + roofline scoring once per distinct workload
-//! and serves every subsequent identical request from the cache.  FIFO
-//! eviction bounds memory; hit/miss counters feed the `stats` op.
+//! and serves every subsequent identical request from the cache.  LRU
+//! eviction bounds memory — a hit refreshes the entry's recency, so a
+//! steady working set survives one-off workloads passing through —
+//! and hit/miss/eviction counters feed the `serve` stats op.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -14,15 +16,35 @@ use anyhow::Result;
 use crate::coordinator::planner::{self, Plan, PlanKey, Request};
 use crate::runtime::manifest::Manifest;
 
-#[derive(Debug, Default)]
-struct Inner {
-    map: HashMap<PlanKey, Arc<Plan>>,
-    order: VecDeque<PlanKey>,
-    hits: u64,
-    misses: u64,
+#[derive(Debug)]
+struct Entry {
+    plan: Arc<Plan>,
+    /// Logical clock of the last touch — recency without a list, so
+    /// the hit path stays a single O(1) hash probe (eviction pays the
+    /// O(len) argmin scan instead, and only on a full-cache miss).
+    used: u64,
 }
 
-/// Bounded, thread-safe memo of planner decisions.
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<PlanKey, Entry>,
+    /// Monotonic logical clock feeding `Entry::used`.
+    seq: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Point-in-time cache counters for the `stats` op.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+}
+
+/// Bounded, thread-safe LRU memo of planner decisions.
 #[derive(Debug)]
 pub struct PlanCache {
     cap: usize,
@@ -39,32 +61,39 @@ impl PlanCache {
     /// The lock is dropped while the planner runs: a race between two
     /// misses on the same key costs one redundant (pure) computation,
     /// never a wrong answer — the first insert wins.
-    pub fn plan(
-        &self,
-        req: &Request,
-        domain: &[usize],
-        manifest: Option<&Manifest>,
-    ) -> Result<(Arc<Plan>, bool)> {
-        let key = req.plan_key(domain);
+    pub fn plan(&self, req: &Request, manifest: Option<&Manifest>) -> Result<(Arc<Plan>, bool)> {
+        let key = req.plan_key();
         {
             let mut g = self.inner.lock().unwrap();
-            let cached = g.map.get(&key).cloned();
-            if let Some(p) = cached {
-                g.hits += 1;
+            let inner = &mut *g;
+            inner.seq += 1;
+            let seq = inner.seq;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.used = seq;
+                let p = e.plan.clone();
+                inner.hits += 1;
                 return Ok((p, true));
             }
         }
         let plan = Arc::new(planner::plan(req, manifest)?);
         let mut g = self.inner.lock().unwrap();
-        g.misses += 1;
-        if !g.map.contains_key(&key) {
-            if g.map.len() >= self.cap {
-                if let Some(old) = g.order.pop_front() {
-                    g.map.remove(&old);
+        let inner = &mut *g;
+        inner.misses += 1;
+        inner.seq += 1;
+        let seq = inner.seq;
+        if let Some(e) = inner.map.get_mut(&key) {
+            // racing miss lost: the first insert stands, refresh recency
+            e.used = seq;
+        } else {
+            if inner.map.len() >= self.cap {
+                let victim =
+                    inner.map.iter().min_by_key(|(_, e)| e.used).map(|(k, _)| k.clone());
+                if let Some(old) = victim {
+                    inner.map.remove(&old);
+                    inner.evictions += 1;
                 }
             }
-            g.map.insert(key.clone(), plan.clone());
-            g.order.push_back(key);
+            inner.map.insert(key, Entry { plan: plan.clone(), used: seq });
         }
         Ok((plan, false))
     }
@@ -75,6 +104,17 @@ impl PlanCache {
 
     pub fn misses(&self) -> u64 {
         self.inner.lock().unwrap().misses
+    }
+
+    /// Entries evicted by the LRU bound so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// One consistent snapshot of all counters.
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats { hits: g.hits, misses: g.misses, evictions: g.evictions, len: g.map.len() }
     }
 
     pub fn len(&self) -> usize {
@@ -90,19 +130,28 @@ impl PlanCache {
 mod tests {
     use super::*;
     use crate::backend::BackendKind;
+    use crate::coordinator::grid::ShardSpec;
     use crate::hardware::Gpu;
     use crate::model::perf::Dtype;
     use crate::model::stencil::{Shape, StencilPattern};
 
     fn req(shape: Shape, d: usize, r: usize) -> Request {
+        req_domain(shape, d, r, vec![256, 256])
+    }
+
+    fn req_domain(shape: Shape, d: usize, r: usize, domain: Vec<usize>) -> Request {
         Request {
             pattern: StencilPattern::new(shape, d, r).unwrap(),
             dtype: Dtype::F32,
+            domain,
             steps: 8,
             gpu: Gpu::a100(),
             backend: BackendKind::Auto,
             max_t: 8,
             temporal: crate::backend::TemporalMode::Auto,
+            shards: ShardSpec::Auto,
+            lanes: 2,
+            threads: 4,
         }
     }
 
@@ -110,35 +159,43 @@ mod tests {
     fn second_identical_request_hits() {
         let cache = PlanCache::new(8);
         let r = req(Shape::Box, 2, 1);
-        let (p1, hit1) = cache.plan(&r, &[256, 256], None).unwrap();
+        let (p1, hit1) = cache.plan(&r, None).unwrap();
         assert!(!hit1);
-        let (p2, hit2) = cache.plan(&r, &[256, 256], None).unwrap();
+        let (p2, hit2) = cache.plan(&r, None).unwrap();
         assert!(hit2);
         assert!(Arc::ptr_eq(&p1, &p2), "hit must return the cached Arc");
-        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.len), (1, 1, 0, 1));
     }
 
     #[test]
     fn distinct_workloads_do_not_alias() {
         let cache = PlanCache::new(8);
-        let (_, h1) = cache.plan(&req(Shape::Box, 2, 1), &[256, 256], None).unwrap();
-        let (_, h2) = cache.plan(&req(Shape::Star, 2, 1), &[256, 256], None).unwrap();
-        let (_, h3) = cache.plan(&req(Shape::Box, 2, 1), &[128, 128], None).unwrap();
+        let (_, h1) = cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        let (_, h2) = cache.plan(&req(Shape::Star, 2, 1), None).unwrap();
+        let (_, h3) = cache
+            .plan(&req_domain(Shape::Box, 2, 1, vec![128, 128]), None)
+            .unwrap();
         assert!(!h1 && !h2 && !h3);
         assert_eq!(cache.len(), 3);
     }
 
     #[test]
-    fn capacity_bounds_entries_fifo() {
+    fn capacity_bounds_entries_lru() {
         let cache = PlanCache::new(2);
-        cache.plan(&req(Shape::Box, 2, 1), &[16, 16], None).unwrap();
-        cache.plan(&req(Shape::Box, 2, 2), &[16, 16], None).unwrap();
-        cache.plan(&req(Shape::Box, 2, 3), &[16, 16], None).unwrap(); // evicts r=1
+        cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        cache.plan(&req(Shape::Box, 2, 2), None).unwrap();
+        // touch r=1 → r=2 becomes least-recently-used
+        let (_, hit) = cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        assert!(hit);
+        cache.plan(&req(Shape::Box, 2, 3), None).unwrap(); // evicts r=2, NOT r=1
         assert_eq!(cache.len(), 2);
-        let (_, hit) = cache.plan(&req(Shape::Box, 2, 1), &[16, 16], None).unwrap();
-        assert!(!hit, "evicted entry must be recomputed");
-        let (_, hit) = cache.plan(&req(Shape::Box, 2, 3), &[16, 16], None).unwrap();
-        assert!(hit, "resident entry still served");
+        assert_eq!(cache.evictions(), 1);
+        let (_, hit) = cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        assert!(hit, "recently-used entry must survive the eviction");
+        let (_, hit) = cache.plan(&req(Shape::Box, 2, 2), None).unwrap();
+        assert!(!hit, "LRU entry must have been evicted");
+        assert_eq!(cache.evictions(), 2); // r=2's reinsert evicted r=3
     }
 
     #[test]
@@ -146,8 +203,9 @@ mod tests {
         let cache = PlanCache::new(4);
         let mut r = req(Shape::Box, 2, 1);
         r.backend = BackendKind::Pjrt; // no manifest -> no candidates
-        assert!(cache.plan(&r, &[16, 16], None).is_err());
+        assert!(cache.plan(&r, None).is_err());
         assert_eq!(cache.len(), 0);
         assert_eq!(cache.misses(), 0, "failed plans count neither way");
+        assert_eq!(cache.stats(), CacheStats::default());
     }
 }

@@ -13,13 +13,15 @@
 //! create_session = "session": name, jobspec,
 //!                  ( "field": [f64...] | "init": "gaussian"|"zeros" )
 //! advance        = "session": name, "steps": n, [ "t": depth ],
-//!                  [ "temporal": "auto"|"sweep"|"blocked" ]
+//!                  [ "temporal": "auto"|"sweep"|"blocked" ],
+//!                  [ "shards": "auto"|n ]
 //! fetch          = "session": name, [ "encoding": "num"|"hex" ]
 //! close_session  = "session": name
 //! jobspec        = [ "shape": "box"|"star" ], [ "d": 1..3 ], [ "r": n ],
 //!                  [ "dtype": "float"|"double" ], [ "domain": [n...]|"NxM" ],
 //!                  [ "steps": n ], [ "t": depth ], [ "backend": kind ],
 //!                  [ "temporal": "auto"|"sweep"|"blocked" ],
+//!                  [ "shards": "auto"|n ],
 //!                  [ "threads": n ], [ "weights": [f64...] ]
 //! response       = { "ok": true, "op": ..., ... }
 //!                | { "ok": false, "op": ..., "error": code, "message": ... }
@@ -35,6 +37,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::backend::{BackendKind, TemporalMode};
 use crate::coordinator::config::RunConfig;
+use crate::coordinator::grid::ShardSpec;
 use crate::model::perf::Dtype;
 use crate::model::stencil::{Shape, StencilPattern};
 use crate::util::json::Json;
@@ -52,6 +55,9 @@ pub struct JobSpec {
     pub backend: BackendKind,
     /// Temporal strategy (auto = planner-resolved via the model).
     pub temporal: TemporalMode,
+    /// Shard fan-out (auto = planner-resolved via the redundancy-
+    /// adjusted gain; N pins the count, 1 = monolithic).
+    pub shards: ShardSpec,
     pub threads: usize,
     /// Base stencil weights; `None` = support-normalized uniform.
     pub weights: Option<Vec<f64>>,
@@ -71,7 +77,13 @@ pub enum Request {
     Ping,
     Plan(JobSpec),
     CreateSession { session: String, spec: JobSpec, init: FieldInit },
-    Advance { session: String, steps: usize, t: Option<usize>, temporal: Option<TemporalMode> },
+    Advance {
+        session: String,
+        steps: usize,
+        t: Option<usize>,
+        temporal: Option<TemporalMode>,
+        shards: Option<ShardSpec>,
+    },
     Fetch { session: String, hex: bool },
     CloseSession { session: String },
     Stats,
@@ -122,6 +134,7 @@ impl Request {
                 steps: opt_usize(j, "steps")?.unwrap_or(8),
                 t: opt_usize(j, "t")?,
                 temporal: opt_str(j, "temporal").map(TemporalMode::parse).transpose()?,
+                shards: opt_shards(j)?,
             }),
             "fetch" => Ok(Request::Fetch {
                 session: req_str(j, "session")?,
@@ -163,6 +176,7 @@ impl JobSpec {
             t: opt_usize(j, "t")?,
             backend,
             temporal,
+            shards: opt_shards(j)?.unwrap_or(ShardSpec::Auto),
             threads: opt_usize(j, "threads")?.unwrap_or(4).max(1),
             weights: opt_f64_vec(j, "weights")?,
         })
@@ -201,6 +215,22 @@ fn opt_usize(j: &Json, k: &str) -> Result<Option<usize>> {
             .as_usize()
             .map(Some)
             .ok_or_else(|| anyhow!("field {k:?} must be a non-negative integer")),
+    }
+}
+
+/// The `"shards"` field accepts `"auto"`, a numeric count, or a
+/// numeric string.
+fn opt_shards(j: &Json) -> Result<Option<ShardSpec>> {
+    match j.as_obj().and_then(|o| o.get("shards")) {
+        None => Ok(None),
+        Some(Json::Str(s)) => ShardSpec::parse(s).map(Some),
+        Some(v) => {
+            let n = v
+                .as_usize()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| anyhow!("field \"shards\" must be \"auto\" or a positive integer"))?;
+            Ok(Some(ShardSpec::Fixed(n)))
+        }
     }
 }
 
@@ -356,6 +386,7 @@ mod tests {
         assert_eq!(s.steps, 8);
         assert_eq!(s.backend, BackendKind::Auto);
         assert_eq!(s.temporal, TemporalMode::Auto);
+        assert_eq!(s.shards, ShardSpec::Auto);
         assert_eq!(s.t, None);
     }
 
@@ -410,20 +441,35 @@ mod tests {
 
     #[test]
     fn advance_and_fetch_parse() {
-        let Request::Advance { session, steps, t, temporal } =
+        let Request::Advance { session, steps, t, temporal, shards } =
             parse(r#"{"op":"advance","session":"a","steps":4,"t":2}"#).unwrap()
         else {
             panic!("expected advance");
         };
         assert_eq!((session.as_str(), steps, t), ("a", 4, Some(2)));
         assert_eq!(temporal, None);
-        let Request::Advance { temporal, .. } =
-            parse(r#"{"op":"advance","session":"a","steps":4,"temporal":"blocked"}"#).unwrap()
+        assert_eq!(shards, None);
+        let Request::Advance { temporal, shards, .. } =
+            parse(r#"{"op":"advance","session":"a","steps":4,"temporal":"blocked","shards":3}"#)
+                .unwrap()
         else {
             panic!("expected advance");
         };
         assert_eq!(temporal, Some(TemporalMode::Blocked));
+        assert_eq!(shards, Some(ShardSpec::Fixed(3)));
+        let Request::Advance { shards, .. } =
+            parse(r#"{"op":"advance","session":"a","shards":"auto"}"#).unwrap()
+        else {
+            panic!("expected advance");
+        };
+        assert_eq!(shards, Some(ShardSpec::Auto));
         assert!(parse(r#"{"op":"advance","session":"a","temporal":"warp"}"#).is_err());
+        assert!(parse(r#"{"op":"advance","session":"a","shards":0}"#).is_err());
+        assert!(parse(r#"{"op":"advance","session":"a","shards":"many"}"#).is_err());
+        let Request::Plan(s) = parse(r#"{"op":"plan","shards":"2"}"#).unwrap() else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.shards, ShardSpec::Fixed(2));
         let Request::Plan(s) =
             parse(r#"{"op":"plan","temporal":"sweep"}"#).unwrap()
         else {

@@ -1,24 +1,42 @@
-//! The bounded job queue + worker pool.
+//! The bounded task queue + worker pool — the shard is the unit of
+//! scheduling.
 //!
-//! Connection handlers enqueue [`QueuedJob`]s without blocking —
-//! a full queue is load-shedding feedback, not backpressure-by-hanging
-//! — and wait on a per-job reply channel.  Workers pop jobs, resolve a
-//! backend through the existing [`Backend`](crate::backend::Backend)
-//! trait, advance the session's resident field, and send the per-job
-//! [`RunMetrics`] back.  Closing the queue wakes every worker; they
-//! drain what was admitted and exit.
+//! Connection handlers enqueue [`Task`]s without blocking — a full
+//! queue is load-shedding feedback, not backpressure-by-hanging — and
+//! wait on a per-job reply channel.  Two task kinds share the pool:
+//!
+//! * [`Task::Job`] — the monolithic path: one worker resolves a
+//!   backend, advances the session's resident field under the session
+//!   lock, and replies with the job's [`RunMetrics`].
+//! * [`Task::Shard`] — one shard × one synchronization phase of a
+//!   [`ShardedRun`]: an admitted job fans out into `S` shard tasks
+//!   that run on multiple workers **concurrently**, each computing its
+//!   disjoint write-back slab from the shared phase-start field.  The
+//!   worker that completes a phase's last shard performs the
+//!   halo-exchange barrier — assembles the slabs into the next
+//!   phase-start field and re-enqueues the next phase's shard tasks —
+//!   so tasks never block on each other and any pool size (even one
+//!   worker) makes progress without deadlock.
+//!
+//! Per-shard [`RunMetrics`] (halo re-reads and trapezoid recompute
+//! included) are aggregated into the job-level reply.  Closing the
+//! queue wakes every worker; they drain what was admitted (in-flight
+//! sharded jobs keep re-enqueueing their remaining phases internally)
+//! and exit.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-use crate::backend;
+use crate::backend::{self, NativeBackend, ShardPhase};
+use crate::coordinator::grid::ShardPlan;
 use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
 
 use super::session::Session;
 
-/// One admitted job, bound to its session and reply channel.
+/// One admitted monolithic job, bound to its session and reply channel.
 pub struct QueuedJob {
     pub session: Arc<Mutex<Session>>,
     pub job: backend::Job,
@@ -34,22 +52,37 @@ pub struct QueuedJob {
     pub reply: mpsc::Sender<Result<RunMetrics, String>>,
 }
 
+/// One schedulable unit.
+pub enum Task {
+    /// A whole job, executed by one worker (shards = 1).
+    Job(QueuedJob),
+    /// Shard `usize` of a sharded run's current phase.
+    Shard(Arc<ShardedRun>, usize),
+}
+
 /// Why a push was refused.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PushError {
-    /// At capacity — the caller should shed the job.
-    Full,
+    /// At capacity — the caller should shed the job.  Carries the
+    /// observed depth and the configured capacity so shed clients (and
+    /// the admission log) can see why.
+    Full {
+        /// Tasks queued at refusal time.
+        depth: usize,
+        /// Configured queue capacity.
+        cap: usize,
+    },
     /// Shutting down — no new work is admitted.
     Closed,
 }
 
 #[derive(Default)]
 struct Inner {
-    jobs: VecDeque<QueuedJob>,
+    tasks: VecDeque<Task>,
     open: bool,
 }
 
-/// Bounded MPMC job queue (Mutex + Condvar; std only).
+/// Bounded MPMC task queue (Mutex + Condvar; std only).
 pub struct JobQueue {
     cap: usize,
     inner: Mutex<Inner>,
@@ -60,33 +93,56 @@ impl JobQueue {
     pub fn new(cap: usize) -> JobQueue {
         JobQueue {
             cap: cap.max(1),
-            inner: Mutex::new(Inner { jobs: VecDeque::new(), open: true }),
+            inner: Mutex::new(Inner { tasks: VecDeque::new(), open: true }),
             ready: Condvar::new(),
         }
     }
 
-    /// Non-blocking admission; the job is dropped on refusal (its reply
-    /// sender with it, so nobody ends up waiting on a dead channel).
-    pub fn push(&self, j: QueuedJob) -> Result<(), PushError> {
+    /// Non-blocking admission; the task is dropped on refusal (its
+    /// reply sender with it, so nobody ends up waiting on a dead
+    /// channel).
+    pub fn push(&self, t: Task) -> Result<(), PushError> {
+        self.push_batch(vec![t])
+    }
+
+    /// Atomically admit a batch (a sharded job's phase-0 fan-out):
+    /// either every task is queued or none is.
+    pub fn push_batch(&self, ts: Vec<Task>) -> Result<(), PushError> {
         let mut g = self.inner.lock().unwrap();
         if !g.open {
             return Err(PushError::Closed);
         }
-        if g.jobs.len() >= self.cap {
-            return Err(PushError::Full);
+        if g.tasks.len() + ts.len() > self.cap {
+            return Err(PushError::Full { depth: g.tasks.len(), cap: self.cap });
         }
-        g.jobs.push_back(j);
+        let n = ts.len();
+        g.tasks.extend(ts);
         drop(g);
-        self.ready.notify_one();
+        if n == 1 {
+            self.ready.notify_one();
+        } else {
+            self.ready.notify_all();
+        }
         Ok(())
     }
 
+    /// Internal continuation push (the next phase of an already-admitted
+    /// sharded job): bypasses both the capacity bound and the closed
+    /// flag, so admitted work always drains to completion — admission
+    /// control happens once, at fan-out.
+    fn push_internal(&self, ts: Vec<Task>) {
+        let mut g = self.inner.lock().unwrap();
+        g.tasks.extend(ts);
+        drop(g);
+        self.ready.notify_all();
+    }
+
     /// Blocking worker pop; `None` once closed and drained.
-    pub fn pop(&self) -> Option<QueuedJob> {
+    pub fn pop(&self) -> Option<Task> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(j) = g.jobs.pop_front() {
-                return Some(j);
+            if let Some(t) = g.tasks.pop_front() {
+                return Some(t);
             }
             if !g.open {
                 return None;
@@ -104,7 +160,210 @@ impl JobQueue {
     }
 
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().jobs.len()
+        self.inner.lock().unwrap().tasks.len()
+    }
+}
+
+/// Phase-synchronized state of one sharded job.
+struct ShardState {
+    /// The phase-start field every shard task of the current phase
+    /// reads (shared immutably via the Arc).
+    src: Arc<Vec<f64>>,
+    /// Per-shard write-back slabs, owned by the run between phases and
+    /// checked out by the executing task.
+    slabs: Vec<Option<Vec<f64>>>,
+    /// Current phase index into [`ShardedRun::phases`].
+    phase: usize,
+    /// Shard tasks of the current phase still outstanding.
+    pending: usize,
+    /// Job-level aggregate (per-shard metrics absorbed as they land).
+    metrics: RunMetrics,
+    /// First shard failure, if any — poisons the remaining tasks of
+    /// the phase into no-ops and the job into an error reply.
+    failed: Option<String>,
+}
+
+/// One admitted job fanned out into shard tasks — the shard executor's
+/// shared state: the phase schedule, the barrier bookkeeping, and the
+/// session the result is written back to.
+pub struct ShardedRun {
+    session: Arc<Mutex<Session>>,
+    job: backend::Job,
+    plan: ShardPlan,
+    phases: Vec<ShardPhase>,
+    reply: mpsc::Sender<Result<RunMetrics, String>>,
+    counters: Arc<ServiceCounters>,
+    started: Instant,
+    state: Mutex<ShardState>,
+}
+
+impl ShardedRun {
+    /// Build the run, taking ownership of the session's field as the
+    /// phase-0 source (the caller has already marked the session busy).
+    /// `job.threads` is ignored on this path: parallelism comes from
+    /// the pool scheduling shard tasks, one thread each.
+    pub fn new(
+        session: Arc<Mutex<Session>>,
+        job: backend::Job,
+        plan: ShardPlan,
+        field: Vec<f64>,
+        reply: mpsc::Sender<Result<RunMetrics, String>>,
+        counters: Arc<ServiceCounters>,
+    ) -> ShardedRun {
+        let phases = backend::shard_phases(&job);
+        let nshards = plan.len();
+        let metrics =
+            RunMetrics { steps: job.steps, points: job.points(), ..Default::default() };
+        ShardedRun {
+            session,
+            job,
+            plan,
+            phases,
+            reply,
+            counters,
+            started: Instant::now(),
+            state: Mutex::new(ShardState {
+                src: Arc::new(field),
+                slabs: (0..nshards).map(|_| None).collect(),
+                phase: 0,
+                pending: nshards,
+                metrics,
+                failed: None,
+            }),
+        }
+    }
+
+    /// Shard count of the fan-out.
+    pub fn shard_count(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Phase count of the schedule.
+    pub fn phase_count(&self) -> usize {
+        self.phases.len()
+    }
+
+    /// The current phase's tasks to enqueue (one per shard).
+    pub fn fan_out(run: &Arc<ShardedRun>) -> Vec<Task> {
+        (0..run.shard_count()).map(|i| Task::Shard(run.clone(), i)).collect()
+    }
+
+    /// Undo a failed admission: hand the field back to the session and
+    /// clear its busy flag (no task has run, the field is untouched).
+    pub fn abort_admission(&self) {
+        let field = {
+            let mut st = self.state.lock().unwrap();
+            take_field(&mut st.src)
+        };
+        let mut g = self.session.lock().unwrap();
+        g.field = field;
+        g.busy = false;
+    }
+
+    /// Execute shard `idx` of the current phase; the completing worker
+    /// of each phase runs the barrier (assemble slabs → next phase or
+    /// finalize).
+    fn run_shard(run: &Arc<ShardedRun>, queue: &JobQueue, idx: usize) {
+        let (src, mut slab, phase_idx, poisoned) = {
+            let mut st = run.state.lock().unwrap();
+            let need = run.plan.shards()[idx].payload();
+            let slab = st.slabs[idx].take().unwrap_or_else(|| vec![0.0; need]);
+            (st.src.clone(), slab, st.phase, st.failed.is_some())
+        };
+        let res = if poisoned {
+            Ok(RunMetrics::default())
+        } else {
+            // A panicking shard must not wedge the barrier (pending
+            // would never reach 0, hanging the client and leaving the
+            // session busy forever) — convert it into a shard failure
+            // like any other error.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                NativeBackend::new().advance_shard(
+                    &run.job,
+                    &run.plan,
+                    idx,
+                    run.phases[phase_idx],
+                    &src,
+                    &mut slab,
+                )
+            }))
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("shard task panicked")))
+            .map_err(|e| format!("{e:#}"))
+        };
+        drop(src); // release our read handle before the barrier reclaims it
+        let mut st = run.state.lock().unwrap();
+        match res {
+            Ok(m) => st.metrics.absorb(&m),
+            Err(e) => {
+                if st.failed.is_none() {
+                    st.failed = Some(e);
+                }
+            }
+        }
+        st.slabs[idx] = Some(slab);
+        st.pending -= 1;
+        if st.pending > 0 {
+            return; // phase still in flight on other workers
+        }
+        // ---- barrier: this worker owns the phase transition ----
+        if let Some(msg) = st.failed.clone() {
+            // Restore the last consistent (phase-start) field so the
+            // session survives with well-defined state.
+            let field = take_field(&mut st.src);
+            drop(st);
+            {
+                let mut g = run.session.lock().unwrap();
+                g.field = field;
+                g.busy = false;
+            }
+            ServiceCounters::bump(&run.counters.jobs_failed);
+            let _ = run.reply.send(Err(msg));
+            return;
+        }
+        let t0 = Instant::now();
+        let plane = run.plan.plane();
+        let mut field = take_field(&mut st.src);
+        for (shard, slab) in run.plan.shards().iter().zip(&st.slabs) {
+            let (a, b) = shard.rows();
+            field[a * plane..b * plane]
+                .copy_from_slice(slab.as_ref().expect("slab returned before barrier"));
+        }
+        st.metrics.add_scatter(t0.elapsed());
+        if st.phase + 1 < run.phases.len() {
+            st.src = Arc::new(field);
+            st.phase += 1;
+            st.pending = run.shard_count();
+            drop(st);
+            queue.push_internal(ShardedRun::fan_out(run));
+            return;
+        }
+        // ---- final phase: write back, account, reply ----
+        st.metrics.wall_ns = run.started.elapsed().as_nanos() as u64;
+        let metrics = st.metrics.clone();
+        drop(st);
+        {
+            let mut g = run.session.lock().unwrap();
+            g.field = field;
+            g.busy = false;
+            g.stats.record_run(&metrics);
+        }
+        run.counters.record_run(&metrics);
+        let _ = run.reply.send(Ok(metrics));
+    }
+}
+
+/// Swap the shared source out of the state, reclaiming the buffer
+/// without a copy when (as at every barrier) no task still holds it.
+fn take_field(src: &mut Arc<Vec<f64>>) -> Vec<f64> {
+    let n = src.len();
+    match Arc::try_unwrap(std::mem::replace(src, Arc::new(Vec::new()))) {
+        Ok(v) => v,
+        Err(shared) => {
+            // Defensive: a straggling handle forces one copy.
+            let mut v = vec![0.0; n];
+            v.copy_from_slice(&shared);
+            v
+        }
     }
 }
 
@@ -126,14 +385,23 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("stencil-worker-{i}"))
                     .spawn(move || {
-                        while let Some(q) = queue.pop() {
-                            let res = execute(&q);
-                            match &res {
-                                Ok(m) => counters.record_run(m),
-                                Err(_) => ServiceCounters::bump(&counters.jobs_failed),
+                        while let Some(task) = queue.pop() {
+                            match task {
+                                Task::Job(q) => {
+                                    let res = execute(&q);
+                                    match &res {
+                                        Ok(m) => counters.record_run(m),
+                                        Err(_) => {
+                                            ServiceCounters::bump(&counters.jobs_failed)
+                                        }
+                                    }
+                                    // A vanished receiver (client gone) is fine.
+                                    let _ = q.reply.send(res);
+                                }
+                                Task::Shard(run, idx) => {
+                                    ShardedRun::run_shard(&run, &queue, idx)
+                                }
                             }
-                            // A vanished receiver (client gone) is fine.
-                            let _ = q.reply.send(res);
                         }
                     })
                     .expect("spawn service worker")
@@ -150,7 +418,7 @@ impl WorkerPool {
     }
 }
 
-/// Run one job against its session's resident field.
+/// Run one monolithic job against its session's resident field.
 fn execute(q: &QueuedJob) -> Result<RunMetrics, String> {
     // `auto` can only ever resolve to native when PJRT is unreachable —
     // skip backend::create's per-job manifest probe in that case.
@@ -161,6 +429,9 @@ fn execute(q: &QueuedJob) -> Result<RunMetrics, String> {
     let mut be = backend::create(kind, &q.artifacts_dir, &q.job, None)
         .map_err(|e| format!("{e:#}"))?;
     let mut s = q.session.lock().unwrap();
+    if s.busy {
+        return Err("session busy: a sharded advance is in flight".to_string());
+    }
     let m = be.advance(&q.job, &mut s.field).map_err(|e| format!("{e:#}"))?;
     s.stats.record_run(&m);
     Ok(m)
@@ -170,9 +441,11 @@ fn execute(q: &QueuedJob) -> Result<RunMetrics, String> {
 mod tests {
     use super::*;
     use crate::backend::BackendKind;
+    use crate::coordinator::grid::ShardSpec;
     use crate::model::perf::Dtype;
     use crate::model::stencil::{Shape, StencilPattern};
     use crate::service::protocol::{FieldInit, JobSpec};
+    use crate::sim::golden;
 
     fn sess(domain: Vec<usize>) -> Arc<Mutex<Session>> {
         let spec = JobSpec {
@@ -183,6 +456,7 @@ mod tests {
             t: None,
             backend: BackendKind::Native,
             temporal: backend::TemporalMode::Sweep,
+            shards: ShardSpec::Auto,
             threads: 1,
             weights: None,
         };
@@ -213,19 +487,75 @@ mod tests {
         }
     }
 
+    fn sharded_run(
+        session: &Arc<Mutex<Session>>,
+        steps: usize,
+        t: usize,
+        temporal: backend::TemporalMode,
+        shards: usize,
+        counters: Arc<ServiceCounters>,
+        reply: mpsc::Sender<Result<RunMetrics, String>>,
+    ) -> Arc<ShardedRun> {
+        let (job, plan, field) = {
+            let mut g = session.lock().unwrap();
+            let job = backend::Job {
+                pattern: g.pattern,
+                dtype: g.dtype,
+                domain: g.domain.clone(),
+                steps,
+                t,
+                temporal,
+                weights: g.weights.clone(),
+                threads: 1,
+            };
+            let plan = ShardPlan::dim0(&g.domain, shards, g.pattern.r, t).unwrap();
+            g.busy = true;
+            let field = std::mem::take(&mut g.field);
+            (job, plan, field)
+        };
+        Arc::new(ShardedRun::new(session.clone(), job, plan, field, reply, counters))
+    }
+
     #[test]
-    fn bounded_push_sheds_and_close_refuses() {
+    fn bounded_push_sheds_with_depth_and_close_refuses() {
         let queue = JobQueue::new(1);
         let s = sess(vec![6, 6]);
         let (tx, _rx) = mpsc::channel();
-        assert!(queue.push(qjob(&s, tx.clone())).is_ok());
-        assert_eq!(queue.push(qjob(&s, tx.clone())).unwrap_err(), PushError::Full);
+        assert!(queue.push(Task::Job(qjob(&s, tx.clone()))).is_ok());
+        assert_eq!(
+            queue.push(Task::Job(qjob(&s, tx.clone()))).unwrap_err(),
+            PushError::Full { depth: 1, cap: 1 }
+        );
         assert_eq!(queue.depth(), 1);
         queue.close();
-        assert_eq!(queue.push(qjob(&s, tx)).unwrap_err(), PushError::Closed);
+        assert_eq!(queue.push(Task::Job(qjob(&s, tx))).unwrap_err(), PushError::Closed);
         // closed queue still drains, then pops None
         assert!(queue.pop().is_some());
         assert!(queue.pop().is_none());
+    }
+
+    #[test]
+    fn batch_admission_is_all_or_nothing() {
+        let queue = JobQueue::new(3);
+        let s = sess(vec![8, 8]);
+        let counters = Arc::new(ServiceCounters::default());
+        let (tx, _rx) = mpsc::channel();
+        let run = sharded_run(&s, 2, 1, backend::TemporalMode::Sweep, 2, counters, tx.clone());
+        assert!(queue.push_batch(ShardedRun::fan_out(&run)).is_ok());
+        assert_eq!(queue.depth(), 2);
+        // a 2-task batch no longer fits a 3-cap queue holding 2
+        let s2 = sess(vec![8, 8]);
+        let c2 = Arc::new(ServiceCounters::default());
+        let run2 = sharded_run(&s2, 2, 1, backend::TemporalMode::Sweep, 2, c2, tx);
+        assert_eq!(
+            queue.push_batch(ShardedRun::fan_out(&run2)).unwrap_err(),
+            PushError::Full { depth: 2, cap: 3 }
+        );
+        assert_eq!(queue.depth(), 2, "refused batch admits nothing");
+        run2.abort_admission();
+        let g = run2.session.lock().unwrap();
+        assert!(!g.busy);
+        assert_eq!(g.field.len(), 64, "field restored on refusal");
     }
 
     #[test]
@@ -235,8 +565,8 @@ mod tests {
         let pool = WorkerPool::start(2, queue.clone(), counters.clone());
         let s = sess(vec![8, 8]);
         let (tx, rx) = mpsc::channel();
-        queue.push(qjob(&s, tx.clone())).unwrap();
-        queue.push(qjob(&s, tx)).unwrap();
+        queue.push(Task::Job(qjob(&s, tx.clone()))).unwrap();
+        queue.push(Task::Job(qjob(&s, tx))).unwrap();
         let m1 = rx.recv().unwrap().unwrap();
         let m2 = rx.recv().unwrap().unwrap();
         assert_eq!(m1.steps, 2);
@@ -252,6 +582,90 @@ mod tests {
     }
 
     #[test]
+    fn sharded_fanout_runs_on_the_pool_and_matches_golden() {
+        // 3 shards × (2 fused t=2 launches + 1 base step) across 2
+        // workers: the result must be bit-identical to the golden
+        // fused chain, metrics aggregated job-level, session restored.
+        let queue = Arc::new(JobQueue::new(16));
+        let counters = Arc::new(ServiceCounters::default());
+        let pool = WorkerPool::start(2, queue.clone(), counters.clone());
+        let s = sess(vec![10, 7]);
+        let init = s.lock().unwrap().field.clone();
+        let (tx, rx) = mpsc::channel();
+        let run =
+            sharded_run(&s, 5, 2, backend::TemporalMode::Sweep, 3, counters.clone(), tx);
+        assert_eq!(run.shard_count(), 3);
+        assert_eq!(run.phase_count(), 3);
+        queue.push_batch(ShardedRun::fan_out(&run)).unwrap();
+        let m = rx.recv().unwrap().unwrap();
+        assert_eq!(m.steps, 5);
+        assert_eq!(m.points, 70);
+        // 3 phases × 3 shards, one launch each
+        assert_eq!(m.launches, 9);
+        assert!(m.bytes_moved > 0 && m.flops > 0);
+        queue.close();
+        pool.join();
+        // golden replay: 2 fused t=2 launches + 1 base step
+        let p = StencilPattern::new(Shape::Star, 2, 1).unwrap();
+        let w = golden::Weights::new(2, 3, p.uniform_weights());
+        let mut want = golden::Field::from_vec(&[10, 7], init);
+        for _ in 0..2 {
+            want = golden::apply_fused(&want, &w, 2);
+        }
+        want = golden::apply_once(&want, &w);
+        let g = s.lock().unwrap();
+        assert!(!g.busy);
+        assert_eq!(g.stats.jobs, 1);
+        assert_eq!(g.stats.steps, 5);
+        for (i, (a, b)) in g.field.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "point {i}");
+        }
+        assert_eq!(counters.snapshot().jobs_completed, 1);
+    }
+
+    #[test]
+    fn sharded_blocked_run_is_sequential_semantics_even_on_one_worker() {
+        // One worker must still drain all phases (event-driven barrier,
+        // no cross-task blocking): blocked t=3 over 7 steps, 4 shards.
+        let queue = Arc::new(JobQueue::new(8));
+        let counters = Arc::new(ServiceCounters::default());
+        let pool = WorkerPool::start(1, queue.clone(), counters.clone());
+        let s = sess(vec![9, 6]);
+        let init = s.lock().unwrap().field.clone();
+        let (tx, rx) = mpsc::channel();
+        let run =
+            sharded_run(&s, 7, 3, backend::TemporalMode::Blocked, 4, counters, tx);
+        queue.push_batch(ShardedRun::fan_out(&run)).unwrap();
+        let m = rx.recv().unwrap().unwrap();
+        assert_eq!(m.steps, 7);
+        queue.close();
+        pool.join();
+        let p = StencilPattern::new(Shape::Star, 2, 1).unwrap();
+        let w = golden::Weights::new(2, 3, p.uniform_weights());
+        let want = golden::apply_steps(&golden::Field::from_vec(&[9, 6], init), &w, 7);
+        let g = s.lock().unwrap();
+        for (i, (a, b)) in g.field.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "point {i}");
+        }
+    }
+
+    #[test]
+    fn monolithic_job_on_busy_session_reports_cleanly() {
+        let s = sess(vec![8, 8]);
+        s.lock().unwrap().busy = true;
+        let (tx, rx) = mpsc::channel();
+        let queue = Arc::new(JobQueue::new(4));
+        let counters = Arc::new(ServiceCounters::default());
+        let pool = WorkerPool::start(1, queue.clone(), counters.clone());
+        queue.push(Task::Job(qjob(&s, tx))).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("busy"), "{err}");
+        queue.close();
+        pool.join();
+        assert_eq!(counters.snapshot().jobs_failed, 1);
+    }
+
+    #[test]
     fn failed_jobs_report_the_reason() {
         let queue = Arc::new(JobQueue::new(8));
         let counters = Arc::new(ServiceCounters::default());
@@ -260,12 +674,50 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let mut bad = qjob(&s, tx);
         bad.job.weights = vec![0.0; 3]; // hull-size mismatch
-        queue.push(bad).unwrap();
+        queue.push(Task::Job(bad)).unwrap();
         let err = rx.recv().unwrap().unwrap_err();
         assert!(err.contains("weights"), "{err}");
         queue.close();
         pool.join();
         assert_eq!(counters.snapshot().jobs_failed, 1);
         assert_eq!(s.lock().unwrap().stats.jobs, 0);
+    }
+
+    #[test]
+    fn failed_shard_poisons_the_run_and_restores_the_session() {
+        let queue = Arc::new(JobQueue::new(8));
+        let counters = Arc::new(ServiceCounters::default());
+        let pool = WorkerPool::start(2, queue.clone(), counters.clone());
+        let s = sess(vec![8, 8]);
+        let init = s.lock().unwrap().field.clone();
+        let (tx, rx) = mpsc::channel();
+        let run = sharded_run(&s, 4, 2, backend::TemporalMode::Blocked, 2, counters.clone(), tx);
+        // sabotage: wrong weights hull → every advance_shard errors
+        let bad = Arc::new(ShardedRun::new(
+            run.session.clone(),
+            {
+                let mut j = run.job.clone();
+                j.weights = vec![0.0; 3];
+                j
+            },
+            run.plan.clone(),
+            {
+                // move the field from the good run into the bad one
+                let mut st = run.state.lock().unwrap();
+                take_field(&mut st.src)
+            },
+            run.reply.clone(),
+            counters.clone(),
+        ));
+        queue.push_batch(ShardedRun::fan_out(&bad)).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("weights"), "{err}");
+        queue.close();
+        pool.join();
+        let g = s.lock().unwrap();
+        assert!(!g.busy, "session must be released");
+        assert_eq!(g.field, init, "phase-start field restored");
+        assert_eq!(counters.snapshot().jobs_failed, 1);
+        assert_eq!(g.stats.jobs, 0);
     }
 }

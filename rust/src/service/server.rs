@@ -24,7 +24,8 @@ use std::sync::{mpsc, Arc};
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend;
-use crate::coordinator::metrics::ServiceCounters;
+use crate::coordinator::grid::{ShardPlan, ShardSpec};
+use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
 use crate::coordinator::planner::{self, Plan};
 use crate::hardware::Gpu;
 use crate::report;
@@ -34,7 +35,7 @@ use crate::util::json::Json;
 use super::admission::{self, Decision};
 use super::plan_cache::PlanCache;
 use super::protocol::{self, JobSpec, Obj, Request};
-use super::queue::{JobQueue, PushError, QueuedJob, WorkerPool};
+use super::queue::{JobQueue, PushError, QueuedJob, ShardedRun, Task, WorkerPool};
 use super::session::{Session, SessionStore};
 
 /// Daemon configuration (`stencilctl serve` flags).
@@ -54,6 +55,10 @@ pub struct ServeOpts {
     /// Default temporal strategy for sessions that leave theirs at
     /// `auto` (`--temporal`); `Auto` defers to the planner per job.
     pub temporal: backend::TemporalMode,
+    /// Default shard spec for sessions that leave theirs at `auto`
+    /// (`--shards`); `Auto` defers to the planner's redundancy-adjusted
+    /// gain per job.
+    pub shards: ShardSpec,
     pub artifacts_dir: PathBuf,
     /// The GPU model the planner/admission predictions assume.
     pub gpu: Gpu,
@@ -68,6 +73,7 @@ impl Default for ServeOpts {
             budget_ms: None,
             plan_cache_cap: 128,
             temporal: backend::TemporalMode::Auto,
+            shards: ShardSpec::Auto,
             artifacts_dir: crate::runtime::manifest::default_dir(),
             gpu: Gpu::a100(),
         }
@@ -251,22 +257,38 @@ pub fn handle_line(state: &ServiceState, line: &str) -> (String, bool) {
 }
 
 /// Plan through the shared cache, bumping the hit/miss counters.
+/// The shard axis makes planning domain- and parallelism-aware: the
+/// serve pool's worker count is the shard lane budget, the session's
+/// thread count the monolithic baseline.
 fn plan_for(
     state: &ServiceState,
     spec: &JobSpec,
     steps: usize,
     t: Option<usize>,
 ) -> Result<(Arc<Plan>, bool)> {
+    // A fan-out is admitted as one atomic batch, so no candidate may
+    // propose more shards than --max-queue can hold: clamp the lane
+    // budget (bounds Auto enumeration) and any pinned count BEFORE
+    // planning, so admission prices exactly the fan-out that will run.
+    let queue_cap = state.opts.max_queue.max(1);
+    let shards = match spec.shards {
+        ShardSpec::Fixed(n) => ShardSpec::Fixed(n.min(queue_cap).max(1)),
+        ShardSpec::Auto => ShardSpec::Auto,
+    };
     let req = planner::Request {
         pattern: spec.pattern,
         dtype: spec.dtype,
+        domain: spec.domain.clone(),
         steps,
         gpu: state.opts.gpu.clone(),
         backend: spec.backend,
         max_t: t.unwrap_or(8).max(1),
         temporal: spec.temporal,
+        shards,
+        lanes: state.opts.workers.max(1).min(queue_cap),
+        threads: spec.threads.max(1),
     };
-    let (plan, hit) = state.plans.plan(&req, &spec.domain, state.manifest.as_ref())?;
+    let (plan, hit) = state.plans.plan(&req, state.manifest.as_ref())?;
     ServiceCounters::bump(if hit {
         &state.counters.plan_hits
     } else {
@@ -295,6 +317,7 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
                 .str_("unit", c.engine.unit.as_str())
                 .int("t", c.t as u64)
                 .str_("temporal", c.temporal.as_str())
+                .int("shards", c.shards as u64)
                 .str_("target", c.target.as_str())
                 .num("gstencils", c.prediction.gstencils())
                 .bool_("sweet_spot", c.in_sweet_spot)
@@ -309,10 +332,13 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
         }
         Request::CreateSession { session, spec, init } => {
             let mut s = Session::create(&session, &spec, &init)?;
-            // The daemon-level --temporal default fills in for sessions
-            // that did not pin a strategy themselves.
+            // The daemon-level --temporal/--shards defaults fill in for
+            // sessions that did not pin a strategy themselves.
             if s.temporal == backend::TemporalMode::Auto {
                 s.temporal = state.opts.temporal;
+            }
+            if s.shards == ShardSpec::Auto {
+                s.shards = state.opts.shards;
             }
             let points = s.points();
             let label = s.pattern.label();
@@ -327,8 +353,8 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
                 true,
             ))
         }
-        Request::Advance { session, steps, t, temporal } => {
-            advance(state, &session, steps, t, temporal)
+        Request::Advance { session, steps, t, temporal, shards } => {
+            advance(state, &session, steps, t, temporal, shards)
         }
         Request::Fetch { session, hex } => {
             let sess = state
@@ -336,6 +362,18 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
                 .get(&session)
                 .ok_or_else(|| anyhow!("unknown session {session:?}"))?;
             let g = sess.lock().unwrap();
+            if g.busy {
+                // The field is checked out into the shard executor —
+                // refuse rather than serving the empty placeholder.
+                return Ok((
+                    protocol::err(
+                        "fetch",
+                        "session_busy",
+                        "a sharded advance is in flight on this session; retry",
+                    ),
+                    true,
+                ));
+            }
             Ok((
                 protocol::ok("fetch")
                     .str_("session", &session)
@@ -346,6 +384,23 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
             ))
         }
         Request::CloseSession { session } => {
+            if let Some(sess) = state.sessions.get(&session) {
+                // Deleting a session mid-fan-out would orphan the run
+                // (its write-back and stats would land on an
+                // unreachable session, and the name could be reused
+                // while the old shards still compute) — refuse like
+                // fetch does.
+                if sess.lock().unwrap().busy {
+                    return Ok((
+                        protocol::err(
+                            "close_session",
+                            "session_busy",
+                            "a sharded advance is in flight on this session; retry",
+                        ),
+                        true,
+                    ));
+                }
+            }
             if !state.sessions.remove(&session) {
                 bail!("unknown session {session:?}");
             }
@@ -355,14 +410,17 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
     }
 }
 
-/// The full `advance` path: plan → admission → queue → await metrics →
-/// model-feedback (predicted vs. achieved intensity).
+/// The full `advance` path: plan → admission → fan out (shard tasks
+/// when the planner chose >1 shard, one queued job otherwise) → await
+/// metrics → model-feedback (predicted vs. achieved intensity).
+#[allow(clippy::too_many_arguments)]
 fn advance(
     state: &ServiceState,
     session: &str,
     steps: usize,
     t: Option<usize>,
     temporal: Option<backend::TemporalMode>,
+    shards_override: Option<ShardSpec>,
 ) -> Result<(Json, bool)> {
     let sess = state
         .sessions
@@ -382,6 +440,7 @@ fn advance(
                 backend: g.backend,
                 // per-advance override > session default
                 temporal: temporal.unwrap_or(g.temporal),
+                shards: shards_override.unwrap_or(g.shards),
                 threads: g.threads,
                 weights: Some(g.weights.clone()),
             },
@@ -390,37 +449,38 @@ fn advance(
     };
     let (plan, hit) = plan_for(state, &spec, steps, t)?;
     let decision = admission::decide(&plan, t, points, steps, state.opts.budget_ms);
-    let (job_t, job_temporal, downgraded, predicted_ms, engine, target) = match decision {
-        Decision::Accept { t, temporal, predicted_ms, engine, target } => {
-            (t, temporal, false, predicted_ms, engine, target)
-        }
-        Decision::Downgrade { t, temporal, predicted_ms, engine, target, .. } => {
-            (t, temporal, true, predicted_ms, engine, target)
-        }
-        Decision::Reject(r) => {
-            ServiceCounters::bump(&state.counters.jobs_rejected);
-            return Ok((
-                Obj::new()
-                    .bool_("ok", false)
-                    .str_("op", "advance")
-                    .str_("error", "admission")
-                    .str_(
-                        "message",
-                        &format!(
-                            "predicted {:.3} ms exceeds budget {:.3} ms ({}, {}, {})",
-                            r.predicted_ms, r.budget_ms, r.engine, r.bound, r.classification
-                        ),
-                    )
-                    .num("predicted_ms", r.predicted_ms)
-                    .num("budget_ms", r.budget_ms)
-                    .str_("engine", &r.engine)
-                    .str_("bound", r.bound)
-                    .str_("classification", &r.classification)
-                    .done(),
-                true,
-            ));
-        }
-    };
+    let (job_t, job_temporal, job_shards, downgraded, predicted_ms, engine, target) =
+        match decision {
+            Decision::Accept { t, temporal, shards, predicted_ms, engine, target } => {
+                (t, temporal, shards, false, predicted_ms, engine, target)
+            }
+            Decision::Downgrade { t, temporal, shards, predicted_ms, engine, target, .. } => {
+                (t, temporal, shards, true, predicted_ms, engine, target)
+            }
+            Decision::Reject(r) => {
+                ServiceCounters::bump(&state.counters.jobs_rejected);
+                return Ok((
+                    Obj::new()
+                        .bool_("ok", false)
+                        .str_("op", "advance")
+                        .str_("error", "admission")
+                        .str_(
+                            "message",
+                            &format!(
+                                "predicted {:.3} ms exceeds budget {:.3} ms ({}, {}, {})",
+                                r.predicted_ms, r.budget_ms, r.engine, r.bound, r.classification
+                            ),
+                        )
+                        .num("predicted_ms", r.predicted_ms)
+                        .num("budget_ms", r.budget_ms)
+                        .str_("engine", &r.engine)
+                        .str_("bound", r.bound)
+                        .str_("classification", &r.classification)
+                        .done(),
+                    true,
+                ));
+            }
+        };
     let job = backend::Job {
         pattern: spec.pattern,
         dtype: spec.dtype,
@@ -432,25 +492,61 @@ fn advance(
         threads: spec.threads,
     };
     let (tx, rx) = mpsc::channel();
-    let queued = QueuedJob {
-        session: sess,
-        job,
-        kind: spec.backend,
-        // PJRT is only reachable with a manifest (loaded once at
-        // startup) and a pjrt-enabled binary; workers skip the per-job
-        // artifact-dir probe entirely when it cannot succeed.
-        pjrt_possible: state.manifest.is_some() && crate::runtime::Runtime::available(),
-        artifacts_dir: state.opts.artifacts_dir.clone(),
-        reply: tx,
-    };
-    if let Err(e) = state.queue.push(queued) {
-        ServiceCounters::bump(&state.counters.queue_rejected);
-        let (code, msg) = match e {
-            PushError::Full => ("queue_full", "job queue at capacity; retry later"),
-            PushError::Closed => ("shutting_down", "service is shutting down"),
+    // plan_for clamped the enumeration to --max-queue, so the fan-out
+    // batch always fits an empty queue (push_batch remains the load
+    // backstop under contention).
+    let sharded = job_shards > 1 && steps > 0;
+    let fanout = if sharded {
+        // ---- shard plane: the job fans out into shard tasks ----
+        let shard_plan = ShardPlan::dim0(&spec.domain, job_shards, spec.pattern.r, job_t)?;
+        let field = {
+            let mut g = sess.lock().unwrap();
+            if g.busy {
+                return Ok((
+                    protocol::err(
+                        "advance",
+                        "session_busy",
+                        "a sharded advance is already in flight on this session",
+                    ),
+                    true,
+                ));
+            }
+            g.busy = true;
+            std::mem::take(&mut g.field)
         };
-        return Ok((protocol::err("advance", code, msg), true));
-    }
+        let run = Arc::new(ShardedRun::new(
+            sess.clone(),
+            job,
+            shard_plan,
+            field,
+            tx,
+            state.counters.clone(),
+        ));
+        let n = run.shard_count();
+        if let Err(e) = state.queue.push_batch(ShardedRun::fan_out(&run)) {
+            run.abort_admission();
+            return Ok((queue_refusal(state, e), true));
+        }
+        state.counters.record_shard_fanout(n);
+        n
+    } else {
+        let queued = QueuedJob {
+            session: sess,
+            job,
+            kind: spec.backend,
+            // PJRT is only reachable with a manifest (loaded once at
+            // startup) and a pjrt-enabled binary; workers skip the
+            // per-job artifact-dir probe entirely when it cannot
+            // succeed.
+            pjrt_possible: state.manifest.is_some() && crate::runtime::Runtime::available(),
+            artifacts_dir: state.opts.artifacts_dir.clone(),
+            reply: tx,
+        };
+        if let Err(e) = state.queue.push(Task::Job(queued)) {
+            return Ok((queue_refusal(state, e), true));
+        }
+        1
+    };
     // Counted accepted only once actually admitted to the queue.
     ServiceCounters::bump(&state.counters.jobs_accepted);
     if downgraded {
@@ -465,6 +561,7 @@ fn advance(
         .int("steps", metrics.steps as u64)
         .int("t", job_t as u64)
         .str_("temporal", job_temporal.as_str())
+        .int("shards", fanout as u64)
         .str_("engine", &engine)
         .str_("target", target)
         .str_("cache", if hit { "hit" } else { "miss" })
@@ -472,27 +569,70 @@ fn advance(
         .num("predicted_ms", predicted_ms)
         .num("wall_ms", metrics.wall_ns as f64 / 1e6)
         .num("mstencils", metrics.throughput() / 1e6);
-    // The model↔measurement feedback path: compare the achieved
-    // intensity against the model's prediction for the executed
-    // temporal strategy, report it to the client, and fold it into the
-    // service-wide mean model error.  A blocked run the executor had
-    // to degrade to per-step sweeps (1-D / untileable domain) realizes
-    // Eq. 8 at depth 1, so it is compared against THAT prediction
-    // rather than polluting the mean with a false α-sized error.
-    if metrics.bytes_moved > 0 {
-        let blocked = job_temporal == backend::TemporalMode::Blocked;
-        let eff_t = if blocked && metrics.degenerate_blocks > 0 { 1 } else { job_t };
-        let w = crate::model::perf::Workload::new(spec.pattern, eff_t, spec.dtype);
-        let rep = crate::model::calib::report(&w, steps, blocked, metrics.achieved_intensity());
-        state.counters.record_intensity_error(rep.rel_error);
-        resp = resp
-            .num("achieved_intensity", rep.measured)
-            .num("predicted_intensity", rep.predicted)
-            .num("model_err", rep.rel_error)
-            .bool_("within_model_region", rep.within_region)
-            .bool_("blocking_degraded", metrics.degenerate_blocks > 0);
-    }
+    resp = intensity_feedback(state, resp, &spec, &metrics, job_t, job_temporal, fanout, steps);
     Ok((resp.done(), true))
+}
+
+/// Render a queue push refusal, counting it.  `Full` carries the
+/// observed depth/capacity so shed clients can see why.
+fn queue_refusal(state: &ServiceState, e: PushError) -> Json {
+    ServiceCounters::bump(&state.counters.queue_rejected);
+    match e {
+        PushError::Full { depth, cap } => Obj::new()
+            .bool_("ok", false)
+            .str_("op", "advance")
+            .str_("error", "queue_full")
+            .str_(
+                "message",
+                &format!("job queue at capacity ({depth}/{cap} tasks); retry later"),
+            )
+            .int("queue_depth", depth as u64)
+            .int("queue_cap", cap as u64)
+            .done(),
+        PushError::Closed => protocol::err("advance", "shutting_down", "service is shutting down"),
+    }
+}
+
+/// The model↔measurement feedback path: compare the achieved intensity
+/// against the model's prediction for the executed temporal strategy
+/// AND shard fan-out, report it to the client, and fold it into the
+/// service-wide mean model error.  A blocked run the executor had to
+/// degrade to per-step sweeps (1-D / untileable domain) realizes Eq. 8
+/// at depth 1, so it is compared against THAT prediction rather than
+/// polluting the mean with a false α-sized error; sharded runs compare
+/// against the halo-redundancy-adjusted prediction
+/// (`model::shard::predicted_job_intensity`).
+#[allow(clippy::too_many_arguments)]
+fn intensity_feedback(
+    state: &ServiceState,
+    resp: Obj,
+    spec: &JobSpec,
+    metrics: &RunMetrics,
+    job_t: usize,
+    job_temporal: backend::TemporalMode,
+    shards: usize,
+    steps: usize,
+) -> Obj {
+    if metrics.bytes_moved == 0 {
+        return resp;
+    }
+    let blocked = job_temporal == backend::TemporalMode::Blocked;
+    let eff_t = if blocked && metrics.degenerate_blocks > 0 { 1 } else { job_t };
+    let w = crate::model::perf::Workload::new(spec.pattern, eff_t, spec.dtype);
+    let rep = crate::model::calib::report_sharded(
+        &w,
+        steps,
+        blocked,
+        spec.domain[0],
+        shards,
+        metrics.achieved_intensity(),
+    );
+    state.counters.record_intensity_error(rep.rel_error);
+    resp.num("achieved_intensity", rep.measured)
+        .num("predicted_intensity", rep.predicted)
+        .num("model_err", rep.rel_error)
+        .bool_("within_model_region", rep.within_region)
+        .bool_("blocking_degraded", metrics.degenerate_blocks > 0)
 }
 
 /// The `stats` response: raw counters for machines, a rendered table
@@ -500,7 +640,8 @@ fn advance(
 fn stats_response(state: &ServiceState) -> Json {
     let snap = state.counters.snapshot();
     let rows = state.sessions.rows();
-    let render = report::service_stats(&snap, &rows);
+    let cache = state.plans.stats();
+    let render = report::service_stats(&snap, &cache, &rows);
     let sessions = Json::Arr(
         rows.iter()
             .map(|r| {
@@ -526,10 +667,13 @@ fn stats_response(state: &ServiceState) -> Json {
         .int("queue_rejected", snap.queue_rejected)
         .int("jobs_completed", snap.jobs_completed)
         .int("jobs_failed", snap.jobs_failed)
+        .int("jobs_sharded", snap.jobs_sharded)
+        .int("shard_tasks", snap.shard_tasks)
         .int("plan_hits", snap.plan_hits)
         .int("plan_misses", snap.plan_misses)
         .num("plan_hit_rate", snap.plan_hit_rate())
-        .int("plan_cache_size", state.plans.len() as u64)
+        .int("plan_cache_size", cache.len as u64)
+        .int("plan_cache_evictions", cache.evictions)
         .int("queue_depth", state.queue_depth() as u64)
         .int("sessions", rows.len() as u64)
         .int("steps_total", snap.steps_total)
@@ -682,6 +826,53 @@ mod tests {
         let st = req(&state, r#"{"op":"stats"}"#);
         assert!(st.get("model_samples").unwrap().as_i64().unwrap() >= 1);
         assert!(st.get("model_error").unwrap().as_f64().unwrap() < 0.25);
+    }
+
+    #[test]
+    fn sharded_advance_fans_out_and_stays_bit_identical() {
+        use crate::sim::golden;
+        // threads=1 session against a 2-worker pool: the redundancy-
+        // adjusted gain picks a 2-shard fan-out (sweep κ=1, 2 lanes vs
+        // a 1-thread monolith), and the assembled result must stay
+        // bit-identical to the golden fused chain.
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"sh","shape":"box","d":2,"r":1,
+                "dtype":"double","domain":[24,24],"backend":"native","temporal":"sweep","threads":1}"#,
+        ));
+        let a = req(&state, r#"{"op":"advance","session":"sh","steps":4,"t":2}"#);
+        assert_ok(&a);
+        assert_eq!(a.get("shards").unwrap().as_usize(), Some(2), "{a}");
+        assert_eq!(a.get("temporal").unwrap().as_str(), Some("sweep"));
+        // the shard-aware prediction sits below the monolithic α·t·K/D
+        // (halo re-reads) and the measured value matches it
+        assert_eq!(a.get("within_model_region").unwrap().as_bool(), Some(true));
+        let f = req(&state, r#"{"op":"fetch","session":"sh","encoding":"hex"}"#);
+        let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+        let p = crate::model::stencil::StencilPattern::new(
+            crate::model::stencil::Shape::Box,
+            2,
+            1,
+        )
+        .unwrap();
+        let w = golden::Weights::new(2, 3, p.uniform_weights());
+        let mut want = golden::Field::from_vec(&[24, 24], golden::gaussian(&[24, 24]));
+        for _ in 0..2 {
+            want = golden::apply_fused(&want, &w, 2);
+        }
+        for (i, (a, b)) in got.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "point {i}");
+        }
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert!(st.get("jobs_sharded").unwrap().as_i64().unwrap() >= 1);
+        assert!(st.get("shard_tasks").unwrap().as_i64().unwrap() >= 2);
+        assert_eq!(st.get("jobs_completed").unwrap().as_usize(), Some(1));
+        // pinning shards:1 forces the monolithic path on the same session
+        let a1 = req(&state, r#"{"op":"advance","session":"sh","steps":2,"t":1,"shards":1}"#);
+        assert_ok(&a1);
+        assert_eq!(a1.get("shards").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::backend::{BackendKind, TemporalMode};
+use crate::coordinator::grid::ShardSpec;
 use crate::coordinator::metrics::{SessionRow, SessionStats};
 use crate::model::perf::Dtype;
 use crate::model::stencil::StencilPattern;
@@ -31,11 +32,17 @@ pub struct Session {
     /// Session-default temporal strategy (advance requests may
     /// override per call).
     pub temporal: TemporalMode,
+    /// Session-default shard fan-out (advance requests may override).
+    pub shards: ShardSpec,
     pub threads: usize,
     /// Base stencil weights over the (2r+1)^d hull.
     pub weights: Vec<f64>,
     /// The resident field (row-major f64 host representation).
     pub field: Vec<f64>,
+    /// A sharded advance is in flight: the field has been checked out
+    /// into the shard executor, so concurrent jobs must be refused
+    /// instead of seeing an empty buffer.
+    pub busy: bool,
     pub stats: SessionStats,
 }
 
@@ -72,9 +79,11 @@ impl Session {
             domain: spec.domain.clone(),
             backend: spec.backend,
             temporal: spec.temporal,
+            shards: spec.shards,
             threads: spec.threads,
             weights,
             field,
+            busy: false,
             stats: SessionStats::default(),
         })
     }
@@ -160,6 +169,7 @@ mod tests {
             t: None,
             backend: BackendKind::Native,
             temporal: TemporalMode::Auto,
+            shards: ShardSpec::Auto,
             threads: 1,
             weights: None,
         }

@@ -4,10 +4,14 @@
 //! [`Bench`] and calls [`Bench::run`]: warmup, then timed iterations until
 //! a wall-clock budget or max-iteration cap, reporting mean/p50/p95 and
 //! derived throughput.  Output is stable plain text so EXPERIMENTS.md can
-//! quote it directly.
+//! quote it directly, plus machine-readable `BENCH_*.json` summaries
+//! ([`write_bench_json`] / [`Bench::write_json`]) so the perf trajectory
+//! can be tracked across PRs without scraping logs.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One benchmark sample set.
@@ -27,6 +31,24 @@ impl Measurement {
     /// items/second derived from mean latency.
     pub fn throughput(&self) -> Option<f64> {
         self.items_per_iter.map(|n| n / (self.mean_ns * 1e-9))
+    }
+
+    /// Machine-readable form for `BENCH_*.json` summaries.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("iters".to_string(), Json::Num(self.iters as f64));
+        o.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        o.insert("p50_ns".to_string(), Json::Num(self.p50_ns));
+        o.insert("p95_ns".to_string(), Json::Num(self.p95_ns));
+        o.insert("stddev_ns".to_string(), Json::Num(self.stddev_ns));
+        if let Some(n) = self.items_per_iter {
+            o.insert("items_per_iter".to_string(), Json::Num(n));
+        }
+        if let Some(tp) = self.throughput() {
+            o.insert("items_per_sec".to_string(), Json::Num(tp));
+        }
+        Json::Obj(o)
     }
 
     pub fn render(&self) -> String {
@@ -144,6 +166,36 @@ impl Bench {
         self.results.push(m);
         self.results.last().unwrap()
     }
+
+    /// Write this group's measurements plus `extras` as a one-line
+    /// `BENCH_*.json` document (see [`write_bench_json`]).
+    pub fn write_json(&self, path: &str, extras: Vec<(&str, Json)>) -> std::io::Result<()> {
+        let mut fields = extras;
+        let results = Json::Arr(self.results.iter().map(|m| m.to_json()).collect());
+        fields.push(("results", results));
+        write_bench_json(path, &self.group, fields)
+    }
+}
+
+/// Write a machine-readable bench summary:
+/// `{"bench": <name>, "fast": <BENCH_FAST?>, ...extras}` as a single
+/// JSON line — the stable format `BENCH_native.json` /
+/// `BENCH_service.json` share so EXPERIMENTS.md-style tracking can diff
+/// runs across PRs.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    extras: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let mut o = BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str(bench.to_string()));
+    o.insert("fast".to_string(), Json::Bool(std::env::var("BENCH_FAST").is_ok()));
+    for (k, v) in extras {
+        o.insert(k.to_string(), v);
+    }
+    std::fs::write(path, format!("{}\n", Json::Obj(o)))?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 #[cfg(test)]
@@ -179,6 +231,42 @@ mod tests {
             items_per_iter: Some(500.0),
         };
         assert!((m.throughput().unwrap() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measurement_json_roundtrips() {
+        let m = Measurement {
+            name: "g/x".into(),
+            iters: 3,
+            mean_ns: 2e6,
+            p50_ns: 1.5e6,
+            p95_ns: 3e6,
+            stddev_ns: 1e5,
+            items_per_iter: Some(1000.0),
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("g/x"));
+        assert_eq!(j.get("iters").unwrap().as_usize(), Some(3));
+        assert!((j.get("items_per_sec").unwrap().as_f64().unwrap() - 5e5).abs() < 1.0);
+        // no-items measurements omit the throughput keys
+        let bare = Measurement { items_per_iter: None, ..m };
+        assert!(bare.to_json().get("items_per_sec").is_err());
+        // parse the serialized line back
+        let line = Json::parse_line(&bare.to_json().to_string()).unwrap();
+        assert!((line.get("mean_ns").unwrap().as_f64().unwrap() - 2e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_document_shape() {
+        let dir = std::env::temp_dir().join("tc_stencil_bench_json_test.json");
+        let path = dir.to_str().unwrap();
+        write_bench_json(path, "unit", vec![("speedup", Json::Num(3.5))]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let j = Json::parse_line(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("unit"));
+        assert!((j.get("speedup").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-12);
+        assert!(j.get("fast").unwrap().as_bool().is_some());
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

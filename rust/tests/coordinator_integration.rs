@@ -136,11 +136,15 @@ fn planner_artifact_mode_yields_runnable_plan() {
     let req = planner::Request {
         pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
         dtype: Dtype::F32,
+        domain: vec![256, 256],
         steps: 8,
         gpu: Gpu::a100(),
         backend: BackendKind::Pjrt,
         max_t: 8,
         temporal: tc_stencil::backend::TemporalMode::Auto,
+        shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
+        lanes: 1,
+        threads: 1,
     };
     let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
     let name = plan.chosen.artifact.expect("artifact-constrained plan");
@@ -159,11 +163,15 @@ fn end_to_end_plan_then_run() {
     let req = planner::Request {
         pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
         dtype: Dtype::F32,
+        domain: vec![80, 80],
         steps: 8,
         gpu: Gpu::a100(),
         backend: BackendKind::Pjrt,
         max_t: 4,
         temporal: tc_stencil::backend::TemporalMode::Auto,
+        shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
+        lanes: 1,
+        threads: 1,
     };
     let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
     let artifact = plan.chosen.artifact.unwrap();

@@ -1,0 +1,319 @@
+//! The sharded execution plane's acceptance suite:
+//!
+//! * shard ≡ unsharded f64 **bit-identity** property sweep — star/box
+//!   patterns, odd/prime domains, t ∈ 1..4, sweep AND blocked
+//!   semantics, shard counts 1..5, lane-count invariance;
+//! * per-shard metrics sum exactly to the job-level reply, halo
+//!   recompute included, and match `model::shard`'s prediction term
+//!   for term;
+//! * planner regression: >1 shard is chosen exactly when the
+//!   redundancy-adjusted gain crosses 1 (the shard-axis analogue of
+//!   the temporal balance-point regression).
+
+use tc_stencil::backend::{self, Backend, NativeBackend, TemporalMode};
+use tc_stencil::coordinator::grid::{ShardPlan, ShardSpec};
+use tc_stencil::coordinator::{planner, scheduler};
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::{Dtype, Workload};
+use tc_stencil::model::shard;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::sim::golden;
+use tc_stencil::util::prop::{forall, Config};
+use tc_stencil::util::rng::Rng;
+
+fn job(
+    shape: Shape,
+    domain: Vec<usize>,
+    steps: usize,
+    t: usize,
+    temporal: TemporalMode,
+    dtype: Dtype,
+) -> backend::Job {
+    let d = domain.len();
+    let pattern = StencilPattern::new(shape, d, 1).unwrap();
+    backend::Job {
+        pattern,
+        dtype,
+        domain,
+        steps,
+        t,
+        temporal,
+        weights: pattern.uniform_weights(),
+        threads: 1,
+    }
+}
+
+fn dim0_plan(job: &backend::Job, shards: usize) -> ShardPlan {
+    ShardPlan::dim0(&job.domain, shards, job.pattern.r, job.t).unwrap()
+}
+
+fn rand_field(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn property_sharded_is_bit_identical_to_unsharded() {
+    // The acceptance bar: for ANY decomposition the assembled sharded
+    // result equals the monolithic executor bit for bit (which is
+    // itself pinned to the golden oracle by backend_native.rs and
+    // temporal_blocking.rs).
+    let primes = [5usize, 7, 11, 13, 17, 19, 23];
+    forall(
+        Config { cases: 60, ..Default::default() },
+        |rng| {
+            let shape = if rng.f64() < 0.5 { Shape::Box } else { Shape::Star };
+            let d = rng.range_usize(2, 3);
+            let mut domain: Vec<usize> =
+                (0..d).map(|_| primes[rng.range_usize(0, primes.len() - 1)]).collect();
+            if d == 3 {
+                domain[2] = domain[2].min(7); // keep 3-D cases quick
+            }
+            let t = rng.range_usize(1, 4);
+            let steps = rng.range_usize(1, 6);
+            let blocked = rng.f64() < 0.5;
+            let shards = rng.range_usize(1, 5);
+            let lanes = rng.range_usize(1, 3);
+            (shape, domain, t, steps, blocked, shards, lanes)
+        },
+        |&(shape, ref domain, t, steps, blocked, shards, lanes)| {
+            let temporal = if blocked { TemporalMode::Blocked } else { TemporalMode::Sweep };
+            let j = job(shape, domain.clone(), steps, t, temporal, Dtype::F64);
+            let n: usize = domain.iter().product();
+            let init = rand_field(0xC0FFEE ^ (n as u64) ^ (t as u64) << 8, n);
+            let mut mono = init.clone();
+            NativeBackend::new()
+                .advance(&j, &mut mono)
+                .map_err(|e| format!("mono: {e:#}"))?;
+            let plan = dim0_plan(&j, shards);
+            let mut fanned = init.clone();
+            scheduler::advance_sharded(&j, &plan, &mut fanned, lanes)
+                .map_err(|e| format!("sharded: {e:#}"))?;
+            for (i, (a, b)) in fanned.iter().zip(&mono).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "{shape:?} {domain:?} t={t} steps={steps} blocked={blocked} \
+                         S={shards} lanes={lanes}: point {i} {a} != {b}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn sharded_blocked_matches_sequential_oracle_directly() {
+    // Belt and braces: pin the sharded blocked path to the ORACLE (not
+    // just the monolithic executor) on odd domains with t 1..4.
+    for t in 1..=4usize {
+        for shards in [2usize, 3, 5] {
+            let j = job(
+                Shape::Box,
+                vec![19, 13],
+                2 * t + 1,
+                t,
+                TemporalMode::Blocked,
+                Dtype::F64,
+            );
+            let init = rand_field(7 + t as u64, 19 * 13);
+            let plan = dim0_plan(&j, shards);
+            let mut got = init.clone();
+            scheduler::advance_sharded(&j, &plan, &mut got, 2).unwrap();
+            let w = golden::Weights::new(2, 3, j.weights.clone());
+            let want =
+                golden::apply_steps(&golden::Field::from_vec(&[19, 13], init), &w, 2 * t + 1);
+            let gotf = golden::Field::from_vec(&[19, 13], got);
+            assert_eq!(gotf.max_abs_diff(&want), 0.0, "t={t} S={shards}");
+        }
+    }
+}
+
+#[test]
+fn sharded_sweep_matches_fused_oracle_directly() {
+    for (steps, t) in [(4usize, 2usize), (5, 3), (3, 1)] {
+        let j = job(Shape::Star, vec![17, 11], steps, t, TemporalMode::Sweep, Dtype::F64);
+        let init = rand_field(40 + steps as u64, 17 * 11);
+        let plan = dim0_plan(&j, 4);
+        let mut got = init.clone();
+        scheduler::advance_sharded(&j, &plan, &mut got, 3).unwrap();
+        let w = golden::Weights::new(2, 3, j.weights.clone());
+        let mut want = golden::Field::from_vec(&[17, 11], init);
+        for _ in 0..steps / t {
+            want = golden::apply_fused(&want, &w, t);
+        }
+        for _ in 0..steps % t {
+            want = golden::apply_once(&want, &w);
+        }
+        let gotf = golden::Field::from_vec(&[17, 11], got);
+        assert_eq!(gotf.max_abs_diff(&want), 0.0, "steps={steps} t={t}");
+    }
+}
+
+#[test]
+fn lane_count_never_changes_bits() {
+    // Thread-count invariance on the shard plane: the lane budget is a
+    // scheduling knob, never a numerical one.
+    for temporal in [TemporalMode::Sweep, TemporalMode::Blocked] {
+        let j = job(Shape::Box, vec![23, 9], 5, 2, temporal, Dtype::F64);
+        let init = rand_field(99, 23 * 9);
+        let plan = dim0_plan(&j, 5);
+        let mut want: Option<Vec<f64>> = None;
+        for lanes in [1usize, 2, 7] {
+            let mut f = init.clone();
+            scheduler::advance_sharded(&j, &plan, &mut f, lanes).unwrap();
+            match &want {
+                None => want = Some(f),
+                Some(w) => assert_eq!(w, &f, "lanes={lanes} {temporal:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_sharded_tracks_the_monolithic_f32_path() {
+    // Per-phase f64↔f32 marshalling is exact (every intermediate is an
+    // f32 value), so even f32 jobs reproduce the monolithic path.
+    let j = job(Shape::Star, vec![21, 13], 4, 2, TemporalMode::Blocked, Dtype::F32);
+    let init: Vec<f64> =
+        rand_field(123, 21 * 13).iter().map(|&v| v as f32 as f64).collect();
+    let mut mono = init.clone();
+    NativeBackend::new().advance(&j, &mut mono).unwrap();
+    let plan = dim0_plan(&j, 3);
+    let mut fanned = init.clone();
+    scheduler::advance_sharded(&j, &plan, &mut fanned, 2).unwrap();
+    for (i, (a, b)) in fanned.iter().zip(&mono).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "point {i}");
+    }
+}
+
+#[test]
+fn per_shard_metrics_sum_to_the_job_reply_and_match_the_model() {
+    // Drive every (shard × phase) by hand through advance_shard,
+    // summing per-shard metrics; the job driver must report exactly
+    // that sum, and both must equal model::shard's prediction.
+    for (temporal, blocked) in
+        [(TemporalMode::Blocked, true), (TemporalMode::Sweep, false)]
+    {
+        let j = job(Shape::Box, vec![32, 16], 9, 4, temporal, Dtype::F64);
+        let shards = 3usize;
+        let plan = dim0_plan(&j, shards);
+        let init = rand_field(5, 32 * 16);
+
+        // by hand: phase loop with explicit barrier
+        let be = NativeBackend::new();
+        let plane = plan.plane();
+        let mut field = init.clone();
+        let mut hand = tc_stencil::coordinator::metrics::RunMetrics::default();
+        for phase in backend::shard_phases(&j) {
+            let mut slabs = Vec::new();
+            for s in plan.shards() {
+                let mut slab = vec![0.0; s.payload()];
+                let m = be.advance_shard(&j, &plan, s.index, phase, &field, &mut slab).unwrap();
+                assert_eq!(m.launches, 1);
+                hand.absorb(&m);
+                slabs.push(slab);
+            }
+            for (s, slab) in plan.shards().iter().zip(&slabs) {
+                let (a, b) = s.rows();
+                field[a * plane..b * plane].copy_from_slice(slab);
+            }
+        }
+
+        // driver: must aggregate to the same totals
+        let mut f2 = init.clone();
+        let m = scheduler::advance_sharded(&j, &plan, &mut f2, 2).unwrap();
+        assert_eq!(f2, field, "hand-driven and driver fields agree");
+        assert_eq!(m.bytes_moved, hand.bytes_moved);
+        assert_eq!(m.flops, hand.flops);
+        assert_eq!(m.launches, hand.launches);
+        assert_eq!(m.steps, 9);
+        assert_eq!(m.points, 32 * 16);
+
+        // and the model's shard-aware prediction is exact (uniform
+        // weights: kernel nnz == K, fused nnz == K^(t))
+        let w = Workload::new(j.pattern, j.t, j.dtype);
+        let predicted = shard::predicted_job_intensity(&w, j.steps, blocked, 32, shards);
+        let achieved = m.achieved_intensity();
+        assert!(
+            (achieved - predicted).abs() < 1e-12,
+            "{temporal:?}: achieved {achieved} vs predicted {predicted}"
+        );
+        // sharding strictly lowers intensity vs the monolithic model
+        let mono = tc_stencil::model::calib::predicted_job_intensity(&w, j.steps, blocked);
+        assert!(predicted < mono, "halo redundancy must show: {predicted} !< {mono}");
+    }
+}
+
+#[test]
+fn planner_shards_exactly_past_the_redundancy_crossover() {
+    // The shard-axis regression (mirror of the temporal balance-point
+    // regression): sweeping the dim-0 extent with 4 lanes against a
+    // 2-thread monolith, the planner must pick >1 shard exactly when
+    // max_S gain(S) crosses 1 — small deep-blocked domains stay
+    // monolithic (trapezoid recompute dominates), large ones shard.
+    let gpu = Gpu::v100(); // scalar-only: the shard axis decides alone
+    let mut saw_mono = false;
+    let mut saw_sharded = false;
+    for n0 in [8usize, 12, 32, 64, 256] {
+        let req = planner::Request {
+            pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+            dtype: Dtype::F32,
+            domain: vec![n0, 256],
+            steps: 64,
+            gpu: gpu.clone(),
+            backend: backend::BackendKind::Native,
+            max_t: 8,
+            temporal: TemporalMode::Blocked,
+            shards: ShardSpec::Auto,
+            lanes: 4,
+            threads: 2,
+        };
+        let plan = planner::plan(&req, None).unwrap();
+        let t = plan.chosen.t;
+        let best_gain = (2..=4usize)
+            .map(|s| shard::gain(n0, s, 1, t, true, 4, 2))
+            .fold(f64::MIN, f64::max);
+        assert_eq!(
+            plan.chosen.shards > 1,
+            best_gain > 1.0,
+            "n0={n0}: chose {} shards at t={t}, best modeled gain {best_gain:.3}",
+            plan.chosen.shards
+        );
+        saw_mono |= plan.chosen.shards == 1;
+        saw_sharded |= plan.chosen.shards > 1;
+    }
+    assert!(saw_mono && saw_sharded, "the sweep must straddle the crossover");
+}
+
+#[test]
+fn shard_plan_rejects_mismatched_jobs() {
+    let j = job(Shape::Box, vec![16, 16], 2, 2, TemporalMode::Sweep, Dtype::F64);
+    let plan = dim0_plan(&j, 2);
+    let be = NativeBackend::new();
+    let field = vec![0.0; 256];
+    // wrong slab size
+    let mut bad = vec![0.0; 3];
+    assert!(be
+        .advance_shard(&j, &plan, 0, backend::ShardPhase { depth: 2, fused: true }, &field, &mut bad)
+        .is_err());
+    // shard index out of range
+    let mut slab = vec![0.0; 8 * 16];
+    assert!(be
+        .advance_shard(&j, &plan, 5, backend::ShardPhase { depth: 1, fused: true }, &field, &mut slab)
+        .is_err());
+    // phase deeper than the plan's halo ring
+    assert!(be
+        .advance_shard(&j, &plan, 0, backend::ShardPhase { depth: 3, fused: true }, &field, &mut slab)
+        .is_err());
+    // 1-D domains cannot slab-shard
+    let j1 = job(Shape::Box, vec![64], 2, 1, TemporalMode::Sweep, Dtype::F64);
+    assert!(ShardPlan::new(&[64], &[2], 1, 1).is_ok());
+    let p1 = ShardPlan::new(&[64], &[2], 1, 1).unwrap();
+    let mut slab1 = vec![0.0; 32];
+    let f1 = vec![0.0; 64];
+    assert!(be
+        .advance_shard(&j1, &p1, 0, backend::ShardPhase { depth: 1, fused: true }, &f1, &mut slab1)
+        .is_err());
+}

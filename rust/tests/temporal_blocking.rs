@@ -185,11 +185,15 @@ fn planner_blocked_iff_fused_intensity_crosses_machine_balance() {
         let req = Request {
             pattern,
             dtype: Dtype::F32,
+            domain: vec![256, 256],
             steps: 64,
             gpu: gpu.clone(),
             backend: backend::BackendKind::Native,
             max_t: t,
             temporal: TemporalMode::Auto,
+            shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
+            lanes: 1,
+            threads: 1,
         };
         let plan = planner::plan(&req, None).unwrap();
         // Find the best candidate at exactly depth t (the pinned depth
