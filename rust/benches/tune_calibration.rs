@@ -1,0 +1,152 @@
+//! tune_calibration — the model-fidelity bench: probe stability and
+//! profile-vs-static planner decision divergence.
+//!
+//! Two questions the perf trajectory needs answered per machine:
+//!
+//! 1. **Probe variance** — how repeatable are the microbenchmark
+//!    constants a measured profile is built from?  (A profile whose
+//!    bandwidth wobbles 30% between runs cannot anchor admission.)
+//! 2. **Decision divergence** — across a grid of representative
+//!    requests, how many planner decisions (engine, t, temporal,
+//!    shards) change when planning against the measured profile
+//!    instead of the builtin A100 table?  This is the observable
+//!    payoff of the tune/ plane: where the machine disagrees with the
+//!    datasheet, the plans move.
+//!
+//! Emits `BENCH_tune.json` via `util::bench::write_bench_json`.
+
+use tc_stencil::backend::{BackendKind, TemporalMode};
+use tc_stencil::coordinator::grid::ShardSpec;
+use tc_stencil::coordinator::planner::{self, Request};
+use tc_stencil::engines;
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::Dtype;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::tune::micro::{self, MicroOpts};
+use tc_stencil::util::bench::{write_bench_json, Bench};
+use tc_stencil::util::json::Json;
+use tc_stencil::util::stats;
+
+fn request(shape: Shape, d: usize, r: usize, dtype: Dtype, gpu: Gpu) -> Request {
+    Request {
+        pattern: StencilPattern::new(shape, d, r).unwrap(),
+        dtype,
+        domain: match d {
+            2 => vec![128, 128],
+            _ => vec![32, 64, 64],
+        },
+        steps: 16,
+        gpu,
+        backend: BackendKind::Native,
+        max_t: 8,
+        temporal: TemporalMode::Auto,
+        shards: ShardSpec::Auto,
+        lanes: 4,
+        threads: 2,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("tune_calibration");
+    let opts = MicroOpts::quick();
+
+    // ---- probe variance: repeat whole probes, look at the medians ----
+    let mut bw_medians: Vec<f64> = Vec::new();
+    b.run("bandwidth_probe", || {
+        bw_medians.push(micro::bandwidth_probe(&opts).median);
+    });
+    let mut kern_medians: Vec<f64> = Vec::new();
+    b.run("kernel_probe_f64_sweep_t1", || {
+        let r = micro::kernel_probe(Dtype::F64, TemporalMode::Sweep, 1, &opts)
+            .expect("kernel probe");
+        kern_medians.push(r.median);
+    });
+    let rel_spread = |v: &[f64]| {
+        if v.len() < 2 {
+            return 0.0;
+        }
+        let m = stats::mean(v);
+        if m == 0.0 {
+            0.0
+        } else {
+            stats::stddev(v) / m
+        }
+    };
+    let bw_spread = rel_spread(&bw_medians);
+    let kern_spread = rel_spread(&kern_medians);
+    println!(
+        "probe stability: bandwidth median spread {:.1}% over {} runs, \
+         kernel {:.1}% over {} runs",
+        bw_spread * 100.0,
+        bw_medians.len(),
+        kern_spread * 100.0,
+        kern_medians.len()
+    );
+
+    // ---- decision divergence: measured profile vs builtin table ----
+    let measured = micro::measure(&opts).expect("measure profile");
+    let builtin = engines::builtin_profile(&Gpu::a100());
+    let grid: Vec<(Shape, usize, usize, Dtype)> = vec![
+        (Shape::Box, 2, 1, Dtype::F32),
+        (Shape::Box, 2, 1, Dtype::F64),
+        (Shape::Box, 2, 2, Dtype::F64),
+        (Shape::Star, 2, 1, Dtype::F32),
+        (Shape::Star, 2, 1, Dtype::F64),
+        (Shape::Box, 3, 1, Dtype::F32),
+        (Shape::Box, 3, 1, Dtype::F64),
+        (Shape::Star, 3, 1, Dtype::F64),
+    ];
+    let mut diffs = 0usize;
+    let mut rows = Vec::new();
+    for &(shape, d, r, dtype) in &grid {
+        let pb = planner::plan(&request(shape, d, r, dtype, builtin.gpu()), None).unwrap();
+        let pm = planner::plan(&request(shape, d, r, dtype, measured.gpu()), None).unwrap();
+        let same = pb.chosen.engine.name == pm.chosen.engine.name
+            && pb.chosen.t == pm.chosen.t
+            && pb.chosen.temporal == pm.chosen.temporal
+            && pb.chosen.shards == pm.chosen.shards;
+        if !same {
+            diffs += 1;
+        }
+        println!(
+            "  {:<12} {:>6}: builtin -> {:<10} t={} {:<7} sh{}   measured -> {:<10} t={} {:<7} sh{}{}",
+            format!("{shape:?}-{d}D{r}R"),
+            dtype.as_str(),
+            pb.chosen.engine.name,
+            pb.chosen.t,
+            pb.chosen.temporal.as_str(),
+            pb.chosen.shards,
+            pm.chosen.engine.name,
+            pm.chosen.t,
+            pm.chosen.temporal.as_str(),
+            pm.chosen.shards,
+            if same { "" } else { "   << diverges" }
+        );
+        rows.push(Json::Str(format!(
+            "{shape:?}-{d}D{r}R/{}:{}",
+            dtype.as_str(),
+            if same { "same" } else { "diverges" }
+        )));
+    }
+    println!(
+        "planner decision divergence: {diffs}/{} requests change under the measured profile",
+        grid.len()
+    );
+
+    let results = Json::Arr(b.results.iter().map(|m| m.to_json()).collect());
+    write_bench_json(
+        "BENCH_tune.json",
+        "tune_calibration",
+        vec![
+            ("bandwidth_probe_rel_spread", Json::Num(bw_spread)),
+            ("kernel_probe_rel_spread", Json::Num(kern_spread)),
+            ("measured_bandwidth", Json::Num(measured.bandwidth)),
+            ("measured_peak_f64", Json::Num(measured.peaks.cuda_f64.unwrap_or(0.0))),
+            ("decision_diffs", Json::Num(diffs as f64)),
+            ("decisions_total", Json::Num(grid.len() as f64)),
+            ("decision_grid", Json::Arr(rows)),
+            ("results", results),
+        ],
+    )
+    .expect("write BENCH_tune.json");
+}

@@ -30,6 +30,12 @@ pub struct RunConfig {
     /// redundancy-adjusted gain; N pins the count (native, d ≥ 2).
     pub shards: ShardSpec,
     pub artifacts_dir: std::path::PathBuf,
+    /// Measured machine profile to plan against (`--profile <path>`);
+    /// None = the builtin profile of `gpu` (the static table).
+    pub profile: Option<std::path::PathBuf>,
+    /// Drift response policy (`--retune off|auto`; serve acts on it,
+    /// one-shot commands accept and ignore it).
+    pub retune: crate::tune::drift::RetuneMode,
 }
 
 impl RunConfig {
@@ -47,6 +53,8 @@ impl RunConfig {
             temporal: TemporalMode::Auto,
             shards: ShardSpec::Auto,
             artifacts_dir: crate::runtime::manifest::default_dir(),
+            profile: None,
+            retune: crate::tune::drift::RetuneMode::Off,
         }
     }
 
@@ -116,6 +124,12 @@ impl RunConfig {
         if let Some(dir) = args.get("artifacts") {
             c.artifacts_dir = std::path::PathBuf::from(dir);
         }
+        if let Some(p) = args.get("profile") {
+            c.profile = Some(std::path::PathBuf::from(p));
+        }
+        if let Some(m) = args.get("retune") {
+            c.retune = crate::tune::drift::RetuneMode::parse(m)?;
+        }
         Ok(c)
     }
 }
@@ -153,9 +167,65 @@ pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
             default: Some("auto"),
         },
         OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: None },
+        OptSpec {
+            name: "profile",
+            help: "measured machine profile to plan against (see `stencilctl tune`); omit = builtin table",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "retune",
+            help: "drift response: off (flag+invalidate only) | auto (background recalibration; serve)",
+            takes_value: true,
+            default: Some("off"),
+        },
         OptSpec { name: "verify", help: "check vs golden oracle", takes_value: false, default: None },
         OptSpec { name: "locked", help: "apply profiling clock lock", takes_value: false, default: None },
     ]
+}
+
+/// `stencilctl tune` options: the run-like set (probe threads, etc.)
+/// plus the probe preset and output path.
+pub fn tune_opt_specs() -> Vec<crate::util::cli::OptSpec> {
+    use crate::util::cli::OptSpec;
+    let mut specs = run_opt_specs();
+    specs.extend([
+        OptSpec {
+            name: "quick",
+            help: "tune: fast probe preset (default)",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec {
+            name: "full",
+            help: "tune: thorough probe preset (bigger working sets, more reps)",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec {
+            name: "out",
+            help: "tune: where to write the measured profile",
+            takes_value: true,
+            default: Some("profile.json"),
+        },
+    ]);
+    specs
+}
+
+/// The union of every subcommand's options.  The CLI cannot know which
+/// word is the subcommand before parsing (options may precede it), so
+/// when an argument could name `serve` or `tune` it parses against the
+/// union — extra defined-but-unused flags are harmless, whereas
+/// parsing `tune --out serve` with only the serve specs would reject
+/// tune's own flags.
+pub fn all_opt_specs() -> Vec<crate::util::cli::OptSpec> {
+    let mut specs = serve_opt_specs();
+    for s in tune_opt_specs() {
+        if !specs.iter().any(|e| e.name == s.name) {
+            specs.push(s);
+        }
+    }
+    specs
 }
 
 /// `stencilctl serve` options: everything run-like commands take, plus
@@ -195,6 +265,13 @@ pub fn serve_opt_specs() -> Vec<crate::util::cli::OptSpec> {
             help: "serve: plan cache capacity in entries",
             takes_value: true,
             default: Some("128"),
+        },
+        OptSpec {
+            name: "drift-threshold",
+            help: "serve: per-region model-error EWMA that flags the profile stale \
+                   (default: the model's region tolerance)",
+            takes_value: true,
+            default: None,
         },
     ]);
     specs
@@ -299,6 +376,36 @@ mod tests {
         assert_eq!(args.get_usize("max-queue").unwrap(), Some(64));
         assert!(args.flag("stdio"));
         assert_eq!(args.get_f64("budget-ms").unwrap(), None);
+    }
+
+    #[test]
+    fn profile_and_retune_flags_parse() {
+        use crate::tune::drift::RetuneMode;
+        assert_eq!(parse(&[]).profile, None);
+        assert_eq!(parse(&[]).retune, RetuneMode::Off);
+        let c = parse(&["--profile", "/tmp/p.json", "--retune", "auto"]);
+        assert_eq!(c.profile.as_deref(), Some(std::path::Path::new("/tmp/p.json")));
+        assert_eq!(c.retune, RetuneMode::Auto);
+        // bad retune value errors
+        let raw: Vec<String> = vec!["--retune".into(), "always".into()];
+        let args = Args::parse(&raw, &run_opt_specs()).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
+        // tune specs extend run specs with quick/full/out, once each
+        let tune = tune_opt_specs();
+        for name in ["quick", "full", "out", "profile", "threads"] {
+            assert_eq!(tune.iter().filter(|s| s.name == name).count(), 1, "--{name}");
+        }
+        // serve gains --drift-threshold exactly once
+        assert_eq!(
+            serve_opt_specs().iter().filter(|s| s.name == "drift-threshold").count(),
+            1
+        );
+        // the union list carries every flag exactly once ("tune --out
+        // serve" style invocations parse against it)
+        let all = all_opt_specs();
+        for name in ["quick", "full", "out", "addr", "stdio", "drift-threshold", "profile"] {
+            assert_eq!(all.iter().filter(|s| s.name == name).count(), 1, "--{name}");
+        }
     }
 
     #[test]

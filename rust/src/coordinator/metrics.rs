@@ -177,10 +177,14 @@ impl ServiceCounters {
         Self::bump(&self.intensity_samples);
     }
 
-    /// A consistent-enough point-in-time copy for rendering.
+    /// A consistent-enough point-in-time copy for rendering.  The
+    /// `profile` block defaults empty here — the service layer fills it
+    /// from its [`ProfileHub`](crate::tune::drift::ProfileHub) (these
+    /// counters know nothing about profiles).
     pub fn snapshot(&self) -> ServiceSnapshot {
         let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
         ServiceSnapshot {
+            profile: crate::tune::drift::ProfileStatus::default(),
             requests: get(&self.requests),
             errors: get(&self.errors),
             jobs_accepted: get(&self.jobs_accepted),
@@ -202,9 +206,13 @@ impl ServiceCounters {
     }
 }
 
-/// Plain-value copy of [`ServiceCounters`].
+/// Plain-value copy of [`ServiceCounters`], plus the machine-profile
+/// identity/drift block the service layer attaches before rendering.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ServiceSnapshot {
+    /// Machine-profile identity + drift state
+    /// (see [`crate::tune::drift::ProfileStatus`]).
+    pub profile: crate::tune::drift::ProfileStatus,
     pub requests: u64,
     pub errors: u64,
     pub jobs_accepted: u64,

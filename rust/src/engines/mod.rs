@@ -239,6 +239,27 @@ pub fn sota() -> (Engine, Engine, Engine) {
     (ebisu(), convstencil(), spider())
 }
 
+/// The single source of truth for a machine's *builtin* constants: the
+/// static registry [`Gpu`](crate::hardware::Gpu) entry folded into a
+/// [`MachineProfile`](crate::tune::profile::MachineProfile).  Every
+/// plane that used to reach into the hardware table directly —
+/// planner requests, admission, serve defaults, benches — now resolves
+/// its constants through a profile, and this is the profile they get
+/// when none was measured; it reconstructs the registry `Gpu`
+/// field-for-field, so the no-profile path stays bit-identical.
+pub fn builtin_profile(gpu: &crate::hardware::Gpu) -> crate::tune::profile::MachineProfile {
+    crate::tune::profile::MachineProfile {
+        version: crate::tune::profile::PROFILE_VERSION.to_string(),
+        name: gpu.name.clone(),
+        source: crate::tune::profile::ProfileSource::Builtin,
+        created_unix: 0,
+        bandwidth: gpu.bandwidth,
+        peaks: gpu.peaks,
+        clock_lock: gpu.clock_lock,
+        probes: Vec::new(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -27,9 +27,13 @@ pub struct PeakTable {
 }
 
 /// A GPU model: bandwidth + per-unit peaks + clock-lock derating.
+///
+/// The name is a `String` (not `&'static str`) because machine profiles
+/// (`tune::profile::MachineProfile`) reconstruct `Gpu`s with *measured*
+/// identities ("measured-native") that never appear in this registry.
 #[derive(Debug, Clone)]
 pub struct Gpu {
-    pub name: &'static str,
+    pub name: String,
     /// HBM bandwidth in bytes/s.
     pub bandwidth: f64,
     pub peaks: PeakTable,
@@ -42,7 +46,7 @@ impl Gpu {
     /// The paper's testbed: A100-80GB PCIe (GA100).
     pub fn a100() -> Gpu {
         Gpu {
-            name: "A100-80GB-PCIe",
+            name: "A100-80GB-PCIe".to_string(),
             bandwidth: 1.935e12,
             peaks: PeakTable {
                 cuda_f32: Some(19.5e12),
@@ -58,7 +62,7 @@ impl Gpu {
 
     pub fn v100() -> Gpu {
         Gpu {
-            name: "V100-SXM2",
+            name: "V100-SXM2".to_string(),
             bandwidth: 0.9e12,
             peaks: PeakTable {
                 cuda_f32: Some(15.7e12),
@@ -74,7 +78,7 @@ impl Gpu {
 
     pub fn h100() -> Gpu {
         Gpu {
-            name: "H100-SXM5",
+            name: "H100-SXM5".to_string(),
             bandwidth: 3.35e12,
             peaks: PeakTable {
                 cuda_f32: Some(66.9e12),
@@ -90,7 +94,7 @@ impl Gpu {
 
     pub fn rtx4090() -> Gpu {
         Gpu {
-            name: "RTX-4090",
+            name: "RTX-4090".to_string(),
             bandwidth: 1.008e12,
             peaks: PeakTable {
                 cuda_f32: Some(82.6e12),
@@ -109,7 +113,7 @@ impl Gpu {
     /// no 2:4 structured-sparse path for the XF32 pipe.
     pub fn mi300x() -> Gpu {
         Gpu {
-            name: "MI300X",
+            name: "MI300X".to_string(),
             bandwidth: 5.3e12,
             peaks: PeakTable {
                 cuda_f32: Some(163.4e12), // vector FP32

@@ -24,6 +24,11 @@
 //!   TCP/stdio, resident sessions, a plan cache keyed by
 //!   [`coordinator::planner::PlanKey`], a bounded job queue + worker
 //!   pool, and model-guided admission control.
+//! * [`tune`] — the measurement-and-feedback plane: microbenchmark
+//!   probes, versioned measured [`tune::profile::MachineProfile`]s the
+//!   planner/admission/criteria constants resolve from, and per-region
+//!   drift detection with online recalibration (`stencilctl tune`,
+//!   `--profile`, `--retune`).
 //! * [`util`] — from-scratch substrates (JSON, CLI, tables, RNG, property
 //!   testing, bench harness): the offline build environment vendors only
 //!   the `xla` and `anyhow` crates, so these are implemented here.
@@ -40,6 +45,7 @@ pub mod runtime;
 pub mod backend;
 pub mod coordinator;
 pub mod service;
+pub mod tune;
 pub mod report;
 
 pub use model::stencil::{Shape, StencilPattern};

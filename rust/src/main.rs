@@ -6,13 +6,17 @@
 //!   run        advance a real domain (--backend auto|native|pjrt)
 //!   sweep      fusion-depth sweep of predictions for one config
 //!   serve      long-lived NDJSON daemon (sessions, plan cache, admission)
+//!   tune       measure THIS machine's roofline constants into a profile
 //!   list       list AOT artifacts from the manifest
 //!   reproduce  regenerate a paper table/figure (table2..4, fig2..16, all)
+//!
+//! plan/run/serve accept --profile <path> (measured machine profile from
+//! `tune`; omitted = builtin datasheet table) and --retune off|auto.
 
 use anyhow::{bail, Result};
 
 use tc_stencil::backend;
-use tc_stencil::coordinator::config::{run_opt_specs, serve_opt_specs, RunConfig};
+use tc_stencil::coordinator::config::{all_opt_specs, run_opt_specs, RunConfig};
 use tc_stencil::coordinator::{planner, scheduler};
 use tc_stencil::engines;
 use tc_stencil::hardware::Gpu;
@@ -22,6 +26,7 @@ use tc_stencil::report;
 use tc_stencil::runtime::manifest::Manifest;
 use tc_stencil::service;
 use tc_stencil::sim::{exec, golden};
+use tc_stencil::tune::{micro, profile::MachineProfile};
 use tc_stencil::util::cli::{usage, Args};
 use tc_stencil::util::table::fnum;
 
@@ -34,11 +39,16 @@ fn main() {
 }
 
 fn dispatch(raw: &[String]) -> Result<()> {
-    // `serve` carries extra flags of its own; its spec list is a strict
-    // superset of the run-like one, so enabling it whenever "serve"
-    // appears anywhere keeps option-before-subcommand orderings working
-    // (a stray "serve" option *value* merely widens the accepted flags).
-    let specs = if raw.iter().any(|a| a == "serve") { serve_opt_specs() } else { run_opt_specs() };
+    // `serve`/`tune` carry extra flags of their own.  Options may
+    // precede the subcommand word, so when either word appears
+    // anywhere, parse against the UNION of all spec lists: a stray
+    // option *value* ("tune --out serve") merely widens the accepted
+    // flags instead of rejecting the real subcommand's own options.
+    let specs = if raw.iter().any(|a| a == "serve" || a == "tune") {
+        all_opt_specs()
+    } else {
+        run_opt_specs()
+    };
     let args = Args::parse(raw, &specs)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -47,6 +57,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "run" => run_cmd(&args),
         "sweep" => sweep(&args),
         "serve" => serve_cmd(&args),
+        "tune" => tune_cmd(&args),
         "list" => list(&args),
         "reproduce" => reproduce(&args),
         "help" | "--help" => {
@@ -60,7 +71,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
 fn help_text() -> String {
     format!(
         "stencilctl — Do We Need Tensor Cores for Stencil Computations?\n\n\
-         subcommands: analyze | plan | run | sweep | serve | list | reproduce <id>\n\
+         subcommands: analyze | plan | run | sweep | serve | tune | list | reproduce <id>\n\
          reproduce ids: table2 table3 table4 fig2 fig8 fig10 fig11 fig13 fig15 fig16 all\n\n\
          backends (--backend, honored by plan, run, and sweep — sweep\n\
          scores predictions only, so the flag merely scopes candidates):\n\
@@ -99,14 +110,82 @@ fn help_text() -> String {
                               do not set one (auto|sweep|blocked)\n\
            --shards SPEC      default shard fan-out for sessions that do\n\
                               not set one (auto|N)\n\
+           --drift-threshold E  flag the profile stale once a region's\n\
+                              model-error EWMA exceeds E (default: the\n\
+                              model's region tolerance)\n\
            requests: ping | plan | create_session | advance | fetch |\n\
-                     close_session | stats | shutdown (see rust/README.md)\n\n{}",
+                     close_session | stats | shutdown (see rust/README.md)\n\n\
+         machine profiles (the measured-constants plane, rust/src/tune/):\n\
+           tune [--quick|--full] [--out PATH]\n\
+                              run streaming-bandwidth + kernel-throughput\n\
+                              probes on THIS machine and write a versioned\n\
+                              machine profile (bit-exact hex f64 JSON)\n\
+           --profile PATH     plan/run/serve against a measured profile\n\
+                              instead of the builtin datasheet table;\n\
+                              omitted = static table, bit-identical\n\
+           --retune MODE      off: drift only flags + invalidates plans;\n\
+                              auto: serve also recalibrates in the\n\
+                              background and installs the fresh profile\n\
+                              (requires a measured --profile — a builtin\n\
+                              datasheet table is never silently replaced)\n\n{}",
         usage(&run_opt_specs())
     )
 }
 
+fn tune_cmd(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let mut opts =
+        if args.flag("full") { micro::MicroOpts::full() } else { micro::MicroOpts::quick() };
+    // --threads sets the probe parallelism; the presets and the CLI
+    // default agree at 4, and serve's --retune auto probes with its
+    // own --threads the same way, so CLI-measured and auto-retuned
+    // profiles are measured under the same parallelism by default.
+    opts.threads = cfg.threads;
+    println!(
+        "tune: probing this machine ({} preset, {} reps, {} threads)",
+        opts.label, opts.reps, opts.threads
+    );
+    let profile = micro::measure(&opts)?;
+    for p in &profile.probes {
+        println!(
+            "  {:<44} median {:>12.3e}  spread {:>5.1}%  ({} reps)",
+            p.name,
+            p.median,
+            p.spread * 100.0,
+            p.reps
+        );
+    }
+    let gpu = profile.gpu();
+    println!(
+        "measured: B = {:.2} GB/s, P_f32 = {:.2} GFLOP/s, P_f64 = {:.2} GFLOP/s \
+         (scalar ridge f64 = {:.3} F/B)",
+        profile.bandwidth / 1e9,
+        profile.peaks.cuda_f32.unwrap_or(0.0) / 1e9,
+        profile.peaks.cuda_f64.unwrap_or(0.0) / 1e9,
+        gpu.roof(Unit::CudaCore, Dtype::F64)
+            .map(|r| r.ridge())
+            .unwrap_or(f64::NAN),
+    );
+    let out = args.get_or("out", "profile.json");
+    profile.save(std::path::Path::new(out))?;
+    println!("wrote {out} ({})", profile.identity());
+    Ok(())
+}
+
 fn serve_cmd(args: &Args) -> Result<()> {
-    let (cfg, gpu) = cfg_and_gpu(args)?;
+    let (cfg, profile, _gpu) = cfg_and_gpu(args)?;
+    if cfg.retune == tc_stencil::tune::RetuneMode::Auto
+        && profile.source != tc_stencil::tune::ProfileSource::Measured
+    {
+        bail!(
+            "--retune auto requires a measured --profile: a background \
+             recalibration would silently replace the {} datasheet table \
+             with CPU-measured constants, changing the meaning of every \
+             subsequent plan.  Run `stencilctl tune --out profile.json` \
+             and serve with --profile profile.json",
+            profile.name
+        );
+    }
     let opts = service::ServeOpts {
         addr: args.get_or("addr", "127.0.0.1:7141").to_string(),
         workers: args.get_usize("workers")?.unwrap_or(2).max(1),
@@ -116,7 +195,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
         temporal: cfg.temporal,
         shards: cfg.shards,
         artifacts_dir: cfg.artifacts_dir.clone(),
-        gpu,
+        profile,
+        retune: cfg.retune,
+        drift_threshold: args
+            .get_f64("drift-threshold")?
+            .unwrap_or(tc_stencil::tune::drift::DRIFT_THRESHOLD),
+        probe_threads: cfg.threads,
     };
     let mut svc = service::Service::start(opts);
     let res = if args.flag("stdio") { svc.serve_stdio() } else { svc.serve_tcp() };
@@ -124,18 +208,26 @@ fn serve_cmd(args: &Args) -> Result<()> {
     res
 }
 
-fn cfg_and_gpu(args: &Args) -> Result<(RunConfig, Gpu)> {
+/// Resolve the run configuration plus the machine profile it plans
+/// against: an explicit `--profile <path>` loads the measured
+/// constants, otherwise the builtin profile of `--gpu` (the static
+/// table — bit-identical to planning against the registry directly).
+/// `--locked` derates the compute peaks either way.
+fn cfg_and_gpu(args: &Args) -> Result<(RunConfig, MachineProfile, Gpu)> {
     let cfg = RunConfig::from_args(args)?;
-    let gpu = if args.flag("locked") {
-        cfg.gpu.locked(engines::calib::PROFILING_CLOCK_LOCK)
-    } else {
-        cfg.gpu.clone()
-    };
-    Ok((cfg, gpu))
+    let mut profile = tc_stencil::tune::profile::resolve(cfg.profile.as_deref(), &cfg.gpu)?;
+    if args.flag("locked") {
+        profile = profile.locked(engines::calib::PROFILING_CLOCK_LOCK);
+    }
+    if cfg.profile.is_some() {
+        eprintln!("profile: {}", profile.identity());
+    }
+    let gpu = profile.gpu();
+    Ok((cfg, profile, gpu))
 }
 
 fn analyze(args: &Args) -> Result<()> {
-    let (cfg, gpu) = cfg_and_gpu(args)?;
+    let (cfg, _profile, gpu) = cfg_and_gpu(args)?;
     let t = cfg.t.unwrap_or(1);
     let w = Workload::new(cfg.pattern, t, cfg.dtype);
     println!(
@@ -192,7 +284,7 @@ fn analyze(args: &Args) -> Result<()> {
 }
 
 fn plan_cmd(args: &Args) -> Result<()> {
-    let (cfg, gpu) = cfg_and_gpu(args)?;
+    let (cfg, _profile, gpu) = cfg_and_gpu(args)?;
     let manifest = Manifest::load(&cfg.artifacts_dir).ok();
     let req = planner::Request {
         pattern: cfg.pattern,
@@ -245,7 +337,7 @@ fn plan_cmd(args: &Args) -> Result<()> {
 }
 
 fn run_cmd(args: &Args) -> Result<()> {
-    let (cfg, gpu) = cfg_and_gpu(args)?;
+    let (cfg, _profile, gpu) = cfg_and_gpu(args)?;
     let manifest = Manifest::load(&cfg.artifacts_dir).ok();
     // A forced engine pins the artifact compilation scheme (PJRT only).
     let prefer = match &cfg.engine {
@@ -427,7 +519,7 @@ fn run_cmd(args: &Args) -> Result<()> {
 }
 
 fn sweep(args: &Args) -> Result<()> {
-    let (cfg, gpu) = cfg_and_gpu(args)?;
+    let (cfg, _profile, gpu) = cfg_and_gpu(args)?;
     println!(
         "fusion-depth sweep: {} {} on {}",
         cfg.pattern.label(),
@@ -475,7 +567,7 @@ fn list(args: &Args) -> Result<()> {
 }
 
 fn reproduce(args: &Args) -> Result<()> {
-    let (_cfg, gpu) = cfg_and_gpu(args)?;
+    let (_cfg, _profile, gpu) = cfg_and_gpu(args)?;
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let mut printed = false;
     let mut show = |id: &str, body: String| {

@@ -98,6 +98,23 @@
 //! let i4 = shard::predicted_job_intensity(&w, 6, true, 64, 4);
 //! let i1 = shard::predicted_job_intensity(&w, 6, true, 64, 1);
 //! assert!(i4 < i1 && (i1 - calib::predicted_job_intensity(&w, 6, true)).abs() < 1e-12);
+//!
+//! // Measured constants (MODEL.md "measured constants" table): a
+//! // MachineProfile carries 𝔹 (Eq. 4 bandwidth), the per-unit ℙ table
+//! // (Eq. 4/20 peaks), and the §4.2 clock-lock derating — the builtin
+//! // profile reproduces the registry roofs bit-exactly, and the drift
+//! // plane flags a profile once the EWMA of Eq. 8's measured error
+//! // leaves the model's region tolerance.
+//! use tc_stencil::engines::builtin_profile;
+//! use tc_stencil::tune::drift;
+//! let prof = builtin_profile(&tc_stencil::hardware::Gpu::a100());
+//! assert_eq!(prof.bandwidth, 1.935e12);              // 𝔹
+//! assert_eq!(prof.peaks.cuda_f64, Some(9.7e12));     // ℙ_CU
+//! assert_eq!(prof.peaks.sptc_f32, Some(312e12));     // ℙ_SpTC (Eq. 20)
+//! assert_eq!(prof.clock_lock, 1.0);                  // §4.2 derating
+//! let roof = prof.gpu().roof(Unit::CudaCore, Dtype::F64).unwrap();
+//! assert!((roof.ridge() - 5.01).abs() < 0.02);       // measured balance point
+//! assert_eq!(drift::DRIFT_THRESHOLD, calib::REGION_TOLERANCE);
 //! ```
 
 #![warn(missing_docs)]

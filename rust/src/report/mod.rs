@@ -445,6 +445,28 @@ pub fn service_stats(
             format!("{:.1}%", s.model_error() * 100.0)
         },
     ]);
+    let mut prof = Table::new(
+        "service — machine profile",
+        &[
+            "profile", "source", "generation", "stale", "drift flags", "retunes",
+            "worst drift", "drift samples", "cache gen",
+        ],
+    );
+    prof.row(&[
+        if s.profile.name.is_empty() { "-".to_string() } else { s.profile.name.clone() },
+        if s.profile.source.is_empty() { "-".to_string() } else { s.profile.source.clone() },
+        s.profile.generation.to_string(),
+        if s.profile.stale { "STALE".to_string() } else { "ok".to_string() },
+        s.profile.drift_flags.to_string(),
+        s.profile.retunes.to_string(),
+        if s.profile.drift_samples == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", s.profile.drift_worst_permille as f64 / 10.0)
+        },
+        s.profile.drift_samples.to_string(),
+        cache.generation.to_string(),
+    ]);
     let mut per = Table::new(
         "service — sessions",
         &["session", "pattern", "dtype", "domain", "backend", "jobs", "steps", "MSt/s"],
@@ -461,7 +483,7 @@ pub fn service_stats(
             format!("{:.2}", r.stats.throughput() / 1e6),
         ]);
     }
-    format!("{}\n{}", svc.render(), per.render())
+    format!("{}\n{}\n{}", svc.render(), prof.render(), per.render())
 }
 
 #[cfg(test)]
@@ -613,15 +635,44 @@ mod tests {
             misses: 1,
             evictions: 2,
             len: 1,
+            generation: 4,
         };
         let out = service_stats(&snap, &cache, &rows);
         assert!(out.contains("service — counters"));
+        assert!(out.contains("service — machine profile"));
         assert!(out.contains("service — sessions"));
         assert!(out.contains("Star-2D1R"));
         assert!(out.contains("75%"), "hit rate renders: {out}");
         assert!(out.contains("evicted"), "cache evictions render: {out}");
-        // empty session list still renders both tables
+        // empty session list still renders all tables
         let out = service_stats(&snap, &cache, &[]);
         assert!(out.contains("service — sessions"));
+    }
+
+    #[test]
+    fn service_stats_render_profile_and_drift_state() {
+        use crate::coordinator::metrics::ServiceSnapshot;
+        let snap = ServiceSnapshot {
+            profile: crate::tune::drift::ProfileStatus {
+                name: "measured-native".into(),
+                source: "measured".into(),
+                generation: 3,
+                stale: true,
+                drift_flags: 2,
+                retunes: 1,
+                drift_worst_permille: 312,
+                drift_samples: 7,
+            },
+            ..Default::default()
+        };
+        let cache =
+            crate::service::plan_cache::CacheStats { generation: 3, ..Default::default() };
+        let out = service_stats(&snap, &cache, &[]);
+        assert!(out.contains("measured-native"), "{out}");
+        assert!(out.contains("STALE"), "{out}");
+        assert!(out.contains("31.2%"), "worst drift renders: {out}");
+        // a fresh default snapshot renders placeholders, not panics
+        let out = service_stats(&ServiceSnapshot::default(), &Default::default(), &[]);
+        assert!(out.contains("machine profile"));
     }
 }

@@ -33,6 +33,9 @@ struct Inner {
     hits: u64,
     misses: u64,
     evictions: u64,
+    /// Bumped by every [`PlanCache::clear`] — how many times the whole
+    /// cache was invalidated (profile drift / install).
+    generation: u64,
 }
 
 /// Point-in-time cache counters for the `stats` op.
@@ -42,6 +45,9 @@ pub struct CacheStats {
     pub misses: u64,
     pub evictions: u64,
     pub len: usize,
+    /// Whole-cache invalidations so far (see [`PlanCache::clear`]) —
+    /// profile-driven invalidation made observable in `stats` replies.
+    pub generation: u64,
 }
 
 /// Bounded, thread-safe LRU memo of planner decisions.
@@ -60,10 +66,17 @@ impl PlanCache {
     ///
     /// The lock is dropped while the planner runs: a race between two
     /// misses on the same key costs one redundant (pure) computation,
-    /// never a wrong answer — the first insert wins.
+    /// never a wrong answer — the first insert stands.  Each entry is
+    /// implicitly stamped with the cache generation observed when its
+    /// miss began: if [`PlanCache::clear`] ran while the planner was
+    /// scoring (profile drift flagged / fresh constants installed),
+    /// the finished plan was scored under superseded constants — it is
+    /// still returned to its caller (that request already raced the
+    /// invalidation either way) but NOT memoized, so no post-clear hit
+    /// can ever serve a pre-clear plan.
     pub fn plan(&self, req: &Request, manifest: Option<&Manifest>) -> Result<(Arc<Plan>, bool)> {
         let key = req.plan_key();
-        {
+        let gen0 = {
             let mut g = self.inner.lock().unwrap();
             let inner = &mut *g;
             inner.seq += 1;
@@ -74,13 +87,18 @@ impl PlanCache {
                 inner.hits += 1;
                 return Ok((p, true));
             }
-        }
+            inner.generation
+        };
         let plan = Arc::new(planner::plan(req, manifest)?);
         let mut g = self.inner.lock().unwrap();
         let inner = &mut *g;
         inner.misses += 1;
         inner.seq += 1;
         let seq = inner.seq;
+        if inner.generation != gen0 {
+            // invalidated mid-plan: serve, don't memoize
+            return Ok((plan, false));
+        }
         if let Some(e) = inner.map.get_mut(&key) {
             // racing miss lost: the first insert stands, refresh recency
             e.used = seq;
@@ -111,10 +129,34 @@ impl PlanCache {
         self.inner.lock().unwrap().evictions
     }
 
+    /// Drop every cached plan and bump the cache generation.  This is
+    /// the profile-invalidation hook: when drift stales the machine
+    /// profile (or a recalibrated one is installed), every memoized
+    /// plan was scored against constants that no longer describe the
+    /// machine.  Returns the number of entries dropped.
+    pub fn clear(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.map.len();
+        g.map.clear();
+        g.generation += 1;
+        n
+    }
+
+    /// Whole-cache invalidations so far.
+    pub fn generation(&self) -> u64 {
+        self.inner.lock().unwrap().generation
+    }
+
     /// One consistent snapshot of all counters.
     pub fn stats(&self) -> CacheStats {
         let g = self.inner.lock().unwrap();
-        CacheStats { hits: g.hits, misses: g.misses, evictions: g.evictions, len: g.map.len() }
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            len: g.map.len(),
+            generation: g.generation,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -166,6 +208,25 @@ mod tests {
         assert!(Arc::ptr_eq(&p1, &p2), "hit must return the cached Arc");
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.evictions, s.len), (1, 1, 0, 1));
+        assert_eq!(s.generation, 0);
+    }
+
+    #[test]
+    fn clear_empties_and_bumps_the_generation() {
+        let cache = PlanCache::new(8);
+        cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        cache.plan(&req(Shape::Star, 2, 1), None).unwrap();
+        assert_eq!(cache.clear(), 2);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.generation(), 1);
+        // the next identical request re-plans (a miss, not a hit)
+        let (_, hit) = cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        assert!(!hit, "cleared entries must be re-planned");
+        // hit/miss/eviction history survives a clear; generation counts up
+        let s = cache.stats();
+        assert_eq!((s.misses, s.len, s.generation), (3, 1, 1));
+        assert_eq!(cache.clear(), 1);
+        assert_eq!(cache.stats().generation, 2);
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //!                | { "ok": false, "op": ..., "error": code, "message": ... }
 //! ```
 //!
+//! Instrumented `advance` responses additionally carry a `"profile"`
+//! block (the machine profile's name/source/generation/stale flag) and
+//! a `"drift"` block (the sample's region, its model-error EWMA, the
+//! threshold, and whether it is flagged); `stats` responses carry the
+//! profile identity, drift array, and `plan_cache_generation`
+//! (see `tune::drift`).
+//!
 //! The `hex` field encoding ships each f64 as 16 hex digits of its IEEE
 //! bits — bit-exact transport even for values (−0.0, non-shortest
 //! decimals) a numeric round-trip could normalize.
@@ -334,7 +341,7 @@ pub fn encode_field(field: &[f64], hex: bool) -> Json {
             .iter()
             .map(|&v| {
                 if hex || !v.is_finite() {
-                    Json::Str(format!("{:016x}", v.to_bits()))
+                    Json::Str(crate::util::json::hex_f64(v))
                 } else {
                     Json::Num(v)
                 }
@@ -350,9 +357,8 @@ pub fn decode_field(v: &Json) -> Result<Vec<f64>> {
         .enumerate()
         .map(|(i, x)| match x {
             Json::Num(n) => Ok(*n),
-            Json::Str(s) => u64::from_str_radix(s, 16)
-                .map(f64::from_bits)
-                .map_err(|e| anyhow!("field[{i}]: bad hex f64 {s:?}: {e}")),
+            Json::Str(s) => crate::util::json::f64_from_hex(s)
+                .map_err(|e| anyhow!("field[{i}]: {e:#}")),
             _ => Err(anyhow!("field[{i}] must be a number or a hex string")),
         })
         .collect()

@@ -58,6 +58,65 @@ pub enum Task {
     Job(QueuedJob),
     /// Shard `usize` of a sharded run's current phase.
     Shard(Arc<ShardedRun>, usize),
+    /// Background machine recalibration (`--retune auto` after drift):
+    /// run the microbenchmark suite and install the fresh profile.
+    Retune(RetuneTask),
+}
+
+/// A scheduled background recalibration.  Runs on an ordinary pool
+/// worker for lifecycle simplicity (drains with the queue, no private
+/// threads) — which also means live jobs on the OTHER workers can
+/// contend with the probes.  Contention shows up as rep-to-rep spread,
+/// so [`RetuneTask::run`] refuses to install a profile whose probes
+/// were too noisy ([`crate::tune::micro::MAX_PROBE_SPREAD`]) rather
+/// than letting contention-biased constants drive every future plan;
+/// the next drifted sample retries, and quiet moments eventually win.
+pub struct RetuneTask {
+    /// The hub the fresh profile is installed into.
+    pub hub: Arc<crate::tune::drift::ProfileHub>,
+    /// The plan cache to invalidate once constants change.
+    pub plans: Arc<super::plan_cache::PlanCache>,
+    /// Probe preset (quick for background retunes).
+    pub opts: crate::tune::micro::MicroOpts,
+}
+
+impl RetuneTask {
+    /// Execute the recalibration: measure, install, invalidate plans.
+    /// A failed OR contention-noisy probe run releases the hub's
+    /// retune latch without installing anything — the stale flag stays
+    /// set (visible in stats) and the next drifted sample retries.
+    fn run(&self) {
+        match crate::tune::micro::measure(&self.opts) {
+            Ok(profile) => {
+                let worst = crate::tune::micro::worst_spread(&profile);
+                if worst > crate::tune::micro::MAX_PROBE_SPREAD {
+                    eprintln!(
+                        "stencilctl serve: rejecting retune — probe spread {:.0}% \
+                         (> {:.0}%), likely contention with live jobs; will retry",
+                        worst * 100.0,
+                        crate::tune::micro::MAX_PROBE_SPREAD * 100.0
+                    );
+                    self.hub.retune_failed();
+                } else {
+                    // Clear on BOTH sides of the install: a plan that
+                    // began its miss before the first clear is refused
+                    // by the cache's generation stamp; one that missed
+                    // between the clear and the install (old constants,
+                    // same PlanKey identity) is dropped by the second;
+                    // anything after the install reads the new
+                    // constants.  plan_for's own hub-generation
+                    // re-check handles the serving side.
+                    self.plans.clear();
+                    self.hub.install(profile);
+                    self.plans.clear();
+                }
+            }
+            Err(e) => {
+                eprintln!("stencilctl serve: background retune failed: {e:#}");
+                self.hub.retune_failed();
+            }
+        }
+    }
 }
 
 /// Why a push was refused.
@@ -123,6 +182,21 @@ impl JobQueue {
         } else {
             self.ready.notify_all();
         }
+        Ok(())
+    }
+
+    /// Maintenance push (a drift-triggered background retune): exempt
+    /// from the capacity bound — shedding a recalibration under load
+    /// would keep serving from constants known to be wrong — but not
+    /// from the closed flag (no new work after shutdown).
+    pub(crate) fn push_maintenance(&self, t: Task) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.open {
+            return Err(PushError::Closed);
+        }
+        g.tasks.push_back(t);
+        drop(g);
+        self.ready.notify_one();
         Ok(())
     }
 
@@ -401,6 +475,7 @@ impl WorkerPool {
                                 Task::Shard(run, idx) => {
                                     ShardedRun::run_shard(&run, &queue, idx)
                                 }
+                                Task::Retune(rt) => rt.run(),
                             }
                         }
                     })
@@ -532,6 +607,37 @@ mod tests {
         // closed queue still drains, then pops None
         assert!(queue.pop().is_some());
         assert!(queue.pop().is_none());
+    }
+
+    #[test]
+    fn maintenance_push_is_capacity_exempt_but_respects_close() {
+        let queue = JobQueue::new(1);
+        let s = sess(vec![6, 6]);
+        let (tx, _rx) = mpsc::channel();
+        queue.push(Task::Job(qjob(&s, tx.clone()))).unwrap();
+        // capacity full: a normal push sheds…
+        assert!(matches!(
+            queue.push(Task::Job(qjob(&s, tx))).unwrap_err(),
+            PushError::Full { .. }
+        ));
+        // …but a retune rides in anyway (serving from wrong constants
+        // is worse than one extra queued task)
+        let hub = Arc::new(crate::tune::drift::ProfileHub::new(
+            crate::engines::builtin_profile(&crate::hardware::Gpu::a100()),
+            0.25,
+        ));
+        let plans = Arc::new(super::super::plan_cache::PlanCache::new(4));
+        let rt = || {
+            Task::Retune(RetuneTask {
+                hub: hub.clone(),
+                plans: plans.clone(),
+                opts: crate::tune::micro::MicroOpts::quick(),
+            })
+        };
+        assert!(queue.push_maintenance(rt()).is_ok());
+        assert_eq!(queue.depth(), 2);
+        queue.close();
+        assert_eq!(queue.push_maintenance(rt()).unwrap_err(), PushError::Closed);
     }
 
     #[test]

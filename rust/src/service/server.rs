@@ -28,14 +28,18 @@ use crate::coordinator::grid::{ShardPlan, ShardSpec};
 use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
 use crate::coordinator::planner::{self, Plan};
 use crate::hardware::Gpu;
+use crate::model::perf::Unit;
 use crate::report;
 use crate::runtime::manifest::Manifest;
+use crate::tune::drift::{self, ProfileHub, RetuneMode};
+use crate::tune::micro::MicroOpts;
+use crate::tune::profile::MachineProfile;
 use crate::util::json::Json;
 
 use super::admission::{self, Decision};
 use super::plan_cache::PlanCache;
 use super::protocol::{self, JobSpec, Obj, Request};
-use super::queue::{JobQueue, PushError, QueuedJob, ShardedRun, Task, WorkerPool};
+use super::queue::{JobQueue, PushError, QueuedJob, RetuneTask, ShardedRun, Task, WorkerPool};
 use super::session::{Session, SessionStore};
 
 /// Daemon configuration (`stencilctl serve` flags).
@@ -60,8 +64,22 @@ pub struct ServeOpts {
     /// gain per job.
     pub shards: ShardSpec,
     pub artifacts_dir: PathBuf,
-    /// The GPU model the planner/admission predictions assume.
-    pub gpu: Gpu,
+    /// The machine profile the planner/admission predictions run
+    /// against (resolved at startup: `--profile <path>` or the builtin
+    /// registry table) — the single source of every 𝔹/ℙ constant the
+    /// service plans with.
+    pub profile: MachineProfile,
+    /// What to do when drift flags the profile (`--retune off|auto`).
+    pub retune: RetuneMode,
+    /// Per-region EWMA threshold at which `model_err` flags the profile
+    /// stale (`--drift-threshold`; defaults to the model's region
+    /// tolerance).
+    pub drift_threshold: f64,
+    /// Threads background recalibration probes run with (the serve
+    /// `--threads` flag) — kept equal to what `stencilctl tune
+    /// --threads N` would use so an auto-retuned profile is measured
+    /// under the same parallelism as an operator-measured one.
+    pub probe_threads: usize,
 }
 
 impl Default for ServeOpts {
@@ -75,7 +93,10 @@ impl Default for ServeOpts {
             temporal: backend::TemporalMode::Auto,
             shards: ShardSpec::Auto,
             artifacts_dir: crate::runtime::manifest::default_dir(),
-            gpu: Gpu::a100(),
+            profile: crate::engines::builtin_profile(&Gpu::a100()),
+            retune: RetuneMode::Off,
+            drift_threshold: drift::DRIFT_THRESHOLD,
+            probe_threads: 4,
         }
     }
 }
@@ -84,8 +105,11 @@ impl Default for ServeOpts {
 pub struct ServiceState {
     pub opts: ServeOpts,
     pub sessions: SessionStore,
-    pub plans: PlanCache,
+    pub plans: Arc<PlanCache>,
     pub counters: Arc<ServiceCounters>,
+    /// The live machine profile + drift tracker every planning decision
+    /// resolves its constants from.
+    pub profile: Arc<ProfileHub>,
     queue: Arc<JobQueue>,
     manifest: Option<Manifest>,
     shutdown: AtomicBool,
@@ -120,10 +144,12 @@ impl Service {
         let queue = Arc::new(JobQueue::new(opts.max_queue));
         let counters = Arc::new(ServiceCounters::default());
         let workers = opts.workers.max(1);
+        let profile = Arc::new(ProfileHub::new(opts.profile.clone(), opts.drift_threshold));
         let state = Arc::new(ServiceState {
             sessions: SessionStore::new(),
-            plans: PlanCache::new(opts.plan_cache_cap),
+            plans: Arc::new(PlanCache::new(opts.plan_cache_cap)),
             counters: counters.clone(),
+            profile,
             queue: queue.clone(),
             manifest,
             shutdown: AtomicBool::new(false),
@@ -157,13 +183,16 @@ impl Service {
     pub fn serve_tcp(&self) -> Result<()> {
         let (listener, addr) = self.bind()?;
         eprintln!(
-            "stencilctl serve: listening on {addr} ({} workers, queue {}, budget {})",
+            "stencilctl serve: listening on {addr} ({} workers, queue {}, budget {}, \
+             profile {}, retune {})",
             self.state.opts.workers,
             self.state.opts.max_queue,
             match self.state.opts.budget_ms {
                 Some(ms) => format!("{ms} ms"),
                 None => "off".to_string(),
-            }
+            },
+            self.state.opts.profile.identity(),
+            self.state.opts.retune.as_str(),
         );
         serve_listener(self.state.clone(), listener)
     }
@@ -259,7 +288,9 @@ pub fn handle_line(state: &ServiceState, line: &str) -> (String, bool) {
 /// Plan through the shared cache, bumping the hit/miss counters.
 /// The shard axis makes planning domain- and parallelism-aware: the
 /// serve pool's worker count is the shard lane budget, the session's
-/// thread count the monolithic baseline.
+/// thread count the monolithic baseline.  The machine constants come
+/// from the live profile hub — a retune that installs fresh constants
+/// changes every subsequent plan (and cleared the cache when it did).
 fn plan_for(
     state: &ServiceState,
     spec: &JobSpec,
@@ -275,26 +306,42 @@ fn plan_for(
         ShardSpec::Fixed(n) => ShardSpec::Fixed(n.min(queue_cap).max(1)),
         ShardSpec::Auto => ShardSpec::Auto,
     };
-    let req = planner::Request {
-        pattern: spec.pattern,
-        dtype: spec.dtype,
-        domain: spec.domain.clone(),
-        steps,
-        gpu: state.opts.gpu.clone(),
-        backend: spec.backend,
-        max_t: t.unwrap_or(8).max(1),
-        temporal: spec.temporal,
-        shards,
-        lanes: state.opts.workers.max(1).min(queue_cap),
-        threads: spec.threads.max(1),
-    };
-    let (plan, hit) = state.plans.plan(&req, state.manifest.as_ref())?;
-    ServiceCounters::bump(if hit {
-        &state.counters.plan_hits
-    } else {
-        &state.counters.plan_misses
-    });
-    Ok((plan, hit))
+    // Constants are read from the hub BEFORE planning; if a retune
+    // installs a fresh profile while the planner is scoring, the plan
+    // we just built (and possibly memoized — a post-install measured
+    // profile reuses the same PlanKey gpu identity) was scored under
+    // superseded constants.  Detect the generation change, drop the
+    // poisoned memo, and re-plan; bounded retries so pathological
+    // retune churn degrades to serving one possibly-stale plan
+    // uncached rather than looping.
+    let mut attempts = 0;
+    loop {
+        let hub_gen = state.profile.generation();
+        let req = planner::Request {
+            pattern: spec.pattern,
+            dtype: spec.dtype,
+            domain: spec.domain.clone(),
+            steps,
+            gpu: state.profile.gpu(),
+            backend: spec.backend,
+            max_t: t.unwrap_or(8).max(1),
+            temporal: spec.temporal,
+            shards,
+            lanes: state.opts.workers.max(1).min(queue_cap),
+            threads: spec.threads.max(1),
+        };
+        let (plan, hit) = state.plans.plan(&req, state.manifest.as_ref())?;
+        attempts += 1;
+        if state.profile.generation() == hub_gen || attempts >= 3 {
+            ServiceCounters::bump(if hit {
+                &state.counters.plan_hits
+            } else {
+                &state.counters.plan_misses
+            });
+            return Ok((plan, hit));
+        }
+        state.plans.clear();
+    }
 }
 
 fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
@@ -569,7 +616,17 @@ fn advance(
         .num("predicted_ms", predicted_ms)
         .num("wall_ms", metrics.wall_ns as f64 / 1e6)
         .num("mstencils", metrics.throughput() / 1e6);
-    resp = intensity_feedback(state, resp, &spec, &metrics, job_t, job_temporal, fanout, steps);
+    resp = intensity_feedback(
+        state,
+        resp,
+        &spec,
+        &metrics,
+        job_t,
+        job_temporal,
+        fanout,
+        steps,
+        predicted_ms,
+    );
     Ok((resp.done(), true))
 }
 
@@ -602,6 +659,15 @@ fn queue_refusal(state: &ServiceState, e: PushError) -> Json {
 /// polluting the mean with a false α-sized error; sharded runs compare
 /// against the halo-redundancy-adjusted prediction
 /// (`model::shard::predicted_job_intensity`).
+///
+/// The same `model_err` feeds the drift plane: the sample lands in its
+/// region's EWMA (region = bound on the *profile's* scalar roof ×
+/// realization × fan-out), and the first sample that pushes a region
+/// over the drift threshold stales the profile, bumps its generation,
+/// empties the plan cache, and — under `--retune auto` — schedules a
+/// background recalibration on the worker pool.  The reply carries a
+/// `"profile"` and `"drift"` block so clients see the state they ran
+/// under.
 #[allow(clippy::too_many_arguments)]
 fn intensity_feedback(
     state: &ServiceState,
@@ -612,6 +678,7 @@ fn intensity_feedback(
     job_temporal: backend::TemporalMode,
     shards: usize,
     steps: usize,
+    predicted_ms: f64,
 ) -> Obj {
     if metrics.bytes_moved == 0 {
         return resp;
@@ -628,20 +695,120 @@ fn intensity_feedback(
         metrics.achieved_intensity(),
     );
     state.counters.record_intensity_error(rep.rel_error);
+    // ---- drift plane: region classification over the live profile ----
+    let gpu = state.profile.gpu();
+    let mem_bound = match gpu.roof(Unit::CudaCore, spec.dtype) {
+        Ok(roof) => rep.predicted < roof.ridge(),
+        Err(_) => true, // scalar path absent: call it memory-bound
+    };
+    let region = drift::region(mem_bound, blocked, shards > 1);
+    let (reading, flagged_now) = state.profile.record(&region, rep.rel_error);
+    // ---- wall-time channel: the machine-constant drift signal ----
+    // The intensity error above is a ratio of deterministic counters —
+    // it detects model-structure drift but is blind to the machine
+    // itself slowing down.  The measured/predicted wall-time ratio,
+    // judged against its post-install baseline, is what catches
+    // throttling/contention/migration (see `tune::drift::WallTracker`).
+    let mut wall_flag = false;
+    let mut wall_reading = None;
+    if predicted_ms > 0.0 && metrics.wall_ns > 0 {
+        let ratio = (metrics.wall_ns as f64 / 1e6) / predicted_ms;
+        let (wr, flagged) = state.profile.record_wall(&region, ratio);
+        wall_flag = flagged;
+        wall_reading = Some(wr);
+    }
+    if flagged_now || wall_flag {
+        // Every cached plan was scored against constants the machine
+        // just disproved.
+        state.plans.clear();
+    }
+    // Schedule (or retry) a recalibration on any over-threshold
+    // reading WHILE THE PROFILE IS STALE AND MEASURED, not just the
+    // flagging one: the begin_retune latch keeps it single-flight,
+    // retrying per sample is what lets a failed background retune heal
+    // instead of leaving a stale profile in force forever, the stale
+    // gate keeps the hub's post-flag backoff authoritative, and the
+    // measured gate means auto-retune only ever replaces constants
+    // that were measured here in the first place (a drifted BUILTIN
+    // datasheet profile is flagged and invalidated, but swapping an
+    // operator-selected GPU table for CPU-measured constants is never
+    // done silently — `serve` refuses that flag combination upfront).
+    let channel_over =
+        reading.over || wall_reading.as_ref().is_some_and(|w| w.over);
+    if channel_over
+        && state.opts.retune == RetuneMode::Auto
+        && state.profile.measured()
+        && state.profile.stale()
+        && state.profile.begin_retune()
+    {
+        let task = Task::Retune(RetuneTask {
+            hub: state.profile.clone(),
+            plans: state.plans.clone(),
+            opts: MicroOpts {
+                // probe at the serve-configured parallelism so the
+                // installed constants match what `stencilctl tune
+                // --threads N` would have measured
+                threads: state.opts.probe_threads.max(1),
+                ..MicroOpts::quick()
+            },
+        });
+        if state.queue.push_maintenance(task).is_err() {
+            state.profile.retune_failed(); // shutting down
+        }
+    }
+    let status = state.profile.status();
+    let mut drift_obj = Obj::new()
+        .str_("region", &reading.region)
+        .num("ewma", reading.ewma)
+        .num("threshold", reading.threshold)
+        .bool_("flagged", reading.over);
+    if let Some(w) = &wall_reading {
+        drift_obj = drift_obj
+            .num("wall_ratio", w.ratio_ewma)
+            .num("wall_departure", w.departure)
+            .bool_("wall_flagged", w.over);
+    }
     resp.num("achieved_intensity", rep.measured)
         .num("predicted_intensity", rep.predicted)
         .num("model_err", rep.rel_error)
         .bool_("within_model_region", rep.within_region)
         .bool_("blocking_degraded", metrics.degenerate_blocks > 0)
+        .set(
+            "profile",
+            Obj::new()
+                .str_("name", &status.name)
+                .str_("source", &status.source)
+                .int("generation", status.generation)
+                .bool_("stale", status.stale)
+                .done(),
+        )
+        .set("drift", drift_obj.done())
 }
 
 /// The `stats` response: raw counters for machines, a rendered table
-/// for humans (`report::service_stats`).
+/// for humans (`report::service_stats`).  The machine-profile identity
+/// and drift state ride in both forms.
 fn stats_response(state: &ServiceState) -> Json {
-    let snap = state.counters.snapshot();
+    let mut snap = state.counters.snapshot();
+    snap.profile = state.profile.status();
     let rows = state.sessions.rows();
     let cache = state.plans.stats();
     let render = report::service_stats(&snap, &cache, &rows);
+    let drift_rows = Json::Arr(
+        state
+            .profile
+            .regions()
+            .iter()
+            .map(|r| {
+                Obj::new()
+                    .str_("region", &r.region)
+                    .num("ewma", r.ewma)
+                    .int("samples", r.samples)
+                    .bool_("over", r.over)
+                    .done()
+            })
+            .collect(),
+    );
     let sessions = Json::Arr(
         rows.iter()
             .map(|r| {
@@ -674,12 +841,21 @@ fn stats_response(state: &ServiceState) -> Json {
         .num("plan_hit_rate", snap.plan_hit_rate())
         .int("plan_cache_size", cache.len as u64)
         .int("plan_cache_evictions", cache.evictions)
+        .int("plan_cache_generation", cache.generation)
         .int("queue_depth", state.queue_depth() as u64)
         .int("sessions", rows.len() as u64)
         .int("steps_total", snap.steps_total)
         .num("mstencils", snap.throughput() / 1e6)
         .num("model_error", snap.model_error())
         .int("model_samples", snap.intensity_samples)
+        .str_("profile_name", &snap.profile.name)
+        .str_("profile_source", &snap.profile.source)
+        .int("profile_generation", snap.profile.generation)
+        .bool_("profile_stale", snap.profile.stale)
+        .int("drift_flags", snap.profile.drift_flags)
+        .int("retunes", snap.profile.retunes)
+        .num("drift_threshold", state.profile.threshold())
+        .set("drift", drift_rows)
         .set("session_stats", sessions)
         .str_("render", &render)
         .done()
@@ -897,6 +1073,126 @@ mod tests {
         let st = req(&state, r#"{"op":"stats"}"#);
         assert_eq!(st.get("jobs_rejected").unwrap().as_usize(), Some(1));
         assert_eq!(st.get("jobs_completed").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn stats_carry_the_profile_identity() {
+        let s = svc();
+        let state = s.state();
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert_ok(&st);
+        assert_eq!(st.get("profile_name").unwrap().as_str(), Some("A100-80GB-PCIe"));
+        assert_eq!(st.get("profile_source").unwrap().as_str(), Some("builtin"));
+        assert_eq!(st.get("profile_generation").unwrap().as_usize(), Some(0));
+        assert_eq!(st.get("profile_stale").unwrap().as_bool(), Some(false));
+        assert_eq!(st.get("plan_cache_generation").unwrap().as_usize(), Some(0));
+        assert_eq!(st.get("drift").unwrap().as_arr().unwrap().len(), 0);
+        assert!(st.get("render").unwrap().as_str().unwrap().contains("A100-80GB-PCIe"));
+    }
+
+    #[test]
+    fn drift_flags_the_profile_and_empties_the_plan_cache() {
+        // A tiny drift threshold turns the blocked path's ordinary
+        // halo-overhead model error into a drift signal: the EWMA
+        // crosses on the third instrumented advance (min samples),
+        // which must stale the profile, bump its generation, and clear
+        // the plan cache — observable in replies and stats.
+        let opts = ServeOpts {
+            workers: 1,
+            drift_threshold: 1e-6,
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            ..Default::default()
+        };
+        let s = Service::start(opts);
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"d","shape":"star","d":2,"r":1,
+                "dtype":"double","domain":[64,64],"backend":"native","temporal":"blocked","threads":2}"#,
+        ));
+        let a1 = req(&state, r#"{"op":"advance","session":"d","steps":8,"t":4}"#);
+        assert_ok(&a1);
+        let p = a1.get("profile").unwrap();
+        assert_eq!(p.get("stale").unwrap().as_bool(), Some(false), "one sample cannot flag");
+        let dr = a1.get("drift").unwrap();
+        assert_eq!(dr.get("region").unwrap().as_str(), Some("mem/blocked"));
+        assert!(dr.get("ewma").unwrap().as_f64().unwrap() > 1e-6, "halo error feeds the EWMA");
+        let a2 = req(&state, r#"{"op":"advance","session":"d","steps":8,"t":4}"#);
+        assert_eq!(a2.get("profile").unwrap().get("stale").unwrap().as_bool(), Some(false));
+        let a3 = req(&state, r#"{"op":"advance","session":"d","steps":8,"t":4}"#);
+        assert_ok(&a3);
+        let p3 = a3.get("profile").unwrap();
+        assert_eq!(p3.get("stale").unwrap().as_bool(), Some(true), "{a3}");
+        assert_eq!(p3.get("generation").unwrap().as_usize(), Some(1));
+        assert_eq!(a3.get("drift").unwrap().get("flagged").unwrap().as_bool(), Some(true));
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert_eq!(st.get("profile_stale").unwrap().as_bool(), Some(true));
+        assert_eq!(st.get("profile_generation").unwrap().as_usize(), Some(1));
+        assert_eq!(st.get("drift_flags").unwrap().as_usize(), Some(1));
+        assert_eq!(st.get("plan_cache_size").unwrap().as_usize(), Some(0), "cache cleared");
+        assert_eq!(st.get("plan_cache_generation").unwrap().as_usize(), Some(1));
+        assert_eq!(st.get("retunes").unwrap().as_usize(), Some(0), "retune off by default");
+        let drift = st.get("drift").unwrap().as_arr().unwrap();
+        assert!(!drift.is_empty());
+        assert_eq!(drift[0].get("over").unwrap().as_bool(), Some(true));
+        // the invalidation is visible on the next advance: a re-plan
+        let a4 = req(&state, r#"{"op":"advance","session":"d","steps":8,"t":4}"#);
+        assert_eq!(a4.get("cache").unwrap().as_str(), Some("miss"));
+    }
+
+    #[test]
+    fn retune_auto_installs_a_measured_profile() {
+        // Auto-retune only replaces MEASURED profiles (the CLI refuses
+        // --retune auto on a builtin table), so seed with one.
+        let mut seed = crate::engines::builtin_profile(&Gpu::a100());
+        seed.source = crate::tune::ProfileSource::Measured;
+        seed.name = "seed-measured".to_string();
+        let opts = ServeOpts {
+            workers: 2,
+            drift_threshold: 1e-6,
+            retune: crate::tune::RetuneMode::Auto,
+            profile: seed,
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            ..Default::default()
+        };
+        let s = Service::start(opts);
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"r","shape":"star","d":2,"r":1,
+                "dtype":"double","domain":[64,64],"backend":"native","temporal":"blocked","threads":2}"#,
+        ));
+        for _ in 0..3 {
+            assert_ok(&req(&state, r#"{"op":"advance","session":"r","steps":8,"t":4}"#));
+        }
+        // The background retune runs on the pool; poll stats for it.
+        // Keep advancing while we wait: a retune rejected for probe
+        // noise (contention with this very test) is retried on the
+        // next drifted sample, so feeding samples guarantees progress.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let st = loop {
+            let st = req(&state, r#"{"op":"stats"}"#);
+            if st.get("retunes").unwrap().as_usize() == Some(1) {
+                break st;
+            }
+            assert!(std::time::Instant::now() < deadline, "retune never landed: {st}");
+            let _ = req(&state, r#"{"op":"advance","session":"r","steps":8,"t":4}"#);
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        };
+        assert_eq!(st.get("profile_source").unwrap().as_str(), Some("measured"));
+        assert_eq!(st.get("profile_name").unwrap().as_str(), Some("measured-native"));
+        assert_eq!(st.get("profile_stale").unwrap().as_bool(), Some(false));
+        // generation: 1 (drift flag) + 1 (install)
+        assert_eq!(st.get("profile_generation").unwrap().as_usize(), Some(2));
+        assert!(st.get("plan_cache_generation").unwrap().as_usize().unwrap() >= 2);
+        // subsequent plans run against the measured constants: the
+        // PlanKey's gpu identity is the measured profile's name
+        let a = req(&state, r#"{"op":"advance","session":"r","steps":2,"t":1}"#);
+        assert_ok(&a);
+        assert_eq!(
+            a.get("profile").unwrap().get("name").unwrap().as_str(),
+            Some("measured-native")
+        );
     }
 
     #[test]

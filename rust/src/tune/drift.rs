@@ -1,0 +1,750 @@
+//! Online drift detection: notice when the machine stopped matching the
+//! profile the planner is scoring against.
+//!
+//! Every instrumented `advance` reply already computes `model_err` —
+//! the signed relative gap between the achieved intensity and the
+//! model's prediction (`model::calib`).  This module keeps a per-region
+//! EWMA of |model_err| (regions are the executed configuration class:
+//! memory- vs compute-bound on the profile's scalar roof × sweep vs
+//! blocked × monolithic vs sharded), and flags the profile **stale**
+//! the moment any region's EWMA crosses the drift threshold with
+//! enough samples behind it.  Flagging bumps the profile *generation* —
+//! the service uses that to invalidate its plan cache — and, under
+//! `--retune auto`, schedules a background recalibration
+//! ([`tune::micro::measure`](crate::tune::micro::measure)) through the
+//! existing worker pool; installing the fresh profile bumps the
+//! generation again and re-arms the tracker.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::hardware::Gpu;
+
+use super::profile::MachineProfile;
+
+/// Default EWMA threshold at which a region is declared drifted — tied
+/// to the model's own region tolerance
+/// ([`calib::REGION_TOLERANCE`](crate::model::calib::REGION_TOLERANCE)):
+/// a sustained mean error outside the band the model calls "its
+/// predicted region" means the constants, not the run, are wrong.
+pub const DRIFT_THRESHOLD: f64 = crate::model::calib::REGION_TOLERANCE;
+
+/// EWMA smoothing factor (weight of the newest sample).
+pub const DRIFT_ALPHA: f64 = 0.25;
+
+/// Samples a region must accumulate before its EWMA may flag drift
+/// (one outlier never stales a profile).
+pub const DRIFT_MIN_SAMPLES: u64 = 3;
+
+/// Samples the wall-time channel averages into its baseline before it
+/// starts judging departures.
+pub const WALL_BASELINE_SAMPLES: u64 = 3;
+
+/// Floor on the wall-time departure threshold.  The intensity channel
+/// compares deterministic counters, so it can run at any threshold;
+/// wall-clock ratios are timing-noisy (scheduler jitter, cache state),
+/// so only a *sustained* departure of at least this fraction from the
+/// post-install baseline — a real throttle/contention/migration event,
+/// not millisecond jitter — may flag the profile.
+pub const WALL_MIN_DEPARTURE: f64 = 0.5;
+
+/// `--retune` policy: what the service does once drift flags a profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetuneMode {
+    /// Flag + invalidate only; an operator re-runs `stencilctl tune`.
+    Off,
+    /// Also schedule a background `tune::micro::measure` on the worker
+    /// pool and install the fresh profile when it lands.
+    Auto,
+}
+
+impl RetuneMode {
+    /// Parse a `--retune` value.
+    pub fn parse(s: &str) -> Result<RetuneMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Ok(RetuneMode::Off),
+            "auto" => Ok(RetuneMode::Auto),
+            other => bail!("unknown retune mode {other:?} (want off|auto)"),
+        }
+    }
+
+    /// The stable CLI name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RetuneMode::Off => "off",
+            RetuneMode::Auto => "auto",
+        }
+    }
+}
+
+/// The region label of one executed configuration — the bucket its
+/// model error feeds.  Bound classification comes from the *profile's*
+/// scalar roof (`model::criteria` regions over measured constants).
+pub fn region(mem_bound: bool, blocked: bool, sharded: bool) -> String {
+    format!(
+        "{}/{}{}",
+        if mem_bound { "mem" } else { "comp" },
+        if blocked { "blocked" } else { "sweep" },
+        if sharded { "/sharded" } else { "" }
+    )
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Ewma {
+    value: f64,
+    samples: u64,
+}
+
+/// One region's point-in-time drift state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionDrift {
+    /// Region label (see [`region`]).
+    pub region: String,
+    /// Current EWMA of |model_err|.
+    pub ewma: f64,
+    /// Samples folded in so far.
+    pub samples: u64,
+    /// EWMA above threshold with enough samples.
+    pub over: bool,
+}
+
+/// What one recorded sample did to the tracker.
+#[derive(Debug, Clone)]
+pub struct DriftReading {
+    /// Region the sample landed in.
+    pub region: String,
+    /// The region's EWMA after folding the sample in.
+    pub ewma: f64,
+    /// The configured threshold.
+    pub threshold: f64,
+    /// This region is currently over threshold (≥ min samples).
+    pub over: bool,
+    /// Samples the region has accumulated (since the last reset).
+    pub samples: u64,
+}
+
+/// Per-region EWMA tracker of |model_err|.
+#[derive(Debug)]
+pub struct DriftTracker {
+    threshold: f64,
+    alpha: f64,
+    min_samples: u64,
+    regions: Mutex<BTreeMap<String, Ewma>>,
+}
+
+impl DriftTracker {
+    /// Build a tracker with the default smoothing/min-sample policy.
+    pub fn new(threshold: f64) -> DriftTracker {
+        DriftTracker {
+            threshold,
+            alpha: DRIFT_ALPHA,
+            min_samples: DRIFT_MIN_SAMPLES,
+            regions: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The configured threshold.
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Fold one |model_err| sample into its region's EWMA.
+    pub fn record(&self, region: &str, rel_err: f64) -> DriftReading {
+        let err = rel_err.abs();
+        let mut g = self.regions.lock().unwrap();
+        let e = g.entry(region.to_string()).or_default();
+        e.value = if e.samples == 0 {
+            err
+        } else {
+            self.alpha * err + (1.0 - self.alpha) * e.value
+        };
+        e.samples += 1;
+        DriftReading {
+            region: region.to_string(),
+            ewma: e.value,
+            threshold: self.threshold,
+            over: e.samples >= self.min_samples && e.value > self.threshold,
+            samples: e.samples,
+        }
+    }
+
+    /// Point-in-time copy of every region's state (region name order).
+    pub fn snapshot(&self) -> Vec<RegionDrift> {
+        self.regions
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| RegionDrift {
+                region: k.clone(),
+                ewma: e.value,
+                samples: e.samples,
+                over: e.samples >= self.min_samples && e.value > self.threshold,
+            })
+            .collect()
+    }
+
+    /// The worst region EWMA (0 with no samples) and total samples.
+    pub fn worst(&self) -> (f64, u64) {
+        let g = self.regions.lock().unwrap();
+        let worst = g.values().map(|e| e.value).fold(0.0, f64::max);
+        let samples = g.values().map(|e| e.samples).sum();
+        (worst, samples)
+    }
+
+    /// Forget all history (a fresh profile was installed).
+    pub fn reset(&self) {
+        self.regions.lock().unwrap().clear();
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct WallEwma {
+    baseline_sum: f64,
+    ewma: f64,
+    samples: u64,
+}
+
+/// One wall-time sample's effect on its region.
+#[derive(Debug, Clone)]
+pub struct WallReading {
+    /// Region the sample landed in (listed as `wall/<region>`).
+    pub region: String,
+    /// EWMA of the measured/predicted wall-time ratio.
+    pub ratio_ewma: f64,
+    /// The locked-in baseline ratio (mean of the first
+    /// [`WALL_BASELINE_SAMPLES`] samples after arming).
+    pub baseline: f64,
+    /// `|ratio_ewma / baseline − 1|` — how far the machine's speed has
+    /// moved since the baseline.
+    pub departure: f64,
+    /// Departure exceeds the threshold with enough samples.
+    pub over: bool,
+    /// Samples folded in since the last reset.
+    pub samples: u64,
+}
+
+/// The machine-constant drift channel: per-region EWMA of the
+/// measured-over-predicted **wall-time ratio**, judged relative to a
+/// baseline locked in right after (re)arming.
+///
+/// The intensity channel cannot see constant drift at all — achieved
+/// intensity is `flops / bytes_moved`, two deterministic counters, and
+/// its prediction is pure workload geometry; neither side contains 𝔹,
+/// ℙ, or a clock.  The wall-time ratio's *absolute* level is equally
+/// meaningless (it carries the engine-η and GPU-model-vs-native-
+/// substrate bias), but a *change* in the ratio is exactly a machine-
+/// constant change: thermal throttling, core contention, a VM
+/// migration.  Baseline-relative judging absorbs the structural bias,
+/// so this channel works under the builtin datasheet profile too.
+#[derive(Debug)]
+pub struct WallTracker {
+    threshold: f64,
+    alpha: f64,
+    regions: Mutex<BTreeMap<String, WallEwma>>,
+}
+
+impl WallTracker {
+    /// Build a tracker; the effective threshold is floored at
+    /// [`WALL_MIN_DEPARTURE`].
+    pub fn new(threshold: f64) -> WallTracker {
+        WallTracker {
+            threshold: threshold.max(WALL_MIN_DEPARTURE),
+            alpha: DRIFT_ALPHA,
+            regions: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Fold one measured/predicted wall-time ratio into its region.
+    pub fn record(&self, region: &str, ratio: f64) -> WallReading {
+        let mut g = self.regions.lock().unwrap();
+        let e = g.entry(region.to_string()).or_default();
+        e.samples += 1;
+        if e.samples <= WALL_BASELINE_SAMPLES {
+            e.baseline_sum += ratio;
+            e.ewma = e.baseline_sum / e.samples as f64;
+        } else {
+            e.ewma = self.alpha * ratio + (1.0 - self.alpha) * e.ewma;
+        }
+        let baseline = e.baseline_sum / e.samples.min(WALL_BASELINE_SAMPLES) as f64;
+        let departure =
+            if baseline > 0.0 { (e.ewma / baseline - 1.0).abs() } else { 0.0 };
+        WallReading {
+            region: region.to_string(),
+            ratio_ewma: e.ewma,
+            baseline,
+            departure,
+            over: e.samples >= WALL_BASELINE_SAMPLES + DRIFT_MIN_SAMPLES
+                && departure > self.threshold,
+            samples: e.samples,
+        }
+    }
+
+    /// Point-in-time state of every region, as [`RegionDrift`] rows
+    /// labelled `wall/<region>` with the departure as the metric.
+    pub fn snapshot(&self) -> Vec<RegionDrift> {
+        self.regions
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| {
+                let baseline =
+                    e.baseline_sum / e.samples.min(WALL_BASELINE_SAMPLES).max(1) as f64;
+                let departure =
+                    if baseline > 0.0 { (e.ewma / baseline - 1.0).abs() } else { 0.0 };
+                RegionDrift {
+                    region: format!("wall/{k}"),
+                    ewma: departure,
+                    samples: e.samples,
+                    over: e.samples >= WALL_BASELINE_SAMPLES + DRIFT_MIN_SAMPLES
+                        && departure > self.threshold,
+                }
+            })
+            .collect()
+    }
+
+    /// Forget all history (baselines re-lock after a profile install).
+    pub fn reset(&self) {
+        self.regions.lock().unwrap().clear();
+    }
+}
+
+/// Profile identity + drift state, embedded in `ServiceSnapshot` and
+/// rendered by `report::service_stats`.  Integer permille fields keep
+/// the struct `Eq` like the rest of the snapshot.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ProfileStatus {
+    /// Profile name (the `Gpu` identity every `PlanKey` carries).
+    pub name: String,
+    /// Provenance ("builtin"/"measured").
+    pub source: String,
+    /// Monotonic generation: bumps when drift stales the profile and
+    /// again when a recalibrated profile is installed.
+    pub generation: u64,
+    /// Drift has flagged this profile; plans derived from it were
+    /// invalidated.
+    pub stale: bool,
+    /// Times drift flagged a profile stale over the service lifetime.
+    pub drift_flags: u64,
+    /// Background recalibrations completed.
+    pub retunes: u64,
+    /// Worst region EWMA of |model_err|, in permille.
+    pub drift_worst_permille: u64,
+    /// Model-error samples folded into the tracker since the last
+    /// profile install.
+    pub drift_samples: u64,
+}
+
+/// Cap on the exponential flag backoff: the sample count a region must
+/// re-accumulate before it may flag again never exceeds this.
+const MAX_FLAG_SAMPLES: u64 = 3072;
+
+/// Cooldown after a failed/rejected retune attempt before another may
+/// start, doubling per consecutive failure up to
+/// [`RETUNE_BACKOFF_MAX`].  Without it, a loaded server whose own load
+/// keeps probe spread above the rejection bound would run probe suites
+/// back-to-back on a pool worker forever.
+pub const RETUNE_BACKOFF_START: std::time::Duration = std::time::Duration::from_secs(2);
+
+/// Cap on the retune-attempt cooldown.
+pub const RETUNE_BACKOFF_MAX: std::time::Duration = std::time::Duration::from_secs(300);
+
+struct HubInner {
+    profile: MachineProfile,
+    generation: u64,
+    stale: bool,
+    retuning: bool,
+    drift_flags: u64,
+    retunes: u64,
+    /// No retune attempt may start before this instant (set by
+    /// [`ProfileHub::retune_failed`], cleared by install).
+    retune_not_before: Option<std::time::Instant>,
+    /// Current attempt cooldown (doubles per consecutive failure).
+    retune_backoff: std::time::Duration,
+    /// Samples a region must have accumulated before it may flag —
+    /// starts at [`DRIFT_MIN_SAMPLES`] and DOUBLES on every flag
+    /// (capped).  A genuine one-off machine change pays nothing (one
+    /// flag, one retune, error settles); a *structural* model error no
+    /// constants can fix — which would otherwise re-flag 3 samples
+    /// after every install, burning a pool worker on probes and
+    /// clearing the plan cache forever — decays into exponentially
+    /// rarer retunes instead.
+    next_flag_samples: u64,
+}
+
+impl HubInner {
+    /// The one flag policy both drift channels share: no re-flag while
+    /// stale, honor the exponential backoff window, then stale the
+    /// profile, bump the generation, and double the backoff.
+    fn try_flag(&mut self, samples: u64) -> bool {
+        if self.stale || samples < self.next_flag_samples {
+            return false;
+        }
+        self.stale = true;
+        self.generation += 1;
+        self.drift_flags += 1;
+        self.next_flag_samples = (self.next_flag_samples * 2).min(MAX_FLAG_SAMPLES);
+        true
+    }
+}
+
+/// The service's live profile: the current [`MachineProfile`], its
+/// generation, drift state, and the in-flight-recalibration latch.
+pub struct ProfileHub {
+    inner: Mutex<HubInner>,
+    drift: DriftTracker,
+    wall: WallTracker,
+}
+
+impl ProfileHub {
+    /// Start serving against `profile` with the given drift threshold
+    /// (the wall-time channel floors it at [`WALL_MIN_DEPARTURE`]).
+    pub fn new(profile: MachineProfile, threshold: f64) -> ProfileHub {
+        ProfileHub {
+            inner: Mutex::new(HubInner {
+                profile,
+                generation: 0,
+                stale: false,
+                retuning: false,
+                drift_flags: 0,
+                retunes: 0,
+                retune_not_before: None,
+                retune_backoff: RETUNE_BACKOFF_START,
+                next_flag_samples: DRIFT_MIN_SAMPLES,
+            }),
+            drift: DriftTracker::new(threshold),
+            wall: WallTracker::new(threshold),
+        }
+    }
+
+    /// The constants the planner/admission plane consumes right now.
+    pub fn gpu(&self) -> Gpu {
+        self.inner.lock().unwrap().profile.gpu()
+    }
+
+    /// A copy of the current profile.
+    pub fn profile(&self) -> MachineProfile {
+        self.inner.lock().unwrap().profile.clone()
+    }
+
+    /// Current generation (bumped by drift flags and installs).
+    pub fn generation(&self) -> u64 {
+        self.inner.lock().unwrap().generation
+    }
+
+    /// Whether drift has flagged the current profile stale.
+    pub fn stale(&self) -> bool {
+        self.inner.lock().unwrap().stale
+    }
+
+    /// The drift threshold in force.
+    pub fn threshold(&self) -> f64 {
+        self.drift.threshold()
+    }
+
+    /// Fold one model-error sample in; returns the region reading plus
+    /// whether this very sample flagged the profile stale (the caller
+    /// must then invalidate its plan cache).  Callers running
+    /// `--retune auto` should attempt [`ProfileHub::begin_retune`] on
+    /// EVERY `over` reading, not just the flagging one — the latch
+    /// keeps recalibration single-flight, and retrying per sample is
+    /// what lets a failed background retune heal instead of leaving a
+    /// stale profile in force forever.
+    pub fn record(&self, region: &str, rel_err: f64) -> (DriftReading, bool) {
+        let reading = self.drift.record(region, rel_err);
+        if !reading.over {
+            return (reading, false);
+        }
+        let flagged = self.inner.lock().unwrap().try_flag(reading.samples);
+        (reading, flagged)
+    }
+
+    /// Fold one measured/predicted wall-time ratio into the machine-
+    /// constant drift channel (see [`WallTracker`]).  Shares the
+    /// stale/generation/backoff state with the intensity channel, so a
+    /// wall-time flag invalidates plans and (under `--retune auto`)
+    /// schedules a recalibration exactly like an intensity flag.
+    pub fn record_wall(&self, region: &str, ratio: f64) -> (WallReading, bool) {
+        let reading = self.wall.record(region, ratio);
+        if !reading.over {
+            return (reading, false);
+        }
+        let flagged = self.inner.lock().unwrap().try_flag(reading.samples);
+        (reading, flagged)
+    }
+
+    /// Claim the (single) background recalibration slot; false when
+    /// one is already in flight or the post-failure cooldown has not
+    /// elapsed yet.
+    pub fn begin_retune(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.retuning {
+            return false;
+        }
+        if let Some(t) = g.retune_not_before {
+            if std::time::Instant::now() < t {
+                return false; // attempt cooldown after a failure
+            }
+        }
+        g.retuning = true;
+        true
+    }
+
+    /// A recalibration failed (probe error or contention-noisy
+    /// spread); release the latch and arm the attempt cooldown, which
+    /// doubles per consecutive failure.  The profile stays stale, and
+    /// an over-threshold sample after the cooldown re-enters the
+    /// retune path (see [`ProfileHub::record`]).
+    pub fn retune_failed(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.retuning = false;
+        g.retune_not_before = Some(std::time::Instant::now() + g.retune_backoff);
+        g.retune_backoff = (g.retune_backoff * 2).min(RETUNE_BACKOFF_MAX);
+    }
+
+    /// Install a freshly measured profile: generation bumps, the stale
+    /// flag clears, drift history resets.  The caller must also clear
+    /// its plan cache (plans scored under the old constants).
+    pub fn install(&self, profile: MachineProfile) {
+        let mut g = self.inner.lock().unwrap();
+        g.profile = profile;
+        g.generation += 1;
+        g.stale = false;
+        g.retuning = false;
+        g.retunes += 1;
+        g.retune_not_before = None;
+        g.retune_backoff = RETUNE_BACKOFF_START;
+        drop(g);
+        self.drift.reset();
+        self.wall.reset(); // wall baselines re-lock under the new constants
+    }
+
+    /// Whether the current profile's constants were measured on this
+    /// machine (vs the builtin datasheet table).  `--retune auto` only
+    /// replaces measured profiles: silently swapping an operator-
+    /// selected datasheet GPU for CPU-measured constants would change
+    /// the meaning of every subsequent plan.
+    pub fn measured(&self) -> bool {
+        self.inner.lock().unwrap().profile.source
+            == crate::tune::profile::ProfileSource::Measured
+    }
+
+    /// Point-in-time identity + drift state for stats.  The worst-
+    /// drift metric is the max over both channels (intensity EWMA,
+    /// wall-ratio departure); the sample count is the intensity
+    /// channel's alone — both channels see the same advances, so
+    /// summing them would double-count the evidence.
+    pub fn status(&self) -> ProfileStatus {
+        let (mut worst, samples) = self.drift.worst();
+        for r in self.wall.snapshot() {
+            worst = worst.max(r.ewma);
+        }
+        let g = self.inner.lock().unwrap();
+        ProfileStatus {
+            name: g.profile.name.clone(),
+            source: g.profile.source.as_str().to_string(),
+            generation: g.generation,
+            stale: g.stale,
+            drift_flags: g.drift_flags,
+            retunes: g.retunes,
+            drift_worst_permille: (worst * 1000.0).round() as u64,
+            drift_samples: samples,
+        }
+    }
+
+    /// Per-region drift state (for the stats reply's `drift` array):
+    /// intensity regions first, then the `wall/…` rows.
+    pub fn regions(&self) -> Vec<RegionDrift> {
+        let mut out = self.drift.snapshot();
+        out.extend(self.wall.snapshot());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines;
+    use crate::hardware::Gpu;
+
+    #[test]
+    fn retune_mode_parses() {
+        assert_eq!(RetuneMode::parse("off").unwrap(), RetuneMode::Off);
+        assert_eq!(RetuneMode::parse("AUTO").unwrap(), RetuneMode::Auto);
+        assert!(RetuneMode::parse("always").is_err());
+        assert_eq!(RetuneMode::Auto.as_str(), "auto");
+    }
+
+    #[test]
+    fn region_labels() {
+        assert_eq!(region(true, false, false), "mem/sweep");
+        assert_eq!(region(false, true, false), "comp/blocked");
+        assert_eq!(region(true, true, true), "mem/blocked/sharded");
+    }
+
+    #[test]
+    fn ewma_triggers_at_the_documented_threshold() {
+        let t = DriftTracker::new(DRIFT_THRESHOLD);
+        // errors comfortably inside the region tolerance never flag
+        for _ in 0..50 {
+            let r = t.record("mem/sweep", 0.05);
+            assert!(!r.over, "in-tolerance errors must never flag");
+        }
+        // errors past the threshold flag only once min-samples is met
+        let t = DriftTracker::new(DRIFT_THRESHOLD);
+        let r1 = t.record("comp/blocked", 0.9);
+        let r2 = t.record("comp/blocked", 0.9);
+        assert!(!r1.over && !r2.over, "below min samples");
+        let r3 = t.record("comp/blocked", 0.9);
+        assert!(r3.over, "EWMA {} > {} with 3 samples", r3.ewma, r3.threshold);
+        // sign is irrelevant: drift measures |err|
+        let t = DriftTracker::new(0.1);
+        for _ in 0..3 {
+            t.record("mem/sweep", -0.5);
+        }
+        assert!(t.snapshot()[0].over);
+    }
+
+    #[test]
+    fn ewma_math_is_the_documented_recurrence() {
+        let t = DriftTracker::new(0.25);
+        t.record("r", 0.4);
+        let r = t.record("r", 0.0);
+        // e1 = 0.4; e2 = 0.25·0 + 0.75·0.4 = 0.3
+        assert!((r.ewma - 0.3).abs() < 1e-12, "{}", r.ewma);
+        // regions are independent
+        let other = t.record("s", 0.2);
+        assert!((other.ewma - 0.2).abs() < 1e-12);
+        let (worst, samples) = t.worst();
+        assert!((worst - 0.3).abs() < 1e-12);
+        assert_eq!(samples, 3);
+    }
+
+    #[test]
+    fn hub_flags_once_per_episode_and_rearms_on_install() {
+        let hub = ProfileHub::new(engines::builtin_profile(&Gpu::a100()), 0.1);
+        assert_eq!(hub.generation(), 0);
+        let mut flagged = 0;
+        for _ in 0..6 {
+            let (_, now) = hub.record("mem/sweep", 0.9);
+            flagged += now as u32;
+        }
+        assert_eq!(flagged, 1, "one generation bump per drift episode");
+        let st = hub.status();
+        assert!(st.stale);
+        assert_eq!(st.generation, 1);
+        assert_eq!(st.drift_flags, 1);
+        assert_eq!(st.source, "builtin");
+        // only one retune slot
+        assert!(hub.begin_retune());
+        assert!(!hub.begin_retune());
+        // installing a measured profile re-arms everything
+        let mut fresh = engines::builtin_profile(&Gpu::a100());
+        fresh.name = "measured-native".to_string();
+        fresh.source = crate::tune::profile::ProfileSource::Measured;
+        hub.install(fresh);
+        let st = hub.status();
+        assert!(!st.stale);
+        assert_eq!(st.generation, 2);
+        assert_eq!(st.retunes, 1);
+        assert_eq!(st.drift_samples, 0, "drift history reset");
+        assert_eq!(hub.gpu().name, "measured-native");
+        assert!(hub.begin_retune(), "latch released by install");
+        // a second episode can flag again — but only after the
+        // exponential backoff window (doubled to 6 samples), so a
+        // structural error that re-crosses immediately after every
+        // install decays into exponentially rarer retunes
+        for i in 1..=6u64 {
+            let (_, now) = hub.record("mem/sweep", 0.9);
+            assert_eq!(now, i == 6, "sample {i}: backoff window is 6");
+        }
+        assert_eq!(hub.status().generation, 3);
+        assert_eq!(hub.status().drift_flags, 2);
+        assert!(hub.stale());
+    }
+
+    #[test]
+    fn wall_tracker_absorbs_bias_and_flags_sustained_slowdown() {
+        // A constant structural bias (η, GPU-model-vs-native scale) —
+        // ratio 1.55 forever — never flags: the baseline absorbs it.
+        let t = WallTracker::new(0.25); // floored to WALL_MIN_DEPARTURE
+        for _ in 0..50 {
+            assert!(!t.record("blocked", 1.55).over, "constant bias must not flag");
+        }
+        // A sustained 2× slowdown after the baseline locks in DOES
+        // flag once the EWMA departs ≥ 50% from the baseline.
+        let t = WallTracker::new(0.0);
+        for _ in 0..WALL_BASELINE_SAMPLES {
+            t.record("blocked", 1.55);
+        }
+        let mut flagged_at = None;
+        for i in 1..=10u64 {
+            let r = t.record("blocked", 3.1);
+            assert!((r.baseline - 1.55).abs() < 1e-12);
+            if r.over && flagged_at.is_none() {
+                flagged_at = Some(i);
+            }
+        }
+        // EWMA(α=.25) from 1.55 toward 3.1: departure crosses 0.5
+        // on the 3rd post-baseline sample (ewma ≈ 2.45, dep ≈ .58)
+        assert_eq!(flagged_at, Some(3));
+        // millisecond jitter — ±20% around the baseline — never flags
+        let t = WallTracker::new(0.0);
+        for i in 0..50 {
+            let ratio = if i % 2 == 0 { 1.2 } else { 0.8 };
+            assert!(!t.record("sweep", ratio).over, "jitter must not flag");
+        }
+        // snapshot rows are labelled and reset clears them
+        assert_eq!(t.snapshot()[0].region, "wall/sweep");
+        t.reset();
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn hub_wall_channel_shares_the_flag_path() {
+        let hub = ProfileHub::new(engines::builtin_profile(&Gpu::a100()), 0.1);
+        assert!(!hub.measured());
+        // baseline 1.0, then a sustained 4× slowdown
+        for _ in 0..WALL_BASELINE_SAMPLES {
+            let (r, now) = hub.record_wall("blocked", 1.0);
+            assert!(!r.over && !now);
+        }
+        let mut flags = 0;
+        for _ in 0..10 {
+            let (_, now) = hub.record_wall("blocked", 4.0);
+            flags += now as u32;
+        }
+        assert_eq!(flags, 1, "one flag per episode, like the intensity channel");
+        let st = hub.status();
+        assert!(st.stale);
+        assert_eq!(st.generation, 1);
+        assert!(st.drift_worst_permille >= 500, "{}", st.drift_worst_permille);
+        assert!(hub.regions().iter().any(|r| r.region == "wall/blocked" && r.over));
+    }
+
+    #[test]
+    fn retune_failure_arms_the_attempt_cooldown() {
+        let hub = ProfileHub::new(engines::builtin_profile(&Gpu::a100()), 0.1);
+        for _ in 0..3 {
+            hub.record("r", 0.5);
+        }
+        assert!(hub.begin_retune());
+        hub.retune_failed();
+        assert!(hub.status().stale, "profile stays stale after a failed retune");
+        // the latch is released but the attempt cooldown gates it — a
+        // loaded server whose load rejects every probe run must not
+        // execute probe suites back-to-back
+        assert!(!hub.begin_retune(), "cooldown must gate the next attempt");
+        // a successful install resets the cooldown: the next drift
+        // episode may retune immediately
+        let mut fresh = engines::builtin_profile(&Gpu::a100());
+        fresh.source = crate::tune::profile::ProfileSource::Measured;
+        hub.install(fresh);
+        for _ in 0..6 {
+            hub.record("r", 0.5); // flag backoff doubled to 6 samples
+        }
+        assert!(hub.status().stale);
+        assert!(hub.begin_retune(), "install cleared the cooldown");
+    }
+}

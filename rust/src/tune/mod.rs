@@ -1,0 +1,39 @@
+//! The measurement-and-feedback plane: measured machine profiles and
+//! online model recalibration.
+//!
+//! The paper validates its analytical model per device for a reason —
+//! the roofline constants (𝔹, ℙ, the machine balance point) shift
+//! materially across machines and dtypes, and every downstream decision
+//! in this stack (planner scoring, admission, criteria regions, the
+//! shard gain baseline) pivots on them.  This module closes the loop:
+//!
+//! * [`micro`] — short self-timed probes (streaming bandwidth, per-
+//!   (dtype, realization, threads) kernel throughput over the existing
+//!   [`NativeBackend`](crate::backend::NativeBackend) kernels) with
+//!   warmup and median trimming.
+//! * [`profile`] — the versioned, serializable [`profile::MachineProfile`]:
+//!   constants + provenance + timestamp, persisted via
+//!   [`util::json`](crate::util::json) with bit-exact hex f64 fields,
+//!   loaded at startup by `run`/`plan`/`serve`, falling back to the
+//!   static registry table
+//!   ([`engines::builtin_profile`](crate::engines::builtin_profile))
+//!   when absent.
+//! * [`drift`] — per-region EWMAs of every advance reply's `model_err`;
+//!   crossing the threshold flags the profile stale, bumps a profile
+//!   generation that invalidates the plan cache, and (with
+//!   `--retune auto`) schedules a background recalibration through the
+//!   service worker pool.
+//!
+//! Surface: `stencilctl tune [--quick|--full] [--out PATH]`, the
+//! `--profile`/`--retune` flags on run/plan/serve, and the
+//! `"profile"`/`"drift"` blocks in serve protocol replies.
+
+#![warn(missing_docs)]
+
+pub mod drift;
+pub mod micro;
+pub mod profile;
+
+pub use drift::{DriftTracker, ProfileHub, ProfileStatus, RetuneMode};
+pub use micro::MicroOpts;
+pub use profile::{MachineProfile, ProfileSource, PROFILE_VERSION};

@@ -1,0 +1,453 @@
+//! Versioned, serializable machine profiles — the measured constants the
+//! planner/admission/criteria plane runs against.
+//!
+//! A [`MachineProfile`] is the single record of the 𝔹/ℙ constants the
+//! model's rooflines are built from (Eq. 4–5), plus provenance: where
+//! each number came from (the static datasheet registry, or a
+//! [`tune::micro`](crate::tune::micro) probe run) and when.  Profiles
+//! persist as one-line JSON documents through [`crate::util::json`];
+//! every f64 constant is carried as 16 hex digits of its IEEE-754 bits
+//! (the same bit-exact transport the serve protocol's `hex` field
+//! encoding uses), so a profile round-trips through disk without losing
+//! a single ulp — the planner regression tests depend on that.
+//!
+//! With no profile on disk, [`resolve`] falls back to the builtin
+//! profile constructed from the static hardware registry
+//! ([`crate::engines::builtin_profile`]) — bit-identical to planning
+//! against the registry [`Gpu`] directly.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::hardware::{Gpu, PeakTable};
+use crate::util::json::Json;
+
+use super::micro::ProbeRecord;
+
+/// The profile format version this build writes and accepts.  Loading
+/// any other version string is a hard error (never a silent reinterpret
+/// of stale constants).
+pub const PROFILE_VERSION: &str = "tcs-machine-profile-v1";
+
+/// Where a profile's constants came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileSource {
+    /// The static hardware registry (datasheet numbers).
+    Builtin,
+    /// Measured on this machine by `stencilctl tune` / `tune::micro`.
+    Measured,
+}
+
+impl ProfileSource {
+    /// The stable wire name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProfileSource::Builtin => "builtin",
+            ProfileSource::Measured => "measured",
+        }
+    }
+
+    /// Parse a stored source tag.
+    pub fn parse(s: &str) -> Result<ProfileSource> {
+        match s {
+            "builtin" => Ok(ProfileSource::Builtin),
+            "measured" => Ok(ProfileSource::Measured),
+            other => bail!("unknown profile source {other:?} (want builtin|measured)"),
+        }
+    }
+}
+
+/// The measured (or registry) machine constants every downstream
+/// decision — planner scoring, admission, criteria regions, shard gain
+/// baselines — derives its rooflines from.
+#[derive(Debug, Clone)]
+pub struct MachineProfile {
+    /// Format version ([`PROFILE_VERSION`]); checked on load.
+    pub version: String,
+    /// Machine identity ("A100-80GB-PCIe", "measured-native", …).
+    /// Becomes [`Gpu::name`], and therefore part of every `PlanKey`.
+    pub name: String,
+    /// Provenance class of the constants.
+    pub source: ProfileSource,
+    /// Unix seconds the profile was created (0 for builtin profiles).
+    pub created_unix: u64,
+    /// 𝔹 — memory bandwidth in bytes/s (Eq. 4).
+    pub bandwidth: f64,
+    /// ℙ per execution unit × dtype (Eq. 4/20); `None` = path absent.
+    pub peaks: PeakTable,
+    /// Compute-peak derating factor (§4.2 profiling clock lock).
+    pub clock_lock: f64,
+    /// The raw probe records behind measured constants (empty for
+    /// builtin profiles) — provenance, not inputs to any decision.
+    pub probes: Vec<ProbeRecord>,
+}
+
+impl MachineProfile {
+    /// Reconstruct the [`Gpu`] the model plane consumes.  For a builtin
+    /// profile this is field-for-field identical to the registry entry
+    /// it was built from — the bit-identical static fallback.
+    pub fn gpu(&self) -> Gpu {
+        Gpu {
+            name: self.name.clone(),
+            bandwidth: self.bandwidth,
+            peaks: self.peaks,
+            clock_lock: self.clock_lock,
+        }
+    }
+
+    /// Derated copy with the profiling clock lock applied (mirrors
+    /// [`Gpu::locked`]).
+    pub fn locked(&self, factor: f64) -> MachineProfile {
+        assert!(factor > 0.0 && factor <= 1.0);
+        let mut p = self.clone();
+        p.clock_lock = factor;
+        p
+    }
+
+    /// One-line identity for logs and stats ("measured-native
+    /// (measured, tcs-machine-profile-v1)").
+    pub fn identity(&self) -> String {
+        format!("{} ({}, {})", self.name, self.source.as_str(), self.version)
+    }
+
+    /// Serialize to the on-disk JSON document.  Canonical f64 fields are
+    /// hex-encoded IEEE bits; a parallel `readable` object carries the
+    /// same numbers as plain JSON for humans and is ignored on load.
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("version".to_string(), Json::Str(self.version.clone()));
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("source".to_string(), Json::Str(self.source.as_str().to_string()));
+        o.insert("created_unix".to_string(), Json::Num(self.created_unix as f64));
+        o.insert("bandwidth".to_string(), hex_f64(self.bandwidth));
+        o.insert("clock_lock".to_string(), hex_f64(self.clock_lock));
+        let mut peaks = std::collections::BTreeMap::new();
+        let mut readable = std::collections::BTreeMap::new();
+        readable.insert("bandwidth".to_string(), Json::Num(self.bandwidth));
+        readable.insert("clock_lock".to_string(), Json::Num(self.clock_lock));
+        for (key, v) in peak_entries(&self.peaks) {
+            if let Some(v) = v {
+                peaks.insert(key.to_string(), hex_f64(v));
+                readable.insert(format!("peak_{key}"), Json::Num(v));
+            }
+        }
+        o.insert("peaks".to_string(), Json::Obj(peaks));
+        o.insert("readable".to_string(), Json::Obj(readable));
+        o.insert(
+            "probes".to_string(),
+            Json::Arr(self.probes.iter().map(ProbeRecord::to_json).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// Parse a stored profile, rejecting unknown version strings with a
+    /// clear error.
+    pub fn from_json(j: &Json) -> Result<MachineProfile> {
+        let version = j
+            .get("version")
+            .ok()
+            .and_then(|v| v.as_str())
+            .unwrap_or("<missing>")
+            .to_string();
+        if version != PROFILE_VERSION {
+            bail!(
+                "unsupported machine-profile version {version:?} \
+                 (this build reads {PROFILE_VERSION:?}; re-run `stencilctl tune`)"
+            );
+        }
+        let name = j
+            .get("name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("profile \"name\" must be a string"))?
+            .to_string();
+        let source = ProfileSource::parse(
+            j.get("source")?
+                .as_str()
+                .ok_or_else(|| anyhow!("profile \"source\" must be a string"))?,
+        )?;
+        let created_unix = j
+            .get("created_unix")
+            .ok()
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0)
+            .max(0) as u64;
+        let bandwidth = load_f64(j.get("bandwidth")?)
+            .context("profile field \"bandwidth\"")?;
+        if !(bandwidth.is_finite() && bandwidth > 0.0) {
+            bail!("profile bandwidth must be positive and finite, got {bandwidth}");
+        }
+        let clock_lock = load_f64(j.get("clock_lock")?)
+            .context("profile field \"clock_lock\"")?;
+        if !(clock_lock > 0.0 && clock_lock <= 1.0) {
+            bail!("profile clock_lock must be in (0, 1], got {clock_lock}");
+        }
+        let pk = j.get("peaks")?;
+        let peak = |key: &str| -> Result<Option<f64>> {
+            match pk.as_obj().and_then(|o| o.get(key)) {
+                None => Ok(None),
+                Some(v) => {
+                    let f = load_f64(v).with_context(|| format!("profile peak {key:?}"))?;
+                    if !(f.is_finite() && f > 0.0) {
+                        bail!("profile peak {key:?} must be positive and finite, got {f}");
+                    }
+                    Ok(Some(f))
+                }
+            }
+        };
+        let peaks = PeakTable {
+            cuda_f32: peak("cuda_f32")?,
+            cuda_f64: peak("cuda_f64")?,
+            tc_f32: peak("tc_f32")?,
+            tc_f64: peak("tc_f64")?,
+            sptc_f32: peak("sptc_f32")?,
+            sptc_f64: peak("sptc_f64")?,
+        };
+        if peaks.cuda_f32.is_none() && peaks.cuda_f64.is_none() {
+            bail!("profile must carry at least one scalar (cuda_*) peak");
+        }
+        let probes = match j.get("probes") {
+            Ok(Json::Arr(items)) => items
+                .iter()
+                .map(ProbeRecord::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        Ok(MachineProfile {
+            version,
+            name,
+            source,
+            created_unix,
+            bandwidth,
+            peaks,
+            clock_lock,
+            probes,
+        })
+    }
+
+    /// Write the profile as one JSON line.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing machine profile to {path:?}"))
+    }
+
+    /// Load a profile from disk (version-checked).
+    pub fn load(path: &Path) -> Result<MachineProfile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading machine profile {path:?}"))?;
+        let j = Json::parse_line(text.trim_end())
+            .with_context(|| format!("parsing machine profile {path:?}"))?;
+        MachineProfile::from_json(&j)
+            .with_context(|| format!("loading machine profile {path:?}"))
+    }
+}
+
+/// Resolve the effective profile for a run: an explicit `--profile`
+/// path loads (and must parse), otherwise the builtin profile of the
+/// requested registry GPU — today's static table, bit-identical.
+pub fn resolve(path: Option<&Path>, fallback: &Gpu) -> Result<MachineProfile> {
+    match path {
+        Some(p) => MachineProfile::load(p),
+        None => Ok(crate::engines::builtin_profile(fallback)),
+    }
+}
+
+/// The (key, value) view of a [`PeakTable`] used by the serializer.
+fn peak_entries(p: &PeakTable) -> [(&'static str, Option<f64>); 6] {
+    [
+        ("cuda_f32", p.cuda_f32),
+        ("cuda_f64", p.cuda_f64),
+        ("tc_f32", p.tc_f32),
+        ("tc_f64", p.tc_f64),
+        ("sptc_f32", p.sptc_f32),
+        ("sptc_f64", p.sptc_f64),
+    ]
+}
+
+/// Encode one f64 as its bit-exact hex form (the shared
+/// [`crate::util::json::hex_f64`] transport) wrapped as a JSON string.
+pub(crate) fn hex_f64(v: f64) -> Json {
+    Json::Str(crate::util::json::hex_f64(v))
+}
+
+/// Decode a canonical f64 field: a 16-hex-digit bit string (what this
+/// build writes — bit-exact, via [`crate::util::json::f64_from_hex`],
+/// which rejects any other string length so a quoted decimal like
+/// `"1e12"` errors instead of being reinterpreted as garbage bits), or
+/// a plain JSON number (accepted so profiles can be hand-written in
+/// tests and ops runbooks).
+pub(crate) fn load_f64(v: &Json) -> Result<f64> {
+    match v {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => crate::util::json::f64_from_hex(s),
+        other => bail!("expected a number or hex bit string, got {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines;
+
+    fn measured() -> MachineProfile {
+        MachineProfile {
+            version: PROFILE_VERSION.to_string(),
+            name: "measured-native".to_string(),
+            source: ProfileSource::Measured,
+            created_unix: 1_753_000_000,
+            bandwidth: 0.1 + 0.2, // a value decimal round-trips mangle
+            peaks: PeakTable {
+                cuda_f32: Some(1.0 / 3.0),
+                cuda_f64: Some(5e-324), // subnormal: hex must carry it
+                ..Default::default()
+            },
+            clock_lock: 1.0,
+            probes: vec![ProbeRecord {
+                name: "stream/triad".to_string(),
+                reps: 3,
+                median: 0.30000000000000004,
+                spread: 0.125,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let p = measured();
+        let j = Json::parse_line(&p.to_json().to_string()).unwrap();
+        let q = MachineProfile::from_json(&j).unwrap();
+        assert_eq!(q.name, p.name);
+        assert_eq!(q.source, p.source);
+        assert_eq!(q.created_unix, p.created_unix);
+        assert_eq!(q.bandwidth.to_bits(), p.bandwidth.to_bits());
+        assert_eq!(q.clock_lock.to_bits(), p.clock_lock.to_bits());
+        assert_eq!(
+            q.peaks.cuda_f32.unwrap().to_bits(),
+            p.peaks.cuda_f32.unwrap().to_bits()
+        );
+        assert_eq!(
+            q.peaks.cuda_f64.unwrap().to_bits(),
+            p.peaks.cuda_f64.unwrap().to_bits()
+        );
+        assert!(q.peaks.tc_f32.is_none() && q.peaks.sptc_f32.is_none());
+        assert_eq!(q.probes.len(), 1);
+        assert_eq!(q.probes[0].median.to_bits(), p.probes[0].median.to_bits());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("tcs_profile_roundtrip.json");
+        let p = measured();
+        p.save(&dir).unwrap();
+        let q = MachineProfile::load(&dir).unwrap();
+        assert_eq!(q.bandwidth.to_bits(), p.bandwidth.to_bits());
+        assert_eq!(q.identity(), p.identity());
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    #[test]
+    fn stale_version_strings_are_rejected() {
+        let mut p = measured();
+        p.version = "tcs-machine-profile-v0".to_string();
+        let j = Json::parse_line(&p.to_json().to_string()).unwrap();
+        let err = format!("{:#}", MachineProfile::from_json(&j).unwrap_err());
+        assert!(err.contains("unsupported machine-profile version"), "{err}");
+        assert!(err.contains(PROFILE_VERSION), "error must name the wanted version: {err}");
+        // missing version field reads as "<missing>" and is rejected too
+        let bare = Json::parse_line(r#"{"name":"x"}"#).unwrap();
+        assert!(MachineProfile::from_json(&bare).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_broken_constants() {
+        let good = measured().to_json().to_string();
+        for (from, to) in [
+            // zero bandwidth (hex bits of 0.0)
+            ("\"bandwidth\":\"3fd3333333333334\"", "\"bandwidth\":\"0000000000000000\""),
+            // clock lock > 1
+            ("\"clock_lock\":\"3ff0000000000000\"", "\"clock_lock\":2.0"),
+        ] {
+            let bad = good.replace(from, to);
+            assert_ne!(bad, good, "substitution {from:?} must apply");
+            let j = Json::parse_line(&bad).unwrap();
+            assert!(MachineProfile::from_json(&j).is_err(), "{to}");
+        }
+        // scalar-peak-free profiles are useless to the planner
+        let mut p = measured();
+        p.peaks.cuda_f32 = None;
+        p.peaks.cuda_f64 = None;
+        let j = Json::parse_line(&p.to_json().to_string()).unwrap();
+        assert!(MachineProfile::from_json(&j).is_err());
+        // a QUOTED decimal is rejected (16-hex-digit contract), never
+        // reinterpreted as a tiny subnormal bit pattern
+        let j = Json::parse_line(
+            r#"{"version":"tcs-machine-profile-v1","name":"x","source":"measured",
+                "bandwidth":"1e12","clock_lock":1,"peaks":{"cuda_f64":1e13}}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", MachineProfile::from_json(&j).unwrap_err());
+        assert!(err.contains("16 hex digits"), "{err}");
+    }
+
+    #[test]
+    fn hand_written_numeric_profiles_load() {
+        // Numeric (non-hex) constants are accepted on load so synthetic
+        // profiles can be written by hand.
+        let j = Json::parse_line(
+            r#"{"version":"tcs-machine-profile-v1","name":"synth","source":"measured",
+                "bandwidth":1e12,"clock_lock":1,"peaks":{"cuda_f64":1e13}}"#,
+        )
+        .unwrap();
+        let p = MachineProfile::from_json(&j).unwrap();
+        assert_eq!(p.bandwidth, 1e12);
+        assert_eq!(p.peaks.cuda_f64, Some(1e13));
+        assert_eq!(p.created_unix, 0);
+        assert!(p.probes.is_empty());
+    }
+
+    #[test]
+    fn resolve_without_path_is_the_builtin_static_table() {
+        let gpu = crate::hardware::Gpu::a100();
+        let p = resolve(None, &gpu).unwrap();
+        assert_eq!(p.source, ProfileSource::Builtin);
+        let g = p.gpu();
+        // bit-identical fallback: every constant matches the registry
+        assert_eq!(g.name, gpu.name);
+        assert_eq!(g.bandwidth.to_bits(), gpu.bandwidth.to_bits());
+        assert_eq!(g.clock_lock.to_bits(), gpu.clock_lock.to_bits());
+        assert_eq!(g.peaks.cuda_f32, gpu.peaks.cuda_f32);
+        assert_eq!(g.peaks.sptc_f32, gpu.peaks.sptc_f32);
+        // an explicit path that does not exist is a hard error, not a
+        // silent fallback
+        assert!(resolve(Some(Path::new("/nonexistent/profile.json")), &gpu).is_err());
+    }
+
+    #[test]
+    fn builtin_profile_comes_from_engines_single_source() {
+        let p = engines::builtin_profile(&crate::hardware::Gpu::v100());
+        assert_eq!(p.name, "V100-SXM2");
+        assert_eq!(p.version, PROFILE_VERSION);
+        assert!(p.peaks.tc_f32.is_none());
+        assert!(p.probes.is_empty());
+        assert_eq!(p.created_unix, 0);
+    }
+
+    #[test]
+    fn locked_derates_like_gpu_locked() {
+        let p = engines::builtin_profile(&crate::hardware::Gpu::a100());
+        let l = p.locked(0.87);
+        assert_eq!(l.gpu().clock_lock, 0.87);
+        let want = crate::hardware::Gpu::a100().locked(0.87);
+        assert_eq!(
+            l.gpu()
+                .roof(crate::model::perf::Unit::CudaCore, crate::model::perf::Dtype::F32)
+                .unwrap()
+                .peak_flops
+                .to_bits(),
+            want.roof(crate::model::perf::Unit::CudaCore, crate::model::perf::Dtype::F32)
+                .unwrap()
+                .peak_flops
+                .to_bits()
+        );
+    }
+}

@@ -115,6 +115,32 @@ impl Json {
     }
 }
 
+/// Encode one f64 as 16 hex digits of its IEEE-754 bits — the crate's
+/// bit-exact scalar transport (the serve protocol's `hex` field
+/// encoding, machine-profile constants).  Round-trips every value,
+/// including −0.0, subnormals, and non-finite bits, without moving a
+/// single ulp.
+pub fn hex_f64(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Decode the inverse of [`hex_f64`].  Exactly 16 hex digits are
+/// required: a shorter string is far more likely a decimal number
+/// someone quoted by mistake ("1e12" happens to be valid hex!) than a
+/// deliberate bit pattern, and reinterpreting it would silently
+/// produce garbage constants.
+pub fn f64_from_hex(s: &str) -> Result<f64> {
+    // `from_str_radix` would accept a leading '+', letting a 16-char
+    // "+<15 digits>" string masquerade as a bit pattern — require all
+    // 16 chars to be hex digits, not just the total length.
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        bail!("expected exactly 16 hex digits of IEEE-754 bits, got {s:?}");
+    }
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| anyhow!("bad hex f64 {s:?}: {e}"))
+}
+
 /// Nesting cap: the recursive-descent parser now reads untrusted
 /// network input (`stencilctl serve`), so a hostile line of 100k `[`s
 /// must be an error, not a stack overflow.
@@ -498,6 +524,24 @@ mod tests {
             let back = Json::parse_line(&line).unwrap().as_f64().unwrap();
             assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {line}");
         }
+    }
+
+    #[test]
+    fn hex_f64_roundtrips_every_bit_pattern() {
+        for v in [0.1 + 0.2, -0.0, 5e-324, f64::NAN, f64::INFINITY, 1.7976931348623157e308] {
+            let s = hex_f64(v);
+            assert_eq!(s.len(), 16);
+            assert_eq!(f64_from_hex(&s).unwrap().to_bits(), v.to_bits(), "{s}");
+        }
+        assert_eq!(hex_f64(1.0), "3ff0000000000000");
+        // quoted decimals must NOT be reinterpreted as bit patterns
+        let err = format!("{:#}", f64_from_hex("1e12").unwrap_err());
+        assert!(err.contains("16 hex digits"), "{err}");
+        assert!(f64_from_hex("").is_err());
+        assert!(f64_from_hex("zzzzzzzzzzzzzzzz").is_err());
+        assert!(f64_from_hex("3ff00000000000000").is_err(), "17 digits");
+        assert!(f64_from_hex("+3ff000000000000").is_err(), "sign + 15 digits");
+        assert!(f64_from_hex("-3ff000000000000").is_err());
     }
 
     #[test]
