@@ -41,6 +41,8 @@ fn ablation_a_planner_vs_fixed_t() {
         shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
         lanes: 1,
         threads: 1,
+        kernels: tc_stencil::backend::kernels::KernelMode::Auto,
+        kernel_peaks: Vec::new(),
     };
     let p = plan(&req, None).unwrap();
     let auto = p.chosen.prediction.gstencils();

@@ -10,6 +10,7 @@
 //!
 //! Run with: `cargo bench --bench native_backend` (BENCH_FAST=1 for CI).
 
+use tc_stencil::backend::kernels::{self, KernelMode};
 use tc_stencil::backend::{self, Backend, NativeBackend, TemporalMode};
 use tc_stencil::coordinator::grid::ShardPlan;
 use tc_stencil::coordinator::scheduler;
@@ -250,6 +251,84 @@ fn main() {
         .into_iter()
         .collect(),
     ));
+
+    // Per-kernel dispatch bars: the specialized SIMD registry vs the
+    // forced-generic offset-list loop, every probed shape × dtype, on
+    // interior-dominated domains (the boundary scalar path is identical
+    // in both modes, so it must not dilute the ratio).  The ≥2× bar is
+    // asserted on the shapes whose arithmetic is lean enough for the
+    // vector width to show (star-1, box-2); the rest are recorded.
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let mut kernel_bars: Vec<Json> = Vec::new();
+    for pattern in kernels::probe_shapes() {
+        let domain: Vec<usize> = match pattern.d {
+            1 => vec![if fast { 1 << 18 } else { 1 << 22 }],
+            2 => vec![if fast { 384 } else { 1024 }; 2],
+            _ => vec![if fast { 40 } else { 96 }; 3],
+        };
+        let n: usize = domain.iter().product();
+        let steps = 2usize;
+        let mut rng = Rng::new(0x4B52);
+        let init: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let weights = pattern.uniform_weights();
+        let items = (n * steps) as f64;
+        let key = kernels::shape_key(&pattern);
+        for dtype in [Dtype::F32, Dtype::F64] {
+            let job = backend::Job {
+                pattern,
+                dtype,
+                domain: domain.clone(),
+                steps,
+                t: 1,
+                temporal: TemporalMode::Sweep,
+                weights: weights.clone(),
+                threads,
+            };
+            let dl = dtype.as_str();
+            let mut ba = NativeBackend::with_mode(KernelMode::Auto);
+            let mut fa = init.clone();
+            let spec = b
+                .run_items(&format!("kernel/{key}/{dl}/specialized"), Some(items), || {
+                    ba.advance(&job, &mut fa).unwrap();
+                })
+                .throughput()
+                .unwrap();
+            let mut bg = NativeBackend::with_mode(KernelMode::Generic);
+            let mut fg = init.clone();
+            let gen = b
+                .run_items(&format!("kernel/{key}/{dl}/generic"), Some(items), || {
+                    bg.advance(&job, &mut fg).unwrap();
+                })
+                .throughput()
+                .unwrap();
+            let ratio = spec / gen;
+            let barred = key == "star-1d1r" || key == "box-2d1r";
+            println!(
+                ">>> kernel {key} {dl}: specialized {:.1} MSt/s vs generic {:.1} MSt/s \
+                 -> {:.2}x{}",
+                spec / 1e6,
+                gen / 1e6,
+                ratio,
+                match (barred, ratio >= 2.0) {
+                    (true, true) => " (meets >=2x bar)",
+                    (true, false) => " (BELOW 2x bar)",
+                    _ => "",
+                }
+            );
+            kernel_bars.push(Json::Obj(
+                [
+                    ("bar".to_string(), Json::Str(format!("kernel/{key}/{dl}"))),
+                    ("specialized_msts".to_string(), Json::Num(spec / 1e6)),
+                    ("generic_msts".to_string(), Json::Num(gen / 1e6)),
+                    ("speedup".to_string(), Json::Num(ratio)),
+                    ("threshold".to_string(), Json::Num(if barred { 2.0 } else { 1.0 })),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+        }
+    }
+    extras.push(("kernel_dispatch", Json::Arr(kernel_bars)));
 
     extras.push(("speedups", Json::Arr(speedups)));
     b.write_json("BENCH_native.json", extras).expect("write BENCH_native.json");

@@ -76,6 +76,8 @@ fn main() {
         shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
         lanes: 1,
         threads: 1,
+        kernels: tc_stencil::backend::kernels::KernelMode::Auto,
+        kernel_peaks: Vec::new(),
     };
     b.run("planner_plan", || {
         std::hint::black_box(plan(&req, Some(&rt.manifest)).unwrap());

@@ -15,6 +15,7 @@
 //!
 //! Emits `BENCH_tune.json` via `util::bench::write_bench_json`.
 
+use tc_stencil::backend::kernels::{KernelMode, KernelPeak};
 use tc_stencil::backend::{BackendKind, TemporalMode};
 use tc_stencil::coordinator::grid::ShardSpec;
 use tc_stencil::coordinator::planner::{self, Request};
@@ -27,7 +28,14 @@ use tc_stencil::util::bench::{write_bench_json, Bench};
 use tc_stencil::util::json::Json;
 use tc_stencil::util::stats;
 
-fn request(shape: Shape, d: usize, r: usize, dtype: Dtype, gpu: Gpu) -> Request {
+fn request(
+    shape: Shape,
+    d: usize,
+    r: usize,
+    dtype: Dtype,
+    gpu: Gpu,
+    kernel_peaks: Vec<KernelPeak>,
+) -> Request {
     Request {
         pattern: StencilPattern::new(shape, d, r).unwrap(),
         dtype,
@@ -43,6 +51,8 @@ fn request(shape: Shape, d: usize, r: usize, dtype: Dtype, gpu: Gpu) -> Request 
         shards: ShardSpec::Auto,
         lanes: 4,
         threads: 2,
+        kernels: KernelMode::Auto,
+        kernel_peaks,
     }
 }
 
@@ -99,8 +109,15 @@ fn main() {
     let mut diffs = 0usize;
     let mut rows = Vec::new();
     for &(shape, d, r, dtype) in &grid {
-        let pb = planner::plan(&request(shape, d, r, dtype, builtin.gpu()), None).unwrap();
-        let pm = planner::plan(&request(shape, d, r, dtype, measured.gpu()), None).unwrap();
+        // The builtin table has no per-kernel entries; the measured side
+        // plans against the ℙ of the kernel each candidate would run.
+        let pb =
+            planner::plan(&request(shape, d, r, dtype, builtin.gpu(), Vec::new()), None).unwrap();
+        let pm = planner::plan(
+            &request(shape, d, r, dtype, measured.gpu(), measured.kernels.clone()),
+            None,
+        )
+        .unwrap();
         let same = pb.chosen.engine.name == pm.chosen.engine.name
             && pb.chosen.t == pm.chosen.t
             && pb.chosen.temporal == pm.chosen.temporal
@@ -133,6 +150,52 @@ fn main() {
         grid.len()
     );
 
+    // ---- per-kernel ℙ spread: how much the flat peak hides ----
+    // One measured FLOP/s per (shape, dtype, realization); the max/min
+    // ratio per dtype is the headroom the per-kernel planner pricing
+    // recovers over a single flat constant.
+    let mut kernel_rows = Vec::new();
+    let spread_for = |dtype: Dtype| {
+        let v: Vec<f64> = measured
+            .kernels
+            .iter()
+            .filter(|k| k.dtype == dtype && k.flops > 0.0)
+            .map(|k| k.flops)
+            .collect();
+        let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = v.iter().cloned().fold(0.0f64, f64::max);
+        if v.is_empty() || lo <= 0.0 {
+            1.0
+        } else {
+            hi / lo
+        }
+    };
+    let (spread_f32, spread_f64) = (spread_for(Dtype::F32), spread_for(Dtype::F64));
+    for k in &measured.kernels {
+        println!(
+            "  kernel P  {:<10} {:<6} {:<7} {:>9.2} GFLOP/s",
+            k.shape,
+            k.dtype.as_str(),
+            if k.blocked { "blocked" } else { "sweep" },
+            k.flops / 1e9
+        );
+        kernel_rows.push(Json::Obj(
+            [
+                ("shape".to_string(), Json::Str(k.shape.clone())),
+                ("dtype".to_string(), Json::Str(k.dtype.as_str().to_string())),
+                ("blocked".to_string(), Json::Bool(k.blocked)),
+                ("gflops".to_string(), Json::Num(k.flops / 1e9)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+    }
+    println!(
+        "per-kernel P spread: f32 max/min {spread_f32:.2}x, f64 max/min {spread_f64:.2}x \
+         over {} measured kernels",
+        measured.kernels.len()
+    );
+
     let results = Json::Arr(b.results.iter().map(|m| m.to_json()).collect());
     write_bench_json(
         "BENCH_tune.json",
@@ -145,6 +208,9 @@ fn main() {
             ("decision_diffs", Json::Num(diffs as f64)),
             ("decisions_total", Json::Num(grid.len() as f64)),
             ("decision_grid", Json::Arr(rows)),
+            ("kernel_peaks", Json::Arr(kernel_rows)),
+            ("kernel_peak_spread_f32", Json::Num(spread_f32)),
+            ("kernel_peak_spread_f64", Json::Num(spread_f64)),
             ("results", results),
         ],
     )

@@ -1,0 +1,393 @@
+//! Shape-specialized, vectorized row kernels with runtime ISA dispatch.
+//!
+//! The paper's suitability criteria compare every Tensor-Core engine
+//! against the per-unit peak ℙ of the scalar baseline — a comparison
+//! that is only meaningful when the baseline actually runs near its
+//! vector peak ("Can Tensor Cores Benefit Memory-Bound Kernels?
+//! (No!)").  The generic executor in [`crate::backend::native`] walks a
+//! runtime offset list per output point; this module replaces its
+//! interior fast path with **monomorphized row kernels**: one function
+//! per tap count (the hot shapes star-1/2/3D and box-2/3D, their
+//! radius-2/3 variants, and the fused sweeps whose support lands on the
+//! same arities), unrolled at compile time and — on x86-64 with AVX2 /
+//! AVX-512 and on aarch64 with NEON — written directly in `std::arch`
+//! SIMD intrinsics behind runtime feature detection.  A portable
+//! unrolled-scalar fallback (guaranteed to autovectorize: fixed-arity
+//! inner loop over precomputed contiguous segments) covers every other
+//! machine.
+//!
+//! **Bit-identity invariant.**  Every kernel accumulates each output
+//! point in exactly the oracle's order (`golden::Weights::offsets` —
+//! hull row-major, zero weights skipped, starting from `0.0`): the SIMD
+//! variants vectorize *across output points* (independent lanes), never
+//! across taps, so the per-point addition chain is unchanged and f64
+//! results stay bit-identical to `golden::apply_once` and to the
+//! generic loop.  `--kernels generic` (or `STENCILCTL_KERNELS=generic`)
+//! disables dispatch entirely and reproduces the pre-specialization
+//! executor exactly.
+//!
+//! The registry resolves once per compiled kernel: tap count × dtype ×
+//! detected [`Isa`] → fn pointer, generic loop as the universal
+//! fallback.  The tune plane closes the loop: `tune::micro` probes each
+//! specialized kernel and stores per-(shape, dtype, temporal) measured
+//! ℙ entries ([`KernelPeak`]) in the machine profile, which the planner
+//! consumes via [`peak_for`] so sweep/blocked/shard crossovers are
+//! priced against the kernel that will actually run.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::model::perf::Dtype;
+use crate::model::stencil::StencilPattern;
+
+mod portable;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// A specialized interior row kernel: `out[i] = Σ_j w_j ·
+/// src[center + i + d_j]` for `i in 0..out.len()`, accumulating taps in
+/// the given order per point.  The caller guarantees every read is in
+/// bounds (the interior-window contract of the native executor's fast
+/// path); kernels re-check it through safe slice construction.
+pub(crate) type RowFn<T> = fn(deltas: &[(isize, T)], src: &[T], center: usize, out: &mut [T]);
+
+/// Element type the engine is instantiated at (f32 mirrors artifact
+/// precision, f64 mirrors the oracle).
+pub(crate) trait Scalar: Copy + Send + Sync + 'static {
+    /// Additive identity — the accumulation chain starts here, exactly
+    /// like the oracle's.
+    const ZERO: Self;
+    /// Convert an f64 weight/field value into this precision.
+    fn from_f64(v: f64) -> Self;
+    /// One accumulation step: `acc + w·v` (never fused — FMA would
+    /// change rounding and break bit-identity with the oracle).
+    fn mul_acc(acc: Self, w: Self, v: Self) -> Self;
+    /// The specialized row kernel for `arity` taps on `isa`, if one is
+    /// registered (ISA-specific first, portable unrolled fallback).
+    fn specialized(arity: usize, isa: Isa) -> Option<RowFn<Self>>;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn mul_acc(acc: Self, w: Self, v: Self) -> Self {
+        acc + w * v
+    }
+    fn specialized(arity: usize, isa: Isa) -> Option<RowFn<Self>> {
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 | Isa::Avx512 => {
+                x86::f64_row(arity).or_else(|| portable::row::<f64>(arity))
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => neon::f64_row(arity).or_else(|| portable::row::<f64>(arity)),
+            _ => portable::row::<f64>(arity),
+        }
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn mul_acc(acc: Self, w: Self, v: Self) -> Self {
+        acc + w * v
+    }
+    fn specialized(arity: usize, isa: Isa) -> Option<RowFn<Self>> {
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 | Isa::Avx512 => {
+                x86::f32_row(arity).or_else(|| portable::row::<f32>(arity))
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => neon::f32_row(arity).or_else(|| portable::row::<f32>(arity)),
+            _ => portable::row::<f32>(arity),
+        }
+    }
+}
+
+/// Tap counts with a registered specialized kernel: the base hot shapes
+/// (star-1/2/3D: 3/5/7, box-2D: 9, box-3D: 27), their radius-2/3
+/// variants (star-2D2R: 9, star-2D3R / star-3D2R: 13, box-2D2R: 25,
+/// box-2D3R: 49) and the fused-sweep supports that land on the same
+/// counts (box-2D1R t=2/3 → 25/49, star-2D1R t=2/3 → 13/25, star-3D1R
+/// t=2 → 25, star-1D1R any t ≤ 4, star-2D1R t=4 → 41).
+pub const ARITIES: [usize; 9] = [3, 5, 7, 9, 13, 25, 27, 41, 49];
+
+/// The instruction set a kernel was compiled/selected for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// x86-64 AVX-512 (512-bit); runs the 256-bit `std::arch` kernels —
+    /// explicit 512-bit intrinsics need a newer toolchain than our MSRV,
+    /// and LLVM prefers 256-bit lanes on most AVX-512 parts anyway —
+    /// but detection still reports the tier so profiles stay honest.
+    Avx512,
+    /// x86-64 AVX2: explicit 256-bit `std::arch` intrinsics.
+    Avx2,
+    /// aarch64 NEON: explicit 128-bit `std::arch` intrinsics.
+    Neon,
+    /// Portable unrolled-scalar kernels (compiler-autovectorized).
+    Portable,
+}
+
+impl Isa {
+    /// Runtime detection of the best available tier on this machine.
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx2") {
+                return Isa::Avx512;
+            }
+            if is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Isa::Neon;
+            }
+        }
+        Isa::Portable
+    }
+
+    /// Stable lowercase name (profiles, stats, kernel labels).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Isa::Avx512 => "avx512",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Portable => "portable",
+        }
+    }
+}
+
+/// How the executor resolves row kernels (`--kernels auto|generic`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Dispatch to the specialized kernel registry (generic loop only
+    /// when no arity matches) — the default.
+    Auto,
+    /// Escape hatch: always run the generic offset-list loop, exactly
+    /// reproducing the pre-specialization executor (planning included).
+    Generic,
+}
+
+impl KernelMode {
+    /// Parse a `--kernels` / `STENCILCTL_KERNELS` value.
+    pub fn parse(s: &str) -> Result<KernelMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelMode::Auto),
+            "generic" => Ok(KernelMode::Generic),
+            other => bail!("unknown kernel mode {other:?} (want auto|generic)"),
+        }
+    }
+
+    /// The stable CLI name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Generic => "generic",
+        }
+    }
+}
+
+/// Process-wide default mode override (0 = unset, 1 = auto, 2 = generic)
+/// — set once by the CLI from `--kernels`; the env var covers harnesses
+/// (CI runs the tier-1 suite under `STENCILCTL_KERNELS=generic`).
+static MODE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Install the process default (the CLI's `--kernels`).  Backends built
+/// afterwards via [`crate::backend::NativeBackend::new`] inherit it.
+pub fn set_default_mode(mode: KernelMode) {
+    let v = match mode {
+        KernelMode::Auto => 1,
+        KernelMode::Generic => 2,
+    };
+    MODE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The process default kernel mode: the CLI override if set, else the
+/// `STENCILCTL_KERNELS` environment variable, else [`KernelMode::Auto`].
+pub fn default_mode() -> KernelMode {
+    match MODE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => KernelMode::Auto,
+        2 => KernelMode::Generic,
+        _ => match std::env::var("STENCILCTL_KERNELS") {
+            Ok(v) if v.eq_ignore_ascii_case("generic") => KernelMode::Generic,
+            _ => KernelMode::Auto,
+        },
+    }
+}
+
+/// Resolve the specialized row kernel for a compiled kernel with
+/// `arity` non-zero taps, honoring the mode; `None` = generic loop.
+pub(crate) fn resolve<T: Scalar>(arity: usize, mode: KernelMode, isa: Isa) -> Option<RowFn<T>> {
+    match mode {
+        KernelMode::Generic => None,
+        KernelMode::Auto => T::specialized(arity, isa),
+    }
+}
+
+/// The stable per-shape key used by profiles and kernel labels:
+/// `"{shape}-{d}d{r}r"`, e.g. `"box-2d1r"`.
+pub fn shape_key(pattern: &StencilPattern) -> String {
+    format!("{}-{}d{}r", pattern.shape.as_str(), pattern.d, pattern.r)
+}
+
+/// The resolved kernel name surfaced in metrics, advance replies and
+/// service stats: `"{shape}/{dtype}/{isa}"` when a specialized kernel
+/// will run the interior, `"generic"` otherwise.
+pub fn label(pattern: &StencilPattern, dtype: Dtype, specialized: bool) -> String {
+    if specialized {
+        format!("{}/{}/{}", shape_key(pattern), dtype.as_str(), Isa::detect().as_str())
+    } else {
+        "generic".to_string()
+    }
+}
+
+/// One measured per-kernel peak: the ℙ entry of Eq. 4/5 for the
+/// specialized kernel that actually executes a (shape, dtype, temporal
+/// realization) triple — probed by `tune::micro`, carried by
+/// `tune::profile::MachineProfile`, consumed by the planner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelPeak {
+    /// Shape key as produced by [`shape_key`] (e.g. `"star-2d1r"`).
+    pub shape: String,
+    /// Element type the probe ran at.
+    pub dtype: Dtype,
+    /// `true` — probed through the temporal-blocked trapezoid path;
+    /// `false` — plain fused-sweep interior.
+    pub blocked: bool,
+    /// Measured FLOP/s (instrumented flops over execute time).
+    pub flops: f64,
+}
+
+/// Look up the measured per-kernel ℙ for a (pattern, dtype, temporal
+/// realization), if the profile carries one.
+pub fn peak_for(
+    peaks: &[KernelPeak],
+    pattern: &StencilPattern,
+    dtype: Dtype,
+    blocked: bool,
+) -> Option<f64> {
+    let key = shape_key(pattern);
+    peaks
+        .iter()
+        .find(|p| p.shape == key && p.dtype == dtype && p.blocked == blocked)
+        .map(|p| p.flops)
+}
+
+/// The canonical probe set for `tune::micro`: every shape with a
+/// registered base-kernel specialization — star-1/2/3D and box-2/3D at
+/// radius 1.
+pub fn probe_shapes() -> Vec<StencilPattern> {
+    use crate::model::stencil::Shape;
+    vec![
+        StencilPattern::new(Shape::Star, 1, 1).unwrap(),
+        StencilPattern::new(Shape::Star, 2, 1).unwrap(),
+        StencilPattern::new(Shape::Star, 3, 1).unwrap(),
+        StencilPattern::new(Shape::Box, 2, 1).unwrap(),
+        StencilPattern::new(Shape::Box, 3, 1).unwrap(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference: the exact per-point accumulation chain of the oracle
+    /// and the generic loop.
+    fn reference<T: Scalar>(deltas: &[(isize, T)], src: &[T], center: usize, out: &mut [T]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut acc = T::ZERO;
+            for &(d, w) in deltas {
+                acc = T::mul_acc(acc, w, src[(center as isize + i as isize + d) as usize]);
+            }
+            *o = acc;
+        }
+    }
+
+    fn synth_deltas<T: Scalar>(rng: &mut Rng, arity: usize) -> Vec<(isize, T)> {
+        // Distinct spread-out taps resembling a 2-D row context.
+        (0..arity)
+            .map(|j| ((j as isize - arity as isize / 2) * 11, T::from_f64(rng.normal())))
+            .collect()
+    }
+
+    fn check_dtype<T: Scalar + PartialEq + std::fmt::Debug>(seed: u64) {
+        let mut rng = Rng::new(seed);
+        for &arity in &ARITIES {
+            let len = 237; // odd: exercises every SIMD tail
+            let pad = 11 * (arity + 1);
+            let src: Vec<T> =
+                (0..len + 2 * pad).map(|_| T::from_f64(rng.normal())).collect();
+            let center = pad;
+            let deltas = synth_deltas::<T>(&mut rng, arity);
+            let mut want = vec![T::ZERO; len];
+            reference(&deltas, &src, center, &mut want);
+            for isa in [Isa::detect(), Isa::Portable] {
+                let row = T::specialized(arity, isa)
+                    .unwrap_or_else(|| panic!("no kernel for arity {arity} on {isa:?}"));
+                let mut got = vec![T::ZERO; len];
+                row(&deltas, &src, center, &mut got);
+                assert_eq!(got, want, "arity={arity} isa={isa:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_registered_arity_is_bit_identical_to_the_reference_f64() {
+        check_dtype::<f64>(41);
+    }
+
+    #[test]
+    fn every_registered_arity_is_bit_identical_to_the_reference_f32() {
+        check_dtype::<f32>(43);
+    }
+
+    #[test]
+    fn unregistered_arities_resolve_to_the_generic_loop() {
+        assert!(<f64 as Scalar>::specialized(125, Isa::detect()).is_none());
+        assert!(resolve::<f64>(9, KernelMode::Generic, Isa::detect()).is_none());
+        assert!(resolve::<f64>(9, KernelMode::Auto, Isa::Portable).is_some());
+    }
+
+    #[test]
+    fn mode_parsing_and_labels() {
+        assert_eq!(KernelMode::parse("AUTO").unwrap(), KernelMode::Auto);
+        assert_eq!(KernelMode::parse("generic").unwrap(), KernelMode::Generic);
+        assert!(KernelMode::parse("simd").is_err());
+        let p = crate::model::stencil::StencilPattern::new(
+            crate::model::stencil::Shape::Box,
+            2,
+            1,
+        )
+        .unwrap();
+        assert_eq!(shape_key(&p), "box-2d1r");
+        assert_eq!(label(&p, Dtype::F64, false), "generic");
+        let l = label(&p, Dtype::F64, true);
+        assert!(l.starts_with("box-2d1r/double/"), "{l}");
+    }
+
+    #[test]
+    fn peak_lookup_matches_on_the_full_triple() {
+        let p = probe_shapes();
+        let peaks = vec![
+            KernelPeak { shape: shape_key(&p[3]), dtype: Dtype::F64, blocked: false, flops: 1e9 },
+            KernelPeak { shape: shape_key(&p[3]), dtype: Dtype::F64, blocked: true, flops: 2e9 },
+        ];
+        assert_eq!(peak_for(&peaks, &p[3], Dtype::F64, false), Some(1e9));
+        assert_eq!(peak_for(&peaks, &p[3], Dtype::F64, true), Some(2e9));
+        assert_eq!(peak_for(&peaks, &p[3], Dtype::F32, false), None);
+        assert_eq!(peak_for(&peaks, &p[0], Dtype::F64, false), None);
+    }
+}

@@ -1,0 +1,114 @@
+//! Explicit NEON row kernels (aarch64), one per registered arity.
+//!
+//! 128-bit lanes: 2 × f64 or 4 × f32 output points per iteration,
+//! strictly mirroring the AVX2 kernels' structure — vectorization
+//! across output points only, per-point tap chain in deltas order, no
+//! FMA — so results are bit-identical to the scalar reference.  NEON
+//! is baseline on every aarch64 target std supports, so the kernels
+//! are safe functions; only the raw-pointer loads/stores are unsafe.
+
+use core::arch::aarch64::*;
+
+use super::RowFn;
+
+macro_rules! neon_rows {
+    ($($n:literal => $f64name:ident, $f32name:ident;)*) => {
+        $(
+            fn $f64name(deltas: &[(isize, f64)], src: &[f64], center: usize, out: &mut [f64]) {
+                assert_eq!(deltas.len(), $n);
+                let len = out.len();
+                let w: [f64; $n] = core::array::from_fn(|j| deltas[j].1);
+                let segs: [&[f64]; $n] =
+                    core::array::from_fn(|j| &src[(center as isize + deltas[j].0) as usize..][..len]);
+                let mut i = 0usize;
+                // SAFETY: every lane read stays inside segs[j] (length-
+                // checked above); the store stays inside `out`.
+                unsafe {
+                    let mut wv = [vdupq_n_f64(0.0); $n];
+                    for (v, &wj) in wv.iter_mut().zip(&w) {
+                        *v = vdupq_n_f64(wj);
+                    }
+                    while i + 2 <= len {
+                        let mut acc = vdupq_n_f64(0.0);
+                        for j in 0..$n {
+                            let v = vld1q_f64(segs[j].as_ptr().add(i));
+                            acc = vaddq_f64(acc, vmulq_f64(wv[j], v));
+                        }
+                        vst1q_f64(out.as_mut_ptr().add(i), acc);
+                        i += 2;
+                    }
+                }
+                while i < len {
+                    let mut acc = 0.0f64;
+                    for j in 0..$n {
+                        acc += w[j] * segs[j][i];
+                    }
+                    out[i] = acc;
+                    i += 1;
+                }
+            }
+
+            fn $f32name(deltas: &[(isize, f32)], src: &[f32], center: usize, out: &mut [f32]) {
+                assert_eq!(deltas.len(), $n);
+                let len = out.len();
+                let w: [f32; $n] = core::array::from_fn(|j| deltas[j].1);
+                let segs: [&[f32]; $n] =
+                    core::array::from_fn(|j| &src[(center as isize + deltas[j].0) as usize..][..len]);
+                let mut i = 0usize;
+                // SAFETY: as in the f64 kernel — all lane accesses are
+                // inside length-checked slices.
+                unsafe {
+                    let mut wv = [vdupq_n_f32(0.0); $n];
+                    for (v, &wj) in wv.iter_mut().zip(&w) {
+                        *v = vdupq_n_f32(wj);
+                    }
+                    while i + 4 <= len {
+                        let mut acc = vdupq_n_f32(0.0);
+                        for j in 0..$n {
+                            let v = vld1q_f32(segs[j].as_ptr().add(i));
+                            acc = vaddq_f32(acc, vmulq_f32(wv[j], v));
+                        }
+                        vst1q_f32(out.as_mut_ptr().add(i), acc);
+                        i += 4;
+                    }
+                }
+                while i < len {
+                    let mut acc = 0.0f32;
+                    for j in 0..$n {
+                        acc += w[j] * segs[j][i];
+                    }
+                    out[i] = acc;
+                    i += 1;
+                }
+            }
+        )*
+
+        /// f64 NEON kernel for `arity` taps.
+        pub(super) fn f64_row(arity: usize) -> Option<RowFn<f64>> {
+            Some(match arity {
+                $($n => $f64name,)*
+                _ => return None,
+            })
+        }
+
+        /// f32 NEON kernel for `arity` taps.
+        pub(super) fn f32_row(arity: usize) -> Option<RowFn<f32>> {
+            Some(match arity {
+                $($n => $f32name,)*
+                _ => return None,
+            })
+        }
+    };
+}
+
+neon_rows! {
+    3 => neon_f64_3, neon_f32_3;
+    5 => neon_f64_5, neon_f32_5;
+    7 => neon_f64_7, neon_f32_7;
+    9 => neon_f64_9, neon_f32_9;
+    13 => neon_f64_13, neon_f32_13;
+    25 => neon_f64_25, neon_f32_25;
+    27 => neon_f64_27, neon_f32_27;
+    41 => neon_f64_41, neon_f32_41;
+    49 => neon_f64_49, neon_f32_49;
+}

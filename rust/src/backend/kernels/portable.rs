@@ -1,0 +1,46 @@
+//! Portable unrolled-scalar row kernels.
+//!
+//! One monomorphized function per registered arity: the tap count is a
+//! const generic, so the inner per-point loop fully unrolls into a
+//! fixed chain of `acc + w·v` steps over precomputed contiguous
+//! segments — a shape LLVM reliably autovectorizes across output
+//! points (independent lanes) without reassociating the per-point
+//! chain, preserving bit-identity with the oracle.
+
+use super::{RowFn, Scalar};
+
+/// The fixed-arity row body. `segs[j]` is the `j`-th tap's shifted view
+/// of `src`, so `out[i] = Σ_j w[j]·segs[j][i]` with the sum evaluated
+/// left-to-right from zero — the oracle's exact accumulation order.
+#[inline(always)]
+fn row_n<T: Scalar, const N: usize>(deltas: &[(isize, T)], src: &[T], center: usize, out: &mut [T]) {
+    assert_eq!(deltas.len(), N);
+    let len = out.len();
+    let w: [T; N] = core::array::from_fn(|j| deltas[j].1);
+    let segs: [&[T]; N] =
+        core::array::from_fn(|j| &src[(center as isize + deltas[j].0) as usize..][..len]);
+    for (i, o) in out.iter_mut().enumerate() {
+        let mut acc = T::ZERO;
+        for j in 0..N {
+            acc = T::mul_acc(acc, w[j], segs[j][i]);
+        }
+        *o = acc;
+    }
+}
+
+/// Look up the portable kernel for `arity` taps — registered for
+/// exactly the counts in [`super::ARITIES`].
+pub(super) fn row<T: Scalar>(arity: usize) -> Option<RowFn<T>> {
+    Some(match arity {
+        3 => row_n::<T, 3>,
+        5 => row_n::<T, 5>,
+        7 => row_n::<T, 7>,
+        9 => row_n::<T, 9>,
+        13 => row_n::<T, 13>,
+        25 => row_n::<T, 25>,
+        27 => row_n::<T, 27>,
+        41 => row_n::<T, 41>,
+        49 => row_n::<T, 49>,
+        _ => return None,
+    })
+}

@@ -1,0 +1,123 @@
+//! Explicit AVX2 row kernels (x86-64), one per registered arity.
+//!
+//! 256-bit lanes: 4 × f64 or 8 × f32 output points per iteration.
+//! Vectorization is strictly *across output points* — each lane runs
+//! the same `acc + w·v` tap chain in deltas order, so results are
+//! bit-identical to the scalar reference (no FMA contraction, no
+//! reassociation).  The bounds contract is re-checked through safe
+//! slice construction before any raw-pointer load.  Callers may only
+//! select these kernels after `is_x86_feature_detected!("avx2")`.
+
+use core::arch::x86_64::*;
+
+use super::RowFn;
+
+macro_rules! avx2_rows {
+    ($($n:literal => $f64name:ident / $f64wrap:ident, $f32name:ident / $f32wrap:ident;)*) => {
+        $(
+            #[target_feature(enable = "avx2")]
+            unsafe fn $f64name(deltas: &[(isize, f64)], src: &[f64], center: usize, out: &mut [f64]) {
+                assert_eq!(deltas.len(), $n);
+                let len = out.len();
+                let w: [f64; $n] = core::array::from_fn(|j| deltas[j].1);
+                let segs: [&[f64]; $n] =
+                    core::array::from_fn(|j| &src[(center as isize + deltas[j].0) as usize..][..len]);
+                let mut i = 0usize;
+                unsafe {
+                    let mut wv = [_mm256_setzero_pd(); $n];
+                    for (v, &wj) in wv.iter_mut().zip(&w) {
+                        *v = _mm256_set1_pd(wj);
+                    }
+                    while i + 4 <= len {
+                        let mut acc = _mm256_setzero_pd();
+                        for j in 0..$n {
+                            let v = _mm256_loadu_pd(segs[j].as_ptr().add(i));
+                            acc = _mm256_add_pd(acc, _mm256_mul_pd(wv[j], v));
+                        }
+                        _mm256_storeu_pd(out.as_mut_ptr().add(i), acc);
+                        i += 4;
+                    }
+                }
+                while i < len {
+                    let mut acc = 0.0f64;
+                    for j in 0..$n {
+                        acc += w[j] * segs[j][i];
+                    }
+                    out[i] = acc;
+                    i += 1;
+                }
+            }
+
+            #[target_feature(enable = "avx2")]
+            unsafe fn $f32name(deltas: &[(isize, f32)], src: &[f32], center: usize, out: &mut [f32]) {
+                assert_eq!(deltas.len(), $n);
+                let len = out.len();
+                let w: [f32; $n] = core::array::from_fn(|j| deltas[j].1);
+                let segs: [&[f32]; $n] =
+                    core::array::from_fn(|j| &src[(center as isize + deltas[j].0) as usize..][..len]);
+                let mut i = 0usize;
+                unsafe {
+                    let mut wv = [_mm256_setzero_ps(); $n];
+                    for (v, &wj) in wv.iter_mut().zip(&w) {
+                        *v = _mm256_set1_ps(wj);
+                    }
+                    while i + 8 <= len {
+                        let mut acc = _mm256_setzero_ps();
+                        for j in 0..$n {
+                            let v = _mm256_loadu_ps(segs[j].as_ptr().add(i));
+                            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv[j], v));
+                        }
+                        _mm256_storeu_ps(out.as_mut_ptr().add(i), acc);
+                        i += 8;
+                    }
+                }
+                while i < len {
+                    let mut acc = 0.0f32;
+                    for j in 0..$n {
+                        acc += w[j] * segs[j][i];
+                    }
+                    out[i] = acc;
+                    i += 1;
+                }
+            }
+            fn $f64wrap(deltas: &[(isize, f64)], src: &[f64], center: usize, out: &mut [f64]) {
+                // SAFETY: the registry only hands out this kernel after
+                // runtime AVX2 detection succeeded on this machine.
+                unsafe { $f64name(deltas, src, center, out) }
+            }
+
+            fn $f32wrap(deltas: &[(isize, f32)], src: &[f32], center: usize, out: &mut [f32]) {
+                // SAFETY: as above — gated on runtime AVX2 detection.
+                unsafe { $f32name(deltas, src, center, out) }
+            }
+        )*
+
+        /// f64 AVX2 kernel for `arity` taps (caller verified AVX2).
+        pub(super) fn f64_row(arity: usize) -> Option<RowFn<f64>> {
+            Some(match arity {
+                $($n => $f64wrap,)*
+                _ => return None,
+            })
+        }
+
+        /// f32 AVX2 kernel for `arity` taps (caller verified AVX2).
+        pub(super) fn f32_row(arity: usize) -> Option<RowFn<f32>> {
+            Some(match arity {
+                $($n => $f32wrap,)*
+                _ => return None,
+            })
+        }
+    };
+}
+
+avx2_rows! {
+    3 => avx2_f64_3 / row_f64_3, avx2_f32_3 / row_f32_3;
+    5 => avx2_f64_5 / row_f64_5, avx2_f32_5 / row_f32_5;
+    7 => avx2_f64_7 / row_f64_7, avx2_f32_7 / row_f32_7;
+    9 => avx2_f64_9 / row_f64_9, avx2_f32_9 / row_f32_9;
+    13 => avx2_f64_13 / row_f64_13, avx2_f32_13 / row_f32_13;
+    25 => avx2_f64_25 / row_f64_25, avx2_f32_25 / row_f32_25;
+    27 => avx2_f64_27 / row_f64_27, avx2_f32_27 / row_f32_27;
+    41 => avx2_f64_41 / row_f64_41, avx2_f32_41 / row_f32_41;
+    49 => avx2_f64_49 / row_f64_49, avx2_f32_49 / row_f32_49;
+}

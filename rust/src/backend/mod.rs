@@ -27,6 +27,7 @@
 
 #![warn(missing_docs)]
 
+pub mod kernels;
 pub mod native;
 pub mod pjrt;
 

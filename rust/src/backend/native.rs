@@ -11,10 +11,13 @@
 //! * output rows are split across worker threads (disjoint `chunks_mut`
 //!   slabs, no locks);
 //! * each row is halo-split: the interior column window `[r·t, N−r·t)`
-//!   of an interior row takes the fast path — per offset, one contiguous
-//!   `zip` accumulation over the row segment, no per-element bounds
-//!   checks — while boundary rows/columns take the scalar slow path with
-//!   the zero-Dirichlet halo;
+//!   of an interior row takes the fast path — a shape-specialized,
+//!   vectorized row kernel from [`crate::backend::kernels`] when the
+//!   tap count is registered (AVX2/NEON intrinsics or the unrolled
+//!   portable body, selected once at compile time by runtime ISA
+//!   detection), else the generic offset-major `zip` accumulation —
+//!   while boundary rows/columns take the scalar slow path with the
+//!   zero-Dirichlet halo;
 //! * fields are double-buffered and swapped between launches.
 //!
 //! **Temporal blocking** ([`TemporalMode::Blocked`]) — the paper's
@@ -28,6 +31,13 @@
 //! write of the domain per `t` steps instead of per step.  Neighboring
 //! tiles recompute the overlapped halo region (overlapped tiling — no
 //! inter-tile dependencies, so tiles parallelize freely across workers).
+//! The trapezoid reuses `step_rows`, so the same specialized row kernel
+//! serves both realizations.
+//!
+//! Compiled kernels (offsets + flat deltas + resolved row kernel) are
+//! cached inside [`NativeBackend`] per (dims, depth, weight bits), so
+//! repeated `advance` calls on a resident session stop re-deriving
+//! strides, neighbor tables, and fused hulls.
 //!
 //! Accumulation order per output point is exactly the oracle's (hull
 //! row-major, zero weights skipped, out-of-domain reads contribute
@@ -35,7 +45,10 @@
 //! `golden::apply_fused` / `apply_once` chains and f64 blocked results
 //! are bit-identical to chained `golden::apply_once` (sequential
 //! semantics); f32 jobs run genuinely in f32 (mirroring the AOT
-//! artifacts' precision) and match the oracle to rounding.
+//! artifacts' precision) and match the oracle to rounding.  The
+//! specialized row kernels preserve the same per-point chain (they
+//! vectorize across output points, never across taps), so the guarantee
+//! holds under dispatch — and `--kernels generic` removes them entirely.
 //!
 //! [`RunMetrics`] carries instrumented traffic accounting: `bytes_moved`
 //! counts principal-memory reads+writes of field-level buffers (tile
@@ -43,44 +56,23 @@
 //! counts `2 × non-zero kernel points` per computed output point, and
 //! their ratio is the *achieved* arithmetic intensity that
 //! [`crate::model::calib`] compares against the model's prediction.
+//! `interior_points`/`boundary_points` split every computed point by
+//! which path produced it, so a mostly-boundary domain is visible when
+//! model error spikes.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::backend::kernels::{self, KernelMode, RowFn, Scalar};
 use crate::backend::{Backend, Job, ShardPhase, TemporalMode};
 use crate::coordinator::grid::ShardPlan;
 use crate::coordinator::metrics::RunMetrics;
 use crate::model::perf::Dtype;
 use crate::sim::golden;
-
-/// Element type the engine is instantiated at (f32 mirrors artifact
-/// precision, f64 mirrors the oracle).
-trait Scalar: Copy + Send + Sync + 'static {
-    const ZERO: Self;
-    fn from_f64(v: f64) -> Self;
-    fn mul_acc(acc: Self, w: Self, v: Self) -> Self;
-}
-
-impl Scalar for f64 {
-    const ZERO: Self = 0.0;
-    fn from_f64(v: f64) -> Self {
-        v
-    }
-    fn mul_acc(acc: Self, w: Self, v: Self) -> Self {
-        acc + w * v
-    }
-}
-
-impl Scalar for f32 {
-    const ZERO: Self = 0.0;
-    fn from_f64(v: f64) -> Self {
-        v as f32
-    }
-    fn mul_acc(acc: Self, w: Self, v: Self) -> Self {
-        acc + w * v
-    }
-}
 
 /// A stencil kernel compiled against one domain shape.
 struct Kernel<T> {
@@ -90,16 +82,19 @@ struct Kernel<T> {
     offsets: Vec<(Vec<i64>, T)>,
     /// The same offsets as flat row-major deltas (interior fast path).
     deltas: Vec<(isize, T)>,
+    /// Specialized row kernel for the interior window, when the tap
+    /// count is registered for this dtype/ISA and dispatch is enabled.
+    row: Option<RowFn<T>>,
 }
 
-fn compile<T: Scalar>(w: &golden::Weights, dims: &[usize]) -> Kernel<T> {
+fn compile<T: Scalar>(w: &golden::Weights, dims: &[usize], mode: KernelMode) -> Kernel<T> {
     let st = golden::strides_for(dims);
     let offsets: Vec<(Vec<i64>, T)> = w
         .offsets()
         .into_iter()
         .map(|(off, v)| (off, T::from_f64(v)))
         .collect();
-    let deltas = offsets
+    let deltas: Vec<(isize, T)> = offsets
         .iter()
         .map(|(off, v)| {
             let d: isize = off
@@ -110,7 +105,8 @@ fn compile<T: Scalar>(w: &golden::Weights, dims: &[usize]) -> Kernel<T> {
             (d, *v)
         })
         .collect();
-    Kernel { r: w.r(), offsets, deltas }
+    let row = kernels::resolve::<T>(deltas.len(), mode, kernels::Isa::detect());
+    Kernel { r: w.r(), offsets, deltas, row }
 }
 
 /// One output point via the scalar slow path (zero-Dirichlet halo),
@@ -157,7 +153,8 @@ fn point<T: Scalar>(
 /// the last); a dim-0 slab with full extent in the other dims is a
 /// contiguous row range, which is what lets the blocked path reuse the
 /// flat-delta fast path unchanged: strides of dims `1..` are unaffected
-/// by slicing dim 0.
+/// by slicing dim 0.  Returns `(interior, boundary)` point counts —
+/// the fast-path coverage split surfaced through [`RunMetrics`].
 fn step_rows<T: Scalar>(
     dims: &[usize],
     k: &Kernel<T>,
@@ -165,7 +162,7 @@ fn step_rows<T: Scalar>(
     src_row0: usize,
     dst: &mut [T],
     dst_row0: usize,
-) {
+) -> (u64, u64) {
     let d = dims.len();
     let n_last = dims[d - 1];
     let r = k.r;
@@ -176,6 +173,8 @@ fn step_rows<T: Scalar>(
     let (clo, chi) = if n_last > 2 * r { (r, n_last - r) } else { (0, 0) };
     let mut outer = vec![0usize; d - 1];
     let mut coords = vec![0i64; d];
+    let mut interior = 0u64;
+    let mut boundary = 0u64;
     for lr in 0..nrows {
         let rr = dst_row0 + lr;
         let mut rem = rr;
@@ -187,55 +186,83 @@ fn step_rows<T: Scalar>(
         let row_base = rr * n_last;
         let drow = &mut dst[lr * n_last..(lr + 1) * n_last];
         if row_interior && chi > clo {
-            // Fast path: the whole interior window, offset-major, one
-            // contiguous source segment per offset.  Bounds are
-            // guaranteed by the interior condition (and, on the blocked
-            // path, by the trapezoid's halo bookkeeping), so the only
-            // checks left are one slice construction per offset per row.
+            // Fast path: the whole interior window in one call.  Bounds
+            // are guaranteed by the interior condition (and, on the
+            // blocked path, by the trapezoid's halo bookkeeping), so the
+            // only checks left are one slice construction per offset.
             let out = &mut drow[clo..chi];
-            out.fill(T::ZERO);
-            for &(delta, w) in &k.deltas {
-                let start = ((row_base + clo) as isize + delta - src_base as isize) as usize;
-                let seg = &src[start..start + (chi - clo)];
-                for (o, &v) in out.iter_mut().zip(seg) {
-                    *o = T::mul_acc(*o, w, v);
+            if let Some(row) = k.row {
+                // Specialized: vectorized across the window's points,
+                // per-point tap chain in oracle order (bit-identical).
+                let center = ((row_base + clo) as isize - src_base as isize) as usize;
+                row(&k.deltas, src, center, out);
+            } else {
+                // Generic: offset-major, one contiguous source segment
+                // per offset, no per-element bounds checks.
+                out.fill(T::ZERO);
+                for &(delta, w) in &k.deltas {
+                    let start = ((row_base + clo) as isize + delta - src_base as isize) as usize;
+                    let seg = &src[start..start + (chi - clo)];
+                    for (o, &v) in out.iter_mut().zip(seg) {
+                        *o = T::mul_acc(*o, w, v);
+                    }
                 }
             }
             for c in (0..clo).chain(chi..n_last) {
                 drow[c] = point(k, dims, &st, src, src_base, &outer, c, &mut coords);
             }
+            interior += (chi - clo) as u64;
+            boundary += (n_last - (chi - clo)) as u64;
         } else {
             for c in 0..n_last {
                 drow[c] = point(k, dims, &st, src, src_base, &outer, c, &mut coords);
             }
+            boundary += n_last as u64;
         }
     }
+    (interior, boundary)
 }
 
 /// One full step `dst = K(src)`, rows split across `threads` workers.
-fn step<T: Scalar>(dims: &[usize], k: &Kernel<T>, src: &[T], dst: &mut [T], threads: usize) {
+/// Returns the aggregated `(interior, boundary)` coverage counts.
+fn step<T: Scalar>(
+    dims: &[usize],
+    k: &Kernel<T>,
+    src: &[T],
+    dst: &mut [T],
+    threads: usize,
+) -> (u64, u64) {
     let n_last = dims[dims.len() - 1];
     let rows = src.len() / n_last;
     let workers = threads.max(1).min(rows);
     if workers <= 1 {
-        step_rows(dims, k, src, 0, dst, 0);
-        return;
+        return step_rows(dims, k, src, 0, dst, 0);
     }
     let chunk_rows = rows.div_ceil(workers);
+    let interior = AtomicU64::new(0);
+    let boundary = AtomicU64::new(0);
     std::thread::scope(|s| {
         for (ci, chunk) in dst.chunks_mut(chunk_rows * n_last).enumerate() {
-            s.spawn(move || step_rows(dims, k, src, 0, chunk, ci * chunk_rows));
+            let (int_ref, bnd_ref) = (&interior, &boundary);
+            s.spawn(move || {
+                let (ip, bp) = step_rows(dims, k, src, 0, chunk, ci * chunk_rows);
+                int_ref.fetch_add(ip, Ordering::Relaxed);
+                bnd_ref.fetch_add(bp, Ordering::Relaxed);
+            });
         }
     });
+    (interior.into_inner(), boundary.into_inner())
 }
 
 /// Fused-sweep execution: `launches` passes of the fused kernel plus
-/// `rem` passes of the base kernel, full-domain double buffering.
+/// `rem` passes of the base kernel, full-domain double buffering.  The
+/// kernels arrive pre-compiled (from the backend's cache); `fused` /
+/// `base` may be `None` only when the corresponding pass count is zero.
 #[allow(clippy::too_many_arguments)]
 fn run_sweeps<T: Scalar>(
     dims: &[usize],
-    fused: &golden::Weights,
-    base: &golden::Weights,
+    fused: Option<&Kernel<T>>,
+    base: Option<&Kernel<T>>,
     launches: usize,
     rem: usize,
     threads: usize,
@@ -246,29 +273,33 @@ fn run_sweeps<T: Scalar>(
     let elem = std::mem::size_of::<T>() as u64;
     let mut next = vec![T::ZERO; buf.len()];
     if launches > 0 {
-        let fk = compile::<T>(fused, dims);
+        let fk = fused.expect("fused kernel required when launches > 0");
         let nnz = fk.deltas.len() as u64;
         for _ in 0..launches {
             let t0 = Instant::now();
-            step(dims, &fk, buf, &mut next, threads);
+            let (ip, bp) = step(dims, fk, buf, &mut next, threads);
             metrics.add_execute(t0.elapsed());
             std::mem::swap(buf, &mut next);
             metrics.launches += 1;
             metrics.bytes_moved += 2 * n * elem;
             metrics.flops += 2 * nnz * n;
+            metrics.interior_points += ip;
+            metrics.boundary_points += bp;
         }
     }
     if rem > 0 {
-        let bk = compile::<T>(base, dims);
+        let bk = base.expect("base kernel required when rem > 0");
         let nnz = bk.deltas.len() as u64;
         for _ in 0..rem {
             let t0 = Instant::now();
-            step(dims, &bk, buf, &mut next, threads);
+            let (ip, bp) = step(dims, bk, buf, &mut next, threads);
             metrics.add_execute(t0.elapsed());
             std::mem::swap(buf, &mut next);
             metrics.launches += 1;
             metrics.bytes_moved += 2 * n * elem;
             metrics.flops += 2 * nnz * n;
+            metrics.interior_points += ip;
+            metrics.boundary_points += bp;
         }
     }
 }
@@ -298,7 +329,9 @@ fn tile_planes(n0: usize, plane_bytes: usize, tb: usize, r: usize, threads: usiz
 /// the corresponding global-sweep value, which is what makes the
 /// result bit-identical to sequential stepping (and shard-count
 /// invariant: a shard's trapezoid and a cache tile's trapezoid are the
-/// same computation).
+/// same computation).  Every step reuses `step_rows`, so the
+/// specialized row kernel serves the blocked interior too; returns the
+/// summed `(interior, boundary)` coverage counts.
 #[allow(clippy::too_many_arguments)]
 fn trapezoid<T: Scalar>(
     dims: &[usize],
@@ -311,13 +344,15 @@ fn trapezoid<T: Scalar>(
     dst: &mut [T],
     sa: &mut [T],
     sb: &mut [T],
-) {
+) -> (u64, u64) {
     let d = dims.len();
     let n0 = dims[0];
     let plane: usize = dims[1..].iter().product();
     let outer_rest = plane / dims[d - 1];
     let r = k.r;
     let (mut prev, mut cur): (&mut [T], &mut [T]) = (sa, sb);
+    let mut interior = 0u64;
+    let mut boundary = 0u64;
     for s in 1..=tb {
         let olo = a.saturating_sub((tb - s) * r);
         let ohi = (b + (tb - s) * r).min(n0);
@@ -326,28 +361,34 @@ fn trapezoid<T: Scalar>(
         // previous iteration computed (the trapezoid shrinks by r).
         let plo = a.saturating_sub((tb - s + 1) * r);
         let phi = (b + (tb - s + 1) * r).min(n0);
-        if s == tb {
+        let (ip, bp) = if s == tb {
             let (src_sl, src_lo): (&[T], usize) =
                 if s == 1 { (src, src_row0) } else { (&prev[..(phi - plo) * plane], plo) };
-            step_rows(dims, k, src_sl, src_lo * outer_rest, dst, a * outer_rest);
+            step_rows(dims, k, src_sl, src_lo * outer_rest, dst, a * outer_rest)
         } else if s == 1 {
             let out = &mut prev[..(ohi - olo) * plane];
-            step_rows(dims, k, src, src_row0 * outer_rest, out, olo * outer_rest);
+            step_rows(dims, k, src, src_row0 * outer_rest, out, olo * outer_rest)
         } else {
             let src_sl: &[T] = &prev[..(phi - plo) * plane];
             let out = &mut cur[..(ohi - olo) * plane];
-            step_rows(dims, k, src_sl, plo * outer_rest, out, olo * outer_rest);
+            let counts = step_rows(dims, k, src_sl, plo * outer_rest, out, olo * outer_rest);
             std::mem::swap(&mut prev, &mut cur);
-        }
+            counts
+        };
+        interior += ip;
+        boundary += bp;
     }
+    (interior, boundary)
 }
 
 /// Temporal-blocked execution: `steps` sequential base-kernel steps,
 /// grouped into time blocks of depth ≤ `t`; within a block each dim-0
-/// tile is carried through the whole block while cache-resident.
+/// tile is carried through the whole block while cache-resident.  `k`
+/// is the pre-compiled base kernel (depth 1).
+#[allow(clippy::too_many_arguments)]
 fn run_blocked<T: Scalar>(
     dims: &[usize],
-    base: &golden::Weights,
+    k: &Kernel<T>,
     steps: usize,
     t: usize,
     threads: usize,
@@ -357,14 +398,13 @@ fn run_blocked<T: Scalar>(
     if steps == 0 {
         return;
     }
-    let k = compile::<T>(base, dims);
     let nnz = k.deltas.len() as u64;
     let d = dims.len();
     let n = buf.len();
     let elem = std::mem::size_of::<T>();
     let n0 = dims[0];
     let plane: usize = dims[1..].iter().product();
-    let r = base.r();
+    let r = k.r;
     let mut next = vec![T::ZERO; n];
     let mut remaining = steps;
     while remaining > 0 {
@@ -390,35 +430,49 @@ fn run_blocked<T: Scalar>(
                 metrics.degenerate_blocks += 1;
             }
             for _ in 0..tb {
-                step(dims, &k, buf, &mut next, threads);
+                let (ip, bp) = step(dims, k, buf, &mut next, threads);
                 std::mem::swap(buf, &mut next);
                 metrics.bytes_moved += 2 * (n * elem) as u64;
                 metrics.flops += 2 * nnz * n as u64;
+                metrics.interior_points += ip;
+                metrics.boundary_points += bp;
             }
         } else {
             let cap_planes = (bheight + 2 * (tb - 1) * r).min(n0);
             let workers = threads.max(1).min(tiles.len());
             let tpw = tiles.len().div_ceil(workers);
             let src: &[T] = buf.as_slice();
-            let kref = &k;
+            let kref = k;
             let tiles_ref = &tiles;
+            let interior = AtomicU64::new(0);
+            let boundary = AtomicU64::new(0);
             std::thread::scope(|s| {
                 for (wi, chunk) in next.chunks_mut(tpw * bheight * plane).enumerate() {
+                    let (int_ref, bnd_ref) = (&interior, &boundary);
                     s.spawn(move || {
                         let mut sa = vec![T::ZERO; cap_planes * plane];
                         let mut sb = vec![T::ZERO; cap_planes * plane];
                         let lo = wi * tpw;
                         let hi = (lo + tpw).min(tiles_ref.len());
                         let base_plane = tiles_ref[lo].0;
+                        let mut counts = (0u64, 0u64);
                         for &(ta, tbound) in &tiles_ref[lo..hi] {
                             let off = (ta - base_plane) * plane;
                             let dst = &mut chunk[off..off + (tbound - ta) * plane];
-                            trapezoid(dims, kref, tb, src, 0, ta, tbound, dst, &mut sa, &mut sb);
+                            let (ip, bp) = trapezoid(
+                                dims, kref, tb, src, 0, ta, tbound, dst, &mut sa, &mut sb,
+                            );
+                            counts.0 += ip;
+                            counts.1 += bp;
                         }
+                        int_ref.fetch_add(counts.0, Ordering::Relaxed);
+                        bnd_ref.fetch_add(counts.1, Ordering::Relaxed);
                     });
                 }
             });
             std::mem::swap(buf, &mut next);
+            metrics.interior_points += interior.into_inner();
+            metrics.boundary_points += boundary.into_inner();
             // Traffic/flop accounting is a pure function of the tile
             // geometry the workers just executed: each tile reads its
             // tb·r-deepened input slab from the field and writes its
@@ -441,18 +495,44 @@ fn run_blocked<T: Scalar>(
     }
 }
 
-/// Dispatch one dtype-monomorphized execution over the resolved mode.
-fn run_field<T: Scalar>(job: &Job, blocked: bool, buf: &mut Vec<T>, metrics: &mut RunMetrics) {
+/// Dispatch one dtype-monomorphized execution over the resolved mode,
+/// fetching kernels through the backend's compile cache and recording
+/// the resolved kernel name.
+fn run_field<T: CacheSlot>(
+    nb: &NativeBackend,
+    job: &Job,
+    blocked: bool,
+    buf: &mut Vec<T>,
+    metrics: &mut RunMetrics,
+) {
     let base = golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
     if blocked {
-        run_blocked::<T>(&job.domain, &base, job.steps, job.t, job.threads, buf, metrics);
+        if job.steps == 0 {
+            return;
+        }
+        let k = nb.kernel::<T>(&job.domain, &base, 1);
+        metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
+        run_blocked::<T>(&job.domain, &k, job.steps, job.t, job.threads, buf, metrics);
     } else {
         let launches = job.steps / job.t;
         let rem = job.steps % job.t;
         // Fusing is itself a t-fold convolution — skip it when no fused
         // launch will run (steps < t jobs are pure remainder).
-        let fused = if launches > 0 && job.t > 1 { base.fuse(job.t) } else { base.clone() };
-        run_sweeps::<T>(&job.domain, &fused, &base, launches, rem, job.threads, buf, metrics);
+        let fk = if launches > 0 { Some(nb.kernel::<T>(&job.domain, &base, job.t)) } else { None };
+        let bk = if rem > 0 { Some(nb.kernel::<T>(&job.domain, &base, 1)) } else { None };
+        if let Some(k) = fk.as_deref().or(bk.as_deref()) {
+            metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
+        }
+        run_sweeps::<T>(
+            &job.domain,
+            fk.as_deref(),
+            bk.as_deref(),
+            launches,
+            rem,
+            job.threads,
+            buf,
+            metrics,
+        );
     }
 }
 
@@ -462,12 +542,12 @@ fn run_field<T: Scalar>(job: &Job, blocked: bool, buf: &mut Vec<T>, metrics: &mu
 /// shard's disjoint write-back slab for planes `[a, b)`.  Traffic and
 /// flop accounting mirror `model::shard::predicted_job_intensity` term
 /// for term: halo reads count against `bytes_moved`, trapezoid
-/// recompute against `flops`.  The kernel is (re)compiled per call —
-/// shard tasks are deliberately stateless so the queue can schedule
-/// them on any worker; the fuse+compile cost is O(hull) and vanishes
-/// against the slab compute on the domains where sharding is chosen.
+/// recompute against `flops`.  Shard tasks stay stateless across the
+/// queue's workers; the kernel comes from the backend's compile cache,
+/// so repeated phases of a resident session skip the fuse+compile.
 #[allow(clippy::too_many_arguments)]
-fn shard_phase_field<T: Scalar>(
+fn shard_phase_field<T: CacheSlot>(
+    nb: &NativeBackend,
     job: &Job,
     phase: ShardPhase,
     a: usize,
@@ -486,20 +566,25 @@ fn shard_phase_field<T: Scalar>(
     let elem = std::mem::size_of::<T>();
     let t0 = Instant::now();
     if phase.fused || phase.depth == 1 {
-        let w = if phase.depth > 1 { base.fuse(phase.depth) } else { base };
-        let k = compile::<T>(&w, dims);
-        step_rows(dims, &k, src, src_row0 * outer_rest, dst, a * outer_rest);
+        let k = nb.kernel::<T>(dims, &base, phase.depth);
+        metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
+        let (ip, bp) = step_rows(dims, &k, src, src_row0 * outer_rest, dst, a * outer_rest);
+        metrics.interior_points += ip;
+        metrics.boundary_points += bp;
         let h = r * phase.depth;
         let read = (b + h).min(n0) - a.saturating_sub(h);
         metrics.bytes_moved += ((read + (b - a)) * plane * elem) as u64;
         metrics.flops += 2 * k.deltas.len() as u64 * ((b - a) * plane) as u64;
     } else {
         let tb = phase.depth;
-        let k = compile::<T>(&base, dims);
+        let k = nb.kernel::<T>(dims, &base, 1);
+        metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
         let cap = ((b - a) + 2 * (tb - 1) * r).min(n0);
         let mut sa = vec![T::ZERO; cap * plane];
         let mut sb = vec![T::ZERO; cap * plane];
-        trapezoid(dims, &k, tb, src, src_row0, a, b, dst, &mut sa, &mut sb);
+        let (ip, bp) = trapezoid(dims, &k, tb, src, src_row0, a, b, dst, &mut sa, &mut sb);
+        metrics.interior_points += ip;
+        metrics.boundary_points += bp;
         let read = (b + tb * r).min(n0) - a.saturating_sub(tb * r);
         metrics.bytes_moved += ((read + (b - a)) * plane * elem) as u64;
         let nnz = k.deltas.len() as u64;
@@ -512,14 +597,91 @@ fn shard_phase_field<T: Scalar>(
     metrics.add_execute(t0.elapsed());
 }
 
-/// The native CPU backend (stateless; all state lives in the job).
-#[derive(Debug, Default)]
-pub struct NativeBackend;
+/// Key for one cached compiled kernel: (domain dims, fusion depth, the
+/// base weights' exact bits) — everything `compile` depends on besides
+/// the backend-wide dispatch mode.
+type CacheKey = (Vec<usize>, usize, Vec<u64>);
+
+/// One dtype's compartment of the compile cache.
+struct KernelSlot<T>(Mutex<HashMap<CacheKey, Arc<Kernel<T>>>>);
+
+impl<T> KernelSlot<T> {
+    fn new() -> KernelSlot<T> {
+        KernelSlot(Mutex::new(HashMap::new()))
+    }
+}
+
+/// Selects the dtype's compartment of [`NativeBackend`]'s kernel cache.
+trait CacheSlot: Scalar {
+    fn slot(nb: &NativeBackend) -> &KernelSlot<Self>;
+}
+
+impl CacheSlot for f64 {
+    fn slot(nb: &NativeBackend) -> &KernelSlot<f64> {
+        &nb.f64_kernels
+    }
+}
+
+impl CacheSlot for f32 {
+    fn slot(nb: &NativeBackend) -> &KernelSlot<f32> {
+        &nb.f32_kernels
+    }
+}
+
+/// The native CPU backend.  Field state lives in the job; the backend
+/// itself carries only the kernel dispatch mode and the compile cache,
+/// so a resident instance (a serve session, the shard queue) reuses
+/// compiled kernels across `advance` calls.
+pub struct NativeBackend {
+    mode: KernelMode,
+    f64_kernels: KernelSlot<f64>,
+    f32_kernels: KernelSlot<f32>,
+}
+
+impl std::fmt::Debug for NativeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NativeBackend").field("mode", &self.mode).finish()
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> NativeBackend {
+        NativeBackend::new()
+    }
+}
 
 impl NativeBackend {
-    /// Construct the (stateless) native backend.
+    /// Construct the native backend with the process-default kernel
+    /// mode (`--kernels` / `STENCILCTL_KERNELS`, else auto dispatch).
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend::with_mode(kernels::default_mode())
+    }
+
+    /// Construct with an explicit kernel dispatch mode — the in-process
+    /// A/B hook the dispatch tests and benches use.
+    pub fn with_mode(mode: KernelMode) -> NativeBackend {
+        NativeBackend { mode, f64_kernels: KernelSlot::new(), f32_kernels: KernelSlot::new() }
+    }
+
+    /// The kernel dispatch mode this backend resolves row kernels with.
+    pub fn mode(&self) -> KernelMode {
+        self.mode
+    }
+
+    /// Fetch (or compile and cache) the kernel for `base` fused to
+    /// depth `t` over `dims`.  The fuse + stride/neighbor derivation
+    /// runs once per distinct (dims, t, weights) per backend instance.
+    fn kernel<T: CacheSlot>(&self, dims: &[usize], base: &golden::Weights, t: usize) -> Arc<Kernel<T>> {
+        let key: CacheKey =
+            (dims.to_vec(), t, base.data.iter().map(|w| w.to_bits()).collect());
+        let slot = T::slot(self);
+        if let Some(k) = slot.0.lock().unwrap().get(&key) {
+            return Arc::clone(k);
+        }
+        let w = if t > 1 { base.fuse(t) } else { base.clone() };
+        let k = Arc::new(compile::<T>(&w, dims, self.mode));
+        slot.0.lock().unwrap().insert(key, Arc::clone(&k));
+        k
     }
 
     /// Advance ONE shard of a sharded execution through ONE
@@ -589,7 +751,7 @@ impl NativeBackend {
         let mut metrics = RunMetrics::default();
         match job.dtype {
             Dtype::F64 => {
-                shard_phase_field::<f64>(job, phase, a, b, src, 0, dst, &mut metrics);
+                shard_phase_field::<f64>(self, job, phase, a, b, src, 0, dst, &mut metrics);
             }
             Dtype::F32 => {
                 // Marshal only the depth·r-deepened read slab.
@@ -599,7 +761,17 @@ impl NativeBackend {
                     src[lo * plane..hi * plane].iter().map(|&v| v as f32).collect();
                 let mut dst32 = vec![0.0f32; dst.len()];
                 metrics.add_gather(t0.elapsed());
-                shard_phase_field::<f32>(job, phase, a, b, &src32, lo, &mut dst32, &mut metrics);
+                shard_phase_field::<f32>(
+                    self,
+                    job,
+                    phase,
+                    a,
+                    b,
+                    &src32,
+                    lo,
+                    &mut dst32,
+                    &mut metrics,
+                );
                 let t1 = Instant::now();
                 for (o, &v) in dst.iter_mut().zip(&dst32) {
                     *o = v as f64;
@@ -641,7 +813,7 @@ impl Backend for NativeBackend {
         };
         let wall0 = Instant::now();
         match job.dtype {
-            Dtype::F64 => run_field::<f64>(job, blocked, field, &mut metrics),
+            Dtype::F64 => run_field::<f64>(self, job, blocked, field, &mut metrics),
             Dtype::F32 => {
                 // Marshal through f32 buffers so the arithmetic runs at
                 // artifact precision; conversion cost is accounted like
@@ -649,7 +821,7 @@ impl Backend for NativeBackend {
                 let t0 = Instant::now();
                 let mut buf: Vec<f32> = field.iter().map(|&v| v as f32).collect();
                 metrics.add_gather(t0.elapsed());
-                run_field::<f32>(job, blocked, &mut buf, &mut metrics);
+                run_field::<f32>(self, job, blocked, &mut buf, &mut metrics);
                 let t1 = Instant::now();
                 for (o, &v) in field.iter_mut().zip(&buf) {
                     *o = v as f64;
@@ -799,10 +971,13 @@ mod tests {
         let j = job(2, 1, vec![3, 3], 2, 2);
         let init = rand_field(7, 9);
         let mut field = init.clone();
-        NativeBackend::new().advance(&j, &mut field).unwrap();
+        let m = NativeBackend::new().advance(&j, &mut field).unwrap();
         let want = golden_mirror(&j, &init);
         let got = golden::Field::from_vec(&j.domain, field);
         assert_eq!(got.max_abs_diff(&want), 0.0);
+        // ...and the coverage counters agree: zero interior points.
+        assert_eq!(m.interior_points, 0);
+        assert_eq!(m.boundary_points, 9);
     }
 
     #[test]
@@ -884,6 +1059,9 @@ mod tests {
         assert_eq!(m.bytes_moved, 4 * 2 * 1024 * 8);
         assert_eq!(m.flops, 4 * 2 * 9 * 1024);
         assert!((m.achieved_intensity() - 9.0 / 8.0).abs() < 1e-12);
+        // Coverage counters partition every computed point.
+        assert_eq!(m.interior_points + m.boundary_points, 4 * 1024);
+        assert_eq!(m.interior_points, 4 * 30 * 30);
         // Blocked t=4 over a domain with many tiles: achieved intensity
         // approaches t·K/D from below (halo re-reads/recompute).
         // threads=2 splits the 256-plane domain into two 128-plane
@@ -909,5 +1087,60 @@ mod tests {
         let want = golden_sequential(&j, &init);
         let got = golden::Field::from_vec(&j.domain, field);
         assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn generic_mode_matches_auto_mode_bitwise() {
+        // The dispatch escape hatch must not change a single bit, for
+        // both temporal realizations.
+        for temporal in [TemporalMode::Sweep, TemporalMode::Blocked] {
+            let mut j = job(2, 1, vec![29, 31], 5, 2);
+            j.temporal = temporal;
+            j.threads = 2;
+            let init = rand_field(21, 29 * 31);
+            let mut fa = init.clone();
+            let ma = NativeBackend::with_mode(KernelMode::Auto).advance(&j, &mut fa).unwrap();
+            let mut fg = init.clone();
+            let mg = NativeBackend::with_mode(KernelMode::Generic).advance(&j, &mut fg).unwrap();
+            assert_eq!(fa, fg, "{temporal:?}");
+            assert_eq!(mg.kernel, "generic");
+            assert_ne!(ma.kernel, "", "{temporal:?}");
+            assert_eq!(ma.interior_points, mg.interior_points);
+            assert_eq!(ma.boundary_points, mg.boundary_points);
+        }
+    }
+
+    #[test]
+    fn kernel_cache_reuses_compiled_kernels() {
+        let mut be = NativeBackend::new();
+        let j = job(2, 1, vec![16, 16], 5, 2);
+        let mut field = rand_field(22, 256);
+        be.advance(&j, &mut field).unwrap();
+        // Sweep steps=5 t=2 → one fused (t=2) + one base (t=1) kernel.
+        assert_eq!(be.f64_kernels.0.lock().unwrap().len(), 2);
+        be.advance(&j, &mut field).unwrap();
+        assert_eq!(be.f64_kernels.0.lock().unwrap().len(), 2);
+        // A different fusion depth compiles (and caches) a new kernel.
+        let mut j3 = j.clone();
+        j3.t = 3;
+        be.advance(&j3, &mut field).unwrap();
+        assert_eq!(be.f64_kernels.0.lock().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn resolved_kernel_label_reflects_specialization() {
+        // box-2d1r base kernel: 9 taps — registered, so Auto resolves a
+        // specialized kernel and says which one.
+        let mut j = job(2, 1, vec![16, 16], 2, 1);
+        j.temporal = TemporalMode::Sweep;
+        let mut field = rand_field(23, 256);
+        let m = NativeBackend::with_mode(KernelMode::Auto).advance(&j, &mut field).unwrap();
+        assert!(m.kernel.starts_with("box-2d1r/double/"), "{}", m.kernel);
+        // box-3d1r fused t=2 has 125 taps — unregistered, generic.
+        let mut j125 = job(3, 1, vec![12, 12, 12], 2, 2);
+        j125.temporal = TemporalMode::Sweep;
+        let mut f3 = rand_field(24, 12 * 12 * 12);
+        let m3 = NativeBackend::with_mode(KernelMode::Auto).advance(&j125, &mut f3).unwrap();
+        assert_eq!(m3.kernel, "generic");
     }
 }

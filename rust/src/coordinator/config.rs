@@ -2,6 +2,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::backend::kernels::KernelMode;
 use crate::backend::{BackendKind, TemporalMode};
 use crate::coordinator::grid::ShardSpec;
 use crate::hardware::Gpu;
@@ -36,6 +37,10 @@ pub struct RunConfig {
     /// Drift response policy (`--retune off|auto`; serve acts on it,
     /// one-shot commands accept and ignore it).
     pub retune: crate::tune::drift::RetuneMode,
+    /// Kernel dispatch mode (`--kernels auto|generic`): `generic`
+    /// forces the reference offset-list loop everywhere — executor AND
+    /// planner — reproducing pre-specialization behavior exactly.
+    pub kernels: KernelMode,
 }
 
 impl RunConfig {
@@ -55,6 +60,7 @@ impl RunConfig {
             artifacts_dir: crate::runtime::manifest::default_dir(),
             profile: None,
             retune: crate::tune::drift::RetuneMode::Off,
+            kernels: KernelMode::Auto,
         }
     }
 
@@ -130,6 +136,13 @@ impl RunConfig {
         if let Some(m) = args.get("retune") {
             c.retune = crate::tune::drift::RetuneMode::parse(m)?;
         }
+        if let Some(k) = args.get("kernels") {
+            c.kernels = KernelMode::parse(k)?;
+        } else if std::env::var("STENCILCTL_KERNELS")
+            .is_ok_and(|v| v.eq_ignore_ascii_case("generic"))
+        {
+            c.kernels = KernelMode::Generic;
+        }
         Ok(c)
     }
 }
@@ -178,6 +191,14 @@ pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
             help: "drift response: off (flag+invalidate only) | auto (background recalibration; serve)",
             takes_value: true,
             default: Some("off"),
+        },
+        OptSpec {
+            name: "kernels",
+            help: "row-kernel dispatch: auto (specialized SIMD registry) | generic \
+                   (reference loop; exact pre-specialization behavior). \
+                   Env fallback: STENCILCTL_KERNELS=generic",
+            takes_value: true,
+            default: None,
         },
         OptSpec { name: "verify", help: "check vs golden oracle", takes_value: false, default: None },
         OptSpec { name: "locked", help: "apply profiling clock lock", takes_value: false, default: None },
@@ -405,6 +426,23 @@ mod tests {
         let all = all_opt_specs();
         for name in ["quick", "full", "out", "addr", "stdio", "drift-threshold", "profile"] {
             assert_eq!(all.iter().filter(|s| s.name == name).count(), 1, "--{name}");
+        }
+    }
+
+    #[test]
+    fn kernels_flag_parses() {
+        // Explicit values win regardless of STENCILCTL_KERNELS, so these
+        // hold under both CI suite runs (default and generic env).
+        assert_eq!(parse(&["--kernels", "generic"]).kernels, KernelMode::Generic);
+        assert_eq!(parse(&["--kernels", "auto"]).kernels, KernelMode::Auto);
+        assert_eq!(parse(&["--kernels", "GENERIC"]).kernels, KernelMode::Generic);
+        // bad value errors
+        let raw: Vec<String> = vec!["--kernels".into(), "fast".into()];
+        let args = Args::parse(&raw, &run_opt_specs()).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
+        // the flag rides along to serve/tune/all spec lists exactly once
+        for specs in [run_opt_specs(), serve_opt_specs(), tune_opt_specs(), all_opt_specs()] {
+            assert_eq!(specs.iter().filter(|s| s.name == "kernels").count(), 1);
         }
     }
 

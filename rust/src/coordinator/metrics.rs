@@ -32,6 +32,17 @@ pub struct RunMetrics {
     /// model-feedback path compares against the t=1 prediction instead
     /// of flagging a correctly executing job as off-model.
     pub degenerate_blocks: u64,
+    /// Output points the interior fast path computed (the specialized
+    /// or generic row kernel).  Zero when not instrumented (PJRT).
+    pub interior_points: u64,
+    /// Output points the scalar boundary path computed (zero-Dirichlet
+    /// halo handling).  A high boundary share explains model-error
+    /// spikes: the roofline prices the interior kernel only.
+    pub boundary_points: u64,
+    /// Resolved row-kernel name (`"{shape}/{dtype}/{isa}"` under
+    /// specialized dispatch, `"generic"` for the offset-list loop,
+    /// empty when the backend does not resolve kernels).
+    pub kernel: String,
 }
 
 impl RunMetrics {
@@ -45,6 +56,18 @@ impl RunMetrics {
         }
         self.flops as f64 / self.bytes_moved as f64
     }
+    /// Fraction of computed output points the interior fast path
+    /// produced, in [0, 1] (0 when coverage was not instrumented).
+    /// Includes trapezoid intermediate steps on the blocked path, so it
+    /// reflects executed work, not just final-field geometry.
+    pub fn interior_fraction(&self) -> f64 {
+        let total = self.interior_points + self.boundary_points;
+        if total == 0 {
+            return 0.0;
+        }
+        self.interior_points as f64 / total as f64
+    }
+
     /// Point-updates per second achieved end to end.
     pub fn throughput(&self) -> f64 {
         if self.wall_ns == 0 {
@@ -90,6 +113,12 @@ impl RunMetrics {
         self.bytes_moved += shard.bytes_moved;
         self.flops += shard.flops;
         self.degenerate_blocks += shard.degenerate_blocks;
+        self.interior_points += shard.interior_points;
+        self.boundary_points += shard.boundary_points;
+        // Every shard of a job resolves the same kernel; keep the first.
+        if self.kernel.is_empty() {
+            self.kernel = shard.kernel.clone();
+        }
     }
 
     pub fn render(&self) -> String {
@@ -102,9 +131,18 @@ impl RunMetrics {
                 self.achieved_intensity()
             )
         };
+        let kernel = if self.kernel.is_empty() {
+            String::new()
+        } else {
+            format!(
+                " kernel={} ({:.1}% interior)",
+                self.kernel,
+                self.interior_fraction() * 100.0
+            )
+        };
         format!(
             "steps={} points={} launches={} wall={:.3}s \
-             (gather {:.1}% execute {:.1}% scatter {:.1}%) → {:.3} MStencils/s{intensity}",
+             (gather {:.1}% execute {:.1}% scatter {:.1}%) → {:.3} MStencils/s{intensity}{kernel}",
             self.steps,
             self.points,
             self.launches,
@@ -297,6 +335,9 @@ pub struct SessionRow {
     pub dtype: &'static str,
     pub domain: String,
     pub backend: &'static str,
+    /// Resolved row-kernel name of the session's most recent advance
+    /// (empty until a run resolves one).
+    pub kernel: String,
     pub stats: SessionStats,
 }
 
@@ -403,6 +444,34 @@ mod tests {
         assert_eq!(job.flops, 288);
         // job-level identity untouched
         assert_eq!((job.steps, job.points), (8, 100));
+    }
+
+    #[test]
+    fn coverage_counters_and_kernel_name() {
+        // interior fraction is a plain ratio, safe at zero
+        assert_eq!(RunMetrics::default().interior_fraction(), 0.0);
+        let m = RunMetrics {
+            interior_points: 75,
+            boundary_points: 25,
+            kernel: "box-2d1r/double/avx2".into(),
+            ..Default::default()
+        };
+        assert!((m.interior_fraction() - 0.75).abs() < 1e-12);
+        let s = m.render();
+        assert!(s.contains("kernel=box-2d1r/double/avx2"), "{s}");
+        assert!(s.contains("75.0% interior"), "{s}");
+        // absorb sums coverage and keeps the first resolved name
+        let mut job = RunMetrics::default();
+        job.absorb(&m);
+        job.absorb(&RunMetrics {
+            interior_points: 5,
+            boundary_points: 5,
+            kernel: "generic".into(),
+            ..Default::default()
+        });
+        assert_eq!(job.interior_points, 80);
+        assert_eq!(job.boundary_points, 30);
+        assert_eq!(job.kernel, "box-2d1r/double/avx2");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::kernels::{self, KernelMode, KernelPeak};
 use crate::backend::{BackendKind, TemporalMode};
 use crate::coordinator::grid::ShardSpec;
 use crate::engines::{self, Engine};
@@ -59,6 +60,16 @@ pub struct Request {
     /// Intra-job threads the monolithic path would use — the parallel
     /// baseline a sharded candidate must beat.
     pub threads: usize,
+    /// Kernel dispatch mode the executor will run with.  `Generic`
+    /// disables the per-kernel ℙ override below, so planning is
+    /// bit-identical to the pre-specialization planner.
+    pub kernels: KernelMode,
+    /// Measured per-kernel peaks from the machine profile (empty for
+    /// builtin profiles).  When the specialized registry will serve a
+    /// scalar native candidate and an entry matches (shape, dtype,
+    /// realization), its ℙ replaces the flat scalar peak in that
+    /// candidate's roofline.
+    pub kernel_peaks: Vec<KernelPeak>,
 }
 
 /// The cacheable identity of a planning request.
@@ -93,6 +104,11 @@ pub struct PlanKey {
     pub lanes: usize,
     /// Monolithic intra-job threads (the gain's parallel baseline).
     pub threads: usize,
+    /// Kernel dispatch mode ("auto"/"generic") — it selects whether the
+    /// per-kernel ℙ override applies, so it is part of the identity.
+    /// The peaks themselves are keyed by the profile behind `gpu` (the
+    /// plan cache clears on profile generation changes).
+    pub kernels: &'static str,
     pub gpu: String,
 }
 
@@ -101,7 +117,7 @@ impl PlanKey {
     pub fn canonical(&self) -> String {
         let dims: Vec<String> = self.domain.iter().map(|d| d.to_string()).collect();
         format!(
-            "{}|{}|{}|s{}|t<={}|{}|{}|sh{}|l{}|th{}|{}",
+            "{}|{}|{}|s{}|t<={}|{}|{}|sh{}|l{}|th{}|k{}|{}",
             self.pattern,
             self.dtype,
             dims.join("x"),
@@ -112,6 +128,7 @@ impl PlanKey {
             self.shards,
             self.lanes,
             self.threads,
+            self.kernels,
             self.gpu
         )
     }
@@ -131,6 +148,7 @@ impl Request {
             shards: self.shards.wire(),
             lanes: self.lanes,
             threads: self.threads,
+            kernels: self.kernels.as_str(),
             gpu: self.gpu.name.to_string(),
         }
     }
@@ -284,9 +302,48 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
                 }
             }
             for (temporal, target) in variants {
+                // Per-kernel ℙ: when the specialized dispatch registry
+                // will serve this candidate's interior (scalar engine,
+                // native target, kernels=auto, registered arity) and
+                // the profile measured that kernel, price the roofline
+                // against the measured per-kernel peak instead of the
+                // flat scalar ℙ.  The blocked realization runs the base
+                // kernel per sub-step; the sweep realization runs the
+                // t-fused kernel, whose arity must itself be registered.
+                let tuned_gpu;
+                let gpu = if !e.is_tensor()
+                    && target == ExecTarget::Native
+                    && req.kernels == KernelMode::Auto
+                {
+                    let blocked = temporal == TemporalMode::Blocked;
+                    let arity = if blocked {
+                        req.pattern.k_points()
+                    } else {
+                        req.pattern.fused_k_points(t)
+                    } as usize;
+                    let peak = if kernels::ARITIES.contains(&arity) {
+                        kernels::peak_for(&req.kernel_peaks, &req.pattern, req.dtype, blocked)
+                    } else {
+                        None
+                    };
+                    match peak {
+                        Some(p) => {
+                            let mut g = req.gpu.clone();
+                            match req.dtype {
+                                Dtype::F32 => g.peaks.cuda_f32 = Some(p),
+                                Dtype::F64 => g.peaks.cuda_f64 = Some(p),
+                            }
+                            tuned_gpu = g;
+                            &tuned_gpu
+                        }
+                        None => &req.gpu,
+                    }
+                } else {
+                    &req.gpu
+                };
                 let pred = match temporal {
-                    TemporalMode::Sweep if !e.is_tensor() => exec::predict_sweep(&e, &w, &req.gpu),
-                    _ => exec::predict(&e, &w, &req.gpu),
+                    TemporalMode::Sweep if !e.is_tensor() => exec::predict_sweep(&e, &w, gpu),
+                    _ => exec::predict(&e, &w, gpu),
                 };
                 let Ok(prediction) = pred else {
                     continue; // unit missing on this GPU
@@ -402,6 +459,8 @@ mod tests {
             shards: ShardSpec::Fixed(1),
             lanes: 1,
             threads: 1,
+            kernels: KernelMode::Auto,
+            kernel_peaks: Vec::new(),
         }
     }
 
@@ -517,9 +576,14 @@ mod tests {
         let mut rth = req(Shape::Box, 2, 1, Dtype::F32);
         rth.threads = 2;
         assert_ne!(k1, rth.plan_key());
+        // kernel dispatch mode is part of the plan identity
+        let mut rk = req(Shape::Box, 2, 1, Dtype::F32);
+        rk.kernels = KernelMode::Generic;
+        assert_ne!(k1, rk.plan_key());
         let canon = r1.plan_key().canonical();
         assert!(canon.contains("Box-2D1R") && canon.contains("256x256"), "{canon}");
         assert!(canon.contains("|auto|") && canon.contains("|sh1|"), "{canon}");
+        assert!(canon.contains("|kauto|"), "{canon}");
     }
 
     #[test]
@@ -759,6 +823,61 @@ mod tests {
             },
         )
         .unwrap();
+    }
+
+    #[test]
+    fn per_kernel_peaks_reprice_only_matching_native_scalar_candidates() {
+        // A measured per-kernel ℙ far above the flat scalar peak lifts
+        // exactly the compute-bound native scalar candidates it matches
+        // — memory-bound candidates and other (dtype, realization)
+        // triples keep their flat-ℙ predictions bit-identically, and
+        // `--kernels generic` switches the override off entirely.
+        let base = req(Shape::Box, 2, 1, Dtype::F64);
+        let mut tuned = base.clone();
+        tuned.kernel_peaks = vec![KernelPeak {
+            shape: "box-2d1r".to_string(),
+            dtype: Dtype::F64,
+            blocked: true,
+            flops: 1e18, // absurdly fast: every blocked candidate goes memory-bound
+        }];
+        let flat = candidates(&base, None);
+        let tuned_c = candidates(&tuned, None);
+        assert_eq!(flat.len(), tuned_c.len());
+        let mut repriced = 0;
+        for (f, t) in flat.iter().zip(&tuned_c) {
+            assert_eq!(f.engine.name, t.engine.name);
+            assert_eq!(f.temporal, t.temporal);
+            let scalar_blocked = f.temporal == TemporalMode::Blocked && !f.engine.is_tensor();
+            if scalar_blocked && t.prediction.throughput != f.prediction.throughput {
+                repriced += 1;
+                assert!(
+                    t.prediction.throughput > f.prediction.throughput,
+                    "{} t={}: higher ℙ can only help",
+                    f.engine.name,
+                    f.t
+                );
+            } else if !scalar_blocked {
+                // sweep variants and tensor engines keep the flat peak
+                assert_eq!(
+                    f.prediction.throughput.to_bits(),
+                    t.prediction.throughput.to_bits(),
+                    "{} t={} {:?}",
+                    f.engine.name,
+                    f.t,
+                    f.temporal
+                );
+            }
+        }
+        assert!(repriced > 0, "some blocked candidate must have been compute-bound");
+        // generic mode: the override never applies
+        let mut generic = tuned.clone();
+        generic.kernels = KernelMode::Generic;
+        for (f, g) in flat.iter().zip(&candidates(&generic, None)) {
+            assert_eq!(
+                f.prediction.throughput.to_bits(),
+                g.prediction.throughput.to_bits()
+            );
+        }
     }
 
     #[test]

@@ -256,6 +256,7 @@ pub fn builtin_profile(gpu: &crate::hardware::Gpu) -> crate::tune::profile::Mach
         bandwidth: gpu.bandwidth,
         peaks: gpu.peaks,
         clock_lock: gpu.clock_lock,
+        kernels: Vec::new(),
         probes: Vec::new(),
     }
 }

@@ -115,6 +115,17 @@ fn help_text() -> String {
                               model's region tolerance)\n\
            requests: ping | plan | create_session | advance | fetch |\n\
                      close_session | stats | shutdown (see rust/README.md)\n\n\
+         kernel dispatch (--kernels, honored by plan, run, serve, tune):\n\
+           auto     resolve each compiled job against the specialized\n\
+                    row-kernel registry: shape-monomorphized, SIMD-\n\
+                    vectorized (AVX2/NEON, runtime-detected) interior\n\
+                    kernels for star-1/2/3 and box-2/3 in f32/f64; f64\n\
+                    results stay bit-identical to the golden oracle\n\
+                    (fixed accumulation order, no FMA) (default)\n\
+           generic  force the reference offset-list loop everywhere —\n\
+                    executor and planner — reproducing plans and results\n\
+                    from before kernel specialization exactly; also\n\
+                    honored via STENCILCTL_KERNELS=generic\n\n\
          machine profiles (the measured-constants plane, rust/src/tune/):\n\
            tune [--quick|--full] [--out PATH]\n\
                               run streaming-bandwidth + kernel-throughput\n\
@@ -134,6 +145,8 @@ fn help_text() -> String {
 
 fn tune_cmd(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
+    // Probes must measure the kernels that will actually run.
+    backend::kernels::set_default_mode(cfg.kernels);
     let mut opts =
         if args.flag("full") { micro::MicroOpts::full() } else { micro::MicroOpts::quick() };
     // --threads sets the probe parallelism; the presets and the CLI
@@ -215,6 +228,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
 /// `--locked` derates the compute peaks either way.
 fn cfg_and_gpu(args: &Args) -> Result<(RunConfig, MachineProfile, Gpu)> {
     let cfg = RunConfig::from_args(args)?;
+    // Install the process-wide kernel dispatch default: every backend
+    // built after this point (run, serve workers, shard fan-out)
+    // inherits --kernels / STENCILCTL_KERNELS.
+    backend::kernels::set_default_mode(cfg.kernels);
     let mut profile = tc_stencil::tune::profile::resolve(cfg.profile.as_deref(), &cfg.gpu)?;
     if args.flag("locked") {
         profile = profile.locked(engines::calib::PROFILING_CLOCK_LOCK);
@@ -284,7 +301,7 @@ fn analyze(args: &Args) -> Result<()> {
 }
 
 fn plan_cmd(args: &Args) -> Result<()> {
-    let (cfg, _profile, gpu) = cfg_and_gpu(args)?;
+    let (cfg, profile, gpu) = cfg_and_gpu(args)?;
     let manifest = Manifest::load(&cfg.artifacts_dir).ok();
     let req = planner::Request {
         pattern: cfg.pattern,
@@ -298,6 +315,8 @@ fn plan_cmd(args: &Args) -> Result<()> {
         shards: cfg.shards,
         lanes: cfg.threads,
         threads: cfg.threads,
+        kernels: cfg.kernels,
+        kernel_peaks: profile.kernels.clone(),
     };
     let plan = planner::plan(&req, manifest.as_ref())?;
     let c = &plan.chosen;
@@ -337,7 +356,7 @@ fn plan_cmd(args: &Args) -> Result<()> {
 }
 
 fn run_cmd(args: &Args) -> Result<()> {
-    let (cfg, _profile, gpu) = cfg_and_gpu(args)?;
+    let (cfg, profile, gpu) = cfg_and_gpu(args)?;
     let manifest = Manifest::load(&cfg.artifacts_dir).ok();
     // A forced engine pins the artifact compilation scheme (PJRT only).
     let prefer = match &cfg.engine {
@@ -362,6 +381,8 @@ fn run_cmd(args: &Args) -> Result<()> {
             shards: cfg.shards,
             lanes: cfg.threads,
             threads: cfg.threads,
+            kernels: cfg.kernels,
+            kernel_peaks: profile.kernels.clone(),
         };
         planner::plan(&req, manifest.as_ref()).ok()
     } else {

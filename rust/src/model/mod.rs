@@ -115,6 +115,26 @@
 //! let roof = prof.gpu().roof(Unit::CudaCore, Dtype::F64).unwrap();
 //! assert!((roof.ridge() - 5.01).abs() < 0.02);       // measured balance point
 //! assert_eq!(drift::DRIFT_THRESHOLD, calib::REGION_TOLERANCE);
+//!
+//! // Per-kernel peaks (MODEL.md "per-kernel peaks"): profile v2 can
+//! // carry one measured ℙ per (shape, dtype, temporal realization);
+//! // the planner substitutes it into Eq. 4 for the scalar candidate
+//! // whose arity — K blocked, K^(t) fused — the registry covers.
+//! use tc_stencil::backend::kernels::{self, KernelPeak};
+//! assert_eq!(kernels::shape_key(&p), "box-2d1r");
+//! assert!(kernels::ARITIES.contains(&(p.k_points() as usize)));         // K = 9
+//! assert!(kernels::ARITIES.contains(&(p.fused_k_points(3) as usize)));  // K^(3) = 49
+//! assert!(!kernels::ARITIES.contains(&(p.fused_k_points(7) as usize))); // K^(7) = 225
+//! let peaks = vec![KernelPeak {
+//!     shape: "box-2d1r".into(),
+//!     dtype: Dtype::F64,
+//!     blocked: true,
+//!     flops: 1.0e11,
+//! }];
+//! assert_eq!(kernels::peak_for(&peaks, &p, Dtype::F64, true), Some(1.0e11));
+//! assert_eq!(kernels::peak_for(&peaks, &p, Dtype::F64, false), None); // sweep unprobed
+//! assert_eq!(kernels::probe_shapes().len(), 5); // star-1/2/3D, box-2/3D
+//! assert_eq!(builtin_profile(&tc_stencil::hardware::Gpu::a100()).kernels.len(), 0);
 //! ```
 
 #![warn(missing_docs)]

@@ -469,7 +469,7 @@ pub fn service_stats(
     ]);
     let mut per = Table::new(
         "service — sessions",
-        &["session", "pattern", "dtype", "domain", "backend", "jobs", "steps", "MSt/s"],
+        &["session", "pattern", "dtype", "domain", "backend", "kernel", "jobs", "steps", "MSt/s"],
     );
     for r in sessions {
         per.row(&[
@@ -478,6 +478,7 @@ pub fn service_stats(
             r.dtype.to_string(),
             r.domain.clone(),
             r.backend.to_string(),
+            if r.kernel.is_empty() { "-".to_string() } else { r.kernel.clone() },
             r.stats.jobs.to_string(),
             r.stats.steps.to_string(),
             format!("{:.2}", r.stats.throughput() / 1e6),
@@ -623,6 +624,7 @@ mod tests {
             dtype: "double",
             domain: "32x32".into(),
             backend: "native",
+            kernel: "star-2d1r/double/portable".into(),
             stats: SessionStats {
                 jobs: 4,
                 steps: 16,
@@ -642,6 +644,7 @@ mod tests {
         assert!(out.contains("service — machine profile"));
         assert!(out.contains("service — sessions"));
         assert!(out.contains("Star-2D1R"));
+        assert!(out.contains("star-2d1r/double/portable"), "kernel column renders: {out}");
         assert!(out.contains("75%"), "hit rate renders: {out}");
         assert!(out.contains("evicted"), "cache evictions render: {out}");
         // empty session list still renders all tables

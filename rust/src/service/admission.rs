@@ -172,6 +172,8 @@ mod tests {
             shards: crate::coordinator::grid::ShardSpec::Auto,
             lanes: 2,
             threads: 4,
+            kernels: crate::backend::kernels::KernelMode::Auto,
+            kernel_peaks: Vec::new(),
         };
         planner::plan(&req, None).unwrap()
     }

@@ -194,6 +194,8 @@ mod tests {
             shards: ShardSpec::Auto,
             lanes: 2,
             threads: 4,
+            kernels: crate::backend::kernels::KernelMode::Auto,
+            kernel_peaks: Vec::new(),
         }
     }
 

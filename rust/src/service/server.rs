@@ -329,6 +329,8 @@ fn plan_for(
             shards,
             lanes: state.opts.workers.max(1).min(queue_cap),
             threads: spec.threads.max(1),
+            kernels: crate::backend::kernels::default_mode(),
+            kernel_peaks: state.profile.kernel_peaks(),
         };
         let (plan, hit) = state.plans.plan(&req, state.manifest.as_ref())?;
         attempts += 1;
@@ -578,7 +580,7 @@ fn advance(
         n
     } else {
         let queued = QueuedJob {
-            session: sess,
+            session: sess.clone(),
             job,
             kind: spec.backend,
             // PJRT is only reachable with a manifest (loaded once at
@@ -603,6 +605,9 @@ fn advance(
         .recv()
         .map_err(|_| anyhow!("worker dropped the job (shutting down?)"))?
         .map_err(|msg| anyhow!("{msg}"))?;
+    if !metrics.kernel.is_empty() {
+        sess.lock().unwrap().kernel = metrics.kernel.clone();
+    }
     let mut resp = protocol::ok("advance")
         .str_("session", session)
         .int("steps", metrics.steps as u64)
@@ -616,6 +621,11 @@ fn advance(
         .num("predicted_ms", predicted_ms)
         .num("wall_ms", metrics.wall_ns as f64 / 1e6)
         .num("mstencils", metrics.throughput() / 1e6);
+    if !metrics.kernel.is_empty() {
+        resp = resp
+            .str_("kernel", &metrics.kernel)
+            .num("interior_fraction", metrics.interior_fraction());
+    }
     resp = intensity_feedback(
         state,
         resp,
@@ -818,6 +828,7 @@ fn stats_response(state: &ServiceState) -> Json {
                     .str_("dtype", r.dtype)
                     .str_("domain", &r.domain)
                     .str_("backend", r.backend)
+                    .str_("kernel", &r.kernel)
                     .int("jobs", r.stats.jobs)
                     .int("steps", r.stats.steps)
                     .num("mstencils", r.stats.throughput() / 1e6)
@@ -915,6 +926,13 @@ mod tests {
         assert_ok(&a1);
         assert_eq!(a1.get("cache").unwrap().as_str(), Some("miss"));
         assert_eq!(a1.get("steps").unwrap().as_usize(), Some(2));
+        // the resolved row kernel rides in the reply (mode-dependent ISA suffix)
+        let kname = a1.get("kernel").unwrap().as_str().unwrap().to_string();
+        assert!(
+            kname.starts_with("star-2d1r/double/") || kname == "generic",
+            "kernel {kname}"
+        );
+        assert!(a1.get("interior_fraction").unwrap().as_f64().unwrap() > 0.0);
         let a2 = req(&state, r#"{"op":"advance","session":"a","steps":2,"t":1}"#);
         assert_ok(&a2);
         assert_eq!(a2.get("cache").unwrap().as_str(), Some("hit"));
@@ -928,6 +946,9 @@ mod tests {
         assert_eq!(st.get("sessions").unwrap().as_usize(), Some(1));
         assert!(st.get("plan_hits").unwrap().as_i64().unwrap() >= 1);
         assert!(st.get("render").unwrap().as_str().unwrap().contains("service"));
+        // per-session kernel name rides in the machine-readable stats too
+        let srows = st.get("session_stats").unwrap().as_arr().unwrap();
+        assert_eq!(srows[0].get("kernel").unwrap().as_str(), Some(kname.as_str()));
         assert_ok(&req(&state, r#"{"op":"close_session","session":"a"}"#));
         let gone = req(&state, r#"{"op":"fetch","session":"a"}"#);
         assert_eq!(gone.get("ok").unwrap().as_bool(), Some(false));

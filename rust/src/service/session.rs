@@ -43,6 +43,9 @@ pub struct Session {
     /// into the shard executor, so concurrent jobs must be refused
     /// instead of seeing an empty buffer.
     pub busy: bool,
+    /// Resolved row-kernel name of the most recent advance (empty until
+    /// a run resolves one) — surfaced through the `stats` rendering.
+    pub kernel: String,
     pub stats: SessionStats,
 }
 
@@ -84,6 +87,7 @@ impl Session {
             weights,
             field,
             busy: false,
+            kernel: String::new(),
             stats: SessionStats::default(),
         })
     }
@@ -102,6 +106,7 @@ impl Session {
             dtype: self.dtype.as_str(),
             domain: dims.join("x"),
             backend: self.backend.as_str(),
+            kernel: self.kernel.clone(),
             stats: self.stats.clone(),
         }
     }

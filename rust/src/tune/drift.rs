@@ -428,6 +428,13 @@ impl ProfileHub {
         self.inner.lock().unwrap().profile.clone()
     }
 
+    /// The current profile's per-kernel measured peaks (empty for
+    /// builtin profiles — the planner then prices against the flat
+    /// scalar ℙ exactly as before v2 profiles existed).
+    pub fn kernel_peaks(&self) -> Vec<crate::backend::kernels::KernelPeak> {
+        self.inner.lock().unwrap().profile.kernels.clone()
+    }
+
     /// Current generation (bumped by drift flags and installs).
     pub fn generation(&self) -> u64 {
         self.inner.lock().unwrap().generation

@@ -24,6 +24,7 @@ use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
+use crate::backend::kernels::{self, KernelPeak};
 use crate::backend::{Backend, Job, NativeBackend, TemporalMode};
 use crate::hardware::PeakTable;
 use crate::model::perf::Dtype;
@@ -185,9 +186,68 @@ pub fn kernel_probe(
 ) -> Result<ProbeRecord> {
     let pattern = StencilPattern::new(Shape::Box, 2, 1)?;
     let side = opts.domain_side.max(16);
-    let domain = vec![side, side];
+    let name = format!(
+        "kernel/box2d1r/{}/{}-t{}/th{}",
+        dtype.as_str(),
+        temporal.as_str(),
+        t,
+        opts.threads.max(1)
+    );
+    probe_job(&pattern, vec![side, side], &name, dtype, temporal, t, opts)
+}
+
+/// Per-shape kernel probe: same instrumented-executor measurement as
+/// [`kernel_probe`], but for an arbitrary registered pattern — the
+/// probe behind each [`KernelPeak`] entry of a measured profile.  The
+/// executed code path is exactly the specialized row kernel the
+/// dispatch registry resolves for (pattern, dtype, realization) on this
+/// machine, so the recorded FLOP/s is the effective per-kernel ℙ.
+pub fn pattern_probe(
+    pattern: StencilPattern,
+    dtype: Dtype,
+    temporal: TemporalMode,
+    t: usize,
+    opts: &MicroOpts,
+) -> Result<ProbeRecord> {
+    let domain = probe_domain(&pattern, opts.domain_side.max(16));
+    let name = format!(
+        "kernel/{}/{}/{}-t{}/th{}",
+        kernels::shape_key(&pattern),
+        dtype.as_str(),
+        temporal.as_str(),
+        t,
+        opts.threads.max(1)
+    );
+    probe_job(&pattern, domain, &name, dtype, temporal, t, opts)
+}
+
+/// Probe domain for a pattern: keep the point count in the same ballpark
+/// across dimensionalities (1-D stretches the side out, 3-D shrinks it)
+/// so every probe finishes in comparable time.
+fn probe_domain(pattern: &StencilPattern, side: usize) -> Vec<usize> {
+    match pattern.d {
+        1 => vec![side * side],
+        2 => vec![side, side],
+        _ => {
+            let s = (side / 4).max(8);
+            vec![s, s, s]
+        }
+    }
+}
+
+/// Shared probe body: warmup advance, then `reps` timed advances
+/// reading FLOP/s off the executor's instrumentation.
+fn probe_job(
+    pattern: &StencilPattern,
+    domain: Vec<usize>,
+    name: &str,
+    dtype: Dtype,
+    temporal: TemporalMode,
+    t: usize,
+    opts: &MicroOpts,
+) -> Result<ProbeRecord> {
     let job = Job {
-        pattern,
+        pattern: *pattern,
         dtype,
         domain: domain.clone(),
         steps: opts.steps.max(t),
@@ -206,14 +266,7 @@ pub fn kernel_probe(
             Ok(m.flops as f64 / (ns * 1e-9))
         })
         .collect::<Result<_>>()?;
-    let name = format!(
-        "kernel/box2d1r/{}/{}-t{}/th{}",
-        dtype.as_str(),
-        temporal.as_str(),
-        t,
-        job.threads
-    );
-    Ok(ProbeRecord::from_samples(&name, &samples))
+    Ok(ProbeRecord::from_samples(name, &samples))
 }
 
 /// Run the full probe suite and assemble a measured [`MachineProfile`]:
@@ -236,6 +289,26 @@ pub fn measure(opts: &MicroOpts) -> Result<MachineProfile> {
         };
         *slot = Some(best.max(1.0));
     }
+    // Per-kernel peaks: one probe per registered base shape × dtype ×
+    // realization — the ℙ the planner prices each candidate's actual
+    // row kernel with (flat scalar peaks above stay the fallback).
+    let mut kernel_peaks = Vec::new();
+    for pattern in kernels::probe_shapes() {
+        for dtype in [Dtype::F32, Dtype::F64] {
+            for (blocked, temporal, t) in
+                [(false, TemporalMode::Sweep, 1), (true, TemporalMode::Blocked, 4)]
+            {
+                let rec = pattern_probe(pattern, dtype, temporal, t, opts)?;
+                kernel_peaks.push(KernelPeak {
+                    shape: kernels::shape_key(&pattern),
+                    dtype,
+                    blocked,
+                    flops: rec.median.max(1.0),
+                });
+                probes.push(rec);
+            }
+        }
+    }
     let bandwidth = probes[0].median.max(1.0);
     let created_unix = SystemTime::now()
         .duration_since(UNIX_EPOCH)
@@ -249,6 +322,7 @@ pub fn measure(opts: &MicroOpts) -> Result<MachineProfile> {
         bandwidth,
         peaks,
         clock_lock: 1.0,
+        kernels: kernel_peaks,
         probes,
     })
 }
@@ -307,8 +381,15 @@ mod tests {
         assert!(p.peaks.cuda_f64.unwrap() > 1.0);
         assert!(p.peaks.tc_f32.is_none(), "no MMA units on this machine");
         assert!(p.peaks.sptc_f32.is_none());
-        // 1 stream + 2 dtypes × 2 realizations
-        assert_eq!(p.probes.len(), 5);
+        // 1 stream + 2 dtypes × 2 realizations (flat scalar peaks)
+        //          + 5 shapes × 2 dtypes × 2 realizations (per-kernel ℙ)
+        assert_eq!(p.probes.len(), 25);
+        assert_eq!(p.kernels.len(), 20);
+        let star2 = StencilPattern::new(Shape::Star, 2, 1).unwrap();
+        let sweep_p =
+            kernels::peak_for(&p.kernels, &star2, Dtype::F64, false).expect("star-2d1r entry");
+        assert!(sweep_p >= 1.0);
+        assert!(kernels::peak_for(&p.kernels, &star2, Dtype::F64, true).is_some());
         assert!(p.created_unix > 0);
         // the profile's Gpu has working scalar roofs for the planner
         let g = p.gpu();

@@ -20,15 +20,19 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::backend::kernels::KernelPeak;
 use crate::hardware::{Gpu, PeakTable};
+use crate::model::perf::Dtype;
 use crate::util::json::Json;
 
 use super::micro::ProbeRecord;
 
 /// The profile format version this build writes and accepts.  Loading
 /// any other version string is a hard error (never a silent reinterpret
-/// of stale constants).
-pub const PROFILE_VERSION: &str = "tcs-machine-profile-v1";
+/// of stale constants).  v2 added the per-kernel peak table
+/// (`kernels`): measured ℙ for each specialized row kernel the
+/// dispatch registry can resolve, keyed (shape, dtype, realization).
+pub const PROFILE_VERSION: &str = "tcs-machine-profile-v2";
 
 /// Where a profile's constants came from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,6 +82,12 @@ pub struct MachineProfile {
     pub peaks: PeakTable,
     /// Compute-peak derating factor (§4.2 profiling clock lock).
     pub clock_lock: f64,
+    /// Per-kernel measured peaks: the effective ℙ of each specialized
+    /// row kernel the dispatch registry resolves on this machine, keyed
+    /// (shape, dtype, sweep/blocked realization).  Empty for builtin
+    /// profiles — the planner then falls back to the flat scalar peak,
+    /// bit-identical to pre-v2 planning.
+    pub kernels: Vec<KernelPeak>,
     /// The raw probe records behind measured constants (empty for
     /// builtin profiles) — provenance, not inputs to any decision.
     pub probes: Vec<ProbeRecord>,
@@ -106,7 +116,7 @@ impl MachineProfile {
     }
 
     /// One-line identity for logs and stats ("measured-native
-    /// (measured, tcs-machine-profile-v1)").
+    /// (measured, tcs-machine-profile-v2)").
     pub fn identity(&self) -> String {
         format!("{} ({}, {})", self.name, self.source.as_str(), self.version)
     }
@@ -133,6 +143,21 @@ impl MachineProfile {
             }
         }
         o.insert("peaks".to_string(), Json::Obj(peaks));
+        o.insert(
+            "kernels".to_string(),
+            Json::Arr(self.kernels.iter().map(kernel_to_json).collect()),
+        );
+        for k in &self.kernels {
+            readable.insert(
+                format!(
+                    "kernel_{}_{}_{}",
+                    k.shape,
+                    k.dtype.as_str(),
+                    if k.blocked { "blocked" } else { "sweep" }
+                ),
+                Json::Num(k.flops),
+            );
+        }
         o.insert("readable".to_string(), Json::Obj(readable));
         o.insert(
             "probes".to_string(),
@@ -206,6 +231,13 @@ impl MachineProfile {
         if peaks.cuda_f32.is_none() && peaks.cuda_f64.is_none() {
             bail!("profile must carry at least one scalar (cuda_*) peak");
         }
+        let kernels = match j.get("kernels") {
+            Ok(Json::Arr(items)) => items
+                .iter()
+                .map(kernel_from_json)
+                .collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
         let probes = match j.get("probes") {
             Ok(Json::Arr(items)) => items
                 .iter()
@@ -221,6 +253,7 @@ impl MachineProfile {
             bandwidth,
             peaks,
             clock_lock,
+            kernels,
             probes,
         })
     }
@@ -250,6 +283,41 @@ pub fn resolve(path: Option<&Path>, fallback: &Gpu) -> Result<MachineProfile> {
         Some(p) => MachineProfile::load(p),
         None => Ok(crate::engines::builtin_profile(fallback)),
     }
+}
+
+/// Serialize one per-kernel peak: identity fields plain, the measured
+/// ℙ as bit-exact hex (the same transport as every other constant).
+fn kernel_to_json(k: &KernelPeak) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("shape".to_string(), Json::Str(k.shape.clone()));
+    o.insert("dtype".to_string(), Json::Str(k.dtype.as_str().to_string()));
+    o.insert("blocked".to_string(), Json::Bool(k.blocked));
+    o.insert("flops".to_string(), hex_f64(k.flops));
+    Json::Obj(o)
+}
+
+/// Parse one per-kernel peak entry, validating the measured ℙ.
+fn kernel_from_json(j: &Json) -> Result<KernelPeak> {
+    let shape = j
+        .get("shape")?
+        .as_str()
+        .ok_or_else(|| anyhow!("kernel entry \"shape\" must be a string"))?
+        .to_string();
+    let dtype = Dtype::parse(
+        j.get("dtype")?
+            .as_str()
+            .ok_or_else(|| anyhow!("kernel entry \"dtype\" must be a string"))?,
+    )?;
+    let blocked = j
+        .get("blocked")?
+        .as_bool()
+        .ok_or_else(|| anyhow!("kernel entry \"blocked\" must be a bool"))?;
+    let flops =
+        load_f64(j.get("flops")?).with_context(|| format!("kernel peak {shape:?}"))?;
+    if !(flops.is_finite() && flops > 0.0) {
+        bail!("kernel peak {shape:?} must be positive and finite, got {flops}");
+    }
+    Ok(KernelPeak { shape, dtype, blocked, flops })
 }
 
 /// The (key, value) view of a [`PeakTable`] used by the serializer.
@@ -302,6 +370,12 @@ mod tests {
                 ..Default::default()
             },
             clock_lock: 1.0,
+            kernels: vec![KernelPeak {
+                shape: "star-2d1r".to_string(),
+                dtype: Dtype::F64,
+                blocked: true,
+                flops: 0.1 + 0.7, // another decimal-mangled value
+            }],
             probes: vec![ProbeRecord {
                 name: "stream/triad".to_string(),
                 reps: 3,
@@ -330,6 +404,11 @@ mod tests {
             p.peaks.cuda_f64.unwrap().to_bits()
         );
         assert!(q.peaks.tc_f32.is_none() && q.peaks.sptc_f32.is_none());
+        assert_eq!(q.kernels.len(), 1);
+        assert_eq!(q.kernels[0].shape, "star-2d1r");
+        assert_eq!(q.kernels[0].dtype, Dtype::F64);
+        assert!(q.kernels[0].blocked);
+        assert_eq!(q.kernels[0].flops.to_bits(), p.kernels[0].flops.to_bits());
         assert_eq!(q.probes.len(), 1);
         assert_eq!(q.probes[0].median.to_bits(), p.probes[0].median.to_bits());
     }
@@ -381,12 +460,17 @@ mod tests {
         // a QUOTED decimal is rejected (16-hex-digit contract), never
         // reinterpreted as a tiny subnormal bit pattern
         let j = Json::parse_line(
-            r#"{"version":"tcs-machine-profile-v1","name":"x","source":"measured",
+            r#"{"version":"tcs-machine-profile-v2","name":"x","source":"measured",
                 "bandwidth":"1e12","clock_lock":1,"peaks":{"cuda_f64":1e13}}"#,
         )
         .unwrap();
         let err = format!("{:#}", MachineProfile::from_json(&j).unwrap_err());
         assert!(err.contains("16 hex digits"), "{err}");
+        // per-kernel peaks must be positive and finite too
+        let mut p = measured();
+        p.kernels[0].flops = 0.0;
+        let j = Json::parse_line(&p.to_json().to_string()).unwrap();
+        assert!(MachineProfile::from_json(&j).is_err(), "zero kernel peak");
     }
 
     #[test]
@@ -394,14 +478,18 @@ mod tests {
         // Numeric (non-hex) constants are accepted on load so synthetic
         // profiles can be written by hand.
         let j = Json::parse_line(
-            r#"{"version":"tcs-machine-profile-v1","name":"synth","source":"measured",
-                "bandwidth":1e12,"clock_lock":1,"peaks":{"cuda_f64":1e13}}"#,
+            r#"{"version":"tcs-machine-profile-v2","name":"synth","source":"measured",
+                "bandwidth":1e12,"clock_lock":1,"peaks":{"cuda_f64":1e13},
+                "kernels":[{"shape":"box-2d1r","dtype":"double","blocked":false,"flops":2e11}]}"#,
         )
         .unwrap();
         let p = MachineProfile::from_json(&j).unwrap();
         assert_eq!(p.bandwidth, 1e12);
         assert_eq!(p.peaks.cuda_f64, Some(1e13));
         assert_eq!(p.created_unix, 0);
+        assert_eq!(p.kernels.len(), 1);
+        assert_eq!(p.kernels[0].flops, 2e11);
+        assert!(!p.kernels[0].blocked);
         assert!(p.probes.is_empty());
     }
 

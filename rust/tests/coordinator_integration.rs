@@ -145,6 +145,8 @@ fn planner_artifact_mode_yields_runnable_plan() {
         shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
         lanes: 1,
         threads: 1,
+        kernels: tc_stencil::backend::kernels::KernelMode::Auto,
+        kernel_peaks: Vec::new(),
     };
     let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
     let name = plan.chosen.artifact.expect("artifact-constrained plan");
@@ -172,6 +174,8 @@ fn end_to_end_plan_then_run() {
         shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
         lanes: 1,
         threads: 1,
+        kernels: tc_stencil::backend::kernels::KernelMode::Auto,
+        kernel_peaks: Vec::new(),
     };
     let plan = planner::plan(&req, Some(&rt.manifest)).unwrap();
     let artifact = plan.chosen.artifact.unwrap();

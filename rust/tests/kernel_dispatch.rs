@@ -1,0 +1,257 @@
+//! The specialized kernel registry, end to end: for EVERY registered
+//! shape specialization (star-1/2/3D, box-2/3D at r=1), both dtypes,
+//! fused depths, and both temporal realizations, the dispatched
+//! (`KernelMode::Auto`) executor must be BIT-IDENTICAL to the generic
+//! offset-list loop (`KernelMode::Generic`) — and, in f64, to the
+//! golden oracle.  The modes are pinned via `with_mode`, so this suite
+//! holds under any `STENCILCTL_KERNELS` environment (CI runs it both
+//! ways).  The planner side closes the loop: a machine profile carrying
+//! per-kernel measured ℙ entries must be able to flip a sweep↔blocked
+//! decision that the flat profile resolves the other way, while
+//! `--kernels generic` reproduces flat planning exactly.
+
+use tc_stencil::backend::kernels::{self, KernelMode, KernelPeak};
+use tc_stencil::backend::{self, Backend, NativeBackend, TemporalMode};
+use tc_stencil::coordinator::metrics::RunMetrics;
+use tc_stencil::coordinator::planner::{self, Request};
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::{Dtype, Unit, Workload};
+use tc_stencil::model::stencil::StencilPattern;
+use tc_stencil::sim::golden;
+use tc_stencil::util::rng::Rng;
+
+/// Odd / prime sides so tile and interior windows never divide evenly.
+fn awkward_domain(d: usize) -> Vec<usize> {
+    match d {
+        1 => vec![101],
+        2 => vec![23, 29],
+        _ => vec![11, 13, 17],
+    }
+}
+
+/// Deterministic non-uniform weights over the pattern's support —
+/// uniform taps would hide accumulation-order mistakes behind symmetry.
+fn varied_weights(pattern: &StencilPattern, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let sup = pattern.support();
+    let mut w: Vec<f64> = sup
+        .cells
+        .iter()
+        .map(|&b| if b { rng.range_f64(-0.5, 0.5) } else { 0.0 })
+        .collect();
+    let l1: f64 = w.iter().map(|v| v.abs()).sum();
+    if l1 > 1e-9 {
+        for v in &mut w {
+            *v /= l1;
+        }
+    }
+    w
+}
+
+fn advance_with(mode: KernelMode, job: &backend::Job, init: &[f64]) -> (Vec<f64>, RunMetrics) {
+    let mut field = init.to_vec();
+    let m = NativeBackend::with_mode(mode).advance(job, &mut field).unwrap();
+    (field, m)
+}
+
+#[test]
+fn every_registered_kernel_matches_generic_and_oracle() {
+    let mut specialized_seen = 0usize;
+    for pattern in kernels::probe_shapes() {
+        let domain = awkward_domain(pattern.d);
+        let n: usize = domain.iter().product();
+        let weights = varied_weights(&pattern, 0xD15);
+        let mut rng = Rng::new(0x5EED ^ pattern.k_points());
+        for dtype in [Dtype::F32, Dtype::F64] {
+            let init: Vec<f64> = match dtype {
+                Dtype::F32 => (0..n).map(|_| rng.normal() as f32 as f64).collect(),
+                Dtype::F64 => (0..n).map(|_| rng.normal()).collect(),
+            };
+            for t in 1..=4usize {
+                for temporal in [TemporalMode::Sweep, TemporalMode::Blocked] {
+                    let steps = 2 * t + 1; // whole launches plus a remainder
+                    let job = backend::Job {
+                        pattern,
+                        dtype,
+                        domain: domain.clone(),
+                        steps,
+                        t,
+                        temporal,
+                        weights: weights.clone(),
+                        threads: 2,
+                    };
+                    let label = format!(
+                        "{} {} t={t} {}",
+                        kernels::shape_key(&pattern),
+                        dtype.as_str(),
+                        temporal.as_str()
+                    );
+                    let (auto_f, auto_m) = advance_with(KernelMode::Auto, &job, &init);
+                    let (gen_f, gen_m) = advance_with(KernelMode::Generic, &job, &init);
+                    // Dispatch must never change a single bit — in
+                    // EITHER dtype: the specialized kernels keep the
+                    // generic loop's per-point accumulation order.
+                    assert_eq!(auto_f, gen_f, "{label}: auto vs generic bits differ");
+                    // The forced-generic path must resolve no kernel.
+                    assert_eq!(gen_m.kernel, "generic", "{label}");
+                    if auto_m.kernel != "generic" {
+                        let prefix =
+                            format!("{}/{}/", kernels::shape_key(&pattern), dtype.as_str());
+                        assert!(
+                            auto_m.kernel.starts_with(&prefix),
+                            "{label}: kernel name {:?} lacks prefix {prefix:?}",
+                            auto_m.kernel
+                        );
+                        specialized_seen += 1;
+                    }
+                    // Coverage accounting is pure geometry — identical
+                    // across modes, and non-empty for a real run.
+                    assert_eq!(
+                        (auto_m.interior_points, auto_m.boundary_points),
+                        (gen_m.interior_points, gen_m.boundary_points),
+                        "{label}: coverage split diverged across modes"
+                    );
+                    assert!(
+                        auto_m.interior_points + auto_m.boundary_points > 0,
+                        "{label}: empty coverage counters"
+                    );
+                    // f64 must be bit-identical to the golden oracle.
+                    if dtype == Dtype::F64 {
+                        let w = golden::Weights::new(
+                            pattern.d,
+                            2 * pattern.r + 1,
+                            weights.clone(),
+                        );
+                        let start = golden::Field::from_vec(&domain, init.clone());
+                        let want = if temporal == TemporalMode::Blocked {
+                            golden::apply_steps(&start, &w, steps)
+                        } else {
+                            let mut f = start;
+                            for _ in 0..steps / t {
+                                f = golden::apply_fused(&f, &w, t);
+                            }
+                            for _ in 0..steps % t {
+                                f = golden::apply_once(&f, &w);
+                            }
+                            f
+                        };
+                        let got = golden::Field::from_vec(&domain, auto_f.clone());
+                        let err = got.max_abs_diff(&want);
+                        assert_eq!(err, 0.0, "{label}: f64 drifted from oracle by {err:.3e}");
+                    }
+                }
+            }
+        }
+    }
+    // The sweep is vacuous if dispatch never actually resolved a
+    // specialized kernel (base arities are registered on every ISA via
+    // the portable tier, so t=1 at least must hit).
+    assert!(specialized_seen >= 10, "only {specialized_seen} specialized runs resolved");
+}
+
+#[test]
+fn interior_dominated_run_reports_fast_path_coverage() {
+    let pattern = StencilPattern::new(tc_stencil::model::stencil::Shape::Star, 2, 1).unwrap();
+    let job = backend::Job {
+        pattern,
+        dtype: Dtype::F64,
+        domain: vec![128, 128],
+        steps: 4,
+        t: 1,
+        temporal: TemporalMode::Sweep,
+        weights: pattern.uniform_weights(),
+        threads: 2,
+    };
+    let mut field = golden::gaussian(&[128, 128]);
+    let m = NativeBackend::with_mode(KernelMode::Auto).advance(&job, &mut field).unwrap();
+    // 126² interior rows/cols of 128² per step → ~96.9% fast path.
+    assert!(
+        m.interior_fraction() > 0.9,
+        "interior fraction {:.3} too low for a 128² domain",
+        m.interior_fraction()
+    );
+    let total = m.interior_points + m.boundary_points;
+    assert_eq!(total, (128 * 128 * 4) as u64, "coverage must account every point");
+    assert!(
+        m.kernel.starts_with("star-2d1r/double/"),
+        "resolved kernel {:?} — star-2d1r is registered on every ISA tier",
+        m.kernel
+    );
+}
+
+#[test]
+fn per_kernel_peaks_flip_planner_temporal_decision() {
+    // Box-2D1R f32 on V100 (no tensor units — the scalar pair decides).
+    // At t=8 the fused-sweep intensity sits far above the CUDA ridge,
+    // so flat planning resolves depth-8 to BLOCKED (the temporal rule
+    // proven in rust/tests/temporal_blocking.rs).  A measured profile
+    // whose blocked box-2d1r kernel is catastrophically slow must flip
+    // that same depth to SWEEP — and flip the overall plan with it.
+    let gpu = Gpu::v100();
+    let pattern = StencilPattern::new(tc_stencil::model::stencil::Shape::Box, 2, 1).unwrap();
+    let req = |kernels_mode: KernelMode, peaks: Vec<KernelPeak>| Request {
+        pattern,
+        dtype: Dtype::F32,
+        domain: vec![256, 256],
+        steps: 64,
+        gpu: gpu.clone(),
+        backend: backend::BackendKind::Native,
+        max_t: 8,
+        temporal: TemporalMode::Auto,
+        shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
+        lanes: 1,
+        threads: 1,
+        kernels: kernels_mode,
+        kernel_peaks: peaks,
+    };
+    // Premise: depth 8 is past the machine balance point.
+    let roof = gpu.roof(Unit::CudaCore, Dtype::F32).unwrap();
+    let w = Workload::new(pattern, 8, Dtype::F32);
+    assert!(
+        w.intensity_fused_sweep() >= roof.ridge(),
+        "premise broken: fused I {:.2} below ridge {:.2}",
+        w.intensity_fused_sweep(),
+        roof.ridge()
+    );
+    let best_at_8 = |plan: &planner::Plan| {
+        std::iter::once(&plan.chosen)
+            .chain(plan.alternatives.iter())
+            .find(|c| c.t == 8)
+            .cloned()
+            .unwrap()
+    };
+    let flat = planner::plan(&req(KernelMode::Auto, Vec::new()), None).unwrap();
+    assert_eq!(best_at_8(&flat).temporal, TemporalMode::Blocked, "flat depth-8 is blocked");
+
+    // The measured profile: the blocked box-2d1r f32 kernel barely
+    // moves.  Every blocked scalar candidate (base arity 9, registered)
+    // reprices against ℙ = 1 kFLOP/s; sweep candidates keep flat ℙ.
+    let crushed = vec![KernelPeak {
+        shape: "box-2d1r".to_string(),
+        dtype: Dtype::F32,
+        blocked: true,
+        flops: 1e3,
+    }];
+    let tuned = planner::plan(&req(KernelMode::Auto, crushed.clone()), None).unwrap();
+    assert_eq!(
+        best_at_8(&tuned).temporal,
+        TemporalMode::Sweep,
+        "per-kernel ℙ must flip depth 8 blocked -> sweep"
+    );
+    assert_eq!(tuned.chosen.temporal, TemporalMode::Sweep, "and the overall plan with it");
+    assert!(
+        best_at_8(&tuned).prediction.throughput < best_at_8(&flat).prediction.throughput,
+        "the repriced depth must predict slower than flat"
+    );
+
+    // --kernels generic ignores the measured peaks entirely: planning
+    // is bit-identical to the flat profile, crushed entries and all.
+    let generic = planner::plan(&req(KernelMode::Generic, crushed), None).unwrap();
+    assert_eq!(generic.chosen.temporal, flat.chosen.temporal);
+    assert_eq!(generic.chosen.t, flat.chosen.t);
+    assert_eq!(
+        generic.chosen.prediction.throughput.to_bits(),
+        flat.chosen.prediction.throughput.to_bits(),
+        "generic-mode planning must reproduce flat predictions bit-exactly"
+    );
+}

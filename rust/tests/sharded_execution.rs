@@ -269,6 +269,8 @@ fn planner_shards_exactly_past_the_redundancy_crossover() {
             shards: ShardSpec::Auto,
             lanes: 4,
             threads: 2,
+            kernels: tc_stencil::backend::kernels::KernelMode::Auto,
+            kernel_peaks: Vec::new(),
         };
         let plan = planner::plan(&req, None).unwrap();
         let t = plan.chosen.t;

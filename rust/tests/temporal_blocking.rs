@@ -194,6 +194,8 @@ fn planner_blocked_iff_fused_intensity_crosses_machine_balance() {
             shards: tc_stencil::coordinator::grid::ShardSpec::Fixed(1),
             lanes: 1,
             threads: 1,
+            kernels: tc_stencil::backend::kernels::KernelMode::Auto,
+            kernel_peaks: Vec::new(),
         };
         let plan = planner::plan(&req, None).unwrap();
         // Find the best candidate at exactly depth t (the pinned depth

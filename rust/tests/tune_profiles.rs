@@ -38,6 +38,7 @@ fn synth(name: &str, bandwidth: f64, cuda_f64: f64) -> MachineProfile {
             ..Default::default()
         },
         clock_lock: 1.0,
+        kernels: Vec::new(),
         probes: Vec::new(),
     }
 }
@@ -58,6 +59,8 @@ fn crossover_request(gpu: Gpu) -> Request {
         shards: ShardSpec::Auto,
         lanes: 4,
         threads: 2,
+        kernels: tc_stencil::backend::kernels::KernelMode::Auto,
+        kernel_peaks: Vec::new(),
     }
 }
 
