@@ -1,23 +1,106 @@
 //! L3 hot-path microbenchmarks (the §Perf targets): PJRT execute latency
 //! per scheme, gather/scatter tiling cost, manifest parsing, planner
-//! latency, and the end-to-end coordinator step on a 256² domain.
+//! latency, and the end-to-end coordinator step on a 256² domain —
+//! plus the obs tracing-overhead bars (off vs. on), which run first and
+//! artifact-free so `BENCH_obs.json` exists even without `make artifacts`.
 
 use std::path::Path;
 
-use tc_stencil::backend::BackendKind;
-use tc_stencil::coordinator::grid::Tiling;
+use tc_stencil::backend::{self, BackendKind, TemporalMode};
+use tc_stencil::coordinator::grid::{ShardPlan, Tiling};
 use tc_stencil::coordinator::planner::{plan, Request};
-use tc_stencil::coordinator::scheduler::{run, Job};
+use tc_stencil::coordinator::scheduler::{self, run, Job};
 use tc_stencil::hardware::Gpu;
 use tc_stencil::model::perf::Dtype;
 use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::obs;
 use tc_stencil::runtime::{manifest, Manifest, Runtime, TensorData};
+use tc_stencil::sim::golden;
 use tc_stencil::util::bench::Bench;
+use tc_stencil::util::json::Json;
 use tc_stencil::util::rng::Rng;
 
+/// Tracing-overhead bars: the same sharded blocked advance with the
+/// obs plane disabled (the default), enabled ring-only (serve's reply
+/// spans), and enabled with an NDJSON sink (`--trace-out`).  Written
+/// to `BENCH_obs.json` with the derived overhead fractions.
+fn obs_overhead() {
+    let mut b = Bench::new("obs");
+    let domain = vec![128usize, 128];
+    let pattern = StencilPattern::new(Shape::Star, 2, 1).unwrap();
+    let job = backend::Job {
+        pattern,
+        dtype: Dtype::F64,
+        domain: domain.clone(),
+        steps: 4,
+        t: 2,
+        temporal: TemporalMode::Blocked,
+        weights: pattern.uniform_weights(),
+        threads: 2,
+    };
+    let shard_plan = ShardPlan::dim0(&domain, 2, pattern.r, 2).unwrap();
+    let field0 = golden::gaussian(&domain);
+    let items = 128.0 * 128.0 * 4.0;
+    obs::disable();
+    let off = b
+        .run_items("advance_sharded/off", Some(items), || {
+            let mut f = field0.clone();
+            std::hint::black_box(
+                scheduler::advance_sharded(&job, &shard_plan, &mut f, 2).unwrap(),
+            );
+        })
+        .mean_ns;
+    obs::enable();
+    let on = b
+        .run_items("advance_sharded/on", Some(items), || {
+            let mut f = field0.clone();
+            std::hint::black_box(
+                scheduler::advance_sharded(&job, &shard_plan, &mut f, 2).unwrap(),
+            );
+            // Serve drains per job; draining here keeps the ring from
+            // wrapping and charges that cost to the enabled bar.
+            std::hint::black_box(obs::drain_all());
+        })
+        .mean_ns;
+    let sink_path = std::env::temp_dir().join("tc_stencil_bench_obs.ndjson");
+    obs::set_sink(&sink_path).unwrap();
+    let on_sink = b
+        .run_items("advance_sharded/on_sink", Some(items), || {
+            let mut f = field0.clone();
+            std::hint::black_box(
+                scheduler::advance_sharded(&job, &shard_plan, &mut f, 2).unwrap(),
+            );
+            std::hint::black_box(obs::drain_all());
+        })
+        .mean_ns;
+    obs::clear_sink();
+    obs::disable();
+    let _ = std::fs::remove_file(&sink_path);
+    let overhead = on / off - 1.0;
+    let overhead_sink = on_sink / off - 1.0;
+    println!(
+        "tracing overhead: ring {:+.2}%, ring+sink {:+.2}%",
+        overhead * 100.0,
+        overhead_sink * 100.0
+    );
+    b.write_json(
+        "BENCH_obs.json",
+        vec![
+            ("overhead_frac", Json::Num(overhead)),
+            ("overhead_sink_frac", Json::Num(overhead_sink)),
+        ],
+    )
+    .unwrap();
+}
+
 fn main() {
+    obs_overhead();
+
     let dir = manifest::default_dir();
-    let mut rt = Runtime::load(&dir).expect("run `make artifacts`");
+    let Ok(mut rt) = Runtime::load(&dir) else {
+        eprintln!("skipping PJRT hot-path benches: no artifacts (run `make artifacts`)");
+        return;
+    };
     let mut rng = Rng::new(0xFEED);
 
     let mut b = Bench::new("hotpath");

@@ -72,6 +72,7 @@ use crate::backend::{Backend, Job, ShardPhase, TemporalMode};
 use crate::coordinator::grid::ShardPlan;
 use crate::coordinator::metrics::RunMetrics;
 use crate::model::perf::Dtype;
+use crate::obs;
 use crate::sim::golden;
 
 /// A stencil kernel compiled against one domain shape.
@@ -263,6 +264,7 @@ fn run_sweeps<T: Scalar>(
     dims: &[usize],
     fused: Option<&Kernel<T>>,
     base: Option<&Kernel<T>>,
+    t: usize,
     launches: usize,
     rem: usize,
     threads: usize,
@@ -275,6 +277,7 @@ fn run_sweeps<T: Scalar>(
     if launches > 0 {
         let fk = fused.expect("fused kernel required when launches > 0");
         let nnz = fk.deltas.len() as u64;
+        let mark = metrics.phase_mark();
         for _ in 0..launches {
             let t0 = Instant::now();
             let (ip, bp) = step(dims, fk, buf, &mut next, threads);
@@ -286,10 +289,12 @@ fn run_sweeps<T: Scalar>(
             metrics.interior_points += ip;
             metrics.boundary_points += bp;
         }
+        metrics.close_phase(&mark, t, t > 1);
     }
     if rem > 0 {
         let bk = base.expect("base kernel required when rem > 0");
         let nnz = bk.deltas.len() as u64;
+        let mark = metrics.phase_mark();
         for _ in 0..rem {
             let t0 = Instant::now();
             let (ip, bp) = step(dims, bk, buf, &mut next, threads);
@@ -301,6 +306,7 @@ fn run_sweeps<T: Scalar>(
             metrics.interior_points += ip;
             metrics.boundary_points += bp;
         }
+        metrics.close_phase(&mark, 1, false);
     }
 }
 
@@ -409,6 +415,7 @@ fn run_blocked<T: Scalar>(
     let mut remaining = steps;
     while remaining > 0 {
         let tb = t.min(remaining);
+        let mark = metrics.phase_mark();
         let bheight = tile_planes(n0, plane * elem, tb, r, threads);
         let tiles: Vec<(usize, usize)> =
             (0..n0).step_by(bheight).map(|a| (a, (a + bheight).min(n0))).collect();
@@ -491,6 +498,7 @@ fn run_blocked<T: Scalar>(
         }
         metrics.add_execute(t0.elapsed());
         metrics.launches += 1;
+        metrics.close_phase(&mark, tb, false);
         remaining -= tb;
     }
 }
@@ -505,6 +513,7 @@ fn run_field<T: CacheSlot>(
     buf: &mut Vec<T>,
     metrics: &mut RunMetrics,
 ) {
+    let k0 = if obs::enabled() { obs::now_ns() } else { 0 };
     let base = golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
     if blocked {
         if job.steps == 0 {
@@ -527,11 +536,20 @@ fn run_field<T: CacheSlot>(
             &job.domain,
             fk.as_deref(),
             bk.as_deref(),
+            job.t,
             launches,
             rem,
             job.threads,
             buf,
             metrics,
+        );
+    }
+    if obs::enabled() {
+        obs::record(
+            obs::SpanKind::Kernel,
+            k0,
+            obs::now_ns(),
+            obs::Payload::Kernel { name: metrics.kernel.clone() },
         );
     }
 }
@@ -565,6 +583,7 @@ fn shard_phase_field<T: CacheSlot>(
     let r = base.r();
     let elem = std::mem::size_of::<T>();
     let t0 = Instant::now();
+    let mark = metrics.phase_mark();
     if phase.fused || phase.depth == 1 {
         let k = nb.kernel::<T>(dims, &base, phase.depth);
         metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
@@ -595,6 +614,9 @@ fn shard_phase_field<T: CacheSlot>(
         }
     }
     metrics.add_execute(t0.elapsed());
+    // One entry at index 0 — only the driver knows this phase's slot
+    // in the `shard_phases` schedule and re-tags it before absorbing.
+    metrics.close_phase(&mark, phase.depth, phase.fused);
 }
 
 /// Key for one cached compiled kernel: (domain dims, fusion depth, the

@@ -41,6 +41,10 @@ pub struct RunConfig {
     /// forces the reference offset-list loop everywhere — executor AND
     /// planner — reproducing pre-specialization behavior exactly.
     pub kernels: KernelMode,
+    /// NDJSON span-stream destination (`--trace-out <path>`).  None =
+    /// tracing disabled — the default, bit-identical to the untraced
+    /// path; Some enables the obs plane and streams every span.
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl RunConfig {
@@ -61,6 +65,7 @@ impl RunConfig {
             profile: None,
             retune: crate::tune::drift::RetuneMode::Off,
             kernels: KernelMode::Auto,
+            trace_out: None,
         }
     }
 
@@ -143,6 +148,9 @@ impl RunConfig {
         {
             c.kernels = KernelMode::Generic;
         }
+        if let Some(p) = args.get("trace-out") {
+            c.trace_out = Some(std::path::PathBuf::from(p));
+        }
         Ok(c)
     }
 }
@@ -200,8 +208,42 @@ pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
             takes_value: true,
             default: None,
         },
+        OptSpec {
+            name: "trace-out",
+            help: "stream per-job spans as NDJSON to this path (enables the \
+                   obs tracing plane; omitted = disabled, zero events)",
+            takes_value: true,
+            default: None,
+        },
         OptSpec { name: "verify", help: "check vs golden oracle", takes_value: false, default: None },
         OptSpec { name: "locked", help: "apply profiling clock lock", takes_value: false, default: None },
+    ]
+}
+
+/// `stencilctl trace` options: offline rendering of an NDJSON span
+/// stream (from `--trace-out`) into Chrome trace-event JSON or a
+/// human-readable summary.
+pub fn trace_opt_specs() -> Vec<crate::util::cli::OptSpec> {
+    use crate::util::cli::OptSpec;
+    vec![
+        OptSpec {
+            name: "in",
+            help: "trace: NDJSON span file to render (from --trace-out)",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "chrome",
+            help: "trace: emit Chrome trace-event JSON (chrome://tracing, Perfetto)",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec {
+            name: "out",
+            help: "trace: write the rendering here instead of stdout",
+            takes_value: true,
+            default: None,
+        },
     ]
 }
 
@@ -241,7 +283,7 @@ pub fn tune_opt_specs() -> Vec<crate::util::cli::OptSpec> {
 /// tune's own flags.
 pub fn all_opt_specs() -> Vec<crate::util::cli::OptSpec> {
     let mut specs = serve_opt_specs();
-    for s in tune_opt_specs() {
+    for s in tune_opt_specs().into_iter().chain(trace_opt_specs()) {
         if !specs.iter().any(|e| e.name == s.name) {
             specs.push(s);
         }
@@ -443,6 +485,30 @@ mod tests {
         // the flag rides along to serve/tune/all spec lists exactly once
         for specs in [run_opt_specs(), serve_opt_specs(), tune_opt_specs(), all_opt_specs()] {
             assert_eq!(specs.iter().filter(|s| s.name == "kernels").count(), 1);
+        }
+    }
+
+    #[test]
+    fn trace_flags_parse() {
+        assert_eq!(parse(&[]).trace_out, None);
+        let c = parse(&["--trace-out", "/tmp/t.ndjson"]);
+        assert_eq!(c.trace_out.as_deref(), Some(std::path::Path::new("/tmp/t.ndjson")));
+        // trace's own spec list: in/chrome/out, once each; --out takes
+        // no default here (stdout), unlike tune's profile.json
+        let trace = trace_opt_specs();
+        for name in ["in", "chrome", "out"] {
+            assert_eq!(trace.iter().filter(|s| s.name == name).count(), 1, "--{name}");
+        }
+        assert_eq!(trace.iter().find(|s| s.name == "out").unwrap().default, None);
+        // the union list carries --trace-out and trace's flags exactly
+        // once ("run --trace-out t serve" style invocations parse)
+        let all = all_opt_specs();
+        for name in ["trace-out", "in", "chrome", "out"] {
+            assert_eq!(all.iter().filter(|s| s.name == name).count(), 1, "--{name}");
+        }
+        // every run-like subcommand shares the flag
+        for specs in [run_opt_specs(), serve_opt_specs(), tune_opt_specs()] {
+            assert_eq!(specs.iter().filter(|s| s.name == "trace-out").count(), 1);
         }
     }
 

@@ -3,8 +3,81 @@
 //! aggregate accounting ([`ServiceCounters`] service-wide,
 //! [`SessionStats`] per session).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{fence, AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Accounting for one phase of a run: one time block (or launch
+/// group) of a monolithic run, or one `ShardPhase` of a sharded one.
+/// Job-level sums in [`RunMetrics`] lose exactly this boundary —
+/// shard absorption folds entries *by phase index*, so per-phase
+/// traffic/flops/coverage still sum exactly to the job totals while
+/// interior-vs-boundary-vs-assembly splits stay visible per phase.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PhaseMetrics {
+    /// Phase index within the run (launch/time-block order, or the
+    /// `shard_phases` schedule index for sharded runs).
+    pub index: usize,
+    /// Temporal depth this phase executed (1 = plain sweep).
+    pub depth: usize,
+    /// True when the phase ran a fused multi-step kernel.
+    pub fused: bool,
+    /// Compute wall time of this phase, summed over shards.
+    pub execute_ns: u64,
+    /// Halo-assembly (slab gather/scatter) time after this phase's
+    /// barrier; 0 for monolithic runs, which have no barrier.
+    pub assemble_ns: u64,
+    /// Principal-memory bytes this phase moved (summed over shards).
+    pub bytes_moved: u64,
+    /// Multiply-add FLOPs this phase executed (summed over shards).
+    pub flops: u64,
+    /// Output points the interior fast path computed in this phase.
+    pub interior_points: u64,
+    /// Output points the scalar boundary path computed in this phase.
+    pub boundary_points: u64,
+}
+
+impl PhaseMetrics {
+    /// Per-phase achieved intensity (measured Eq. 7/8 `I = C/M` for
+    /// this phase alone; 0 when uninstrumented).
+    pub fn achieved_intensity(&self) -> f64 {
+        if self.bytes_moved == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.bytes_moved as f64
+    }
+
+    /// Interior-fast-path share of this phase's computed points, in
+    /// [0, 1] (0 when coverage was not instrumented).
+    pub fn interior_fraction(&self) -> f64 {
+        let total = self.interior_points + self.boundary_points;
+        if total == 0 {
+            return 0.0;
+        }
+        self.interior_points as f64 / total as f64
+    }
+
+    fn merge(&mut self, other: &PhaseMetrics) {
+        self.depth = self.depth.max(other.depth);
+        self.fused |= other.fused;
+        self.execute_ns += other.execute_ns;
+        self.assemble_ns += other.assemble_ns;
+        self.bytes_moved += other.bytes_moved;
+        self.flops += other.flops;
+        self.interior_points += other.interior_points;
+        self.boundary_points += other.boundary_points;
+    }
+}
+
+/// Snapshot of [`RunMetrics`]' job-level sums at a phase-window start
+/// (see [`RunMetrics::phase_mark`] / [`RunMetrics::close_phase`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseMark {
+    execute_ns: u64,
+    bytes_moved: u64,
+    flops: u64,
+    interior_points: u64,
+    boundary_points: u64,
+}
 
 /// Phase-split accounting for one run.
 #[derive(Debug, Clone, Default)]
@@ -43,6 +116,13 @@ pub struct RunMetrics {
     /// specialized dispatch, `"generic"` for the offset-list loop,
     /// empty when the backend does not resolve kernels).
     pub kernel: String,
+    /// Per-phase breakdown (one entry per launch group / time block /
+    /// `ShardPhase`).  Entries' traffic, flops and coverage sum
+    /// exactly to the job-level fields above; [`RunMetrics::absorb`]
+    /// folds shard entries by phase index so the boundary survives
+    /// aggregation.  Empty when the backend does not instrument
+    /// phases (PJRT).
+    pub phases: Vec<PhaseMetrics>,
 }
 
 impl RunMetrics {
@@ -100,6 +180,75 @@ impl RunMetrics {
         self.scatter_ns += d.as_nanos() as u64;
     }
 
+    /// Re-tag every phase entry with `index` — shard backends build
+    /// their single-phase metrics at index 0 because they don't know
+    /// their position in the `shard_phases` schedule; the driver does,
+    /// and stamps it here before [`RunMetrics::absorb`].
+    pub fn tag_phase(&mut self, index: usize) {
+        for p in &mut self.phases {
+            p.index = index;
+        }
+    }
+
+    /// The phase entry for `index`, created on first touch.
+    pub fn phase_mut(&mut self, index: usize) -> &mut PhaseMetrics {
+        if let Some(i) = self.phases.iter().position(|p| p.index == index) {
+            return &mut self.phases[i];
+        }
+        self.phases.push(PhaseMetrics { index, ..Default::default() });
+        let last = self.phases.len() - 1;
+        &mut self.phases[last]
+    }
+
+    /// Charge halo-assembly (slab gather/scatter) time to one phase —
+    /// the assembly leg of the per-phase interior/boundary/assembly
+    /// split.  Phase-level only: job-level scatter time is charged
+    /// separately via [`RunMetrics::add_scatter`].
+    pub fn add_phase_assembly(&mut self, index: usize, d: Duration) {
+        self.phase_mut(index).assemble_ns += d.as_nanos() as u64;
+    }
+
+    /// Snapshot the job-level sums to open a phase-accounting window;
+    /// close it with [`RunMetrics::close_phase`].  The executor keeps
+    /// charging the job-level fields exactly as before — phase entries
+    /// are derived from deltas, so they can never perturb the totals.
+    pub fn phase_mark(&self) -> PhaseMark {
+        PhaseMark {
+            execute_ns: self.execute_ns,
+            bytes_moved: self.bytes_moved,
+            flops: self.flops,
+            interior_points: self.interior_points,
+            boundary_points: self.boundary_points,
+        }
+    }
+
+    /// Close a phase window opened by [`RunMetrics::phase_mark`]: the
+    /// deltas since `mark` become one phase entry.  Consecutive
+    /// windows of the same (depth, fused) class merge into one entry,
+    /// so a long uniform sweep or block sequence stays a single phase
+    /// instead of one entry per launch.
+    pub fn close_phase(&mut self, mark: &PhaseMark, depth: usize, fused: bool) {
+        let delta = PhaseMetrics {
+            index: 0,
+            depth,
+            fused,
+            execute_ns: self.execute_ns - mark.execute_ns,
+            assemble_ns: 0,
+            bytes_moved: self.bytes_moved - mark.bytes_moved,
+            flops: self.flops - mark.flops,
+            interior_points: self.interior_points - mark.interior_points,
+            boundary_points: self.boundary_points - mark.boundary_points,
+        };
+        match self.phases.last_mut() {
+            Some(last) if last.depth == depth && last.fused == fused => last.merge(&delta),
+            Some(last) => {
+                let index = last.index + 1;
+                self.phases.push(PhaseMetrics { index, ..delta });
+            }
+            None => self.phases.push(delta),
+        }
+    }
+
     /// Fold one shard's phase metrics into a job-level aggregate:
     /// traffic, flops, launches and phase times sum; `steps`, `points`
     /// and `wall_ns` stay job-level (set by the driver).  Per-shard
@@ -119,6 +268,16 @@ impl RunMetrics {
         if self.kernel.is_empty() {
             self.kernel = shard.kernel.clone();
         }
+        // Fold phase entries by index so shard absorption keeps the
+        // per-phase boundary instead of flattening it into job sums.
+        for p in &shard.phases {
+            if let Some(mine) = self.phases.iter_mut().find(|m| m.index == p.index) {
+                mine.merge(p);
+            } else {
+                self.phases.push(p.clone());
+            }
+        }
+        self.phases.sort_by_key(|p| p.index);
     }
 
     pub fn render(&self) -> String {
@@ -140,7 +299,7 @@ impl RunMetrics {
                 self.interior_fraction() * 100.0
             )
         };
-        format!(
+        let mut s = format!(
             "steps={} points={} launches={} wall={:.3}s \
              (gather {:.1}% execute {:.1}% scatter {:.1}%) → {:.3} MStencils/s{intensity}{kernel}",
             self.steps,
@@ -151,15 +310,42 @@ impl RunMetrics {
             pct(self.execute_ns, self.wall_ns),
             pct(self.scatter_ns, self.wall_ns),
             self.throughput() / 1e6,
-        )
+        );
+        if self.phases.len() > 1 {
+            for p in &self.phases {
+                s.push_str(&format!(
+                    "\n  phase {}: depth={}{} execute={:.3}ms assemble={:.3}ms \
+                     I={:.2} F/B interior={:.1}%",
+                    p.index,
+                    p.depth,
+                    if p.fused { " fused" } else { "" },
+                    p.execute_ns as f64 / 1e6,
+                    p.assemble_ns as f64 / 1e6,
+                    p.achieved_intensity(),
+                    p.interior_fraction() * 100.0,
+                ));
+            }
+        }
+        s
     }
 }
 
 /// Lock-free service-wide counters, shared by every connection handler
-/// and worker thread of `stencilctl serve`.  Monotonic sums only —
-/// relaxed ordering is sufficient (readers want totals, not ordering).
+/// and worker thread of `stencilctl serve`.  Each 64-bit counter is
+/// individually torn-read-free (a relaxed `AtomicU64` load), but a
+/// `stats` snapshot reads *many* counters, and a multi-counter writer
+/// (e.g. [`ServiceCounters::record_run`] bumping completions, steps,
+/// point-steps and wall time) could land halfway through the loads —
+/// yielding a snapshot where `jobs_completed` includes a job whose
+/// `steps_total` doesn't.  A seqlock closes that window: multi-counter
+/// writers bump `version` to odd, write relaxed, bump back to even;
+/// [`ServiceCounters::snapshot`] retries until it reads the same even
+/// version on both sides of its loads.  Single-counter bumps skip the
+/// protocol — one atomic add is already atomic.
 #[derive(Debug, Default)]
 pub struct ServiceCounters {
+    /// Seqlock word: odd while a multi-counter update is in flight.
+    version: AtomicU64,
     pub requests: AtomicU64,
     pub errors: AtomicU64,
     pub jobs_accepted: AtomicU64,
@@ -190,10 +376,29 @@ impl ServiceCounters {
         c.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Open a multi-counter write section (version → odd).  The
+    /// release fence makes the section's relaxed data writes carry the
+    /// odd version with them: a reader that observed any of them and
+    /// re-checks the version through its acquire fence must see the
+    /// odd (or later) value and retry.
+    fn write_begin(&self) {
+        self.version.fetch_add(1, Ordering::Relaxed);
+        fence(Ordering::Release);
+    }
+
+    /// Close the section (version → even).  `Release` pairs with the
+    /// reader's `Acquire` first load: seeing the even version implies
+    /// seeing every write of the section.
+    fn write_end(&self) {
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
     /// Record one job's shard fan-out (`shards > 1` jobs only).
     pub fn record_shard_fanout(&self, shards: usize) {
+        self.write_begin();
         Self::bump(&self.jobs_sharded);
         Self::add(&self.shard_tasks, shards as u64);
+        self.write_end();
     }
 
     pub fn add(c: &AtomicU64, v: u64) {
@@ -202,27 +407,63 @@ impl ServiceCounters {
 
     /// Record one completed job's run metrics.
     pub fn record_run(&self, m: &RunMetrics) {
+        self.write_begin();
         Self::bump(&self.jobs_completed);
         Self::add(&self.steps_total, m.steps as u64);
         Self::add(&self.point_steps_total, m.points * m.steps as u64);
         Self::add(&self.exec_wall_ns, m.wall_ns);
+        self.write_end();
     }
 
     /// Record one job's predicted-vs-measured intensity error (the
     /// `model::calib` feedback path; `rel` is a fractional error).
     pub fn record_intensity_error(&self, rel: f64) {
+        self.write_begin();
         Self::add(&self.intensity_err_permille, (rel.abs() * 1000.0).round() as u64);
         Self::bump(&self.intensity_samples);
+        self.write_end();
     }
 
-    /// A consistent-enough point-in-time copy for rendering.  The
-    /// `profile` block defaults empty here — the service layer fills it
-    /// from its [`ProfileHub`](crate::tune::drift::ProfileHub) (these
-    /// counters know nothing about profiles).
+    /// A consistent point-in-time copy for rendering: retried until no
+    /// multi-counter writer was in flight across the loads (seqlock
+    /// read side), so correlated counters (completions vs. their
+    /// steps/wall sums, error sums vs. sample counts) are never torn
+    /// against each other.  The `profile` block defaults empty here —
+    /// the service layer fills it from its
+    /// [`ProfileHub`](crate::tune::drift::ProfileHub), and
+    /// `queue_depth` is likewise stamped by the service layer (these
+    /// counters own neither).
     pub fn snapshot(&self) -> ServiceSnapshot {
+        let mut spins = 0u32;
+        loop {
+            let v1 = self.version.load(Ordering::Acquire);
+            if v1 % 2 == 1 {
+                spins += 1;
+                if spins % 64 == 0 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+                continue;
+            }
+            let snap = self.load_relaxed();
+            // Order the data loads before the version re-check.
+            fence(Ordering::Acquire);
+            if self.version.load(Ordering::Relaxed) == v1 {
+                return snap;
+            }
+            spins += 1;
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    fn load_relaxed(&self) -> ServiceSnapshot {
         let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
         ServiceSnapshot {
             profile: crate::tune::drift::ProfileStatus::default(),
+            queue_depth: 0,
             requests: get(&self.requests),
             errors: get(&self.errors),
             jobs_accepted: get(&self.jobs_accepted),
@@ -251,6 +492,11 @@ pub struct ServiceSnapshot {
     /// Machine-profile identity + drift state
     /// (see [`crate::tune::drift::ProfileStatus`]).
     pub profile: crate::tune::drift::ProfileStatus,
+    /// Tasks queued at snapshot time — a *gauge*, not a counter: the
+    /// service layer stamps it from the job queue in the same breath
+    /// as the counter snapshot, so depth and the accept/complete
+    /// counters describe one moment instead of three.
+    pub queue_depth: u64,
     pub requests: u64,
     pub errors: u64,
     pub jobs_accepted: u64,
@@ -300,7 +546,12 @@ impl ServiceSnapshot {
     }
 }
 
-/// Per-session accounting, guarded by the owning session's mutex.
+/// Per-session accounting.  Plain (non-atomic) `u64`s on purpose:
+/// sessions live as `Arc<Mutex<Session>>` and every read *and* write
+/// of these fields happens under that mutex (audited: workers call
+/// `record_run` holding the session lock, and the `stats` renderer's
+/// per-session rows clone under the same lock), so torn or reordered
+/// reads are impossible by construction — no atomics needed here.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SessionStats {
     pub jobs: u64,
@@ -482,6 +733,111 @@ mod tests {
         let s = c.snapshot();
         assert_eq!(s.jobs_sharded, 2);
         assert_eq!(s.shard_tasks, 6);
+    }
+
+    #[test]
+    fn phase_windows_derive_from_job_deltas() {
+        let mut m = RunMetrics::default();
+        let mark = m.phase_mark();
+        m.bytes_moved += 100;
+        m.flops += 300;
+        m.interior_points += 90;
+        m.boundary_points += 10;
+        m.add_execute(Duration::from_nanos(50));
+        m.close_phase(&mark, 3, true);
+        // same-class window merges instead of opening a new phase
+        let mark = m.phase_mark();
+        m.bytes_moved += 60;
+        m.flops += 120;
+        m.close_phase(&mark, 3, true);
+        // a different class opens phase 1
+        let mark = m.phase_mark();
+        m.bytes_moved += 40;
+        m.flops += 40;
+        m.close_phase(&mark, 1, false);
+        assert_eq!(m.phases.len(), 2);
+        assert_eq!((m.phases[0].index, m.phases[0].depth, m.phases[0].fused), (0, 3, true));
+        assert_eq!(m.phases[0].bytes_moved, 160);
+        assert_eq!(m.phases[0].flops, 420);
+        assert_eq!((m.phases[1].index, m.phases[1].depth), (1, 1));
+        // per-phase entries sum exactly to the job-level totals
+        assert_eq!(m.phases.iter().map(|p| p.bytes_moved).sum::<u64>(), m.bytes_moved);
+        assert_eq!(m.phases.iter().map(|p| p.flops).sum::<u64>(), m.flops);
+        assert!((m.phases[0].interior_fraction() - 0.9).abs() < 1e-12);
+        assert!((m.phases[0].achieved_intensity() - 420.0 / 160.0).abs() < 1e-12);
+        assert_eq!(PhaseMetrics::default().interior_fraction(), 0.0);
+        assert_eq!(PhaseMetrics::default().achieved_intensity(), 0.0);
+    }
+
+    #[test]
+    fn absorb_folds_phases_by_index() {
+        // two shards, two phases each: the job keeps the phase split
+        let shard = |bytes: u64| {
+            let mut s = RunMetrics::default();
+            let mark = s.phase_mark();
+            s.bytes_moved += bytes;
+            s.flops += 2 * bytes;
+            s.close_phase(&mark, 2, false);
+            s
+        };
+        let mut job = RunMetrics::default();
+        for idx in [1usize, 0, 1, 0] {
+            let mut s = shard(64);
+            s.tag_phase(idx);
+            job.absorb(&s);
+        }
+        assert_eq!(job.phases.len(), 2);
+        assert_eq!(job.phases[0].index, 0, "sorted by phase index");
+        assert_eq!(job.phases[0].bytes_moved, 128);
+        assert_eq!(job.phases[1].bytes_moved, 128);
+        assert_eq!(job.phases.iter().map(|p| p.bytes_moved).sum::<u64>(), job.bytes_moved);
+        job.add_phase_assembly(1, Duration::from_nanos(500));
+        assert_eq!(job.phases[1].assemble_ns, 500);
+        // assembly on an unseen phase creates its entry
+        job.add_phase_assembly(7, Duration::from_nanos(5));
+        assert_eq!(job.phase_mut(7).assemble_ns, 5);
+    }
+
+    #[test]
+    fn render_shows_phase_table_only_when_split() {
+        let mut m = RunMetrics { steps: 4, points: 100, wall_ns: 1_000_000, ..Default::default() };
+        let mark = m.phase_mark();
+        m.bytes_moved += 10;
+        m.close_phase(&mark, 1, false);
+        assert!(!m.render().contains("phase 0"), "single phase renders flat");
+        let mark = m.phase_mark();
+        m.bytes_moved += 10;
+        m.close_phase(&mark, 4, true);
+        let s = m.render();
+        assert!(s.contains("phase 0:"), "{s}");
+        assert!(s.contains("phase 1: depth=4 fused"), "{s}");
+    }
+
+    #[test]
+    fn snapshot_is_seqlock_consistent_under_writers() {
+        use std::sync::Arc;
+        let c = Arc::new(ServiceCounters::default());
+        let stop = Arc::new(AtomicU64::new(0));
+        let writer = {
+            let (c, stop) = (c.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let m = RunMetrics { steps: 3, points: 7, wall_ns: 11, ..Default::default() };
+                while stop.load(Ordering::Relaxed) == 0 {
+                    c.record_run(&m);
+                    c.record_intensity_error(0.004);
+                }
+            })
+        };
+        for _ in 0..2000 {
+            let s = c.snapshot();
+            // correlated counters must never tear against each other
+            assert_eq!(s.steps_total, 3 * s.jobs_completed, "torn record_run");
+            assert_eq!(s.point_steps_total, 21 * s.jobs_completed);
+            assert_eq!(s.exec_wall_ns, 11 * s.jobs_completed);
+            assert_eq!(s.intensity_err_permille, 4 * s.intensity_samples);
+        }
+        stop.store(1, Ordering::Relaxed);
+        writer.join().unwrap();
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //!   internally multi-threaded); scatters write disjoint payload
 //!   regions.  Double-buffered fields keep launches pure.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -20,6 +21,7 @@ use crate::backend::{self, Backend, NativeBackend};
 use crate::coordinator::grid::{ShardPlan, Tiling};
 use crate::coordinator::metrics::RunMetrics;
 use crate::model::perf::Dtype;
+use crate::obs;
 use crate::runtime::{Runtime, TensorData};
 
 /// Advance `field` by dispatching `job` through a backend, with the
@@ -69,22 +71,59 @@ pub fn advance_sharded(
     let mut metrics = RunMetrics { steps: job.steps, points: job.points(), ..Default::default() };
     let wall0 = Instant::now();
     let mut slabs: Vec<Vec<f64>> = shards.iter().map(|s| vec![0.0; s.payload()]).collect();
-    for phase in phases {
+    // Scoped worker threads start with empty thread-locals — capture the
+    // driving thread's trace id here and re-enter it inside each closure.
+    let trace = obs::current_trace();
+    for (pi, phase) in phases.into_iter().enumerate() {
         let workers = lanes.max(1).min(shards.len());
         let per = shards.len().div_ceil(workers);
         let src: &[f64] = field;
+        let first_done = AtomicU64::new(u64::MAX);
         let results: Vec<Result<RunMetrics>> = std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for (ci, chunk) in slabs.chunks_mut(per).enumerate() {
                 let backend = &backend;
+                let first_done = &first_done;
                 handles.push(scope.spawn(move || {
-                    chunk
+                    let _in_trace = obs::trace_scope(trace);
+                    obs::set_worker(ci + 1);
+                    let out = chunk
                         .iter_mut()
                         .enumerate()
                         .map(|(li, slab)| {
-                            backend.advance_shard(job, plan, ci * per + li, phase, src, slab)
+                            let s0 = if obs::enabled() { obs::now_ns() } else { 0 };
+                            let mut res =
+                                backend.advance_shard(job, plan, ci * per + li, phase, src, slab);
+                            if let Ok(m) = res.as_mut() {
+                                m.tag_phase(pi);
+                                if obs::enabled() {
+                                    let end = obs::now_ns();
+                                    obs::metrics()
+                                        .phase_wall_ns
+                                        .observe(end.saturating_sub(s0) as f64);
+                                    obs::record(
+                                        obs::SpanKind::ShardPhase,
+                                        s0,
+                                        end,
+                                        obs::Payload::Phase {
+                                            index: pi as u64,
+                                            shard: (ci * per + li) as u64,
+                                            depth: phase.depth as u64,
+                                            fused: phase.fused,
+                                            bytes: m.bytes_moved,
+                                            flops: m.flops,
+                                            kernel: m.kernel.clone(),
+                                        },
+                                    );
+                                }
+                            }
+                            res
                         })
-                        .collect::<Vec<Result<RunMetrics>>>()
+                        .collect::<Vec<Result<RunMetrics>>>();
+                    if obs::enabled() {
+                        first_done.fetch_min(obs::now_ns(), Ordering::Relaxed);
+                    }
+                    out
                 }));
             }
             handles
@@ -92,15 +131,37 @@ pub fn advance_sharded(
                 .flat_map(|h| h.join().expect("shard worker panicked"))
                 .collect()
         });
+        if obs::enabled() {
+            let end = obs::now_ns();
+            let fd = first_done.load(Ordering::Relaxed);
+            let start = if fd == u64::MAX { end } else { fd.min(end) };
+            obs::metrics().barrier_stall_ns.observe(end.saturating_sub(start) as f64);
+            obs::record(
+                obs::SpanKind::Barrier,
+                start,
+                end,
+                obs::Payload::Barrier {
+                    index: pi as u64,
+                    shards: shards.len() as u64,
+                    stall_ns: end.saturating_sub(start),
+                },
+            );
+        }
         for res in results {
             metrics.absorb(&res?);
         }
         let t0 = Instant::now();
+        let a0 = if obs::enabled() { obs::now_ns() } else { 0 };
         for (shard, slab) in shards.iter().zip(&slabs) {
             let (a, b) = shard.rows();
             field[a * plane..b * plane].copy_from_slice(slab);
         }
-        metrics.add_scatter(t0.elapsed());
+        let assembled = t0.elapsed();
+        metrics.add_scatter(assembled);
+        metrics.add_phase_assembly(pi, assembled);
+        if obs::enabled() {
+            obs::record(obs::SpanKind::Assembly, a0, obs::now_ns(), obs::Payload::None);
+        }
     }
     metrics.wall_ns = wall0.elapsed().as_nanos() as u64;
     Ok(metrics)

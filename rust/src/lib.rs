@@ -29,6 +29,13 @@
 //!   planner/admission/criteria constants resolve from, and per-region
 //!   drift detection with online recalibration (`stencilctl tune`,
 //!   `--profile`, `--retune`).
+//! * [`obs`] — the observability plane: per-job trace ids, typed spans
+//!   through admission → plan lookup → queue → shard phases → barriers
+//!   → kernels recorded into a bounded flight recorder, NDJSON
+//!   streaming (`--trace-out`), Chrome trace-event rendering
+//!   (`stencilctl trace --chrome`), and always-on Prometheus counters
+//!   + log-bucketed histograms (`stats --prom`, the `metrics` verb).
+//!   Disabled by default and bit-identical to an untraced build.
 //! * [`util`] — from-scratch substrates (JSON, CLI, tables, RNG, property
 //!   testing, bench harness): the offline build environment vendors only
 //!   the `xla` and `anyhow` crates, so these are implemented here.
@@ -46,6 +53,7 @@ pub mod backend;
 pub mod coordinator;
 pub mod service;
 pub mod tune;
+pub mod obs;
 pub mod report;
 
 pub use model::stencil::{Shape, StencilPattern};

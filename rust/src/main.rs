@@ -7,18 +7,22 @@
 //!   sweep      fusion-depth sweep of predictions for one config
 //!   serve      long-lived NDJSON daemon (sessions, plan cache, admission)
 //!   tune       measure THIS machine's roofline constants into a profile
+//!   trace      render an NDJSON span stream (Chrome trace JSON / summary)
 //!   list       list AOT artifacts from the manifest
 //!   reproduce  regenerate a paper table/figure (table2..4, fig2..16, all)
 //!
 //! plan/run/serve accept --profile <path> (measured machine profile from
 //! `tune`; omitted = builtin datasheet table) and --retune off|auto.
+//! run/serve accept --trace-out <path> (stream per-job spans as NDJSON;
+//! omitted = tracing disabled, bit-identical to the untraced path).
 
 use anyhow::{bail, Result};
 
 use tc_stencil::backend;
-use tc_stencil::coordinator::config::{all_opt_specs, run_opt_specs, RunConfig};
+use tc_stencil::coordinator::config::{all_opt_specs, run_opt_specs, trace_opt_specs, RunConfig};
 use tc_stencil::coordinator::{planner, scheduler};
 use tc_stencil::engines;
+use tc_stencil::obs;
 use tc_stencil::hardware::Gpu;
 use tc_stencil::model::perf::{Dtype, Unit, Workload};
 use tc_stencil::model::{criteria, scenario};
@@ -44,7 +48,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
     // anywhere, parse against the UNION of all spec lists: a stray
     // option *value* ("tune --out serve") merely widens the accepted
     // flags instead of rejecting the real subcommand's own options.
-    let specs = if raw.iter().any(|a| a == "serve" || a == "tune") {
+    let specs = if raw.iter().any(|a| a == "serve" || a == "tune" || a == "trace") {
         all_opt_specs()
     } else {
         run_opt_specs()
@@ -58,6 +62,13 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "sweep" => sweep(&args),
         "serve" => serve_cmd(&args),
         "tune" => tune_cmd(&args),
+        "trace" => {
+            // Re-parse against trace's own specs: the union resolves
+            // --out to tune's profile.json default, which must not
+            // leak into "render to stdout" semantics here.
+            let targs = Args::parse(raw, &trace_opt_specs())?;
+            trace_cmd(&targs)
+        }
         "list" => list(&args),
         "reproduce" => reproduce(&args),
         "help" | "--help" => {
@@ -71,7 +82,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
 fn help_text() -> String {
     format!(
         "stencilctl — Do We Need Tensor Cores for Stencil Computations?\n\n\
-         subcommands: analyze | plan | run | sweep | serve | tune | list | reproduce <id>\n\
+         subcommands: analyze | plan | run | sweep | serve | tune | trace | list | reproduce <id>\n\
          reproduce ids: table2 table3 table4 fig2 fig8 fig10 fig11 fig13 fig15 fig16 all\n\n\
          backends (--backend, honored by plan, run, and sweep — sweep\n\
          scores predictions only, so the flag merely scopes candidates):\n\
@@ -138,7 +149,22 @@ fn help_text() -> String {
                               auto: serve also recalibrates in the\n\
                               background and installs the fresh profile\n\
                               (requires a measured --profile — a builtin\n\
-                              datasheet table is never silently replaced)\n\n{}",
+                              datasheet table is never silently replaced)\n\n\
+         observability (the obs tracing + metrics plane, rust/src/obs/):\n\
+           --trace-out PATH   run/serve: enable tracing and stream every\n\
+                              span (admission, plan lookup, queue wait,\n\
+                              shard phases, barriers, assembly, kernel\n\
+                              dispatch, drift/retune) as NDJSON; omitted\n\
+                              = disabled, zero events, bit-identical runs\n\
+           trace --in PATH [--chrome] [--out PATH]\n\
+                              render a span stream: Chrome trace-event\n\
+                              JSON (one track per worker, barrier stalls\n\
+                              as gaps; open in chrome://tracing) or a\n\
+                              per-worker/per-kind summary (default)\n\
+           stats [\"prom\": true] / metrics (serve verbs)\n\
+                              Prometheus exposition: counters + queue-\n\
+                              wait/phase-wall/barrier-stall/model-error\n\
+                              histograms and per-kernel GPts/s gauges\n\n{}",
         usage(&run_opt_specs())
     )
 }
@@ -185,8 +211,45 @@ fn tune_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Offline trace rendering: read an NDJSON span stream (produced by
+/// `--trace-out`) and emit Chrome trace-event JSON (`--chrome`) or a
+/// human-readable per-worker summary.
+fn trace_cmd(args: &Args) -> Result<()> {
+    let Some(input) = args.get("in") else {
+        bail!("trace needs --in <spans.ndjson> (produce one with run/serve --trace-out)");
+    };
+    let text = std::fs::read_to_string(input)?;
+    let spans = obs::export::load_trace(&text)?;
+    let rendered = if args.flag("chrome") {
+        obs::export::chrome_trace(&spans).to_string()
+    } else {
+        obs::export::summarize(&spans)
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, rendered.as_bytes())?;
+            println!("wrote {path} ({} spans)", spans.len());
+        }
+        None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
+/// Install the NDJSON span sink and flip tracing on when the run
+/// config carries `--trace-out`; no-op (and zero-cost thereafter)
+/// otherwise.
+fn wire_tracing(cfg: &RunConfig) -> Result<()> {
+    if let Some(path) = &cfg.trace_out {
+        obs::set_sink(path)?;
+        obs::enable();
+        eprintln!("trace: streaming NDJSON spans to {}", path.display());
+    }
+    Ok(())
+}
+
 fn serve_cmd(args: &Args) -> Result<()> {
     let (cfg, profile, _gpu) = cfg_and_gpu(args)?;
+    wire_tracing(&cfg)?;
     if cfg.retune == tc_stencil::tune::RetuneMode::Auto
         && profile.source != tc_stencil::tune::ProfileSource::Measured
     {
@@ -357,6 +420,7 @@ fn plan_cmd(args: &Args) -> Result<()> {
 
 fn run_cmd(args: &Args) -> Result<()> {
     let (cfg, profile, gpu) = cfg_and_gpu(args)?;
+    wire_tracing(&cfg)?;
     let manifest = Manifest::load(&cfg.artifacts_dir).ok();
     // A forced engine pins the artifact compilation scheme (PJRT only).
     let prefer = match &cfg.engine {
@@ -474,6 +538,10 @@ fn run_cmd(args: &Args) -> Result<()> {
     );
     let n: usize = cfg.domain.iter().product();
     let mut field = golden::gaussian(&cfg.domain);
+    // One trace per one-shot run; the id costs one atomic when
+    // tracing is off, matching serve's admission-time stamping.
+    let trace = obs::next_trace_id();
+    let _in_trace = obs::trace_scope(trace);
     let metrics = if sharded {
         let plan =
             tc_stencil::coordinator::grid::ShardPlan::dim0(&cfg.domain, shards, cfg.pattern.r, t)?;
@@ -482,6 +550,11 @@ fn run_cmd(args: &Args) -> Result<()> {
         scheduler::advance(be.as_mut(), &job, &mut field)?
     };
     println!("{}", metrics.render());
+    if obs::enabled() {
+        // The sink already has every span as NDJSON; draining the
+        // flight recorder doubles as this run's console summary.
+        print!("{}", obs::export::summarize(&obs::drain(trace)));
+    }
     // Model feedback: how close the achieved intensity landed to the
     // prediction for the executed temporal strategy and fan-out (a
     // blocked run the executor degraded to per-step sweeps realizes

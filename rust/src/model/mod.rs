@@ -135,6 +135,29 @@
 //! assert_eq!(kernels::peak_for(&peaks, &p, Dtype::F64, false), None); // sweep unprobed
 //! assert_eq!(kernels::probe_shapes().len(), 5); // star-1/2/3D, box-2/3D
 //! assert_eq!(builtin_profile(&tc_stencil::hardware::Gpu::a100()).kernels.len(), 0);
+//!
+//! // Exported metrics (MODEL.md "exported metrics" table): the obs
+//! // plane streams Eq. 6/8's counters per span — their per-phase
+//! // ratio is Eq. 7 measured — and the Prometheus histograms place
+//! // the model's thresholds inside readable log₂ buckets.
+//! use tc_stencil::coordinator::metrics::PhaseMetrics;
+//! use tc_stencil::obs;
+//! let ph = PhaseMetrics {
+//!     index: 0, depth: 3, fused: false, execute_ns: 1, assemble_ns: 0,
+//!     bytes_moved: 16, flops: 54, interior_points: 3, boundary_points: 1,
+//! };
+//! assert_eq!(ph.achieved_intensity(), 54.0 / 16.0); // Eq. 7: I = C/M, per phase
+//! assert_eq!(ph.interior_fraction(), 0.75);         // roofline-priced coverage
+//! let om = obs::metrics();
+//! // model_err buckets 2⁻¹⁰…2⁴ hold the drift boundary in a finite bucket.
+//! assert_eq!(om.model_err.bounds().first().copied(), Some(2.0_f64.powi(-10)));
+//! assert!(om.model_err.bucket_index(calib::REGION_TOLERANCE) < om.model_err.bounds().len());
+//! // queue wait / phase wall / barrier stall share one ns layout (2¹⁰…2³⁴).
+//! assert_eq!(om.queue_wait_ns.bounds().first().copied(), Some(1024.0));
+//! assert_eq!(om.phase_wall_ns.bounds(), om.barrier_stall_ns.bounds());
+//! // Per-kernel GPts/s — the streamed counterpart of `KernelPeak`.
+//! om.observe_kernel_gpts("box-2d1r/double/doctest", 0.25);
+//! assert!(om.kernel_rows().iter().any(|(k, n, _)| k.ends_with("/doctest") && *n >= 1));
 //! ```
 
 #![warn(missing_docs)]

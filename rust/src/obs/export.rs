@@ -1,0 +1,459 @@
+//! Span exporters: the NDJSON wire codec (bit-exact f64 payloads via
+//! the hex codec), the compact `"spans"` block attached to advance
+//! replies, and the Chrome trace-event converter behind
+//! `stencilctl trace --chrome`.
+//!
+//! Wire shape: one JSON object per span, payload fields flattened next
+//! to the envelope (`trace`/`worker`/`kind`/`start_ns`/`end_ns`).
+//! Times are integer nanoseconds (exact in JSON below 2^53); every
+//! f64 payload field travels as 16 hex digits of its IEEE-754 bits
+//! ([`hex_f64`]) so NaN model errors and subnormal EWMAs round-trip
+//! without moving a ulp — `Json::Num` would flatten them to `null`.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{Payload, Span, SpanKind};
+use crate::util::json::{f64_from_hex, hex_f64, Json};
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Encode one span as a flat JSON object (one NDJSON line when
+/// `Display`ed).
+pub fn span_to_json(s: &Span) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("trace".to_string(), num(s.trace));
+    o.insert("worker".to_string(), num(s.worker));
+    o.insert("kind".to_string(), Json::Str(s.kind.name().to_string()));
+    o.insert("start_ns".to_string(), num(s.start_ns));
+    o.insert("end_ns".to_string(), num(s.end_ns));
+    match &s.payload {
+        Payload::None => {}
+        Payload::Plan { key, hit } => {
+            o.insert("plan_key".to_string(), Json::Str(key.clone()));
+            o.insert("hit".to_string(), Json::Bool(*hit));
+        }
+        Payload::Queue { depth } => {
+            o.insert("depth".to_string(), num(*depth));
+        }
+        Payload::Phase { index, shard, depth, fused, bytes, flops, kernel } => {
+            o.insert("phase".to_string(), num(*index));
+            o.insert("shard".to_string(), num(*shard));
+            o.insert("depth".to_string(), num(*depth));
+            o.insert("fused".to_string(), Json::Bool(*fused));
+            o.insert("bytes".to_string(), num(*bytes));
+            o.insert("flops".to_string(), num(*flops));
+            o.insert("kernel".to_string(), Json::Str(kernel.clone()));
+        }
+        Payload::Barrier { index, shards, stall_ns } => {
+            o.insert("phase".to_string(), num(*index));
+            o.insert("shards".to_string(), num(*shards));
+            o.insert("stall_ns".to_string(), num(*stall_ns));
+        }
+        Payload::Kernel { name } => {
+            o.insert("kernel".to_string(), Json::Str(name.clone()));
+        }
+        Payload::Job { steps, shards, model_err } => {
+            o.insert("steps".to_string(), num(*steps));
+            o.insert("shards".to_string(), num(*shards));
+            o.insert("model_err".to_string(), Json::Str(hex_f64(*model_err)));
+        }
+        Payload::Drift { region, ewma, flagged } => {
+            o.insert("region".to_string(), Json::Str(region.clone()));
+            o.insert("ewma".to_string(), Json::Str(hex_f64(*ewma)));
+            o.insert("flagged".to_string(), Json::Bool(*flagged));
+        }
+        Payload::Retune { ok } => {
+            o.insert("ok".to_string(), Json::Bool(*ok));
+        }
+    }
+    Json::Obj(o)
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)?
+        .as_f64()
+        .filter(|v| v.fract() == 0.0 && *v >= 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| anyhow!("field {key:?} is not a non-negative integer"))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field {key:?} is not a string"))?
+        .to_string())
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("field {key:?} is not a bool"))
+}
+
+fn get_hex(j: &Json, key: &str) -> Result<f64> {
+    f64_from_hex(
+        j.get(key)?
+            .as_str()
+            .ok_or_else(|| anyhow!("field {key:?} is not a hex-f64 string"))?,
+    )
+}
+
+/// Decode the inverse of [`span_to_json`].
+pub fn span_from_json(j: &Json) -> Result<Span> {
+    let kind_name = get_str(j, "kind")?;
+    let kind = SpanKind::from_name(&kind_name)
+        .ok_or_else(|| anyhow!("unknown span kind {kind_name:?}"))?;
+    let payload = match kind {
+        SpanKind::PlanLookup => {
+            Payload::Plan { key: get_str(j, "plan_key")?, hit: get_bool(j, "hit")? }
+        }
+        SpanKind::QueueWait => Payload::Queue { depth: get_u64(j, "depth")? },
+        SpanKind::ShardPhase => Payload::Phase {
+            index: get_u64(j, "phase")?,
+            shard: get_u64(j, "shard")?,
+            depth: get_u64(j, "depth")?,
+            fused: get_bool(j, "fused")?,
+            bytes: get_u64(j, "bytes")?,
+            flops: get_u64(j, "flops")?,
+            kernel: get_str(j, "kernel")?,
+        },
+        SpanKind::Barrier => Payload::Barrier {
+            index: get_u64(j, "phase")?,
+            shards: get_u64(j, "shards")?,
+            stall_ns: get_u64(j, "stall_ns")?,
+        },
+        SpanKind::Kernel => Payload::Kernel { name: get_str(j, "kernel")? },
+        SpanKind::Job => Payload::Job {
+            steps: get_u64(j, "steps")?,
+            shards: get_u64(j, "shards")?,
+            model_err: get_hex(j, "model_err")?,
+        },
+        SpanKind::Drift => Payload::Drift {
+            region: get_str(j, "region")?,
+            ewma: get_hex(j, "ewma")?,
+            flagged: get_bool(j, "flagged")?,
+        },
+        SpanKind::Retune => Payload::Retune { ok: get_bool(j, "ok")? },
+        SpanKind::Admission | SpanKind::Assembly => Payload::None,
+    };
+    Ok(Span {
+        trace: get_u64(j, "trace")?,
+        worker: get_u64(j, "worker")?,
+        kind,
+        start_ns: get_u64(j, "start_ns")?,
+        end_ns: get_u64(j, "end_ns")?,
+        payload,
+    })
+}
+
+/// Parse an NDJSON trace file's text: one span per non-blank line.
+pub fn read_ndjson(text: &str) -> Result<Vec<Span>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse_line(line).map_err(|e| anyhow!("line {}: {e}", i + 1))?;
+        out.push(span_from_json(&j).map_err(|e| anyhow!("line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// The compact `"spans"` block an advance reply carries when tracing
+/// is enabled: one small object per span, timing in integer ns, heavy
+/// payloads reduced to the fields a dashboard sorts by.
+pub fn compact_spans(spans: &[Span]) -> Json {
+    Json::Arr(
+        spans
+            .iter()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("kind".to_string(), Json::Str(s.kind.name().to_string()));
+                o.insert("worker".to_string(), num(s.worker));
+                o.insert("wall_ns".to_string(), num(s.wall_ns()));
+                match &s.payload {
+                    Payload::Phase { index, shard, .. } => {
+                        o.insert("phase".to_string(), num(*index));
+                        o.insert("shard".to_string(), num(*shard));
+                    }
+                    Payload::Barrier { index, stall_ns, .. } => {
+                        o.insert("phase".to_string(), num(*index));
+                        o.insert("stall_ns".to_string(), num(*stall_ns));
+                    }
+                    Payload::Kernel { name } => {
+                        o.insert("kernel".to_string(), Json::Str(name.clone()));
+                    }
+                    Payload::Plan { hit, .. } => {
+                        o.insert("hit".to_string(), Json::Bool(*hit));
+                    }
+                    _ => {}
+                }
+                Json::Obj(o)
+            })
+            .collect(),
+    )
+}
+
+/// Render spans as Chrome trace-event JSON (`chrome://tracing`,
+/// Perfetto): one `"X"` complete event per span on `tid = worker`
+/// (timestamps in µs, so barrier stalls show up as literal gaps in a
+/// worker's track), plus one `"M"` metadata event naming each track.
+pub fn chrome_trace(spans: &[Span]) -> Json {
+    let workers: BTreeSet<u64> = spans.iter().map(|s| s.worker).collect();
+    let mut events = Vec::new();
+    for w in &workers {
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(format!("worker-{w}")));
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str("thread_name".to_string()));
+        o.insert("ph".to_string(), Json::Str("M".to_string()));
+        o.insert("pid".to_string(), num(1));
+        o.insert("tid".to_string(), num(*w));
+        o.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(o));
+    }
+    for s in spans {
+        let mut o = BTreeMap::new();
+        let name = match &s.payload {
+            Payload::Phase { index, shard, .. } => format!("phase{index}/shard{shard}"),
+            Payload::Barrier { index, .. } => format!("barrier{index}"),
+            Payload::Kernel { name } => format!("kernel {name}"),
+            _ => s.kind.name().to_string(),
+        };
+        o.insert("name".to_string(), Json::Str(name));
+        o.insert("cat".to_string(), Json::Str(s.kind.name().to_string()));
+        o.insert("ph".to_string(), Json::Str("X".to_string()));
+        o.insert("ts".to_string(), Json::Num(s.start_ns as f64 / 1000.0));
+        o.insert("dur".to_string(), Json::Num(s.wall_ns() as f64 / 1000.0));
+        o.insert("pid".to_string(), num(1));
+        o.insert("tid".to_string(), num(s.worker));
+        let Json::Obj(mut args) = span_to_json(s) else { unreachable!() };
+        args.remove("kind");
+        args.remove("start_ns");
+        args.remove("end_ns");
+        args.remove("worker");
+        o.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(top)
+}
+
+/// Human-readable per-worker summary of a span set (the `trace`
+/// subcommand's default, non-Chrome output).
+pub fn summarize(spans: &[Span]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let traces: BTreeSet<u64> = spans.iter().map(|s| s.trace).collect();
+    let workers: BTreeSet<u64> = spans.iter().map(|s| s.worker).collect();
+    let _ = writeln!(
+        out,
+        "{} spans, {} trace(s), {} worker track(s)",
+        spans.len(),
+        traces.len(),
+        workers.len()
+    );
+    for w in &workers {
+        let mine: Vec<&Span> = spans.iter().filter(|s| s.worker == *w).collect();
+        let busy: u64 = mine.iter().map(|s| s.wall_ns()).sum();
+        let stalls: u64 = mine
+            .iter()
+            .filter_map(|s| match s.payload {
+                Payload::Barrier { stall_ns, .. } => Some(stall_ns),
+                _ => None,
+            })
+            .sum();
+        let _ = writeln!(
+            out,
+            "  worker-{w}: {} spans, {:.3} ms spanned, {:.3} ms barrier stall",
+            mine.len(),
+            busy as f64 / 1e6,
+            stalls as f64 / 1e6
+        );
+    }
+    for k in [
+        SpanKind::Admission,
+        SpanKind::PlanLookup,
+        SpanKind::QueueWait,
+        SpanKind::ShardPhase,
+        SpanKind::Barrier,
+        SpanKind::Assembly,
+        SpanKind::Kernel,
+        SpanKind::Job,
+        SpanKind::Drift,
+        SpanKind::Retune,
+    ] {
+        let n = spans.iter().filter(|s| s.kind == k).count();
+        if n > 0 {
+            let wall: u64 = spans.iter().filter(|s| s.kind == k).map(|s| s.wall_ns()).sum();
+            let _ =
+                writeln!(out, "  {:<11} × {n:<4} Σ {:.3} ms", k.name(), wall as f64 / 1e6);
+        }
+    }
+    out
+}
+
+/// Parse + validate a whole NDJSON trace, erroring on an empty set —
+/// the `trace` subcommand's entry point.
+pub fn load_trace(text: &str) -> Result<Vec<Span>> {
+    let spans = read_ndjson(text)?;
+    if spans.is_empty() {
+        bail!("trace holds no spans (was the run traced with --trace-out?)");
+    }
+    Ok(spans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans() -> Vec<Span> {
+        vec![
+            Span {
+                trace: 1,
+                worker: 0,
+                kind: SpanKind::Admission,
+                start_ns: 10,
+                end_ns: 30,
+                payload: Payload::None,
+            },
+            Span {
+                trace: 1,
+                worker: 0,
+                kind: SpanKind::PlanLookup,
+                start_ns: 12,
+                end_ns: 20,
+                payload: Payload::Plan { key: "star-2d1r/double/64x64/t4".into(), hit: true },
+            },
+            Span {
+                trace: 1,
+                worker: 2,
+                kind: SpanKind::ShardPhase,
+                start_ns: 40,
+                end_ns: 90,
+                payload: Payload::Phase {
+                    index: 1,
+                    shard: 0,
+                    depth: 2,
+                    fused: false,
+                    bytes: 4096,
+                    flops: 18432,
+                    kernel: "star-2d1r/double/avx2".into(),
+                },
+            },
+            Span {
+                trace: 1,
+                worker: 2,
+                kind: SpanKind::Barrier,
+                start_ns: 90,
+                end_ns: 95,
+                payload: Payload::Barrier { index: 1, shards: 2, stall_ns: 5 },
+            },
+            Span {
+                trace: 1,
+                worker: 0,
+                kind: SpanKind::Job,
+                start_ns: 10,
+                end_ns: 100,
+                payload: Payload::Job { steps: 4, shards: 2, model_err: f64::NAN },
+            },
+            Span {
+                trace: 1,
+                worker: 0,
+                kind: SpanKind::Drift,
+                start_ns: 100,
+                end_ns: 100,
+                payload: Payload::Drift { region: "mem/blocked".into(), ewma: -0.0, flagged: true },
+            },
+        ]
+    }
+
+    #[test]
+    fn ndjson_roundtrip_is_bit_exact() {
+        for s in spans() {
+            let line = span_to_json(&s).to_string();
+            assert!(!line.contains('\n'));
+            let back = span_from_json(&Json::parse_line(&line).unwrap()).unwrap();
+            // NaN payloads break PartialEq — compare via bits.
+            match (&s.payload, &back.payload) {
+                (Payload::Job { model_err: a, .. }, Payload::Job { model_err: b, .. }) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "NaN must round-trip bit-exactly");
+                }
+                (Payload::Drift { ewma: a, .. }, Payload::Drift { ewma: b, .. }) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "-0.0 must round-trip bit-exactly");
+                }
+                _ => assert_eq!(s.payload, back.payload),
+            }
+            assert_eq!((s.trace, s.worker, s.kind), (back.trace, back.worker, back.kind));
+            assert_eq!((s.start_ns, s.end_ns), (back.start_ns, back.end_ns));
+        }
+    }
+
+    #[test]
+    fn read_ndjson_skips_blanks_and_reports_bad_lines() {
+        let all = spans();
+        let text = format!(
+            "{}\n\n{}\n",
+            span_to_json(&all[0]),
+            span_to_json(&all[2])
+        );
+        let back = read_ndjson(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        let err = format!("{:#}", read_ndjson("{\"kind\":\"bogus\"}").unwrap_err());
+        assert!(err.contains("line 1"), "{err}");
+        assert!(load_trace("\n\n").is_err(), "empty trace must error");
+    }
+
+    #[test]
+    fn compact_block_keeps_sort_keys_only() {
+        let j = compact_spans(&spans());
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 6);
+        let phase = &arr[2];
+        assert_eq!(phase.get("kind").unwrap().as_str(), Some("shard_phase"));
+        assert_eq!(phase.get("phase").unwrap().as_i64(), Some(1));
+        assert_eq!(phase.get("wall_ns").unwrap().as_i64(), Some(50));
+        assert!(phase.get("bytes").is_err(), "heavy fields stay out of replies");
+        let barrier = &arr[3];
+        assert_eq!(barrier.get("stall_ns").unwrap().as_i64(), Some(5));
+    }
+
+    #[test]
+    fn chrome_trace_has_tracks_and_microsecond_events() {
+        let j = chrome_trace(&spans());
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 distinct workers -> 2 metadata events + 6 X events
+        assert_eq!(events.len(), 8);
+        let meta: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("M")).collect();
+        assert_eq!(meta.len(), 2);
+        assert_eq!(meta[0].get("args").unwrap().get("name").unwrap().as_str(), Some("worker-0"));
+        let phase = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("phase1/shard0"))
+            .expect("phase event");
+        assert_eq!(phase.get("tid").unwrap().as_i64(), Some(2));
+        assert_eq!(phase.get("ts").unwrap().as_f64(), Some(0.04), "40 ns = 0.04 µs");
+        assert_eq!(phase.get("dur").unwrap().as_f64(), Some(0.05));
+        assert_eq!(phase.get("args").unwrap().get("bytes").unwrap().as_i64(), Some(4096));
+        assert!(phase.get("args").unwrap().get("kind").is_err(), "envelope stays out of args");
+        // the whole thing parses back as one JSON document
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn summary_counts_kinds_and_stalls() {
+        let s = summarize(&spans());
+        assert!(s.contains("6 spans"), "{s}");
+        assert!(s.contains("worker-2"), "{s}");
+        assert!(s.contains("shard_phase"), "{s}");
+        assert!(s.contains("barrier"), "{s}");
+    }
+}

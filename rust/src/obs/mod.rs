@@ -1,0 +1,486 @@
+//! Structured tracing + metrics spine (the observability plane).
+//!
+//! Every layer of the runtime emits into this module instead of
+//! growing ad-hoc counters:
+//!
+//! * **Spans** — monotonic-clock intervals with typed payloads
+//!   ([`Payload`]), one [`SpanKind`] per pipeline stage: admission →
+//!   plan-cache lookup → queue wait → each shard phase → halo-assembly
+//!   barrier → kernel dispatch, plus drift/retune episodes from
+//!   [`crate::tune::drift`].  Spans are recorded into per-worker
+//!   bounded rings (a flight recorder: the most recent window is
+//!   always available, memory never grows) and optionally streamed as
+//!   NDJSON to a `--trace-out` sink.  f64 payload fields travel in the
+//!   crate's bit-exact hex codec ([`crate::util::json::hex_f64`]).
+//! * **Metrics** — always-on Prometheus-style counters and
+//!   log-bucketed histograms ([`prom`]): queue wait, phase wall,
+//!   barrier stall, model error, per-kernel GPts/s.
+//!
+//! Tracing is **disabled by default and zero-cost when disabled**: the
+//! only residue on the hot path is one relaxed atomic load per probe
+//! site, and a disabled run emits exactly zero events with replies
+//! bit-identical to a build without this module.  Trace ids and queue
+//! timestamps are still assigned unconditionally (one atomic add / one
+//! monotonic-clock read per *job*, not per point) so the always-on
+//! histograms stay meaningful.
+//!
+//! Correlation model: each job gets a trace id at admission
+//! ([`next_trace_id`]); the handling thread enters it with
+//! [`trace_scope`], worker threads tag themselves with [`set_worker`],
+//! and every [`record`] call stamps the current (trace, worker) pair.
+//! [`drain`] removes one trace's spans from all rings — concurrent
+//! jobs cannot eat each other's history.
+
+pub mod export;
+pub mod prom;
+mod ring;
+
+pub use ring::Ring;
+
+use std::cell::Cell;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Worker tracks the flight recorder keeps (worker ids hash into
+/// these; more workers than tracks share rings, never block).
+pub const WORKER_TRACKS: usize = 64;
+/// Spans each worker track retains before evicting the oldest.
+pub const RING_CAP: usize = 512;
+
+/// Pipeline stage a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Admission control: request arrival → accept/downgrade/reject.
+    Admission,
+    /// Plan-cache lookup (hit or recompute) for the job's `PlanKey`.
+    PlanLookup,
+    /// Admission → first dequeue by a worker.
+    QueueWait,
+    /// One shard × one `ShardPhase` compute interval.
+    ShardPhase,
+    /// Halo-assembly barrier: first shard done → last shard done.
+    Barrier,
+    /// Slab-gather/scatter assembly after a barrier completes.
+    Assembly,
+    /// Kernel dispatch: one monolithic `run_field` execution.
+    Kernel,
+    /// Whole job: admission → reply, with model feedback attached.
+    Job,
+    /// A drift reading that flagged the machine profile.
+    Drift,
+    /// A retune episode (measure → install or reject).
+    Retune,
+}
+
+impl SpanKind {
+    /// Stable wire name (NDJSON `kind` field, Chrome event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admission => "admission",
+            SpanKind::PlanLookup => "plan_lookup",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::ShardPhase => "shard_phase",
+            SpanKind::Barrier => "barrier",
+            SpanKind::Assembly => "assembly",
+            SpanKind::Kernel => "kernel",
+            SpanKind::Job => "job",
+            SpanKind::Drift => "drift",
+            SpanKind::Retune => "retune",
+        }
+    }
+
+    /// Inverse of [`SpanKind::name`].
+    pub fn from_name(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "admission" => SpanKind::Admission,
+            "plan_lookup" => SpanKind::PlanLookup,
+            "queue_wait" => SpanKind::QueueWait,
+            "shard_phase" => SpanKind::ShardPhase,
+            "barrier" => SpanKind::Barrier,
+            "assembly" => SpanKind::Assembly,
+            "kernel" => SpanKind::Kernel,
+            "job" => SpanKind::Job,
+            "drift" => SpanKind::Drift,
+            "retune" => SpanKind::Retune,
+            _ => return None,
+        })
+    }
+}
+
+/// Typed span payload — what the stage measured, beyond wall time.
+/// Per-phase `bytes`/`flops` make achieved intensity (Eq. 7/8's
+/// measured `I = C/M`) computable *per phase*, not just per job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// No payload.
+    None,
+    /// Plan-cache lookup: rendered plan key + hit/miss.
+    Plan {
+        /// Human-readable plan key (pattern/dtype/domain/steps…).
+        key: String,
+        /// True when the cache served a stamped plan without planning.
+        hit: bool,
+    },
+    /// Queue wait: depth observed at dequeue.
+    Queue {
+        /// Tasks still queued when this one was popped.
+        depth: u64,
+    },
+    /// One shard × phase compute interval.
+    Phase {
+        /// Phase index within the job's `shard_phases` schedule.
+        index: u64,
+        /// Shard index within the phase.
+        shard: u64,
+        /// Temporal depth the phase executes.
+        depth: u64,
+        /// True when the phase runs a fused kernel.
+        fused: bool,
+        /// Principal-memory bytes this shard moved in this phase.
+        bytes: u64,
+        /// Multiply-add FLOPs this shard executed in this phase.
+        flops: u64,
+        /// Resolved row-kernel name (empty if unresolved).
+        kernel: String,
+    },
+    /// Halo-assembly barrier for one phase.
+    Barrier {
+        /// Phase index the barrier closes.
+        index: u64,
+        /// Shards the barrier waited for.
+        shards: u64,
+        /// First-shard-done → last-shard-done straggler stall.
+        stall_ns: u64,
+    },
+    /// Kernel dispatch: the resolved row-kernel name.
+    Kernel {
+        /// `"{shape}/{dtype}/{isa}"` or `"generic"`.
+        name: String,
+    },
+    /// Whole-job summary attached to the `Job` span.
+    Job {
+        /// Time steps the job advanced.
+        steps: u64,
+        /// Shards the job fanned out into (1 = monolithic).
+        shards: u64,
+        /// |measured − predicted| / predicted intensity (NaN when the
+        /// backend did not instrument traffic).
+        model_err: f64,
+    },
+    /// Drift reading that flagged the machine profile.
+    Drift {
+        /// Drift region key (`mem/…` / `comp/…`).
+        region: String,
+        /// EWMA of the model error in that region.
+        ewma: f64,
+        /// True when this reading crossed the threshold.
+        flagged: bool,
+    },
+    /// Retune episode outcome.
+    Retune {
+        /// True when a fresh measured profile was installed.
+        ok: bool,
+    },
+}
+
+/// One completed interval: (trace, worker, kind, clock, payload).
+/// Times are nanoseconds on the recorder's private monotonic epoch —
+/// comparable to each other, never to wall clocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Job trace id ([`next_trace_id`]); 0 = outside any job.
+    pub trace: u64,
+    /// Worker track ([`set_worker`]); 0 = handler/main thread.
+    pub worker: u64,
+    /// Pipeline stage.
+    pub kind: SpanKind,
+    /// Start, ns since the recorder epoch.
+    pub start_ns: u64,
+    /// End, ns since the recorder epoch (≥ `start_ns`).
+    pub end_ns: u64,
+    /// Stage-typed measurement.
+    pub payload: Payload,
+}
+
+impl Span {
+    /// Span duration in nanoseconds.
+    pub fn wall_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static TRACE_SEQ: AtomicU64 = AtomicU64::new(1);
+
+struct Recorder {
+    epoch: Instant,
+    rings: Vec<Mutex<Ring>>,
+    sink: Mutex<Option<BufWriter<File>>>,
+}
+
+fn recorder() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| Recorder {
+        epoch: Instant::now(),
+        rings: (0..WORKER_TRACKS).map(|_| Mutex::new(Ring::new(RING_CAP))).collect(),
+        sink: Mutex::new(None),
+    })
+}
+
+thread_local! {
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
+    static WORKER_ID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// True when span recording is on (one relaxed load — the entire
+/// disabled-mode cost of a probe site).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on (idempotent).  The recorder epoch is pinned
+/// on first use, before the flag flips, so no span can observe an
+/// uninitialized clock.
+pub fn enable() {
+    recorder();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn span recording off (idempotent).  Rings keep their contents;
+/// the NDJSON sink, if any, stays attached but receives nothing.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Nanoseconds since the recorder's monotonic epoch.  Fits a JSON
+/// number exactly (< 2^53 ns ≈ 104 days of uptime per value).
+pub fn now_ns() -> u64 {
+    recorder().epoch.elapsed().as_nanos() as u64
+}
+
+/// Allocate the next job trace id (monotonic from 1; 0 is reserved
+/// for "outside any job").
+pub fn next_trace_id() -> u64 {
+    TRACE_SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The calling thread's active trace id (0 outside any scope).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(|c| c.get())
+}
+
+/// Tag the calling thread as worker `w` for span attribution
+/// (worker-pool threads call this once at startup).
+pub fn set_worker(w: usize) {
+    WORKER_ID.with(|c| c.set(w as u64));
+}
+
+/// The calling thread's worker id (0 unless [`set_worker`] was called).
+pub fn worker_id() -> u64 {
+    WORKER_ID.with(|c| c.get())
+}
+
+/// RAII guard restoring the previous thread-local trace id on drop.
+#[derive(Debug)]
+pub struct TraceScope {
+    prev: u64,
+}
+
+/// Enter `trace` on the calling thread until the guard drops (scopes
+/// nest; the previous id is restored).
+#[must_use = "the scope ends when the guard drops"]
+pub fn trace_scope(trace: u64) -> TraceScope {
+    let prev = CURRENT_TRACE.with(|c| c.replace(trace));
+    TraceScope { prev }
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT_TRACE.with(|c| c.set(prev));
+    }
+}
+
+/// Record one completed span under the calling thread's (trace,
+/// worker).  No-op when disabled.  The span lands in the worker's ring
+/// and, when a sink is attached, as one NDJSON line.
+pub fn record(kind: SpanKind, start_ns: u64, end_ns: u64, payload: Payload) {
+    if !enabled() {
+        return;
+    }
+    let span = Span {
+        trace: current_trace(),
+        worker: worker_id(),
+        kind,
+        start_ns,
+        end_ns,
+        payload,
+    };
+    let r = recorder();
+    if let Ok(mut g) = r.sink.lock() {
+        if let Some(w) = g.as_mut() {
+            // Flushed per line so a crash or shutdown loses at most
+            // the current span; trace files are read by external tools.
+            let _ = writeln!(w, "{}", export::span_to_json(&span));
+            let _ = w.flush();
+        }
+    }
+    let track = span.worker as usize % WORKER_TRACKS;
+    if let Ok(mut ring) = r.rings[track].lock() {
+        ring.push(span);
+    }
+}
+
+/// Remove and return every recorded span of `trace`, across all worker
+/// rings, sorted by start time.  Other traces' spans are untouched.
+pub fn drain(trace: u64) -> Vec<Span> {
+    let r = recorder();
+    let mut out = Vec::new();
+    for ring in &r.rings {
+        if let Ok(mut g) = ring.lock() {
+            out.extend(g.drain_trace(trace));
+        }
+    }
+    out.sort_by_key(|s| (s.start_ns, s.end_ns, s.worker));
+    out
+}
+
+/// Remove and return every recorded span, sorted by start time.
+pub fn drain_all() -> Vec<Span> {
+    let r = recorder();
+    let mut out = Vec::new();
+    for ring in &r.rings {
+        if let Ok(mut g) = ring.lock() {
+            out.extend(g.drain_all());
+        }
+    }
+    out.sort_by_key(|s| (s.start_ns, s.end_ns, s.worker));
+    out
+}
+
+/// Attach an NDJSON sink: every recorded span is appended to `path`
+/// as one JSON line (created/truncated here).  Implies nothing about
+/// [`enable`] — callers wire both.
+pub fn set_sink(path: &Path) -> std::io::Result<()> {
+    let f = File::create(path)?;
+    if let Ok(mut g) = recorder().sink.lock() {
+        *g = Some(BufWriter::new(f));
+    }
+    Ok(())
+}
+
+/// Detach the NDJSON sink (flushing it), if one is attached.
+pub fn clear_sink() {
+    if let Ok(mut g) = recorder().sink.lock() {
+        if let Some(w) = g.as_mut() {
+            let _ = w.flush();
+        }
+        *g = None;
+    }
+}
+
+/// The process-wide metrics registry (always on; independent of span
+/// recording because counter/histogram updates never change replies).
+pub fn metrics() -> &'static prom::Metrics {
+    static M: OnceLock<prom::Metrics> = OnceLock::new();
+    M.get_or_init(prom::Metrics::new)
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    // Tests that flip the global ENABLED flag must serialize, or a
+    // concurrent disabled-mode assertion would observe their window.
+    static L: Mutex<()> = Mutex::new(());
+    L.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = test_lock();
+        disable();
+        let trace = next_trace_id();
+        let _s = trace_scope(trace);
+        record(SpanKind::Kernel, 0, 10, Payload::None);
+        assert!(drain(trace).is_empty());
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn spans_land_under_the_active_trace_and_worker() {
+        let _g = test_lock();
+        enable();
+        let trace = next_trace_id();
+        {
+            let _s = trace_scope(trace);
+            set_worker(3);
+            let t0 = now_ns();
+            record(SpanKind::Admission, t0, now_ns(), Payload::None);
+            record(
+                SpanKind::Kernel,
+                now_ns(),
+                now_ns(),
+                Payload::Kernel { name: "generic".into() },
+            );
+            set_worker(0);
+        }
+        disable();
+        let spans = drain(trace);
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().all(|s| s.trace == trace && s.worker == 3));
+        assert_eq!(spans[0].kind, SpanKind::Admission);
+        assert!(spans[0].start_ns <= spans[1].start_ns, "sorted by start");
+        // a second drain finds nothing: spans were removed
+        assert!(drain(trace).is_empty());
+    }
+
+    #[test]
+    fn trace_scopes_nest_and_restore() {
+        let _g = test_lock();
+        assert_eq!(current_trace(), 0);
+        let outer = trace_scope(7);
+        assert_eq!(current_trace(), 7);
+        {
+            let _inner = trace_scope(9);
+            assert_eq!(current_trace(), 9);
+        }
+        assert_eq!(current_trace(), 7);
+        drop(outer);
+        assert_eq!(current_trace(), 0);
+    }
+
+    #[test]
+    fn drain_is_trace_selective() {
+        let _g = test_lock();
+        enable();
+        let (a, b) = (next_trace_id(), next_trace_id());
+        {
+            let _s = trace_scope(a);
+            record(SpanKind::Job, 0, 1, Payload::None);
+        }
+        {
+            let _s = trace_scope(b);
+            record(SpanKind::Job, 2, 3, Payload::None);
+        }
+        disable();
+        assert_eq!(drain(a).len(), 1);
+        assert_eq!(drain(b).len(), 1);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(a != 0 && b != 0 && a != b);
+        let t0 = now_ns();
+        let t1 = now_ns();
+        assert!(t1 >= t0, "monotonic epoch clock");
+    }
+}

@@ -1,0 +1,372 @@
+//! Prometheus-style metrics: lock-free histograms with power-of-two
+//! (log-bucketed) bounds, and the text exposition the `stats --prom` /
+//! `"metrics"` protocol surfaces render.
+//!
+//! Histograms are **always on** — observations are counter updates
+//! that never change replies, so they need no enable gate (unlike
+//! spans).  Bucket bounds are powers of two, `le = 2^e` for
+//! `e ∈ [emin, emax]` plus a `+Inf` overflow bucket: exact to compare
+//! against, cheap to index, and wide enough that one layout covers
+//! nanosecond stalls and multi-second jobs alike.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::metrics::ServiceSnapshot;
+use crate::service::plan_cache::CacheStats;
+
+/// Lock-free histogram with `le = 2^e` bucket bounds.
+///
+/// Per-bucket counts are stored *non*-cumulative (one `fetch_add` per
+/// observation touches exactly one bucket) and cumulated at exposition
+/// time, where Prometheus' `le` convention wants running totals.
+#[derive(Debug)]
+pub struct Histogram {
+    emin: i32,
+    emax: i32,
+    /// One slot per finite bound, plus the `+Inf` overflow slot.
+    buckets: Vec<AtomicU64>,
+    /// Σ observed values, carried as f64 bits under CAS so `sum` stays
+    /// lock-free alongside the bucket counters.
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    /// A histogram with finite bounds `2^emin ..= 2^emax` (`emax ≥
+    /// emin` enforced) and a `+Inf` overflow bucket.
+    pub fn new(emin: i32, emax: i32) -> Histogram {
+        let emax = emax.max(emin);
+        let finite = (emax - emin + 1) as usize;
+        Histogram {
+            emin,
+            emax,
+            buckets: (0..=finite).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0.0_f64.to_bits()),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// The finite bucket bounds, ascending (`2^emin ..= 2^emax`).
+    pub fn bounds(&self) -> Vec<f64> {
+        (self.emin..=self.emax).map(|e| 2.0_f64.powi(e)).collect()
+    }
+
+    /// Index of the bucket an observation lands in: the first bound
+    /// with `v <= 2^e` (Prometheus' inclusive-`le` convention), or the
+    /// overflow slot past them all.  Negative values clamp into the
+    /// first bucket; the scan is exact at every boundary because both
+    /// sides are powers of two.
+    pub fn bucket_index(&self, v: f64) -> usize {
+        let v = v.max(0.0);
+        for (i, bound) in self.bounds().iter().enumerate() {
+            if v <= *bound {
+                return i;
+            }
+        }
+        self.buckets.len() - 1
+    }
+
+    /// Record one observation (NaN/∞ are dropped: a non-finite sample
+    /// carries no magnitude to bucket and would poison `sum`).
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let idx = self.bucket_index(v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v.max(0.0)).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observed values (negative samples clamp to 0, matching
+    /// the bucketing).
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket (non-cumulative) counts, overflow slot last.
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Append this histogram's exposition lines (cumulative `le`
+    /// buckets, `_sum`, `_count`) under `name`, with optional extra
+    /// `labels` (e.g. `kernel="star-2d1r/double/avx2"`).
+    fn render(&self, out: &mut String, name: &str, labels: &str) {
+        let counts = self.snapshot();
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (bound, n) in self.bounds().iter().zip(&counts) {
+            cum += n;
+            let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{bound}\"}} {cum}");
+        }
+        cum += counts.last().copied().unwrap_or(0);
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {cum}");
+        let lb = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        let _ = writeln!(out, "{name}_sum{lb} {}", self.sum());
+        let _ = writeln!(out, "{name}_count{lb} {cum}");
+    }
+}
+
+/// The process-wide metric registry (reached via
+/// [`crate::obs::metrics`]).
+#[derive(Debug)]
+pub struct Metrics {
+    /// Admission → dequeue wait per task, nanoseconds.
+    pub queue_wait_ns: Histogram,
+    /// One shard × phase (or monolithic kernel) compute wall, ns.
+    pub phase_wall_ns: Histogram,
+    /// First-shard-done → barrier-complete straggler stall, ns.
+    pub barrier_stall_ns: Histogram,
+    /// Per-job |measured − predicted| / predicted intensity.
+    pub model_err: Histogram,
+    /// Per-kernel achieved GStencils/s (GPts/s), one histogram per
+    /// resolved kernel name.
+    kernel_gpts: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Metrics {
+    /// Registry with the crate's standard bucket layouts: ~1 µs–17 s
+    /// for times, ~0.001–16 for model error, ~0.008–128 for GPts/s.
+    pub fn new() -> Metrics {
+        Metrics {
+            queue_wait_ns: Histogram::new(10, 34),
+            phase_wall_ns: Histogram::new(10, 34),
+            barrier_stall_ns: Histogram::new(10, 34),
+            model_err: Histogram::new(-10, 4),
+            kernel_gpts: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Record one job's achieved GPts/s under its resolved kernel.
+    pub fn observe_kernel_gpts(&self, kernel: &str, gpts: f64) {
+        if kernel.is_empty() || !gpts.is_finite() {
+            return;
+        }
+        if let Ok(mut map) = self.kernel_gpts.lock() {
+            map.entry(kernel.to_string())
+                .or_insert_with(|| Histogram::new(-7, 7))
+                .observe(gpts);
+        }
+    }
+
+    /// (kernel, count, sum) rows of the per-kernel GPts/s histograms.
+    pub fn kernel_rows(&self) -> Vec<(String, u64, f64)> {
+        match self.kernel_gpts.lock() {
+            Ok(map) => map.iter().map(|(k, h)| (k.clone(), h.count(), h.sum())).collect(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Render the full Prometheus text exposition: service counters
+    /// from `snap`, plan-cache counters from `cache`, the queue-depth
+    /// gauge, and every histogram.
+    pub fn exposition(&self, snap: &ServiceSnapshot, cache: &CacheStats) -> String {
+        let mut out = String::new();
+        let counters: &[(&str, &str, u64)] = &[
+            ("requests", "Protocol requests received.", snap.requests),
+            ("errors", "Requests that returned an error.", snap.errors),
+            ("jobs_accepted", "Advance jobs admitted.", snap.jobs_accepted),
+            ("jobs_downgraded", "Jobs admitted with a downgraded plan.", snap.jobs_downgraded),
+            ("jobs_rejected", "Jobs refused by admission control.", snap.jobs_rejected),
+            ("queue_rejected", "Jobs refused because the queue was full.", snap.queue_rejected),
+            ("jobs_completed", "Jobs that ran to completion.", snap.jobs_completed),
+            ("jobs_failed", "Jobs that failed in execution.", snap.jobs_failed),
+            ("jobs_sharded", "Jobs that fanned out into shard tasks.", snap.jobs_sharded),
+            ("shard_tasks", "Shard tasks those jobs fanned out into.", snap.shard_tasks),
+            ("plan_hits", "Plan lookups served from cache.", snap.plan_hits),
+            ("plan_misses", "Plan lookups that re-planned.", snap.plan_misses),
+            ("steps", "Time steps advanced, summed over jobs.", snap.steps_total),
+            (
+                "point_steps",
+                "Point-updates executed, summed over jobs.",
+                snap.point_steps_total,
+            ),
+            ("exec_wall_ns", "Job wall time, nanoseconds, summed.", snap.exec_wall_ns),
+            (
+                "intensity_err_permille",
+                "Accumulated |measured-predicted|/predicted intensity, 0.1% units.",
+                snap.intensity_err_permille,
+            ),
+            (
+                "intensity_samples",
+                "Jobs that contributed an intensity error sample.",
+                snap.intensity_samples,
+            ),
+            ("plan_cache_hits", "Plan-cache hits since start.", cache.hits),
+            ("plan_cache_misses", "Plan-cache misses since start.", cache.misses),
+            ("plan_cache_evictions", "Plan-cache LRU evictions since start.", cache.evictions),
+        ];
+        for (name, help, v) in counters {
+            let _ = writeln!(out, "# HELP stencilctl_{name}_total {help}");
+            let _ = writeln!(out, "# TYPE stencilctl_{name}_total counter");
+            let _ = writeln!(out, "stencilctl_{name}_total {v}");
+        }
+        let gauges: &[(&str, &str, f64)] = &[
+            ("queue_depth", "Tasks currently queued.", snap.queue_depth as f64),
+            ("plan_cache_size", "Plans currently cached.", cache.len as f64),
+            (
+                "plan_cache_generation",
+                "Plan-cache invalidation generation.",
+                cache.generation as f64,
+            ),
+            (
+                "model_error",
+                "Mean |measured-predicted|/predicted intensity.",
+                snap.model_error(),
+            ),
+        ];
+        for (name, help, v) in gauges {
+            let _ = writeln!(out, "# HELP stencilctl_{name} {help}");
+            let _ = writeln!(out, "# TYPE stencilctl_{name} gauge");
+            let _ = writeln!(out, "stencilctl_{name} {v}");
+        }
+        let hists: &[(&str, &str, &Histogram)] = &[
+            (
+                "queue_wait_ns",
+                "Admission to dequeue wait per task, nanoseconds.",
+                &self.queue_wait_ns,
+            ),
+            (
+                "phase_wall_ns",
+                "Shard-phase (or kernel) compute wall, nanoseconds.",
+                &self.phase_wall_ns,
+            ),
+            (
+                "barrier_stall_ns",
+                "Straggler stall at the halo-assembly barrier, nanoseconds.",
+                &self.barrier_stall_ns,
+            ),
+            (
+                "model_err",
+                "Per-job |measured-predicted|/predicted intensity.",
+                &self.model_err,
+            ),
+        ];
+        for (name, help, h) in hists {
+            let _ = writeln!(out, "# HELP stencilctl_{name} {help}");
+            let _ = writeln!(out, "# TYPE stencilctl_{name} histogram");
+            h.render(&mut out, &format!("stencilctl_{name}"), "");
+        }
+        let _ = writeln!(out, "# HELP stencilctl_kernel_gpts Achieved GStencils/s per kernel.");
+        let _ = writeln!(out, "# TYPE stencilctl_kernel_gpts histogram");
+        if let Ok(map) = self.kernel_gpts.lock() {
+            for (kernel, h) in map.iter() {
+                h.render(&mut out, "stencilctl_kernel_gpts", &format!("kernel=\"{kernel}\""));
+            }
+        }
+        out
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_inclusive_powers_of_two() {
+        let h = Histogram::new(0, 3); // bounds 1, 2, 4, 8
+        assert_eq!(h.bounds(), vec![1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(h.bucket_index(0.0), 0);
+        assert_eq!(h.bucket_index(1.0), 0, "le is inclusive");
+        assert_eq!(h.bucket_index(1.0001), 1);
+        assert_eq!(h.bucket_index(2.0), 1);
+        assert_eq!(h.bucket_index(8.0), 3);
+        assert_eq!(h.bucket_index(8.0001), 4, "overflow slot");
+        assert_eq!(h.bucket_index(-5.0), 0, "negatives clamp");
+    }
+
+    #[test]
+    fn fractional_bounds_stay_exact() {
+        let h = Histogram::new(-2, 1); // 0.25, 0.5, 1, 2
+        assert_eq!(h.bounds(), vec![0.25, 0.5, 1.0, 2.0]);
+        assert_eq!(h.bucket_index(0.25), 0);
+        assert_eq!(h.bucket_index(0.250001), 1);
+    }
+
+    #[test]
+    fn observe_accumulates_and_drops_non_finite() {
+        let h = Histogram::new(0, 3);
+        h.observe(1.0);
+        h.observe(3.0);
+        h.observe(100.0);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.snapshot(), vec![1, 0, 1, 0, 1]);
+        assert!((h.sum() - 104.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exposition_cumulates_le_buckets() {
+        let h = Histogram::new(0, 2); // 1, 2, 4
+        h.observe(1.0);
+        h.observe(1.5);
+        h.observe(50.0);
+        let mut out = String::new();
+        h.render(&mut out, "x", "");
+        assert!(out.contains("x_bucket{le=\"1\"} 1"), "{out}");
+        assert!(out.contains("x_bucket{le=\"2\"} 2"), "{out}");
+        assert!(out.contains("x_bucket{le=\"4\"} 2"), "{out}");
+        assert!(out.contains("x_bucket{le=\"+Inf\"} 3"), "{out}");
+        assert!(out.contains("x_count 3"), "{out}");
+        assert!(out.contains("x_sum 52.5"), "{out}");
+    }
+
+    #[test]
+    fn registry_exposition_is_prometheus_shaped() {
+        let m = Metrics::new();
+        m.queue_wait_ns.observe(2048.0);
+        m.model_err.observe(0.07);
+        m.observe_kernel_gpts("star-2d1r/double/avx2", 0.5);
+        m.observe_kernel_gpts("", 1.0); // unresolved: ignored
+        let snap = ServiceSnapshot { requests: 5, queue_depth: 2, ..Default::default() };
+        let cache = CacheStats { hits: 3, ..Default::default() };
+        let text = m.exposition(&snap, &cache);
+        assert!(text.contains("# TYPE stencilctl_requests_total counter"), "{text}");
+        assert!(text.contains("stencilctl_requests_total 5"));
+        assert!(text.contains("# TYPE stencilctl_queue_depth gauge"));
+        assert!(text.contains("stencilctl_queue_depth 2"));
+        assert!(text.contains("stencilctl_plan_cache_hits_total 3"));
+        assert!(text.contains("# TYPE stencilctl_queue_wait_ns histogram"));
+        assert!(text.contains("stencilctl_queue_wait_ns_bucket{le=\"2048\"} 1"));
+        assert!(text
+            .contains("stencilctl_kernel_gpts_bucket{kernel=\"star-2d1r/double/avx2\",le=\"0.5\"} 1"));
+        assert_eq!(m.kernel_rows().len(), 1);
+        // every line is either a comment or name{labels}? value
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#')
+                    || line.split_whitespace().count() == 2
+                    && line.starts_with("stencilctl_"),
+                "malformed line: {line}"
+            );
+        }
+    }
+}

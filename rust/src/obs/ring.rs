@@ -1,0 +1,120 @@
+//! Bounded per-worker span ring — the flight recorder's storage cell.
+//!
+//! Each worker track owns one [`Ring`]: a fixed-capacity FIFO of
+//! completed [`Span`]s.  When full, the oldest span is dropped (and
+//! counted), so memory stays bounded no matter how long the daemon
+//! runs — the recorder always holds the most recent window of
+//! activity, which is exactly what a post-hoc "what just happened"
+//! drain wants.
+
+use std::collections::VecDeque;
+
+use super::Span;
+
+/// Fixed-capacity FIFO of completed spans (oldest evicted first).
+#[derive(Debug)]
+pub struct Ring {
+    cap: usize,
+    buf: VecDeque<Span>,
+    dropped: u64,
+}
+
+impl Ring {
+    /// A ring holding at most `cap` spans (`cap` ≥ 1 enforced).
+    pub fn new(cap: usize) -> Ring {
+        Ring { cap: cap.max(1), buf: VecDeque::new(), dropped: 0 }
+    }
+
+    /// Append a span, evicting the oldest when at capacity.
+    pub fn push(&mut self, s: Span) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(s);
+    }
+
+    /// Spans currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no spans are held.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Spans evicted (lost) since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Remove and return every span belonging to `trace`, preserving
+    /// recording order.  Spans of other traces stay in the ring, so a
+    /// per-job drain cannot eat a concurrent job's history.
+    pub fn drain_trace(&mut self, trace: u64) -> Vec<Span> {
+        let mut out = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.buf.len());
+        for s in self.buf.drain(..) {
+            if s.trace == trace {
+                out.push(s);
+            } else {
+                keep.push_back(s);
+            }
+        }
+        self.buf = keep;
+        out
+    }
+
+    /// Remove and return every held span, preserving recording order.
+    pub fn drain_all(&mut self) -> Vec<Span> {
+        self.buf.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Payload, SpanKind};
+    use super::*;
+
+    fn span(trace: u64, start: u64) -> Span {
+        Span {
+            trace,
+            worker: 0,
+            kind: SpanKind::Kernel,
+            start_ns: start,
+            end_ns: start + 1,
+            payload: Payload::None,
+        }
+    }
+
+    #[test]
+    fn bounded_fifo_evicts_oldest() {
+        let mut r = Ring::new(3);
+        for i in 0..5 {
+            r.push(span(1, i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let got = r.drain_all();
+        assert_eq!(got.iter().map(|s| s.start_ns).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn drain_trace_is_selective() {
+        let mut r = Ring::new(8);
+        r.push(span(1, 0));
+        r.push(span(2, 1));
+        r.push(span(1, 2));
+        let one = r.drain_trace(1);
+        assert_eq!(one.len(), 2);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.drain_trace(2).len(), 1);
+        assert!(r.is_empty());
+        // zero-capacity requests still hold one span
+        let mut z = Ring::new(0);
+        z.push(span(1, 0));
+        assert_eq!(z.len(), 1);
+    }
+}

@@ -417,8 +417,8 @@ pub fn service_stats(
         "service — counters",
         &[
             "requests", "errors", "accepted", "downgraded", "rejected", "queue-full",
-            "completed", "failed", "sharded", "shard tasks", "plan hits", "plan misses",
-            "hit rate", "evicted", "steps", "MSt/s", "model err",
+            "queued", "completed", "failed", "sharded", "shard tasks", "plan hits",
+            "plan misses", "hit rate", "evicted", "steps", "MSt/s", "model err",
         ],
     );
     svc.row(&[
@@ -428,6 +428,7 @@ pub fn service_stats(
         s.jobs_downgraded.to_string(),
         s.jobs_rejected.to_string(),
         s.queue_rejected.to_string(),
+        s.queue_depth.to_string(),
         s.jobs_completed.to_string(),
         s.jobs_failed.to_string(),
         s.jobs_sharded.to_string(),
@@ -638,6 +639,7 @@ mod tests {
             evictions: 2,
             len: 1,
             generation: 4,
+            ..Default::default()
         };
         let out = service_stats(&snap, &cache, &rows);
         assert!(out.contains("service — counters"));

@@ -36,6 +36,11 @@ struct Inner {
     /// Bumped by every [`PlanCache::clear`] — how many times the whole
     /// cache was invalidated (profile drift / install).
     generation: u64,
+    /// Counter values at the last [`PlanCache::stats_window`] call —
+    /// the baseline the since-last-snapshot deltas are computed from.
+    last_hits: u64,
+    last_misses: u64,
+    last_evictions: u64,
 }
 
 /// Point-in-time cache counters for the `stats` op.
@@ -48,6 +53,14 @@ pub struct CacheStats {
     /// Whole-cache invalidations so far (see [`PlanCache::clear`]) —
     /// profile-driven invalidation made observable in `stats` replies.
     pub generation: u64,
+    /// Hits since the previous `stats` snapshot window closed
+    /// ([`PlanCache::stats_window`]) — a recent-activity view the
+    /// lifetime totals can't give once they grow large.
+    pub d_hits: u64,
+    /// Misses since the previous snapshot window closed.
+    pub d_misses: u64,
+    /// Evictions since the previous snapshot window closed.
+    pub d_evictions: u64,
 }
 
 /// Bounded, thread-safe LRU memo of planner decisions.
@@ -147,15 +160,39 @@ impl PlanCache {
         self.inner.lock().unwrap().generation
     }
 
-    /// One consistent snapshot of all counters.
+    /// One consistent snapshot of all counters, deltas measured since
+    /// the last [`PlanCache::stats_window`].  Pure: reading stats from
+    /// a side channel (the `metrics` verb, tests) does not move the
+    /// delta baseline out from under the `stats` op.
     pub fn stats(&self) -> CacheStats {
         let g = self.inner.lock().unwrap();
+        Self::stats_of(&g)
+    }
+
+    /// Like [`PlanCache::stats`], but also closes the delta window:
+    /// the returned deltas cover activity since the previous
+    /// `stats_window` call, and the baseline advances so the next call
+    /// starts fresh.  The `stats` protocol op uses this — consecutive
+    /// `stats` replies report disjoint windows.
+    pub fn stats_window(&self) -> CacheStats {
+        let mut g = self.inner.lock().unwrap();
+        let s = Self::stats_of(&g);
+        g.last_hits = g.hits;
+        g.last_misses = g.misses;
+        g.last_evictions = g.evictions;
+        s
+    }
+
+    fn stats_of(g: &Inner) -> CacheStats {
         CacheStats {
             hits: g.hits,
             misses: g.misses,
             evictions: g.evictions,
             len: g.map.len(),
             generation: g.generation,
+            d_hits: g.hits - g.last_hits,
+            d_misses: g.misses - g.last_misses,
+            d_evictions: g.evictions - g.last_evictions,
         }
     }
 
@@ -259,6 +296,28 @@ mod tests {
         let (_, hit) = cache.plan(&req(Shape::Box, 2, 2), None).unwrap();
         assert!(!hit, "LRU entry must have been evicted");
         assert_eq!(cache.evictions(), 2); // r=2's reinsert evicted r=3
+    }
+
+    #[test]
+    fn stats_deltas_cover_disjoint_windows() {
+        let cache = PlanCache::new(8);
+        cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        // pure stats() reads the window without closing it
+        let s = cache.stats();
+        assert_eq!((s.d_hits, s.d_misses), (1, 1));
+        let s = cache.stats();
+        assert_eq!((s.d_hits, s.d_misses), (1, 1), "stats() must not move the baseline");
+        // stats_window() reports the same window, then closes it
+        let s = cache.stats_window();
+        assert_eq!((s.d_hits, s.d_misses, s.d_evictions), (1, 1, 0));
+        let s = cache.stats_window();
+        assert_eq!((s.d_hits, s.d_misses), (0, 0), "window must reset");
+        assert_eq!((s.hits, s.misses), (1, 1), "lifetime totals keep counting");
+        // new activity lands in the fresh window only
+        cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        let s = cache.stats_window();
+        assert_eq!((s.hits, s.d_hits), (2, 1));
     }
 
     #[test]

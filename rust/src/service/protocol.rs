@@ -8,7 +8,8 @@
 //! ```text
 //! request        = { "op": <operation>, ... }
 //! operation      = "ping" | "plan" | "create_session" | "advance"
-//!                | "fetch" | "close_session" | "stats" | "shutdown"
+//!                | "fetch" | "close_session" | "stats" | "metrics"
+//!                | "shutdown"
 //! plan           = jobspec
 //! create_session = "session": name, jobspec,
 //!                  ( "field": [f64...] | "init": "gaussian"|"zeros" )
@@ -17,6 +18,8 @@
 //!                  [ "shards": "auto"|n ]
 //! fetch          = "session": name, [ "encoding": "num"|"hex" ]
 //! close_session  = "session": name
+//! stats          = [ "prom": true ]   (adds a Prometheus-text block)
+//! metrics        = (no fields — replies with the Prometheus text)
 //! jobspec        = [ "shape": "box"|"star" ], [ "d": 1..3 ], [ "r": n ],
 //!                  [ "dtype": "float"|"double" ], [ "domain": [n...]|"NxM" ],
 //!                  [ "steps": n ], [ "t": depth ], [ "backend": kind ],
@@ -93,7 +96,13 @@ pub enum Request {
     },
     Fetch { session: String, hex: bool },
     CloseSession { session: String },
-    Stats,
+    Stats {
+        /// Append the Prometheus exposition text as a `"prom"` field.
+        prom: bool,
+    },
+    /// Bare Prometheus exposition (counters + histograms) — the verb a
+    /// scrape-bridge sidecar polls.
+    Metrics,
     Shutdown,
 }
 
@@ -107,7 +116,8 @@ impl Request {
             Request::Advance { .. } => "advance",
             Request::Fetch { .. } => "fetch",
             Request::CloseSession { .. } => "close_session",
-            Request::Stats => "stats",
+            Request::Stats { .. } => "stats",
+            Request::Metrics => "metrics",
             Request::Shutdown => "shutdown",
         }
     }
@@ -120,7 +130,14 @@ impl Request {
             .ok_or_else(|| anyhow!("\"op\" must be a string"))?;
         match op {
             "ping" => Ok(Request::Ping),
-            "stats" => Ok(Request::Stats),
+            "stats" => Ok(Request::Stats {
+                prom: j
+                    .as_obj()
+                    .and_then(|o| o.get("prom"))
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+            }),
+            "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
             "plan" => Ok(Request::Plan(JobSpec::parse(j)?)),
             "create_session" => {
@@ -375,7 +392,12 @@ mod tests {
     #[test]
     fn parses_simple_ops() {
         assert!(matches!(parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping));
-        assert!(matches!(parse(r#"{"op":"stats"}"#).unwrap(), Request::Stats));
+        assert!(matches!(parse(r#"{"op":"stats"}"#).unwrap(), Request::Stats { prom: false }));
+        assert!(matches!(
+            parse(r#"{"op":"stats","prom":true}"#).unwrap(),
+            Request::Stats { prom: true }
+        ));
+        assert!(matches!(parse(r#"{"op":"metrics"}"#).unwrap(), Request::Metrics));
         assert!(matches!(parse(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown));
         assert!(parse(r#"{"op":"warp"}"#).is_err());
         assert!(parse(r#"{"noop":1}"#).is_err());

@@ -33,6 +33,7 @@ use std::time::Instant;
 use crate::backend::{self, NativeBackend, ShardPhase};
 use crate::coordinator::grid::ShardPlan;
 use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
+use crate::obs;
 
 use super::session::Session;
 
@@ -50,6 +51,11 @@ pub struct QueuedJob {
     /// Worker → connection handler result channel (the job's metrics,
     /// or the execution error as a rendered string).
     pub reply: mpsc::Sender<Result<RunMetrics, String>>,
+    /// Job trace id ([`obs::next_trace_id`]), stamped at admission so
+    /// worker-side spans correlate with the handler's.
+    pub trace: u64,
+    /// [`obs::now_ns`] at enqueue — the queue-wait span/histogram start.
+    pub queued_ns: u64,
 }
 
 /// One schedulable unit.
@@ -86,6 +92,8 @@ impl RetuneTask {
     /// retune latch without installing anything — the stale flag stays
     /// set (visible in stats) and the next drifted sample retries.
     fn run(&self) {
+        let r0 = if obs::enabled() { obs::now_ns() } else { 0 };
+        let mut installed = false;
         match crate::tune::micro::measure(&self.opts) {
             Ok(profile) => {
                 let worst = crate::tune::micro::worst_spread(&profile);
@@ -109,12 +117,21 @@ impl RetuneTask {
                     self.plans.clear();
                     self.hub.install(profile);
                     self.plans.clear();
+                    installed = true;
                 }
             }
             Err(e) => {
                 eprintln!("stencilctl serve: background retune failed: {e:#}");
                 self.hub.retune_failed();
             }
+        }
+        if obs::enabled() {
+            obs::record(
+                obs::SpanKind::Retune,
+                r0,
+                obs::now_ns(),
+                obs::Payload::Retune { ok: installed },
+            );
         }
     }
 }
@@ -255,6 +272,10 @@ struct ShardState {
     /// First shard failure, if any — poisons the remaining tasks of
     /// the phase into no-ops and the job into an error reply.
     failed: Option<String>,
+    /// [`obs::now_ns`] when the phase's first shard finished (the
+    /// barrier-stall span start; `u64::MAX` = none yet, reset per
+    /// phase, only stamped while tracing is enabled).
+    first_done_ns: u64,
 }
 
 /// One admitted job fanned out into shard tasks — the shard executor's
@@ -268,6 +289,10 @@ pub struct ShardedRun {
     reply: mpsc::Sender<Result<RunMetrics, String>>,
     counters: Arc<ServiceCounters>,
     started: Instant,
+    /// Admitting handler's trace id, re-entered by every shard task.
+    trace: u64,
+    /// [`obs::now_ns`] at fan-out (phase-0 queue-wait start).
+    queued_ns: u64,
     state: Mutex<ShardState>,
 }
 
@@ -296,6 +321,8 @@ impl ShardedRun {
             reply,
             counters,
             started: Instant::now(),
+            trace: obs::current_trace(),
+            queued_ns: obs::now_ns(),
             state: Mutex::new(ShardState {
                 src: Arc::new(field),
                 slabs: (0..nshards).map(|_| None).collect(),
@@ -303,6 +330,7 @@ impl ShardedRun {
                 pending: nshards,
                 metrics,
                 failed: None,
+                first_done_ns: u64::MAX,
             }),
         }
     }
@@ -338,12 +366,28 @@ impl ShardedRun {
     /// of each phase runs the barrier (assemble slabs → next phase or
     /// finalize).
     fn run_shard(run: &Arc<ShardedRun>, queue: &JobQueue, idx: usize) {
+        let _in_trace = obs::trace_scope(run.trace);
         let (src, mut slab, phase_idx, poisoned) = {
             let mut st = run.state.lock().unwrap();
             let need = run.plan.shards()[idx].payload();
             let slab = st.slabs[idx].take().unwrap_or_else(|| vec![0.0; need]);
             (st.src.clone(), slab, st.phase, st.failed.is_some())
         };
+        if phase_idx == 0 {
+            // Later phases are pushed internally at the barrier — only
+            // the fan-out batch measures admission-queue wait.
+            let popped = obs::now_ns();
+            obs::metrics().queue_wait_ns.observe(popped.saturating_sub(run.queued_ns) as f64);
+            if obs::enabled() {
+                obs::record(
+                    obs::SpanKind::QueueWait,
+                    run.queued_ns,
+                    popped,
+                    obs::Payload::Queue { depth: queue.depth() as u64 },
+                );
+            }
+        }
+        let s0 = if obs::enabled() { obs::now_ns() } else { 0 };
         let res = if poisoned {
             Ok(RunMetrics::default())
         } else {
@@ -365,14 +409,39 @@ impl ShardedRun {
             .map_err(|e| format!("{e:#}"))
         };
         drop(src); // release our read handle before the barrier reclaims it
+        let done_ns = if obs::enabled() { obs::now_ns() } else { 0 };
         let mut st = run.state.lock().unwrap();
         match res {
-            Ok(m) => st.metrics.absorb(&m),
+            Ok(mut m) => {
+                m.tag_phase(phase_idx);
+                if obs::enabled() && !poisoned {
+                    let phase = run.phases[phase_idx];
+                    obs::metrics().phase_wall_ns.observe(done_ns.saturating_sub(s0) as f64);
+                    obs::record(
+                        obs::SpanKind::ShardPhase,
+                        s0,
+                        done_ns,
+                        obs::Payload::Phase {
+                            index: phase_idx as u64,
+                            shard: idx as u64,
+                            depth: phase.depth as u64,
+                            fused: phase.fused,
+                            bytes: m.bytes_moved,
+                            flops: m.flops,
+                            kernel: m.kernel.clone(),
+                        },
+                    );
+                }
+                st.metrics.absorb(&m);
+            }
             Err(e) => {
                 if st.failed.is_none() {
                     st.failed = Some(e);
                 }
             }
+        }
+        if obs::enabled() {
+            st.first_done_ns = st.first_done_ns.min(done_ns);
         }
         st.slabs[idx] = Some(slab);
         st.pending -= 1;
@@ -380,6 +449,22 @@ impl ShardedRun {
             return; // phase still in flight on other workers
         }
         // ---- barrier: this worker owns the phase transition ----
+        if obs::enabled() {
+            let end = obs::now_ns();
+            let start = if st.first_done_ns == u64::MAX { end } else { st.first_done_ns.min(end) };
+            let stall = end.saturating_sub(start);
+            obs::metrics().barrier_stall_ns.observe(stall as f64);
+            obs::record(
+                obs::SpanKind::Barrier,
+                start,
+                end,
+                obs::Payload::Barrier {
+                    index: phase_idx as u64,
+                    shards: run.shard_count() as u64,
+                    stall_ns: stall,
+                },
+            );
+        }
         if let Some(msg) = st.failed.clone() {
             // Restore the last consistent (phase-start) field so the
             // session survives with well-defined state.
@@ -395,6 +480,7 @@ impl ShardedRun {
             return;
         }
         let t0 = Instant::now();
+        let a0 = if obs::enabled() { obs::now_ns() } else { 0 };
         let plane = run.plan.plane();
         let mut field = take_field(&mut st.src);
         for (shard, slab) in run.plan.shards().iter().zip(&st.slabs) {
@@ -402,11 +488,17 @@ impl ShardedRun {
             field[a * plane..b * plane]
                 .copy_from_slice(slab.as_ref().expect("slab returned before barrier"));
         }
-        st.metrics.add_scatter(t0.elapsed());
+        let assembled = t0.elapsed();
+        st.metrics.add_scatter(assembled);
+        st.metrics.add_phase_assembly(phase_idx, assembled);
+        if obs::enabled() {
+            obs::record(obs::SpanKind::Assembly, a0, obs::now_ns(), obs::Payload::None);
+        }
         if st.phase + 1 < run.phases.len() {
             st.src = Arc::new(field);
             st.phase += 1;
             st.pending = run.shard_count();
+            st.first_done_ns = u64::MAX;
             drop(st);
             queue.push_internal(ShardedRun::fan_out(run));
             return;
@@ -459,9 +551,27 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("stencil-worker-{i}"))
                     .spawn(move || {
+                        // Worker 0 is the handler/main thread; pool
+                        // workers tag themselves 1..=N for span tracks.
+                        obs::set_worker(i + 1);
                         while let Some(task) = queue.pop() {
                             match task {
                                 Task::Job(q) => {
+                                    let _in_trace = obs::trace_scope(q.trace);
+                                    let popped = obs::now_ns();
+                                    obs::metrics()
+                                        .queue_wait_ns
+                                        .observe(popped.saturating_sub(q.queued_ns) as f64);
+                                    if obs::enabled() {
+                                        obs::record(
+                                            obs::SpanKind::QueueWait,
+                                            q.queued_ns,
+                                            popped,
+                                            obs::Payload::Queue {
+                                                depth: queue.depth() as u64,
+                                            },
+                                        );
+                                    }
                                     let res = execute(&q);
                                     match &res {
                                         Ok(m) => counters.record_run(m),
@@ -559,6 +669,8 @@ mod tests {
             artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
             session: session.clone(),
             reply,
+            trace: 0,
+            queued_ns: obs::now_ns(),
         }
     }
 

@@ -29,6 +29,7 @@ use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
 use crate::coordinator::planner::{self, Plan};
 use crate::hardware::Gpu;
 use crate::model::perf::Unit;
+use crate::obs;
 use crate::report;
 use crate::runtime::manifest::Manifest;
 use crate::tune::drift::{self, ProfileHub, RetuneMode};
@@ -315,6 +316,7 @@ fn plan_for(
     // retune churn degrades to serving one possibly-stale plan
     // uncached rather than looping.
     let mut attempts = 0;
+    let p0 = if obs::enabled() { obs::now_ns() } else { 0 };
     loop {
         let hub_gen = state.profile.generation();
         let req = planner::Request {
@@ -340,6 +342,14 @@ fn plan_for(
             } else {
                 &state.counters.plan_misses
             });
+            if obs::enabled() {
+                obs::record(
+                    obs::SpanKind::PlanLookup,
+                    p0,
+                    obs::now_ns(),
+                    obs::Payload::Plan { key: req.plan_key().canonical(), hit },
+                );
+            }
             return Ok((plan, hit));
         }
         state.plans.clear();
@@ -455,7 +465,16 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
             }
             Ok((protocol::ok("close_session").str_("session", &session).done(), true))
         }
-        Request::Stats => Ok((stats_response(state), true)),
+        Request::Stats { prom } => Ok((stats_response(state, prom), true)),
+        Request::Metrics => {
+            let mut snap = state.counters.snapshot();
+            snap.profile = state.profile.status();
+            snap.queue_depth = state.queue_depth() as u64;
+            // Pure read — the delta window belongs to the `stats` op.
+            let cache = state.plans.stats();
+            let text = obs::metrics().exposition(&snap, &cache);
+            Ok((protocol::ok("metrics").str_("exposition", &text).done(), true))
+        }
     }
 }
 
@@ -471,6 +490,11 @@ fn advance(
     temporal: Option<backend::TemporalMode>,
     shards_override: Option<ShardSpec>,
 ) -> Result<(Json, bool)> {
+    // Every job gets a trace id at admission; the id and one clock
+    // read per job are the only unconditional tracing residue.
+    let trace = obs::next_trace_id();
+    let _in_trace = obs::trace_scope(trace);
+    let admit_ns = obs::now_ns();
     let sess = state
         .sessions
         .get(session)
@@ -498,6 +522,9 @@ fn advance(
     };
     let (plan, hit) = plan_for(state, &spec, steps, t)?;
     let decision = admission::decide(&plan, t, points, steps, state.opts.budget_ms);
+    if obs::enabled() {
+        obs::record(obs::SpanKind::Admission, admit_ns, obs::now_ns(), obs::Payload::None);
+    }
     let (job_t, job_temporal, job_shards, downgraded, predicted_ms, engine, target) =
         match decision {
             Decision::Accept { t, temporal, shards, predicted_ms, engine, target } => {
@@ -508,6 +535,9 @@ fn advance(
             }
             Decision::Reject(r) => {
                 ServiceCounters::bump(&state.counters.jobs_rejected);
+                if obs::enabled() {
+                    drop(obs::drain(trace)); // rejected: free the ring slots
+                }
                 return Ok((
                     Obj::new()
                         .bool_("ok", false)
@@ -574,6 +604,9 @@ fn advance(
         let n = run.shard_count();
         if let Err(e) = state.queue.push_batch(ShardedRun::fan_out(&run)) {
             run.abort_admission();
+            if obs::enabled() {
+                drop(obs::drain(trace));
+            }
             return Ok((queue_refusal(state, e), true));
         }
         state.counters.record_shard_fanout(n);
@@ -590,8 +623,13 @@ fn advance(
             pjrt_possible: state.manifest.is_some() && crate::runtime::Runtime::available(),
             artifacts_dir: state.opts.artifacts_dir.clone(),
             reply: tx,
+            trace,
+            queued_ns: obs::now_ns(),
         };
         if let Err(e) = state.queue.push(Task::Job(queued)) {
+            if obs::enabled() {
+                drop(obs::drain(trace));
+            }
             return Ok((queue_refusal(state, e), true));
         }
         1
@@ -636,7 +674,13 @@ fn advance(
         fanout,
         steps,
         predicted_ms,
+        admit_ns,
     );
+    if obs::enabled() {
+        // The flight recorder gives the reply its span log; draining
+        // here keeps concurrent jobs from evicting each other's spans.
+        resp = resp.set("spans", obs::export::compact_spans(&obs::drain(trace)));
+    }
     Ok((resp.done(), true))
 }
 
@@ -689,8 +733,27 @@ fn intensity_feedback(
     shards: usize,
     steps: usize,
     predicted_ms: f64,
+    job_start_ns: u64,
 ) -> Obj {
+    // Per-kernel achieved throughput is an always-on histogram: the
+    // paper's GPts/s axis, bucketed per resolved row kernel.
+    if metrics.wall_ns > 0 {
+        obs::metrics().observe_kernel_gpts(&metrics.kernel, metrics.throughput() / 1e9);
+    }
     if metrics.bytes_moved == 0 {
+        if obs::enabled() {
+            obs::record(
+                obs::SpanKind::Job,
+                job_start_ns,
+                obs::now_ns(),
+                obs::Payload::Job {
+                    steps: steps as u64,
+                    shards: shards as u64,
+                    // uninstrumented backend: no traffic, no model error
+                    model_err: f64::NAN,
+                },
+            );
+        }
         return resp;
     }
     let blocked = job_temporal == backend::TemporalMode::Blocked;
@@ -705,6 +768,19 @@ fn intensity_feedback(
         metrics.achieved_intensity(),
     );
     state.counters.record_intensity_error(rep.rel_error);
+    obs::metrics().model_err.observe(rep.rel_error);
+    if obs::enabled() {
+        obs::record(
+            obs::SpanKind::Job,
+            job_start_ns,
+            obs::now_ns(),
+            obs::Payload::Job {
+                steps: steps as u64,
+                shards: shards as u64,
+                model_err: rep.rel_error,
+            },
+        );
+    }
     // ---- drift plane: region classification over the live profile ----
     let gpu = state.profile.gpu();
     let mem_bound = match gpu.roof(Unit::CudaCore, spec.dtype) {
@@ -796,13 +872,17 @@ fn intensity_feedback(
 }
 
 /// The `stats` response: raw counters for machines, a rendered table
-/// for humans (`report::service_stats`).  The machine-profile identity
-/// and drift state ride in both forms.
-fn stats_response(state: &ServiceState) -> Json {
+/// for humans (`report::service_stats`), and — with `"prom": true` —
+/// the Prometheus exposition text.  The machine-profile identity and
+/// drift state ride in both forms.  Each `stats` call closes a cache
+/// delta window, so successive snapshots report disjoint
+/// hits/misses/evictions deltas.
+fn stats_response(state: &ServiceState, prom: bool) -> Json {
     let mut snap = state.counters.snapshot();
     snap.profile = state.profile.status();
+    snap.queue_depth = state.queue_depth() as u64;
     let rows = state.sessions.rows();
-    let cache = state.plans.stats();
+    let cache = state.plans.stats_window();
     let render = report::service_stats(&snap, &cache, &rows);
     let drift_rows = Json::Arr(
         state
@@ -836,7 +916,7 @@ fn stats_response(state: &ServiceState) -> Json {
             })
             .collect(),
     );
-    protocol::ok("stats")
+    let mut o = protocol::ok("stats")
         .int("requests", snap.requests)
         .int("errors", snap.errors)
         .int("jobs_accepted", snap.jobs_accepted)
@@ -853,7 +933,10 @@ fn stats_response(state: &ServiceState) -> Json {
         .int("plan_cache_size", cache.len as u64)
         .int("plan_cache_evictions", cache.evictions)
         .int("plan_cache_generation", cache.generation)
-        .int("queue_depth", state.queue_depth() as u64)
+        .int("plan_cache_hits_delta", cache.d_hits)
+        .int("plan_cache_misses_delta", cache.d_misses)
+        .int("plan_cache_evictions_delta", cache.d_evictions)
+        .int("queue_depth", snap.queue_depth)
         .int("sessions", rows.len() as u64)
         .int("steps_total", snap.steps_total)
         .num("mstencils", snap.throughput() / 1e6)
@@ -867,9 +950,11 @@ fn stats_response(state: &ServiceState) -> Json {
         .int("retunes", snap.profile.retunes)
         .num("drift_threshold", state.profile.threshold())
         .set("drift", drift_rows)
-        .set("session_stats", sessions)
-        .str_("render", &render)
-        .done()
+        .set("session_stats", sessions);
+    if prom {
+        o = o.str_("prom", &obs::metrics().exposition(&snap, &cache));
+    }
+    o.str_("render", &render).done()
 }
 
 #[cfg(test)]

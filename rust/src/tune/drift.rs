@@ -464,6 +464,20 @@ impl ProfileHub {
             return (reading, false);
         }
         let flagged = self.inner.lock().unwrap().try_flag(reading.samples);
+        if crate::obs::enabled() {
+            // Instant event: an over-threshold reading, flagged or not.
+            let now = crate::obs::now_ns();
+            crate::obs::record(
+                crate::obs::SpanKind::Drift,
+                now,
+                now,
+                crate::obs::Payload::Drift {
+                    region: reading.region.clone(),
+                    ewma: reading.ewma,
+                    flagged,
+                },
+            );
+        }
         (reading, flagged)
     }
 

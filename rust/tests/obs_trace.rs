@@ -1,0 +1,342 @@
+//! Acceptance suite for the obs tracing plane:
+//!
+//! * a traced multi-worker sharded blocked job emits a span per
+//!   (phase × shard), a barrier and an assembly span per phase, with
+//!   ordering/nesting invariants and per-phase `bytes`/`flops` payloads
+//!   that sum **exactly** to the job's `RunMetrics`;
+//! * the Chrome trace-event rendering keeps one track per worker and
+//!   shows every `ShardPhase` and barrier;
+//! * the NDJSON sink round-trips every payload bit-exactly (NaN, -0.0,
+//!   subnormals travel as hex-f64);
+//! * histogram bucket boundaries are exact powers of two;
+//! * disabled mode (the default) emits exactly zero events and leaves
+//!   the computed field bit-identical to the traced run.
+//!
+//! The obs plane is process-global state, so every test serializes on
+//! one mutex and restores the disabled default before releasing it.
+
+use std::collections::BTreeSet;
+use std::sync::{Mutex, MutexGuard};
+
+use tc_stencil::backend::{self, Backend, NativeBackend, TemporalMode};
+use tc_stencil::coordinator::grid::ShardPlan;
+use tc_stencil::coordinator::metrics::RunMetrics;
+use tc_stencil::coordinator::scheduler;
+use tc_stencil::model::perf::Dtype;
+use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::obs::{self, Payload, Span, SpanKind};
+use tc_stencil::sim::golden;
+
+static OBS: Mutex<()> = Mutex::new(());
+
+/// Take the obs lock and reset the plane to its disabled default.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    let g = OBS.lock().unwrap_or_else(|e| e.into_inner());
+    obs::disable();
+    obs::clear_sink();
+    let _ = obs::drain_all();
+    g
+}
+
+fn job(domain: Vec<usize>, steps: usize, t: usize, temporal: TemporalMode) -> backend::Job {
+    let pattern = StencilPattern::new(Shape::Star, domain.len(), 1).unwrap();
+    backend::Job {
+        pattern,
+        dtype: Dtype::F64,
+        domain,
+        steps,
+        t,
+        temporal,
+        weights: pattern.uniform_weights(),
+        threads: 1,
+    }
+}
+
+/// Run one sharded job under a fresh trace and return its spans plus
+/// the job-level metrics and final field.
+fn traced_sharded(
+    j: &backend::Job,
+    plan: &ShardPlan,
+    lanes: usize,
+    init: &[f64],
+) -> (Vec<Span>, RunMetrics, Vec<f64>) {
+    let trace = obs::next_trace_id();
+    let scope = obs::trace_scope(trace);
+    let mut f = init.to_vec();
+    let m = scheduler::advance_sharded(j, plan, &mut f, lanes).unwrap();
+    drop(scope);
+    (obs::drain(trace), m, f)
+}
+
+#[test]
+fn sharded_blocked_job_spans_nest_order_and_sum_exactly() {
+    let _g = obs_lock();
+    let j = job(vec![32, 16], 6, 2, TemporalMode::Blocked);
+    let shards = 3usize;
+    let plan = ShardPlan::dim0(&j.domain, shards, j.pattern.r, j.t).unwrap();
+    let init = golden::gaussian(&j.domain);
+    obs::enable();
+    let (spans, m, _f) = traced_sharded(&j, &plan, 2, &init);
+    obs::disable();
+
+    let n_phases = backend::shard_phases(&j).len();
+    assert_eq!(n_phases, 3, "6 steps at t=2 blocked = 3 shard phases");
+    let kinds: BTreeSet<SpanKind> = spans.iter().map(|s| s.kind).collect();
+    assert_eq!(
+        kinds,
+        [SpanKind::ShardPhase, SpanKind::Barrier, SpanKind::Assembly].into_iter().collect(),
+        "a direct scheduler call emits exactly the executor span kinds"
+    );
+
+    // One ShardPhase span per (phase × shard), covering the full grid.
+    let phase_spans: Vec<&Span> =
+        spans.iter().filter(|s| s.kind == SpanKind::ShardPhase).collect();
+    assert_eq!(phase_spans.len(), n_phases * shards);
+    let grid: BTreeSet<(u64, u64)> = phase_spans
+        .iter()
+        .map(|s| match &s.payload {
+            Payload::Phase { index, shard, .. } => (*index, *shard),
+            p => panic!("ShardPhase span carries {p:?}"),
+        })
+        .collect();
+    assert_eq!(grid.len(), n_phases * shards, "every (phase, shard) pair exactly once");
+
+    // Scoped chunk threads tag distinct worker tracks (lanes=2 → 2).
+    let workers: BTreeSet<u64> = phase_spans.iter().map(|s| s.worker).collect();
+    assert!(workers.len() >= 2, "multi-worker run must spread tracks, got {workers:?}");
+
+    // Per phase: every shard span ends before the barrier completes,
+    // the barrier precedes assembly, and assembly precedes the next
+    // phase's first shard span.
+    let mut prev_assembly_end = 0u64;
+    for pi in 0..n_phases as u64 {
+        let mine: Vec<&&Span> = phase_spans
+            .iter()
+            .filter(|s| matches!(&s.payload, Payload::Phase { index, .. } if *index == pi))
+            .collect();
+        let barrier = spans
+            .iter()
+            .find(|s| {
+                matches!(&s.payload, Payload::Barrier { index, .. } if *index == pi)
+            })
+            .expect("one barrier span per phase");
+        let Payload::Barrier { shards: bs, stall_ns, .. } = &barrier.payload else {
+            unreachable!()
+        };
+        assert_eq!(*bs, shards as u64);
+        assert_eq!(*stall_ns, barrier.wall_ns(), "stall payload is the span's wall");
+        for s in &mine {
+            assert!(
+                s.start_ns >= prev_assembly_end,
+                "phase {pi} starts before the previous assembly finished"
+            );
+            assert!(s.end_ns <= barrier.end_ns, "shard span outlives its barrier");
+        }
+        let first_start = mine.iter().map(|s| s.start_ns).min().unwrap();
+        assert!(barrier.start_ns >= first_start, "barrier stall starts after work begins");
+        // Assembly spans carry no payload; pick the pi-th in time order
+        // (drain sorts by start time, one assembly per phase).
+        let assembly = spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Assembly)
+            .nth(pi as usize)
+            .expect("one assembly span per phase");
+        assert!(assembly.start_ns >= barrier.start_ns, "assembly follows the barrier");
+        prev_assembly_end = assembly.end_ns;
+    }
+
+    // The acceptance bar: per-phase span payloads sum EXACTLY to the
+    // job's RunMetrics — per phase index and in total.
+    assert_eq!(m.phases.len(), n_phases);
+    let mut total_bytes = 0u64;
+    let mut total_flops = 0u64;
+    for pm in &m.phases {
+        let (b, f): (u64, u64) = phase_spans
+            .iter()
+            .filter_map(|s| match &s.payload {
+                Payload::Phase { index, bytes, flops, .. } if *index == pm.index as u64 => {
+                    Some((*bytes, *flops))
+                }
+                _ => None,
+            })
+            .fold((0, 0), |(ab, af), (b, f)| (ab + b, af + f));
+        assert_eq!(b, pm.bytes_moved, "phase {} bytes", pm.index);
+        assert_eq!(f, pm.flops, "phase {} flops", pm.index);
+        total_bytes += b;
+        total_flops += f;
+    }
+    assert_eq!(total_bytes, m.bytes_moved, "span bytes sum to the job total");
+    assert_eq!(total_flops, m.flops, "span flops sum to the job total");
+    let kernels: BTreeSet<&str> = phase_spans
+        .iter()
+        .filter_map(|s| match &s.payload {
+            Payload::Phase { kernel, .. } => Some(kernel.as_str()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(kernels.into_iter().collect::<Vec<_>>(), vec![m.kernel.as_str()]);
+
+    // Chrome rendering: one named track per worker; every ShardPhase
+    // and barrier shows up as an X event on its worker's track.
+    let chrome = obs::export::chrome_trace(&spans);
+    let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+    let tracks: Vec<&tc_stencil::util::json::Json> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+        .collect();
+    let all_workers: BTreeSet<u64> = spans.iter().map(|s| s.worker).collect();
+    assert_eq!(tracks.len(), all_workers.len(), "one metadata track per worker");
+    for pi in 0..n_phases {
+        for si in 0..shards {
+            let name = format!("phase{pi}/shard{si}");
+            let ev = events
+                .iter()
+                .find(|e| e.get("name").unwrap().as_str() == Some(name.as_str()))
+                .unwrap_or_else(|| panic!("chrome event {name} missing"));
+            let tid = ev.get("tid").unwrap().as_i64().unwrap() as u64;
+            assert!(all_workers.contains(&tid));
+        }
+        let bname = format!("barrier{pi}");
+        assert!(
+            events.iter().any(|e| e.get("name").unwrap().as_str() == Some(bname.as_str())),
+            "chrome event {bname} missing"
+        );
+    }
+}
+
+#[test]
+fn ndjson_sink_roundtrips_payloads_bit_exactly() {
+    let _g = obs_lock();
+    let path = std::env::temp_dir().join(format!("tc_obs_trace_{}.ndjson", std::process::id()));
+    obs::set_sink(&path).unwrap();
+    obs::enable();
+    let trace = obs::next_trace_id();
+    {
+        let _t = obs::trace_scope(trace);
+        obs::record(
+            SpanKind::Job,
+            5,
+            9,
+            Payload::Job { steps: 3, shards: 2, model_err: f64::NAN },
+        );
+        obs::record(
+            SpanKind::Drift,
+            9,
+            9,
+            Payload::Drift { region: "mem/blocked".into(), ewma: -0.0, flagged: false },
+        );
+        obs::record(
+            SpanKind::Drift,
+            9,
+            10,
+            Payload::Drift { region: "kern/sweep".into(), ewma: 5e-324, flagged: true },
+        );
+    }
+    obs::clear_sink();
+    obs::disable();
+    let ring = obs::drain(trace);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let back = obs::export::read_ndjson(&text).unwrap();
+    assert_eq!(ring.len(), 3, "flight recorder kept every span");
+    assert_eq!(back.len(), 3, "sink streamed every span");
+    // Ring drain is time-sorted; these spans were recorded in time
+    // order, so the streams align one to one.
+    for (a, b) in ring.iter().zip(&back) {
+        assert_eq!((a.trace, a.worker, a.kind), (b.trace, b.worker, b.kind));
+        assert_eq!((a.start_ns, a.end_ns), (b.start_ns, b.end_ns));
+        match (&a.payload, &b.payload) {
+            (Payload::Job { model_err: x, .. }, Payload::Job { model_err: y, .. }) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "NaN survives the hex codec");
+            }
+            (
+                Payload::Drift { ewma: x, region: ra, flagged: fa },
+                Payload::Drift { ewma: y, region: rb, flagged: fb },
+            ) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "-0.0/subnormal survive the hex codec");
+                assert_eq!((ra, fa), (rb, fb));
+            }
+            (p, q) => panic!("payload mismatch: {p:?} vs {q:?}"),
+        }
+    }
+}
+
+#[test]
+fn histogram_buckets_land_exactly_on_power_of_two_bounds() {
+    use tc_stencil::obs::prom::Histogram;
+    let h = Histogram::new(3, 6); // bounds 8, 16, 32, 64 + overflow
+    assert_eq!(h.bounds(), vec![8.0, 16.0, 32.0, 64.0]);
+    h.observe(8.0); // le is inclusive: lands in the first bucket
+    h.observe(8.0 + f64::EPSILON * 8.0); // one ulp past: second bucket
+    h.observe(64.0);
+    h.observe(64.5); // overflow
+    h.observe(-3.0); // clamps into the first bucket
+    h.observe(f64::NAN); // dropped
+    assert_eq!(h.snapshot(), vec![2, 1, 0, 1, 1]);
+    assert_eq!(h.count(), 5);
+    // The process-global registry uses the standard layouts: times
+    // span ~1 µs (2^10 ns) to ~17 s (2^34 ns).
+    let bounds = obs::metrics().queue_wait_ns.bounds();
+    assert_eq!(bounds.first().copied(), Some(1024.0));
+    assert_eq!(bounds.last().copied(), Some(2f64.powi(34)));
+}
+
+#[test]
+fn disabled_mode_emits_zero_events_and_identical_bits() {
+    let _g = obs_lock();
+    let j = job(vec![24, 18], 5, 2, TemporalMode::Blocked);
+    let plan = ShardPlan::dim0(&j.domain, 2, j.pattern.r, j.t).unwrap();
+    let init = golden::gaussian(&j.domain);
+
+    assert!(!obs::enabled(), "disabled is the default");
+    let (off_spans, m_off, f_off) = traced_sharded(&j, &plan, 2, &init);
+    assert!(off_spans.is_empty(), "disabled mode recorded {} spans", off_spans.len());
+    assert!(obs::drain_all().is_empty(), "no stray spans on any ring");
+
+    obs::enable();
+    let (on_spans, m_on, f_on) = traced_sharded(&j, &plan, 2, &init);
+    obs::disable();
+    assert!(!on_spans.is_empty(), "enabled mode must record spans");
+
+    // Tracing must never perturb the computation: bit-identical field,
+    // identical instrumented work accounting.
+    for (i, (a, b)) in f_off.iter().zip(&f_on).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "point {i} differs under tracing");
+    }
+    assert_eq!(m_off.bytes_moved, m_on.bytes_moved);
+    assert_eq!(m_off.flops, m_on.flops);
+    assert_eq!(m_off.launches, m_on.launches);
+    assert_eq!(m_off.phases.len(), m_on.phases.len());
+
+    // A second disabled run drains nothing even after an enabled one.
+    let (again, _, _) = traced_sharded(&j, &plan, 2, &init);
+    assert!(again.is_empty());
+}
+
+#[test]
+fn monolithic_run_records_the_kernel_span() {
+    let _g = obs_lock();
+    let j = job(vec![20, 20], 3, 1, TemporalMode::Sweep);
+    let mut f = golden::gaussian(&j.domain);
+    obs::enable();
+    let trace = obs::next_trace_id();
+    let scope = obs::trace_scope(trace);
+    let m = NativeBackend::new().advance(&j, &mut f).unwrap();
+    drop(scope);
+    let spans = obs::drain(trace);
+    obs::disable();
+    let kernel: Vec<&Span> = spans.iter().filter(|s| s.kind == SpanKind::Kernel).collect();
+    assert_eq!(kernel.len(), 1, "one kernel-dispatch span per monolithic run");
+    match &kernel[0].payload {
+        Payload::Kernel { name } => assert_eq!(name, &m.kernel),
+        p => panic!("kernel span carries {p:?}"),
+    }
+    // The compact reply block keeps the dashboard sort keys.
+    let compact = obs::export::compact_spans(&spans);
+    let arr = compact.as_arr().unwrap();
+    assert_eq!(arr.len(), spans.len());
+    assert!(arr
+        .iter()
+        .any(|o| o.get("kind").unwrap().as_str() == Some("kernel")
+            && o.get("kernel").unwrap().as_str() == Some(m.kernel.as_str())));
+}
