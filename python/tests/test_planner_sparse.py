@@ -1,0 +1,249 @@
+"""Independent port of the Rust planner's sparse/varcoef pricing.
+
+Machine-checks the pinned constants asserted by
+rust/tests/sparse_varcoef.rs: the 2:4 pruning geometry, the
+sparsity-expanded profitable region flipping the dense box-2d1r f32
+choice from dense-TC (ConvStencil) to SpTC (SPIDER) between max_t 6 and
+7, and the pruned pattern dropping the blocked scalar intensity back
+under the A100 CUDA ridge so EBISU wins memory-bound at t=8.
+
+The port mirrors rust/src/sim/exec.rs (predict / predict_sweep),
+rust/src/engines/mod.rs (the engine table), and the candidate gating in
+rust/src/coordinator/planner.rs — independently enough that an error in
+either side breaks the agreement.
+"""
+
+import itertools
+
+import pytest
+
+# ---- pattern geometry (mirrors rust/src/model/stencil.rs) -----------------
+
+
+def hull_cells(d, r):
+    return list(itertools.product(range(-r, r + 1), repeat=d))
+
+
+def support(shape, d, r):
+    cells = []
+    for off in hull_cells(d, r):
+        if shape == "box":
+            cells.append(True)
+        else:  # star: at most one nonzero axis
+            cells.append(sum(1 for x in off if x != 0) <= 1)
+    return cells
+
+
+def prune24(cells):
+    """2:4 structured pruning over row-major hull cells: keep the first
+    two live taps of every four-cell group (weight-independent, so the
+    planner can price it without seeing weights)."""
+    out, kept = [], 0
+    for flat, live in enumerate(cells):
+        if flat % 4 == 0:
+            kept = 0
+        if live and kept < 2:
+            out.append(True)
+            kept += 1
+        else:
+            out.append(False)
+    return out
+
+
+def offsets_of(cells, d, r):
+    return [off for off, live in zip(hull_cells(d, r), cells) if live]
+
+
+def minkowski_power(offs, t):
+    cur = {tuple(0 for _ in range(len(offs[0])))}
+    s = set(map(tuple, offs))
+    for _ in range(t):
+        cur = {tuple(a + b for a, b in zip(x, y)) for x in cur for y in s}
+    return len(cur)
+
+
+def effective_cells(shape, d, r, coeffs):
+    cells = support(shape, d, r)
+    return prune24(cells) if coeffs == "sparse24" else cells
+
+
+def eff_k(shape, d, r, coeffs):
+    return sum(effective_cells(shape, d, r, coeffs))
+
+
+def eff_fused_k(shape, d, r, coeffs, t):
+    if coeffs == "sparse24":
+        return minkowski_power(offsets_of(effective_cells(shape, d, r, coeffs), d, r), t)
+    if shape == "box":
+        return (2 * r * t + 1) ** d
+    return minkowski_power(offsets_of(support(shape, d, r), d, r), t)
+
+
+# ---- engine table + A100 (mirrors rust/src/engines + hardware) ------------
+
+# name, unit, scheme, dtypes, paper_S, eta_mem, eta_comp, max_t, sym, half
+ENGINES = [
+    ("cuDNN", "cuda", "direct", ("f32", "f64"), None, 0.30, 0.25, 1, False, False),
+    ("DRStencil", "cuda", "direct", ("f32", "f64"), None, 0.55, 0.42, 4, False, False),
+    ("EBISU", "cuda", "direct", ("f32", "f64"), None, 0.72, 0.65, 8, False, False),
+    ("TCStencil", "tc", "decompose", ("f32",), 0.33, 0.40, 0.35, 1, False, True),
+    ("ConvStencil", "tc", "flatten", ("f32", "f64"), 0.5, 0.60, 0.64, 8, False, False),
+    ("LoRAStencil", "tc", "decompose", ("f32", "f64"), 0.55, 0.60, 0.60, 4, True, False),
+    ("SPIDER", "sptc", "sparse24", ("f32",), 0.46875, 0.59, 0.29, 8, False, False),
+    ("SparStencil", "sptc", "sparse24", ("f32",), 0.45, 0.55, 0.52, 8, False, False),
+]
+
+A100 = {
+    "bw": 1.935e12,
+    "peaks": {
+        ("cuda", "f32"): 19.5e12,
+        ("cuda", "f64"): 9.7e12,
+        ("tc", "f32"): 156e12,
+        ("tc", "f64"): 19.5e12,
+        ("sptc", "f32"): 312e12,
+    },
+}
+
+
+def dtype_bytes(dt):
+    return 4 if dt == "f32" else 8
+
+
+def predict(eng, shape, d, r, coeffs, t, dt, gpu):
+    """rust/src/sim/exec.rs::predict — tensor engines and blocked scalar."""
+    name, unit, _scheme, _dts, S, em, ec, _mt, _sym, _half = eng
+    K = eff_k(shape, d, r, coeffs)
+    alpha = eff_fused_k(shape, d, r, coeffs, t) / (t * K)
+    D = dtype_bytes(dt)
+    peak = gpu["peaks"].get((unit, dt))
+    if peak is None:
+        return None
+    bw = gpu["bw"]
+    ridge = peak / bw
+    if unit == "cuda":
+        i, infl = t * K / D, 1.0
+    else:
+        i, infl = t * (alpha / S) * K / D, alpha / S
+    raw = min(peak, bw * i)
+    mem = i < ridge
+    actual = raw / infl
+    eta = em if mem else ec
+    return dict(intensity=i, mem=mem, throughput=eta * actual / (2 * K))
+
+
+def predict_sweep(eng, shape, d, r, coeffs, t, dt, gpu):
+    """rust/src/sim/exec.rs::predict_sweep — fused scalar sweeps."""
+    _name, unit, _scheme, _dts, _S, em, ec, _mt, _sym, _half = eng
+    K = eff_k(shape, d, r, coeffs)
+    alpha = eff_fused_k(shape, d, r, coeffs, t) / (t * K)
+    D = dtype_bytes(dt)
+    peak = gpu["peaks"][(unit, dt)]
+    bw = gpu["bw"]
+    i = alpha * t * K / D
+    mem = i < peak / bw
+    actual = bw * (t * K / D) if mem else peak / alpha
+    eta = em if mem else ec
+    return dict(intensity=i, mem=mem, throughput=eta * actual / (2 * K))
+
+
+def candidates(shape, d, r, coeffs, dt, max_t, gpu, temporal="auto"):
+    """rust/src/coordinator/planner.rs::candidates — coeffs gating."""
+    out = []
+    for eng in ENGINES:
+        name, unit, scheme, dts, _S, _em, _ec, emax, sym, half = eng
+        if sym or half or dt not in dts:
+            continue
+        tensor = unit in ("tc", "sptc")
+        if tensor and temporal == "blocked":
+            continue
+        if tensor and coeffs == "varcoef":
+            continue
+        if tensor and coeffs == "sparse24" and scheme != "sparse24":
+            continue
+        for t in range(1, min(max_t, emax) + 1):
+            if tensor:
+                p = predict(eng, shape, d, r, coeffs, t, dt, gpu)
+                if p:
+                    out.append((name, unit, t, "sweep", p))
+            else:
+                if temporal != "blocked" and not (coeffs == "varcoef" and t > 1):
+                    p = predict_sweep(eng, shape, d, r, coeffs, t, dt, gpu)
+                    out.append((name, unit, t, "sweep", p))
+                if temporal != "sweep":
+                    p = predict(eng, shape, d, r, coeffs, t, dt, gpu)
+                    out.append((name, unit, t, "blocked", p))
+    return out
+
+
+def choose(cands):
+    """Planner sort: throughput desc, then non-tensor, smaller t, sweep."""
+
+    def key(c):
+        name, unit, t, temporal, p = c
+        return (-p["throughput"], unit != "cuda", t, temporal == "blocked")
+
+    return sorted(cands, key=key)[0]
+
+
+# ---- the pinned constants -------------------------------------------------
+
+
+def test_pruning_geometry_matches_rust():
+    # box-2d1r: row-major hull flats kept = {0,1,4,5,8} -> 5 taps
+    cells = prune24(support("box", 2, 1))
+    assert [i for i, v in enumerate(cells) if v] == [0, 1, 4, 5, 8]
+    assert eff_k("box", 2, 1, "sparse24") == 5
+    assert offsets_of(cells, 2, 1) == [(-1, -1), (-1, 0), (0, 0), (0, 1), (1, 1)]
+    # star-2d1r keeps 4 of 5; the other arities the kernels register
+    assert eff_k("star", 2, 1, "sparse24") == 4
+    assert eff_k("star", 1, 1, "sparse24") == 2
+    assert eff_k("star", 3, 1, "sparse24") == 6
+    assert eff_k("box", 3, 1, "sparse24") == 14
+    # fused pruned support = Minkowski powers (rust fused_effective_k_points)
+    assert [eff_fused_k("box", 2, 1, "sparse24", t) for t in range(1, 9)] == [
+        5, 12, 22, 35, 51, 70, 92, 117,
+    ]
+    # alpha_eff(8) = 117/40 < dense 289/72
+    assert eff_fused_k("box", 2, 1, "sparse24", 8) / (8 * 5) == pytest.approx(2.925)
+    assert eff_fused_k("box", 2, 1, "const", 8) / (8 * 9) == pytest.approx(289 / 72)
+
+
+def test_dense_choice_crosses_into_sptc_at_depth_seven():
+    # max_t=6: dense TC (ConvStencil) still wins the box-2d1r f32 plan
+    name, unit, t, temporal, p = choose(candidates("box", 2, 1, "const", "f32", 6, A100))
+    assert (name, t, temporal) == ("ConvStencil", 6, "sweep")
+    # max_t=7,8: SpTC's doubled peak at unchanged S expands the
+    # profitable region past the dense-TC winner (paper section 4.3)
+    for mt in (7, 8):
+        name, unit, t, temporal, p = choose(candidates("box", 2, 1, "const", "f32", mt, A100))
+        assert (name, unit, t, temporal) == ("SPIDER", "sptc", mt, "sweep")
+
+
+def test_pruned_pattern_flips_back_to_memory_bound_scalar():
+    name, unit, t, temporal, p = choose(candidates("box", 2, 1, "sparse24", "f32", 8, A100))
+    assert (name, t, temporal) == ("EBISU", 8, "blocked")
+    # pruning halves K: blocked intensity 8*5/4 = 10.00 sits just under
+    # the A100 f32 CUDA ridge (10.08) -> memory-bound, while the dense
+    # pattern's 8*9/4 = 18 is compute-bound
+    ridge = A100["peaks"][("cuda", "f32")] / A100["bw"]
+    assert p["intensity"] == 10.0 < ridge < 18.0
+    assert p["mem"]
+    # memory-bound blocked throughput, pinned: eta_mem*B*I/(2K) = 1393.2 GSt/s
+    assert p["throughput"] == pytest.approx(0.72 * 1.935e12 * 10.0 / 10.0, rel=1e-12)
+    assert p["throughput"] == pytest.approx(1.3932e12, rel=1e-12)
+
+
+def test_sparse24_candidates_drop_dense_tc_engines():
+    names = {c[0] for c in candidates("box", 2, 1, "sparse24", "f32", 8, A100)}
+    assert {"SPIDER", "SparStencil"} <= names
+    assert names.isdisjoint({"TCStencil", "ConvStencil", "LoRAStencil"})
+
+
+def test_varcoef_candidates_are_scalar_only_and_sweep_is_depth_one():
+    cands = candidates("box", 2, 1, "varcoef", "f64", 8, A100)
+    assert cands, "varcoef must keep the scalar engines"
+    assert all(unit == "cuda" for _n, unit, _t, _tmp, _p in cands)
+    assert all(t == 1 for _n, _u, t, tmp, _p in cands if tmp == "sweep")
+    # and the best plan is a blocked EBISU (matches the Rust planner)
+    name, _unit, t, temporal, _p = choose(cands)
+    assert (name, temporal) == ("EBISU", "blocked")

@@ -16,7 +16,7 @@ use tc_stencil::coordinator::grid::ShardPlan;
 use tc_stencil::coordinator::scheduler;
 use tc_stencil::model::calib;
 use tc_stencil::model::perf::{Dtype, Workload};
-use tc_stencil::model::stencil::{Shape, StencilPattern};
+use tc_stencil::model::stencil::{Coeffs, Shape, StencilPattern};
 use tc_stencil::model::shard;
 use tc_stencil::sim::golden;
 use tc_stencil::util::bench::Bench;
@@ -270,7 +270,10 @@ fn main() {
         let steps = 2usize;
         let mut rng = Rng::new(0x4B52);
         let init: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        let weights = pattern.uniform_weights();
+        // default_weights follows the coefficient variant: the sparse24
+        // probe shapes must exercise their pruned-tap kernels, not fall
+        // back to generic on an arity the registry never saw.
+        let weights = pattern.default_weights();
         let items = (n * steps) as f64;
         let key = kernels::shape_key(&pattern);
         for dtype in [Dtype::F32, Dtype::F64] {
@@ -329,6 +332,70 @@ fn main() {
         }
     }
     extras.push(("kernel_dispatch", Json::Arr(kernel_bars)));
+
+    // Dense vs 2:4-sparse GPts/s bars: the same geometry with the
+    // const vs pruned coefficient axis — the executor-side realization
+    // of the planner's effective-count pricing (a pruned kernel does
+    // 5/9 of box-2d1r's per-point work, so the point rate should rise;
+    // the ratio is recorded, not barred — memory-bound domains cap it).
+    let mut sparse_bars: Vec<Json> = Vec::new();
+    for (shape, d) in [(Shape::Box, 2), (Shape::Star, 2), (Shape::Box, 3)] {
+        let dense_p = StencilPattern::new(shape, d, 1).unwrap();
+        let sparse_p = dense_p.with_coeffs(Coeffs::Sparse24);
+        let domain: Vec<usize> = match d {
+            2 => vec![if fast { 384 } else { 1024 }; 2],
+            _ => vec![if fast { 40 } else { 96 }; 3],
+        };
+        let n: usize = domain.iter().product();
+        let steps = 2usize;
+        let mut rng = Rng::new(0x2424);
+        let init: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let items = (n * steps) as f64;
+        let key = kernels::shape_key(&dense_p);
+        for dtype in [Dtype::F32, Dtype::F64] {
+            let dl = dtype.as_str();
+            let mut rates = [0.0f64; 2];
+            for (slot, p) in [dense_p, sparse_p].into_iter().enumerate() {
+                let job = backend::Job {
+                    pattern: p,
+                    dtype,
+                    domain: domain.clone(),
+                    steps,
+                    t: 1,
+                    temporal: TemporalMode::Sweep,
+                    weights: p.default_weights(),
+                    threads,
+                };
+                let tag = if slot == 0 { "dense" } else { "sparse24" };
+                let mut be = NativeBackend::new();
+                let mut f = init.clone();
+                rates[slot] = b
+                    .run_items(&format!("sparse/{key}/{dl}/{tag}"), Some(items), || {
+                        be.advance(&job, &mut f).unwrap();
+                    })
+                    .throughput()
+                    .unwrap();
+            }
+            let (dense, sparse) = (rates[0], rates[1]);
+            println!(
+                ">>> sparse {key} {dl}: 2:4 {:.3} GPts/s vs dense {:.3} GPts/s -> {:.2}x",
+                sparse / 1e9,
+                dense / 1e9,
+                sparse / dense
+            );
+            sparse_bars.push(Json::Obj(
+                [
+                    ("bar".to_string(), Json::Str(format!("sparse/{key}/{dl}"))),
+                    ("dense_gpts".to_string(), Json::Num(dense / 1e9)),
+                    ("sparse24_gpts".to_string(), Json::Num(sparse / 1e9)),
+                    ("ratio".to_string(), Json::Num(sparse / dense)),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+        }
+    }
+    extras.push(("dense_vs_sparse", Json::Arr(sparse_bars)));
 
     extras.push(("speedups", Json::Arr(speedups)));
     b.write_json("BENCH_native.json", extras).expect("write BENCH_native.json");

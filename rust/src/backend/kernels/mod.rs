@@ -66,6 +66,10 @@ pub(crate) trait Scalar: Copy + Send + Sync + 'static {
     /// One accumulation step: `acc + w·v` (never fused — FMA would
     /// change rounding and break bit-identity with the oracle).
     fn mul_acc(acc: Self, w: Self, v: Self) -> Self;
+    /// Plain product in this precision — used by the variable-coefficient
+    /// path to form the effective weight `w·m` *before* the tap's
+    /// multiply-accumulate, exactly as the oracle does.
+    fn mul(a: Self, b: Self) -> Self;
     /// The specialized row kernel for `arity` taps on `isa`, if one is
     /// registered (ISA-specific first, portable unrolled fallback).
     fn specialized(arity: usize, isa: Isa) -> Option<RowFn<Self>>;
@@ -78,6 +82,9 @@ impl Scalar for f64 {
     }
     fn mul_acc(acc: Self, w: Self, v: Self) -> Self {
         acc + w * v
+    }
+    fn mul(a: Self, b: Self) -> Self {
+        a * b
     }
     fn specialized(arity: usize, isa: Isa) -> Option<RowFn<Self>> {
         match isa {
@@ -100,6 +107,9 @@ impl Scalar for f32 {
     fn mul_acc(acc: Self, w: Self, v: Self) -> Self {
         acc + w * v
     }
+    fn mul(a: Self, b: Self) -> Self {
+        a * b
+    }
     fn specialized(arity: usize, isa: Isa) -> Option<RowFn<Self>> {
         match isa {
             #[cfg(target_arch = "x86_64")]
@@ -116,10 +126,12 @@ impl Scalar for f32 {
 /// Tap counts with a registered specialized kernel: the base hot shapes
 /// (star-1/2/3D: 3/5/7, box-2D: 9, box-3D: 27), their radius-2/3
 /// variants (star-2D2R: 9, star-2D3R / star-3D2R: 13, box-2D2R: 25,
-/// box-2D3R: 49) and the fused-sweep supports that land on the same
+/// box-2D3R: 49), the fused-sweep supports that land on the same
 /// counts (box-2D1R t=2/3 → 25/49, star-2D1R t=2/3 → 13/25, star-3D1R
-/// t=2 → 25, star-1D1R any t ≤ 4, star-2D1R t=4 → 41).
-pub const ARITIES: [usize; 9] = [3, 5, 7, 9, 13, 25, 27, 41, 49];
+/// t=2 → 25, star-1D1R any t ≤ 4, star-2D1R t=4 → 41), and the
+/// 2:4-pruned tap family (star-1/2/3D1R → 2/4/6, box-2D1R → 5,
+/// box-3D1R → 14, box-2D2R → 13).
+pub const ARITIES: [usize; 13] = [2, 3, 4, 5, 6, 7, 9, 13, 14, 25, 27, 41, 49];
 
 /// The instruction set a kernel was compiled/selected for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -237,9 +249,17 @@ pub(crate) fn resolve<T: Scalar>(arity: usize, mode: KernelMode, isa: Isa) -> Op
 }
 
 /// The stable per-shape key used by profiles and kernel labels:
-/// `"{shape}-{d}d{r}r"`, e.g. `"box-2d1r"`.
+/// `"{shape}-{d}d{r}r"`, e.g. `"box-2d1r"`; non-constant coefficient
+/// variants carry a suffix (e.g. `"box-2d1r-sparse24"`) so their probed
+/// peaks and labels never alias the dense kernel's.
 pub fn shape_key(pattern: &StencilPattern) -> String {
-    format!("{}-{}d{}r", pattern.shape.as_str(), pattern.d, pattern.r)
+    use crate::model::stencil::Coeffs;
+    match pattern.coeffs {
+        Coeffs::Const => {
+            format!("{}-{}d{}r", pattern.shape.as_str(), pattern.d, pattern.r)
+        }
+        c => format!("{}-{}d{}r-{}", pattern.shape.as_str(), pattern.d, pattern.r, c.as_str()),
+    }
 }
 
 /// The resolved kernel name surfaced in metrics, advance replies and
@@ -287,15 +307,20 @@ pub fn peak_for(
 
 /// The canonical probe set for `tune::micro`: every shape with a
 /// registered base-kernel specialization — star-1/2/3D and box-2/3D at
-/// radius 1.
+/// radius 1 — plus their 2:4-pruned variants (arities 4/5/14), so the
+/// planner prices sparse candidates against the pruned kernel that will
+/// actually run.
 pub fn probe_shapes() -> Vec<StencilPattern> {
-    use crate::model::stencil::Shape;
+    use crate::model::stencil::{Coeffs, Shape};
     vec![
         StencilPattern::new(Shape::Star, 1, 1).unwrap(),
         StencilPattern::new(Shape::Star, 2, 1).unwrap(),
         StencilPattern::new(Shape::Star, 3, 1).unwrap(),
         StencilPattern::new(Shape::Box, 2, 1).unwrap(),
         StencilPattern::new(Shape::Box, 3, 1).unwrap(),
+        StencilPattern::new(Shape::Star, 2, 1).unwrap().with_coeffs(Coeffs::Sparse24),
+        StencilPattern::new(Shape::Box, 2, 1).unwrap().with_coeffs(Coeffs::Sparse24),
+        StencilPattern::new(Shape::Box, 3, 1).unwrap().with_coeffs(Coeffs::Sparse24),
     ]
 }
 
@@ -376,6 +401,36 @@ mod tests {
         assert_eq!(label(&p, Dtype::F64, false), "generic");
         let l = label(&p, Dtype::F64, true);
         assert!(l.starts_with("box-2d1r/double/"), "{l}");
+    }
+
+    #[test]
+    fn coeff_variants_get_distinct_shape_keys() {
+        use crate::model::stencil::{Coeffs, Shape, StencilPattern};
+        let p = StencilPattern::new(Shape::Box, 2, 1).unwrap();
+        assert_eq!(shape_key(&p.with_coeffs(Coeffs::Sparse24)), "box-2d1r-sparse24");
+        assert_eq!(shape_key(&p.with_coeffs(Coeffs::VarCoef)), "box-2d1r-varcoef");
+        let l = label(&p.with_coeffs(Coeffs::Sparse24), Dtype::F32, true);
+        assert!(l.starts_with("box-2d1r-sparse24/float/"), "{l}");
+        // peaks probed for the sparse variant never alias the dense one
+        let peaks = vec![KernelPeak {
+            shape: "box-2d1r-sparse24".into(),
+            dtype: Dtype::F32,
+            blocked: false,
+            flops: 5e9,
+        }];
+        assert_eq!(peak_for(&peaks, &p.with_coeffs(Coeffs::Sparse24), Dtype::F32, false), Some(5e9));
+        assert_eq!(peak_for(&peaks, &p, Dtype::F32, false), None);
+    }
+
+    #[test]
+    fn pruned_tap_arities_are_registered() {
+        // 2:4-pruned supports: star-1/2/3D1R → 2/4/6, box-3D1R → 14
+        // (box-2D1R → 5 and box-2D2R → 13 were already dense arities).
+        for arity in [2usize, 4, 5, 6, 13, 14] {
+            assert!(ARITIES.contains(&arity), "arity {arity} missing");
+            assert!(<f64 as Scalar>::specialized(arity, Isa::Portable).is_some());
+            assert!(<f32 as Scalar>::specialized(arity, Isa::Portable).is_some());
+        }
     }
 
     #[test]

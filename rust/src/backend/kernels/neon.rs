@@ -102,11 +102,15 @@ macro_rules! neon_rows {
 }
 
 neon_rows! {
+    2 => neon_f64_2, neon_f32_2;
     3 => neon_f64_3, neon_f32_3;
+    4 => neon_f64_4, neon_f32_4;
     5 => neon_f64_5, neon_f32_5;
+    6 => neon_f64_6, neon_f32_6;
     7 => neon_f64_7, neon_f32_7;
     9 => neon_f64_9, neon_f32_9;
     13 => neon_f64_13, neon_f32_13;
+    14 => neon_f64_14, neon_f32_14;
     25 => neon_f64_25, neon_f32_25;
     27 => neon_f64_27, neon_f32_27;
     41 => neon_f64_41, neon_f32_41;

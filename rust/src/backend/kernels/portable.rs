@@ -32,11 +32,15 @@ fn row_n<T: Scalar, const N: usize>(deltas: &[(isize, T)], src: &[T], center: us
 /// exactly the counts in [`super::ARITIES`].
 pub(super) fn row<T: Scalar>(arity: usize) -> Option<RowFn<T>> {
     Some(match arity {
+        2 => row_n::<T, 2>,
         3 => row_n::<T, 3>,
+        4 => row_n::<T, 4>,
         5 => row_n::<T, 5>,
+        6 => row_n::<T, 6>,
         7 => row_n::<T, 7>,
         9 => row_n::<T, 9>,
         13 => row_n::<T, 13>,
+        14 => row_n::<T, 14>,
         25 => row_n::<T, 25>,
         27 => row_n::<T, 27>,
         41 => row_n::<T, 41>,

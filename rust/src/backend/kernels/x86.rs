@@ -111,11 +111,15 @@ macro_rules! avx2_rows {
 }
 
 avx2_rows! {
+    2 => avx2_f64_2 / row_f64_2, avx2_f32_2 / row_f32_2;
     3 => avx2_f64_3 / row_f64_3, avx2_f32_3 / row_f32_3;
+    4 => avx2_f64_4 / row_f64_4, avx2_f32_4 / row_f32_4;
     5 => avx2_f64_5 / row_f64_5, avx2_f32_5 / row_f32_5;
+    6 => avx2_f64_6 / row_f64_6, avx2_f32_6 / row_f32_6;
     7 => avx2_f64_7 / row_f64_7, avx2_f32_7 / row_f32_7;
     9 => avx2_f64_9 / row_f64_9, avx2_f32_9 / row_f32_9;
     13 => avx2_f64_13 / row_f64_13, avx2_f32_13 / row_f32_13;
+    14 => avx2_f64_14 / row_f64_14, avx2_f32_14 / row_f32_14;
     25 => avx2_f64_25 / row_f64_25, avx2_f32_25 / row_f32_25;
     27 => avx2_f64_27 / row_f64_27, avx2_f32_27 / row_f32_27;
     41 => avx2_f64_41 / row_f64_41, avx2_f32_41 / row_f32_41;

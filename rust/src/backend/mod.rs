@@ -140,6 +140,16 @@ impl Job {
         if self.t == 0 {
             bail!("fusion depth t must be >= 1");
         }
+        if self.pattern.coeffs == crate::model::stencil::Coeffs::VarCoef {
+            // The per-point modulation does not commute with kernel
+            // self-convolution, so fused sweeps above depth 1 have no
+            // well-defined variable-coefficient semantics.  Blocked (and
+            // Auto, which resolves blocked for t > 1) runs base steps
+            // sequentially and stays exact at any depth.
+            if self.temporal == TemporalMode::Sweep && self.t > 1 {
+                bail!("variable-coefficient jobs cannot run fused sweeps with t > 1 (use blocked)");
+            }
+        }
         Ok(())
     }
 
@@ -328,6 +338,16 @@ mod tests {
         let mut bad = job();
         bad.domain = vec![8, 0];
         assert!(bad.validate(0).is_err());
+        // varcoef: fused sweeps above depth 1 are structurally invalid;
+        // blocked (and t=1 sweep) stay legal.
+        let mut vc = job();
+        vc.pattern = vc.pattern.with_coeffs(crate::model::stencil::Coeffs::VarCoef);
+        assert!(vc.validate(64).is_err());
+        vc.temporal = TemporalMode::Blocked;
+        assert!(vc.validate(64).is_ok());
+        vc.temporal = TemporalMode::Sweep;
+        vc.t = 1;
+        assert!(vc.validate(64).is_ok());
     }
 
     #[test]

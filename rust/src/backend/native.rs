@@ -86,9 +86,15 @@ struct Kernel<T> {
     /// Specialized row kernel for the interior window, when the tap
     /// count is registered for this dtype/ISA and dispatch is enabled.
     row: Option<RowFn<T>>,
+    /// Variable-coefficient execution: every tap's weight is modulated
+    /// per output point by [`golden::vc_mod`] (tap index = position in
+    /// `deltas`/`offsets`, matching the oracle's enumeration).  Row
+    /// kernels broadcast one weight across points, so `row` is `None`
+    /// whenever this is set.
+    varcoef: bool,
 }
 
-fn compile<T: Scalar>(w: &golden::Weights, dims: &[usize], mode: KernelMode) -> Kernel<T> {
+fn compile<T: Scalar>(w: &golden::Weights, dims: &[usize], mode: KernelMode, varcoef: bool) -> Kernel<T> {
     let st = golden::strides_for(dims);
     let offsets: Vec<(Vec<i64>, T)> = w
         .offsets()
@@ -106,8 +112,12 @@ fn compile<T: Scalar>(w: &golden::Weights, dims: &[usize], mode: KernelMode) -> 
             (d, *v)
         })
         .collect();
-    let row = kernels::resolve::<T>(deltas.len(), mode, kernels::Isa::detect());
-    Kernel { r: w.r(), offsets, deltas, row }
+    let row = if varcoef {
+        None
+    } else {
+        kernels::resolve::<T>(deltas.len(), mode, kernels::Isa::detect())
+    };
+    Kernel { r: w.r(), offsets, deltas, row, varcoef }
 }
 
 /// One output point via the scalar slow path (zero-Dirichlet halo),
@@ -129,8 +139,15 @@ fn point<T: Scalar>(
         *c = o as i64;
     }
     coords[d - 1] = col as i64;
+    // Global flat index of the OUTPUT point — the varcoef modulation's
+    // spatial coordinate (coords are global even on slab/tile paths).
+    let out_flat: usize = if k.varcoef {
+        coords.iter().zip(st).map(|(&c, &s)| c as usize * s).sum()
+    } else {
+        0
+    };
     let mut acc = T::ZERO;
-    for (off, w) in &k.offsets {
+    for (j, (off, w)) in k.offsets.iter().enumerate() {
         let mut flat = 0isize;
         let mut ok = true;
         for kk in 0..d {
@@ -142,7 +159,12 @@ fn point<T: Scalar>(
             flat += c as isize * st[kk] as isize;
         }
         let v = if ok { src[(flat - src_base as isize) as usize] } else { T::ZERO };
-        acc = T::mul_acc(acc, *w, v);
+        let w = if k.varcoef {
+            T::mul(*w, T::from_f64(golden::vc_mod(out_flat, j)))
+        } else {
+            *w
+        };
+        acc = T::mul_acc(acc, w, v);
     }
     acc
 }
@@ -197,6 +219,22 @@ fn step_rows<T: Scalar>(
                 // per-point tap chain in oracle order (bit-identical).
                 let center = ((row_base + clo) as isize - src_base as isize) as usize;
                 row(&k.deltas, src, center, out);
+            } else if k.varcoef {
+                // Variable-coefficient: same offset-major walk, but each
+                // tap's weight is scaled per output point by vc_mod of
+                // the point's GLOBAL flat index — the per-point chain is
+                // still in deltas order, so bit-identity to the oracle's
+                // `apply_once_varcoef` holds.
+                out.fill(T::ZERO);
+                for (j, &(delta, w)) in k.deltas.iter().enumerate() {
+                    let start = ((row_base + clo) as isize + delta - src_base as isize) as usize;
+                    let seg = &src[start..start + (chi - clo)];
+                    let flat0 = row_base + clo;
+                    for (i, (o, &v)) in out.iter_mut().zip(seg).enumerate() {
+                        let wm = T::mul(w, T::from_f64(golden::vc_mod(flat0 + i, j)));
+                        *o = T::mul_acc(*o, wm, v);
+                    }
+                }
             } else {
                 // Generic: offset-major, one contiguous source segment
                 // per offset, no per-element bounds checks.
@@ -515,22 +553,30 @@ fn run_field<T: CacheSlot>(
 ) {
     let k0 = if obs::enabled() { obs::now_ns() } else { 0 };
     let base = golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
+    let varcoef = job.pattern.coeffs == crate::model::stencil::Coeffs::VarCoef;
+    let mut nnz = 0u64;
     if blocked {
         if job.steps == 0 {
             return;
         }
-        let k = nb.kernel::<T>(&job.domain, &base, 1);
+        let k = nb.kernel::<T>(&job.domain, &base, 1, varcoef);
         metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
+        nnz = k.deltas.len() as u64;
         run_blocked::<T>(&job.domain, &k, job.steps, job.t, job.threads, buf, metrics);
     } else {
         let launches = job.steps / job.t;
         let rem = job.steps % job.t;
         // Fusing is itself a t-fold convolution — skip it when no fused
         // launch will run (steps < t jobs are pure remainder).
-        let fk = if launches > 0 { Some(nb.kernel::<T>(&job.domain, &base, job.t)) } else { None };
-        let bk = if rem > 0 { Some(nb.kernel::<T>(&job.domain, &base, 1)) } else { None };
+        let fk = if launches > 0 {
+            Some(nb.kernel::<T>(&job.domain, &base, job.t, varcoef))
+        } else {
+            None
+        };
+        let bk = if rem > 0 { Some(nb.kernel::<T>(&job.domain, &base, 1, varcoef)) } else { None };
         if let Some(k) = fk.as_deref().or(bk.as_deref()) {
             metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
+            nnz = k.deltas.len() as u64;
         }
         run_sweeps::<T>(
             &job.domain,
@@ -549,7 +595,7 @@ fn run_field<T: CacheSlot>(
             obs::SpanKind::Kernel,
             k0,
             obs::now_ns(),
-            obs::Payload::Kernel { name: metrics.kernel.clone() },
+            obs::Payload::Kernel { name: metrics.kernel.clone(), nnz },
         );
     }
 }
@@ -577,6 +623,7 @@ fn shard_phase_field<T: CacheSlot>(
 ) {
     let dims = &job.domain;
     let base = golden::Weights::new(job.pattern.d, 2 * job.pattern.r + 1, job.weights.clone());
+    let varcoef = job.pattern.coeffs == crate::model::stencil::Coeffs::VarCoef;
     let n0 = dims[0];
     let plane: usize = dims[1..].iter().product();
     let outer_rest = plane / dims[dims.len() - 1];
@@ -585,7 +632,7 @@ fn shard_phase_field<T: CacheSlot>(
     let t0 = Instant::now();
     let mark = metrics.phase_mark();
     if phase.fused || phase.depth == 1 {
-        let k = nb.kernel::<T>(dims, &base, phase.depth);
+        let k = nb.kernel::<T>(dims, &base, phase.depth, varcoef);
         metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
         let (ip, bp) = step_rows(dims, &k, src, src_row0 * outer_rest, dst, a * outer_rest);
         metrics.interior_points += ip;
@@ -596,7 +643,7 @@ fn shard_phase_field<T: CacheSlot>(
         metrics.flops += 2 * k.deltas.len() as u64 * ((b - a) * plane) as u64;
     } else {
         let tb = phase.depth;
-        let k = nb.kernel::<T>(dims, &base, 1);
+        let k = nb.kernel::<T>(dims, &base, 1, varcoef);
         metrics.kernel = kernels::label(&job.pattern, job.dtype, k.row.is_some());
         let cap = ((b - a) + 2 * (tb - 1) * r).min(n0);
         let mut sa = vec![T::ZERO; cap * plane];
@@ -619,10 +666,11 @@ fn shard_phase_field<T: CacheSlot>(
     metrics.close_phase(&mark, phase.depth, phase.fused);
 }
 
-/// Key for one cached compiled kernel: (domain dims, fusion depth, the
-/// base weights' exact bits) — everything `compile` depends on besides
-/// the backend-wide dispatch mode.
-type CacheKey = (Vec<usize>, usize, Vec<u64>);
+/// Key for one cached compiled kernel: (domain dims, fusion depth,
+/// variable-coefficient flag, the base weights' exact bits) —
+/// everything `compile` depends on besides the backend-wide dispatch
+/// mode.
+type CacheKey = (Vec<usize>, usize, bool, Vec<u64>);
 
 /// One dtype's compartment of the compile cache.
 struct KernelSlot<T>(Mutex<HashMap<CacheKey, Arc<Kernel<T>>>>);
@@ -692,16 +740,26 @@ impl NativeBackend {
 
     /// Fetch (or compile and cache) the kernel for `base` fused to
     /// depth `t` over `dims`.  The fuse + stride/neighbor derivation
-    /// runs once per distinct (dims, t, weights) per backend instance.
-    fn kernel<T: CacheSlot>(&self, dims: &[usize], base: &golden::Weights, t: usize) -> Arc<Kernel<T>> {
+    /// runs once per distinct (dims, t, varcoef, weights) per backend
+    /// instance.  Variable-coefficient kernels never fuse (the per-point
+    /// modulation does not commute with self-convolution), so `varcoef`
+    /// requires `t == 1`.
+    fn kernel<T: CacheSlot>(
+        &self,
+        dims: &[usize],
+        base: &golden::Weights,
+        t: usize,
+        varcoef: bool,
+    ) -> Arc<Kernel<T>> {
+        assert!(!(varcoef && t > 1), "variable-coefficient kernels cannot be fused");
         let key: CacheKey =
-            (dims.to_vec(), t, base.data.iter().map(|w| w.to_bits()).collect());
+            (dims.to_vec(), t, varcoef, base.data.iter().map(|w| w.to_bits()).collect());
         let slot = T::slot(self);
         if let Some(k) = slot.0.lock().unwrap().get(&key) {
             return Arc::clone(k);
         }
         let w = if t > 1 { base.fuse(t) } else { base.clone() };
-        let k = Arc::new(compile::<T>(&w, dims, self.mode));
+        let k = Arc::new(compile::<T>(&w, dims, self.mode, varcoef));
         slot.0.lock().unwrap().insert(key, Arc::clone(&k));
         k
     }
@@ -757,6 +815,13 @@ impl NativeBackend {
             "phase depth {} outside the plan's halo ring depth {}",
             phase.depth,
             plan.t
+        );
+        anyhow::ensure!(
+            !(job.pattern.coeffs == crate::model::stencil::Coeffs::VarCoef
+                && phase.fused
+                && phase.depth > 1),
+            "variable-coefficient phases cannot run the fused kernel (depth {})",
+            phase.depth
         );
         let shard = plan
             .shards()
@@ -1130,6 +1195,79 @@ mod tests {
             assert_eq!(ma.interior_points, mg.interior_points);
             assert_eq!(ma.boundary_points, mg.boundary_points);
         }
+    }
+
+    #[test]
+    fn varcoef_single_step_bit_identical_to_oracle() {
+        use crate::model::stencil::Coeffs;
+        let mut j = job(2, 1, vec![13, 11], 1, 1);
+        j.pattern = j.pattern.with_coeffs(Coeffs::VarCoef);
+        let init = rand_field(31, 13 * 11);
+        let mut field = init.clone();
+        let m = NativeBackend::new().advance(&j, &mut field).unwrap();
+        assert_eq!(m.kernel, "generic", "varcoef never resolves a row kernel");
+        let w = golden::Weights::new(2, 3, j.weights.clone());
+        let want = golden::apply_once_varcoef(&golden::Field::from_vec(&j.domain, init), &w);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn varcoef_blocked_bit_identical_to_sequential_varcoef_oracle() {
+        use crate::model::stencil::Coeffs;
+        let mut j = job(2, 1, vec![37, 23], 7, 3);
+        j.pattern = j.pattern.with_coeffs(Coeffs::VarCoef);
+        j.temporal = TemporalMode::Blocked;
+        j.threads = 3;
+        let init = rand_field(32, 37 * 23);
+        let mut field = init.clone();
+        NativeBackend::new().advance(&j, &mut field).unwrap();
+        let w = golden::Weights::new(2, 3, j.weights.clone());
+        let want =
+            golden::apply_steps_varcoef(&golden::Field::from_vec(&j.domain, init), &w, j.steps);
+        let got = golden::Field::from_vec(&j.domain, field);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn varcoef_rejects_fused_sweeps() {
+        use crate::model::stencil::Coeffs;
+        let mut j = job(2, 1, vec![8, 8], 4, 2);
+        j.pattern = j.pattern.with_coeffs(Coeffs::VarCoef);
+        j.temporal = TemporalMode::Sweep;
+        let mut field = rand_field(33, 64);
+        assert!(NativeBackend::new().advance(&j, &mut field).is_err());
+        // ...but t=1 sweeps and Auto (→ blocked) both run.
+        j.t = 1;
+        j.steps = 2;
+        assert!(NativeBackend::new().advance(&j, &mut field).is_ok());
+    }
+
+    #[test]
+    fn sparse24_pattern_dispatches_the_pruned_arity() {
+        use crate::model::stencil::{Coeffs, Shape, StencilPattern};
+        // box-2d1r:sparse24 → 5 live taps → the arity-5 row kernel.
+        let p = StencilPattern::new(Shape::Box, 2, 1).unwrap().with_coeffs(Coeffs::Sparse24);
+        let j = Job {
+            pattern: p,
+            dtype: Dtype::F64,
+            domain: vec![19, 17],
+            steps: 3,
+            t: 1,
+            temporal: TemporalMode::Sweep,
+            weights: p.default_weights(),
+            threads: 1,
+        };
+        let init = rand_field(34, 19 * 17);
+        let mut field = init.clone();
+        let m = NativeBackend::with_mode(KernelMode::Auto).advance(&j, &mut field).unwrap();
+        assert!(m.kernel.starts_with("box-2d1r-sparse24/double/"), "{}", m.kernel);
+        // flops account 2·nnz per point with the PRUNED tap count.
+        assert_eq!(m.flops, 3 * 2 * 5 * (19 * 17) as u64);
+        // and the result is the plain dense oracle over the pruned weights
+        let w = golden::Weights::new(2, 3, j.weights.clone());
+        let want = golden::apply_steps(&golden::Field::from_vec(&j.domain, init), &w, 3);
+        assert_eq!(golden::Field::from_vec(&j.domain, field).max_abs_diff(&want), 0.0);
     }
 
     #[test]

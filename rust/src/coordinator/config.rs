@@ -7,7 +7,7 @@ use crate::backend::{BackendKind, TemporalMode};
 use crate::coordinator::grid::ShardSpec;
 use crate::hardware::Gpu;
 use crate::model::perf::Dtype;
-use crate::model::stencil::{Shape, StencilPattern};
+use crate::model::stencil::{Coeffs, Shape, StencilPattern};
 
 /// Parsed stencil-job configuration.
 #[derive(Debug, Clone)]
@@ -87,7 +87,12 @@ impl RunConfig {
     /// Apply CLI overrides onto the defaults.
     pub fn from_args(args: &crate::util::cli::Args) -> Result<RunConfig> {
         let mut c = RunConfig::defaults();
-        if let Some(s) = args.get("shape") {
+        // `--pattern {shape}-{d}d{r}r[:{coeffs}]` wins over the split
+        // --shape/--d/--r flags (which carry defaults and are thus
+        // always present); `--coeffs` then overrides either spelling.
+        if let Some(p) = args.get("pattern") {
+            c.pattern = StencilPattern::parse(p)?;
+        } else if let Some(s) = args.get("shape") {
             let d = args.get_usize("d")?.unwrap_or(2);
             let r = args.get_usize("r")?.unwrap_or(1);
             c.pattern = StencilPattern::new(Shape::parse(s)?, d, r)?;
@@ -95,6 +100,9 @@ impl RunConfig {
             let d = args.get_usize("d")?.unwrap_or(c.pattern.d);
             let r = args.get_usize("r")?.unwrap_or(c.pattern.r);
             c.pattern = StencilPattern::new(c.pattern.shape, d, r)?;
+        }
+        if let Some(v) = args.get("coeffs") {
+            c.pattern = c.pattern.with_coeffs(Coeffs::parse(v)?);
         }
         if let Some(s) = args.get("dtype") {
             c.dtype = Dtype::parse(s)?;
@@ -160,6 +168,18 @@ pub fn run_opt_specs() -> Vec<crate::util::cli::OptSpec> {
     use crate::util::cli::OptSpec;
     vec![
         OptSpec { name: "shape", help: "stencil shape: box|star", takes_value: true, default: Some("box") },
+        OptSpec {
+            name: "pattern",
+            help: "pattern grammar {shape}-{d}d{r}r[:{coeffs}], e.g. box-2d1r:sparse24 (overrides --shape/--d/--r)",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "coeffs",
+            help: "coefficient variant: const|aniso|varcoef|sparse24",
+            takes_value: true,
+            default: None,
+        },
         OptSpec { name: "d", help: "dimensionality (2|3)", takes_value: true, default: Some("2") },
         OptSpec { name: "r", help: "radius", takes_value: true, default: Some("1") },
         OptSpec { name: "t", help: "fusion depth (omit = planner)", takes_value: true, default: None },
@@ -509,6 +529,31 @@ mod tests {
         // every run-like subcommand shares the flag
         for specs in [run_opt_specs(), serve_opt_specs(), tune_opt_specs()] {
             assert_eq!(specs.iter().filter(|s| s.name == "trace-out").count(), 1);
+        }
+    }
+
+    #[test]
+    fn pattern_and_coeffs_flags_parse() {
+        // the grammar flag wins over the split flags (which always
+        // carry their defaults)
+        let c = parse(&["--pattern", "star-3d1r:sparse24", "--shape", "box", "--d", "2"]);
+        assert_eq!(c.pattern.label(), "Star-3D1R:sparse24");
+        assert_eq!(c.domain, vec![64, 64, 64], "domain rank follows the pattern");
+        // --coeffs composes with either spelling and overrides the suffix
+        assert_eq!(parse(&["--coeffs", "varcoef"]).pattern.label(), "Box-2D1R:varcoef");
+        let c = parse(&["--pattern", "box-2d1r:sparse24", "--coeffs", "aniso"]);
+        assert_eq!(c.pattern.coeffs, Coeffs::Aniso);
+        // bad values error
+        let raw: Vec<String> = vec!["--pattern".into(), "blob-2d1r".into()];
+        let args = Args::parse(&raw, &run_opt_specs()).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
+        let raw: Vec<String> = vec!["--coeffs".into(), "random".into()];
+        let args = Args::parse(&raw, &run_opt_specs()).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
+        // both flags ride along to serve/tune/all spec lists exactly once
+        for specs in [run_opt_specs(), serve_opt_specs(), tune_opt_specs(), all_opt_specs()] {
+            assert_eq!(specs.iter().filter(|s| s.name == "pattern").count(), 1);
+            assert_eq!(specs.iter().filter(|s| s.name == "coeffs").count(), 1);
         }
     }
 

@@ -22,7 +22,8 @@ use crate::model::criteria;
 use crate::model::perf::{Dtype, Unit, Workload};
 use crate::model::scenario::{self, Comparison};
 use crate::model::shard;
-use crate::model::stencil::StencilPattern;
+use crate::model::sparsity::Scheme;
+use crate::model::stencil::{Coeffs, StencilPattern};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::Runtime;
 use crate::sim::exec::{self, Prediction};
@@ -233,6 +234,7 @@ fn shard_options(req: &Request, target: ExecTarget) -> Vec<usize> {
 /// they execute), so a pinned `Blocked` request excludes them.
 pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> {
     let mut out = Vec::new();
+    let coeffs = req.pattern.coeffs;
     for e in engines::all() {
         if e.symmetric_only || e.half_only {
             continue; // excluded from general comparisons (§5.5)
@@ -240,15 +242,36 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
         if e.is_tensor() && req.temporal == TemporalMode::Blocked {
             continue; // no time-tiled path through MMA units
         }
+        // Coefficient-variant gating.  A 2:4-pruned pattern maps onto
+        // MMA units only through the structured-sparse pipeline — the
+        // SpTC's hardware 2:4 skip is exactly the pattern's pruning
+        // (§4.3), so dense-scheme tensor engines are out.  Per-point
+        // varying coefficients break the MMA transformation-matrix
+        // premise entirely: scalar units only.
+        if e.is_tensor() {
+            match coeffs {
+                Coeffs::Const | Coeffs::Aniso => {}
+                Coeffs::Sparse24 if e.scheme == Scheme::Sparse24 => {}
+                Coeffs::Sparse24 | Coeffs::VarCoef => continue,
+            }
+        }
         for t in 1..=req.max_t.min(e.max_t) {
             let w = Workload::new(req.pattern, t, req.dtype);
             if !e.supports(&w) {
                 continue;
             }
-            let artifact = manifest.and_then(|m| {
-                m.find(e.scheme, req.pattern.shape, req.pattern.d, req.pattern.r, t, req.dtype)
-                    .map(|a| a.name.clone())
-            });
+            // AOT artifacts were compiled for constant-coefficient
+            // patterns; none exists for a coefficient variant, so the
+            // PJRT target is off the table for them (manifest entries
+            // carry no coeffs axis to match on).
+            let artifact = if coeffs == Coeffs::Const {
+                manifest.and_then(|m| {
+                    m.find(e.scheme, req.pattern.shape, req.pattern.d, req.pattern.r, t, req.dtype)
+                        .map(|a| a.name.clone())
+                })
+            } else {
+                None
+            };
             // Per-backend feasibility: PJRT needs an artifact; the
             // native engine executes anything.  Auto mirrors
             // PjrtBackend::supports exactly — ANY scheme's artifact for
@@ -257,7 +280,7 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
             // PJRT executor (`pjrt` feature), and the requested steps
             // must divide into whole launches — so plan output matches
             // what run will do.
-            let any_artifact = manifest.is_some_and(|m| {
+            let any_artifact = coeffs == Coeffs::Const && manifest.is_some_and(|m| {
                 m.variants.iter().any(|v| {
                     v.shape == req.pattern.shape
                         && v.d == req.pattern.d
@@ -294,7 +317,13 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
             if e.is_tensor() {
                 variants.push((TemporalMode::Sweep, target));
             } else {
-                if req.temporal != TemporalMode::Blocked {
+                // A fused sweep is a t-fold self-convolution of the
+                // kernel, which per-point modulation does not commute
+                // with — varcoef sweeps exist only at t = 1 (blocked
+                // realizes depth by sequential base steps, so any t).
+                if req.temporal != TemporalMode::Blocked
+                    && !(coeffs == Coeffs::VarCoef && t > 1)
+                {
                     variants.push((TemporalMode::Sweep, target));
                 }
                 if req.temporal != TemporalMode::Sweep && req.backend != BackendKind::Pjrt {
@@ -314,12 +343,19 @@ pub fn candidates(req: &Request, manifest: Option<&Manifest>) -> Vec<Candidate> 
                 let gpu = if !e.is_tensor()
                     && target == ExecTarget::Native
                     && req.kernels == KernelMode::Auto
+                    // varcoef always executes the generic path (the
+                    // per-point modulation has no specialized row), so
+                    // no per-kernel ℙ can apply to it.
+                    && coeffs != Coeffs::VarCoef
                 {
                     let blocked = temporal == TemporalMode::Blocked;
+                    // Dispatch keys on the *executed* tap count: the
+                    // 2:4-pruned arity for sparse patterns, geometric
+                    // otherwise (identical for dense coefficients).
                     let arity = if blocked {
-                        req.pattern.k_points()
+                        req.pattern.effective_k_points()
                     } else {
-                        req.pattern.fused_k_points(t)
+                        req.pattern.fused_effective_k_points(t)
                     } as usize;
                     let peak = if kernels::ARITIES.contains(&arity) {
                         kernels::peak_for(&req.kernel_peaks, &req.pattern, req.dtype, blocked)

@@ -92,6 +92,17 @@ fn help_text() -> String {
            pjrt    require a pre-built AOT artifact (needs `make artifacts`\n\
                    and a pjrt-enabled build: vendored xla dependency +\n\
                    --features pjrt; see Cargo.toml)\n\n\
+         pattern selection (--pattern / --coeffs, anywhere --shape works):\n\
+           --pattern {{shape}}-{{d}}d{{r}}r[:{{coeffs}}]  one-token spelling,\n\
+                    e.g. box-2d1r:sparse24 (overrides --shape/--d/--r)\n\
+           --coeffs VARIANT  coefficient variant (overrides the suffix):\n\
+             const    constant dense weights over the support (default)\n\
+             aniso    constant axis-asymmetric weights (same support)\n\
+             varcoef  per-point modulated weights — native scalar only,\n\
+                      fused sweeps need t=1, fan-out collapses to 1\n\
+             sparse24 2:4 structured pruning of the support: pruned-tap\n\
+                      kernels + SpTC engines priced by the sparsity-\n\
+                      expanded profitable region (model::sparsity)\n\n\
          temporal strategy (--temporal, honored by plan, run, and serve):\n\
            auto     planner resolves via the model: blocked exactly when the\n\
                     fused-kernel intensity crosses the machine balance point\n\
@@ -494,6 +505,14 @@ fn run_cmd(args: &Args) -> Result<()> {
             planned.as_ref().map(|p| p.chosen.shards).unwrap_or(1)
         }
     };
+    // Variable-coefficient modulation is keyed on global output indices,
+    // so shard sub-fields would modulate with shard-local flats and
+    // diverge from the oracle: varcoef jobs always run monolithic.
+    let shards = if cfg.pattern.coeffs == tc_stencil::model::stencil::Coeffs::VarCoef {
+        1
+    } else {
+        shards
+    };
     let sharded = shards > 1;
     if sharded && cfg.domain.len() < 2 {
         bail!("--shards {shards} needs a d >= 2 domain (dim-0 slabs)");
@@ -501,7 +520,7 @@ fn run_cmd(args: &Args) -> Result<()> {
     if sharded && cfg.backend == backend::BackendKind::Pjrt {
         bail!("--shards {shards} is native-only (pjrt drives its own artifact tiling)");
     }
-    let weights = cfg.pattern.uniform_weights();
+    let weights = cfg.pattern.default_weights();
     let job = backend::Job {
         pattern: cfg.pattern,
         dtype: cfg.dtype,
@@ -585,7 +604,11 @@ fn run_cmd(args: &Args) -> Result<()> {
         let initial = golden::gaussian(&cfg.domain);
         let w = golden::Weights::new(cfg.pattern.d, 2 * cfg.pattern.r + 1, weights);
         let mut want = golden::Field::from_vec(&cfg.domain, initial);
-        if temporal == backend::TemporalMode::Blocked {
+        if cfg.pattern.coeffs == tc_stencil::model::stencil::Coeffs::VarCoef {
+            // Varcoef executes sequential base steps in every temporal
+            // mode (fused varcoef sweeps are rejected at validation).
+            want = golden::apply_steps_varcoef(&want, &w, steps);
+        } else if temporal == backend::TemporalMode::Blocked {
             // Blocked = sequential semantics: steps chained base steps.
             want = golden::apply_steps(&want, &w, steps);
         } else {

@@ -1,6 +1,7 @@
 //! The paper's analytical performance model, executable.
 //!
-//! * [`stencil`]    — patterns (shape/d/r), K, fused support K^(t)
+//! * [`stencil`]    — patterns (shape/d/r + coeffs axis), K, fused
+//!   support K^(t), and the 2:4-pruned effective counts K_eff/K_eff^(t)
 //! * [`roofline`]   — Eq. 4–5: P = min(ℙ, 𝔹·I), ridge point
 //! * [`redundancy`] — Eq. 9–10: fusion redundancy α (closed form + exact)
 //! * [`sparsity`]   — Eq. 2: transformation sparsity S per scheme
@@ -133,8 +134,34 @@
 //! }];
 //! assert_eq!(kernels::peak_for(&peaks, &p, Dtype::F64, true), Some(1.0e11));
 //! assert_eq!(kernels::peak_for(&peaks, &p, Dtype::F64, false), None); // sweep unprobed
-//! assert_eq!(kernels::probe_shapes().len(), 5); // star-1/2/3D, box-2/3D
+//! // star-1/2/3D, box-2/3D dense + the three pruned-arity variants
+//! assert_eq!(kernels::probe_shapes().len(), 8);
 //! assert_eq!(builtin_profile(&tc_stencil::hardware::Gpu::a100()).kernels.len(), 0);
+//!
+//! // §4.3 sparsity-expanded region (MODEL.md "sparsity-expanded
+//! // region"): the pattern's coefficient axis reuses Eq. 2/9/20's
+//! // machinery.  A 2:4-pruned pattern shrinks K and K^(t) to the
+//! // effective (kept-tap) counts the planner prices with, so α and
+//! // every intensity move with them; SpTC engines keep their paper S
+//! // while Eq. 20 doubles ℙ — two independent expansions of the
+//! // profitable region.
+//! use tc_stencil::model::stencil::Coeffs;
+//! let sp24 = p.with_coeffs(Coeffs::Sparse24);
+//! assert_eq!(sp24.effective_k_points(), 5);         // K_eff: 9 → 5 taps
+//! assert_eq!(sp24.fused_effective_k_points(3), 22); // K_eff^(3) < 49
+//! assert_eq!(p.effective_k_points(), 9);            // const: geometric
+//! let wsp = Workload::new(sp24, 8, Dtype::F32);
+//! assert!((wsp.alpha() - 117.0 / 40.0).abs() < 1e-12);  // α_eff(8)
+//! assert!(wsp.alpha() < redundancy::alpha(&p, 8));      // < dense α(8)
+//! // pruning halves the blocked intensity: t·K_eff/D = 10 sits under
+//! // the A100 f32 ridge where the dense t·K/D = 18 was compute-bound
+//! let cu32 = Roof::new(19.5e12, 1.935e12);
+//! assert_eq!(wsp.intensity_cuda(), 10.0);
+//! assert!(wsp.intensity_cuda() < cu32.ridge());
+//! assert!(Workload::new(p, 8, Dtype::F32).intensity_cuda() > cu32.ridge());
+//! // the SpTC scheme's Eq. 2 operand sparsity is what Eq. 11 divides by
+//! assert_eq!(sparsity::sparsity(Scheme::Sparse24, &p, 7),
+//!            sparsity::sparsity(Scheme::Decompose, &p, 7));
 //!
 //! // Exported metrics (MODEL.md "exported metrics" table): the obs
 //! // plane streams Eq. 6/8's counters per span — their per-phase

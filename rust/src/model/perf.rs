@@ -106,14 +106,26 @@ impl Workload {
         Workload { pattern, t, dtype }
     }
 
-    /// K — points in the unfused kernel.
+    /// K — non-zero points in the unfused kernel actually executed:
+    /// the geometric count, 2:4-pruned for `Coeffs::Sparse24` patterns
+    /// (the pruned kernel IS the stencil, so its useful work per point
+    /// update is 2·K_eff).  Identical to `pattern.k_points()` for every
+    /// dense-coefficient pattern.
     pub fn k(&self) -> f64 {
-        self.pattern.k_points() as f64
+        self.pattern.effective_k_points() as f64
     }
 
-    /// α — fusion redundancy (Eq. 9, exact for any shape).
+    /// α — fusion redundancy (Eq. 9, exact for any shape), over the
+    /// *executed* support: K_eff^(t)/(t·K_eff).  Equals
+    /// [`redundancy::alpha`] for dense-coefficient patterns.
     pub fn alpha(&self) -> f64 {
-        redundancy::alpha(&self.pattern, self.t)
+        use crate::model::stencil::Coeffs;
+        match self.pattern.coeffs {
+            Coeffs::Sparse24 => {
+                self.pattern.fused_effective_k_points(self.t) as f64 / (self.t as f64 * self.k())
+            }
+            _ => redundancy::alpha(&self.pattern, self.t),
+        }
     }
 
     /// S — transformation sparsity for `scheme` (Eq. 2).

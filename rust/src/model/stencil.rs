@@ -44,6 +44,56 @@ impl fmt::Display for Shape {
     }
 }
 
+/// Coefficient structure of the stencil kernel — the workload axis that
+/// `model::sparsity` prices (§4.3): constant dense taps, anisotropic
+/// (axis-asymmetric) constants, per-point variable coefficients, and the
+/// 2:4-structured-sparse tap set that SPIDER/SparStencil execute on
+/// Sparse Tensor Cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Coeffs {
+    /// Constant weights, dense over the support (the PR ≤7 behaviour).
+    #[default]
+    Const,
+    /// Constant but axis-asymmetric weights: same support and point
+    /// counts as `Const`; exercises non-symmetric kernels end to end.
+    Aniso,
+    /// Per-output-point weight field: every tap's weight is modulated by
+    /// a deterministic per-point factor ([`crate::sim::golden::vc_mod`]).
+    VarCoef,
+    /// 2:4-structured sparse taps: over the row-major hull, each group
+    /// of 4 cells keeps at most 2 non-zeros (the SpTC constraint).
+    Sparse24,
+}
+
+impl Coeffs {
+    /// Parse a CLI/protocol coefficient-variant name.
+    pub fn parse(s: &str) -> Result<Coeffs> {
+        match s.to_ascii_lowercase().as_str() {
+            "const" | "dense" => Ok(Coeffs::Const),
+            "aniso" => Ok(Coeffs::Aniso),
+            "varcoef" | "variable" => Ok(Coeffs::VarCoef),
+            "sparse24" | "2:4" | "s24" => Ok(Coeffs::Sparse24),
+            other => bail!("unknown coeffs variant {other:?} (want const|aniso|varcoef|sparse24)"),
+        }
+    }
+
+    /// The stable lowercase variant name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Coeffs::Const => "const",
+            Coeffs::Aniso => "aniso",
+            Coeffs::VarCoef => "varcoef",
+            Coeffs::Sparse24 => "sparse24",
+        }
+    }
+}
+
+impl fmt::Display for Coeffs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// A stencil pattern: the paper's (shape, d, r) triple.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct StencilPattern {
@@ -53,6 +103,8 @@ pub struct StencilPattern {
     pub d: usize,
     /// Radius (1..=16).
     pub r: usize,
+    /// Coefficient structure (constant / anisotropic / variable / 2:4).
+    pub coeffs: Coeffs,
 }
 
 impl StencilPattern {
@@ -64,16 +116,49 @@ impl StencilPattern {
         if r == 0 || r > 16 {
             bail!("radius must be 1..=16, got {r}");
         }
-        Ok(StencilPattern { shape, d, r })
+        Ok(StencilPattern { shape, d, r, coeffs: Coeffs::Const })
     }
 
-    /// Paper naming, e.g. "Box-2D1R".
+    /// Same pattern with a different coefficient variant.
+    pub fn with_coeffs(mut self, coeffs: Coeffs) -> StencilPattern {
+        self.coeffs = coeffs;
+        self
+    }
+
+    /// Parse the pattern grammar `{shape}-{d}d{r}r[:{coeffs}]`, e.g.
+    /// `box-2d1r`, `star-3d1r:sparse24`, `Box-2D1R:varcoef`.
+    pub fn parse(s: &str) -> Result<StencilPattern> {
+        let (geom, coeffs) = match s.split_once(':') {
+            Some((g, c)) => (g, Coeffs::parse(c)?),
+            None => (s, Coeffs::Const),
+        };
+        let geom = geom.to_ascii_lowercase();
+        let (shape_s, rest) = geom
+            .split_once('-')
+            .ok_or_else(|| anyhow::anyhow!("bad pattern {s:?} (want {{shape}}-{{d}}d{{r}}r[:{{coeffs}}])"))?;
+        let shape = Shape::parse(shape_s)?;
+        let body = rest
+            .strip_suffix('r')
+            .ok_or_else(|| anyhow::anyhow!("bad pattern {s:?}: geometry must end in r"))?;
+        let (d_s, r_s) = body
+            .split_once('d')
+            .ok_or_else(|| anyhow::anyhow!("bad pattern {s:?}: want {{d}}d{{r}}r"))?;
+        let d: usize = d_s.parse().map_err(|_| anyhow::anyhow!("bad dimensionality in {s:?}"))?;
+        let r: usize = r_s.parse().map_err(|_| anyhow::anyhow!("bad radius in {s:?}"))?;
+        Ok(StencilPattern::new(shape, d, r)?.with_coeffs(coeffs))
+    }
+
+    /// Paper naming, e.g. "Box-2D1R"; non-constant coefficient variants
+    /// carry a suffix, e.g. "Box-2D1R:sparse24".
     pub fn label(&self) -> String {
         let s = match self.shape {
             Shape::Box => "Box",
             Shape::Star => "Star",
         };
-        format!("{s}-{}D{}R", self.d, self.r)
+        match self.coeffs {
+            Coeffs::Const => format!("{s}-{}D{}R", self.d, self.r),
+            c => format!("{s}-{}D{}R:{}", self.d, self.r, c.as_str()),
+        }
     }
 
     /// K — number of points in the (unfused) kernel.
@@ -146,6 +231,90 @@ impl StencilPattern {
                 acc.iter().sum()
             }
         }
+    }
+
+    /// The support actually *executed* for this pattern's coefficient
+    /// variant: the geometric support, 2:4-pruned for `Sparse24`.
+    /// Weight-independent, so planner pricing stays pure in the pattern.
+    pub fn effective_support(&self) -> SupportGrid {
+        match self.coeffs {
+            Coeffs::Sparse24 => self.support().prune24(),
+            _ => self.support(),
+        }
+    }
+
+    /// Effective tap count (non-zeros executed per point). Equals
+    /// [`Self::k_points`] except for `Sparse24`, where the 2:4 pruning
+    /// removes taps.
+    pub fn effective_k_points(&self) -> u64 {
+        match self.coeffs {
+            Coeffs::Sparse24 => self.effective_support().count(),
+            _ => self.k_points(),
+        }
+    }
+
+    /// Effective fused tap count: support of the t-fold self-convolution
+    /// of the *executed* kernel. For `Sparse24` the pruned support has no
+    /// closed form, so this uses the exact iterated Minkowski sum.
+    pub fn fused_effective_k_points(&self, t: usize) -> u64 {
+        assert!(t >= 1);
+        match self.coeffs {
+            Coeffs::Sparse24 => self.effective_support().minkowski_power(t).count(),
+            _ => self.fused_k_points(t),
+        }
+    }
+
+    /// Default weights for this pattern's coefficient variant, over the
+    /// full (2r+1)^d hull (row-major, zeros off the effective support):
+    ///
+    /// * `Const` / `VarCoef` — support-normalized uniform (VarCoef's
+    ///   per-point modulation is applied at execution, not here);
+    /// * `Aniso` — deterministic axis-asymmetric positive weights,
+    ///   normalized to sum 1;
+    /// * `Sparse24` — uniform over the 2:4-pruned support.
+    pub fn default_weights(&self) -> Vec<f64> {
+        match self.coeffs {
+            Coeffs::Const | Coeffs::VarCoef => self.uniform_weights(),
+            Coeffs::Aniso => self.aniso_weights(),
+            Coeffs::Sparse24 => {
+                let sup = self.effective_support();
+                let k = sup.count() as f64;
+                sup.cells.iter().map(|&b| if b { 1.0 / k } else { 0.0 }).collect()
+            }
+        }
+    }
+
+    /// Deterministic anisotropic weights: per support cell the product
+    /// over axes of `1 + 0.1·(axis+1) + off/(4·(r+1))` — axis-dependent
+    /// and sign-asymmetric yet strictly positive for every valid (d, r)
+    /// (|off| ≤ r < 4·(r+1)) — normalized to sum 1 over the support.
+    fn aniso_weights(&self) -> Vec<f64> {
+        let sup = self.support();
+        let n = sup.n;
+        let rad = sup.radius();
+        let scale = 4.0 * (self.r as f64 + 1.0);
+        let mut w = vec![0.0f64; sup.cells.len()];
+        for (flat, slot) in w.iter_mut().enumerate() {
+            if !sup.cells[flat] {
+                continue;
+            }
+            let mut rem = flat;
+            let mut offs = vec![0i64; self.d];
+            for k in (0..self.d).rev() {
+                offs[k] = (rem % n) as i64 - rad;
+                rem /= n;
+            }
+            let mut f = 1.0f64;
+            for (axis, &o) in offs.iter().enumerate() {
+                f *= 1.0 + 0.1 * (axis as f64 + 1.0) + o as f64 / scale;
+            }
+            *slot = f;
+        }
+        let total: f64 = w.iter().sum();
+        for slot in w.iter_mut() {
+            *slot /= total;
+        }
+        w
     }
 }
 
@@ -264,6 +433,30 @@ impl SupportGrid {
         }
         acc
     }
+
+    /// 2:4 structured pruning over the row-major hull: within each
+    /// consecutive group of 4 hull cells, keep the first 2 live cells and
+    /// drop the rest — the Sparse-Tensor-Core metadata constraint applied
+    /// the way SPIDER lays out stencil taps. Deterministic and
+    /// weight-independent, so the pruned support is a pure function of
+    /// the pattern.
+    pub fn prune24(&self) -> SupportGrid {
+        let mut out = self.clone();
+        let mut kept_in_group = 0usize;
+        for (flat, cell) in out.cells.iter_mut().enumerate() {
+            if flat % 4 == 0 {
+                kept_in_group = 0;
+            }
+            if *cell {
+                if kept_in_group < 2 {
+                    kept_in_group += 1;
+                } else {
+                    *cell = false;
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -378,5 +571,96 @@ mod tests {
         assert_eq!(Shape::parse("box").unwrap(), Shape::Box);
         assert_eq!(Shape::parse("STAR").unwrap(), Shape::Star);
         assert!(Shape::parse("hex").is_err());
+    }
+
+    #[test]
+    fn pattern_grammar_parses_and_labels() {
+        let p = StencilPattern::parse("box-2d1r").unwrap();
+        assert_eq!((p.shape, p.d, p.r, p.coeffs), (Shape::Box, 2, 1, Coeffs::Const));
+        assert_eq!(p.label(), "Box-2D1R");
+        let p = StencilPattern::parse("Star-3D2R:sparse24").unwrap();
+        assert_eq!((p.shape, p.d, p.r, p.coeffs), (Shape::Star, 3, 2, Coeffs::Sparse24));
+        assert_eq!(p.label(), "Star-3D2R:sparse24");
+        let p = StencilPattern::parse("box-2d1r:varcoef").unwrap();
+        assert_eq!(p.coeffs, Coeffs::VarCoef);
+        assert_eq!(p.label(), "Box-2D1R:varcoef");
+        assert!(StencilPattern::parse("box-2d1r:foo").is_err());
+        assert!(StencilPattern::parse("box2d1r").is_err());
+        assert!(StencilPattern::parse("hex-2d1r").is_err());
+        assert!(StencilPattern::parse("box-0d1r").is_err());
+    }
+
+    #[test]
+    fn coeffs_parse_roundtrip() {
+        for c in [Coeffs::Const, Coeffs::Aniso, Coeffs::VarCoef, Coeffs::Sparse24] {
+            assert_eq!(Coeffs::parse(c.as_str()).unwrap(), c);
+        }
+        assert_eq!(Coeffs::parse("2:4").unwrap(), Coeffs::Sparse24);
+        assert!(Coeffs::parse("rand").is_err());
+    }
+
+    #[test]
+    fn prune24_hand_computed_arities() {
+        // Hand-walked row-major hulls: groups of 4 cells, first 2 live
+        // cells of each group survive.
+        let sp24 = |shape, d, r| pat(shape, d, r).with_coeffs(Coeffs::Sparse24);
+        assert_eq!(sp24(Shape::Star, 1, 1).effective_k_points(), 2); // keep {0,1} of {0,1,2}
+        assert_eq!(sp24(Shape::Star, 2, 1).effective_k_points(), 4); // keep {1,3,4,5} of cross
+        assert_eq!(sp24(Shape::Star, 3, 1).effective_k_points(), 6); // keep {4,10,12,13,16,22}
+        assert_eq!(sp24(Shape::Box, 2, 1).effective_k_points(), 5); // 2+2+1 over 9 cells
+        assert_eq!(sp24(Shape::Box, 3, 1).effective_k_points(), 14); // 6·2 + 2 over 27 cells
+        assert_eq!(sp24(Shape::Box, 2, 2).effective_k_points(), 13); // 6·2 + 1 over 25 cells
+    }
+
+    #[test]
+    fn prune24_kept_cells_are_the_expected_flats() {
+        let sup = pat(Shape::Star, 3, 1).support().prune24();
+        let kept: Vec<usize> =
+            (0..sup.cells.len()).filter(|&i| sup.cells[i]).collect();
+        assert_eq!(kept, vec![4, 10, 12, 13, 16, 22]);
+        // every group of 4 hull cells holds ≤ 2 survivors
+        for g in 0..sup.cells.len().div_ceil(4) {
+            let live = sup.cells[g * 4..(g * 4 + 4).min(sup.cells.len())]
+                .iter()
+                .filter(|&&b| b)
+                .count();
+            assert!(live <= 2, "group {g} has {live} survivors");
+        }
+    }
+
+    #[test]
+    fn effective_counts_default_to_geometric() {
+        for shape in [Shape::Box, Shape::Star] {
+            for coeffs in [Coeffs::Const, Coeffs::Aniso, Coeffs::VarCoef] {
+                let p = pat(shape, 2, 1).with_coeffs(coeffs);
+                assert_eq!(p.effective_k_points(), p.k_points());
+                assert_eq!(p.fused_effective_k_points(3), p.fused_k_points(3));
+            }
+        }
+        let p = pat(Shape::Box, 2, 1).with_coeffs(Coeffs::Sparse24);
+        assert!(p.effective_k_points() < p.k_points());
+        assert_eq!(p.fused_effective_k_points(1), p.effective_k_points());
+        assert!(p.fused_effective_k_points(2) <= p.fused_k_points(2));
+    }
+
+    #[test]
+    fn default_weights_respect_the_variant() {
+        // Const: uniform over support.
+        let p = pat(Shape::Star, 2, 1);
+        assert_eq!(p.default_weights(), p.uniform_weights());
+        // Sparse24: uniform over the pruned support, zeros elsewhere.
+        let p = p.with_coeffs(Coeffs::Sparse24);
+        let w = p.default_weights();
+        let nnz = w.iter().filter(|&&x| x != 0.0).count() as u64;
+        assert_eq!(nnz, p.effective_k_points());
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // Aniso: full geometric support, all distinct within a row, sums to 1.
+        let p = pat(Shape::Box, 2, 1).with_coeffs(Coeffs::Aniso);
+        let w = p.default_weights();
+        assert_eq!(w.iter().filter(|&&x| x != 0.0).count() as u64, p.k_points());
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[0] != w[2], "sign-asymmetric along last axis");
+        assert!(w[1] != w[3], "axis-asymmetric between axes");
+        assert!(w.iter().all(|&x| x >= 0.0));
     }
 }

@@ -54,8 +54,9 @@ pub fn span_to_json(s: &Span) -> Json {
             o.insert("shards".to_string(), num(*shards));
             o.insert("stall_ns".to_string(), num(*stall_ns));
         }
-        Payload::Kernel { name } => {
+        Payload::Kernel { name, nnz } => {
             o.insert("kernel".to_string(), Json::Str(name.clone()));
+            o.insert("nnz".to_string(), num(*nnz));
         }
         Payload::Job { steps, shards, model_err } => {
             o.insert("steps".to_string(), num(*steps));
@@ -127,7 +128,9 @@ pub fn span_from_json(j: &Json) -> Result<Span> {
             shards: get_u64(j, "shards")?,
             stall_ns: get_u64(j, "stall_ns")?,
         },
-        SpanKind::Kernel => Payload::Kernel { name: get_str(j, "kernel")? },
+        SpanKind::Kernel => {
+            Payload::Kernel { name: get_str(j, "kernel")?, nnz: get_u64(j, "nnz")? }
+        }
         SpanKind::Job => Payload::Job {
             steps: get_u64(j, "steps")?,
             shards: get_u64(j, "shards")?,
@@ -185,8 +188,9 @@ pub fn compact_spans(spans: &[Span]) -> Json {
                         o.insert("phase".to_string(), num(*index));
                         o.insert("stall_ns".to_string(), num(*stall_ns));
                     }
-                    Payload::Kernel { name } => {
+                    Payload::Kernel { name, nnz } => {
                         o.insert("kernel".to_string(), Json::Str(name.clone()));
+                        o.insert("nnz".to_string(), num(*nnz));
                     }
                     Payload::Plan { hit, .. } => {
                         o.insert("hit".to_string(), Json::Bool(*hit));
@@ -222,7 +226,7 @@ pub fn chrome_trace(spans: &[Span]) -> Json {
         let name = match &s.payload {
             Payload::Phase { index, shard, .. } => format!("phase{index}/shard{shard}"),
             Payload::Barrier { index, .. } => format!("barrier{index}"),
-            Payload::Kernel { name } => format!("kernel {name}"),
+            Payload::Kernel { name, .. } => format!("kernel {name}"),
             _ => s.kind.name().to_string(),
         };
         o.insert("name".to_string(), Json::Str(name));

@@ -160,6 +160,9 @@ pub enum Payload {
     Kernel {
         /// `"{shape}/{dtype}/{isa}"` or `"generic"`.
         name: String,
+        /// Effective non-zero taps per point update (pruned count for
+        /// 2:4-sparse patterns, geometric otherwise).
+        nnz: u64,
     },
     /// Whole-job summary attached to the `Job` span.
     Job {
@@ -427,7 +430,7 @@ mod tests {
                 SpanKind::Kernel,
                 now_ns(),
                 now_ns(),
-                Payload::Kernel { name: "generic".into() },
+                Payload::Kernel { name: "generic".into(), nnz: 5 },
             );
             set_worker(0);
         }

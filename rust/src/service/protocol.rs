@@ -20,12 +20,20 @@
 //! close_session  = "session": name
 //! stats          = [ "prom": true ]   (adds a Prometheus-text block)
 //! metrics        = (no fields — replies with the Prometheus text)
-//! jobspec        = [ "shape": "box"|"star" ], [ "d": 1..3 ], [ "r": n ],
+//! jobspec        = [ "pattern": "{shape}-{d}d{r}r[:{coeffs}]" ],
+//!                  [ "shape": "box"|"star" ], [ "d": 1..3 ], [ "r": n ],
+//!                  [ "coeffs": "const"|"aniso"|"varcoef"|"sparse24" ],
 //!                  [ "dtype": "float"|"double" ], [ "domain": [n...]|"NxM" ],
 //!                  [ "steps": n ], [ "t": depth ], [ "backend": kind ],
 //!                  [ "temporal": "auto"|"sweep"|"blocked" ],
 //!                  [ "shards": "auto"|n ],
 //!                  [ "threads": n ], [ "weights": [f64...] ]
+//!
+//! `"pattern"` is the compact grammar (`box-2d1r`, `star-3d1r:sparse24`)
+//! and takes precedence over `shape`/`d`/`r`; an explicit `"coeffs"`
+//! field overrides either form's coefficient variant.  Omitted weights
+//! default to the variant's canonical set (uniform, anisotropic, or
+//! 2:4-pruned uniform — `StencilPattern::default_weights`).
 //! response       = { "ok": true, "op": ..., ... }
 //!                | { "ok": false, "op": ..., "error": code, "message": ... }
 //! ```
@@ -49,7 +57,7 @@ use crate::backend::{BackendKind, TemporalMode};
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::grid::ShardSpec;
 use crate::model::perf::Dtype;
-use crate::model::stencil::{Shape, StencilPattern};
+use crate::model::stencil::{Coeffs, Shape, StencilPattern};
 use crate::util::json::Json;
 
 /// Workload description shared by `plan` and `create_session`.
@@ -175,13 +183,21 @@ impl JobSpec {
     /// same defaults as the CLI (`RunConfig::defaults`).
     pub fn parse(j: &Json) -> Result<JobSpec> {
         let domain = opt_domain(j, "domain")?;
-        let d = match opt_usize(j, "d")? {
-            Some(d) => d,
-            None => domain.as_ref().map(|dm| dm.len()).unwrap_or(2),
+        let mut pattern = match opt_str(j, "pattern") {
+            Some(s) => StencilPattern::parse(s)?,
+            None => {
+                let d = match opt_usize(j, "d")? {
+                    Some(d) => d,
+                    None => domain.as_ref().map(|dm| dm.len()).unwrap_or(2),
+                };
+                let r = opt_usize(j, "r")?.unwrap_or(1);
+                let shape = Shape::parse(opt_str(j, "shape").unwrap_or("box"))?;
+                StencilPattern::new(shape, d, r)?
+            }
         };
-        let r = opt_usize(j, "r")?.unwrap_or(1);
-        let shape = Shape::parse(opt_str(j, "shape").unwrap_or("box"))?;
-        let pattern = StencilPattern::new(shape, d, r)?;
+        if let Some(c) = opt_str(j, "coeffs") {
+            pattern = pattern.with_coeffs(Coeffs::parse(c)?);
+        }
         let domain = match domain {
             Some(dm) => dm,
             None => default_domain(pattern.d)?,
@@ -440,6 +456,34 @@ mod tests {
         // rank mismatch errors
         assert!(parse(r#"{"op":"plan","d":2,"domain":[8,8,8]}"#).is_err());
         assert!(parse(r#"{"op":"plan","domain":[8,0]}"#).is_err());
+    }
+
+    #[test]
+    fn jobspec_pattern_grammar_and_coeffs() {
+        use crate::model::stencil::Coeffs;
+        // compact grammar takes precedence over shape/d/r
+        let Request::Plan(s) =
+            parse(r#"{"op":"plan","pattern":"star-3d1r:sparse24","shape":"box","d":2}"#).unwrap()
+        else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.pattern.label(), "Star-3D1R:sparse24");
+        assert_eq!(s.pattern.coeffs, Coeffs::Sparse24);
+        assert_eq!(s.domain, vec![64, 64, 64], "default domain follows the pattern's d");
+        // standalone coeffs field applies to the shape/d/r form…
+        let Request::Plan(s) = parse(r#"{"op":"plan","coeffs":"varcoef"}"#).unwrap() else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.pattern.label(), "Box-2D1R:varcoef");
+        // …and overrides the grammar's suffix
+        let Request::Plan(s) =
+            parse(r#"{"op":"plan","pattern":"box-2d1r:sparse24","coeffs":"aniso"}"#).unwrap()
+        else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.pattern.coeffs, Coeffs::Aniso);
+        assert!(parse(r#"{"op":"plan","pattern":"hex-2d1r"}"#).is_err());
+        assert!(parse(r#"{"op":"plan","coeffs":"random"}"#).is_err());
     }
 
     #[test]

@@ -560,6 +560,16 @@ fn advance(
                 ));
             }
         };
+    // Variable-coefficient modulation is keyed on GLOBAL output indices
+    // (golden::vc_mod): a shard advancing a checked-out sub-field would
+    // modulate with shard-local flats and diverge from the oracle, so
+    // the fan-out collapses to a monolithic run regardless of the
+    // admitted shard count.
+    let job_shards = if spec.pattern.coeffs == crate::model::stencil::Coeffs::VarCoef {
+        1
+    } else {
+        job_shards
+    };
     let job = backend::Job {
         pattern: spec.pattern,
         dtype: spec.dtype,
@@ -658,7 +668,9 @@ fn advance(
         .bool_("downgraded", downgraded)
         .num("predicted_ms", predicted_ms)
         .num("wall_ms", metrics.wall_ns as f64 / 1e6)
-        .num("mstencils", metrics.throughput() / 1e6);
+        .num("mstencils", metrics.throughput() / 1e6)
+        .str_("coeffs", spec.pattern.coeffs.as_str())
+        .int("nnz", spec.pattern.effective_k_points());
     if !metrics.kernel.is_empty() {
         resp = resp
             .str_("kernel", &metrics.kernel)
@@ -1155,6 +1167,75 @@ mod tests {
         let a1 = req(&state, r#"{"op":"advance","session":"sh","steps":2,"t":1,"shards":1}"#);
         assert_ok(&a1);
         assert_eq!(a1.get("shards").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn sparse_pattern_session_reports_kernel_and_sparsity_fields() {
+        use crate::model::stencil::{Coeffs, Shape, StencilPattern};
+        use crate::sim::golden;
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"sp","pattern":"box-2d1r:sparse24",
+                "dtype":"double","domain":[12,12],"backend":"native","threads":1}"#,
+        ));
+        let a = req(&state, r#"{"op":"advance","session":"sp","steps":2,"t":1}"#);
+        assert_ok(&a);
+        // the sparsity plane rides in every advance reply: coefficient
+        // variant plus the effective (post-pruning) taps per update
+        assert_eq!(a.get("coeffs").unwrap().as_str(), Some("sparse24"));
+        assert_eq!(a.get("nnz").unwrap().as_usize(), Some(5), "2:4 keeps 5 of 9 box taps");
+        let kname = a.get("kernel").unwrap().as_str().unwrap();
+        assert!(
+            kname.starts_with("box-2d1r-sparse24/double/") || kname == "generic",
+            "kernel {kname}"
+        );
+        // bit-identity to the golden oracle over the pruned weight set
+        let f = req(&state, r#"{"op":"fetch","session":"sp","encoding":"hex"}"#);
+        let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+        let p = StencilPattern::new(Shape::Box, 2, 1).unwrap().with_coeffs(Coeffs::Sparse24);
+        let w = golden::Weights::new(2, 3, p.default_weights());
+        let want = golden::apply_steps(
+            &golden::Field::from_vec(&[12, 12], golden::gaussian(&[12, 12])),
+            &w,
+            2,
+        );
+        for (i, (a, b)) in got.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "point {i}");
+        }
+    }
+
+    #[test]
+    fn varcoef_session_collapses_fanout_and_matches_oracle() {
+        use crate::model::stencil::{Coeffs, Shape, StencilPattern};
+        use crate::sim::golden;
+        let s = svc();
+        let state = s.state();
+        // shards pinned to 4: per-point modulation is keyed on global
+        // indices, so the server must still run the job monolithically
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"vc","pattern":"star-2d1r:varcoef",
+                "dtype":"double","domain":[16,16],"backend":"native","temporal":"blocked",
+                "shards":4,"threads":1}"#,
+        ));
+        let a = req(&state, r#"{"op":"advance","session":"vc","steps":3,"t":2}"#);
+        assert_ok(&a);
+        assert_eq!(a.get("coeffs").unwrap().as_str(), Some("varcoef"));
+        assert_eq!(a.get("shards").unwrap().as_usize(), Some(1), "{a}");
+        let f = req(&state, r#"{"op":"fetch","session":"vc","encoding":"hex"}"#);
+        let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+        let p = StencilPattern::new(Shape::Star, 2, 1).unwrap().with_coeffs(Coeffs::VarCoef);
+        let w = golden::Weights::new(2, 3, p.default_weights());
+        let want = golden::apply_steps_varcoef(
+            &golden::Field::from_vec(&[16, 16], golden::gaussian(&[16, 16])),
+            &w,
+            3,
+        );
+        for (i, (a, b)) in got.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "point {i}");
+        }
     }
 
     #[test]

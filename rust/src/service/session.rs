@@ -73,7 +73,7 @@ impl Session {
                 }
                 w.clone()
             }
-            None => spec.pattern.uniform_weights(),
+            None => spec.pattern.default_weights(),
         };
         Ok(Session {
             name: name.to_string(),
@@ -196,6 +196,21 @@ mod tests {
         let mut sp = spec(vec![8, 8]);
         sp.weights = Some(vec![1.0; 4]);
         assert!(Session::create("c", &sp, &FieldInit::Zeros).is_err());
+    }
+
+    #[test]
+    fn default_weights_follow_the_coeff_variant() {
+        use crate::model::stencil::Coeffs;
+        // sparse24: omitted weights default to uniform over the PRUNED
+        // support, so the executor dispatches the pruned-tap arity.
+        let mut sp = spec(vec![8, 8]);
+        sp.pattern = StencilPattern::new(Shape::Box, 2, 1)
+            .unwrap()
+            .with_coeffs(Coeffs::Sparse24);
+        let s = Session::create("s24", &sp, &FieldInit::Zeros).unwrap();
+        let live: Vec<f64> = s.weights.iter().copied().filter(|&w| w != 0.0).collect();
+        assert_eq!(live.len(), 5, "2:4 pruning keeps 5 of box-2d1r's 9 taps");
+        assert!((live.iter().sum::<f64>() - 1.0).abs() < 1e-12);
     }
 
     #[test]

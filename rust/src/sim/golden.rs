@@ -207,6 +207,62 @@ pub fn apply_fused(x: &Field, w: &Weights, t: usize) -> Field {
     apply_once(x, &w.fuse(t))
 }
 
+/// Deterministic per-point coefficient modulation for variable-coefficient
+/// stencils: a hash of (output flat index, tap index) mapped into
+/// [0.5, 1.5). The tap index is the position of the tap in
+/// [`Weights::offsets`] — the canonical enumeration every backend
+/// mirrors — so oracle and executor agree on which factor scales which
+/// tap. Only the low 16 product bits are kept, so the value is identical
+/// on every platform with usize ≥ 32 bits.
+pub fn vc_mod(flat: usize, tap: usize) -> f64 {
+    let h = flat
+        .wrapping_mul(0x9E37_79B1)
+        .wrapping_add(tap.wrapping_mul(0x85EB_CA77))
+        & 0xFFFF;
+    0.5 + h as f64 / 65536.0
+}
+
+/// One variable-coefficient application with zero halo: tap `j`'s
+/// effective weight at output point `flat` is `w_j · vc_mod(flat, j)`,
+/// multiplied out *before* the tap's multiply-accumulate so the
+/// per-point accumulation chain is `acc + (w·m)·v`, left to right in
+/// offsets order — the exact recipe the native backend replays.
+pub fn apply_once_varcoef(x: &Field, w: &Weights) -> Field {
+    assert_eq!(x.dims.len(), w.d);
+    let mut out = Field::zeros(&x.dims);
+    let offsets = w.offsets();
+    let dims = x.dims.clone();
+    let strides = x.strides();
+    let mut idx = vec![0i64; w.d];
+    let mut nb = vec![0i64; w.d];
+    for flat in 0..out.len() {
+        let mut rem = flat;
+        for k in (0..w.d).rev() {
+            idx[k] = (rem % dims[k]) as i64;
+            rem /= dims[k];
+        }
+        let mut acc = 0.0;
+        for (j, (off, wv)) in offsets.iter().enumerate() {
+            for k in 0..w.d {
+                nb[k] = idx[k] + off[k];
+            }
+            acc += (wv * vc_mod(flat, j)) * x.at_or_zero(&nb, &strides);
+        }
+        out.data[flat] = acc;
+    }
+    out
+}
+
+/// t sequential variable-coefficient steps (the modulation field is
+/// time-invariant: every step applies the same per-point factors).
+pub fn apply_steps_varcoef(x: &Field, w: &Weights, t: usize) -> Field {
+    let mut cur = x.clone();
+    for _ in 0..t {
+        cur = apply_once_varcoef(&cur, w);
+    }
+    cur
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +348,107 @@ mod tests {
         assert!(x.max_abs_diff(&y) < 1e-15);
         let z = apply_steps(&x, &box_avg(3, 1), 2);
         assert_eq!(z.dims, vec![6, 6, 6]);
+    }
+
+    #[test]
+    fn vc_mod_is_deterministic_and_bounded() {
+        // hand-walked low 16 bits of flat·0x9E3779B1 + tap·0x85EBCA77
+        assert_eq!(vc_mod(0, 0), 0.5); // h = 0
+        assert_eq!(vc_mod(0, 1), 0.5 + 51831.0 / 65536.0);
+        assert_eq!(vc_mod(1, 0), 0.5 + 31153.0 / 65536.0);
+        assert_eq!(vc_mod(2, 1), 0.5 + 48601.0 / 65536.0);
+        for flat in 0..64 {
+            for tap in 0..8 {
+                let m = vc_mod(flat, tap);
+                assert!((0.5..1.5).contains(&m));
+                assert_eq!(m, vc_mod(flat, tap), "pure function");
+            }
+        }
+    }
+
+    #[test]
+    fn varcoef_1d_three_point_fixture() {
+        // w = [0.2, 0.5, 0.3] over x = [1, 2, 3], zero halo.  Expected
+        // values hand-derived from the pinned vc_mod table above, e.g.
+        // out[0] = 0.5·(0.5+17448/65536)·... — exact decimal reprs.
+        let w = Weights::new(1, 3, vec![0.2, 0.5, 0.3]);
+        let x = Field::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let y = apply_once_varcoef(&x, &w);
+        assert_eq!(y.data, vec![1.2944931030273437, 1.4627090454101561, 2.442674255371094]);
+    }
+
+    #[test]
+    fn varcoef_star_2d_delta_fixture() {
+        // Star-2D1R uniform (1/5 per tap) applied to a unit impulse at
+        // the center of a 3×3 field: out[p] = 0.2·vc_mod(p, j(p)) on the
+        // 5 support points, 0 elsewhere.
+        let mut data = vec![0.0; 9];
+        for i in [1, 3, 4, 5, 7] {
+            data[i] = 0.2;
+        }
+        let w = Weights::new(2, 3, data);
+        let mut x = Field::zeros(&[3, 3]);
+        x.data[4] = 1.0;
+        let y = apply_once_varcoef(&x, &w);
+        let expect = [
+            0.0,
+            0.22777404785156252,
+            0.0,
+            0.2597412109375,
+            0.19663696289062502,
+            0.13353271484375,
+            0.0,
+            0.1654998779296875,
+            0.0,
+        ];
+        assert_eq!(y.data, expect);
+    }
+
+    #[test]
+    fn sparse24_1d_fixture_runs_through_plain_apply() {
+        // 2:4-pruned star-1d1r keeps offsets {-1, 0} with weight 1/2
+        // each; the pruned kernel is just a Weights with zeros dropped,
+        // so the *dense* oracle applies unchanged: out = (x[i-1]+x[i])/2.
+        use crate::model::stencil::{Coeffs, Shape, StencilPattern};
+        let p = StencilPattern::new(Shape::Star, 1, 1)
+            .unwrap()
+            .with_coeffs(Coeffs::Sparse24);
+        let wv = p.default_weights();
+        assert_eq!(wv, vec![0.5, 0.5, 0.0]);
+        let w = Weights::new(1, 3, wv);
+        assert_eq!(w.offsets().len() as u64, p.effective_k_points());
+        let x = Field::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = apply_once(&x, &w);
+        assert_eq!(y.data, vec![0.5, 1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn aniso_1d_fixture() {
+        // Aniso star-1d1r weights: raw factors (1.1 + off/8) for off in
+        // {-1,0,1} → [0.975, 1.1, 1.225]/3.3, applied to [2, 4, 6].
+        use crate::model::stencil::{Coeffs, Shape, StencilPattern};
+        let p = StencilPattern::new(Shape::Star, 1, 1)
+            .unwrap()
+            .with_coeffs(Coeffs::Aniso);
+        let wv = p.default_weights();
+        assert_eq!(wv, vec![0.29545454545454547, 0.3333333333333333, 0.3712121212121212]);
+        let w = Weights::new(1, 3, wv);
+        let x = Field::from_vec(&[3], vec![2.0, 4.0, 6.0]);
+        let y = apply_once(&x, &w);
+        assert_eq!(y.data, vec![2.1515151515151514, 4.151515151515152, 3.1818181818181817]);
+    }
+
+    #[test]
+    fn varcoef_steps_compose_single_applications() {
+        let mut rng = Rng::new(11);
+        let x = rand_field(&mut rng, &[7, 5]);
+        let w = box_avg(2, 1);
+        let once = apply_once_varcoef(&x, &w);
+        let twice = apply_once_varcoef(&once, &w);
+        let stepped = apply_steps_varcoef(&x, &w, 2);
+        assert_eq!(twice.data, stepped.data);
+        // and it genuinely differs from the constant-coefficient result
+        assert!(apply_steps(&x, &w, 2).max_abs_diff(&stepped) > 1e-6);
     }
 
     #[test]

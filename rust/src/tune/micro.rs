@@ -253,7 +253,9 @@ fn probe_job(
         steps: opts.steps.max(t),
         t,
         temporal,
-        weights: pattern.uniform_weights(),
+        // default_weights follows the coefficient variant, so sparse24
+        // probe shapes measure the pruned-tap arity the planner prices
+        weights: pattern.default_weights(),
         threads: opts.threads.max(1),
     };
     let mut be = NativeBackend::new();

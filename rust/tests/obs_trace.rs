@@ -328,7 +328,10 @@ fn monolithic_run_records_the_kernel_span() {
     let kernel: Vec<&Span> = spans.iter().filter(|s| s.kind == SpanKind::Kernel).collect();
     assert_eq!(kernel.len(), 1, "one kernel-dispatch span per monolithic run");
     match &kernel[0].payload {
-        Payload::Kernel { name } => assert_eq!(name, &m.kernel),
+        Payload::Kernel { name, nnz } => {
+            assert_eq!(name, &m.kernel);
+            assert_eq!(*nnz, 5, "star-2d1r executes five taps per point");
+        }
         p => panic!("kernel span carries {p:?}"),
     }
     // The compact reply block keeps the dashboard sort keys.

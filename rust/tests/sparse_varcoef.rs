@@ -1,0 +1,411 @@
+//! Sparse and variable-coefficient stencils, end to end.
+//!
+//! Execution: for every coefficient variant (aniso, varcoef, sparse24)
+//! across shapes, dtypes, odd/prime domains, fused depths, temporal
+//! realizations, and shard fan-outs, the dispatched executor
+//! (`KernelMode::Auto`) must be BIT-IDENTICAL to the generic
+//! offset-list loop (`KernelMode::Generic`) — and, in f64, to the
+//! golden oracle (`apply_steps_varcoef` for varcoef, the standard
+//! fused/sequential chains otherwise).  Modes are pinned via
+//! `with_mode`, so the suite holds under any `STENCILCTL_KERNELS`
+//! environment (CI runs it both ways).
+//!
+//! Planning: the sparsity-expanded profitable region (§4.3 — SpTC
+//! doubles ℙ at unchanged S) must flip a dense-vs-sparse candidate
+//! decision exactly where `model::sparsity` predicts, and the 2:4
+//! pruning of the pattern itself must move a compute-bound dense job
+//! back under the ridge.  The pinned constants here are machine-checked
+//! by the independent Python port in python/tests/test_planner_sparse.py.
+
+use tc_stencil::backend::kernels::KernelMode;
+use tc_stencil::backend::{self, Backend, NativeBackend, TemporalMode};
+use tc_stencil::coordinator::grid::{ShardPlan, ShardSpec};
+use tc_stencil::coordinator::planner::{self, Request};
+use tc_stencil::coordinator::scheduler;
+use tc_stencil::hardware::Gpu;
+use tc_stencil::model::perf::{Dtype, Unit, Workload};
+use tc_stencil::model::roofline::Bound;
+use tc_stencil::model::stencil::{Coeffs, Shape, StencilPattern};
+use tc_stencil::sim::golden;
+
+/// Odd / prime sides so tile and interior windows never divide evenly.
+fn awkward_domain(d: usize) -> Vec<usize> {
+    match d {
+        1 => vec![101],
+        2 => vec![19, 23],
+        _ => vec![7, 11, 13],
+    }
+}
+
+fn advance_with(mode: KernelMode, job: &backend::Job, init: &[f64]) -> (Vec<f64>, String) {
+    let mut field = init.to_vec();
+    let m = NativeBackend::with_mode(mode).advance(job, &mut field).unwrap();
+    (field, m.kernel)
+}
+
+/// The f64 golden oracle for a coefficient-variant job: varcoef always
+/// chains modulated base steps (fused varcoef sweeps are rejected at
+/// validation; the blocked path runs base steps per tile), const-weight
+/// variants follow the usual fused-sweep / sequential-blocked split.
+fn oracle(job: &backend::Job, init: &[f64]) -> Vec<f64> {
+    let side = 2 * job.pattern.r + 1;
+    let w = golden::Weights::new(job.pattern.d, side, job.weights.clone());
+    let mut want = golden::Field::from_vec(&job.domain, init.to_vec());
+    if job.pattern.coeffs == Coeffs::VarCoef {
+        want = golden::apply_steps_varcoef(&want, &w, job.steps);
+    } else if job.temporal == TemporalMode::Blocked {
+        want = golden::apply_steps(&want, &w, job.steps);
+    } else {
+        for _ in 0..job.steps / job.t {
+            want = golden::apply_fused(&want, &w, job.t);
+        }
+        for _ in 0..job.steps % job.t {
+            want = golden::apply_once(&want, &w);
+        }
+    }
+    want.data
+}
+
+fn assert_bits(got: &[f64], want: &[f64], label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: point {i}: {a} vs {b}");
+    }
+}
+
+/// Deterministic non-trivial initial field (plain LCG; golden::gaussian
+/// would hide sign/asymmetry mistakes behind its symmetry).
+fn init_field(n: usize, seed: u64) -> Vec<f64> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole sweep: specialized ≡ generic ≡ oracle across the full
+// pattern × dtype × t × temporal grid (≥100 cases).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coeff_variants_match_generic_and_oracle_across_the_grid() {
+    let variants: Vec<StencilPattern> = [
+        (Shape::Star, 1, Coeffs::Aniso),
+        (Shape::Star, 1, Coeffs::VarCoef),
+        (Shape::Star, 1, Coeffs::Sparse24),
+        (Shape::Star, 2, Coeffs::Aniso),
+        (Shape::Star, 2, Coeffs::VarCoef),
+        (Shape::Star, 2, Coeffs::Sparse24),
+        (Shape::Box, 2, Coeffs::Aniso),
+        (Shape::Box, 2, Coeffs::VarCoef),
+        (Shape::Box, 2, Coeffs::Sparse24),
+        (Shape::Star, 3, Coeffs::Sparse24),
+        (Shape::Box, 3, Coeffs::Sparse24),
+    ]
+    .iter()
+    .map(|&(s, d, c)| StencilPattern::new(s, d, 1).unwrap().with_coeffs(c))
+    .collect();
+    let mut cases = 0usize;
+    for pattern in variants {
+        let domain = awkward_domain(pattern.d);
+        let n: usize = domain.iter().product();
+        let weights = pattern.default_weights();
+        let init = init_field(n, 0xC0FFEE ^ pattern.k_points());
+        for dtype in [Dtype::F32, Dtype::F64] {
+            // f32 jobs quantize through f32 state; pre-round the field
+            // so the oracle comparison below stays meaningful.
+            let init: Vec<f64> = match dtype {
+                Dtype::F32 => init.iter().map(|&v| v as f32 as f64).collect(),
+                Dtype::F64 => init.clone(),
+            };
+            for t in 1..=4usize {
+                for temporal in [TemporalMode::Sweep, TemporalMode::Blocked] {
+                    if pattern.coeffs == Coeffs::VarCoef
+                        && temporal == TemporalMode::Sweep
+                        && t > 1
+                    {
+                        // fused varcoef sweeps are rejected at validation
+                        continue;
+                    }
+                    let steps = 2 * t + 1; // whole launches plus a remainder
+                    let job = backend::Job {
+                        pattern,
+                        dtype,
+                        domain: domain.clone(),
+                        steps,
+                        t,
+                        temporal,
+                        weights: weights.clone(),
+                        threads: 2,
+                    };
+                    let label = format!(
+                        "{} {} t={t} {}",
+                        pattern.label(),
+                        dtype.as_str(),
+                        temporal.as_str()
+                    );
+                    let (auto_f, auto_k) = advance_with(KernelMode::Auto, &job, &init);
+                    let (gen_f, gen_k) = advance_with(KernelMode::Generic, &job, &init);
+                    assert_eq!(auto_f, gen_f, "{label}: auto vs generic bits differ");
+                    assert_eq!(gen_k, "generic", "{label}");
+                    if dtype == Dtype::F64 {
+                        assert_bits(&auto_f, &oracle(&job, &init), &label);
+                    }
+                    // sparse24 dispatch resolves the PRUNED arity: the
+                    // kernel name carries the coeffs-suffixed shape key
+                    if auto_k != "generic" && pattern.coeffs == Coeffs::Sparse24 {
+                        let want = format!(
+                            "{}-{}d1r-sparse24/{}/",
+                            pattern.shape.as_str(),
+                            pattern.d,
+                            dtype.as_str()
+                        );
+                        assert!(auto_k.starts_with(&want), "{label}: kernel {auto_k}");
+                    }
+                    cases += 1;
+                }
+            }
+        }
+    }
+    assert!(cases >= 100, "property grid shrank to {cases} cases");
+}
+
+// ---------------------------------------------------------------------------
+// Shard plane: fan-outs stay bit-identical for the const-weight
+// variants (varcoef is global-index-keyed and always runs monolithic —
+// enforced by the CLI and the serve daemon, asserted in their tests).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_fanout_stays_bit_identical_for_sparse_and_aniso() {
+    for coeffs in [Coeffs::Aniso, Coeffs::Sparse24] {
+        for (shape, d) in [(Shape::Box, 2), (Shape::Star, 2), (Shape::Box, 3)] {
+            let pattern = StencilPattern::new(shape, d, 1).unwrap().with_coeffs(coeffs);
+            let domain = match d {
+                2 => vec![29, 17],
+                _ => vec![13, 7, 11],
+            };
+            let n: usize = domain.iter().product();
+            let init = init_field(n, 0x5EED ^ pattern.k_points());
+            for t in 1..=2usize {
+                for shards in 2..=4usize {
+                    let job = backend::Job {
+                        pattern,
+                        dtype: Dtype::F64,
+                        domain: domain.clone(),
+                        steps: 2 * t,
+                        t,
+                        temporal: TemporalMode::Sweep,
+                        weights: pattern.default_weights(),
+                        threads: 1,
+                    };
+                    let label =
+                        format!("{} t={t} shards={shards}", pattern.label());
+                    let plan =
+                        ShardPlan::dim0(&domain, shards, pattern.r, t).unwrap();
+                    let mut fanned = init.clone();
+                    scheduler::advance_sharded(&job, &plan, &mut fanned, 2).unwrap();
+                    let (mono, _) = advance_with(KernelMode::Auto, &job, &init);
+                    assert_bits(&fanned, &mono, &label);
+                    assert_bits(&fanned, &oracle(&job, &init), &label);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ARITIES-miss fallback: arbitrary user weight sets — including
+// degenerate all-zero and single-tap patterns — must fall back to the
+// generic loop cleanly (no panic) and stay correct.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn arities_miss_falls_back_cleanly_for_arbitrary_weight_sets() {
+    let pattern = StencilPattern::new(Shape::Box, 2, 1).unwrap();
+    let domain = vec![17, 19];
+    let n: usize = domain.iter().product();
+    let init = init_field(n, 0xFA11);
+    // live-tap counts off the registered ARITIES table (8), on it via a
+    // shape the registry never specialized (3 on a box), and degenerate
+    // (0 = all-zero stencil, 1 = single off-center tap).
+    let sets: Vec<(usize, Vec<f64>)> = vec![
+        (8, {
+            let mut w = vec![0.125; 9];
+            w[4] = 0.0; // drop the center: 8 taps, not in ARITIES
+            w
+        }),
+        (3, vec![0.0, 0.5, 0.0, 0.25, 0.0, 0.0, 0.0, 0.25, 0.0]),
+        (0, vec![0.0; 9]),
+        (1, {
+            let mut w = vec![0.0; 9];
+            w[2] = 1.0; // single corner tap
+            w
+        }),
+    ];
+    for (nnz, weights) in sets {
+        for temporal in [TemporalMode::Sweep, TemporalMode::Blocked] {
+            let job = backend::Job {
+                pattern,
+                dtype: Dtype::F64,
+                domain: domain.clone(),
+                steps: 3,
+                t: 2,
+                temporal,
+                weights: weights.clone(),
+                threads: 2,
+            };
+            let label = format!("nnz={nnz} {}", temporal.as_str());
+            let (auto_f, _) = advance_with(KernelMode::Auto, &job, &init);
+            let (gen_f, _) = advance_with(KernelMode::Generic, &job, &init);
+            assert_eq!(auto_f, gen_f, "{label}: auto vs generic bits differ");
+            assert_bits(&auto_f, &oracle(&job, &init), &label);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Planner: the sparsity-expanded region and the pruned-pattern flip.
+// ---------------------------------------------------------------------------
+
+fn plan_req(coeffs: Coeffs, dtype: Dtype, max_t: usize, temporal: TemporalMode) -> Request {
+    Request {
+        pattern: StencilPattern::new(Shape::Box, 2, 1).unwrap().with_coeffs(coeffs),
+        dtype,
+        domain: vec![256, 256],
+        steps: 64,
+        gpu: Gpu::a100(),
+        backend: backend::BackendKind::Auto,
+        max_t,
+        temporal,
+        shards: ShardSpec::Fixed(1),
+        lanes: 1,
+        threads: 1,
+        kernels: KernelMode::Auto,
+        kernel_peaks: Vec::new(),
+    }
+}
+
+fn engines_of(plan: &planner::Plan) -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = std::iter::once(&plan.chosen)
+        .chain(plan.alternatives.iter())
+        .map(|c| c.engine.name)
+        .collect();
+    names.sort_unstable();
+    names.dedup();
+    names
+}
+
+/// §4.3: doubled SpTC ℙ at unchanged S expands the profitable region —
+/// on A100/f32 the dense box-2d1r crosses from ConvStencil (TC) to
+/// SPIDER (SpTC) exactly between max_t 6 and 7.  The same constants are
+/// machine-checked by python/tests/test_planner_sparse.py.
+#[test]
+fn sparsity_expanded_region_flips_dense_tc_to_sptc_at_depth_seven() {
+    let at6 = planner::plan(&plan_req(Coeffs::Const, Dtype::F32, 6, TemporalMode::Auto), None)
+        .unwrap();
+    assert_eq!(at6.chosen.engine.name, "ConvStencil", "max_t=6 stays dense TC");
+    assert_eq!(at6.chosen.t, 6);
+    for mt in [7usize, 8] {
+        let p = planner::plan(&plan_req(Coeffs::Const, Dtype::F32, mt, TemporalMode::Auto), None)
+            .unwrap();
+        assert_eq!(p.chosen.engine.name, "SPIDER", "max_t={mt} crosses into SpTC");
+        assert_eq!(p.chosen.engine.unit, Unit::SparseTensorCore);
+        assert_eq!(p.chosen.t, mt);
+        assert_eq!(p.chosen.temporal, TemporalMode::Sweep);
+    }
+}
+
+/// The 2:4-pruned pattern halves K (9→5 taps) and drops the blocked
+/// intensity t·K/D back under the CUDA ridge at t=8 (I = 10.00 <
+/// 10.08): the dense job's SpTC winner gives way to a memory-bound
+/// scalar EBISU plan whose throughput the roofline pins exactly.
+#[test]
+fn pruned_pattern_flips_the_dense_sptc_choice_back_to_scalar() {
+    let p = planner::plan(&plan_req(Coeffs::Sparse24, Dtype::F32, 8, TemporalMode::Auto), None)
+        .unwrap();
+    assert_eq!(p.chosen.engine.name, "EBISU");
+    assert_eq!(p.chosen.t, 8);
+    assert_eq!(p.chosen.temporal, TemporalMode::Blocked);
+    assert_eq!(p.chosen.prediction.bound, Bound::Memory);
+    // pruned intensity: t·K_eff/D = 8·5/4 = 10.00 exactly
+    assert_eq!(p.chosen.prediction.intensity, 10.0);
+    // memory-bound blocked throughput: η_mem·𝔹·I / (2·K_eff)
+    let want = 0.72 * (1.935e12 * 10.0) / (2.0 * 5.0);
+    let got = p.chosen.prediction.throughput;
+    assert!(
+        (got / want - 1.0).abs() < 1e-12,
+        "throughput {got:.6e} vs pinned {want:.6e}"
+    );
+    // ...and the dense pattern at the same depth is NOT memory-bound on
+    // the scalar path (I = 8·9/4 = 18 > ridge 10.08): pruning alone
+    // moved the job across the ridge.
+    let roof = Gpu::a100().roof(Unit::CudaCore, Dtype::F32).unwrap();
+    let dense = Workload::new(StencilPattern::new(Shape::Box, 2, 1).unwrap(), 8, Dtype::F32);
+    assert!(dense.intensity_cuda() > roof.ridge());
+    assert!(10.0 < roof.ridge());
+}
+
+/// Candidate admission per coefficient variant: sparse24 keeps SpTC
+/// engines and drops dense-TC ones; varcoef is scalar-only.
+#[test]
+fn candidate_sets_respect_the_coeff_variant() {
+    let sparse =
+        planner::plan(&plan_req(Coeffs::Sparse24, Dtype::F32, 8, TemporalMode::Auto), None)
+            .unwrap();
+    let names = engines_of(&sparse);
+    assert!(names.contains(&"SPIDER"), "{names:?}");
+    assert!(names.contains(&"SparStencil"), "{names:?}");
+    for dense_tc in ["TCStencil", "ConvStencil", "LoRAStencil"] {
+        assert!(!names.contains(&dense_tc), "{dense_tc} priced for a 2:4 pattern");
+    }
+    let var = planner::plan(&plan_req(Coeffs::VarCoef, Dtype::F32, 8, TemporalMode::Auto), None)
+        .unwrap();
+    for c in std::iter::once(&var.chosen).chain(var.alternatives.iter()) {
+        assert_eq!(c.engine.unit, Unit::CudaCore, "{} priced for varcoef", c.engine.name);
+        if c.temporal == TemporalMode::Sweep {
+            assert_eq!(c.t, 1, "fused varcoef sweep candidate {}", c.engine.name);
+        }
+    }
+}
+
+/// The coefficient axis is part of the plan identity: same geometry,
+/// different coeffs, different `PlanKey`.
+#[test]
+fn plan_key_carries_the_coeffs_axis() {
+    let base = plan_req(Coeffs::Const, Dtype::F32, 8, TemporalMode::Auto);
+    let sparse = plan_req(Coeffs::Sparse24, Dtype::F32, 8, TemporalMode::Auto);
+    let var = plan_req(Coeffs::VarCoef, Dtype::F32, 8, TemporalMode::Auto);
+    let keys = [
+        base.plan_key().canonical(),
+        sparse.plan_key().canonical(),
+        var.plan_key().canonical(),
+    ];
+    assert_ne!(keys[0], keys[1]);
+    assert_ne!(keys[0], keys[2]);
+    assert_ne!(keys[1], keys[2]);
+    assert!(keys[1].contains("sparse24"), "{}", keys[1]);
+}
+
+/// The effective-count plumbing the planner prices with: 2:4 pruning of
+/// box-2d1r keeps {(-1,-1),(-1,0),(0,0),(0,1),(1,1)} — 5 taps — and the
+/// fused pruned support grows as the Minkowski powers 5,12,22,35,…
+#[test]
+fn effective_counts_match_the_hand_derived_pruning() {
+    let b = StencilPattern::new(Shape::Box, 2, 1).unwrap().with_coeffs(Coeffs::Sparse24);
+    assert_eq!(b.effective_k_points(), 5);
+    let fused: Vec<u64> = (1..=8).map(|t| b.fused_effective_k_points(t)).collect();
+    assert_eq!(fused, vec![5, 12, 22, 35, 51, 70, 92, 117]);
+    // α_eff(8) = 117/(8·5) = 2.925 < dense α(8) = 289/72 ≈ 4.014
+    let w = Workload::new(b, 8, Dtype::F32);
+    assert!((w.alpha() - 2.925).abs() < 1e-12);
+    let s = StencilPattern::new(Shape::Star, 2, 1).unwrap().with_coeffs(Coeffs::Sparse24);
+    assert_eq!(s.effective_k_points(), 4);
+    // const-weight patterns keep the geometric counts
+    let dense = StencilPattern::new(Shape::Box, 2, 1).unwrap();
+    assert_eq!(dense.effective_k_points(), 9);
+    assert_eq!(dense.fused_effective_k_points(2), 25);
+}
