@@ -1,19 +1,23 @@
-//! Service-layer throughput: jobs/sec and p50/p99 request latency
-//! through the bounded queue + worker pool, cold vs warm plan cache, on
-//! the paper's workhorse shapes (star-2d, heat-3d) — plus the sharded
-//! large-domain bar: the same session advanced with `shards:1`
-//! (monolithic) vs `shards:auto` (the planner's redundancy-adjusted
-//! fan-out across the pool).  Each client thread owns a session and
-//! streams `advance` requests through the same [`handle_line`] path a
-//! TCP connection uses — so the numbers include protocol parsing,
-//! planning/cache, admission, shard fan-out, and reply.
+//! Multi-tenant service throughput under overload: a zipfian tenant
+//! mix driving 2× more concurrent clients than workers through the
+//! full `handle_line` path (protocol parse, plan/cache, DRR admission,
+//! queue, reply), with the p99 request latency as the headline — plus
+//! two serving-plane bars:
+//!
+//! * **batched vs unbatched** — N concurrent identical-PlanKey
+//!   advances with and without a coalescing window: the batched column
+//!   pays ONE plan-cache lookup per round where the unbatched one pays
+//!   N, at identical (bit-exact) results;
+//! * **tiered vs resident** — the same interleaved session stream with
+//!   and without a `--resident-bytes` cap small enough to spill every
+//!   idle session, pricing the hex-f64 spill/restore round-trip.
 //!
 //! Run with: `cargo bench --bench service_throughput` (BENCH_FAST=1 for
 //! CI).  Emits BENCH_service.json (via `util::bench::write_bench_json`)
 //! for EXPERIMENTS.md-style tracking.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
 use tc_stencil::service::server::{handle_line, ServeOpts, Service, ServiceState};
@@ -21,95 +25,244 @@ use tc_stencil::util::bench::write_bench_json;
 use tc_stencil::util::json::Json;
 use tc_stencil::util::stats;
 
-struct ShapeCase {
-    name: &'static str,
-    shape: &'static str,
-    d: usize,
-    domain: &'static str,
-    steps: usize,
-}
-
 fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
-fn run_case(case: &ShapeCase, clients: usize, per_client: usize) -> Json {
-    let svc = Service::start(ServeOpts {
-        workers: std::thread::available_parallelism().map(|n| n.get().min(4)).unwrap_or(2),
+fn opts(workers: usize) -> ServeOpts {
+    ServeOpts {
+        workers,
         max_queue: 256,
         artifacts_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
         ..Default::default()
-    });
+    }
+}
+
+fn stats_json(state: &Arc<ServiceState>) -> Json {
+    let (resp, _) = handle_line(state, r#"{"op":"stats"}"#);
+    Json::parse_line(&resp).expect("stats reply")
+}
+
+/// Deterministic LCG (no wall-clock seeding: benches must replay).
+fn lcg(s: &mut u64) -> f64 {
+    *s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*s >> 11) as f64) / ((1u64 << 53) as f64)
+}
+
+/// Zipf(1) tenant sampler: tenant k carries weight 1/(k+1).
+fn zipf_cdf(tenants: usize) -> Vec<f64> {
+    let w: Vec<f64> = (0..tenants).map(|k| 1.0 / (k + 1) as f64).collect();
+    let total: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    w.iter()
+        .map(|x| {
+            acc += x / total;
+            acc
+        })
+        .collect()
+}
+
+/// Headline: `2×workers` concurrent clients stream a zipfian tenant
+/// mix — sustained overload, so DRR has contention to arbitrate.  Every
+/// client owns one session per tenant (sessions are single-flight; the
+/// tenant label is what admission and accounting key on).
+fn run_zipfian_overload(tenants: usize, per_client: usize) -> Json {
+    let workers = std::thread::available_parallelism().map(|n| n.get().min(4)).unwrap_or(2);
+    let clients = workers * 2;
+    let svc = Service::start(opts(workers));
     let state: Arc<ServiceState> = svc.state();
-    let create = |name: &str| {
-        format!(
-            r#"{{"op":"create_session","session":"{name}","shape":"{}","d":{},"r":1,"dtype":"double","domain":"{}","backend":"native","threads":1}}"#,
-            case.shape, case.d, case.domain
-        )
-    };
-    let advance =
-        |name: &str| format!(r#"{{"op":"advance","session":"{name}","steps":{}}}"#, case.steps);
-
-    // Cold: the very first advance pays the planner (cache miss).
-    let (resp, _) = handle_line(&state, &create("cold"));
-    assert!(resp.contains("\"ok\":true"), "{resp}");
-    let t0 = Instant::now();
-    let (resp, _) = handle_line(&state, &advance("cold"));
-    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
-    assert!(resp.contains("\"cache\":\"miss\""), "{resp}");
-
-    // Warm: concurrent clients stream advances; every plan is a hit.
+    let cdf = Arc::new(zipf_cdf(tenants));
     let wall0 = Instant::now();
     let handles: Vec<_> = (0..clients)
         .map(|ci| {
             let state = state.clone();
-            let name = format!("warm{ci}");
-            let create = create(&name);
-            let advance = advance(&name);
+            let cdf = cdf.clone();
             std::thread::spawn(move || {
-                let (resp, _) = handle_line(&state, &create);
-                assert!(resp.contains("\"ok\":true"), "{resp}");
-                let mut lat_ns = Vec::with_capacity(per_client);
-                for _ in 0..per_client {
-                    let t0 = Instant::now();
-                    let (resp, _) = handle_line(&state, &advance);
-                    lat_ns.push(t0.elapsed().as_nanos() as f64);
+                for k in 0..tenants {
+                    let (resp, _) = handle_line(
+                        &state,
+                        &format!(
+                            r#"{{"op":"create_session","session":"z{ci}x{k}","shape":"star","d":2,"r":1,"dtype":"double","domain":"96x96","backend":"native","threads":1,"shards":1,"tenant":"tenant{k}"}}"#
+                        ),
+                    );
                     assert!(resp.contains("\"ok\":true"), "{resp}");
                 }
-                lat_ns
+                let mut seed = 0x9e3779b97f4a7c15u64 ^ (ci as u64) << 32;
+                let mut lat_ns = Vec::with_capacity(per_client);
+                let mut refused = 0usize;
+                for _ in 0..per_client {
+                    let u = lcg(&mut seed);
+                    let k = cdf.iter().position(|c| u <= *c).unwrap_or(tenants - 1);
+                    let line =
+                        format!(r#"{{"op":"advance","session":"z{ci}x{k}","steps":2,"t":1}}"#);
+                    let t0 = Instant::now();
+                    let (resp, _) = handle_line(&state, &line);
+                    if resp.contains("\"ok\":true") {
+                        lat_ns.push(t0.elapsed().as_nanos() as f64);
+                    } else {
+                        refused += 1; // fair-share deferral under pressure
+                    }
+                }
+                (lat_ns, refused)
             })
         })
         .collect();
-    let lat_ns: Vec<f64> =
-        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect();
+    let mut lat_ns = Vec::new();
+    let mut refused = 0usize;
+    for h in handles {
+        let (l, r) = h.join().expect("client thread");
+        lat_ns.extend(l);
+        refused += r;
+    }
     let wall_s = wall0.elapsed().as_secs_f64();
-
     let jobs = lat_ns.len();
-    let jobs_per_sec = jobs as f64 / wall_s;
     let p50_ms = stats::percentile(&lat_ns, 50.0) / 1e6;
     let p99_ms = stats::percentile(&lat_ns, 99.0) / 1e6;
-    let snap = state.counters.snapshot();
+    let st = stats_json(&state);
+    let tenant_rows: Vec<Json> = st
+        .get("tenants")
+        .and_then(|t| t.as_arr().map(|a| a.to_vec()))
+        .unwrap_or_default();
     println!(
-        "{:<18} {jobs:>5} jobs  {jobs_per_sec:>9.1} jobs/s  cold {cold_ms:>8.3} ms  \
-         p50 {p50_ms:>7.3} ms  p99 {p99_ms:>7.3} ms  plan hits {}/{}",
-        case.name,
-        snap.plan_hits,
-        snap.plan_hits + snap.plan_misses,
+        "zipfian overload: {tenants} tenants, {clients} clients vs {workers} workers: \
+         {jobs} ok + {refused} deferred  {:.1} jobs/s  p50 {p50_ms:.3} ms  p99 {p99_ms:.3} ms",
+        jobs as f64 / wall_s
     );
-    assert!(snap.plan_hits > 0, "warm runs must hit the plan cache");
-    drop(svc); // shutdown: close queue, join workers
+    drop(svc);
     obj(vec![
-        ("shape", Json::Str(case.name.to_string())),
-        ("domain", Json::Str(case.domain.to_string())),
-        ("steps", Json::Num(case.steps as f64)),
+        ("tenants", Json::Num(tenants as f64)),
+        ("workers", Json::Num(workers as f64)),
         ("clients", Json::Num(clients as f64)),
-        ("jobs", Json::Num(jobs as f64)),
-        ("jobs_per_sec", Json::Num(jobs_per_sec)),
-        ("cold_ms", Json::Num(cold_ms)),
-        ("warm_p50_ms", Json::Num(p50_ms)),
-        ("warm_p99_ms", Json::Num(p99_ms)),
-        ("plan_hits", Json::Num(snap.plan_hits as f64)),
-        ("plan_misses", Json::Num(snap.plan_misses as f64)),
+        ("jobs_ok", Json::Num(jobs as f64)),
+        ("jobs_deferred", Json::Num(refused as f64)),
+        ("jobs_per_sec", Json::Num(jobs as f64 / wall_s)),
+        ("p50_ms", Json::Num(p50_ms)),
+        ("p99_ms", Json::Num(p99_ms)),
+        ("per_tenant", Json::Arr(tenant_rows)),
+    ])
+}
+
+/// Batched-vs-unbatched bar: R rounds of N simultaneous identical-
+/// PlanKey advances (a fresh `steps`, hence a fresh PlanKey, every
+/// round — planning is always cold).  The unbatched column pays N
+/// plan-cache lookups per round; the coalescing window pays one.
+fn run_batching_bar(clients: usize, rounds: usize) -> Json {
+    let mut cols = Vec::new();
+    for (label, window_ms) in [("unbatched", 0.0), ("batched", 15.0)] {
+        let mut o = opts(4);
+        o.batch_window_ms = window_ms;
+        let svc = Service::start(o);
+        let state: Arc<ServiceState> = svc.state();
+        for ci in 0..clients {
+            let (resp, _) = handle_line(
+                &state,
+                &format!(
+                    r#"{{"op":"create_session","session":"b{ci}","shape":"star","d":2,"r":1,"dtype":"double","domain":"64x64","backend":"native","threads":1,"shards":1}}"#
+                ),
+            );
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+        }
+        let wall0 = Instant::now();
+        let mut lat_ns = Vec::new();
+        for round in 0..rounds {
+            let barrier = Arc::new(Barrier::new(clients));
+            let steps = round + 1; // steps is in the PlanKey: cold plan
+            let handles: Vec<_> = (0..clients)
+                .map(|ci| {
+                    let state = state.clone();
+                    let barrier = barrier.clone();
+                    std::thread::spawn(move || {
+                        let line = format!(
+                            r#"{{"op":"advance","session":"b{ci}","steps":{steps},"t":1}}"#
+                        );
+                        barrier.wait();
+                        let t0 = Instant::now();
+                        let (resp, _) = handle_line(&state, &line);
+                        assert!(resp.contains("\"ok\":true"), "{resp}");
+                        t0.elapsed().as_nanos() as f64
+                    })
+                })
+                .collect();
+            lat_ns.extend(handles.into_iter().map(|h| h.join().expect("client")));
+        }
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let snap = state.counters.snapshot();
+        let p99_ms = stats::percentile(&lat_ns, 99.0) / 1e6;
+        println!(
+            "batching bar [{label:>9}]: {rounds} rounds × {clients} clients  {wall_s:.3}s  \
+             p99 {p99_ms:.3} ms  plan lookups {}  batches {} ({} members)",
+            snap.plan_hits + snap.plan_misses,
+            snap.batches,
+            snap.jobs_batched,
+        );
+        drop(svc);
+        cols.push(obj(vec![
+            ("mode", Json::Str(label.to_string())),
+            ("window_ms", Json::Num(window_ms)),
+            ("wall_s", Json::Num(wall_s)),
+            ("p99_ms", Json::Num(p99_ms)),
+            ("plan_lookups", Json::Num((snap.plan_hits + snap.plan_misses) as f64)),
+            ("batches", Json::Num(snap.batches as f64)),
+            ("jobs_batched", Json::Num(snap.jobs_batched as f64)),
+        ]));
+    }
+    obj(vec![
+        ("clients", Json::Num(clients as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("columns", Json::Arr(cols)),
+    ])
+}
+
+/// Tiered-vs-resident bar: the same interleaved multi-session stream
+/// with and without a 1-byte resident cap (every idle session spills),
+/// pricing the lossless hex-f64 spill/restore round-trip.
+fn run_tiering_bar(sessions: usize, rounds: usize) -> Json {
+    let mut cols = Vec::new();
+    for (label, cap) in [("resident", None), ("tiered", Some(1u64))] {
+        let mut o = opts(2);
+        o.resident_bytes = cap;
+        let svc = Service::start(o);
+        let state: Arc<ServiceState> = svc.state();
+        for s in 0..sessions {
+            let (resp, _) = handle_line(
+                &state,
+                &format!(
+                    r#"{{"op":"create_session","session":"t{s}","shape":"star","d":2,"r":1,"dtype":"double","domain":"128x128","backend":"native","threads":1,"shards":1,"tenant":"tenant{s}"}}"#
+                ),
+            );
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+        }
+        let wall0 = Instant::now();
+        let mut lat_ns = Vec::with_capacity(sessions * rounds);
+        for _ in 0..rounds {
+            for s in 0..sessions {
+                let line = format!(r#"{{"op":"advance","session":"t{s}","steps":2,"t":1}}"#);
+                let t0 = Instant::now();
+                let (resp, _) = handle_line(&state, &line);
+                assert!(resp.contains("\"ok\":true"), "{resp}");
+                lat_ns.push(t0.elapsed().as_nanos() as f64);
+            }
+        }
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let st = stats_json(&state);
+        let spilled = st.get("spilled_bytes").and_then(|v| v.as_i64()).unwrap_or(0);
+        let p99_ms = stats::percentile(&lat_ns, 99.0) / 1e6;
+        println!(
+            "tiering bar [{label:>8}]: {rounds} rounds × {sessions} sessions  {wall_s:.3}s  \
+             p99 {p99_ms:.3} ms  spilled {spilled} B",
+        );
+        drop(svc);
+        cols.push(obj(vec![
+            ("mode", Json::Str(label.to_string())),
+            ("wall_s", Json::Num(wall_s)),
+            ("p99_ms", Json::Num(p99_ms)),
+            ("spilled_bytes", Json::Num(spilled as f64)),
+        ]));
+    }
+    obj(vec![
+        ("sessions", Json::Num(sessions as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("columns", Json::Arr(cols)),
     ])
 }
 
@@ -118,12 +271,7 @@ fn run_case(case: &ShapeCase, clients: usize, per_client: usize) -> Json {
 /// planner's auto fan-out — the wall-clock ratio is the serving-plane
 /// payoff the `model::shard::gain` model predicts.
 fn run_sharded_bar(jobs: usize) -> Json {
-    let svc = Service::start(ServeOpts {
-        workers: 4,
-        max_queue: 256,
-        artifacts_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
-        ..Default::default()
-    });
+    let svc = Service::start(opts(4));
     let state: Arc<ServiceState> = svc.state();
     let side = if std::env::var("BENCH_FAST").is_ok() { 256 } else { 1024 };
     let (resp, _) = handle_line(
@@ -166,18 +314,20 @@ fn run_sharded_bar(jobs: usize) -> Json {
 
 fn main() {
     let fast = std::env::var("BENCH_FAST").is_ok();
-    let (clients, per_client) = if fast { (2, 5) } else { (4, 50) };
-    let cases = [
-        ShapeCase { name: "star2d/192x192", shape: "star", d: 2, domain: "192x192", steps: 4 },
-        ShapeCase { name: "heat3d/32x32x32", shape: "star", d: 3, domain: "32x32x32", steps: 2 },
-    ];
-    println!("### bench group: service_throughput ({clients} clients × {per_client} jobs)");
-    let results: Vec<Json> = cases.iter().map(|c| run_case(c, clients, per_client)).collect();
+    println!("### bench group: service_throughput (multi-tenant overload)");
+    let zipf = run_zipfian_overload(6, if fast { 8 } else { 60 });
+    let batching = run_batching_bar(4, if fast { 3 } else { 8 });
+    let tiering = run_tiering_bar(6, if fast { 4 } else { 12 });
     let sharded = run_sharded_bar(if fast { 3 } else { 10 });
     write_bench_json(
         "BENCH_service.json",
         "service_throughput",
-        vec![("results", Json::Arr(results)), ("sharded", sharded)],
+        vec![
+            ("zipfian_overload", zipf),
+            ("batching", batching),
+            ("tiering", tiering),
+            ("sharded", sharded),
+        ],
     )
     .expect("write BENCH_service.json");
 }

@@ -356,6 +356,20 @@ pub fn serve_opt_specs() -> Vec<crate::util::cli::OptSpec> {
             takes_value: true,
             default: None,
         },
+        OptSpec {
+            name: "resident-bytes",
+            help: "serve: cap on resident session field bytes; idle sessions \
+                   past the cap spill to disk bit-exactly (omit = never spill)",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "batch-window-ms",
+            help: "serve: gather window for coalescing concurrent identical-plan \
+                   jobs into one batched dispatch (0 = coalesce only true ties)",
+            takes_value: true,
+            default: Some("0"),
+        },
     ]);
     specs
 }

@@ -3,7 +3,9 @@
 //! aggregate accounting ([`ServiceCounters`] service-wide,
 //! [`SessionStats`] per session).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Accounting for one phase of a run: one time block (or launch
@@ -369,6 +371,10 @@ pub struct ServiceCounters {
     pub jobs_sharded: AtomicU64,
     /// Total shard tasks those jobs fanned out into.
     pub shard_tasks: AtomicU64,
+    /// Jobs that rode a coalesced identical-`PlanKey` batch dispatch.
+    pub jobs_batched: AtomicU64,
+    /// Coalesced batch dispatches (each covering ≥ 2 member jobs).
+    pub batches: AtomicU64,
 }
 
 impl ServiceCounters {
@@ -398,6 +404,14 @@ impl ServiceCounters {
         self.write_begin();
         Self::bump(&self.jobs_sharded);
         Self::add(&self.shard_tasks, shards as u64);
+        self.write_end();
+    }
+
+    /// Record one coalesced batch dispatch of `members` jobs.
+    pub fn record_batch(&self, members: usize) {
+        self.write_begin();
+        Self::bump(&self.batches);
+        Self::add(&self.jobs_batched, members as u64);
         self.write_end();
     }
 
@@ -481,6 +495,8 @@ impl ServiceCounters {
             intensity_samples: get(&self.intensity_samples),
             jobs_sharded: get(&self.jobs_sharded),
             shard_tasks: get(&self.shard_tasks),
+            jobs_batched: get(&self.jobs_batched),
+            batches: get(&self.batches),
         }
     }
 }
@@ -514,6 +530,8 @@ pub struct ServiceSnapshot {
     pub intensity_samples: u64,
     pub jobs_sharded: u64,
     pub shard_tasks: u64,
+    pub jobs_batched: u64,
+    pub batches: u64,
 }
 
 impl ServiceSnapshot {
@@ -592,6 +610,88 @@ pub struct SessionRow {
     pub stats: SessionStats,
 }
 
+/// One tenant's admission-plane counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Jobs admitted (FIFO or EDF tier).
+    pub admitted: u64,
+    /// Jobs refused — budget, fair-share deferral, unmeetable
+    /// deadline, or queue shed.
+    pub refused: u64,
+    /// Completed deadline jobs whose wall time exceeded `deadline_ms`.
+    pub deadline_missed: u64,
+}
+
+/// One rendered per-tenant `stats` row: admission counters plus field
+/// residency (resident vs spilled bytes across the tenant's sessions).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantRow {
+    pub tenant: String,
+    pub admitted: u64,
+    pub refused: u64,
+    pub deadline_missed: u64,
+    pub resident_bytes: u64,
+    pub spilled_bytes: u64,
+}
+
+/// Per-tenant admission accounting, shared by the connection handlers.
+/// A plain mutex-guarded map: these bumps sit on the admission path
+/// (once per request), not in kernel hot loops, so lock-free plumbing
+/// would buy nothing.
+#[derive(Debug, Default)]
+pub struct TenantLedger {
+    inner: Mutex<BTreeMap<String, TenantCounters>>,
+}
+
+impl TenantLedger {
+    pub fn admitted(&self, tenant: &str) {
+        self.bump_with(tenant, |c| c.admitted += 1);
+    }
+
+    pub fn refused(&self, tenant: &str) {
+        self.bump_with(tenant, |c| c.refused += 1);
+    }
+
+    pub fn deadline_missed(&self, tenant: &str) {
+        self.bump_with(tenant, |c| c.deadline_missed += 1);
+    }
+
+    fn bump_with(&self, tenant: &str, f: impl FnOnce(&mut TenantCounters)) {
+        let mut g = self.inner.lock().unwrap();
+        f(g.entry(tenant.to_string()).or_default());
+    }
+
+    /// Point-in-time copy of every tenant's counters (tenant order).
+    pub fn counters(&self) -> BTreeMap<String, TenantCounters> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Rendered rows: the union of tenants seen by admission and
+    /// tenants owning sessions, with `bytes` supplying each tenant's
+    /// (resident, spilled) field bytes.
+    pub fn rows(&self, bytes: &BTreeMap<String, (u64, u64)>) -> Vec<TenantRow> {
+        let counters = self.counters();
+        let mut tenants: Vec<&String> = counters.keys().chain(bytes.keys()).collect();
+        tenants.sort();
+        tenants.dedup();
+        tenants
+            .into_iter()
+            .map(|t| {
+                let c = counters.get(t).copied().unwrap_or_default();
+                let (resident, spilled) = bytes.get(t).copied().unwrap_or_default();
+                TenantRow {
+                    tenant: t.clone(),
+                    admitted: c.admitted,
+                    refused: c.refused,
+                    deadline_missed: c.deadline_missed,
+                    resident_bytes: resident,
+                    spilled_bytes: spilled,
+                }
+            })
+            .collect()
+    }
+}
+
 fn pct(part: u64, whole: u64) -> f64 {
     if whole == 0 {
         0.0
@@ -603,6 +703,44 @@ fn pct(part: u64, whole: u64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tenant_ledger_rows_union_counters_and_bytes() {
+        let ledger = TenantLedger::default();
+        ledger.admitted("a");
+        ledger.admitted("a");
+        ledger.refused("a");
+        ledger.deadline_missed("b");
+        // "c" owns sessions but was never seen by admission
+        let mut bytes = BTreeMap::new();
+        bytes.insert("a".to_string(), (4096u64, 0u64));
+        bytes.insert("c".to_string(), (0u64, 8192u64));
+        let rows = ledger.rows(&bytes);
+        assert_eq!(rows.len(), 3, "union of admission tenants and session owners");
+        assert_eq!(
+            rows[0],
+            TenantRow {
+                tenant: "a".into(),
+                admitted: 2,
+                refused: 1,
+                deadline_missed: 0,
+                resident_bytes: 4096,
+                spilled_bytes: 0,
+            }
+        );
+        assert_eq!((rows[1].tenant.as_str(), rows[1].deadline_missed), ("b", 1));
+        assert_eq!((rows[2].tenant.as_str(), rows[2].spilled_bytes), ("c", 8192));
+    }
+
+    #[test]
+    fn batch_counters_snapshot_consistently() {
+        let c = ServiceCounters::default();
+        c.record_batch(3);
+        c.record_batch(2);
+        let s = c.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.jobs_batched, 5);
+    }
 
     #[test]
     fn throughput_math() {

@@ -86,6 +86,12 @@ pub struct Request {
 /// on the dim-0 extent), so `domain` — along with the shard spec and
 /// the `lanes`/`threads` parallel baseline — is load-bearing in the
 /// key, not just an aliasing guard.
+///
+/// The key also doubles as the **batch-coalescing key** in the serving
+/// layer ([`service::batch`](crate::service::batch)): concurrent jobs
+/// with equal `PlanKey`s are provably running the same plan, so they
+/// can share one cache lookup and one batched dispatch without any
+/// numerical divergence from sequential execution.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct PlanKey {
     /// Canonical pattern label ("Box-2D1R").

@@ -135,6 +135,12 @@ fn help_text() -> String {
            --drift-threshold E  flag the profile stale once a region's\n\
                               model-error EWMA exceeds E (default: the\n\
                               model's region tolerance)\n\
+           --resident-bytes B cap resident session field bytes; idle\n\
+                              sessions past the cap spill to disk and\n\
+                              restore bit-exactly (default: never spill)\n\
+           --batch-window-ms MS gather window for coalescing concurrent\n\
+                              identical-plan jobs into one batched\n\
+                              dispatch (default 0)\n\
            requests: ping | plan | create_session | advance | fetch |\n\
                      close_session | stats | shutdown (see rust/README.md)\n\n\
          kernel dispatch (--kernels, honored by plan, run, serve, tune):\n\
@@ -288,6 +294,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
             .get_f64("drift-threshold")?
             .unwrap_or(tc_stencil::tune::drift::DRIFT_THRESHOLD),
         probe_threads: cfg.threads,
+        resident_bytes: args.get_usize("resident-bytes")?.map(|b| b as u64),
+        batch_window_ms: args.get_f64("batch-window-ms")?.unwrap_or(0.0).max(0.0),
     };
     let mut svc = service::Service::start(opts);
     let res = if args.flag("stdio") { svc.serve_stdio() } else { svc.serve_tcp() };

@@ -71,6 +71,14 @@ pub fn span_to_json(s: &Span) -> Json {
         Payload::Retune { ok } => {
             o.insert("ok".to_string(), Json::Bool(*ok));
         }
+        Payload::Batch { jobs, key } => {
+            o.insert("jobs".to_string(), num(*jobs));
+            o.insert("plan_key".to_string(), Json::Str(key.clone()));
+        }
+        Payload::Spill { session, bytes } | Payload::Restore { session, bytes } => {
+            o.insert("session".to_string(), Json::Str(session.clone()));
+            o.insert("bytes".to_string(), num(*bytes));
+        }
     }
     Json::Obj(o)
 }
@@ -142,6 +150,15 @@ pub fn span_from_json(j: &Json) -> Result<Span> {
             flagged: get_bool(j, "flagged")?,
         },
         SpanKind::Retune => Payload::Retune { ok: get_bool(j, "ok")? },
+        SpanKind::Batch => {
+            Payload::Batch { jobs: get_u64(j, "jobs")?, key: get_str(j, "plan_key")? }
+        }
+        SpanKind::Spill => {
+            Payload::Spill { session: get_str(j, "session")?, bytes: get_u64(j, "bytes")? }
+        }
+        SpanKind::Restore => {
+            Payload::Restore { session: get_str(j, "session")?, bytes: get_u64(j, "bytes")? }
+        }
         SpanKind::Admission | SpanKind::Assembly => Payload::None,
     };
     Ok(Span {
@@ -293,6 +310,9 @@ pub fn summarize(spans: &[Span]) -> String {
         SpanKind::Job,
         SpanKind::Drift,
         SpanKind::Retune,
+        SpanKind::Batch,
+        SpanKind::Spill,
+        SpanKind::Restore,
     ] {
         let n = spans.iter().filter(|s| s.kind == k).count();
         if n > 0 {
@@ -450,6 +470,45 @@ mod tests {
         assert!(phase.get("args").unwrap().get("kind").is_err(), "envelope stays out of args");
         // the whole thing parses back as one JSON document
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn serving_plane_kinds_roundtrip() {
+        let extra = vec![
+            Span {
+                trace: 2,
+                worker: 0,
+                kind: SpanKind::Batch,
+                start_ns: 5,
+                end_ns: 25,
+                payload: Payload::Batch { jobs: 3, key: "star-2d1r|f64|64x64".into() },
+            },
+            Span {
+                trace: 0,
+                worker: 0,
+                kind: SpanKind::Spill,
+                start_ns: 30,
+                end_ns: 31,
+                payload: Payload::Spill { session: "cold-7".into(), bytes: 32768 },
+            },
+            Span {
+                trace: 2,
+                worker: 1,
+                kind: SpanKind::Restore,
+                start_ns: 40,
+                end_ns: 44,
+                payload: Payload::Restore { session: "cold-7".into(), bytes: 32768 },
+            },
+        ];
+        for s in &extra {
+            let line = span_to_json(s).to_string();
+            let back = span_from_json(&Json::parse_line(&line).unwrap()).unwrap();
+            assert_eq!(s, &back, "serving-plane span must round-trip exactly");
+        }
+        let text = summarize(&extra);
+        for needle in ["batch", "spill", "restore"] {
+            assert!(text.contains(needle), "{text}");
+        }
     }
 
     #[test]

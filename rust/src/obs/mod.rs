@@ -74,6 +74,13 @@ pub enum SpanKind {
     Drift,
     /// A retune episode (measure → install or reject).
     Retune,
+    /// A coalesced batch dispatch: N identical-`PlanKey` jobs sharing
+    /// one plan resolution and one shard schedule.
+    Batch,
+    /// An idle session's field spilled to disk (bit-exact hex-f64).
+    Spill,
+    /// A spilled session's field restored from disk on next use.
+    Restore,
 }
 
 impl SpanKind {
@@ -90,6 +97,9 @@ impl SpanKind {
             SpanKind::Job => "job",
             SpanKind::Drift => "drift",
             SpanKind::Retune => "retune",
+            SpanKind::Batch => "batch",
+            SpanKind::Spill => "spill",
+            SpanKind::Restore => "restore",
         }
     }
 
@@ -106,6 +116,9 @@ impl SpanKind {
             "job" => SpanKind::Job,
             "drift" => SpanKind::Drift,
             "retune" => SpanKind::Retune,
+            "batch" => SpanKind::Batch,
+            "spill" => SpanKind::Spill,
+            "restore" => SpanKind::Restore,
             _ => return None,
         })
     }
@@ -187,6 +200,27 @@ pub enum Payload {
     Retune {
         /// True when a fresh measured profile was installed.
         ok: bool,
+    },
+    /// Coalesced batch dispatch: gather window open → plan distributed.
+    Batch {
+        /// Member jobs that shared the one plan resolution.
+        jobs: u64,
+        /// Canonical rendering of the shared `PlanKey`.
+        key: String,
+    },
+    /// Session field spilled to disk (tiering).
+    Spill {
+        /// Session name.
+        session: String,
+        /// Resident bytes written (8 × field length).
+        bytes: u64,
+    },
+    /// Session field restored from disk (tiering).
+    Restore {
+        /// Session name.
+        session: String,
+        /// Resident bytes read back (8 × field length).
+        bytes: u64,
     },
 }
 

@@ -14,7 +14,7 @@ use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::coordinator::metrics::ServiceSnapshot;
+use crate::coordinator::metrics::{ServiceSnapshot, TenantRow};
 use crate::service::plan_cache::CacheStats;
 
 /// Lock-free histogram with `le = 2^e` bucket bounds.
@@ -179,9 +179,15 @@ impl Metrics {
     }
 
     /// Render the full Prometheus text exposition: service counters
-    /// from `snap`, plan-cache counters from `cache`, the queue-depth
-    /// gauge, and every histogram.
-    pub fn exposition(&self, snap: &ServiceSnapshot, cache: &CacheStats) -> String {
+    /// from `snap`, plan-cache counters from `cache`, per-tenant
+    /// labeled counters from `tenants`, the queue-depth gauge, and
+    /// every histogram.
+    pub fn exposition(
+        &self,
+        snap: &ServiceSnapshot,
+        cache: &CacheStats,
+        tenants: &[TenantRow],
+    ) -> String {
         let mut out = String::new();
         let counters: &[(&str, &str, u64)] = &[
             ("requests", "Protocol requests received.", snap.requests),
@@ -194,6 +200,8 @@ impl Metrics {
             ("jobs_failed", "Jobs that failed in execution.", snap.jobs_failed),
             ("jobs_sharded", "Jobs that fanned out into shard tasks.", snap.jobs_sharded),
             ("shard_tasks", "Shard tasks those jobs fanned out into.", snap.shard_tasks),
+            ("batches", "Coalesced identical-PlanKey batch dispatches.", snap.batches),
+            ("jobs_batched", "Member jobs executed inside batches.", snap.jobs_batched),
             ("plan_hits", "Plan lookups served from cache.", snap.plan_hits),
             ("plan_misses", "Plan lookups that re-planned.", snap.plan_misses),
             ("steps", "Time steps advanced, summed over jobs.", snap.steps_total),
@@ -275,6 +283,48 @@ impl Metrics {
                 h.render(&mut out, "stencilctl_kernel_gpts", &format!("kernel=\"{kernel}\""));
             }
         }
+        if !tenants.is_empty() {
+            let series: &[(&str, &str, fn(&TenantRow) -> u64)] = &[
+                (
+                    "tenant_jobs_admitted_total",
+                    "Jobs admitted, per tenant.",
+                    |r| r.admitted,
+                ),
+                (
+                    "tenant_jobs_refused_total",
+                    "Jobs refused (budget, fair-share, deadline, queue), per tenant.",
+                    |r| r.refused,
+                ),
+                (
+                    "tenant_deadline_missed_total",
+                    "Completed deadline jobs that overran their SLO, per tenant.",
+                    |r| r.deadline_missed,
+                ),
+                (
+                    "tenant_resident_bytes",
+                    "In-memory session field bytes, per tenant.",
+                    |r| r.resident_bytes,
+                ),
+                (
+                    "tenant_spilled_bytes",
+                    "Disk-spilled session field bytes, per tenant.",
+                    |r| r.spilled_bytes,
+                ),
+            ];
+            for (name, help, get) in series {
+                let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
+                let _ = writeln!(out, "# HELP stencilctl_{name} {help}");
+                let _ = writeln!(out, "# TYPE stencilctl_{name} {kind}");
+                for r in tenants {
+                    let _ = writeln!(
+                        out,
+                        "stencilctl_{name}{{tenant=\"{}\"}} {}",
+                        r.tenant,
+                        get(r)
+                    );
+                }
+            }
+        }
         out
     }
 }
@@ -348,7 +398,15 @@ mod tests {
         m.observe_kernel_gpts("", 1.0); // unresolved: ignored
         let snap = ServiceSnapshot { requests: 5, queue_depth: 2, ..Default::default() };
         let cache = CacheStats { hits: 3, ..Default::default() };
-        let text = m.exposition(&snap, &cache);
+        let tenants = vec![TenantRow {
+            tenant: "acme".into(),
+            admitted: 7,
+            refused: 2,
+            deadline_missed: 1,
+            resident_bytes: 4096,
+            spilled_bytes: 512,
+        }];
+        let text = m.exposition(&snap, &cache, &tenants);
         assert!(text.contains("# TYPE stencilctl_requests_total counter"), "{text}");
         assert!(text.contains("stencilctl_requests_total 5"));
         assert!(text.contains("# TYPE stencilctl_queue_depth gauge"));
@@ -359,6 +417,16 @@ mod tests {
         assert!(text
             .contains("stencilctl_kernel_gpts_bucket{kernel=\"star-2d1r/double/avx2\",le=\"0.5\"} 1"));
         assert_eq!(m.kernel_rows().len(), 1);
+        // per-tenant labeled series
+        assert!(text.contains("# TYPE stencilctl_tenant_jobs_admitted_total counter"), "{text}");
+        assert!(text.contains("stencilctl_tenant_jobs_admitted_total{tenant=\"acme\"} 7"));
+        assert!(text.contains("stencilctl_tenant_jobs_refused_total{tenant=\"acme\"} 2"));
+        assert!(text.contains("stencilctl_tenant_deadline_missed_total{tenant=\"acme\"} 1"));
+        assert!(text.contains("# TYPE stencilctl_tenant_resident_bytes gauge"));
+        assert!(text.contains("stencilctl_tenant_resident_bytes{tenant=\"acme\"} 4096"));
+        assert!(text.contains("stencilctl_tenant_spilled_bytes{tenant=\"acme\"} 512"));
+        // no tenants → no per-tenant series, still well-formed
+        assert!(!m.exposition(&snap, &cache, &[]).contains("tenant_jobs_admitted"));
         // every line is either a comment or name{labels}? value
         for line in text.lines() {
             assert!(

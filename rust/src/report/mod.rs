@@ -412,12 +412,14 @@ pub fn service_stats(
     s: &crate::coordinator::metrics::ServiceSnapshot,
     cache: &crate::service::plan_cache::CacheStats,
     sessions: &[crate::coordinator::metrics::SessionRow],
+    tenants: &[crate::coordinator::metrics::TenantRow],
 ) -> String {
     let mut svc = Table::new(
         "service — counters",
         &[
             "requests", "errors", "accepted", "downgraded", "rejected", "queue-full",
-            "queued", "completed", "failed", "sharded", "shard tasks", "plan hits",
+            "queued", "completed", "failed", "sharded", "shard tasks", "batches",
+            "batched jobs", "plan hits",
             "plan misses", "hit rate", "evicted", "steps", "MSt/s", "model err",
         ],
     );
@@ -433,6 +435,8 @@ pub fn service_stats(
         s.jobs_failed.to_string(),
         s.jobs_sharded.to_string(),
         s.shard_tasks.to_string(),
+        s.batches.to_string(),
+        s.jobs_batched.to_string(),
         s.plan_hits.to_string(),
         s.plan_misses.to_string(),
         format!("{:.0}%", s.plan_hit_rate() * 100.0),
@@ -485,7 +489,21 @@ pub fn service_stats(
             format!("{:.2}", r.stats.throughput() / 1e6),
         ]);
     }
-    format!("{}\n{}\n{}", svc.render(), prof.render(), per.render())
+    let mut ten = Table::new(
+        "service — tenants",
+        &["tenant", "admitted", "refused", "deadline missed", "resident", "spilled"],
+    );
+    for r in tenants {
+        ten.row(&[
+            r.tenant.clone(),
+            r.admitted.to_string(),
+            r.refused.to_string(),
+            r.deadline_missed.to_string(),
+            format!("{} B", r.resident_bytes),
+            format!("{} B", r.spilled_bytes),
+        ]);
+    }
+    format!("{}\n{}\n{}\n{}", svc.render(), prof.render(), per.render(), ten.render())
 }
 
 #[cfg(test)]
@@ -607,7 +625,7 @@ mod tests {
 
     #[test]
     fn service_stats_renders_counters_and_sessions() {
-        use crate::coordinator::metrics::{ServiceSnapshot, SessionRow, SessionStats};
+        use crate::coordinator::metrics::{ServiceSnapshot, SessionRow, SessionStats, TenantRow};
         let snap = ServiceSnapshot {
             requests: 10,
             jobs_accepted: 4,
@@ -641,17 +659,29 @@ mod tests {
             generation: 4,
             ..Default::default()
         };
-        let out = service_stats(&snap, &cache, &rows);
+        let tenants = vec![TenantRow {
+            tenant: "acme".into(),
+            admitted: 3,
+            refused: 1,
+            deadline_missed: 1,
+            resident_bytes: 8192,
+            spilled_bytes: 2048,
+        }];
+        let out = service_stats(&snap, &cache, &rows, &tenants);
         assert!(out.contains("service — counters"));
         assert!(out.contains("service — machine profile"));
         assert!(out.contains("service — sessions"));
+        assert!(out.contains("service — tenants"));
         assert!(out.contains("Star-2D1R"));
         assert!(out.contains("star-2d1r/double/portable"), "kernel column renders: {out}");
         assert!(out.contains("75%"), "hit rate renders: {out}");
         assert!(out.contains("evicted"), "cache evictions render: {out}");
-        // empty session list still renders all tables
-        let out = service_stats(&snap, &cache, &[]);
+        assert!(out.contains("acme"), "tenant row renders: {out}");
+        assert!(out.contains("2048 B"), "spilled bytes render: {out}");
+        // empty session/tenant lists still render all tables
+        let out = service_stats(&snap, &cache, &[], &[]);
         assert!(out.contains("service — sessions"));
+        assert!(out.contains("service — tenants"));
     }
 
     #[test]
@@ -672,12 +702,12 @@ mod tests {
         };
         let cache =
             crate::service::plan_cache::CacheStats { generation: 3, ..Default::default() };
-        let out = service_stats(&snap, &cache, &[]);
+        let out = service_stats(&snap, &cache, &[], &[]);
         assert!(out.contains("measured-native"), "{out}");
         assert!(out.contains("STALE"), "{out}");
         assert!(out.contains("31.2%"), "worst drift renders: {out}");
         // a fresh default snapshot renders placeholders, not panics
-        let out = service_stats(&ServiceSnapshot::default(), &Default::default(), &[]);
+        let out = service_stats(&ServiceSnapshot::default(), &Default::default(), &[], &[]);
         assert!(out.contains("machine profile"));
     }
 }

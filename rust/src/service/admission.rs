@@ -14,6 +14,17 @@
 //!    semantics differ at domain boundaries, so this is never silent);
 //! 4. nothing fits → reject, citing the predicted time, the budget, and
 //!    the paper's scenario classification of the chosen candidate.
+//!
+//! Layered on top, [`TenantSched`] turns the same roofline cost into a
+//! multi-tenant policy: deficit-round-robin over per-tenant served
+//! milliseconds (a hog is deferred once it runs a quantum past the
+//! active tenants' fair share), plus an earliest-deadline-first tier
+//! for jobs carrying `deadline_ms` — meetable deadlines jump the FIFO,
+//! provably unmeetable ones are refused up front with the predicted
+//! completion time as evidence.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use crate::backend::TemporalMode;
 use crate::coordinator::planner::{Candidate, Plan};
@@ -65,6 +76,156 @@ pub struct Rejection {
 
 fn wall_ms(c: &Candidate, points: u64, steps: usize, t: usize) -> f64 {
     exec::wall_time(&c.prediction, points, steps, t.max(1)) * 1e3
+}
+
+/// Deficit-round-robin quantum: how far past the active tenants' fair
+/// share one tenant's served milliseconds may run before admission
+/// defers its next job under queue pressure.
+pub const DRR_QUANTUM_MS: f64 = 50.0;
+
+/// A tenant counts as active while it arrived within this many total
+/// arrivals — long-gone tenants stop diluting the fair share.
+const ACTIVE_WINDOW: u64 = 256;
+
+/// Evidence attached to a fair-share deferral.
+#[derive(Debug, Clone)]
+pub struct FairShare {
+    pub tenant: String,
+    /// Roofline milliseconds this tenant has been served so far.
+    pub served_ms: f64,
+    /// Mean served milliseconds across active tenants.
+    pub fair_share_ms: f64,
+    pub quantum_ms: f64,
+}
+
+/// Evidence attached to a deadline refusal: the roofline-predicted
+/// completion time that proves the deadline unmeetable.
+#[derive(Debug, Clone)]
+pub struct DeadlineVerdict {
+    pub deadline_ms: f64,
+    /// Predicted completion: admitted backlog drained across workers,
+    /// plus this job's own roofline cost.
+    pub predicted_completion_ms: f64,
+    pub backlog_ms: f64,
+    pub cost_ms: f64,
+}
+
+/// [`TenantSched::admit`]'s verdict.
+#[derive(Debug, Clone)]
+pub enum TenantVerdict {
+    /// Run it.  `urgent` routes the job through the EDF tier ahead of
+    /// the FIFO; `predicted_completion_ms` is the roofline estimate
+    /// used for the deadline check (backlog/workers + own cost).
+    Admit { urgent: bool, predicted_completion_ms: f64 },
+    /// Deficit-round-robin deferral: the tenant is a quantum past the
+    /// active fair share while the queue is under pressure.
+    OverShare(FairShare),
+    /// `deadline_ms` is provably unmeetable given the admitted backlog.
+    Unmeetable(DeadlineVerdict),
+}
+
+#[derive(Debug, Default)]
+struct TenantState {
+    served_ms: f64,
+    last_seen: u64,
+}
+
+#[derive(Debug, Default)]
+struct SchedInner {
+    tenants: BTreeMap<String, TenantState>,
+    /// Total arrivals — the logical clock behind `last_seen`.
+    arrivals: u64,
+    /// Roofline milliseconds admitted but not yet completed.
+    backlog_ms: f64,
+}
+
+/// Deficit-round-robin + EDF admission across tenants, priced by the
+/// same roofline `wall_ms` the budget check uses.  All state is
+/// model-predicted milliseconds, so the policy is deterministic and
+/// testable without a clock.
+#[derive(Debug)]
+pub struct TenantSched {
+    inner: Mutex<SchedInner>,
+    workers: usize,
+}
+
+impl TenantSched {
+    pub fn new(workers: usize) -> TenantSched {
+        TenantSched { inner: Mutex::new(SchedInner::default()), workers: workers.max(1) }
+    }
+
+    /// Decide one job of roofline cost `cost_ms` for `tenant`.
+    ///
+    /// `pressured` is the caller's queue-pressure signal (DRR only
+    /// defers when there is contention to arbitrate — an idle server
+    /// admits everyone).  Deadline jobs skip DRR entirely: a meetable
+    /// deadline is admitted urgent, an unmeetable one refused.
+    pub fn admit(
+        &self,
+        tenant: &str,
+        cost_ms: f64,
+        deadline_ms: Option<f64>,
+        pressured: bool,
+    ) -> TenantVerdict {
+        let mut g = self.inner.lock().unwrap();
+        g.arrivals += 1;
+        let now = g.arrivals;
+        let e = g.tenants.entry(tenant.to_string()).or_default();
+        e.last_seen = now;
+        let predicted_completion_ms = g.backlog_ms / self.workers as f64 + cost_ms;
+        if let Some(deadline) = deadline_ms {
+            if predicted_completion_ms > deadline {
+                return TenantVerdict::Unmeetable(DeadlineVerdict {
+                    deadline_ms: deadline,
+                    predicted_completion_ms,
+                    backlog_ms: g.backlog_ms,
+                    cost_ms,
+                });
+            }
+            g.charge(tenant, cost_ms);
+            return TenantVerdict::Admit { urgent: true, predicted_completion_ms };
+        }
+        if pressured {
+            let (total, n) = g
+                .tenants
+                .values()
+                .filter(|t| now - t.last_seen <= ACTIVE_WINDOW)
+                .fold((0.0, 0usize), |(s, n), t| (s + t.served_ms, n + 1));
+            let fair_share_ms = total / n.max(1) as f64;
+            let served_ms = g.tenants[tenant].served_ms;
+            if served_ms > fair_share_ms + DRR_QUANTUM_MS {
+                return TenantVerdict::OverShare(FairShare {
+                    tenant: tenant.to_string(),
+                    served_ms,
+                    fair_share_ms,
+                    quantum_ms: DRR_QUANTUM_MS,
+                });
+            }
+        }
+        g.charge(tenant, cost_ms);
+        TenantVerdict::Admit { urgent: false, predicted_completion_ms }
+    }
+
+    /// A previously admitted job finished (or failed): drain its
+    /// roofline cost from the backlog.
+    pub fn complete(&self, cost_ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.backlog_ms = (g.backlog_ms - cost_ms).max(0.0);
+    }
+
+    /// Admitted-but-uncompleted roofline milliseconds (observability).
+    pub fn backlog_ms(&self) -> f64 {
+        self.inner.lock().unwrap().backlog_ms
+    }
+}
+
+impl SchedInner {
+    fn charge(&mut self, tenant: &str, cost_ms: f64) {
+        self.backlog_ms += cost_ms;
+        if let Some(t) = self.tenants.get_mut(tenant) {
+            t.served_ms += cost_ms;
+        }
+    }
 }
 
 /// Decide whether an `advance` of `steps` over `points` may run.
@@ -259,5 +420,105 @@ mod tests {
             }
             other => panic!("expected downgrade, got {other:?}"),
         }
+    }
+
+    fn admitted(v: &TenantVerdict) -> bool {
+        matches!(v, TenantVerdict::Admit { .. })
+    }
+
+    #[test]
+    fn sole_tenant_is_never_deferred() {
+        let sched = TenantSched::new(2);
+        for _ in 0..100 {
+            assert!(admitted(&sched.admit("only", 10.0, None, true)));
+        }
+    }
+
+    #[test]
+    fn drr_defers_the_hog_until_shares_converge() {
+        let sched = TenantSched::new(1);
+        // tenant A hogs the server while alone: all admitted.
+        for _ in 0..40 {
+            assert!(admitted(&sched.admit("a", 10.0, None, true)));
+        }
+        // B arrives under pressure: fair share is (400+0)/2 = 200, so A
+        // (served 400) is a quantum past it and must be deferred...
+        match sched.admit("a", 10.0, None, true) {
+            TenantVerdict::OverShare(fs) => {
+                assert_eq!(fs.tenant, "a");
+                assert!(fs.served_ms > fs.fair_share_ms + fs.quantum_ms);
+            }
+            // ...but only once B is active; B's first arrival is below.
+            TenantVerdict::Admit { .. } => {}
+            other => panic!("unexpected verdict {other:?}"),
+        }
+        assert!(admitted(&sched.admit("b", 10.0, None, true)), "starved tenant admitted");
+        // From here B is admitted and A deferred until B's served share
+        // converges to within a quantum of A's.
+        let (mut a_ok, mut b_ok) = (0, 0);
+        for _ in 0..60 {
+            if admitted(&sched.admit("a", 10.0, None, true)) {
+                a_ok += 1;
+            }
+            if admitted(&sched.admit("b", 10.0, None, true)) {
+                b_ok += 1;
+            }
+        }
+        assert!(b_ok > a_ok, "starved tenant must catch up: a={a_ok} b={b_ok}");
+        // convergence: both within a quantum of the common fair share
+        // once B has caught up, so late rounds admit both.
+        assert!(admitted(&sched.admit("b", 10.0, None, true)));
+        assert!(admitted(&sched.admit("a", 10.0, None, true)));
+    }
+
+    #[test]
+    fn unpressured_queue_admits_everyone() {
+        let sched = TenantSched::new(1);
+        for _ in 0..50 {
+            assert!(admitted(&sched.admit("hog", 100.0, None, false)));
+        }
+    }
+
+    #[test]
+    fn edf_refuses_unmeetable_deadline_with_evidence() {
+        let sched = TenantSched::new(1);
+        // build 300ms of admitted backlog
+        for _ in 0..3 {
+            assert!(admitted(&sched.admit("a", 100.0, None, false)));
+        }
+        match sched.admit("b", 50.0, Some(200.0), false) {
+            TenantVerdict::Unmeetable(v) => {
+                assert_eq!(v.deadline_ms, 200.0);
+                assert_eq!(v.backlog_ms, 300.0);
+                assert_eq!(v.cost_ms, 50.0);
+                assert_eq!(v.predicted_completion_ms, 350.0);
+            }
+            other => panic!("expected unmeetable, got {other:?}"),
+        }
+        // the refused job is NOT charged to the backlog
+        assert_eq!(sched.backlog_ms(), 300.0);
+        // a meetable deadline is admitted into the urgent tier
+        match sched.admit("b", 50.0, Some(400.0), false) {
+            TenantVerdict::Admit { urgent, predicted_completion_ms } => {
+                assert!(urgent);
+                assert_eq!(predicted_completion_ms, 350.0);
+            }
+            other => panic!("expected urgent admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn completions_drain_the_backlog() {
+        let sched = TenantSched::new(2);
+        assert!(admitted(&sched.admit("a", 100.0, None, false)));
+        assert!(admitted(&sched.admit("a", 100.0, None, false)));
+        assert_eq!(sched.backlog_ms(), 200.0);
+        sched.complete(100.0);
+        assert_eq!(sched.backlog_ms(), 100.0);
+        // backlog/workers + cost: 100/2 + 10 = 60 ≤ 60 → meetable
+        assert!(admitted(&sched.admit("a", 10.0, Some(60.0), false)));
+        sched.complete(100.0);
+        sched.complete(100.0);
+        assert_eq!(sched.backlog_ms(), 0.0, "backlog saturates at zero");
     }
 }

@@ -1,0 +1,305 @@
+//! PlanKey-coalesced batch dispatch: the serving plane's answer to N
+//! tenants hammering the same workload shape.
+//!
+//! Concurrent `advance` jobs whose planner requests hash to the same
+//! [`PlanKey`] are *coalesced*: the first arrival becomes the batch
+//! **leader**, gathers co-batchers for the configured window
+//! (`--batch-window-ms`; 0 still coalesces arrivals that land during
+//! the leader's plan resolution), performs the **one** shared
+//! plan-cache lookup, and publishes the resulting [`PlanShare`] to
+//! every member.  Members then run their own admission (budgets and
+//! fair-share are per-job), and the admitted monolithic members
+//! deposit their [`QueuedJob`]s back into the gate; whichever member
+//! settles last walks away with the whole batch and pushes a single
+//! [`Task::Batch`](super::queue::Task::Batch) — one queue slot-check,
+//! one backend resolution, one kernel compilation, N per-job
+//! [`RunMetrics`](crate::coordinator::metrics::RunMetrics).
+//!
+//! Correctness against concurrent invalidation: the leader stamps the
+//! plan-cache generation (`gen0`) *before* its lookup.  A retune or
+//! drift flag that clears the cache while the batch gathers bumps the
+//! generation, and every follower re-checks
+//! [`PlanCache::stale_since`](super::plan_cache::PlanCache::stale_since)
+//! before adopting the share — a stale share is discarded and the
+//! follower falls back to its own fresh lookup rather than executing
+//! against superseded constants.
+//!
+//! Bit-exactness is free by construction: a batch member executes the
+//! exact same `Backend::advance` on its own session field as an
+//! unbatched job would — coalescing shares *resolution* work (plan,
+//! backend, compile), never arithmetic.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::planner::{Plan, PlanKey};
+
+use super::queue::QueuedJob;
+
+/// What the leader publishes to every member of a sealed batch: the
+/// one shared plan lookup's result.
+#[derive(Clone)]
+pub struct PlanShare {
+    pub plan: Arc<Plan>,
+    /// Whether the shared lookup was a cache hit.
+    pub hit: bool,
+    /// Plan-cache generation observed *before* the shared lookup;
+    /// members must discard the share when
+    /// [`stale_since(gen0)`](super::plan_cache::PlanCache::stale_since)
+    /// reports an invalidation raced the batch.
+    pub gen0: u64,
+    /// Member count at seal time (reported as `"batched"` in replies).
+    pub members: usize,
+}
+
+struct PendState {
+    /// `None` while the leader is still planning; the published share
+    /// (or the leader's rendered planning error) afterwards.
+    outcome: Option<Result<PlanShare, String>>,
+    /// Arrivals so far; frozen into `PlanShare::members` at seal.
+    members: usize,
+    /// True until the leader seals — only collecting batches admit
+    /// followers.
+    collecting: bool,
+    /// Monolithic jobs contributed by admitted members.
+    deposits: Vec<QueuedJob>,
+    /// Members that have not yet settled (deposited or withdrawn).
+    remaining: usize,
+}
+
+/// One in-flight batch for one `PlanKey`.
+pub struct Pending {
+    state: Mutex<PendState>,
+    cv: Condvar,
+}
+
+impl Pending {
+    fn new() -> Pending {
+        Pending {
+            state: Mutex::new(PendState {
+                outcome: None,
+                members: 1, // the leader
+                collecting: true,
+                deposits: Vec::new(),
+                remaining: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Leader: publish the shared lookup's result and seal membership.
+    /// Returns the sealed member count.
+    fn seal(&self, outcome: Result<(Arc<Plan>, bool, u64), String>) -> usize {
+        let mut g = self.state.lock().unwrap();
+        g.collecting = false;
+        let members = g.members;
+        g.remaining = members;
+        g.outcome =
+            Some(outcome.map(|(plan, hit, gen0)| PlanShare { plan, hit, gen0, members }));
+        self.cv.notify_all();
+        members
+    }
+
+    /// Follower: block until the leader publishes, then adopt (or
+    /// inherit the leader's planning error — an identical request
+    /// would have failed identically).
+    pub fn share(&self) -> Result<PlanShare, String> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(o) = &g.outcome {
+                return o.clone();
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Member: contribute an admitted monolithic job to the coalesced
+    /// dispatch.  Returns the full batch when this settle was the last
+    /// one outstanding — the caller becomes the dispatcher.
+    pub fn deposit(&self, q: QueuedJob) -> Option<Vec<QueuedJob>> {
+        let mut g = self.state.lock().unwrap();
+        g.deposits.push(q);
+        Self::settle(&mut g)
+    }
+
+    /// Member: settle without contributing (refused by admission,
+    /// fanned out as shards, or errored).  May still hand back the
+    /// batch to dispatch — every member must settle exactly once, and
+    /// the last to do so pushes whatever the others deposited.
+    pub fn withdraw(&self) -> Option<Vec<QueuedJob>> {
+        let mut g = self.state.lock().unwrap();
+        Self::settle(&mut g)
+    }
+
+    fn settle(g: &mut PendState) -> Option<Vec<QueuedJob>> {
+        debug_assert!(g.remaining > 0, "settle without seal");
+        g.remaining = g.remaining.saturating_sub(1);
+        if g.remaining == 0 && !g.deposits.is_empty() {
+            Some(std::mem::take(&mut g.deposits))
+        } else {
+            None
+        }
+    }
+}
+
+/// What [`BatchGate::join`] made of this arrival.
+pub enum Role {
+    /// First arrival for the key: gathers the window, performs the one
+    /// shared plan lookup, publishes via [`BatchGate::seal`].
+    Leader(Arc<Pending>),
+    /// Joined while a leader was collecting: adopts the published
+    /// share via [`Pending::share`].
+    Follower(Arc<Pending>),
+}
+
+/// The per-service coalescing gate: at most one collecting batch per
+/// `PlanKey` at a time.
+pub struct BatchGate {
+    window: Duration,
+    inner: Mutex<HashMap<PlanKey, Arc<Pending>>>,
+}
+
+impl BatchGate {
+    pub fn new(window_ms: f64) -> BatchGate {
+        BatchGate {
+            window: Duration::from_secs_f64((window_ms.max(0.0)) / 1e3),
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The leader's gather window.
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Join the pending batch for `key`, becoming leader when none is
+    /// collecting.
+    pub fn join(&self, key: &PlanKey) -> Role {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(p) = g.get(key) {
+            let mut s = p.state.lock().unwrap();
+            if s.collecting {
+                s.members += 1;
+                let p = p.clone();
+                drop(s);
+                return Role::Follower(p);
+            }
+        }
+        let p = Arc::new(Pending::new());
+        g.insert(key.clone(), p.clone());
+        Role::Leader(p)
+    }
+
+    /// Leader: publish `outcome` `(plan, hit, gen0)` and unregister the
+    /// key so later arrivals start a fresh batch.  Returns the sealed
+    /// member count.
+    pub fn seal(
+        &self,
+        key: &PlanKey,
+        p: &Pending,
+        outcome: Result<(Arc<Plan>, bool, u64), String>,
+    ) -> usize {
+        let members = p.seal(outcome);
+        self.inner.lock().unwrap().remove(key);
+        members
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::planner;
+    use crate::hardware::Gpu;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+
+    fn preq(steps: usize) -> planner::Request {
+        planner::Request {
+            pattern: StencilPattern::new(Shape::Star, 2, 1).unwrap(),
+            dtype: Dtype::F64,
+            domain: vec![32, 32],
+            steps,
+            gpu: Gpu::a100(),
+            backend: crate::backend::BackendKind::Native,
+            max_t: 4,
+            temporal: crate::backend::TemporalMode::Auto,
+            shards: crate::coordinator::grid::ShardSpec::Auto,
+            lanes: 2,
+            threads: 1,
+            kernels: crate::backend::kernels::KernelMode::Auto,
+            kernel_peaks: Vec::new(),
+        }
+    }
+
+    fn key(steps: usize) -> PlanKey {
+        preq(steps).plan_key()
+    }
+
+    fn dummy_plan() -> Arc<Plan> {
+        Arc::new(planner::plan(&preq(4), None).unwrap())
+    }
+
+    #[test]
+    fn leader_then_followers_share_one_lookup() {
+        let gate = BatchGate::new(0.0);
+        let k = key(4);
+        let Role::Leader(leader) = gate.join(&k) else {
+            panic!("first arrival must lead");
+        };
+        let Role::Follower(f1) = gate.join(&k) else {
+            panic!("second arrival must follow");
+        };
+        let Role::Follower(_f2) = gate.join(&k) else {
+            panic!("third arrival must follow");
+        };
+        // A different key is its own batch.
+        let Role::Leader(_other) = gate.join(&key(8)) else {
+            panic!("distinct keys must not coalesce");
+        };
+        let plan = dummy_plan();
+        let members = gate.seal(&k, &leader, Ok((plan.clone(), false, 7)));
+        assert_eq!(members, 3);
+        let sh = f1.share().unwrap();
+        assert_eq!(sh.members, 3);
+        assert_eq!(sh.gen0, 7);
+        assert!(!sh.hit);
+        assert!(Arc::ptr_eq(&sh.plan, &plan));
+        // Sealed: the key is free again, next arrival leads anew.
+        let Role::Leader(_next) = gate.join(&k) else {
+            panic!("sealed batches must not admit followers");
+        };
+    }
+
+    #[test]
+    fn last_settler_takes_the_deposits() {
+        let gate = BatchGate::new(0.0);
+        let k = key(4);
+        let Role::Leader(p) = gate.join(&k) else { panic!() };
+        let Role::Follower(_) = gate.join(&k) else { panic!() };
+        let Role::Follower(_) = gate.join(&k) else { panic!() };
+        gate.seal(&k, &p, Ok((dummy_plan(), true, 0)));
+        // Member 1 withdraws (say, sharded fan-out) — not last, no batch.
+        assert!(p.withdraw().is_none());
+        // Member 2 deposits — still one outstanding.
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let q = crate::service::queue::test_support::queued_job(tx);
+        assert!(p.deposit(q).is_none());
+        // Member 3 withdraws last and inherits the dispatch.
+        let batch = p.withdraw().expect("last settler takes the batch");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn leader_error_is_inherited_by_followers() {
+        let gate = BatchGate::new(0.0);
+        let k = key(4);
+        let Role::Leader(p) = gate.join(&k) else { panic!() };
+        let Role::Follower(f) = gate.join(&k) else { panic!() };
+        gate.seal(&k, &p, Err("no such engine".into()));
+        assert_eq!(f.share().unwrap_err(), "no such engine");
+        // Error path still settles cleanly: no deposits, no dispatch.
+        assert!(p.withdraw().is_none());
+        assert!(f.withdraw().is_none());
+    }
+}

@@ -16,13 +16,25 @@
 //! * [`admission`] — the paper's analytical criteria as an admission
 //!   policy: jobs whose predicted runtime exceeds the budget are
 //!   downgraded or refused, with the bottleneck classification in the
-//!   refusal.
+//!   refusal — plus the multi-tenant plane: deficit-round-robin
+//!   fair-share over roofline cost and an EDF deadline tier
+//!   ([`admission::TenantSched`]);
+//! * [`batch`] — PlanKey-coalesced batch dispatch: concurrent jobs
+//!   with identical plan keys share one plan-cache lookup, one backend
+//!   resolution, and one kernel compilation, bit-identically to
+//!   unbatched execution.
+//!
+//! [`session`] also implements bit-exact tiering: under a
+//! `--resident-bytes` cap, idle sessions spill their fields to disk
+//! through the lossless hex-f64 codec and are restored transparently
+//! on their next `advance`/`fetch`.
 //!
 //! [`server`] wires them together; aggregate accounting lives in
 //! [`coordinator::metrics`](crate::coordinator::metrics) and renders
 //! through [`report::service_stats`](crate::report::service_stats).
 
 pub mod admission;
+pub mod batch;
 pub mod plan_cache;
 pub mod protocol;
 pub mod queue;

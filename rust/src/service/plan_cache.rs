@@ -160,6 +160,19 @@ impl PlanCache {
         self.inner.lock().unwrap().generation
     }
 
+    /// Whether the cache was invalidated after a caller observed
+    /// generation `gen0`.  This is the *batched*-lookup analogue of
+    /// the in-`plan` stamp check above: a batch leader records
+    /// `generation()` before performing the one shared lookup, and
+    /// every follower re-checks with `stale_since(gen0)` before
+    /// adopting the leader's plan — if a profile install cleared the
+    /// cache in between, followers fall back to their own fresh
+    /// lookup instead of executing a plan scored under superseded
+    /// constants.
+    pub fn stale_since(&self, gen0: u64) -> bool {
+        self.generation() != gen0
+    }
+
     /// One consistent snapshot of all counters, deltas measured since
     /// the last [`PlanCache::stats_window`].  Pure: reading stats from
     /// a side channel (the `metrics` verb, tests) does not move the
@@ -318,6 +331,25 @@ mod tests {
         cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
         let s = cache.stats_window();
         assert_eq!((s.hits, s.d_hits), (2, 1));
+    }
+
+    #[test]
+    fn batched_lookup_invalidation_contract() {
+        // A batch leader stamps the generation before its one shared
+        // lookup; a clear() landing while members gather must be
+        // visible to every follower through stale_since().
+        let cache = PlanCache::new(8);
+        let gen0 = cache.generation();
+        let (plan, _) = cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        assert!(!cache.stale_since(gen0), "no clear: followers may adopt the leader's plan");
+        cache.clear(); // profile install while the batch gathers
+        assert!(cache.stale_since(gen0), "followers must re-plan, not adopt");
+        // the fallback lookup is a fresh miss under the new generation
+        let gen1 = cache.generation();
+        let (replan, hit) = cache.plan(&req(Shape::Box, 2, 1), None).unwrap();
+        assert!(!hit);
+        assert!(!cache.stale_since(gen1));
+        assert!(!Arc::ptr_eq(&plan, &replan), "pre-clear plan is never served post-clear");
     }
 
     #[test]

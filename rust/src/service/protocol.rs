@@ -15,7 +15,7 @@
 //!                  ( "field": [f64...] | "init": "gaussian"|"zeros" )
 //! advance        = "session": name, "steps": n, [ "t": depth ],
 //!                  [ "temporal": "auto"|"sweep"|"blocked" ],
-//!                  [ "shards": "auto"|n ]
+//!                  [ "shards": "auto"|n ], [ "deadline_ms": ms ]
 //! fetch          = "session": name, [ "encoding": "num"|"hex" ]
 //! close_session  = "session": name
 //! stats          = [ "prom": true ]   (adds a Prometheus-text block)
@@ -27,7 +27,16 @@
 //!                  [ "steps": n ], [ "t": depth ], [ "backend": kind ],
 //!                  [ "temporal": "auto"|"sweep"|"blocked" ],
 //!                  [ "shards": "auto"|n ],
-//!                  [ "threads": n ], [ "weights": [f64...] ]
+//!                  [ "threads": n ], [ "weights": [f64...] ],
+//!                  [ "tenant": id ], [ "deadline_ms": ms ]
+//!
+//! `"tenant"` names the session's owner for fair-share scheduling and
+//! per-tenant accounting (default `"default"`); `"deadline_ms"` marks a
+//! job SLO-bound — `advance` refuses it up front (error
+//! `deadline_unmeetable`, with the roofline-predicted completion time)
+//! when the model proves it cannot finish in time, and meetable
+//! deadline jobs dispatch through the queue's EDF tier ahead of
+//! best-effort work.
 //!
 //! `"pattern"` is the compact grammar (`box-2d1r`, `star-3d1r:sparse24`)
 //! and takes precedence over `shape`/`d`/`r`; an explicit `"coeffs"`
@@ -79,6 +88,11 @@ pub struct JobSpec {
     pub threads: usize,
     /// Base stencil weights; `None` = support-normalized uniform.
     pub weights: Option<Vec<f64>>,
+    /// Owning tenant id — the fair-share scheduling and per-tenant
+    /// accounting key (`"default"` when the client names none).
+    pub tenant: String,
+    /// Per-job SLO deadline in milliseconds (None = best-effort).
+    pub deadline_ms: Option<f64>,
 }
 
 /// How a new session's field is initialized.
@@ -101,6 +115,8 @@ pub enum Request {
         t: Option<usize>,
         temporal: Option<TemporalMode>,
         shards: Option<ShardSpec>,
+        /// SLO deadline for this advance (None = best-effort tier).
+        deadline_ms: Option<f64>,
     },
     Fetch { session: String, hex: bool },
     CloseSession { session: String },
@@ -167,6 +183,7 @@ impl Request {
                 t: opt_usize(j, "t")?,
                 temporal: opt_str(j, "temporal").map(TemporalMode::parse).transpose()?,
                 shards: opt_shards(j)?,
+                deadline_ms: opt_f64(j, "deadline_ms")?,
             }),
             "fetch" => Ok(Request::Fetch {
                 session: req_str(j, "session")?,
@@ -219,6 +236,8 @@ impl JobSpec {
             shards: opt_shards(j)?.unwrap_or(ShardSpec::Auto),
             threads: opt_usize(j, "threads")?.unwrap_or(4).max(1),
             weights: opt_f64_vec(j, "weights")?,
+            tenant: opt_str(j, "tenant").unwrap_or("default").to_string(),
+            deadline_ms: opt_f64(j, "deadline_ms")?,
         })
     }
 
@@ -255,6 +274,17 @@ fn opt_usize(j: &Json, k: &str) -> Result<Option<usize>> {
             .as_usize()
             .map(Some)
             .ok_or_else(|| anyhow!("field {k:?} must be a non-negative integer")),
+    }
+}
+
+fn opt_f64(j: &Json, k: &str) -> Result<Option<f64>> {
+    match j.as_obj().and_then(|o| o.get(k)) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .map(Some)
+            .ok_or_else(|| anyhow!("field {k:?} must be a non-negative number")),
     }
 }
 
@@ -513,7 +543,7 @@ mod tests {
 
     #[test]
     fn advance_and_fetch_parse() {
-        let Request::Advance { session, steps, t, temporal, shards } =
+        let Request::Advance { session, steps, t, temporal, shards, deadline_ms } =
             parse(r#"{"op":"advance","session":"a","steps":4,"t":2}"#).unwrap()
         else {
             panic!("expected advance");
@@ -521,6 +551,7 @@ mod tests {
         assert_eq!((session.as_str(), steps, t), ("a", 4, Some(2)));
         assert_eq!(temporal, None);
         assert_eq!(shards, None);
+        assert_eq!(deadline_ms, None);
         let Request::Advance { temporal, shards, .. } =
             parse(r#"{"op":"advance","session":"a","steps":4,"temporal":"blocked","shards":3}"#)
                 .unwrap()
@@ -558,6 +589,34 @@ mod tests {
             panic!("expected fetch");
         };
         assert!(!hex);
+    }
+
+    #[test]
+    fn tenant_and_deadline_parse() {
+        // jobspec default tenant, no deadline
+        let Request::Plan(s) = parse(r#"{"op":"plan"}"#).unwrap() else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.tenant, "default");
+        assert_eq!(s.deadline_ms, None);
+        // explicit tenant + deadline on a jobspec
+        let Request::Plan(s) =
+            parse(r#"{"op":"plan","tenant":"acme","deadline_ms":12.5}"#).unwrap()
+        else {
+            panic!("expected plan");
+        };
+        assert_eq!(s.tenant, "acme");
+        assert_eq!(s.deadline_ms, Some(12.5));
+        // per-advance deadline
+        let Request::Advance { deadline_ms, .. } =
+            parse(r#"{"op":"advance","session":"a","steps":2,"deadline_ms":250}"#).unwrap()
+        else {
+            panic!("expected advance");
+        };
+        assert_eq!(deadline_ms, Some(250.0));
+        // malformed deadlines are rejected, not silently dropped
+        assert!(parse(r#"{"op":"advance","session":"a","deadline_ms":-1}"#).is_err());
+        assert!(parse(r#"{"op":"advance","session":"a","deadline_ms":"soon"}"#).is_err());
     }
 
     #[test]

@@ -8,6 +8,19 @@
 //! * [`Task::Job`] — the monolithic path: one worker resolves a
 //!   backend, advances the session's resident field under the session
 //!   lock, and replies with the job's [`RunMetrics`].
+//! * [`Task::Batch`] — N coalesced monolithic jobs with identical
+//!   `PlanKey`s: one worker resolves a single backend (one kernel
+//!   compilation) and advances each member's session in turn, replying
+//!   per member.  Execution order within the batch is the arrival
+//!   order, so results are bit-identical to running the members
+//!   sequentially unbatched.
+//!
+//! Deadline (`deadline_ms`) jobs admitted through the EDF tier bypass
+//! the FIFO: [`JobQueue::push_urgent`] keeps an
+//! earliest-deadline-first side queue that workers drain before any
+//! FIFO task.  [`JobQueue::depth`] is job-weighted — a coalesced batch
+//! counts as its member-job count, not 1 — so the queue-depth gauge
+//! and `PushError::Full` evidence reflect real backlog.
 //! * [`Task::Shard`] — one shard × one synchronization phase of a
 //!   [`ShardedRun`]: an admitted job fans out into `S` shard tasks
 //!   that run on multiple workers **concurrently**, each computing its
@@ -35,11 +48,19 @@ use crate::coordinator::grid::ShardPlan;
 use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
 use crate::obs;
 
-use super::session::Session;
+use super::session::{Session, SessionStore};
 
 /// One admitted monolithic job, bound to its session and reply channel.
 pub struct QueuedJob {
     pub session: Arc<Mutex<Session>>,
+    /// Owning tenant, for per-tenant refusal attribution when a
+    /// coalesced batch push is refused by a full queue.
+    pub tenant: String,
+    /// The owning store, when session tiering is on: the executing
+    /// worker restores a spilled field under the session lock right
+    /// before advancing (an `enforce` between admission and execution
+    /// may have spilled it).
+    pub store: Option<Arc<SessionStore>>,
     pub job: backend::Job,
     pub kind: backend::BackendKind,
     /// Whether a PJRT resolution can possibly succeed (manifest present
@@ -58,15 +79,37 @@ pub struct QueuedJob {
     pub queued_ns: u64,
 }
 
+/// N monolithic jobs coalesced on one `PlanKey`: plan resolution
+/// happened once at the gate; kernel compilation happens once here.
+pub struct BatchRun {
+    pub members: Vec<QueuedJob>,
+    /// Canonical `PlanKey` the members coalesced on (obs label).
+    pub key: String,
+}
+
 /// One schedulable unit.
 pub enum Task {
     /// A whole job, executed by one worker (shards = 1).
     Job(QueuedJob),
+    /// Coalesced identical-`PlanKey` jobs, executed back-to-back by one
+    /// worker sharing a single backend resolution.
+    Batch(BatchRun),
     /// Shard `usize` of a sharded run's current phase.
     Shard(Arc<ShardedRun>, usize),
     /// Background machine recalibration (`--retune auto` after drift):
     /// run the microbenchmark suite and install the fresh profile.
     Retune(RetuneTask),
+}
+
+impl Task {
+    /// Member-job count for queue-depth accounting (a coalesced batch
+    /// is its member count, not 1; maintenance tasks count 1).
+    fn weight(&self) -> usize {
+        match self {
+            Task::Batch(b) => b.members.len().max(1),
+            _ => 1,
+        }
+    }
 }
 
 /// A scheduled background recalibration.  Runs on an ordinary pool
@@ -155,7 +198,20 @@ pub enum PushError {
 #[derive(Default)]
 struct Inner {
     tasks: VecDeque<Task>,
+    /// EDF tier: kept sorted by (absolute deadline ns, admission seq);
+    /// workers drain it before any FIFO task.
+    urgent: VecDeque<(u64, u64, Task)>,
+    /// Tie-break sequence for equal deadlines (admission order).
+    useq: u64,
     open: bool,
+}
+
+impl Inner {
+    /// Job-weighted backlog across both tiers.
+    fn weight(&self) -> usize {
+        self.tasks.iter().map(Task::weight).sum::<usize>()
+            + self.urgent.iter().map(|(_, _, t)| t.weight()).sum::<usize>()
+    }
 }
 
 /// Bounded MPMC task queue (Mutex + Condvar; std only).
@@ -169,7 +225,7 @@ impl JobQueue {
     pub fn new(cap: usize) -> JobQueue {
         JobQueue {
             cap: cap.max(1),
-            inner: Mutex::new(Inner { tasks: VecDeque::new(), open: true }),
+            inner: Mutex::new(Inner { open: true, ..Inner::default() }),
             ready: Condvar::new(),
         }
     }
@@ -188,8 +244,10 @@ impl JobQueue {
         if !g.open {
             return Err(PushError::Closed);
         }
-        if g.tasks.len() + ts.len() > self.cap {
-            return Err(PushError::Full { depth: g.tasks.len(), cap: self.cap });
+        let incoming: usize = ts.iter().map(Task::weight).sum();
+        let depth = g.weight();
+        if depth + incoming > self.cap {
+            return Err(PushError::Full { depth, cap: self.cap });
         }
         let n = ts.len();
         g.tasks.extend(ts);
@@ -199,6 +257,27 @@ impl JobQueue {
         } else {
             self.ready.notify_all();
         }
+        Ok(())
+    }
+
+    /// Admit a deadline job into the EDF tier: capacity-checked like
+    /// [`JobQueue::push`], but popped before any FIFO task, earliest
+    /// absolute deadline first (admission order breaks ties).
+    pub fn push_urgent(&self, t: Task, deadline_ns: u64) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.open {
+            return Err(PushError::Closed);
+        }
+        let depth = g.weight();
+        if depth + t.weight() > self.cap {
+            return Err(PushError::Full { depth, cap: self.cap });
+        }
+        g.useq += 1;
+        let seq = g.useq;
+        let at = g.urgent.partition_point(|&(d, s, _)| (d, s) <= (deadline_ns, seq));
+        g.urgent.insert(at, (deadline_ns, seq, t));
+        drop(g);
+        self.ready.notify_one();
         Ok(())
     }
 
@@ -228,10 +307,14 @@ impl JobQueue {
         self.ready.notify_all();
     }
 
-    /// Blocking worker pop; `None` once closed and drained.
+    /// Blocking worker pop; `None` once closed and drained.  The EDF
+    /// tier drains ahead of the FIFO.
     pub fn pop(&self) -> Option<Task> {
         let mut g = self.inner.lock().unwrap();
         loop {
+            if let Some((_, _, t)) = g.urgent.pop_front() {
+                return Some(t);
+            }
             if let Some(t) = g.tasks.pop_front() {
                 return Some(t);
             }
@@ -250,8 +333,10 @@ impl JobQueue {
         self.ready.notify_all();
     }
 
+    /// Job-weighted backlog: a coalesced batch counts as its member-job
+    /// count, not 1 — the gauge must not understate a loaded queue.
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().tasks.len()
+        self.inner.lock().unwrap().weight()
     }
 }
 
@@ -582,6 +667,7 @@ impl WorkerPool {
                                     // A vanished receiver (client gone) is fine.
                                     let _ = q.reply.send(res);
                                 }
+                                Task::Batch(b) => run_batch(b, &queue, &counters),
                                 Task::Shard(run, idx) => {
                                     ShardedRun::run_shard(&run, &queue, idx)
                                 }
@@ -613,13 +699,135 @@ fn execute(q: &QueuedJob) -> Result<RunMetrics, String> {
     };
     let mut be = backend::create(kind, &q.artifacts_dir, &q.job, None)
         .map_err(|e| format!("{e:#}"))?;
+    advance_member(be.as_mut(), q)
+}
+
+/// Advance one (possibly batched) member against its session under the
+/// session lock, restoring a spilled field first when tiering is on.
+fn advance_member(
+    be: &mut dyn backend::Backend,
+    q: &QueuedJob,
+) -> Result<RunMetrics, String> {
     let mut s = q.session.lock().unwrap();
     if s.busy {
         return Err("session busy: a sharded advance is in flight".to_string());
     }
+    if let Some(store) = &q.store {
+        store.ensure_resident(&mut s).map_err(|e| format!("{e:#}"))?;
+        store.touch(&mut s);
+    }
     let m = be.advance(&q.job, &mut s.field).map_err(|e| format!("{e:#}"))?;
     s.stats.record_run(&m);
     Ok(m)
+}
+
+/// Run a coalesced batch: one backend resolution (one kernel
+/// compilation) shared by every member.  Identical `PlanKey`s mean
+/// identical kernel-selection axes; weights and fields are per-advance
+/// arguments, so executing members back-to-back in arrival order is
+/// bit-identical to running them sequentially unbatched.
+fn run_batch(b: BatchRun, queue: &JobQueue, counters: &Arc<ServiceCounters>) {
+    if b.members.is_empty() {
+        return;
+    }
+    let b0 = if obs::enabled() { obs::now_ns() } else { 0 };
+    let jobs = b.members.len() as u64;
+    let lead_trace = b.members[0].trace;
+    let first = &b.members[0];
+    let kind = match first.kind {
+        backend::BackendKind::Auto if !first.pjrt_possible => backend::BackendKind::Native,
+        k => k,
+    };
+    match backend::create(kind, &first.artifacts_dir, &first.job, None) {
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for q in &b.members {
+                ServiceCounters::bump(&counters.jobs_failed);
+                let _ = q.reply.send(Err(msg.clone()));
+            }
+        }
+        Ok(mut be) => {
+            for q in &b.members {
+                let _in_trace = obs::trace_scope(q.trace);
+                let popped = obs::now_ns();
+                obs::metrics().queue_wait_ns.observe(popped.saturating_sub(q.queued_ns) as f64);
+                if obs::enabled() {
+                    obs::record(
+                        obs::SpanKind::QueueWait,
+                        q.queued_ns,
+                        popped,
+                        obs::Payload::Queue { depth: queue.depth() as u64 },
+                    );
+                }
+                let res = advance_member(be.as_mut(), q);
+                match &res {
+                    Ok(m) => counters.record_run(m),
+                    Err(_) => ServiceCounters::bump(&counters.jobs_failed),
+                }
+                let _ = q.reply.send(res);
+            }
+        }
+    }
+    if obs::enabled() {
+        let _in_trace = obs::trace_scope(lead_trace);
+        obs::record(
+            obs::SpanKind::Batch,
+            b0,
+            obs::now_ns(),
+            obs::Payload::Batch { jobs, key: b.key },
+        );
+    }
+}
+
+/// Minimal [`QueuedJob`] construction for sibling modules' unit tests
+/// (the batch gate's settle/dispatch bookkeeping needs real jobs).
+#[cfg(test)]
+pub mod test_support {
+    use super::*;
+    use crate::model::perf::Dtype;
+    use crate::model::stencil::{Shape, StencilPattern};
+    use crate::service::protocol::{FieldInit, JobSpec};
+
+    pub fn queued_job(reply: mpsc::Sender<Result<RunMetrics, String>>) -> QueuedJob {
+        let spec = JobSpec {
+            pattern: StencilPattern::new(Shape::Star, 2, 1).unwrap(),
+            dtype: Dtype::F64,
+            domain: vec![8, 8],
+            steps: 1,
+            t: None,
+            backend: backend::BackendKind::Native,
+            temporal: backend::TemporalMode::Auto,
+            shards: crate::coordinator::grid::ShardSpec::Auto,
+            threads: 1,
+            weights: None,
+            tenant: "default".to_string(),
+            deadline_ms: None,
+        };
+        let session =
+            Arc::new(Mutex::new(Session::create("ts", &spec, &FieldInit::Zeros).unwrap()));
+        let job = backend::Job {
+            pattern: spec.pattern,
+            dtype: spec.dtype,
+            domain: spec.domain.clone(),
+            steps: 1,
+            t: 1,
+            temporal: backend::TemporalMode::Sweep,
+            weights: Default::default(),
+            threads: 1,
+        };
+        QueuedJob {
+            session,
+            tenant: "default".to_string(),
+            store: None,
+            job,
+            kind: backend::BackendKind::Native,
+            pjrt_possible: false,
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            reply,
+            trace: 0,
+            queued_ns: obs::now_ns(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -644,6 +852,8 @@ mod tests {
             shards: ShardSpec::Auto,
             threads: 1,
             weights: None,
+            tenant: "default".into(),
+            deadline_ms: None,
         };
         Arc::new(Mutex::new(Session::create("q", &spec, &FieldInit::Gaussian).unwrap()))
     }
@@ -668,6 +878,8 @@ mod tests {
             pjrt_possible: false,
             artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
             session: session.clone(),
+            tenant: "default".to_string(),
+            store: None,
             reply,
             trace: 0,
             queued_ns: obs::now_ns(),
@@ -774,6 +986,79 @@ mod tests {
         let g = run2.session.lock().unwrap();
         assert!(!g.busy);
         assert_eq!(g.field.len(), 64, "field restored on refusal");
+    }
+
+    #[test]
+    fn batched_members_match_sequential_and_depth_is_job_weighted() {
+        // Three identical-PlanKey sessions advanced as one Task::Batch
+        // must be bit-identical to the same three advanced one by one.
+        let mk = || sess(vec![9, 7]);
+        let (b1, b2, b3) = (mk(), mk(), mk());
+        let (u1, u2, u3) = (mk(), mk(), mk());
+        let (tx, rx) = mpsc::channel();
+        let queue = Arc::new(JobQueue::new(16));
+        let batch = BatchRun {
+            members: vec![qjob(&b1, tx.clone()), qjob(&b2, tx.clone()), qjob(&b3, tx.clone())],
+            key: "test-key".into(),
+        };
+        queue.push(Task::Batch(batch)).unwrap();
+        assert_eq!(queue.depth(), 3, "a coalesced batch counts its members");
+        let counters = Arc::new(ServiceCounters::default());
+        let pool = WorkerPool::start(1, queue.clone(), counters.clone());
+        for _ in 0..3 {
+            rx.recv().unwrap().unwrap();
+        }
+        // unbatched reference runs
+        for s in [&u1, &u2, &u3] {
+            queue.push(Task::Job(qjob(s, tx.clone()))).unwrap();
+        }
+        for _ in 0..3 {
+            rx.recv().unwrap().unwrap();
+        }
+        queue.close();
+        pool.join();
+        for (b, u) in [(&b1, &u1), (&b2, &u2), (&b3, &u3)] {
+            let (bg, ug) = (b.lock().unwrap(), u.lock().unwrap());
+            for (i, (x, y)) in bg.field.iter().zip(&ug.field).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "point {i}");
+            }
+            assert_eq!(bg.stats.jobs, 1);
+        }
+        assert_eq!(counters.snapshot().jobs_completed, 6);
+    }
+
+    #[test]
+    fn urgent_tier_pops_in_deadline_order_before_fifo() {
+        let queue = JobQueue::new(8);
+        let s = sess(vec![6, 6]);
+        let (tx, _rx) = mpsc::channel();
+        queue.push(Task::Job(qjob(&s, tx.clone()))).unwrap(); // FIFO
+        let tag = |t: Task| match t {
+            Task::Job(q) => q.job.steps,
+            _ => panic!("expected job"),
+        };
+        let mut late = qjob(&s, tx.clone());
+        late.job.steps = 90;
+        let mut soon = qjob(&s, tx.clone());
+        soon.job.steps = 91;
+        queue.push_urgent(Task::Job(late), 5_000).unwrap();
+        queue.push_urgent(Task::Job(soon), 1_000).unwrap();
+        assert_eq!(queue.depth(), 3);
+        assert_eq!(tag(queue.pop().unwrap()), 91, "earliest deadline first");
+        assert_eq!(tag(queue.pop().unwrap()), 90, "then the later deadline");
+        assert_eq!(tag(queue.pop().unwrap()), 2, "FIFO drains last");
+        // urgent pushes respect capacity and the closed flag
+        let tiny = JobQueue::new(1);
+        tiny.push(Task::Job(qjob(&s, tx.clone()))).unwrap();
+        assert_eq!(
+            tiny.push_urgent(Task::Job(qjob(&s, tx.clone())), 1).unwrap_err(),
+            PushError::Full { depth: 1, cap: 1 }
+        );
+        tiny.close();
+        assert_eq!(
+            tiny.push_urgent(Task::Job(qjob(&s, tx)), 1).unwrap_err(),
+            PushError::Closed
+        );
     }
 
     #[test]

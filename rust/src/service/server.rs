@@ -14,6 +14,21 @@
 //! connection thread blocks on the job's reply channel, so each client
 //! sees strictly ordered responses while jobs from different clients
 //! execute concurrently on the worker pool.
+//!
+//! Multi-tenant serving (this layer's scale story) adds three planes:
+//!
+//! * **batching** — concurrent `advance`s with identical
+//!   [`PlanKey`](crate::coordinator::planner::PlanKey)s coalesce at
+//!   the [`BatchGate`](super::batch::BatchGate): one shared plan
+//!   lookup, one `Task::Batch` dispatch, per-job metrics, bit-exact;
+//! * **fairness/SLO** — after the per-job budget check,
+//!   [`TenantSched`](super::admission::TenantSched) runs
+//!   deficit-round-robin over roofline cost (`fair_share` refusals
+//!   under pressure) and an EDF deadline tier (`deadline_unmeetable`
+//!   refusals carry the predicted completion as evidence);
+//! * **tiering** — under `--resident-bytes`, idle sessions spill to
+//!   disk via the lossless hex-f64 codec and restore transparently
+//!   ([`SessionStore::enforce`]).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener};
@@ -25,8 +40,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::backend;
 use crate::coordinator::grid::{ShardPlan, ShardSpec};
-use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
-use crate::coordinator::planner::{self, Plan};
+use crate::coordinator::metrics::{RunMetrics, ServiceCounters, TenantLedger};
+use crate::coordinator::planner::{self, Plan, PlanKey};
 use crate::hardware::Gpu;
 use crate::model::perf::Unit;
 use crate::obs;
@@ -37,10 +52,13 @@ use crate::tune::micro::MicroOpts;
 use crate::tune::profile::MachineProfile;
 use crate::util::json::Json;
 
-use super::admission::{self, Decision};
+use super::admission::{self, Decision, TenantSched, TenantVerdict};
+use super::batch::{self, BatchGate};
 use super::plan_cache::PlanCache;
 use super::protocol::{self, JobSpec, Obj, Request};
-use super::queue::{JobQueue, PushError, QueuedJob, RetuneTask, ShardedRun, Task, WorkerPool};
+use super::queue::{
+    BatchRun, JobQueue, PushError, QueuedJob, RetuneTask, ShardedRun, Task, WorkerPool,
+};
 use super::session::{Session, SessionStore};
 
 /// Daemon configuration (`stencilctl serve` flags).
@@ -81,6 +99,17 @@ pub struct ServeOpts {
     /// --threads N` would use so an auto-retuned profile is measured
     /// under the same parallelism as an operator-measured one.
     pub probe_threads: usize,
+    /// Resident-field byte budget (`--resident-bytes`): when the sum of
+    /// in-memory session fields exceeds it, idle sessions spill to disk
+    /// LRU-first and restore transparently on next use.  `None` = every
+    /// session stays resident.
+    pub resident_bytes: Option<u64>,
+    /// Batch-coalescing gather window in milliseconds
+    /// (`--batch-window-ms`): how long the first arrival for a
+    /// `PlanKey` waits for co-batchers before performing the one shared
+    /// plan lookup.  0 still coalesces jobs that arrive while the
+    /// leader plans, without adding latency.
+    pub batch_window_ms: f64,
 }
 
 impl Default for ServeOpts {
@@ -98,6 +127,8 @@ impl Default for ServeOpts {
             retune: RetuneMode::Off,
             drift_threshold: drift::DRIFT_THRESHOLD,
             probe_threads: 4,
+            resident_bytes: None,
+            batch_window_ms: 0.0,
         }
     }
 }
@@ -105,12 +136,18 @@ impl Default for ServeOpts {
 /// Everything a connection handler or worker can reach.
 pub struct ServiceState {
     pub opts: ServeOpts,
-    pub sessions: SessionStore,
+    pub sessions: Arc<SessionStore>,
     pub plans: Arc<PlanCache>,
     pub counters: Arc<ServiceCounters>,
     /// The live machine profile + drift tracker every planning decision
     /// resolves its constants from.
     pub profile: Arc<ProfileHub>,
+    /// Per-tenant admitted/refused/deadline-missed accounting.
+    pub tenants: TenantLedger,
+    /// DRR fair-share + EDF deadline admission (roofline-cost currency).
+    pub sched: TenantSched,
+    /// PlanKey-coalescing gate for batched dispatch.
+    batches: BatchGate,
     queue: Arc<JobQueue>,
     manifest: Option<Manifest>,
     shutdown: AtomicBool,
@@ -146,11 +183,18 @@ impl Service {
         let counters = Arc::new(ServiceCounters::default());
         let workers = opts.workers.max(1);
         let profile = Arc::new(ProfileHub::new(opts.profile.clone(), opts.drift_threshold));
+        let sessions = Arc::new(match opts.resident_bytes {
+            Some(cap) => SessionStore::with_tiering(spill_dir(), cap),
+            None => SessionStore::new(),
+        });
         let state = Arc::new(ServiceState {
-            sessions: SessionStore::new(),
+            sessions,
             plans: Arc::new(PlanCache::new(opts.plan_cache_cap)),
             counters: counters.clone(),
             profile,
+            tenants: TenantLedger::default(),
+            sched: TenantSched::new(workers),
+            batches: BatchGate::new(opts.batch_window_ms),
             queue: queue.clone(),
             manifest,
             shutdown: AtomicBool::new(false),
@@ -286,6 +330,51 @@ pub fn handle_line(state: &ServiceState, line: &str) -> (String, bool) {
     }
 }
 
+/// Per-daemon spill directory: unique per process AND per `Service`
+/// instance, so parallel services (tests) never share or delete each
+/// other's spill files.
+fn spill_dir() -> PathBuf {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("stencilctl-spill-{}-{n}", std::process::id()))
+}
+
+/// The planner request an `advance`/`plan` resolves through the cache.
+/// Split out of [`plan_for`] because its [`PlanKey`] doubles as the
+/// batch-coalescing key: the gate must key arrivals *before* any
+/// lookup happens.
+fn planner_request(
+    state: &ServiceState,
+    spec: &JobSpec,
+    steps: usize,
+    t: Option<usize>,
+) -> planner::Request {
+    // A fan-out is admitted as one atomic batch, so no candidate may
+    // propose more shards than --max-queue can hold: clamp the lane
+    // budget (bounds Auto enumeration) and any pinned count BEFORE
+    // planning, so admission prices exactly the fan-out that will run.
+    let queue_cap = state.opts.max_queue.max(1);
+    let shards = match spec.shards {
+        ShardSpec::Fixed(n) => ShardSpec::Fixed(n.min(queue_cap).max(1)),
+        ShardSpec::Auto => ShardSpec::Auto,
+    };
+    planner::Request {
+        pattern: spec.pattern,
+        dtype: spec.dtype,
+        domain: spec.domain.clone(),
+        steps,
+        gpu: state.profile.gpu(),
+        backend: spec.backend,
+        max_t: t.unwrap_or(8).max(1),
+        temporal: spec.temporal,
+        shards,
+        lanes: state.opts.workers.max(1).min(queue_cap),
+        threads: spec.threads.max(1),
+        kernels: crate::backend::kernels::default_mode(),
+        kernel_peaks: state.profile.kernel_peaks(),
+    }
+}
+
 /// Plan through the shared cache, bumping the hit/miss counters.
 /// The shard axis makes planning domain- and parallelism-aware: the
 /// serve pool's worker count is the shard lane budget, the session's
@@ -298,15 +387,6 @@ fn plan_for(
     steps: usize,
     t: Option<usize>,
 ) -> Result<(Arc<Plan>, bool)> {
-    // A fan-out is admitted as one atomic batch, so no candidate may
-    // propose more shards than --max-queue can hold: clamp the lane
-    // budget (bounds Auto enumeration) and any pinned count BEFORE
-    // planning, so admission prices exactly the fan-out that will run.
-    let queue_cap = state.opts.max_queue.max(1);
-    let shards = match spec.shards {
-        ShardSpec::Fixed(n) => ShardSpec::Fixed(n.min(queue_cap).max(1)),
-        ShardSpec::Auto => ShardSpec::Auto,
-    };
     // Constants are read from the hub BEFORE planning; if a retune
     // installs a fresh profile while the planner is scoring, the plan
     // we just built (and possibly memoized — a post-install measured
@@ -319,21 +399,7 @@ fn plan_for(
     let p0 = if obs::enabled() { obs::now_ns() } else { 0 };
     loop {
         let hub_gen = state.profile.generation();
-        let req = planner::Request {
-            pattern: spec.pattern,
-            dtype: spec.dtype,
-            domain: spec.domain.clone(),
-            steps,
-            gpu: state.profile.gpu(),
-            backend: spec.backend,
-            max_t: t.unwrap_or(8).max(1),
-            temporal: spec.temporal,
-            shards,
-            lanes: state.opts.workers.max(1).min(queue_cap),
-            threads: spec.threads.max(1),
-            kernels: crate::backend::kernels::default_mode(),
-            kernel_peaks: state.profile.kernel_peaks(),
-        };
+        let req = planner_request(state, spec, steps, t);
         let (plan, hit) = state.plans.plan(&req, state.manifest.as_ref())?;
         attempts += 1;
         if state.profile.generation() == hub_gen || attempts >= 3 {
@@ -402,6 +468,9 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
             let points = s.points();
             let label = s.pattern.label();
             state.sessions.create(s)?;
+            // A new resident field may push the store over its
+            // --resident-bytes cap; idle sessions spill LRU-first.
+            state.sessions.enforce();
             Ok((
                 protocol::ok("create_session")
                     .str_("session", &session)
@@ -412,15 +481,15 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
                 true,
             ))
         }
-        Request::Advance { session, steps, t, temporal, shards } => {
-            advance(state, &session, steps, t, temporal, shards)
+        Request::Advance { session, steps, t, temporal, shards, deadline_ms } => {
+            advance(state, &session, steps, t, temporal, shards, deadline_ms)
         }
         Request::Fetch { session, hex } => {
             let sess = state
                 .sessions
                 .get(&session)
                 .ok_or_else(|| anyhow!("unknown session {session:?}"))?;
-            let g = sess.lock().unwrap();
+            let mut g = sess.lock().unwrap();
             if g.busy {
                 // The field is checked out into the shard executor —
                 // refuse rather than serving the empty placeholder.
@@ -433,14 +502,19 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
                     true,
                 ));
             }
-            Ok((
-                protocol::ok("fetch")
-                    .str_("session", &session)
-                    .int("len", g.field.len() as u64)
-                    .set("field", protocol::encode_field(&g.field, hex))
-                    .done(),
-                true,
-            ))
+            // A spilled session restores transparently for the read.
+            state.sessions.ensure_resident(&mut g)?;
+            state.sessions.touch(&mut g);
+            let resp = protocol::ok("fetch")
+                .str_("session", &session)
+                .int("len", g.field.len() as u64)
+                .set("field", protocol::encode_field(&g.field, hex))
+                .done();
+            drop(g);
+            // The restore may have pushed the store back over its cap;
+            // this session was just touched, so LRU spills others first.
+            state.sessions.enforce();
+            Ok((resp, true))
         }
         Request::CloseSession { session } => {
             if let Some(sess) = state.sessions.get(&session) {
@@ -472,15 +546,18 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
             snap.queue_depth = state.queue_depth() as u64;
             // Pure read — the delta window belongs to the `stats` op.
             let cache = state.plans.stats();
-            let text = obs::metrics().exposition(&snap, &cache);
+            let trows = state.tenants.rows(&state.sessions.tenant_bytes());
+            let text = obs::metrics().exposition(&snap, &cache, &trows);
             Ok((protocol::ok("metrics").str_("exposition", &text).done(), true))
         }
     }
 }
 
-/// The full `advance` path: plan → admission → fan out (shard tasks
-/// when the planner chose >1 shard, one queued job otherwise) → await
-/// metrics → model-feedback (predicted vs. achieved intensity).
+/// The full `advance` path: plan (coalesced across identical-PlanKey
+/// concurrent jobs) → budget admission → tenant fair-share/deadline
+/// admission → dispatch (shard fan-out, coalesced batch, or EDF-tier
+/// solo job) → await metrics → model-feedback (predicted vs. achieved
+/// intensity).
 #[allow(clippy::too_many_arguments)]
 fn advance(
     state: &ServiceState,
@@ -489,6 +566,7 @@ fn advance(
     t: Option<usize>,
     temporal: Option<backend::TemporalMode>,
     shards_override: Option<ShardSpec>,
+    deadline_ms: Option<f64>,
 ) -> Result<(Json, bool)> {
     // Every job gets a trace id at admission; the id and one clock
     // read per job are the only unconditional tracing residue.
@@ -501,7 +579,7 @@ fn advance(
         .ok_or_else(|| anyhow!("unknown session {session:?} (create_session first)"))?;
     // Snapshot the session's identity without holding the lock across
     // planning/queueing (a running job may hold it for a while).
-    let (spec, points) = {
+    let (spec, points, tenant) = {
         let g = sess.lock().unwrap();
         (
             JobSpec {
@@ -516,11 +594,84 @@ fn advance(
                 shards: shards_override.unwrap_or(g.shards),
                 threads: g.threads,
                 weights: Some(g.weights.clone()),
+                tenant: g.tenant.clone(),
+                deadline_ms,
             },
             g.points(),
+            g.tenant.clone(),
         )
     };
-    let (plan, hit) = plan_for(state, &spec, steps, t)?;
+    // ---- plan plane: one cache lookup per coalesced batch ----
+    // Deadline jobs bypass the gate: a latency-bounded job must not
+    // sit out a gather window waiting for co-batchers.
+    let key = planner_request(state, &spec, steps, t).plan_key();
+    let gate = if deadline_ms.is_none() { Some(state.batches.join(&key)) } else { None };
+    let (plan, hit, coalesced) = match &gate {
+        Some(batch::Role::Leader(p)) => {
+            let window = state.batches.window();
+            if !window.is_zero() {
+                std::thread::sleep(window);
+            }
+            // Generation stamp BEFORE the one shared lookup: followers
+            // re-check stale_since(gen0), so a cache invalidation that
+            // races the gather window can never leak a superseded plan
+            // into the batch.
+            let gen0 = state.plans.generation();
+            match plan_for(state, &spec, steps, t) {
+                Ok((plan, hit)) => {
+                    let members = state.batches.seal(&key, p, Ok((plan.clone(), hit, gen0)));
+                    (plan, hit, Some((p.clone(), members)))
+                }
+                Err(e) => {
+                    state.batches.seal(&key, p, Err(format!("{e:#}")));
+                    p.withdraw();
+                    if obs::enabled() {
+                        drop(obs::drain(trace));
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Some(batch::Role::Follower(p)) => match p.share() {
+            Ok(sh) => {
+                if state.plans.stale_since(sh.gen0) {
+                    // The shared lookup was invalidated while the batch
+                    // gathered: fall back to a fresh lookup of our own
+                    // rather than executing a superseded plan.
+                    match plan_for(state, &spec, steps, t) {
+                        Ok((plan, hit)) => (plan, hit, Some((p.clone(), sh.members))),
+                        Err(e) => {
+                            if let Some(b) = p.withdraw() {
+                                dispatch_batch(state, b, &key);
+                            }
+                            if obs::enabled() {
+                                drop(obs::drain(trace));
+                            }
+                            return Err(e);
+                        }
+                    }
+                } else {
+                    (sh.plan, sh.hit, Some((p.clone(), sh.members)))
+                }
+            }
+            Err(msg) => {
+                // The leader's planning failed; an identical request
+                // would fail identically.  Settle so the gate's
+                // bookkeeping stays exact.
+                if let Some(b) = p.withdraw() {
+                    dispatch_batch(state, b, &key);
+                }
+                if obs::enabled() {
+                    drop(obs::drain(trace));
+                }
+                return Err(anyhow!("{msg}"));
+            }
+        },
+        None => {
+            let (plan, hit) = plan_for(state, &spec, steps, t)?;
+            (plan, hit, None)
+        }
+    };
     let decision = admission::decide(&plan, t, points, steps, state.opts.budget_ms);
     if obs::enabled() {
         obs::record(obs::SpanKind::Admission, admit_ns, obs::now_ns(), obs::Payload::None);
@@ -535,6 +686,12 @@ fn advance(
             }
             Decision::Reject(r) => {
                 ServiceCounters::bump(&state.counters.jobs_rejected);
+                state.tenants.refused(&tenant);
+                if let Some((p, _)) = &coalesced {
+                    if let Some(b) = p.withdraw() {
+                        dispatch_batch(state, b, &key);
+                    }
+                }
                 if obs::enabled() {
                     drop(obs::drain(trace)); // rejected: free the ring slots
                 }
@@ -550,6 +707,7 @@ fn advance(
                                 r.predicted_ms, r.budget_ms, r.engine, r.bound, r.classification
                             ),
                         )
+                        .str_("tenant", &tenant)
                         .num("predicted_ms", r.predicted_ms)
                         .num("budget_ms", r.budget_ms)
                         .str_("engine", &r.engine)
@@ -560,6 +718,85 @@ fn advance(
                 ));
             }
         };
+    // ---- tenant plane: DRR fair-share + EDF deadline admission ----
+    // Currency is roofline model-milliseconds (the same prediction the
+    // budget gate priced), so fairness is cost-aware, not job-count-
+    // aware, and deterministic for a given profile.
+    let workers = state.opts.workers.max(1);
+    let pressured = state.queue_depth() >= workers * 2;
+    let urgent = match state.sched.admit(&tenant, predicted_ms, deadline_ms, pressured) {
+        TenantVerdict::Admit { urgent, .. } => urgent,
+        TenantVerdict::OverShare(fs) => {
+            ServiceCounters::bump(&state.counters.jobs_rejected);
+            state.tenants.refused(&tenant);
+            if let Some((p, _)) = &coalesced {
+                if let Some(b) = p.withdraw() {
+                    dispatch_batch(state, b, &key);
+                }
+            }
+            if obs::enabled() {
+                drop(obs::drain(trace));
+            }
+            return Ok((
+                Obj::new()
+                    .bool_("ok", false)
+                    .str_("op", "advance")
+                    .str_("error", "fair_share")
+                    .str_(
+                        "message",
+                        &format!(
+                            "tenant {:?} is over its fair share under pressure (served \
+                             {:.1} ms vs fair share {:.1} ms + quantum {:.1} ms); retry",
+                            fs.tenant, fs.served_ms, fs.fair_share_ms, fs.quantum_ms
+                        ),
+                    )
+                    .str_("tenant", &fs.tenant)
+                    .num("served_ms", fs.served_ms)
+                    .num("fair_share_ms", fs.fair_share_ms)
+                    .num("quantum_ms", fs.quantum_ms)
+                    .done(),
+                true,
+            ));
+        }
+        TenantVerdict::Unmeetable(v) => {
+            ServiceCounters::bump(&state.counters.jobs_rejected);
+            state.tenants.refused(&tenant);
+            if let Some((p, _)) = &coalesced {
+                if let Some(b) = p.withdraw() {
+                    dispatch_batch(state, b, &key);
+                }
+            }
+            if obs::enabled() {
+                drop(obs::drain(trace));
+            }
+            return Ok((
+                Obj::new()
+                    .bool_("ok", false)
+                    .str_("op", "advance")
+                    .str_("error", "deadline_unmeetable")
+                    .str_(
+                        "message",
+                        &format!(
+                            "deadline {:.1} ms is provably unmeetable: roofline-predicted \
+                             completion {:.3} ms (admitted backlog {:.3} ms across {} \
+                             workers + job cost {:.3} ms)",
+                            v.deadline_ms,
+                            v.predicted_completion_ms,
+                            v.backlog_ms,
+                            workers,
+                            v.cost_ms
+                        ),
+                    )
+                    .str_("tenant", &tenant)
+                    .num("deadline_ms", v.deadline_ms)
+                    .num("predicted_completion_ms", v.predicted_completion_ms)
+                    .num("backlog_ms", v.backlog_ms)
+                    .num("cost_ms", v.cost_ms)
+                    .done(),
+                true,
+            ));
+        }
+    };
     // Variable-coefficient modulation is keyed on GLOBAL output indices
     // (golden::vc_mod): a shard advancing a checked-out sub-field would
     // modulate with shard-local flats and diverge from the oracle, so
@@ -585,12 +822,41 @@ fn advance(
     // batch always fits an empty queue (push_batch remains the load
     // backstop under contention).
     let sharded = job_shards > 1 && steps > 0;
+    if sharded {
+        // A sharded member's fan-out is its own atomic push: it leaves
+        // the coalesced dispatch, but it already shared the batch's
+        // one plan lookup.  Settle before any fallible step so the
+        // gate's member bookkeeping stays exact.
+        if let Some((p, _)) = &coalesced {
+            if let Some(b) = p.withdraw() {
+                dispatch_batch(state, b, &key);
+            }
+        }
+    }
     let fanout = if sharded {
         // ---- shard plane: the job fans out into shard tasks ----
-        let shard_plan = ShardPlan::dim0(&spec.domain, job_shards, spec.pattern.r, job_t)?;
+        // Every early exit below must drain the tenant scheduler's
+        // admitted backlog (sched.complete), or deadline predictions
+        // would inflate forever on jobs that never ran.
+        let shard_plan = match ShardPlan::dim0(&spec.domain, job_shards, spec.pattern.r, job_t) {
+            Ok(p) => p,
+            Err(e) => {
+                state.sched.complete(predicted_ms);
+                state.tenants.refused(&tenant);
+                if obs::enabled() {
+                    drop(obs::drain(trace));
+                }
+                return Err(e);
+            }
+        };
         let field = {
             let mut g = sess.lock().unwrap();
             if g.busy {
+                state.sched.complete(predicted_ms);
+                state.tenants.refused(&tenant);
+                if obs::enabled() {
+                    drop(obs::drain(trace));
+                }
                 return Ok((
                     protocol::err(
                         "advance",
@@ -600,6 +866,18 @@ fn advance(
                     true,
                 ));
             }
+            // The shard executor checks the field OUT of the session,
+            // so a spilled field must be restored first; the busy flag
+            // then shields it from a racing enforce().
+            if let Err(e) = state.sessions.ensure_resident(&mut g) {
+                state.sched.complete(predicted_ms);
+                state.tenants.refused(&tenant);
+                if obs::enabled() {
+                    drop(obs::drain(trace));
+                }
+                return Err(e);
+            }
+            state.sessions.touch(&mut g);
             g.busy = true;
             std::mem::take(&mut g.field)
         };
@@ -614,6 +892,8 @@ fn advance(
         let n = run.shard_count();
         if let Err(e) = state.queue.push_batch(ShardedRun::fan_out(&run)) {
             run.abort_admission();
+            state.sched.complete(predicted_ms);
+            state.tenants.refused(&tenant);
             if obs::enabled() {
                 drop(obs::drain(trace));
             }
@@ -624,6 +904,11 @@ fn advance(
     } else {
         let queued = QueuedJob {
             session: sess.clone(),
+            tenant: tenant.clone(),
+            // Under tiering, an enforce() between here and execution
+            // may spill this very session; the worker restores it
+            // under the session lock right before advancing.
+            store: if state.sessions.tiered() { Some(state.sessions.clone()) } else { None },
             job,
             kind: spec.backend,
             // PJRT is only reachable with a manifest (loaded once at
@@ -636,32 +921,76 @@ fn advance(
             trace,
             queued_ns: obs::now_ns(),
         };
-        if let Err(e) = state.queue.push(Task::Job(queued)) {
-            if obs::enabled() {
-                drop(obs::drain(trace));
+        if let Some((p, _)) = &coalesced {
+            // Member of a coalesced batch: deposit; whichever member
+            // settles last pushes the single Task::Batch.  The push
+            // verdict (including a queue-full refusal) arrives through
+            // the reply channel below.
+            if let Some(b) = p.deposit(queued) {
+                dispatch_batch(state, b, &key);
             }
-            return Ok((queue_refusal(state, e), true));
+        } else {
+            // Deadline job: EDF tier, popped before any FIFO work,
+            // earliest absolute deadline first.
+            let deadline_ns =
+                obs::now_ns().saturating_add((deadline_ms.unwrap_or(0.0).max(0.0) * 1e6) as u64);
+            let pushed = if urgent {
+                state.queue.push_urgent(Task::Job(queued), deadline_ns)
+            } else {
+                state.queue.push(Task::Job(queued))
+            };
+            if let Err(e) = pushed {
+                state.sched.complete(predicted_ms);
+                state.tenants.refused(&tenant);
+                if obs::enabled() {
+                    drop(obs::drain(trace));
+                }
+                return Ok((queue_refusal(state, e), true));
+            }
         }
         1
     };
-    // Counted accepted only once actually admitted to the queue.
+    // Counted accepted at admission; a coalesced member's queue-full
+    // refusal (rare: discovered at dispatch, after deposit) arrives as
+    // a sentinel through the reply channel and is counted there.
     ServiceCounters::bump(&state.counters.jobs_accepted);
+    state.tenants.admitted(&tenant);
     if downgraded {
         ServiceCounters::bump(&state.counters.jobs_downgraded);
     }
-    let metrics = rx
-        .recv()
-        .map_err(|_| anyhow!("worker dropped the job (shutting down?)"))?
-        .map_err(|msg| anyhow!("{msg}"))?;
+    let received = rx.recv().map_err(|_| anyhow!("worker dropped the job (shutting down?)"));
+    // Whatever the outcome, the job has left the scheduler's admitted
+    // backlog, and tier residency may need re-enforcing.
+    state.sched.complete(predicted_ms);
+    state.sessions.enforce();
+    let metrics = match received? {
+        Ok(m) => m,
+        Err(msg) => {
+            if obs::enabled() {
+                drop(obs::drain(trace));
+            }
+            return match refusal_from_sentinel(&msg) {
+                Some(json) => Ok((json, true)),
+                None => Err(anyhow!("{msg}")),
+            };
+        }
+    };
+    if let Some(d) = deadline_ms {
+        if metrics.wall_ns as f64 / 1e6 > d {
+            state.tenants.deadline_missed(&tenant);
+        }
+    }
     if !metrics.kernel.is_empty() {
         sess.lock().unwrap().kernel = metrics.kernel.clone();
     }
     let mut resp = protocol::ok("advance")
         .str_("session", session)
+        .str_("tenant", &tenant)
         .int("steps", metrics.steps as u64)
         .int("t", job_t as u64)
         .str_("temporal", job_temporal.as_str())
         .int("shards", fanout as u64)
+        .int("batched", coalesced.as_ref().map_or(1, |(_, m)| *m) as u64)
         .str_("engine", &engine)
         .str_("target", target)
         .str_("cache", if hit { "hit" } else { "miss" })
@@ -696,22 +1025,86 @@ fn advance(
     Ok((resp.done(), true))
 }
 
-/// Render a queue push refusal, counting it.  `Full` carries the
-/// observed depth/capacity so shed clients can see why.
+/// Reply-channel sentinel for a coalesced batch refused by a full
+/// queue (`__queue_full:<depth>:<cap>`): the dispatching member can't
+/// return a reply on another member's connection, so each member's
+/// handler decodes the sentinel back into the structured refusal.
+const QUEUE_FULL_SENTINEL: &str = "__queue_full:";
+/// Reply-channel sentinel for a batch refused by a closing queue.
+const QUEUE_CLOSED_SENTINEL: &str = "__queue_closed";
+
+/// Push a sealed batch's deposits: one `Task::Batch` for a true
+/// coalition, a plain `Task::Job` for a batch of one (bit-for-bit the
+/// pre-batching fast path).  On refusal, every member's handler gets
+/// the structured refusal through its reply channel, counted and
+/// attributed to each member's tenant here.
+fn dispatch_batch(state: &ServiceState, members: Vec<QueuedJob>, key: &PlanKey) {
+    let n = members.len();
+    if n == 0 {
+        return;
+    }
+    let routes: Vec<(String, mpsc::Sender<Result<RunMetrics, String>>)> =
+        members.iter().map(|q| (q.tenant.clone(), q.reply.clone())).collect();
+    let task = if n == 1 {
+        Task::Job(members.into_iter().next().unwrap())
+    } else {
+        Task::Batch(BatchRun { members, key: key.canonical() })
+    };
+    match state.queue.push(task) {
+        Ok(()) => {
+            if n > 1 {
+                state.counters.record_batch(n);
+            }
+        }
+        Err(e) => {
+            let msg = match e {
+                PushError::Full { depth, cap } => format!("{QUEUE_FULL_SENTINEL}{depth}:{cap}"),
+                PushError::Closed => QUEUE_CLOSED_SENTINEL.to_string(),
+            };
+            for (member_tenant, reply) in routes {
+                ServiceCounters::bump(&state.counters.queue_rejected);
+                state.tenants.refused(&member_tenant);
+                let _ = reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// Decode a dispatcher-side refusal sentinel back into the structured
+/// refusal reply; `None` = a genuine execution error.  Counters were
+/// already bumped by the dispatcher.
+fn refusal_from_sentinel(msg: &str) -> Option<Json> {
+    if let Some(rest) = msg.strip_prefix(QUEUE_FULL_SENTINEL) {
+        let mut it = rest.splitn(2, ':');
+        let depth = it.next().and_then(|s| s.parse::<usize>().ok()).unwrap_or(0);
+        let cap = it.next().and_then(|s| s.parse::<usize>().ok()).unwrap_or(0);
+        return Some(queue_full_json(depth, cap));
+    }
+    if msg == QUEUE_CLOSED_SENTINEL {
+        return Some(protocol::err("advance", "shutting_down", "service is shutting down"));
+    }
+    None
+}
+
+/// The structured queue-full refusal: observed depth (job-weighted —
+/// a coalesced batch counts its member jobs) and capacity, so shed
+/// clients can see why.
+fn queue_full_json(depth: usize, cap: usize) -> Json {
+    Obj::new()
+        .bool_("ok", false)
+        .str_("op", "advance")
+        .str_("error", "queue_full")
+        .str_("message", &format!("job queue at capacity ({depth}/{cap} jobs); retry later"))
+        .int("queue_depth", depth as u64)
+        .int("queue_cap", cap as u64)
+        .done()
+}
+
+/// Render a direct (un-coalesced) queue push refusal, counting it.
 fn queue_refusal(state: &ServiceState, e: PushError) -> Json {
     ServiceCounters::bump(&state.counters.queue_rejected);
     match e {
-        PushError::Full { depth, cap } => Obj::new()
-            .bool_("ok", false)
-            .str_("op", "advance")
-            .str_("error", "queue_full")
-            .str_(
-                "message",
-                &format!("job queue at capacity ({depth}/{cap} tasks); retry later"),
-            )
-            .int("queue_depth", depth as u64)
-            .int("queue_cap", cap as u64)
-            .done(),
+        PushError::Full { depth, cap } => queue_full_json(depth, cap),
         PushError::Closed => protocol::err("advance", "shutting_down", "service is shutting down"),
     }
 }
@@ -895,7 +1288,9 @@ fn stats_response(state: &ServiceState, prom: bool) -> Json {
     snap.queue_depth = state.queue_depth() as u64;
     let rows = state.sessions.rows();
     let cache = state.plans.stats_window();
-    let render = report::service_stats(&snap, &cache, &rows);
+    let tenant_bytes = state.sessions.tenant_bytes();
+    let trows = state.tenants.rows(&tenant_bytes);
+    let render = report::service_stats(&snap, &cache, &rows, &trows);
     let drift_rows = Json::Arr(
         state
             .profile
@@ -928,6 +1323,24 @@ fn stats_response(state: &ServiceState, prom: bool) -> Json {
             })
             .collect(),
     );
+    let tenants_json = Json::Arr(
+        trows
+            .iter()
+            .map(|r| {
+                Obj::new()
+                    .str_("tenant", &r.tenant)
+                    .int("admitted", r.admitted)
+                    .int("refused", r.refused)
+                    .int("deadline_missed", r.deadline_missed)
+                    .int("resident_bytes", r.resident_bytes)
+                    .int("spilled_bytes", r.spilled_bytes)
+                    .done()
+            })
+            .collect(),
+    );
+    let (resident_total, spilled_total) = tenant_bytes
+        .values()
+        .fold((0u64, 0u64), |(r, s), &(tr, ts)| (r + tr, s + ts));
     let mut o = protocol::ok("stats")
         .int("requests", snap.requests)
         .int("errors", snap.errors)
@@ -939,6 +1352,10 @@ fn stats_response(state: &ServiceState, prom: bool) -> Json {
         .int("jobs_failed", snap.jobs_failed)
         .int("jobs_sharded", snap.jobs_sharded)
         .int("shard_tasks", snap.shard_tasks)
+        .int("jobs_batched", snap.jobs_batched)
+        .int("batches", snap.batches)
+        .int("resident_bytes", resident_total)
+        .int("spilled_bytes", spilled_total)
         .int("plan_hits", snap.plan_hits)
         .int("plan_misses", snap.plan_misses)
         .num("plan_hit_rate", snap.plan_hit_rate())
@@ -962,9 +1379,10 @@ fn stats_response(state: &ServiceState, prom: bool) -> Json {
         .int("retunes", snap.profile.retunes)
         .num("drift_threshold", state.profile.threshold())
         .set("drift", drift_rows)
-        .set("session_stats", sessions);
+        .set("session_stats", sessions)
+        .set("tenants", tenants_json);
     if prom {
-        o = o.str_("prom", &obs::metrics().exposition(&snap, &cache));
+        o = o.str_("prom", &obs::metrics().exposition(&snap, &cache, &trows));
     }
     o.str_("render", &render).done()
 }
@@ -1380,6 +1798,102 @@ mod tests {
             a.get("profile").unwrap().get("name").unwrap().as_str(),
             Some("measured-native")
         );
+    }
+
+    #[test]
+    fn advance_reply_attributes_tenant_and_batch_size() {
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"t","domain":[8,8],"dtype":"double",
+                "tenant":"acme","threads":1}"#,
+        ));
+        let a = req(&state, r#"{"op":"advance","session":"t","steps":1}"#);
+        assert_ok(&a);
+        assert_eq!(a.get("tenant").unwrap().as_str(), Some("acme"));
+        // no concurrent identical-plan job: a singleton "batch"
+        assert_eq!(a.get("batched").unwrap().as_usize(), Some(1));
+        let st = req(&state, r#"{"op":"stats"}"#);
+        let rows = st.get("tenants").unwrap().as_arr().unwrap();
+        let acme =
+            rows.iter().find(|r| r.get("tenant").unwrap().as_str() == Some("acme")).unwrap();
+        assert_eq!(acme.get("admitted").unwrap().as_usize(), Some(1));
+        assert_eq!(acme.get("refused").unwrap().as_usize(), Some(0));
+        assert_eq!(st.get("batches").unwrap().as_usize(), Some(0), "singletons are not batches");
+        assert!(st.get("render").unwrap().as_str().unwrap().contains("acme"));
+    }
+
+    #[test]
+    fn tiered_sessions_spill_idle_fields_and_restore_bit_exactly() {
+        use crate::sim::golden;
+        // A 1-byte resident cap forces every idle session out of memory
+        // after each request; correctness must be unaffected.
+        let s = Service::start(ServeOpts {
+            workers: 1,
+            resident_bytes: Some(1),
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            ..Default::default()
+        });
+        let state = s.state();
+        for name in ["t1", "t2"] {
+            assert_ok(&req(
+                &state,
+                &format!(
+                    r#"{{"op":"create_session","session":"{name}","shape":"box","d":2,"r":1,
+                        "dtype":"double","domain":[10,10],"backend":"native","threads":1}}"#
+                ),
+            ));
+        }
+        assert_ok(&req(&state, r#"{"op":"advance","session":"t1","steps":2,"t":2}"#));
+        assert_ok(&req(&state, r#"{"op":"advance","session":"t2","steps":2,"t":2}"#));
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert!(st.get("spilled_bytes").unwrap().as_i64().unwrap() > 0, "{st}");
+        // the second fused launch runs on a transparently restored
+        // field — any codec round-trip error would corrupt it here
+        assert_ok(&req(&state, r#"{"op":"advance","session":"t1","steps":2,"t":2}"#));
+        let f = req(&state, r#"{"op":"fetch","session":"t1","encoding":"hex"}"#);
+        assert_ok(&f);
+        let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+        let p = crate::model::stencil::StencilPattern::new(crate::model::stencil::Shape::Box, 2, 1)
+            .unwrap();
+        let w = golden::Weights::new(2, 3, p.uniform_weights());
+        let mut want = golden::Field::from_vec(&[10, 10], golden::gaussian(&[10, 10]));
+        for _ in 0..2 {
+            want = golden::apply_fused(&want, &w, 2);
+        }
+        for (i, (a, b)) in got.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "point {i} after spill/restore");
+        }
+    }
+
+    #[test]
+    fn unmeetable_deadline_is_refused_with_predicted_completion() {
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"dl","domain":[32,32],"dtype":"double",
+                "tenant":"slo","threads":1}"#,
+        ));
+        // a sub-microsecond deadline is below any roofline cost
+        let rej =
+            req(&state, r#"{"op":"advance","session":"dl","steps":4,"deadline_ms":0.000001}"#);
+        assert_eq!(rej.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(rej.get("error").unwrap().as_str(), Some("deadline_unmeetable"));
+        assert_eq!(rej.get("tenant").unwrap().as_str(), Some("slo"));
+        let predicted = rej.get("predicted_completion_ms").unwrap().as_f64().unwrap();
+        assert!(predicted > 0.000001, "refusal must carry the evidence: {rej}");
+        let st = req(&state, r#"{"op":"stats"}"#);
+        let rows = st.get("tenants").unwrap().as_arr().unwrap();
+        let slo =
+            rows.iter().find(|r| r.get("tenant").unwrap().as_str() == Some("slo")).unwrap();
+        assert_eq!(slo.get("refused").unwrap().as_usize(), Some(1));
+        assert_eq!(slo.get("admitted").unwrap().as_usize(), Some(0));
+        // a generous deadline is admitted through the EDF urgent tier
+        let ok = req(&state, r#"{"op":"advance","session":"dl","steps":1,"deadline_ms":60000}"#);
+        assert_ok(&ok);
+        assert_eq!(ok.get("tenant").unwrap().as_str(), Some("slo"));
     }
 
     #[test]

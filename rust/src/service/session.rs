@@ -6,25 +6,40 @@
 //! re-uploading state.  Sessions are `Arc<Mutex<_>>`: the store hands
 //! out handles, a worker holds the lock only while advancing, and two
 //! sessions never contend with each other.
+//!
+//! **Tiering** (`--resident-bytes`): with a resident-bytes cap
+//! configured, idle sessions spill their field to disk through the
+//! bit-exact hex-f64 codec ([`crate::service::protocol::encode_field`])
+//! and restore transparently on next use — LRU by logical use order,
+//! victims chosen among non-busy resident sessions.  A spilled field
+//! restores to the identical bit pattern, so tiered and always-resident
+//! serving produce byte-identical results; tenant count is bounded by
+//! disk, not RAM.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::backend::{BackendKind, TemporalMode};
 use crate::coordinator::grid::ShardSpec;
 use crate::coordinator::metrics::{SessionRow, SessionStats};
 use crate::model::perf::Dtype;
 use crate::model::stencil::StencilPattern;
+use crate::obs::{self, Payload, SpanKind};
 use crate::sim::golden;
+use crate::util::json::Json;
 
-use super::protocol::{FieldInit, JobSpec};
+use super::protocol::{self, FieldInit, JobSpec};
 
 /// One resident workload: identity + field + accounting.
 #[derive(Debug, Clone)]
 pub struct Session {
     pub name: String,
+    /// Owning tenant (admission fairness + per-tenant stats attribution).
+    pub tenant: String,
     pub pattern: StencilPattern,
     pub dtype: Dtype,
     pub domain: Vec<usize>,
@@ -47,6 +62,13 @@ pub struct Session {
     /// a run resolves one) — surfaced through the `stats` rendering.
     pub kernel: String,
     pub stats: SessionStats,
+    /// Logical-clock stamp of the most recent use (LRU spill order).
+    pub last_used: u64,
+    /// Bytes parked on disk when spilled; 0 while the field is resident.
+    pub spilled_bytes: u64,
+    /// Lifetime spill / restore counts (surfaced through `stats`).
+    pub spills: u64,
+    pub restores: u64,
 }
 
 impl Session {
@@ -77,6 +99,7 @@ impl Session {
         };
         Ok(Session {
             name: name.to_string(),
+            tenant: spec.tenant.clone(),
             pattern: spec.pattern,
             dtype: spec.dtype,
             domain: spec.domain.clone(),
@@ -89,12 +112,26 @@ impl Session {
             busy: false,
             kernel: String::new(),
             stats: SessionStats::default(),
+            last_used: 0,
+            spilled_bytes: 0,
+            spills: 0,
+            restores: 0,
         })
     }
 
     /// Total domain points.
     pub fn points(&self) -> u64 {
         self.domain.iter().map(|&n| n as u64).product()
+    }
+
+    /// Host bytes held by the resident field (0 while spilled).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.field.len() * std::mem::size_of::<f64>()) as u64
+    }
+
+    /// The field currently lives on disk, not in memory.
+    pub fn is_spilled(&self) -> bool {
+        self.spilled_bytes > 0
     }
 
     /// This session's row of the `stats` rendering.
@@ -112,15 +149,55 @@ impl Session {
     }
 }
 
+/// Disk-spill configuration for session tiering.
+#[derive(Debug, Clone)]
+pub struct TierCfg {
+    /// Directory spill files live in (created on first spill).
+    pub dir: PathBuf,
+    /// Total resident field bytes allowed before LRU spilling kicks in.
+    pub cap_bytes: u64,
+}
+
+/// Spill-file path for a session: hex-encoded name so arbitrary
+/// session names stay filesystem-safe.
+fn spill_path(dir: &std::path::Path, name: &str) -> PathBuf {
+    use std::fmt::Write as _;
+    let mut stem = String::with_capacity(name.len() * 2 + 6);
+    for b in name.bytes() {
+        let _ = write!(stem, "{b:02x}");
+    }
+    stem.push_str(".spill");
+    dir.join(stem)
+}
+
 /// Concurrent name → session map.
 #[derive(Debug, Default)]
 pub struct SessionStore {
     inner: Mutex<BTreeMap<String, Arc<Mutex<Session>>>>,
+    /// Logical clock stamping `Session::last_used` (LRU spill order).
+    clock: AtomicU64,
+    tier: Option<TierCfg>,
 }
 
 impl SessionStore {
     pub fn new() -> SessionStore {
         SessionStore::default()
+    }
+
+    /// A store whose resident field bytes are capped: LRU sessions
+    /// beyond `cap_bytes` spill to `dir` via the hex-f64 codec.
+    pub fn with_tiering(dir: PathBuf, cap_bytes: u64) -> SessionStore {
+        SessionStore { tier: Some(TierCfg { dir, cap_bytes }), ..SessionStore::default() }
+    }
+
+    /// Whether a resident-bytes cap is configured.
+    pub fn tiered(&self) -> bool {
+        self.tier.is_some()
+    }
+
+    /// Stamp a session as just-used (call while holding its lock).
+    pub fn touch(&self, s: &mut Session) {
+        s.last_used = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
     }
 
     /// Register a new session; names are unique while live.
@@ -139,9 +216,129 @@ impl SessionStore {
         self.inner.lock().unwrap().get(name).cloned()
     }
 
-    /// Drop a session; returns whether it existed.
+    /// Drop a session; returns whether it existed.  Spilled state is
+    /// deleted from disk along with the session.
     pub fn remove(&self, name: &str) -> bool {
-        self.inner.lock().unwrap().remove(name).is_some()
+        let handle = self.inner.lock().unwrap().remove(name);
+        let Some(handle) = handle else { return false };
+        if let Some(tier) = &self.tier {
+            let g = handle.lock().unwrap();
+            if g.is_spilled() {
+                let _ = std::fs::remove_file(spill_path(&tier.dir, &g.name));
+            }
+        }
+        true
+    }
+
+    /// Bring a spilled session's field back into memory (no-op when
+    /// already resident).  The round-trip uses the hex-f64 codec, so
+    /// the restored field is bit-identical to the spilled one.
+    pub fn ensure_resident(&self, s: &mut Session) -> Result<()> {
+        if !s.is_spilled() {
+            return Ok(());
+        }
+        let tier = self
+            .tier
+            .as_ref()
+            .ok_or_else(|| anyhow!("session {:?} is spilled but tiering is off", s.name))?;
+        let t0 = obs::now_ns();
+        let path = spill_path(&tier.dir, &s.name);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("restore of session {:?} from {}", s.name, path.display()))?;
+        let field = protocol::decode_field(&Json::parse_line(text.trim())?)
+            .with_context(|| format!("restore of session {:?}", s.name))?;
+        let n: usize = s.domain.iter().product();
+        if field.len() != n {
+            bail!("spill file for session {:?} has {} elements, domain wants {n}", s.name, field.len());
+        }
+        let bytes = s.spilled_bytes;
+        s.field = field;
+        s.spilled_bytes = 0;
+        s.restores += 1;
+        let _ = std::fs::remove_file(&path);
+        obs::record(
+            SpanKind::Restore,
+            t0,
+            obs::now_ns(),
+            Payload::Restore { session: s.name.clone(), bytes },
+        );
+        Ok(())
+    }
+
+    /// Write a session's field to disk and release the host buffer.
+    /// Caller holds the session lock and has checked it is resident
+    /// and not busy.
+    fn spill_session(&self, tier: &TierCfg, s: &mut Session) -> Result<()> {
+        let t0 = obs::now_ns();
+        std::fs::create_dir_all(&tier.dir)
+            .with_context(|| format!("creating spill dir {}", tier.dir.display()))?;
+        let path = spill_path(&tier.dir, &s.name);
+        let encoded = protocol::encode_field(&s.field, true);
+        std::fs::write(&path, format!("{encoded}\n"))
+            .with_context(|| format!("spill of session {:?} to {}", s.name, path.display()))?;
+        let bytes = s.resident_bytes();
+        s.spilled_bytes = bytes;
+        s.field = Vec::new();
+        s.spills += 1;
+        obs::record(
+            SpanKind::Spill,
+            t0,
+            obs::now_ns(),
+            Payload::Spill { session: s.name.clone(), bytes },
+        );
+        Ok(())
+    }
+
+    /// Enforce the resident-bytes cap: spill least-recently-used
+    /// resident sessions until total resident bytes fit.  Busy
+    /// sessions (field checked out into a shard executor) are skipped.
+    /// A spill failure (e.g. disk full) logs and leaves the session
+    /// resident — tiering degrades to the untied behavior rather than
+    /// losing state.
+    pub fn enforce(&self) {
+        let Some(tier) = &self.tier else { return };
+        let handles: Vec<Arc<Mutex<Session>>> =
+            self.inner.lock().unwrap().values().cloned().collect();
+        let mut resident_total = 0u64;
+        let mut candidates: Vec<(u64, u64, Arc<Mutex<Session>>)> = Vec::new();
+        for h in &handles {
+            let g = h.lock().unwrap();
+            resident_total += g.resident_bytes();
+            if !g.busy && !g.is_spilled() && !g.field.is_empty() {
+                candidates.push((g.last_used, g.resident_bytes(), h.clone()));
+            }
+        }
+        if resident_total <= tier.cap_bytes {
+            return;
+        }
+        candidates.sort_by_key(|c| c.0); // oldest stamp first
+        for (_, bytes, h) in candidates {
+            if resident_total <= tier.cap_bytes {
+                break;
+            }
+            let mut g = h.lock().unwrap();
+            if g.busy || g.is_spilled() || g.field.is_empty() {
+                continue; // state moved under us; re-checked under lock
+            }
+            match self.spill_session(tier, &mut g) {
+                Ok(()) => resident_total -= bytes,
+                Err(e) => eprintln!("stencilctl: session spill failed: {e:#}"),
+            }
+        }
+    }
+
+    /// Per-tenant (resident, spilled) field bytes across live sessions.
+    pub fn tenant_bytes(&self) -> BTreeMap<String, (u64, u64)> {
+        let handles: Vec<Arc<Mutex<Session>>> =
+            self.inner.lock().unwrap().values().cloned().collect();
+        let mut out: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+        for h in handles {
+            let g = h.lock().unwrap();
+            let e = out.entry(g.tenant.clone()).or_default();
+            e.0 += g.resident_bytes();
+            e.1 += g.spilled_bytes;
+        }
+        out
     }
 
     pub fn len(&self) -> usize {
@@ -177,7 +374,13 @@ mod tests {
             shards: ShardSpec::Auto,
             threads: 1,
             weights: None,
+            tenant: "default".into(),
+            deadline_ms: None,
         }
+    }
+
+    fn tier_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tcs-spill-{}-{tag}", std::process::id()))
     }
 
     #[test]
@@ -246,5 +449,76 @@ mod tests {
         assert_eq!(rows[0].domain, "4x4");
         assert_eq!(rows[0].backend, "native");
         assert_eq!(rows[0].stats.jobs, 0);
+    }
+
+    #[test]
+    fn spill_restore_is_bit_exact() {
+        let dir = tier_dir("roundtrip");
+        let store = SessionStore::with_tiering(dir.clone(), 0);
+        assert!(store.tiered());
+        let h = store
+            .create(Session::create("s", &spec(vec![6, 6]), &FieldInit::Gaussian).unwrap())
+            .unwrap();
+        let before = h.lock().unwrap().field.clone();
+        store.enforce();
+        {
+            let mut g = h.lock().unwrap();
+            assert!(g.is_spilled());
+            assert_eq!(g.spilled_bytes, 36 * 8);
+            assert!(g.field.is_empty());
+            assert_eq!(g.resident_bytes(), 0);
+            store.ensure_resident(&mut g).unwrap();
+            assert!(!g.is_spilled());
+            assert_eq!(g.spills, 1);
+            assert_eq!(g.restores, 1);
+            let bits_before: Vec<u64> = before.iter().map(|v| v.to_bits()).collect();
+            let bits_after: Vec<u64> = g.field.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_before, bits_after, "hex-f64 round-trip must be bit-exact");
+        }
+        store.remove("s");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn enforce_spills_lru_first_and_skips_busy() {
+        let dir = tier_dir("lru");
+        // cap fits exactly one 4x4 f64 field (128 bytes) of the three.
+        let store = SessionStore::with_tiering(dir.clone(), 128);
+        let mk = |n: &str| {
+            store.create(Session::create(n, &spec(vec![4, 4]), &FieldInit::Zeros).unwrap()).unwrap()
+        };
+        let (a, b, c) = (mk("a"), mk("b"), mk("c"));
+        store.touch(&mut a.lock().unwrap()); // a oldest...
+        store.touch(&mut b.lock().unwrap());
+        store.touch(&mut c.lock().unwrap()); // ...c newest
+        b.lock().unwrap().busy = true; // checked out: not spillable
+        store.enforce();
+        assert!(a.lock().unwrap().is_spilled(), "LRU session spills first");
+        assert!(!b.lock().unwrap().is_spilled(), "busy session is never spilled");
+        // a spilled (128 freed) but busy b still resident: 256 > 128,
+        // so c spills too even though it is the most recent.
+        assert!(c.lock().unwrap().is_spilled());
+        let bytes = store.tenant_bytes();
+        assert_eq!(bytes.get("default"), Some(&(128, 256)));
+        // removing a spilled session deletes its spill file
+        store.remove("a");
+        store.remove("c");
+        assert_eq!(std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0), 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn untied_store_never_spills() {
+        let store = SessionStore::new();
+        assert!(!store.tiered());
+        let h = store
+            .create(Session::create("s", &spec(vec![8, 8]), &FieldInit::Gaussian).unwrap())
+            .unwrap();
+        store.enforce();
+        let mut g = h.lock().unwrap();
+        assert!(!g.is_spilled());
+        assert_eq!(g.field.len(), 64);
+        store.ensure_resident(&mut g).unwrap(); // resident: no-op
+        assert_eq!(g.spills + g.restores, 0);
     }
 }

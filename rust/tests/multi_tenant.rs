@@ -1,0 +1,390 @@
+//! Multi-tenant serving integration: PlanKey-coalesced batch dispatch
+//! (N concurrent identical jobs share ONE plan-cache lookup and stay
+//! bit-identical to unbatched execution), bit-exact session tiering
+//! mid-session under a resident-bytes cap, deficit-round-robin fairness
+//! convergence, and EDF deadline refusals carrying roofline evidence.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tc_stencil::service::admission::{TenantSched, TenantVerdict};
+use tc_stencil::service::protocol;
+use tc_stencil::service::server::{serve_listener, ServeOpts, Service, ServiceState};
+use tc_stencil::sim::golden;
+use tc_stencil::util::json::Json;
+
+fn test_opts() -> ServeOpts {
+    ServeOpts {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        ..Default::default()
+    }
+}
+
+/// A line-oriented protocol client over one TCP connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { reader, writer: stream }
+    }
+
+    fn req(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{}", line.replace('\n', " ")).expect("write request");
+        self.writer.flush().expect("flush");
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).expect("read response");
+        Json::parse_line(&resp).expect("parse response")
+    }
+
+    fn req_ok(&mut self, line: &str) -> Json {
+        let j = self.req(line);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j}");
+        j
+    }
+}
+
+fn spawn_server(opts: ServeOpts) -> (Service, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let svc = Service::start(opts);
+    let (listener, addr) = svc.bind().expect("bind ephemeral port");
+    let state: Arc<ServiceState> = svc.state();
+    let handle = std::thread::spawn(move || {
+        serve_listener(state, listener).expect("serve_listener");
+    });
+    (svc, addr, handle)
+}
+
+/// Golden replay of one streamed session: gaussian init, then
+/// `advances` × (steps/t fused launches + steps%t single steps).
+fn golden_replay(
+    domain: &[usize],
+    weights: &[f64],
+    advances: usize,
+    steps: usize,
+    t: usize,
+) -> Vec<f64> {
+    let w = golden::Weights::new(domain.len(), 3, weights.to_vec());
+    let mut f = golden::Field::from_vec(domain, golden::gaussian(domain));
+    for _ in 0..advances {
+        for _ in 0..steps / t {
+            f = golden::apply_fused(&f, &w, t);
+        }
+        for _ in 0..steps % t {
+            f = golden::apply_once(&f, &w);
+        }
+    }
+    f.data
+}
+
+fn assert_bits(got: &[f64], want: &[f64], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag} point {i}: {a} vs {b}");
+    }
+}
+
+fn star_weights() -> Vec<f64> {
+    tc_stencil::model::stencil::StencilPattern::new(tc_stencil::model::stencil::Shape::Star, 2, 1)
+        .unwrap()
+        .uniform_weights()
+}
+
+/// N concurrent identical-PlanKey advances coalesce into ONE batched
+/// dispatch: exactly one plan-cache lookup for the whole cohort, every
+/// member's reply stamped with the batch size, and the fields
+/// bit-identical to the same workload run unbatched.
+#[test]
+fn coalesced_batch_shares_one_plan_lookup_and_stays_bit_identical() {
+    const N: usize = 3;
+    let mut opts = test_opts();
+    opts.batch_window_ms = 600.0; // generous gather window: no flakes
+    let (mut svc, addr, handle) = spawn_server(opts);
+    let create = |name: &str, tenant: &str| {
+        format!(
+            r#"{{"op":"create_session","session":"{name}","shape":"star","d":2,"r":1,
+                "dtype":"double","domain":[20,20],"backend":"native","threads":2,
+                "shards":1,"tenant":"{tenant}"}}"#
+        )
+    };
+    {
+        let mut c = Client::connect(addr);
+        for i in 0..N {
+            c.req_ok(&create(&format!("s{i}"), &format!("tenant{i}")));
+        }
+    }
+    // N clients fire the same advance simultaneously; the leader's
+    // gather window collects all of them into one batch.
+    let threads: Vec<_> = (0..N)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let a = c.req_ok(&format!(r#"{{"op":"advance","session":"s{i}","steps":4,"t":2}}"#));
+                let batched = a.get("batched").unwrap().as_usize().unwrap();
+                let f = c.req_ok(&format!(r#"{{"op":"fetch","session":"s{i}","encoding":"hex"}}"#));
+                (batched, protocol::decode_field(f.get("field").unwrap()).unwrap())
+            })
+        })
+        .collect();
+    let results: Vec<(usize, Vec<f64>)> =
+        threads.into_iter().map(|h| h.join().expect("client")).collect();
+
+    for (i, (batched, _)) in results.iter().enumerate() {
+        assert_eq!(*batched, N, "member {i} must see the full batch");
+    }
+    // Bit-identity: golden oracle replay == every batched member.
+    let want = golden_replay(&[20, 20], &star_weights(), 1, 4, 2);
+    for (i, (_, got)) in results.iter().enumerate() {
+        assert_bits(got, &want, &format!("batched member {i}"));
+    }
+
+    let mut c = Client::connect(addr);
+    let st = c.req_ok(r#"{"op":"stats"}"#);
+    assert_eq!(st.get("jobs_completed").unwrap().as_usize(), Some(N));
+    assert_eq!(st.get("batches").unwrap().as_usize(), Some(1), "{st}");
+    assert_eq!(st.get("jobs_batched").unwrap().as_usize(), Some(N));
+    // THE acceptance assertion: one lookup amortized over N jobs.
+    assert_eq!(st.get("plan_misses").unwrap().as_usize(), Some(1), "{st}");
+    assert_eq!(st.get("plan_hits").unwrap().as_usize(), Some(0), "{st}");
+    // every tenant's row shows exactly its own admitted job
+    let rows = st.get("tenants").unwrap().as_arr().unwrap();
+    for i in 0..N {
+        let t = format!("tenant{i}");
+        let row =
+            rows.iter().find(|r| r.get("tenant").unwrap().as_str() == Some(t.as_str())).unwrap();
+        assert_eq!(row.get("admitted").unwrap().as_usize(), Some(1));
+        assert_eq!(row.get("refused").unwrap().as_usize(), Some(0));
+    }
+    c.req_ok(r#"{"op":"shutdown"}"#);
+    handle.join().expect("listener thread");
+    svc.shutdown();
+
+    // The same workload on an unbatched server (window 0, sequential
+    // client): N plan lookups instead of 1, but bit-identical fields.
+    let (mut svc2, addr2, handle2) = spawn_server(test_opts());
+    let mut c = Client::connect(addr2);
+    for i in 0..N {
+        c.req_ok(&create(&format!("s{i}"), &format!("tenant{i}")));
+        c.req_ok(&format!(r#"{{"op":"advance","session":"s{i}","steps":4,"t":2}}"#));
+        let f = c.req_ok(&format!(r#"{{"op":"fetch","session":"s{i}","encoding":"hex"}}"#));
+        let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+        assert_bits(&got, &results[i].1, &format!("unbatched vs batched s{i}"));
+    }
+    let st = c.req_ok(r#"{"op":"stats"}"#);
+    assert_eq!(st.get("batches").unwrap().as_usize(), Some(0));
+    assert_eq!(st.get("plan_misses").unwrap().as_usize(), Some(1));
+    assert_eq!(st.get("plan_hits").unwrap().as_usize(), Some(N - 1), "sequential reuse hits");
+    c.req_ok(r#"{"op":"shutdown"}"#);
+    handle2.join().expect("listener thread");
+    svc2.shutdown();
+}
+
+/// Sharded fan-out and temporal blocking under a batching server: the
+/// sharded path settles out of the gate and fans out as before, the
+/// blocked path keeps sequential-stepping semantics — both bit-exact.
+#[test]
+fn sharded_and_blocked_stay_bit_exact_under_batching() {
+    let mut opts = test_opts();
+    opts.batch_window_ms = 300.0;
+    let (mut svc, addr, handle) = spawn_server(opts);
+    // two concurrent sharded advances (threads=1 vs 2 workers → the
+    // planner picks a 2-shard fan-out; identical PlanKeys meet at the
+    // gate, then withdraw into the shard scheduler)
+    for name in ["sha", "shb"] {
+        Client::connect(addr).req_ok(&format!(
+            r#"{{"op":"create_session","session":"{name}","shape":"box","d":2,"r":1,
+                "dtype":"double","domain":[24,24],"backend":"native","temporal":"sweep",
+                "threads":1}}"#
+        ));
+    }
+    let threads: Vec<_> = ["sha", "shb"]
+        .iter()
+        .map(|name| {
+            let name = name.to_string();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                c.req_ok(&format!(r#"{{"op":"advance","session":"{name}","steps":4,"t":2}}"#));
+                let f =
+                    c.req_ok(&format!(r#"{{"op":"fetch","session":"{name}","encoding":"hex"}}"#));
+                protocol::decode_field(f.get("field").unwrap()).unwrap()
+            })
+        })
+        .collect();
+    let box_weights = tc_stencil::model::stencil::StencilPattern::new(
+        tc_stencil::model::stencil::Shape::Box,
+        2,
+        1,
+    )
+    .unwrap()
+    .uniform_weights();
+    let want = golden_replay(&[24, 24], &box_weights, 1, 4, 2);
+    for (i, h) in threads.into_iter().enumerate() {
+        assert_bits(&h.join().expect("client"), &want, &format!("sharded client {i}"));
+    }
+    // temporal blocking through the same server: bit-identical to
+    // SEQUENTIAL stepping (not the fused chain)
+    let mut c = Client::connect(addr);
+    c.req_ok(
+        r#"{"op":"create_session","session":"blk","shape":"star","d":2,"r":1,
+            "dtype":"double","domain":[64,64],"backend":"native","temporal":"blocked",
+            "threads":2}"#,
+    );
+    let a = c.req_ok(r#"{"op":"advance","session":"blk","steps":8,"t":4}"#);
+    assert_eq!(a.get("temporal").unwrap().as_str(), Some("blocked"));
+    let f = c.req_ok(r#"{"op":"fetch","session":"blk","encoding":"hex"}"#);
+    let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+    let w = golden::Weights::new(2, 3, star_weights());
+    let want = golden::apply_steps(
+        &golden::Field::from_vec(&[64, 64], golden::gaussian(&[64, 64])),
+        &w,
+        8,
+    );
+    assert_bits(&got, &want.data, "blocked");
+    let st = c.req_ok(r#"{"op":"stats"}"#);
+    assert!(st.get("jobs_sharded").unwrap().as_i64().unwrap() >= 2, "{st}");
+    assert_eq!(st.get("jobs_failed").unwrap().as_usize(), Some(0));
+    c.req_ok(r#"{"op":"shutdown"}"#);
+    handle.join().expect("listener thread");
+    svc.shutdown();
+}
+
+/// Session tiering mid-session: a 1-byte resident cap forces every
+/// idle session's field to disk between requests, and a multi-round
+/// interleaved stream still ends bit-identical to the golden replay.
+#[test]
+fn tiered_spill_and_restore_are_bit_exact_mid_session() {
+    let mut opts = test_opts();
+    opts.workers = 1;
+    opts.resident_bytes = Some(1);
+    let (mut svc, addr, handle) = spawn_server(opts);
+    let mut c = Client::connect(addr);
+    for (name, tenant) in [("t1", "acme"), ("t2", "umbrella")] {
+        c.req_ok(&format!(
+            r#"{{"op":"create_session","session":"{name}","shape":"star","d":2,"r":1,
+                "dtype":"double","domain":[16,16],"backend":"native","threads":1,
+                "shards":1,"tenant":"{tenant}"}}"#
+        ));
+    }
+    let advances = 3;
+    for round in 0..advances {
+        for name in ["t1", "t2"] {
+            c.req_ok(&format!(r#"{{"op":"advance","session":"{name}","steps":2,"t":2}}"#));
+        }
+        if round == 0 {
+            // mid-session: the idle sessions have already been spilled
+            let st = c.req_ok(r#"{"op":"stats"}"#);
+            assert!(st.get("spilled_bytes").unwrap().as_i64().unwrap() > 0, "{st}");
+            let rows = st.get("tenants").unwrap().as_arr().unwrap();
+            let spilled: u64 = rows
+                .iter()
+                .map(|r| r.get("spilled_bytes").unwrap().as_i64().unwrap() as u64)
+                .sum();
+            assert!(spilled > 0, "per-tenant rows must attribute the spill: {st}");
+        }
+    }
+    let want = golden_replay(&[16, 16], &star_weights(), advances, 2, 2);
+    for name in ["t1", "t2"] {
+        let f = c.req_ok(&format!(r#"{{"op":"fetch","session":"{name}","encoding":"hex"}}"#));
+        let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+        assert_bits(&got, &want, &format!("tiered session {name}"));
+    }
+    c.req_ok(r#"{"op":"shutdown"}"#);
+    handle.join().expect("listener thread");
+    svc.shutdown();
+}
+
+/// An unmeetable deadline is refused BEFORE execution, with the
+/// roofline-predicted completion time as evidence; a meetable one is
+/// admitted through the EDF urgent tier and still runs bit-exactly.
+#[test]
+fn unmeetable_deadline_refused_with_roofline_evidence() {
+    let (mut svc, addr, handle) = spawn_server(test_opts());
+    let mut c = Client::connect(addr);
+    c.req_ok(
+        r#"{"op":"create_session","session":"dl","shape":"star","d":2,"r":1,
+            "dtype":"double","domain":[32,32],"backend":"native","threads":1,
+            "shards":1,"tenant":"slo"}"#,
+    );
+    let rej = c.req(r#"{"op":"advance","session":"dl","steps":4,"t":2,"deadline_ms":0.000001}"#);
+    assert_eq!(rej.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(rej.get("error").unwrap().as_str(), Some("deadline_unmeetable"));
+    assert_eq!(rej.get("tenant").unwrap().as_str(), Some("slo"));
+    let predicted = rej.get("predicted_completion_ms").unwrap().as_f64().unwrap();
+    let cost = rej.get("cost_ms").unwrap().as_f64().unwrap();
+    assert!(predicted > 0.000001 && cost > 0.0, "evidence missing: {rej}");
+    // the refused advance never touched the field
+    let f = c.req_ok(r#"{"op":"fetch","session":"dl","encoding":"hex"}"#);
+    let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+    assert_bits(&got, &golden::gaussian(&[32, 32]), "refused advance must not run");
+    // a meetable deadline rides the EDF tier and runs bit-exactly
+    let ok = c.req_ok(r#"{"op":"advance","session":"dl","steps":4,"t":2,"deadline_ms":60000}"#);
+    assert_eq!(ok.get("tenant").unwrap().as_str(), Some("slo"));
+    let f = c.req_ok(r#"{"op":"fetch","session":"dl","encoding":"hex"}"#);
+    let got = protocol::decode_field(f.get("field").unwrap()).unwrap();
+    assert_bits(&got, &golden_replay(&[32, 32], &star_weights(), 1, 4, 2), "EDF advance");
+    let st = c.req_ok(r#"{"op":"stats"}"#);
+    let rows = st.get("tenants").unwrap().as_arr().unwrap();
+    let slo = rows.iter().find(|r| r.get("tenant").unwrap().as_str() == Some("slo")).unwrap();
+    assert_eq!(slo.get("refused").unwrap().as_usize(), Some(1));
+    assert_eq!(slo.get("admitted").unwrap().as_usize(), Some(1));
+    c.req_ok(r#"{"op":"shutdown"}"#);
+    handle.join().expect("listener thread");
+    svc.shutdown();
+}
+
+/// Deficit-round-robin convergence under a zipfian demand mix: the hog
+/// is deferred under pressure until the starved tenants' served shares
+/// converge to within one quantum, after which everyone is admitted.
+#[test]
+fn drr_shares_converge_under_zipfian_demand() {
+    let sched = TenantSched::new(2);
+    let cost = 10.0;
+    // zipf-ish opening burst: tenant0 issues 8x what the tail does
+    for _ in 0..32 {
+        assert!(matches!(sched.admit("tenant0", cost, None, true), TenantVerdict::Admit { .. }));
+    }
+    for t in ["tenant1", "tenant2"] {
+        for _ in 0..4 {
+            assert!(matches!(sched.admit(t, cost, None, true), TenantVerdict::Admit { .. }));
+        }
+    }
+    // under pressure, the hog is deferred with evidence while the tail
+    // catches up
+    let mut served = std::collections::BTreeMap::new();
+    for round in 0..40 {
+        for t in ["tenant0", "tenant1", "tenant2"] {
+            match sched.admit(t, cost, None, true) {
+                TenantVerdict::Admit { urgent, .. } => {
+                    assert!(!urgent, "no deadline → FIFO tier");
+                    *served.entry(t).or_insert(0u32) += 1;
+                }
+                TenantVerdict::OverShare(fs) => {
+                    assert_eq!(fs.tenant, t);
+                    assert!(
+                        fs.served_ms > fs.fair_share_ms + fs.quantum_ms,
+                        "round {round}: deferral without evidence: {fs:?}"
+                    );
+                }
+                other => panic!("unexpected verdict {other:?}"),
+            }
+        }
+    }
+    let hog = served["tenant0"];
+    for t in ["tenant1", "tenant2"] {
+        assert!(served[t] > hog, "starved tenant {t} must out-admit the hog ({hog})");
+    }
+    // converged: one full round admits every tenant
+    for t in ["tenant0", "tenant1", "tenant2"] {
+        assert!(
+            matches!(sched.admit(t, cost, None, true), TenantVerdict::Admit { .. }),
+            "post-convergence round must admit {t}"
+        );
+    }
+}
