@@ -76,10 +76,32 @@ fn obs_overhead() {
     obs::clear_sink();
     obs::disable();
     let _ = std::fs::remove_file(&sink_path);
+    // Journal bars: the gate-only no-op (journal closed — serve's
+    // default, what every hot-path probe site costs) vs. a real
+    // append+flush per event (serve --journal).
+    let jpath = std::env::temp_dir().join("tc_stencil_bench_journal.ndjson");
+    let jrot = std::path::PathBuf::from(format!("{}.1", jpath.display()));
+    let _ = std::fs::remove_file(&jpath);
+    let _ = std::fs::remove_file(&jrot);
+    let j_off = b
+        .run_items("journal_emit/off", Some(1.0), || {
+            obs::journal::emit("bench", &[("v", obs::journal::f(1.0))]);
+        })
+        .mean_ns;
+    obs::journal::open(&jpath, obs::journal::DEFAULT_MAX_BYTES).unwrap();
+    let j_on = b
+        .run_items("journal_emit/on", Some(1.0), || {
+            obs::journal::emit("bench", &[("v", obs::journal::f(1.0))]);
+        })
+        .mean_ns;
+    obs::journal::close();
+    let _ = std::fs::remove_file(&jpath);
+    let _ = std::fs::remove_file(&jrot);
     let overhead = on / off - 1.0;
     let overhead_sink = on_sink / off - 1.0;
     println!(
-        "tracing overhead: ring {:+.2}%, ring+sink {:+.2}%",
+        "tracing overhead: ring {:+.2}%, ring+sink {:+.2}%; \
+         journal emit: closed {j_off:.1} ns, open {j_on:.1} ns",
         overhead * 100.0,
         overhead_sink * 100.0
     );
@@ -88,6 +110,8 @@ fn obs_overhead() {
         vec![
             ("overhead_frac", Json::Num(overhead)),
             ("overhead_sink_frac", Json::Num(overhead_sink)),
+            ("journal_emit_off_ns", Json::Num(j_off)),
+            ("journal_emit_on_ns", Json::Num(j_on)),
         ],
     )
     .unwrap();

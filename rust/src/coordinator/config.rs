@@ -264,6 +264,40 @@ pub fn trace_opt_specs() -> Vec<crate::util::cli::OptSpec> {
             takes_value: true,
             default: None,
         },
+        OptSpec {
+            name: "diff",
+            help: "trace: compare two NDJSON runs (`trace --diff a.ndjson b.ndjson`): \
+                   per-phase wall/bytes/intensity deltas with an attribution verdict \
+                   per regressed phase",
+            takes_value: false,
+            default: None,
+        },
+    ]
+}
+
+/// `stencilctl top` options: the refresh-loop console over a running
+/// daemon's `stats` + `alerts` verbs.
+pub fn top_opt_specs() -> Vec<crate::util::cli::OptSpec> {
+    use crate::util::cli::OptSpec;
+    vec![
+        OptSpec {
+            name: "addr",
+            help: "top: daemon address to watch",
+            takes_value: true,
+            default: Some("127.0.0.1:7141"),
+        },
+        OptSpec {
+            name: "interval-ms",
+            help: "top: refresh period",
+            takes_value: true,
+            default: Some("1000"),
+        },
+        OptSpec {
+            name: "iters",
+            help: "top: frames to render before exiting (0 = until interrupted)",
+            takes_value: true,
+            default: Some("0"),
+        },
     ]
 }
 
@@ -303,7 +337,9 @@ pub fn tune_opt_specs() -> Vec<crate::util::cli::OptSpec> {
 /// tune's own flags.
 pub fn all_opt_specs() -> Vec<crate::util::cli::OptSpec> {
     let mut specs = serve_opt_specs();
-    for s in tune_opt_specs().into_iter().chain(trace_opt_specs()) {
+    for s in
+        tune_opt_specs().into_iter().chain(trace_opt_specs()).chain(top_opt_specs())
+    {
         if !specs.iter().any(|e| e.name == s.name) {
             specs.push(s);
         }
@@ -369,6 +405,21 @@ pub fn serve_opt_specs() -> Vec<crate::util::cli::OptSpec> {
                    jobs into one batched dispatch (0 = coalesce only true ties)",
             takes_value: true,
             default: Some("0"),
+        },
+        OptSpec {
+            name: "alert-rules",
+            help: "serve: declarative alert rules (JSON array; see README); \
+                   omit = the builtin p99/SLO-burn/model-err/queue rules",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "journal",
+            help: "serve: append-only NDJSON event journal (admission refusals, \
+                   drift flags, retune outcomes, spill/restore, alert transitions; \
+                   size-capped rotation to <path>.1; omit = no journal)",
+            takes_value: true,
+            default: None,
         },
     ]);
     specs
@@ -537,13 +588,43 @@ mod tests {
         // the union list carries --trace-out and trace's flags exactly
         // once ("run --trace-out t serve" style invocations parse)
         let all = all_opt_specs();
-        for name in ["trace-out", "in", "chrome", "out"] {
+        for name in ["trace-out", "in", "chrome", "out", "diff"] {
             assert_eq!(all.iter().filter(|s| s.name == name).count(), 1, "--{name}");
         }
         // every run-like subcommand shares the flag
         for specs in [run_opt_specs(), serve_opt_specs(), tune_opt_specs()] {
             assert_eq!(specs.iter().filter(|s| s.name == "trace-out").count(), 1);
         }
+    }
+
+    #[test]
+    fn explainability_flags_parse_once_everywhere() {
+        // serve gains --alert-rules/--journal exactly once
+        let serve = serve_opt_specs();
+        for name in ["alert-rules", "journal"] {
+            assert_eq!(serve.iter().filter(|s| s.name == name).count(), 1, "--{name}");
+        }
+        // trace gains the boolean --diff
+        let trace = trace_opt_specs();
+        let diff = trace.iter().find(|s| s.name == "diff").unwrap();
+        assert!(!diff.takes_value);
+        // top's own spec list: addr/interval-ms/iters, once each, with
+        // the daemon's default address
+        let top = top_opt_specs();
+        for name in ["addr", "interval-ms", "iters"] {
+            assert_eq!(top.iter().filter(|s| s.name == name).count(), 1, "--{name}");
+        }
+        assert_eq!(top.iter().find(|s| s.name == "addr").unwrap().default, Some("127.0.0.1:7141"));
+        // the union stays duplicate-free with the new lists chained in
+        let all = all_opt_specs();
+        for name in ["alert-rules", "journal", "diff", "interval-ms", "iters", "addr"] {
+            assert_eq!(all.iter().filter(|s| s.name == name).count(), 1, "--{name}");
+        }
+        // top's flags parse with their defaults
+        let raw: Vec<String> = vec!["top".into(), "--iters".into(), "2".into()];
+        let args = crate::util::cli::Args::parse(&raw, &top).unwrap();
+        assert_eq!(args.get_usize("iters").unwrap(), Some(2));
+        assert_eq!(args.get_usize("interval-ms").unwrap(), Some(1000));
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //!   sweep      fusion-depth sweep of predictions for one config
 //!   serve      long-lived NDJSON daemon (sessions, plan cache, admission)
 //!   tune       measure THIS machine's roofline constants into a profile
-//!   trace      render an NDJSON span stream (Chrome trace JSON / summary)
+//!   trace      render an NDJSON span stream (Chrome trace JSON / summary),
+//!              or diff two runs (--diff a.ndjson b.ndjson)
+//!   top        refresh-loop console over a running daemon's stats/alerts
 //!   list       list AOT artifacts from the manifest
 //!   reproduce  regenerate a paper table/figure (table2..4, fig2..16, all)
 //!
@@ -19,7 +21,9 @@
 use anyhow::{bail, Result};
 
 use tc_stencil::backend;
-use tc_stencil::coordinator::config::{all_opt_specs, run_opt_specs, trace_opt_specs, RunConfig};
+use tc_stencil::coordinator::config::{
+    all_opt_specs, run_opt_specs, top_opt_specs, trace_opt_specs, RunConfig,
+};
 use tc_stencil::coordinator::{planner, scheduler};
 use tc_stencil::engines;
 use tc_stencil::obs;
@@ -48,7 +52,10 @@ fn dispatch(raw: &[String]) -> Result<()> {
     // anywhere, parse against the UNION of all spec lists: a stray
     // option *value* ("tune --out serve") merely widens the accepted
     // flags instead of rejecting the real subcommand's own options.
-    let specs = if raw.iter().any(|a| a == "serve" || a == "tune" || a == "trace") {
+    let specs = if raw
+        .iter()
+        .any(|a| a == "serve" || a == "tune" || a == "trace" || a == "top")
+    {
         all_opt_specs()
     } else {
         run_opt_specs()
@@ -69,6 +76,12 @@ fn dispatch(raw: &[String]) -> Result<()> {
             let targs = Args::parse(raw, &trace_opt_specs())?;
             trace_cmd(&targs)
         }
+        "top" => {
+            // Same union-vs-own-specs dance as trace: top's defaults
+            // (interval, frame count) must come from its own list.
+            let targs = Args::parse(raw, &top_opt_specs())?;
+            top_cmd(&targs)
+        }
         "list" => list(&args),
         "reproduce" => reproduce(&args),
         "help" | "--help" => {
@@ -82,7 +95,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
 fn help_text() -> String {
     format!(
         "stencilctl — Do We Need Tensor Cores for Stencil Computations?\n\n\
-         subcommands: analyze | plan | run | sweep | serve | tune | trace | list | reproduce <id>\n\
+         subcommands: analyze | plan | run | sweep | serve | tune | trace | top | list | reproduce <id>\n\
          reproduce ids: table2 table3 table4 fig2 fig8 fig10 fig11 fig13 fig15 fig16 all\n\n\
          backends (--backend, honored by plan, run, and sweep — sweep\n\
          scores predictions only, so the flag merely scopes candidates):\n\
@@ -141,8 +154,16 @@ fn help_text() -> String {
            --batch-window-ms MS gather window for coalescing concurrent\n\
                               identical-plan jobs into one batched\n\
                               dispatch (default 0)\n\
+           --alert-rules PATH declarative alert rules (JSON array; see\n\
+                              rust/README.md for the grammar); omitted =\n\
+                              builtin p99/SLO-burn/model-err/queue rules\n\
+           --journal PATH     append-only NDJSON event journal: admission\n\
+                              refusals with evidence, drift flags, retune\n\
+                              install/reject, spill/restore, alert\n\
+                              transitions; rotates to PATH.1 at 4 MiB\n\
            requests: ping | plan | create_session | advance | fetch |\n\
-                     close_session | stats | shutdown (see rust/README.md)\n\n\
+                     close_session | stats | alerts | metrics | shutdown\n\
+                     (see rust/README.md)\n\n\
          kernel dispatch (--kernels, honored by plan, run, serve, tune):\n\
            auto     resolve each compiled job against the specialized\n\
                     row-kernel registry: shape-monomorphized, SIMD-\n\
@@ -178,10 +199,20 @@ fn help_text() -> String {
                               JSON (one track per worker, barrier stalls\n\
                               as gaps; open in chrome://tracing) or a\n\
                               per-worker/per-kind summary (default)\n\
-           stats [\"prom\": true] / metrics (serve verbs)\n\
+           trace --diff A B   align two span streams by (phase, shard,\n\
+                              kernel) and report wall/bytes/intensity\n\
+                              deltas, with an attribution verdict\n\
+                              (bandwidth/kernel/redundancy/serving) per\n\
+                              regressed phase\n\
+           top [--addr A] [--interval-ms MS] [--iters N]\n\
+                              refresh-loop console over a running daemon:\n\
+                              tenants, queue depth, alert states, rolling\n\
+                              p50/p95/p99, attribution verdicts\n\
+           stats [\"prom\": true] / metrics / alerts (serve verbs)\n\
                               Prometheus exposition: counters + queue-\n\
                               wait/phase-wall/barrier-stall/model-error\n\
-                              histograms and per-kernel GPts/s gauges\n\n{}",
+                              histograms, per-kernel GPts/s gauges,\n\
+                              quantile estimates, stencilctl_alerts\n\n{}",
         usage(&run_opt_specs())
     )
 }
@@ -229,11 +260,32 @@ fn tune_cmd(args: &Args) -> Result<()> {
 }
 
 /// Offline trace rendering: read an NDJSON span stream (produced by
-/// `--trace-out`) and emit Chrome trace-event JSON (`--chrome`) or a
-/// human-readable per-worker summary.
+/// `--trace-out`) and emit Chrome trace-event JSON (`--chrome`), a
+/// human-readable per-worker summary, or — with `--diff A B` — the
+/// per-phase regression report between two runs.
 fn trace_cmd(args: &Args) -> Result<()> {
+    if args.flag("diff") {
+        let (Some(a), Some(b)) = (args.positional.get(1), args.positional.get(2)) else {
+            bail!("trace --diff needs two span files: trace --diff a.ndjson b.ndjson");
+        };
+        let sa = obs::export::load_trace(&std::fs::read_to_string(a)?)?;
+        let sb = obs::export::load_trace(&std::fs::read_to_string(b)?)?;
+        let report = obs::diff::diff(&sa, &sb);
+        let rendered = report.render();
+        match args.get("out") {
+            Some(path) => {
+                std::fs::write(path, rendered.as_bytes())?;
+                println!("wrote {path} ({} regressions)", report.regressions());
+            }
+            None => print!("{rendered}"),
+        }
+        return Ok(());
+    }
     let Some(input) = args.get("in") else {
-        bail!("trace needs --in <spans.ndjson> (produce one with run/serve --trace-out)");
+        bail!(
+            "trace needs --in <spans.ndjson> (produce one with run/serve \
+             --trace-out), or --diff a.ndjson b.ndjson"
+        );
     };
     let text = std::fs::read_to_string(input)?;
     let spans = obs::export::load_trace(&text)?;
@@ -250,6 +302,46 @@ fn trace_cmd(args: &Args) -> Result<()> {
         None => print!("{rendered}"),
     }
     Ok(())
+}
+
+/// `stencilctl top`: a refresh-loop console over a running daemon.
+/// Each frame sends the `stats` and `alerts` verbs on one persistent
+/// connection and renders [`report::top_view`] — per-tenant rows,
+/// queue depth, alert states, latency quantiles, attribution verdicts.
+fn top_cmd(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.get_or("addr", "127.0.0.1:7141").to_string();
+    let interval_ms = args.get_usize("interval-ms")?.unwrap_or(1000) as u64;
+    let iters = args.get_usize("iters")?.unwrap_or(0) as u64;
+    let stream = std::net::TcpStream::connect(&addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut request = |line: &str| -> Result<tc_stencil::util::json::Json> {
+        writeln!(writer, "{line}")?;
+        writer.flush()?;
+        let mut buf = String::new();
+        reader.read_line(&mut buf)?;
+        if buf.trim().is_empty() {
+            bail!("daemon at {addr} closed the connection");
+        }
+        tc_stencil::util::json::Json::parse_line(buf.trim_end())
+    };
+    let mut frame: u64 = 0;
+    loop {
+        frame += 1;
+        let stats = request(r#"{"op":"stats"}"#)?;
+        let alerts = request(r#"{"op":"alerts"}"#)?;
+        if frame > 1 {
+            // keep a single frame (CI, piping) free of control codes
+            print!("\x1b[2J\x1b[H");
+        }
+        print!("{}", report::top_view(&stats, &alerts, frame));
+        std::io::stdout().flush()?;
+        if iters > 0 && frame >= iters {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(50)));
+    }
 }
 
 /// Install the NDJSON span sink and flip tracing on when the run
@@ -296,6 +388,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
         probe_threads: cfg.threads,
         resident_bytes: args.get_usize("resident-bytes")?.map(|b| b as u64),
         batch_window_ms: args.get_f64("batch-window-ms")?.unwrap_or(0.0).max(0.0),
+        alert_rules: args.get("alert-rules").map(std::path::PathBuf::from),
+        journal: args.get("journal").map(std::path::PathBuf::from),
     };
     let mut svc = service::Service::start(opts);
     let res = if args.flag("stdio") { svc.serve_stdio() } else { svc.serve_tcp() };

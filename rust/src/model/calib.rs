@@ -113,6 +113,26 @@ pub fn report_sharded(
     }
 }
 
+/// The byte traffic a prediction implies for a job: intensity is
+/// FLOP/byte, so `bytes = flops / I_predicted`.  This is the
+/// "traffic the planner priced" side of the redundancy residual in
+/// [`obs::attrib`](crate::obs::attrib) — measured `bytes_moved` above
+/// it is recompute/halo traffic the κ/τ/α assumptions didn't cover.
+///
+/// ```
+/// use tc_stencil::model::calib;
+/// // 9000 flops priced at intensity 4.5 flop/byte → 2000 bytes.
+/// assert_eq!(calib::predicted_job_bytes(9000.0, 4.5), 2000.0);
+/// assert_eq!(calib::predicted_job_bytes(9000.0, 0.0), 0.0); // degenerate
+/// ```
+pub fn predicted_job_bytes(flops: f64, predicted_intensity: f64) -> f64 {
+    if predicted_intensity > 0.0 && flops.is_finite() && flops > 0.0 {
+        flops / predicted_intensity
+    } else {
+        0.0
+    }
+}
+
 /// Compare a measured intensity against an externally computed
 /// prediction (the shard-aware path uses
 /// [`shard::predicted_job_intensity`](crate::model::shard::predicted_job_intensity)).

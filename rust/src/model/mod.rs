@@ -185,6 +185,38 @@
 //! // Per-kernel GPts/s — the streamed counterpart of `KernelPeak`.
 //! om.observe_kernel_gpts("box-2d1r/double/doctest", 0.25);
 //! assert!(om.kernel_rows().iter().any(|(k, n, _)| k.ends_with("/doctest") && *n >= 1));
+//! // Quantile estimates walk the log₂ buckets: the p-th estimate is a
+//! // bucket upper bound, so it overshoots the exact percentile by at
+//! // most 2× (documented on `Histogram::quantile`).
+//! let h = tc_stencil::obs::prom::Histogram::new(0, 8);
+//! h.observe(3.0);
+//! assert_eq!(h.quantile(0.99), Some(4.0)); // 3 ∈ (2, 4] → bound 4
+//!
+//! // Attribution residuals (MODEL.md "attribution residuals" table):
+//! // each term prices one Eq. symbol against what the job measured —
+//! // bandwidth = exec − bytes/𝔹 (Eq. 4's memory roof), kernel =
+//! // exec − flops/ℙ (Eq. 4's compute roof), redundancy = the bytes
+//! // beyond Eq. 8/9's priced traffic (flops / I_predicted, the κ/τ/α
+//! // assumptions), serving = handler wall outside execution.
+//! use tc_stencil::obs::attrib::{self, JobObservation, Term};
+//! assert_eq!(calib::predicted_job_bytes(9000.0, 4.5), 2000.0); // flops / I
+//! // A memory-bound job priced at 1 ms that took 2 ms: the profile 𝔹
+//! // (2 GB/s) prices its 2 MB at 1 ms, so the extra millisecond lands
+//! // on the bandwidth term — the machine's 𝔹 has drifted below the
+//! // profile constant.
+//! let o = JobObservation {
+//!     predicted_ms: 1.0, exec_ms: 2.0, serve_ms: 0.1, mem_bound: true,
+//!     bytes_moved: 2.0e6, bytes_predicted: 2.0e6, flops: 9.0e6,
+//!     bandwidth: 2.0e9, peak_flops: 9.0e9,
+//! };
+//! let a = attrib::attribute(&o);
+//! assert_eq!(a.verdict, Term::Bandwidth);
+//! let bw = a.terms.iter().find(|t| t.term == Term::Bandwidth).unwrap();
+//! assert!((bw.residual_ms - 1.0).abs() < 1e-12);     // exec − bytes/𝔹
+//! // 4 ranked terms per job: serving, redundancy, ONE roof term
+//! // (bandwidth when mem-bound, kernel otherwise), unattributed.
+//! assert_eq!(a.terms.len(), 4);
+//! assert_eq!(Term::all().len(), 5);
 //! ```
 
 #![warn(missing_docs)]

@@ -1,0 +1,477 @@
+//! Declarative alert rules over the prom registry — the paging plane.
+//!
+//! Rules are evaluated lazily, inside the `stats`/`metrics`/`alerts`
+//! verbs (and `stencilctl top`'s refresh loop), never on the job hot
+//! path: a rule evaluation reads counters/histograms that are already
+//! maintained, so serving cost is zero between evaluations.  Each rule
+//! keeps firing/resolved state with a `for` hysteresis (consecutive
+//! breached evaluations before firing); transitions emit
+//! `alert_firing`/`alert_resolved` journal events
+//! ([`crate::obs::journal`]) and a transitions counter, and the
+//! current state renders as `stencilctl_alerts{rule,label}` gauges in
+//! the Prometheus exposition.
+//!
+//! Rule file (`--alert-rules <file>`): a JSON array of objects.
+//!
+//! ```json
+//! [
+//!   {"name":"queue-p99","kind":"p99_over","metric":"queue_wait_ns","threshold_ms":500,"for":2},
+//!   {"name":"slo-burn","kind":"slo_burn","max_frac":0.1,"min_samples":4},
+//!   {"name":"model-drift","kind":"model_err"},
+//!   {"name":"queue-sat","kind":"queue_saturation","frac":0.8}
+//! ]
+//! ```
+//!
+//! `for` defaults to 1 (fire on the first breached evaluation).
+//! Omitting `--alert-rules` installs [`builtin_rules`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::journal;
+
+/// What a rule watches.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RuleKind {
+    /// p99 of a latency histogram above a threshold (ns domain).
+    P99Over {
+        /// `queue_wait_ns` | `phase_wall_ns` | `barrier_stall_ns`.
+        metric: String,
+        /// Threshold in nanoseconds.
+        threshold_ns: f64,
+    },
+    /// Per-tenant SLO burn: deadline_missed / admitted above a
+    /// fraction once enough jobs have been admitted.
+    SloBurn {
+        /// Maximum tolerated missed fraction.
+        max_frac: f64,
+        /// Admitted jobs before the ratio is meaningful.
+        min_samples: u64,
+    },
+    /// Any drift region whose model-error EWMA breached its threshold.
+    ModelErr,
+    /// Queue depth at or above a fraction of capacity.
+    QueueSaturation {
+        /// Saturation fraction of `--max-queue`.
+        frac: f64,
+    },
+}
+
+impl RuleKind {
+    /// Stable wire name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleKind::P99Over { .. } => "p99_over",
+            RuleKind::SloBurn { .. } => "slo_burn",
+            RuleKind::ModelErr => "model_err",
+            RuleKind::QueueSaturation { .. } => "queue_saturation",
+        }
+    }
+}
+
+/// One declarative rule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    /// Operator-facing rule name (the `rule` label).
+    pub name: String,
+    pub kind: RuleKind,
+    /// Consecutive breached evaluations before firing (≥ 1).
+    pub for_evals: u32,
+}
+
+/// The defaults installed when `--alert-rules` is absent: queue
+/// saturation at 80%, any drift-region breach, 10% SLO burn after 4
+/// admitted jobs, and p99 queue wait over 500 ms.
+pub fn builtin_rules() -> Vec<Rule> {
+    vec![
+        Rule {
+            name: "queue_saturated".to_string(),
+            kind: RuleKind::QueueSaturation { frac: 0.8 },
+            for_evals: 1,
+        },
+        Rule { name: "model_err_region".to_string(), kind: RuleKind::ModelErr, for_evals: 1 },
+        Rule {
+            name: "slo_burn".to_string(),
+            kind: RuleKind::SloBurn { max_frac: 0.10, min_samples: 4 },
+            for_evals: 1,
+        },
+        Rule {
+            name: "queue_wait_p99".to_string(),
+            kind: RuleKind::P99Over {
+                metric: "queue_wait_ns".to_string(),
+                threshold_ns: 500e6,
+            },
+            for_evals: 1,
+        },
+    ]
+}
+
+/// Parse a rule file (JSON array; see the module grammar).
+pub fn parse_rules(text: &str) -> Result<Vec<Rule>> {
+    let doc = Json::parse(text).context("alert rule file is not valid JSON")?;
+    let arr = match doc.as_arr() {
+        Some(a) => a,
+        None => bail!("alert rule file must be a JSON array of rule objects"),
+    };
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, r) in arr.iter().enumerate() {
+        let name = r
+            .get("name")
+            .and_then(|j| j.as_str().map(str::to_string).ok_or_else(|| anyhow::anyhow!("")))
+            .with_context(|| format!("rule {i}: missing \"name\""))?;
+        let kind_s = r
+            .get("kind")
+            .and_then(|j| j.as_str().map(str::to_string).ok_or_else(|| anyhow::anyhow!("")))
+            .with_context(|| format!("rule {i}: missing \"kind\""))?;
+        let num = |key: &str| -> Result<f64> {
+            r.get(key)
+                .ok()
+                .and_then(Json::as_f64)
+                .filter(|v| v.is_finite() && *v >= 0.0)
+                .with_context(|| format!("rule {i} ({name:?}): needs finite \"{key}\" >= 0"))
+        };
+        let kind = match kind_s.as_str() {
+            "p99_over" => RuleKind::P99Over {
+                metric: r
+                    .get("metric")
+                    .ok()
+                    .and_then(|j| j.as_str())
+                    .unwrap_or("queue_wait_ns")
+                    .to_string(),
+                threshold_ns: num("threshold_ms")? * 1e6,
+            },
+            "slo_burn" => RuleKind::SloBurn {
+                max_frac: num("max_frac")?,
+                min_samples: r.get("min_samples").ok().and_then(Json::as_usize).unwrap_or(1)
+                    as u64,
+            },
+            "model_err" => RuleKind::ModelErr,
+            "queue_saturation" => RuleKind::QueueSaturation { frac: num("frac")? },
+            other => bail!("rule {i} ({name:?}): unknown kind {other:?}"),
+        };
+        let for_evals =
+            r.get("for").ok().and_then(Json::as_usize).unwrap_or(1).max(1) as u32;
+        out.push(Rule { name, kind, for_evals });
+    }
+    Ok(out)
+}
+
+/// One drift region's current error state (the `model_err` input).
+#[derive(Debug, Clone)]
+pub struct RegionErr {
+    pub region: String,
+    pub ewma: f64,
+    pub threshold: f64,
+    pub over: bool,
+}
+
+/// One tenant's SLO bookkeeping (the `slo_burn` input).
+#[derive(Debug, Clone)]
+pub struct TenantSlo {
+    pub tenant: String,
+    pub admitted: u64,
+    pub deadline_missed: u64,
+}
+
+/// The snapshot an evaluation runs against.  Histogram quantiles are
+/// read from the process registry ([`crate::obs::metrics`]) directly.
+#[derive(Debug, Clone, Default)]
+pub struct EvalInput {
+    pub queue_depth: u64,
+    pub queue_cap: u64,
+    pub regions: Vec<RegionErr>,
+    pub tenants: Vec<TenantSlo>,
+}
+
+/// One rule×label's evaluated state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertRow {
+    pub rule: String,
+    /// Discriminating label (tenant for `slo_burn`, region for
+    /// `model_err`, empty otherwise).
+    pub label: String,
+    pub kind: &'static str,
+    pub firing: bool,
+    /// The observed value the rule compared.
+    pub value: f64,
+    /// The rule's threshold in the same unit.
+    pub threshold: f64,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct CellState {
+    consecutive: u32,
+    firing: bool,
+}
+
+/// Evaluated rules + firing/resolved state + transition accounting.
+pub struct AlertEngine {
+    rules: Vec<Rule>,
+    state: Mutex<BTreeMap<(String, String), CellState>>,
+    transitions: AtomicU64,
+}
+
+impl AlertEngine {
+    pub fn new(rules: Vec<Rule>) -> AlertEngine {
+        AlertEngine { rules, state: Mutex::new(BTreeMap::new()), transitions: AtomicU64::new(0) }
+    }
+
+    /// The installed rules.
+    pub fn rules(&self) -> &[Rule] {
+        &self.rules
+    }
+
+    /// Lifetime firing/resolved transitions.
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate every rule against the snapshot, updating state.  Each
+    /// breached evaluation advances the rule's `for` counter; crossing
+    /// it fires, a clean evaluation resolves.  Transitions land in the
+    /// journal (when open) and the transitions counter.
+    pub fn evaluate(&self, input: &EvalInput) -> Vec<AlertRow> {
+        let mut rows = Vec::new();
+        for rule in &self.rules {
+            match &rule.kind {
+                RuleKind::P99Over { metric, threshold_ns } => {
+                    let m = super::metrics();
+                    let h = match metric.as_str() {
+                        "queue_wait_ns" => &m.queue_wait_ns,
+                        "phase_wall_ns" => &m.phase_wall_ns,
+                        "barrier_stall_ns" => &m.barrier_stall_ns,
+                        _ => &m.queue_wait_ns,
+                    };
+                    let p99 = h.quantile(0.99).unwrap_or(0.0);
+                    rows.push(self.update(rule, "", p99, *threshold_ns, p99 > *threshold_ns));
+                }
+                RuleKind::SloBurn { max_frac, min_samples } => {
+                    for t in &input.tenants {
+                        let frac = if t.admitted > 0 {
+                            t.deadline_missed as f64 / t.admitted as f64
+                        } else {
+                            0.0
+                        };
+                        let breached = t.admitted >= *min_samples && frac > *max_frac;
+                        rows.push(self.update(rule, &t.tenant, frac, *max_frac, breached));
+                    }
+                }
+                RuleKind::ModelErr => {
+                    for r in &input.regions {
+                        rows.push(self.update(rule, &r.region, r.ewma, r.threshold, r.over));
+                    }
+                }
+                RuleKind::QueueSaturation { frac } => {
+                    let cap = input.queue_cap.max(1) as f64;
+                    let fill = input.queue_depth as f64 / cap;
+                    rows.push(self.update(rule, "", fill, *frac, fill >= *frac));
+                }
+            }
+        }
+        rows
+    }
+
+    fn update(
+        &self,
+        rule: &Rule,
+        label: &str,
+        value: f64,
+        threshold: f64,
+        breached: bool,
+    ) -> AlertRow {
+        let key = (rule.name.clone(), label.to_string());
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let cell = g.entry(key).or_default();
+        let was = cell.firing;
+        if breached {
+            cell.consecutive = cell.consecutive.saturating_add(1);
+            if cell.consecutive >= rule.for_evals {
+                cell.firing = true;
+            }
+        } else {
+            cell.consecutive = 0;
+            cell.firing = false;
+        }
+        let firing = cell.firing;
+        drop(g);
+        if firing != was {
+            self.transitions.fetch_add(1, Ordering::Relaxed);
+            journal::emit(
+                if firing { "alert_firing" } else { "alert_resolved" },
+                &[
+                    ("rule", Json::Str(rule.name.clone())),
+                    ("label", Json::Str(label.to_string())),
+                    ("kind", Json::Str(rule.kind.as_str().to_string())),
+                    ("value", journal::f(value)),
+                    ("threshold", journal::f(threshold)),
+                ],
+            );
+        }
+        AlertRow {
+            rule: rule.name.clone(),
+            label: label.to_string(),
+            kind: rule.kind.as_str(),
+            firing,
+            value,
+            threshold,
+        }
+    }
+}
+
+/// Render the evaluated rows as Prometheus series: a 0/1
+/// `stencilctl_alerts` gauge per rule×label plus the lifetime
+/// transitions counter.
+pub fn render_prom(rows: &[AlertRow], transitions: u64) -> String {
+    let mut out = String::new();
+    out.push_str("# HELP stencilctl_alerts Alert state per rule (1 = firing).\n");
+    out.push_str("# TYPE stencilctl_alerts gauge\n");
+    for r in rows {
+        if r.label.is_empty() {
+            out.push_str(&format!(
+                "stencilctl_alerts{{rule=\"{}\"}} {}\n",
+                r.rule,
+                u8::from(r.firing)
+            ));
+        } else {
+            out.push_str(&format!(
+                "stencilctl_alerts{{rule=\"{}\",label=\"{}\"}} {}\n",
+                r.rule,
+                r.label,
+                u8::from(r.firing)
+            ));
+        }
+    }
+    out.push_str("# HELP stencilctl_alert_transitions_total Firing/resolved transitions.\n");
+    out.push_str("# TYPE stencilctl_alert_transitions_total counter\n");
+    out.push_str(&format!("stencilctl_alert_transitions_total {transitions}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_rules_cover_the_four_kinds() {
+        let rules = builtin_rules();
+        assert_eq!(rules.len(), 4);
+        let kinds: Vec<&str> = rules.iter().map(|r| r.kind.as_str()).collect();
+        for k in ["p99_over", "slo_burn", "model_err", "queue_saturation"] {
+            assert!(kinds.contains(&k), "missing builtin {k}");
+        }
+    }
+
+    #[test]
+    fn rule_file_parses_and_rejects_garbage() {
+        let rules = parse_rules(
+            r#"[
+              {"name":"q","kind":"p99_over","metric":"phase_wall_ns","threshold_ms":250,"for":3},
+              {"name":"b","kind":"slo_burn","max_frac":0.05,"min_samples":10},
+              {"name":"m","kind":"model_err"},
+              {"name":"s","kind":"queue_saturation","frac":0.5}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(rules.len(), 4);
+        assert_eq!(rules[0].for_evals, 3);
+        assert_eq!(
+            rules[0].kind,
+            RuleKind::P99Over { metric: "phase_wall_ns".into(), threshold_ns: 250e6 }
+        );
+        assert_eq!(rules[1].kind, RuleKind::SloBurn { max_frac: 0.05, min_samples: 10 });
+        assert_eq!(rules[3].kind, RuleKind::QueueSaturation { frac: 0.5 });
+        assert!(parse_rules("{}").is_err(), "must be an array");
+        assert!(parse_rules(r#"[{"kind":"model_err"}]"#).is_err(), "name required");
+        assert!(parse_rules(r#"[{"name":"x","kind":"nope"}]"#).is_err(), "unknown kind");
+        assert!(
+            parse_rules(r#"[{"name":"x","kind":"queue_saturation"}]"#).is_err(),
+            "missing frac"
+        );
+    }
+
+    #[test]
+    fn queue_saturation_fires_resolves_and_counts_transitions() {
+        let eng = AlertEngine::new(vec![Rule {
+            name: "sat".into(),
+            kind: RuleKind::QueueSaturation { frac: 0.8 },
+            for_evals: 1,
+        }]);
+        let mut input = EvalInput { queue_depth: 9, queue_cap: 10, ..Default::default() };
+        let rows = eng.evaluate(&input);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].firing, "{rows:?}");
+        assert!((rows[0].value - 0.9).abs() < 1e-12);
+        assert_eq!(eng.transitions(), 1);
+        // still firing: no new transition
+        assert!(eng.evaluate(&input)[0].firing);
+        assert_eq!(eng.transitions(), 1);
+        input.queue_depth = 1;
+        assert!(!eng.evaluate(&input)[0].firing, "resolves when the queue drains");
+        assert_eq!(eng.transitions(), 2);
+    }
+
+    #[test]
+    fn for_hysteresis_delays_firing() {
+        let eng = AlertEngine::new(vec![Rule {
+            name: "sat3".into(),
+            kind: RuleKind::QueueSaturation { frac: 0.5 },
+            for_evals: 3,
+        }]);
+        let hot = EvalInput { queue_depth: 8, queue_cap: 10, ..Default::default() };
+        let cold = EvalInput { queue_depth: 0, queue_cap: 10, ..Default::default() };
+        assert!(!eng.evaluate(&hot)[0].firing, "1st breach");
+        assert!(!eng.evaluate(&hot)[0].firing, "2nd breach");
+        assert!(eng.evaluate(&hot)[0].firing, "3rd consecutive breach fires");
+        // a clean evaluation resets the streak entirely
+        assert!(!eng.evaluate(&cold)[0].firing);
+        assert!(!eng.evaluate(&hot)[0].firing, "streak restarted");
+    }
+
+    #[test]
+    fn model_err_and_slo_burn_label_per_region_and_tenant() {
+        let eng = AlertEngine::new(vec![
+            Rule { name: "drift".into(), kind: RuleKind::ModelErr, for_evals: 1 },
+            Rule {
+                name: "burn".into(),
+                kind: RuleKind::SloBurn { max_frac: 0.1, min_samples: 4 },
+                for_evals: 1,
+            },
+        ]);
+        let input = EvalInput {
+            queue_depth: 0,
+            queue_cap: 8,
+            regions: vec![
+                RegionErr { region: "mem/sweep".into(), ewma: 0.4, threshold: 0.25, over: true },
+                RegionErr { region: "comp/fused".into(), ewma: 0.01, threshold: 0.25, over: false },
+            ],
+            tenants: vec![
+                TenantSlo { tenant: "a".into(), admitted: 10, deadline_missed: 5 },
+                TenantSlo { tenant: "b".into(), admitted: 2, deadline_missed: 2 },
+                TenantSlo { tenant: "c".into(), admitted: 10, deadline_missed: 0 },
+            ],
+        };
+        let rows = eng.evaluate(&input);
+        let firing: Vec<(&str, &str)> = rows
+            .iter()
+            .filter(|r| r.firing)
+            .map(|r| (r.rule.as_str(), r.label.as_str()))
+            .collect();
+        assert!(firing.contains(&("drift", "mem/sweep")));
+        assert!(!firing.contains(&("drift", "comp/fused")));
+        assert!(firing.contains(&("burn", "a")), "50% burn over 10 admitted fires");
+        assert!(
+            !firing.contains(&("burn", "b")),
+            "2 admitted < min_samples: burn ratio not yet meaningful"
+        );
+        assert!(!firing.contains(&("burn", "c")));
+        let text = render_prom(&rows, eng.transitions());
+        assert!(text.contains("stencilctl_alerts{rule=\"drift\",label=\"mem/sweep\"} 1"));
+        assert!(text.contains("stencilctl_alerts{rule=\"drift\",label=\"comp/fused\"} 0"));
+        assert!(text.contains("stencilctl_alert_transitions_total 2"));
+    }
+}

@@ -1,0 +1,430 @@
+//! Model-error attribution: *which term broke*.
+//!
+//! The calibration plane ([`crate::model::calib`]) reports a scalar
+//! model error; the drift plane EWMAs it per region.  Neither says
+//! whether the bandwidth constant 𝔹, the kernel peak ℙ, the planner's
+//! redundancy assumption (α fused, κ/τ sharded), or the serving layer
+//! (queue wait + gather window + barrier stall) is the term that
+//! disagrees with the machine.  This module decomposes one completed
+//! job's measured-vs-predicted wall time into per-term residuals — the
+//! roofline-attribution style of analysis — and ranks them into a
+//! verdict the reply, `stats`, the trace differ, and
+//! [`crate::tune::drift`]'s retune episodes all cite.
+//!
+//! The decomposition (all terms in milliseconds, model − measurement):
+//!
+//! * **serving** = handler wall − execution wall: time the job spent
+//!   queued, gathering co-batchers, or stalled at barriers.  The
+//!   roofline predicts zero of it.
+//! * **redundancy** = (bytes_moved − bytes_predicted) / 𝔹: extra
+//!   traffic the planner did not price (halo re-reads, trapezoid
+//!   recompute beyond the assumed κ/τ/α).
+//! * **bandwidth** (memory-bound jobs) = exec − bytes_moved / 𝔹: with
+//!   the *actual* traffic priced at the profile's 𝔹, what remains is
+//!   the achieved-bandwidth shortfall — i.e. 𝔹 itself is wrong.
+//! * **kernel** (compute-bound jobs) = exec − flops / ℙ: the same
+//!   shortfall against the peak that priced the plan.
+//! * **unattributed** = total residual − Σ terms: what the model has
+//!   no name for (kept explicit so a bad decomposition is visible,
+//!   not silently absorbed into the largest term).
+//!
+//! A crushed 𝔹 shows up as a dominant (negative) bandwidth residual, a
+//! crushed ℙ as a kernel residual, an inflated queue as a serving
+//! residual — the single-term perturbation tests below pin each.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// A model term blame can land on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Term {
+    /// The profile bandwidth 𝔹 (Eq. 4's memory roof).
+    Bandwidth,
+    /// The kernel peak ℙ (Eq. 4/20's compute roof, per-kernel measured).
+    Kernel,
+    /// Planner-assumed redundancy (α fused, κ/τ sharded) vs actual bytes.
+    Redundancy,
+    /// Queue wait + batch gather window + barrier stall.
+    Serving,
+    /// Residual the decomposition cannot name.
+    Unattributed,
+}
+
+impl Term {
+    /// Stable wire name (`"attribution"` blocks, journal events).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Term::Bandwidth => "bandwidth",
+            Term::Kernel => "kernel",
+            Term::Redundancy => "redundancy",
+            Term::Serving => "serving",
+            Term::Unattributed => "unattributed",
+        }
+    }
+
+    /// Every term, in declaration order (aggregation tables).
+    pub fn all() -> [Term; 5] {
+        [Term::Bandwidth, Term::Kernel, Term::Redundancy, Term::Serving, Term::Unattributed]
+    }
+}
+
+/// What one completed job observed — the attribution inputs, already
+/// reduced to scalars so the decomposition is pure arithmetic.
+#[derive(Debug, Clone, Copy)]
+pub struct JobObservation {
+    /// Admission's roofline wall prediction (ms).
+    pub predicted_ms: f64,
+    /// Measured execution wall (ms) — worker-side, queue excluded.
+    pub exec_ms: f64,
+    /// Handler wall minus execution wall (ms): queue + gather + stalls.
+    pub serve_ms: f64,
+    /// The job priced under the memory roof (below the ridge).
+    pub mem_bound: bool,
+    /// Principal-memory bytes the backend actually moved.
+    pub bytes_moved: f64,
+    /// Bytes the planner's intensity assumed for the same FLOPs
+    /// (`flops / predicted_intensity`).
+    pub bytes_predicted: f64,
+    /// Multiply-add FLOPs the job executed (deterministic counter).
+    pub flops: f64,
+    /// The profile 𝔹 that priced the plan (bytes/s).
+    pub bandwidth: f64,
+    /// The ℙ that priced the plan (FLOP/s; per-kernel measured peak
+    /// when the registry had one, the unit roof otherwise).
+    pub peak_flops: f64,
+}
+
+/// One term's share of the job's residual.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TermResidual {
+    pub term: Term,
+    /// Signed milliseconds: positive = slower than the term's model
+    /// value, negative = the model constant overpriced the machine.
+    pub residual_ms: f64,
+}
+
+/// The ranked verdict for one job (or one aggregated region).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attribution {
+    /// Admission's prediction (ms).
+    pub predicted_ms: f64,
+    /// Handler-measured total (exec + serving, ms).
+    pub measured_ms: f64,
+    /// Per-term residuals, ranked by |residual| descending.
+    pub terms: Vec<TermResidual>,
+    /// The top-ranked term — what broke.
+    pub verdict: Term,
+}
+
+impl Attribution {
+    /// The `"attribution"` block of advance replies and `stats`.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("predicted_ms".to_string(), Json::Num(self.predicted_ms));
+        o.insert("measured_ms".to_string(), Json::Num(self.measured_ms));
+        o.insert("verdict".to_string(), Json::Str(self.verdict.as_str().to_string()));
+        o.insert(
+            "terms".to_string(),
+            Json::Arr(
+                self.terms
+                    .iter()
+                    .map(|t| {
+                        let mut m = BTreeMap::new();
+                        m.insert("term".to_string(), Json::Str(t.term.as_str().to_string()));
+                        m.insert("residual_ms".to_string(), Json::Num(t.residual_ms));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Finite-or-zero guard: a degenerate input (zero bandwidth, NaN wall)
+/// must rank last, not poison the sort.
+fn fin(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Decompose one job's residual into ranked per-term blame.
+pub fn attribute(o: &JobObservation) -> Attribution {
+    let mut terms: Vec<TermResidual> = Vec::with_capacity(5);
+    let serving = fin(o.serve_ms).max(0.0);
+    terms.push(TermResidual { term: Term::Serving, residual_ms: serving });
+    let redundancy = if o.bandwidth > 0.0 {
+        fin((o.bytes_moved - o.bytes_predicted) / o.bandwidth * 1e3)
+    } else {
+        0.0
+    };
+    terms.push(TermResidual { term: Term::Redundancy, residual_ms: redundancy });
+    let roof = if o.mem_bound {
+        let r = if o.bandwidth > 0.0 {
+            fin(o.exec_ms - o.bytes_moved / o.bandwidth * 1e3)
+        } else {
+            0.0
+        };
+        TermResidual { term: Term::Bandwidth, residual_ms: r }
+    } else {
+        let r = if o.peak_flops > 0.0 {
+            fin(o.exec_ms - o.flops / o.peak_flops * 1e3)
+        } else {
+            0.0
+        };
+        TermResidual { term: Term::Kernel, residual_ms: r }
+    };
+    terms.push(roof);
+    let measured_ms = fin(o.exec_ms) + serving;
+    let total = measured_ms - fin(o.predicted_ms);
+    let named: f64 = terms.iter().map(|t| t.residual_ms).sum();
+    terms.push(TermResidual { term: Term::Unattributed, residual_ms: fin(total - named) });
+    // Rank by |residual| descending; the tie-break keeps the order
+    // deterministic (serving before redundancy before the roof term).
+    let mut ranked = terms;
+    ranked.sort_by(|a, b| {
+        b.residual_ms
+            .abs()
+            .partial_cmp(&a.residual_ms.abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    Attribution {
+        predicted_ms: fin(o.predicted_ms),
+        measured_ms,
+        verdict: ranked[0].term,
+        terms: ranked,
+    }
+}
+
+/// One drift-region's aggregated attribution.
+#[derive(Debug, Clone)]
+pub struct RegionAttrib {
+    /// Drift-region key (`mem/sweep`, `comp/fused+shard`, …).
+    pub region: String,
+    /// Jobs aggregated.
+    pub jobs: u64,
+    /// The most frequent per-job verdict (ties → term order).
+    pub dominant: Term,
+    /// Per-term (mean |residual| ms, verdict count), [`Term::all`] order.
+    pub terms: Vec<(Term, f64, u64)>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Agg {
+    sum_abs_ms: f64,
+    verdicts: u64,
+}
+
+#[derive(Debug, Default)]
+struct RegionAgg {
+    jobs: u64,
+    per_term: [Agg; 5],
+}
+
+/// Per-drift-region attribution aggregation (the `stats` view: one
+/// ranked verdict per region, not per job).
+#[derive(Debug, Default)]
+pub struct AttribStore {
+    inner: Mutex<BTreeMap<String, RegionAgg>>,
+}
+
+impl AttribStore {
+    pub fn new() -> AttribStore {
+        AttribStore::default()
+    }
+
+    /// Fold one job's attribution into its region's aggregate.
+    pub fn record(&self, region: &str, a: &Attribution) {
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let agg = g.entry(region.to_string()).or_default();
+        agg.jobs += 1;
+        for t in &a.terms {
+            let i = Term::all().iter().position(|&x| x == t.term).unwrap_or(4);
+            agg.per_term[i].sum_abs_ms += t.residual_ms.abs();
+            if t.term == a.verdict {
+                agg.per_term[i].verdicts += 1;
+            }
+        }
+    }
+
+    /// Region-ordered snapshot for `stats` / `top`.
+    pub fn snapshot(&self) -> Vec<RegionAttrib> {
+        let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        g.iter()
+            .map(|(region, agg)| {
+                let terms: Vec<(Term, f64, u64)> = Term::all()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| {
+                        let mean = if agg.jobs > 0 {
+                            agg.per_term[i].sum_abs_ms / agg.jobs as f64
+                        } else {
+                            0.0
+                        };
+                        (t, mean, agg.per_term[i].verdicts)
+                    })
+                    .collect();
+                let dominant = terms
+                    .iter()
+                    .max_by_key(|(_, _, v)| *v)
+                    .map(|(t, _, _)| *t)
+                    .unwrap_or(Term::Unattributed);
+                RegionAttrib { region: region.clone(), jobs: agg.jobs, dominant, terms }
+            })
+            .collect()
+    }
+
+    /// Jobs aggregated across all regions.
+    pub fn total_jobs(&self) -> u64 {
+        let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        g.values().map(|a| a.jobs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A healthy memory-bound job: 1 GB at 100 GB/s = 10 ms, predicted
+    /// 10 ms, negligible serving.  Every term should be near zero.
+    fn healthy() -> JobObservation {
+        JobObservation {
+            predicted_ms: 10.0,
+            exec_ms: 10.05,
+            serve_ms: 0.02,
+            mem_bound: true,
+            bytes_moved: 1e9,
+            bytes_predicted: 1e9,
+            flops: 3.375e9,
+            bandwidth: 1e11,
+            peak_flops: 1e13,
+        }
+    }
+
+    #[test]
+    fn healthy_job_attributes_nothing_big() {
+        let a = attribute(&healthy());
+        assert!((a.measured_ms - 10.07).abs() < 1e-9);
+        for t in &a.terms {
+            assert!(t.residual_ms.abs() < 0.1, "{:?}", t);
+        }
+        assert_eq!(a.terms.len(), 5);
+        // the roof term for a mem-bound job is bandwidth, never kernel
+        assert!(a.terms.iter().any(|t| t.term == Term::Bandwidth));
+        assert!(!a.terms.iter().any(|t| t.term == Term::Kernel));
+    }
+
+    #[test]
+    fn crushed_bandwidth_blames_the_bandwidth_term() {
+        // 𝔹 halved in the profile: the prediction doubles, the machine
+        // still runs at the true bandwidth.  exec = bytes/𝔹_true = 10ms
+        // but the plan priced bytes/𝔹_crushed = 20ms.
+        let o = JobObservation {
+            predicted_ms: 20.0,
+            exec_ms: 10.0,
+            bandwidth: 0.5e11, // the crushed constant the plan priced
+            ..healthy()
+        };
+        let a = attribute(&o);
+        assert_eq!(a.verdict, Term::Bandwidth, "{a:?}");
+        let bw = a.terms.iter().find(|t| t.term == Term::Bandwidth).unwrap();
+        assert!(bw.residual_ms < -5.0, "overpriced 𝔹 ⇒ large negative residual: {bw:?}");
+        // total residual reconciles: measured − predicted = Σ terms
+        let sum: f64 = a.terms.iter().map(|t| t.residual_ms).sum();
+        assert!((sum - (a.measured_ms - a.predicted_ms)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crushed_kernel_peak_blames_the_kernel_term() {
+        // Compute-bound: flops/ℙ_true = 10 ms, ℙ halved ⇒ predicted 20.
+        let o = JobObservation {
+            predicted_ms: 20.0,
+            exec_ms: 10.0,
+            serve_ms: 0.02,
+            mem_bound: false,
+            bytes_moved: 1e8,
+            bytes_predicted: 1e8,
+            flops: 1e11,
+            bandwidth: 1e11,
+            peak_flops: 0.5e13, // the crushed constant
+        };
+        let a = attribute(&o);
+        assert_eq!(a.verdict, Term::Kernel, "{a:?}");
+        assert!(!a.terms.iter().any(|t| t.term == Term::Bandwidth), "compute-bound: no 𝔹 term");
+    }
+
+    #[test]
+    fn inflated_queue_wait_blames_the_serving_term() {
+        let o = JobObservation { serve_ms: 45.0, ..healthy() };
+        let a = attribute(&o);
+        assert_eq!(a.verdict, Term::Serving, "{a:?}");
+        let s = a.terms.iter().find(|t| t.term == Term::Serving).unwrap();
+        assert!((s.residual_ms - 45.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unpriced_halo_traffic_blames_the_redundancy_term() {
+        // The backend moved 3× the bytes the planner's κ/τ assumed; the
+        // machine still achieved profile 𝔹 on what it did move.
+        let o = JobObservation {
+            exec_ms: 30.0,
+            bytes_moved: 3e9,
+            ..healthy()
+        };
+        let a = attribute(&o);
+        assert_eq!(a.verdict, Term::Redundancy, "{a:?}");
+        let r = a.terms.iter().find(|t| t.term == Term::Redundancy).unwrap();
+        assert!((r.residual_ms - 20.0).abs() < 1e-6, "2 GB unpriced at 100 GB/s = 20 ms");
+        // bandwidth residual stays small: actual bytes at 𝔹 ≈ exec
+        let bw = a.terms.iter().find(|t| t.term == Term::Bandwidth).unwrap();
+        assert!(bw.residual_ms.abs() < 0.5, "{bw:?}");
+    }
+
+    #[test]
+    fn degenerate_inputs_rank_last_instead_of_poisoning() {
+        let o = JobObservation {
+            predicted_ms: f64::NAN,
+            bandwidth: 0.0,
+            peak_flops: 0.0,
+            ..healthy()
+        };
+        let a = attribute(&o);
+        assert_eq!(a.terms.len(), 5);
+        assert!(a.terms.iter().all(|t| t.residual_ms.is_finite()));
+        assert!(a.predicted_ms == 0.0 && a.measured_ms.is_finite());
+    }
+
+    #[test]
+    fn store_aggregates_per_region_with_dominant_verdict() {
+        let store = AttribStore::new();
+        let crushed = JobObservation {
+            predicted_ms: 20.0,
+            exec_ms: 10.0,
+            bandwidth: 0.5e11,
+            ..healthy()
+        };
+        for _ in 0..3 {
+            store.record("mem/sweep", &attribute(&crushed));
+        }
+        store.record("mem/sweep", &attribute(&JobObservation { serve_ms: 45.0, ..healthy() }));
+        store.record("comp/fused", &attribute(&healthy()));
+        let snap = store.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(store.total_jobs(), 5);
+        let mem = snap.iter().find(|r| r.region == "mem/sweep").unwrap();
+        assert_eq!(mem.jobs, 4);
+        assert_eq!(mem.dominant, Term::Bandwidth, "3 of 4 verdicts blame 𝔹");
+        let bw = mem.terms.iter().find(|(t, _, _)| *t == Term::Bandwidth).unwrap();
+        assert_eq!(bw.2, 3);
+        assert!(bw.1 > 5.0, "mean |residual| carries the magnitude");
+        // to_json renders the block shape the protocol ships
+        let j = attribute(&crushed).to_json();
+        assert_eq!(j.get("verdict").unwrap().as_str(), Some("bandwidth"));
+        assert_eq!(j.get("terms").unwrap().as_arr().unwrap().len(), 5);
+    }
+}

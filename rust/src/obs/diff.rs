@@ -1,0 +1,336 @@
+//! Trace diffing: `stencilctl trace --diff a.ndjson b.ndjson`.
+//!
+//! Aligns two traced runs by `(phase index, shard, kernel)` — the
+//! stable identity of a compute interval across runs of the same plan
+//! — and reports per-phase wall/bytes/intensity deltas, plus the
+//! serving-side delta (queue wait + barrier stall).  Each regressed
+//! phase carries an attribution verdict ([`super::attrib::Term`])
+//! derived from *which* observable moved:
+//!
+//! * bytes grew → **redundancy** (the planner is moving traffic it
+//!   didn't price: halo growth, lost reuse);
+//! * wall grew at equal bytes on a fused (compute-leaning) phase →
+//!   **kernel** (achieved GPts/s fell vs the ℙ that priced the plan);
+//! * wall grew at equal bytes on an unfused (memory-bound sweep)
+//!   phase → **bandwidth** (achieved B/s fell vs profile 𝔹);
+//! * queue/barrier time grew → **serving**.
+//!
+//! Wall-time regressions need both a ratio (>1.5×) *and* an absolute
+//! floor (>10 ms) so two identical healthy runs — whose phase walls
+//! jitter by scheduler noise — never flag (the CI trace-diff smoke
+//! depends on this).  Byte counts are deterministic for a fixed plan,
+//! so any growth beyond 2% flags regardless of wall time.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::attrib::Term;
+use super::{Payload, Span, SpanKind};
+
+/// Wall ratio a phase must exceed to count as regressed…
+pub const WALL_RATIO: f64 = 1.5;
+/// …and the absolute wall floor that filters scheduler jitter.
+pub const WALL_FLOOR_NS: u64 = 10_000_000;
+/// Deterministic byte counts flag on any growth beyond this ratio.
+pub const BYTES_RATIO: f64 = 1.02;
+
+/// One aligned phase's aggregate on one side of the diff.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseAgg {
+    pub wall_ns: u64,
+    pub bytes: u64,
+    pub flops: u64,
+    pub count: u64,
+    pub fused: bool,
+}
+
+impl PhaseAgg {
+    /// Arithmetic intensity (flop/byte); 0 when no bytes moved.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes == 0 {
+            0.0
+        } else {
+            self.flops as f64 / self.bytes as f64
+        }
+    }
+}
+
+/// One `(phase, shard, kernel)` cell present in both runs.
+#[derive(Debug, Clone)]
+pub struct PhaseDelta {
+    pub phase: u64,
+    pub shard: u64,
+    pub kernel: String,
+    pub a: PhaseAgg,
+    pub b: PhaseAgg,
+    /// `Some(term)` when run B regressed vs run A.
+    pub verdict: Option<Term>,
+}
+
+impl PhaseDelta {
+    pub fn regressed(&self) -> bool {
+        self.verdict.is_some()
+    }
+}
+
+/// The full two-run comparison.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub phases: Vec<PhaseDelta>,
+    /// Queue wait + barrier stall per run, ms.
+    pub serving_a_ms: f64,
+    pub serving_b_ms: f64,
+    pub serving_regressed: bool,
+    /// Cells present only in one run (plan shape changed).
+    pub only_a: Vec<(u64, u64, String)>,
+    pub only_b: Vec<(u64, u64, String)>,
+}
+
+impl DiffReport {
+    /// Count of regressed phases (serving counted separately).
+    pub fn regressions(&self) -> usize {
+        self.phases.iter().filter(|p| p.regressed()).count()
+    }
+
+    /// Human-readable console rendering (`trace --diff`'s output).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace diff: {} aligned phase cell(s), {} only in A, {} only in B",
+            self.phases.len(),
+            self.only_a.len(),
+            self.only_b.len()
+        );
+        for p in &self.phases {
+            let mark = match &p.verdict {
+                Some(t) => format!("REGRESSED [{}]", t.as_str()),
+                None => "ok".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "  phase{}/shard{} {:<28} wall {:>9.3} -> {:>9.3} ms  bytes {:>10} -> {:>10}  \
+                 intensity {:.3} -> {:.3}  {mark}",
+                p.phase,
+                p.shard,
+                p.kernel,
+                p.a.wall_ns as f64 / 1e6,
+                p.b.wall_ns as f64 / 1e6,
+                p.a.bytes,
+                p.b.bytes,
+                p.a.intensity(),
+                p.b.intensity(),
+            );
+        }
+        let _ = writeln!(
+            out,
+            "  serving (queue wait + barrier stall): {:.3} -> {:.3} ms  {}",
+            self.serving_a_ms,
+            self.serving_b_ms,
+            if self.serving_regressed { "REGRESSED [serving]" } else { "ok" }
+        );
+        for (phase, shard, kernel) in &self.only_a {
+            let _ = writeln!(out, "  phase{phase}/shard{shard} {kernel}: only in A");
+        }
+        for (phase, shard, kernel) in &self.only_b {
+            let _ = writeln!(out, "  phase{phase}/shard{shard} {kernel}: only in B");
+        }
+        let total = self.regressions() + usize::from(self.serving_regressed);
+        if total == 0 {
+            let _ = writeln!(out, "no regressions: run B within thresholds of run A");
+        } else {
+            let _ = writeln!(out, "{total} regression(s): run B slower than run A");
+        }
+        out
+    }
+}
+
+fn aggregate(spans: &[Span]) -> BTreeMap<(u64, u64, String), PhaseAgg> {
+    let mut map: BTreeMap<(u64, u64, String), PhaseAgg> = BTreeMap::new();
+    for s in spans {
+        if let Payload::Phase { index, shard, fused, bytes, flops, ref kernel, .. } = s.payload {
+            let agg = map.entry((index, shard, kernel.clone())).or_default();
+            agg.wall_ns += s.wall_ns();
+            agg.bytes += bytes;
+            agg.flops += flops;
+            agg.count += 1;
+            agg.fused = fused;
+        }
+    }
+    map
+}
+
+fn serving_ns(spans: &[Span]) -> u64 {
+    spans
+        .iter()
+        .map(|s| match s.payload {
+            Payload::Barrier { stall_ns, .. } => stall_ns,
+            _ if s.kind == SpanKind::QueueWait => s.wall_ns(),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Did B regress vs A, and which model term is to blame?
+fn judge(a: &PhaseAgg, b: &PhaseAgg) -> Option<Term> {
+    let bytes_grew =
+        a.bytes > 0 && (b.bytes as f64) > (a.bytes as f64) * BYTES_RATIO;
+    if bytes_grew {
+        return Some(Term::Redundancy);
+    }
+    let wall_grew = b.wall_ns > WALL_FLOOR_NS + a.wall_ns
+        && (b.wall_ns as f64) > (a.wall_ns as f64) * WALL_RATIO;
+    if wall_grew {
+        // Equal traffic, more time: a rate constant broke.  Fused
+        // phases lean on the kernel peak ℙ; unfused sweeps are the
+        // memory-bound side priced by 𝔹.
+        return Some(if b.fused { Term::Kernel } else { Term::Bandwidth });
+    }
+    None
+}
+
+/// Align run A (baseline) against run B (candidate) and judge each
+/// shared `(phase, shard, kernel)` cell.
+pub fn diff(a: &[Span], b: &[Span]) -> DiffReport {
+    let ma = aggregate(a);
+    let mb = aggregate(b);
+    let keys: BTreeSet<&(u64, u64, String)> = ma.keys().chain(mb.keys()).collect();
+    let mut phases = Vec::new();
+    let mut only_a = Vec::new();
+    let mut only_b = Vec::new();
+    for key in keys {
+        match (ma.get(key), mb.get(key)) {
+            (Some(pa), Some(pb)) => phases.push(PhaseDelta {
+                phase: key.0,
+                shard: key.1,
+                kernel: key.2.clone(),
+                a: *pa,
+                b: *pb,
+                verdict: judge(pa, pb),
+            }),
+            (Some(_), None) => only_a.push(key.clone()),
+            (None, Some(_)) => only_b.push(key.clone()),
+            (None, None) => unreachable!(),
+        }
+    }
+    let sa = serving_ns(a);
+    let sb = serving_ns(b);
+    let serving_regressed =
+        sb > WALL_FLOOR_NS + sa && (sb as f64) > (sa as f64) * WALL_RATIO;
+    DiffReport {
+        phases,
+        serving_a_ms: sa as f64 / 1e6,
+        serving_b_ms: sb as f64 / 1e6,
+        serving_regressed,
+        only_a,
+        only_b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phase(index: u64, shard: u64, kernel: &str, wall_ns: u64, bytes: u64, fused: bool) -> Span {
+        Span {
+            trace: 1,
+            worker: shard,
+            kind: SpanKind::ShardPhase,
+            start_ns: 0,
+            end_ns: wall_ns,
+            payload: Payload::Phase {
+                index,
+                shard,
+                depth: 1,
+                fused,
+                bytes,
+                flops: bytes * 9,
+                kernel: kernel.to_string(),
+            },
+        }
+    }
+
+    fn queue_wait(wall_ns: u64) -> Span {
+        Span {
+            trace: 1,
+            worker: 0,
+            kind: SpanKind::QueueWait,
+            start_ns: 0,
+            end_ns: wall_ns,
+            payload: Payload::Queue { depth: 3 },
+        }
+    }
+
+    #[test]
+    fn identical_runs_report_no_regressions() {
+        let run = vec![
+            phase(0, 0, "star-2d1r/double/avx2", 20_000_000, 1 << 20, false),
+            phase(0, 1, "star-2d1r/double/avx2", 21_000_000, 1 << 20, false),
+            queue_wait(2_000_000),
+        ];
+        let rep = diff(&run, &run);
+        assert_eq!(rep.phases.len(), 2);
+        assert_eq!(rep.regressions(), 0);
+        assert!(!rep.serving_regressed);
+        assert!(rep.render().contains("no regressions"), "{}", rep.render());
+    }
+
+    #[test]
+    fn scheduler_jitter_below_the_floor_never_flags() {
+        // 3x ratio but only 3 ms absolute: under the 10 ms floor.
+        let a = vec![phase(0, 0, "k", 1_500_000, 4096, false)];
+        let b = vec![phase(0, 0, "k", 4_500_000, 4096, false)];
+        assert_eq!(diff(&a, &b).regressions(), 0);
+    }
+
+    #[test]
+    fn slow_unfused_sweep_blames_bandwidth() {
+        let a = vec![phase(0, 0, "sweep", 20_000_000, 1 << 20, false)];
+        let b = vec![phase(0, 0, "sweep", 60_000_000, 1 << 20, false)];
+        let rep = diff(&a, &b);
+        assert_eq!(rep.regressions(), 1);
+        assert_eq!(rep.phases[0].verdict, Some(Term::Bandwidth));
+        assert!(rep.render().contains("REGRESSED [bandwidth]"), "{}", rep.render());
+    }
+
+    #[test]
+    fn slow_fused_phase_blames_the_kernel() {
+        let a = vec![phase(2, 1, "fused", 20_000_000, 1 << 20, true)];
+        let b = vec![phase(2, 1, "fused", 60_000_000, 1 << 20, true)];
+        let rep = diff(&a, &b);
+        assert_eq!(rep.phases[0].verdict, Some(Term::Kernel));
+    }
+
+    #[test]
+    fn byte_growth_blames_redundancy_even_at_equal_wall() {
+        let a = vec![phase(0, 0, "halo", 20_000_000, 1_000_000, false)];
+        let b = vec![phase(0, 0, "halo", 20_000_000, 1_100_000, false)];
+        let rep = diff(&a, &b);
+        assert_eq!(rep.phases[0].verdict, Some(Term::Redundancy));
+        // intensity drops with the extra traffic
+        assert!(rep.phases[0].b.intensity() < rep.phases[0].a.intensity());
+    }
+
+    #[test]
+    fn inflated_queue_wait_is_a_serving_regression() {
+        let a = vec![phase(0, 0, "k", 20_000_000, 4096, false), queue_wait(1_000_000)];
+        let b = vec![phase(0, 0, "k", 20_000_000, 4096, false), queue_wait(40_000_000)];
+        let rep = diff(&a, &b);
+        assert_eq!(rep.regressions(), 0, "compute is unchanged");
+        assert!(rep.serving_regressed);
+        assert!(rep.render().contains("REGRESSED [serving]"), "{}", rep.render());
+    }
+
+    #[test]
+    fn unaligned_cells_are_listed_not_judged() {
+        let a = vec![phase(0, 0, "k", 20_000_000, 4096, false)];
+        let b = vec![phase(1, 0, "k", 20_000_000, 4096, false)];
+        let rep = diff(&a, &b);
+        assert!(rep.phases.is_empty());
+        assert_eq!(rep.only_a, vec![(0, 0, "k".to_string())]);
+        assert_eq!(rep.only_b, vec![(1, 0, "k".to_string())]);
+        let text = rep.render();
+        assert!(text.contains("only in A") && text.contains("only in B"), "{text}");
+    }
+}

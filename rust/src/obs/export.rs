@@ -212,6 +212,12 @@ pub fn compact_spans(spans: &[Span]) -> Json {
                     Payload::Plan { hit, .. } => {
                         o.insert("hit".to_string(), Json::Bool(*hit));
                     }
+                    Payload::Batch { jobs, .. } => {
+                        o.insert("jobs".to_string(), num(*jobs));
+                    }
+                    Payload::Spill { bytes, .. } | Payload::Restore { bytes, .. } => {
+                        o.insert("bytes".to_string(), num(*bytes));
+                    }
                     _ => {}
                 }
                 Json::Obj(o)
@@ -244,6 +250,9 @@ pub fn chrome_trace(spans: &[Span]) -> Json {
             Payload::Phase { index, shard, .. } => format!("phase{index}/shard{shard}"),
             Payload::Barrier { index, .. } => format!("barrier{index}"),
             Payload::Kernel { name, .. } => format!("kernel {name}"),
+            Payload::Batch { jobs, .. } => format!("batch x{jobs}"),
+            Payload::Spill { session, bytes } => format!("spill {session} ({bytes} B)"),
+            Payload::Restore { session, bytes } => format!("restore {session} ({bytes} B)"),
             _ => s.kind.name().to_string(),
         };
         o.insert("name".to_string(), Json::Str(name));
@@ -320,6 +329,35 @@ pub fn summarize(spans: &[Span]) -> String {
             let _ =
                 writeln!(out, "  {:<11} × {n:<4} Σ {:.3} ms", k.name(), wall as f64 / 1e6);
         }
+    }
+    // Serving-plane detail: batches carry member counts, spill/restore
+    // carry the bytes that crossed the disk boundary.
+    let (mut batches, mut batch_jobs) = (0u64, 0u64);
+    let (mut spill_bytes, mut restore_bytes) = (0u64, 0u64);
+    for s in spans {
+        match &s.payload {
+            Payload::Batch { jobs, .. } => {
+                batches += 1;
+                batch_jobs += jobs;
+            }
+            Payload::Spill { bytes, .. } => spill_bytes += bytes,
+            Payload::Restore { bytes, .. } => restore_bytes += bytes,
+            _ => {}
+        }
+    }
+    if batches > 0 {
+        let _ = writeln!(
+            out,
+            "  batches: {batches} dispatch(es) covering {batch_jobs} member job(s)"
+        );
+    }
+    if spill_bytes > 0 || restore_bytes > 0 {
+        let _ = writeln!(
+            out,
+            "  session tiering: {:.3} MiB spilled, {:.3} MiB restored",
+            spill_bytes as f64 / (1024.0 * 1024.0),
+            restore_bytes as f64 / (1024.0 * 1024.0)
+        );
     }
     out
 }
@@ -509,6 +547,21 @@ mod tests {
         for needle in ["batch", "spill", "restore"] {
             assert!(text.contains(needle), "{text}");
         }
+        // satellite: member counts and bytes are rendered, not dropped
+        assert!(text.contains("1 dispatch(es) covering 3 member job(s)"), "{text}");
+        assert!(text.contains("0.031 MiB spilled, 0.031 MiB restored"), "{text}");
+        let chrome = chrome_trace(&extra);
+        let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            events.iter().filter_map(|e| e.get("name").ok()?.as_str()).collect();
+        assert!(names.contains(&"batch x3"), "{names:?}");
+        assert!(names.contains(&"spill cold-7 (32768 B)"), "{names:?}");
+        assert!(names.contains(&"restore cold-7 (32768 B)"), "{names:?}");
+        let compact = compact_spans(&extra);
+        let arr = compact.as_arr().unwrap();
+        assert_eq!(arr[0].get("jobs").unwrap().as_i64(), Some(3));
+        assert_eq!(arr[1].get("bytes").unwrap().as_i64(), Some(32768));
+        assert_eq!(arr[2].get("bytes").unwrap().as_i64(), Some(32768));
     }
 
     #[test]

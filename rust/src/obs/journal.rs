@@ -1,0 +1,302 @@
+//! Append-only NDJSON event journal — the forensics plane.
+//!
+//! Spans answer "what did this job do"; the journal answers "what did
+//! the *service* decide, and why" across jobs: admission refusals with
+//! their evidence, drift flags, retune install/reject episodes,
+//! session spill/restore, and alert firing/resolved transitions.  One
+//! JSON object per line, floats in the crate's bit-exact hex-f64 codec
+//! ([`crate::util::json::hex_f64`]) so evidence replays without losing
+//! a ulp.
+//!
+//! The journal is **off unless `stencilctl serve --journal <path>`
+//! opened it**: every probe site pays one relaxed atomic load and
+//! nothing else, so a journal-less serve run writes zero events and
+//! allocates nothing on the hot path.  Files are size-capped: when an
+//! append would cross `max_bytes`, the current file rotates to
+//! `<path>.1` (replacing any previous rotation) and a fresh file
+//! continues — the journal holds the most recent window, bounded on
+//! disk like the span rings are in memory.
+//!
+//! [`read_events`] tolerates a crash-truncated final line (a process
+//! killed mid-append loses at most that line, never the file).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{hex_f64, Json};
+
+/// Default rotation cap (`--journal` without a size knob): 4 MiB per
+/// file, two files on disk worst-case.
+pub const DEFAULT_MAX_BYTES: u64 = 4 * 1024 * 1024;
+
+/// Wrap an f64 as a hex-f64 JSON string — the journal's float payload
+/// encoding (bit-exact evidence; `"nan"`-free lines).
+pub fn f(v: f64) -> Json {
+    Json::Str(hex_f64(v))
+}
+
+/// One size-capped NDJSON journal file (the struct form; the process
+/// global below wraps one of these).
+pub struct Journal {
+    path: PathBuf,
+    max_bytes: u64,
+    writer: BufWriter<File>,
+    written: u64,
+    seq: u64,
+    rotations: u64,
+}
+
+impl Journal {
+    /// Create (truncating) the journal at `path` with a rotation cap.
+    pub fn create(path: &Path, max_bytes: u64) -> Result<Journal> {
+        let writer = BufWriter::new(
+            File::create(path)
+                .with_context(|| format!("creating journal {}", path.display()))?,
+        );
+        Ok(Journal {
+            path: path.to_path_buf(),
+            max_bytes: max_bytes.max(1),
+            writer,
+            written: 0,
+            seq: 0,
+            rotations: 0,
+        })
+    }
+
+    /// Rotation path: `<path>.1` (one previous window kept).
+    fn rotated_path(&self) -> PathBuf {
+        let mut s = self.path.as_os_str().to_os_string();
+        s.push(".1");
+        PathBuf::from(s)
+    }
+
+    /// Append one event line: `{"event":…,"seq":…,"ts_ns":…, fields…}`.
+    /// Rotates first when the line would cross the cap (so a single
+    /// file never exceeds `max_bytes` unless one line alone does).
+    pub fn emit(&mut self, event: &str, fields: &[(&str, Json)]) -> Result<()> {
+        self.seq += 1;
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("event".to_string(), Json::Str(event.to_string()));
+        map.insert("seq".to_string(), Json::Num(self.seq as f64));
+        map.insert("ts_ns".to_string(), Json::Num(super::now_ns() as f64));
+        for (k, v) in fields {
+            map.insert((*k).to_string(), v.clone());
+        }
+        let line = Json::Obj(map).to_string();
+        let bytes = line.len() as u64 + 1;
+        if self.written > 0 && self.written + bytes > self.max_bytes {
+            self.rotate()?;
+        }
+        writeln!(self.writer, "{line}")?;
+        // Flushed per event: journal lines are evidence — a crash must
+        // lose at most the line being written.
+        self.writer.flush()?;
+        self.written += bytes;
+        Ok(())
+    }
+
+    fn rotate(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        std::fs::rename(&self.path, self.rotated_path())
+            .with_context(|| format!("rotating journal {}", self.path.display()))?;
+        self.writer = BufWriter::new(
+            File::create(&self.path)
+                .with_context(|| format!("recreating journal {}", self.path.display()))?,
+        );
+        self.written = 0;
+        self.rotations += 1;
+        Ok(())
+    }
+
+    /// Bytes written to the current (post-rotation) file.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// How many times the file has rotated.
+    pub fn rotations(&self) -> u64 {
+        self.rotations
+    }
+}
+
+/// Parse a journal file back into events.  A crash-truncated final
+/// line (no trailing newline, or an unparseable tail) is skipped; a
+/// malformed line anywhere else is a real error with its line number.
+pub fn read_events(path: &Path) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading journal {}", path.display()))?;
+    let complete = text.ends_with('\n');
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Json::parse_line(line) {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                if i + 1 == lines.len() && !complete {
+                    break; // torn tail: the crash ate this line
+                }
+                bail!("journal {} line {}: {e:#}", path.display(), i + 1);
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---- the process-global journal (`stencilctl serve --journal`) ----
+
+static ON: AtomicBool = AtomicBool::new(false);
+
+fn cell() -> &'static Mutex<Option<Journal>> {
+    static C: OnceLock<Mutex<Option<Journal>>> = OnceLock::new();
+    C.get_or_init(|| Mutex::new(None))
+}
+
+/// True when the global journal is open (one relaxed load — the whole
+/// disabled-mode cost of a probe site).
+pub fn enabled() -> bool {
+    ON.load(Ordering::Relaxed)
+}
+
+/// Open the process journal (truncating `path`).  Idempotent in the
+/// sense that reopening replaces the previous journal.
+pub fn open(path: &Path, max_bytes: u64) -> Result<()> {
+    let j = Journal::create(path, max_bytes)?;
+    *cell().lock().unwrap_or_else(|p| p.into_inner()) = Some(j);
+    ON.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Close the process journal (flushing it); further [`emit`]s no-op.
+pub fn close() {
+    ON.store(false, Ordering::SeqCst);
+    *cell().lock().unwrap_or_else(|p| p.into_inner()) = None;
+}
+
+/// Emit one event into the process journal.  No-op (one atomic load)
+/// when no journal is open; I/O errors are swallowed — forensics must
+/// never take the serving path down.
+pub fn emit(event: &str, fields: &[(&str, Json)]) {
+    if !enabled() {
+        return;
+    }
+    if let Ok(mut g) = cell().lock() {
+        if let Some(j) = g.as_mut() {
+            let _ = j.emit(event, fields);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::f64_from_hex;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tcs-journal-{}-{tag}.ndjson", std::process::id()))
+    }
+
+    #[test]
+    fn events_roundtrip_with_hex_floats() {
+        let path = tmp("roundtrip");
+        let mut j = Journal::create(&path, 1 << 20).unwrap();
+        j.emit("drift_flag", &[("region", Json::Str("mem/sweep".into())), ("ewma", f(0.1 + 0.2))])
+            .unwrap();
+        j.emit("retune_install", &[("cause", Json::Str("bandwidth".into()))]).unwrap();
+        let events = read_events(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("event").unwrap().as_str(), Some("drift_flag"));
+        assert_eq!(events[0].get("seq").unwrap().as_i64(), Some(1));
+        let ewma = f64_from_hex(events[0].get("ewma").unwrap().as_str().unwrap()).unwrap();
+        assert_eq!(ewma.to_bits(), (0.1 + 0.2_f64).to_bits(), "hex-f64 evidence is bit-exact");
+        assert!(events[1].get("ts_ns").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rotation_caps_file_size_and_keeps_one_previous_window() {
+        let path = tmp("rotate");
+        // Cap small enough that a handful of events cross it.
+        let mut j = Journal::create(&path, 256).unwrap();
+        for i in 0..12 {
+            j.emit("spill", &[("session", Json::Str(format!("s{i}")))]).unwrap();
+            assert!(
+                std::fs::metadata(&path).unwrap().len() <= 256,
+                "current file stays under the cap"
+            );
+        }
+        assert!(j.rotations() >= 1, "the cap forced at least one rotation");
+        assert!(j.written() > 0 && j.written() <= 256);
+        let rotated = {
+            let mut s = path.as_os_str().to_os_string();
+            s.push(".1");
+            PathBuf::from(s)
+        };
+        assert!(rotated.exists(), "previous window parked at <path>.1");
+        // Both windows parse; sequence numbers are continuous across
+        // the rotation boundary and nothing is duplicated.
+        let mut seqs: Vec<i64> = read_events(&rotated)
+            .unwrap()
+            .iter()
+            .chain(read_events(&path).unwrap().iter())
+            .map(|e| e.get("seq").unwrap().as_i64().unwrap())
+            .collect();
+        seqs.sort_unstable();
+        assert!(seqs.len() >= 2);
+        for w in seqs.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "no gap or duplicate at the rotation boundary");
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&rotated);
+    }
+
+    #[test]
+    fn reader_tolerates_a_crash_truncated_final_line() {
+        let path = tmp("torn");
+        let mut j = Journal::create(&path, 1 << 20).unwrap();
+        j.emit("alert_firing", &[("rule", Json::Str("queue_saturated".into()))]).unwrap();
+        j.emit("alert_resolved", &[("rule", Json::Str("queue_saturated".into()))]).unwrap();
+        drop(j);
+        // Simulate a crash mid-append: a torn, newline-less tail.
+        use std::io::Write as _;
+        let mut file = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        write!(file, "{{\"event\":\"spill\",\"seq\":3,\"ts").unwrap();
+        drop(file);
+        let events = read_events(&path).unwrap();
+        assert_eq!(events.len(), 2, "complete lines survive, the torn tail is dropped");
+        assert_eq!(events[1].get("event").unwrap().as_str(), Some("alert_resolved"));
+        // …but a malformed line mid-file is a real error, not silence.
+        std::fs::write(&path, "{\"event\":\"a\",\"seq\":1}\ngarbage\n{\"event\":\"b\",\"seq\":2}\n")
+            .unwrap();
+        let err = format!("{:#}", read_events(&path).unwrap_err());
+        assert!(err.contains("line 2"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn global_journal_gates_on_enabled() {
+        // The global is shared process state; this test serializes with
+        // the obs flag tests' lock to avoid cross-test interference.
+        let _g = crate::obs::test_lock();
+        close();
+        assert!(!enabled());
+        emit("drift_flag", &[]); // must be a silent no-op
+        let path = tmp("global");
+        open(&path, 1 << 20).unwrap();
+        assert!(enabled());
+        emit("drift_flag", &[("region", Json::Str("mem/sweep".into()))]);
+        close();
+        assert!(!enabled());
+        emit("drift_flag", &[]); // after close: no-op again
+        let events = read_events(&path).unwrap();
+        assert_eq!(events.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

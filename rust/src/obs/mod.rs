@@ -14,7 +14,12 @@
 //!   crate's bit-exact hex codec ([`crate::util::json::hex_f64`]).
 //! * **Metrics** — always-on Prometheus-style counters and
 //!   log-bucketed histograms ([`prom`]): queue wait, phase wall,
-//!   barrier stall, model error, per-kernel GPts/s.
+//!   barrier stall, model error, per-kernel GPts/s — with p50/p95/p99
+//!   estimators over the log₂ buckets.
+//! * **Explainability** — per-term model-error attribution
+//!   ([`attrib`]), declarative alert rules with firing/resolved state
+//!   ([`alert`]), an append-only forensics journal ([`journal`]), and
+//!   two-run trace diffing ([`diff`]).
 //!
 //! Tracing is **disabled by default and zero-cost when disabled**: the
 //! only residue on the hot path is one relaxed atomic load per probe
@@ -31,7 +36,11 @@
 //! [`drain`] removes one trace's spans from all rings — concurrent
 //! jobs cannot eat each other's history.
 
+pub mod alert;
+pub mod attrib;
+pub mod diff;
 pub mod export;
+pub mod journal;
 pub mod prom;
 mod ring;
 

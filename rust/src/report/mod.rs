@@ -506,9 +506,133 @@ pub fn service_stats(
     format!("{}\n{}\n{}\n{}", svc.render(), prof.render(), per.render(), ten.render())
 }
 
+/// One `stencilctl top` frame, rendered from a parsed `stats` reply
+/// and a parsed `alerts` reply: headline counters, the log₂-bucket
+/// latency estimates, per-tenant rows, alert states, and the dominant
+/// attribution verdict per drift region.  Pure formatting — the
+/// refresh loop in `main` owns the transport.
+pub fn top_view(
+    stats: &crate::util::json::Json,
+    alerts: &crate::util::json::Json,
+    frame: u64,
+) -> String {
+    use crate::util::json::Json;
+    let gi = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+    let gf = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_f64());
+    let gs = |o: &Json, k: &str| {
+        o.get(k).and_then(|v| v.as_str()).map(str::to_string).unwrap_or_else(|| "-".into())
+    };
+    let ms = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into());
+    let mut out = format!(
+        "stencilctl top — frame {frame} · profile {} gen {}{}\n",
+        gs(stats, "profile_name"),
+        gi(stats, "profile_generation"),
+        if stats.get("profile_stale").and_then(|v| v.as_bool()).unwrap_or(false) {
+            " [STALE]"
+        } else {
+            ""
+        },
+    );
+    out.push_str(&format!(
+        "jobs {} ok / {} failed · queue {} · {:.2} MSt/s · model err {} · alerts firing {}\n",
+        gi(stats, "jobs_completed"),
+        gi(stats, "jobs_failed"),
+        gi(stats, "queue_depth"),
+        gf(stats, "mstencils").unwrap_or(0.0),
+        gf(stats, "model_error").map(|e| format!("{:.1}%", e * 100.0)).unwrap_or_else(|| "-".into()),
+        gi(alerts, "firing"),
+    ));
+    if let Some(lat) = stats.get("latency") {
+        out.push_str(&format!(
+            "latency ms — queue wait p50/p95/p99: {}/{}/{} · phase wall: {}/{}/{}\n",
+            ms(gf(lat, "queue_wait_p50_ms")),
+            ms(gf(lat, "queue_wait_p95_ms")),
+            ms(gf(lat, "queue_wait_p99_ms")),
+            ms(gf(lat, "phase_wall_p50_ms")),
+            ms(gf(lat, "phase_wall_p95_ms")),
+            ms(gf(lat, "phase_wall_p99_ms")),
+        ));
+    }
+    let mut ten = Table::new(
+        "tenants",
+        &["tenant", "admitted", "refused", "deadline missed", "resident", "spilled"],
+    );
+    if let Some(rows) = stats.get("tenants").and_then(|v| v.as_arr()) {
+        for r in rows {
+            ten.row(&[
+                gs(r, "tenant"),
+                gi(r, "admitted").to_string(),
+                gi(r, "refused").to_string(),
+                gi(r, "deadline_missed").to_string(),
+                format!("{} B", gi(r, "resident_bytes")),
+                format!("{} B", gi(r, "spilled_bytes")),
+            ]);
+        }
+    }
+    out.push_str(&ten.render());
+    out.push('\n');
+    let mut al = Table::new("alerts", &["rule", "label", "state", "value", "threshold"]);
+    if let Some(rows) = alerts.get("alerts").and_then(|v| v.as_arr()) {
+        for r in rows {
+            al.row(&[
+                gs(r, "rule"),
+                gs(r, "label"),
+                if r.get("firing").and_then(|v| v.as_bool()).unwrap_or(false) {
+                    "FIRING".to_string()
+                } else {
+                    "ok".to_string()
+                },
+                ms(gf(r, "value")),
+                ms(gf(r, "threshold")),
+            ]);
+        }
+    }
+    out.push_str(&al.render());
+    if let Some(rows) = stats.get("attribution").and_then(|v| v.as_arr()) {
+        if !rows.is_empty() {
+            out.push('\n');
+            let mut at = Table::new("attribution — per drift region", &["region", "jobs", "dominant"]);
+            for r in rows {
+                at.row(&[gs(r, "region"), gi(r, "jobs").to_string(), gs(r, "dominant")]);
+            }
+            out.push_str(&at.render());
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn top_view_renders_all_planes_from_parsed_replies() {
+        use crate::util::json::Json;
+        let stats = Json::parse_line(
+            r#"{"profile_name":"tcs","profile_generation":2,"profile_stale":true,
+                "jobs_completed":3,"jobs_failed":0,"queue_depth":1,"mstencils":1.5,
+                "model_error":0.05,
+                "latency":{"queue_wait_p50_ms":0.5,"queue_wait_p99_ms":1.0},
+                "tenants":[{"tenant":"acme","admitted":2,"refused":1,"deadline_missed":1,
+                            "resident_bytes":4096,"spilled_bytes":0}],
+                "attribution":[{"region":"mem/sweep","jobs":3,"dominant":"bandwidth"}]}"#,
+        )
+        .unwrap();
+        let alerts = Json::parse_line(
+            r#"{"firing":1,"alerts":[
+                {"rule":"slo_burn","label":"acme","firing":true,"value":0.5,"threshold":0.1},
+                {"rule":"queue_saturated","label":"queue","firing":false,"value":0.1,"threshold":0.8}]}"#,
+        )
+        .unwrap();
+        let v = top_view(&stats, &alerts, 7);
+        assert!(v.contains("frame 7"), "{v}");
+        assert!(v.contains("[STALE]"), "{v}");
+        assert!(v.contains("alerts firing 1"), "{v}");
+        assert!(v.contains("0.500/-/1.000"), "queue-wait quantiles: {v}");
+        assert!(v.contains("acme"), "{v}");
+        assert!(v.contains("FIRING"), "{v}");
+        assert!(v.contains("mem/sweep") && v.contains("bandwidth"), "{v}");
+    }
 
     #[test]
     fn table2_has_paper_rows() {

@@ -9,7 +9,7 @@
 //! request        = { "op": <operation>, ... }
 //! operation      = "ping" | "plan" | "create_session" | "advance"
 //!                | "fetch" | "close_session" | "stats" | "metrics"
-//!                | "shutdown"
+//!                | "alerts" | "shutdown"
 //! plan           = jobspec
 //! create_session = "session": name, jobspec,
 //!                  ( "field": [f64...] | "init": "gaussian"|"zeros" )
@@ -20,6 +20,9 @@
 //! close_session  = "session": name
 //! stats          = [ "prom": true ]   (adds a Prometheus-text block)
 //! metrics        = (no fields — replies with the Prometheus text)
+//! alerts         = (no fields — evaluates the alert rules now and
+//!                   replies with every rule×label row: firing state,
+//!                   observed value, threshold; see obs::alert)
 //! jobspec        = [ "pattern": "{shape}-{d}d{r}r[:{coeffs}]" ],
 //!                  [ "shape": "box"|"star" ], [ "d": 1..3 ], [ "r": n ],
 //!                  [ "coeffs": "const"|"aniso"|"varcoef"|"sparse24" ],
@@ -127,6 +130,9 @@ pub enum Request {
     /// Bare Prometheus exposition (counters + histograms) — the verb a
     /// scrape-bridge sidecar polls.
     Metrics,
+    /// Evaluate the alert rules now; reply with per-rule firing state
+    /// (the verb `stencilctl top` and pagers poll).
+    Alerts,
     Shutdown,
 }
 
@@ -142,6 +148,7 @@ impl Request {
             Request::CloseSession { .. } => "close_session",
             Request::Stats { .. } => "stats",
             Request::Metrics => "metrics",
+            Request::Alerts => "alerts",
             Request::Shutdown => "shutdown",
         }
     }
@@ -162,6 +169,7 @@ impl Request {
                     .unwrap_or(false),
             }),
             "metrics" => Ok(Request::Metrics),
+            "alerts" => Ok(Request::Alerts),
             "shutdown" => Ok(Request::Shutdown),
             "plan" => Ok(Request::Plan(JobSpec::parse(j)?)),
             "create_session" => {
@@ -444,6 +452,7 @@ mod tests {
             Request::Stats { prom: true }
         ));
         assert!(matches!(parse(r#"{"op":"metrics"}"#).unwrap(), Request::Metrics));
+        assert!(matches!(parse(r#"{"op":"alerts"}"#).unwrap(), Request::Alerts));
         assert!(matches!(parse(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown));
         assert!(parse(r#"{"op":"warp"}"#).is_err());
         assert!(parse(r#"{"noop":1}"#).is_err());

@@ -47,6 +47,7 @@ use crate::backend::{self, NativeBackend, ShardPhase};
 use crate::coordinator::grid::ShardPlan;
 use crate::coordinator::metrics::{RunMetrics, ServiceCounters};
 use crate::obs;
+use crate::util::json::Json;
 
 use super::session::{Session, SessionStore};
 
@@ -127,6 +128,12 @@ pub struct RetuneTask {
     pub plans: Arc<super::plan_cache::PlanCache>,
     /// Probe preset (quick for background retunes).
     pub opts: crate::tune::micro::MicroOpts,
+    /// Why this retune was scheduled: the attribution verdict of the
+    /// drifted region ([`crate::obs::attrib`]) when one exists, or
+    /// `"ewma_crossing"` when the episode predates any attribution —
+    /// journaled with the install/reject so forensics can say what
+    /// evidence drove each recalibration.
+    pub cause: String,
 }
 
 impl RetuneTask {
@@ -148,6 +155,18 @@ impl RetuneTask {
                         crate::tune::micro::MAX_PROBE_SPREAD * 100.0
                     );
                     self.hub.retune_failed();
+                    obs::journal::emit(
+                        "retune_reject",
+                        &[
+                            ("cause", Json::Str(self.cause.clone())),
+                            ("reason", Json::Str("probe_spread".to_string())),
+                            ("spread", obs::journal::f(worst)),
+                            (
+                                "spread_max",
+                                obs::journal::f(crate::tune::micro::MAX_PROBE_SPREAD),
+                            ),
+                        ],
+                    );
                 } else {
                     // Clear on BOTH sides of the install: a plan that
                     // began its miss before the first clear is refused
@@ -161,11 +180,27 @@ impl RetuneTask {
                     self.hub.install(profile);
                     self.plans.clear();
                     installed = true;
+                    obs::journal::emit(
+                        "retune_install",
+                        &[
+                            ("cause", Json::Str(self.cause.clone())),
+                            ("generation", Json::Num(self.hub.generation() as f64)),
+                            ("spread", obs::journal::f(worst)),
+                        ],
+                    );
                 }
             }
             Err(e) => {
                 eprintln!("stencilctl serve: background retune failed: {e:#}");
                 self.hub.retune_failed();
+                obs::journal::emit(
+                    "retune_reject",
+                    &[
+                        ("cause", Json::Str(self.cause.clone())),
+                        ("reason", Json::Str("probe_error".to_string())),
+                        ("message", Json::Str(format!("{e:#}"))),
+                    ],
+                );
             }
         }
         if obs::enabled() {
@@ -956,6 +991,7 @@ mod tests {
                 hub: hub.clone(),
                 plans: plans.clone(),
                 opts: crate::tune::micro::MicroOpts::quick(),
+                cause: "ewma_crossing".to_string(),
             })
         };
         assert!(queue.push_maintenance(rt()).is_ok());

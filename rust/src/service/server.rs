@@ -110,6 +110,14 @@ pub struct ServeOpts {
     /// plan lookup.  0 still coalesces jobs that arrive while the
     /// leader plans, without adding latency.
     pub batch_window_ms: f64,
+    /// Alert rule file (`--alert-rules <file>`; JSON array — see
+    /// `obs::alert`).  `None` installs the builtin defaults.
+    pub alert_rules: Option<PathBuf>,
+    /// Event-journal path (`--journal <file>`): append-only NDJSON
+    /// forensics (admission refusals, drift flags, retune episodes,
+    /// spill/restore, alert transitions).  `None` = no journal, zero
+    /// writes.
+    pub journal: Option<PathBuf>,
 }
 
 impl Default for ServeOpts {
@@ -129,6 +137,8 @@ impl Default for ServeOpts {
             probe_threads: 4,
             resident_bytes: None,
             batch_window_ms: 0.0,
+            alert_rules: None,
+            journal: None,
         }
     }
 }
@@ -148,6 +158,12 @@ pub struct ServiceState {
     pub sched: TenantSched,
     /// PlanKey-coalescing gate for batched dispatch.
     batches: BatchGate,
+    /// Declarative alert rules with firing/resolved state, evaluated
+    /// lazily on the `stats`/`metrics`/`alerts` verbs.
+    pub alerts: obs::alert::AlertEngine,
+    /// Per-region model-error attribution aggregates (obs-enabled runs
+    /// only; see `obs::attrib`).
+    pub attrib: obs::attrib::AttribStore,
     queue: Arc<JobQueue>,
     manifest: Option<Manifest>,
     shutdown: AtomicBool,
@@ -187,6 +203,24 @@ impl Service {
             Some(cap) => SessionStore::with_tiering(spill_dir(), cap),
             None => SessionStore::new(),
         });
+        if let Some(path) = &opts.journal {
+            if let Err(e) = obs::journal::open(path, obs::journal::DEFAULT_MAX_BYTES) {
+                eprintln!("stencilctl serve: cannot open journal: {e:#}");
+            }
+        }
+        let rules = match &opts.alert_rules {
+            Some(path) => std::fs::read_to_string(path)
+                .map_err(anyhow::Error::from)
+                .and_then(|text| obs::alert::parse_rules(&text))
+                .unwrap_or_else(|e| {
+                    eprintln!(
+                        "stencilctl serve: bad --alert-rules {}: {e:#}; using builtins",
+                        path.display()
+                    );
+                    obs::alert::builtin_rules()
+                }),
+            None => obs::alert::builtin_rules(),
+        };
         let state = Arc::new(ServiceState {
             sessions,
             plans: Arc::new(PlanCache::new(opts.plan_cache_cap)),
@@ -195,6 +229,8 @@ impl Service {
             tenants: TenantLedger::default(),
             sched: TenantSched::new(workers),
             batches: BatchGate::new(opts.batch_window_ms),
+            alerts: obs::alert::AlertEngine::new(rules),
+            attrib: obs::attrib::AttribStore::new(),
             queue: queue.clone(),
             manifest,
             shutdown: AtomicBool::new(false),
@@ -547,10 +583,73 @@ fn handle_request(state: &ServiceState, req: Request) -> Result<(Json, bool)> {
             // Pure read — the delta window belongs to the `stats` op.
             let cache = state.plans.stats();
             let trows = state.tenants.rows(&state.sessions.tenant_bytes());
-            let text = obs::metrics().exposition(&snap, &cache, &trows);
+            let mut text = obs::metrics().exposition(&snap, &cache, &trows);
+            // Alert state rides in the scrape: evaluating here is what
+            // makes a Prometheus-only deployment see firing rules.
+            let rows = evaluate_alerts(state);
+            text.push_str(&obs::alert::render_prom(&rows, state.alerts.transitions()));
             Ok((protocol::ok("metrics").str_("exposition", &text).done(), true))
         }
+        Request::Alerts => {
+            let rows = evaluate_alerts(state);
+            let firing = rows.iter().filter(|r| r.firing).count() as u64;
+            let arr = Json::Arr(rows.iter().map(alert_row_json).collect());
+            Ok((
+                protocol::ok("alerts")
+                    .int("rules", state.alerts.rules().len() as u64)
+                    .int("firing", firing)
+                    .int("transitions", state.alerts.transitions())
+                    .set("alerts", arr)
+                    .done(),
+                true,
+            ))
+        }
     }
+}
+
+/// Evaluate the alert rules against a fresh service snapshot (queue
+/// fill, per-region drift state, per-tenant SLO burn).  Lazy by
+/// design: rules run on the `stats`/`metrics`/`alerts` verbs, never on
+/// the job hot path.
+fn evaluate_alerts(state: &ServiceState) -> Vec<obs::alert::AlertRow> {
+    let threshold = state.profile.threshold();
+    let input = obs::alert::EvalInput {
+        queue_depth: state.queue_depth() as u64,
+        queue_cap: state.opts.max_queue as u64,
+        regions: state
+            .profile
+            .regions()
+            .into_iter()
+            .map(|r| obs::alert::RegionErr {
+                region: r.region,
+                ewma: r.ewma,
+                threshold,
+                over: r.over,
+            })
+            .collect(),
+        tenants: state
+            .tenants
+            .rows(&state.sessions.tenant_bytes())
+            .into_iter()
+            .map(|t| obs::alert::TenantSlo {
+                tenant: t.tenant,
+                admitted: t.admitted,
+                deadline_missed: t.deadline_missed,
+            })
+            .collect(),
+    };
+    state.alerts.evaluate(&input)
+}
+
+fn alert_row_json(r: &obs::alert::AlertRow) -> Json {
+    Obj::new()
+        .str_("rule", &r.rule)
+        .str_("label", &r.label)
+        .str_("kind", r.kind)
+        .bool_("firing", r.firing)
+        .num("value", r.value)
+        .num("threshold", r.threshold)
+        .done()
 }
 
 /// The full `advance` path: plan (coalesced across identical-PlanKey
@@ -695,6 +794,19 @@ fn advance(
                 if obs::enabled() {
                     drop(obs::drain(trace)); // rejected: free the ring slots
                 }
+                obs::journal::emit(
+                    "admission_refused",
+                    &[
+                        ("reason", Json::Str("admission".to_string())),
+                        ("tenant", Json::Str(tenant.clone())),
+                        ("session", Json::Str(session.to_string())),
+                        ("predicted_ms", obs::journal::f(r.predicted_ms)),
+                        ("budget_ms", obs::journal::f(r.budget_ms)),
+                        ("engine", Json::Str(r.engine.clone())),
+                        ("bound", Json::Str(r.bound.to_string())),
+                        ("classification", Json::Str(r.classification.clone())),
+                    ],
+                );
                 return Ok((
                     Obj::new()
                         .bool_("ok", false)
@@ -737,6 +849,17 @@ fn advance(
             if obs::enabled() {
                 drop(obs::drain(trace));
             }
+            obs::journal::emit(
+                "admission_refused",
+                &[
+                    ("reason", Json::Str("fair_share".to_string())),
+                    ("tenant", Json::Str(fs.tenant.clone())),
+                    ("session", Json::Str(session.to_string())),
+                    ("served_ms", obs::journal::f(fs.served_ms)),
+                    ("fair_share_ms", obs::journal::f(fs.fair_share_ms)),
+                    ("quantum_ms", obs::journal::f(fs.quantum_ms)),
+                ],
+            );
             return Ok((
                 Obj::new()
                     .bool_("ok", false)
@@ -769,6 +892,21 @@ fn advance(
             if obs::enabled() {
                 drop(obs::drain(trace));
             }
+            obs::journal::emit(
+                "admission_refused",
+                &[
+                    ("reason", Json::Str("deadline_unmeetable".to_string())),
+                    ("tenant", Json::Str(tenant.clone())),
+                    ("session", Json::Str(session.to_string())),
+                    ("deadline_ms", obs::journal::f(v.deadline_ms)),
+                    (
+                        "predicted_completion_ms",
+                        obs::journal::f(v.predicted_completion_ms),
+                    ),
+                    ("backlog_ms", obs::journal::f(v.backlog_ms)),
+                    ("cost_ms", obs::journal::f(v.cost_ms)),
+                ],
+            );
             return Ok((
                 Obj::new()
                     .bool_("ok", false)
@@ -1104,7 +1242,17 @@ fn queue_full_json(depth: usize, cap: usize) -> Json {
 fn queue_refusal(state: &ServiceState, e: PushError) -> Json {
     ServiceCounters::bump(&state.counters.queue_rejected);
     match e {
-        PushError::Full { depth, cap } => queue_full_json(depth, cap),
+        PushError::Full { depth, cap } => {
+            obs::journal::emit(
+                "admission_refused",
+                &[
+                    ("reason", Json::Str("queue_full".to_string())),
+                    ("queue_depth", Json::Num(depth as f64)),
+                    ("queue_cap", Json::Num(cap as f64)),
+                ],
+            );
+            queue_full_json(depth, cap)
+        }
         PushError::Closed => protocol::err("advance", "shutting_down", "service is shutting down"),
     }
 }
@@ -1188,9 +1336,10 @@ fn intensity_feedback(
     }
     // ---- drift plane: region classification over the live profile ----
     let gpu = state.profile.gpu();
-    let mem_bound = match gpu.roof(Unit::CudaCore, spec.dtype) {
-        Ok(roof) => rep.predicted < roof.ridge(),
-        Err(_) => true, // scalar path absent: call it memory-bound
+    let roof = gpu.roof(Unit::CudaCore, spec.dtype).ok();
+    let mem_bound = match &roof {
+        Some(roof) => rep.predicted < roof.ridge(),
+        None => true, // scalar path absent: call it memory-bound
     };
     let region = drift::region(mem_bound, blocked, shards > 1);
     let (reading, flagged_now) = state.profile.record(&region, rep.rel_error);
@@ -1212,6 +1361,14 @@ fn intensity_feedback(
         // Every cached plan was scored against constants the machine
         // just disproved.
         state.plans.clear();
+        obs::journal::emit(
+            "drift_flag",
+            &[
+                ("region", Json::Str(region.clone())),
+                ("ewma", obs::journal::f(reading.ewma)),
+                ("wall_channel", Json::Bool(wall_flag)),
+            ],
+        );
     }
     // Schedule (or retry) a recalibration on any over-threshold
     // reading WHILE THE PROFILE IS STALE AND MEASURED, not just the
@@ -1226,6 +1383,37 @@ fn intensity_feedback(
     // done silently — `serve` refuses that flag combination upfront).
     let channel_over =
         reading.over || wall_reading.as_ref().is_some_and(|w| w.over);
+    // ---- attribution: decompose measured−predicted into residuals ----
+    // Gated on the obs plane: `attribute` allocates its ranked term
+    // vector, and obs-disabled serving must stay allocation-free here.
+    let mut attrib_json = None;
+    if obs::enabled() {
+        let exec_ms = metrics.wall_ns as f64 / 1e6;
+        let serve_ms =
+            (obs::now_ns().saturating_sub(job_start_ns) as f64 / 1e6 - exec_ms).max(0.0);
+        let o = obs::attrib::JobObservation {
+            predicted_ms,
+            exec_ms,
+            serve_ms,
+            mem_bound,
+            bytes_moved: metrics.bytes_moved as f64,
+            bytes_predicted: crate::model::calib::predicted_job_bytes(
+                metrics.flops as f64,
+                rep.predicted,
+            ),
+            flops: metrics.flops as f64,
+            bandwidth: gpu.bandwidth,
+            peak_flops: roof.map(|r| r.peak_flops).unwrap_or(0.0),
+        };
+        let a = obs::attrib::attribute(&o);
+        state.attrib.record(&region, &a);
+        if channel_over {
+            // The retune episode scheduled below cites this verdict
+            // instead of a bare EWMA crossing.
+            state.profile.note_cause(&region, a.verdict.as_str());
+        }
+        attrib_json = Some(a.to_json());
+    }
     if channel_over
         && state.opts.retune == RetuneMode::Auto
         && state.profile.measured()
@@ -1235,6 +1423,10 @@ fn intensity_feedback(
         let task = Task::Retune(RetuneTask {
             hub: state.profile.clone(),
             plans: state.plans.clone(),
+            cause: state
+                .profile
+                .cause(&region)
+                .unwrap_or_else(|| "ewma_crossing".to_string()),
             opts: MicroOpts {
                 // probe at the serve-configured parallelism so the
                 // installed constants match what `stencilctl tune
@@ -1259,7 +1451,8 @@ fn intensity_feedback(
             .num("wall_departure", w.departure)
             .bool_("wall_flagged", w.over);
     }
-    resp.num("achieved_intensity", rep.measured)
+    let mut resp = resp
+        .num("achieved_intensity", rep.measured)
         .num("predicted_intensity", rep.predicted)
         .num("model_err", rep.rel_error)
         .bool_("within_model_region", rep.within_region)
@@ -1273,7 +1466,11 @@ fn intensity_feedback(
                 .bool_("stale", status.stale)
                 .done(),
         )
-        .set("drift", drift_obj.done())
+        .set("drift", drift_obj.done());
+    if let Some(a) = attrib_json {
+        resp = resp.set("attribution", a);
+    }
+    resp
 }
 
 /// The `stats` response: raw counters for machines, a rendered table
@@ -1341,6 +1538,53 @@ fn stats_response(state: &ServiceState, prom: bool) -> Json {
     let (resident_total, spilled_total) = tenant_bytes
         .values()
         .fold((0u64, 0u64), |(r, s), &(tr, ts)| (r + tr, s + ts));
+    // ---- explainability plane: attribution, alerts, latency quantiles ----
+    let attrib_rows = Json::Arr(
+        state
+            .attrib
+            .snapshot()
+            .iter()
+            .map(|r| {
+                Obj::new()
+                    .str_("region", &r.region)
+                    .int("jobs", r.jobs)
+                    .str_("dominant", r.dominant.as_str())
+                    .set(
+                        "terms",
+                        Json::Arr(
+                            r.terms
+                                .iter()
+                                .map(|(t, mean_abs_ms, verdicts)| {
+                                    Obj::new()
+                                        .str_("term", t.as_str())
+                                        .num("mean_abs_ms", *mean_abs_ms)
+                                        .int("verdicts", *verdicts)
+                                        .done()
+                                })
+                                .collect(),
+                        ),
+                    )
+                    .done()
+            })
+            .collect(),
+    );
+    let alert_rows = evaluate_alerts(state);
+    let firing = alert_rows.iter().filter(|r| r.firing).count() as u64;
+    // log₂-bucket estimates: each is the bucket upper bound, so within
+    // 2× of the exact percentile (see `obs::prom::Histogram::quantile`).
+    let mut quantiles = Obj::new();
+    for (name, h) in [
+        ("queue_wait", &obs::metrics().queue_wait_ns),
+        ("phase_wall", &obs::metrics().phase_wall_ns),
+    ] {
+        for (label, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+            if let Some(v) = h.quantile(q) {
+                if v.is_finite() {
+                    quantiles = quantiles.num(&format!("{name}_{label}_ms"), v / 1e6);
+                }
+            }
+        }
+    }
     let mut o = protocol::ok("stats")
         .int("requests", snap.requests)
         .int("errors", snap.errors)
@@ -1380,9 +1624,19 @@ fn stats_response(state: &ServiceState, prom: bool) -> Json {
         .num("drift_threshold", state.profile.threshold())
         .set("drift", drift_rows)
         .set("session_stats", sessions)
-        .set("tenants", tenants_json);
+        .set("tenants", tenants_json)
+        .set("attribution", attrib_rows)
+        .int("attribution_jobs", state.attrib.total_jobs())
+        .int("alerts_firing", firing)
+        .set(
+            "alerts",
+            Json::Arr(alert_rows.iter().map(alert_row_json).collect()),
+        )
+        .set("latency", quantiles.done());
     if prom {
-        o = o.str_("prom", &obs::metrics().exposition(&snap, &cache, &trows));
+        let mut text = obs::metrics().exposition(&snap, &cache, &trows);
+        text.push_str(&obs::alert::render_prom(&alert_rows, state.alerts.transitions()));
+        o = o.str_("prom", &text);
     }
     o.str_("render", &render).done()
 }
@@ -1906,5 +2160,91 @@ mod tests {
         // post-shutdown requests are refused (except shutdown itself)
         let r = req(&state, r#"{"op":"ping"}"#);
         assert_eq!(r.get("error").unwrap().as_str(), Some("shutting_down"));
+    }
+
+    #[test]
+    fn alerts_verb_reports_builtin_rules_and_stats_carries_the_plane() {
+        let s = svc();
+        let state = s.state();
+        let al = req(&state, r#"{"op":"alerts"}"#);
+        assert_ok(&al);
+        assert_eq!(
+            al.get("rules").unwrap().as_usize(),
+            Some(obs::alert::builtin_rules().len())
+        );
+        let rows = al.get("alerts").unwrap().as_arr().unwrap();
+        // queue_saturated always evaluates (no per-label fan-out
+        // needed), and an idle service must not be firing it
+        let qs = rows
+            .iter()
+            .find(|r| r.get("rule").unwrap().as_str() == Some("queue_saturated"))
+            .expect("queue_saturated row");
+        assert_eq!(qs.get("firing").unwrap().as_bool(), Some(false));
+        // the same rows + firing count ride in `stats`, and the prom
+        // text gains the stencilctl_alerts series
+        let st = req(&state, r#"{"op":"stats","prom":true}"#);
+        assert_ok(&st);
+        assert_eq!(st.get("alerts_firing").unwrap().as_usize(), Some(0));
+        assert!(!st.get("alerts").unwrap().as_arr().unwrap().is_empty());
+        let prom = st.get("prom").unwrap().as_str().unwrap();
+        assert!(prom.contains("stencilctl_alerts{"), "{prom}");
+        assert!(prom.contains("stencilctl_alert_transitions_total"), "{prom}");
+    }
+
+    #[test]
+    fn advance_carries_an_attribution_verdict_when_obs_is_enabled() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"at","shape":"star","d":2,"r":1,
+                "dtype":"double","domain":[48,48],"backend":"native","temporal":"blocked","threads":1}"#,
+        ));
+        let a = req(&state, r#"{"op":"advance","session":"at","steps":4,"t":2}"#);
+        assert_ok(&a);
+        let attrib = a.get("attribution").expect("attribution block");
+        let verdict = attrib.get("verdict").unwrap().as_str().unwrap().to_string();
+        let terms = attrib.get("terms").unwrap().as_arr().unwrap();
+        assert!(!terms.is_empty());
+        // every named term the verdict could cite is present and ranked
+        assert!(terms
+            .iter()
+            .any(|t| t.get("term").unwrap().as_str() == Some(verdict.as_str())));
+        // …and the per-region aggregate shows up in stats
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert!(st.get("attribution_jobs").unwrap().as_i64().unwrap() >= 1);
+        let regions = st.get("attribution").unwrap().as_arr().unwrap();
+        assert!(!regions.is_empty(), "{st}");
+        assert!(regions[0].get("dominant").unwrap().as_str().is_some());
+        crate::obs::disable();
+        // obs disabled: the advance reply must carry no attribution
+        let b = req(&state, r#"{"op":"advance","session":"at","steps":4,"t":2}"#);
+        assert_ok(&b);
+        assert!(b.get("attribution").is_none(), "{b}");
+    }
+
+    #[test]
+    fn stats_surfaces_latency_quantile_estimates() {
+        let s = svc();
+        let state = s.state();
+        assert_ok(&req(
+            &state,
+            r#"{"op":"create_session","session":"q","domain":[16,16],"dtype":"double","threads":1}"#,
+        ));
+        assert_ok(&req(&state, r#"{"op":"advance","session":"q","steps":2,"t":1}"#));
+        let st = req(&state, r#"{"op":"stats"}"#);
+        assert_ok(&st);
+        // the always-on registry observed this job's queue wait and
+        // phase wall, so the log₂-bucket estimates must be present
+        let lat = st.get("latency").expect("latency block");
+        for key in ["queue_wait_p50_ms", "queue_wait_p99_ms", "phase_wall_p50_ms"] {
+            let v = lat.get(key).unwrap_or_else(|| panic!("{key} missing: {lat}"));
+            assert!(v.as_f64().unwrap() > 0.0, "{key}");
+        }
+        let p50 = lat.get("queue_wait_p50_ms").unwrap().as_f64().unwrap();
+        let p99 = lat.get("queue_wait_p99_ms").unwrap().as_f64().unwrap();
+        assert!(p99 >= p50, "quantiles must be monotone: p50={p50} p99={p99}");
     }
 }

@@ -262,6 +262,13 @@ impl SessionStore {
             obs::now_ns(),
             Payload::Restore { session: s.name.clone(), bytes },
         );
+        obs::journal::emit(
+            "restore",
+            &[
+                ("session", Json::Str(s.name.clone())),
+                ("bytes", Json::Num(bytes as f64)),
+            ],
+        );
         Ok(())
     }
 
@@ -285,6 +292,13 @@ impl SessionStore {
             t0,
             obs::now_ns(),
             Payload::Spill { session: s.name.clone(), bytes },
+        );
+        obs::journal::emit(
+            "spill",
+            &[
+                ("session", Json::Str(s.name.clone())),
+                ("bytes", Json::Num(bytes as f64)),
+            ],
         );
         Ok(())
     }

@@ -395,6 +395,11 @@ pub struct ProfileHub {
     inner: Mutex<HubInner>,
     drift: DriftTracker,
     wall: WallTracker,
+    /// Latest attribution verdict per region ([`crate::obs::attrib`]):
+    /// which model term the residual decomposition blamed for that
+    /// region's error.  Retune episodes cite this instead of a bare
+    /// EWMA crossing.
+    causes: Mutex<BTreeMap<String, String>>,
 }
 
 impl ProfileHub {
@@ -415,7 +420,23 @@ impl ProfileHub {
             }),
             drift: DriftTracker::new(threshold),
             wall: WallTracker::new(threshold),
+            causes: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Record the latest attribution verdict for a region (what the
+    /// per-term residual decomposition blamed).  Overwrites: the most
+    /// recent evidence wins.
+    pub fn note_cause(&self, region: &str, cause: &str) {
+        if let Ok(mut g) = self.causes.lock() {
+            g.insert(region.to_string(), cause.to_string());
+        }
+    }
+
+    /// The last attribution verdict noted for a region, if any —
+    /// retune episodes cite this as their cause.
+    pub fn cause(&self, region: &str) -> Option<String> {
+        self.causes.lock().ok().and_then(|g| g.get(region).cloned())
     }
 
     /// The constants the planner/admission plane consumes right now.
@@ -539,6 +560,9 @@ impl ProfileHub {
         drop(g);
         self.drift.reset();
         self.wall.reset(); // wall baselines re-lock under the new constants
+        if let Ok(mut c) = self.causes.lock() {
+            c.clear(); // stale evidence: verdicts cited the old constants
+        }
     }
 
     /// Whether the current profile's constants were measured on this
@@ -742,6 +766,21 @@ mod tests {
         assert_eq!(st.generation, 1);
         assert!(st.drift_worst_permille >= 500, "{}", st.drift_worst_permille);
         assert!(hub.regions().iter().any(|r| r.region == "wall/blocked" && r.over));
+    }
+
+    #[test]
+    fn causes_follow_the_latest_verdict_and_clear_on_install() {
+        let hub = ProfileHub::new(engines::builtin_profile(&Gpu::a100()), 0.1);
+        assert_eq!(hub.cause("mem/sweep"), None);
+        hub.note_cause("mem/sweep", "bandwidth");
+        hub.note_cause("comp/blocked", "kernel");
+        hub.note_cause("mem/sweep", "redundancy"); // latest evidence wins
+        assert_eq!(hub.cause("mem/sweep").as_deref(), Some("redundancy"));
+        assert_eq!(hub.cause("comp/blocked").as_deref(), Some("kernel"));
+        let mut fresh = engines::builtin_profile(&Gpu::a100());
+        fresh.source = crate::tune::profile::ProfileSource::Measured;
+        hub.install(fresh);
+        assert_eq!(hub.cause("mem/sweep"), None, "install clears stale evidence");
     }
 
     #[test]
